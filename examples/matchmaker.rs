@@ -1,0 +1,102 @@
+//! Matchmaker: a standalone ClassAd matching/ranking tool.
+//!
+//! ```sh
+//! # the paper's §4 + §5.2 ads, built in:
+//! cargo run --release --example matchmaker -- --demo
+//!
+//! # your own ads (bare `attr = expr;` text files):
+//! cargo run --release --example matchmaker -- --request req.ad storage1.ad storage2.ad
+//! ```
+//!
+//! Prints, for every storage ad: whether the symmetric requirements
+//! match holds, and the request's rank of the ad; then the winner.
+
+use globus_replica::classad::{
+    eval_in_match, parse_classad, rank_candidates, symmetric_match, ClassAd,
+};
+use globus_replica::util::cli::Args;
+
+const DEMO_STORAGE: &str = r#"
+    hostname = "hugo.mcs.anl.gov";
+    volume = "/dev/sandbox";
+    availableSpace = 50G;
+    MaxRDBandwidth = 75K/Sec;
+    requirement = other.reqdSpace < 10G
+        && other.reqdRDBandwidth < 75K/Sec;
+"#;
+
+const DEMO_STORAGE_2: &str = r#"
+    hostname = "dsd.lbl.gov";
+    volume = "/scratch";
+    availableSpace = 80G;
+    MaxRDBandwidth = 60K/Sec;
+"#;
+
+const DEMO_STORAGE_3: &str = r#"
+    hostname = "grid.isi.edu";
+    volume = "/tmp";
+    availableSpace = 3G;
+    MaxRDBandwidth = 90K/Sec;
+"#;
+
+const DEMO_REQUEST: &str = r#"
+    hostname = "comet.xyz.com";
+    reqdSpace = 5G;
+    reqdRDBandwidth = 50K/Sec;
+    rank = other.availableSpace;
+    requirement = other.availableSpace >
+        5G && other.MaxRDBandwidth >
+        50K/Sec;
+"#;
+
+fn load(path: &str) -> anyhow::Result<ClassAd> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse_classad(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let (request, storages): (ClassAd, Vec<(String, ClassAd)>) = if args.has("demo") {
+        (
+            parse_classad(DEMO_REQUEST).unwrap(),
+            vec![
+                ("§4 storage ad (ANL)".into(), parse_classad(DEMO_STORAGE).unwrap()),
+                ("LBL".into(), parse_classad(DEMO_STORAGE_2).unwrap()),
+                ("ISI".into(), parse_classad(DEMO_STORAGE_3).unwrap()),
+            ],
+        )
+    } else {
+        let req_path = args
+            .get("request")
+            .ok_or_else(|| anyhow::anyhow!("need --demo or --request <file> <storage files...>"))?;
+        let request = load(req_path)?;
+        let mut storages = Vec::new();
+        for p in args.positional() {
+            storages.push((p.clone(), load(p)?));
+        }
+        if storages.is_empty() {
+            anyhow::bail!("no storage ads given");
+        }
+        (request, storages)
+    };
+
+    println!("request ad:\n{request}");
+    for (name, ad) in &storages {
+        let ok = symmetric_match(&request, ad);
+        let rank = eval_in_match(&request, ad, "rank");
+        println!(
+            "{name:<22} match={:<5} rank={rank}",
+            if ok { "YES" } else { "no" }
+        );
+    }
+    let ads: Vec<ClassAd> = storages.iter().map(|(_, a)| a.clone()).collect();
+    let ranked = rank_candidates(&request, &ads);
+    match ranked.first() {
+        Some(best) => println!(
+            "\nbest match: {} (rank {:.1})",
+            storages[best.index].0, best.rank
+        ),
+        None => println!("\nno storage ad satisfies the request"),
+    }
+    Ok(())
+}

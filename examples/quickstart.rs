@@ -1,0 +1,132 @@
+//! Quickstart: the paper's own example, end to end (Figure 6 + §4/§5.2).
+//!
+//! Builds a three-site grid whose ANL site publishes exactly the
+//! storage ClassAd from §4, registers a replica of `run42.dat` at every
+//! site, then runs the decentralized broker with the §5.2 request ad
+//! and prints the phase-by-phase trace: Search (catalog + GRIS + LDIF),
+//! Match (LDIF→ClassAd conversion + Condor matchmaking + rank), Access
+//! (simulated GridFTP fetch).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::{Arc, Mutex, RwLock};
+
+use globus_replica::broker::{Broker, LocalInfoService, RankPolicy};
+use globus_replica::catalog::{PhysicalLocation, ReplicaCatalog};
+use globus_replica::classad::parse_classad;
+use globus_replica::config::GridConfig;
+use globus_replica::directory::{Entry, Gris};
+use globus_replica::gridftp::GridFtp;
+use globus_replica::simnet::Topology;
+use globus_replica::util::units::Bytes;
+
+/// (site, org, availableSpace GB, MaxRDBandwidth KB/s)
+const SITES: [(&str, &str, f64, f64); 3] = [
+    ("hugo.mcs.anl.gov", "anl", 50.0, 75.0), // the §4 storage ad
+    ("dsd.lbl.gov", "lbl", 80.0, 60.0),
+    ("grid.isi.edu", "isi", 3.0, 90.0), // fails the 5G space floor
+];
+
+fn main() -> anyhow::Result<()> {
+    println!("== Globus replica selection — paper §4/§5.2 walk-through ==\n");
+
+    // --- Core services: replica catalog + per-site storage GRIS ------
+    let mut catalog = ReplicaCatalog::new();
+    catalog.create_logical("run42.dat", Bytes::from_gb(2.0), "cms-2001")?;
+    let mut info = LocalInfoService::new();
+    for (site, org, gb, kbps) in SITES {
+        catalog.add_replica(
+            "run42.dat",
+            PhysicalLocation { site: site.into(), url: format!("gsiftp://{site}/run42.dat") },
+        )?;
+        let mut gris = Gris::new(org, site);
+        let base = gris.base_dn().clone();
+        let vol = base.child("gss", "sandbox");
+        let mut e = Entry::new(vol.clone());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put_f64("totalSpace", 100.0 * 1024f64.powi(3));
+        e.put_f64("availableSpace", gb * 1024f64.powi(3));
+        e.put("mountPoint", "/dev/sandbox");
+        e.put_f64("diskTransferRate", 2e7);
+        e.put_f64("drdTime", 8.0);
+        e.put_f64("dwrTime", 9.0);
+        // The §4 usage policy, published through the GRIS.
+        e.put(
+            "requirements",
+            "other.reqdSpace < 10G && other.reqdRDBandwidth < 75K/Sec",
+        );
+        gris.add_entry(e);
+        let mut bw = Entry::new(vol.child("gss", "bw"));
+        bw.add("objectClass", "GridStorageTransferBandwidth");
+        for a in ["MaxRDBandwidth", "AvgRDBandwidth"] {
+            bw.put_f64(a, kbps * 1024.0);
+        }
+        for a in ["MinRDBandwidth", "MaxWRBandwidth", "MinWRBandwidth", "AvgWRBandwidth"] {
+            bw.put_f64(a, kbps * 512.0);
+        }
+        gris.add_entry(bw);
+        info.add(site, Arc::new(RwLock::new(gris)));
+    }
+
+    // --- The application's request ad — verbatim from §5.2 -----------
+    let request = parse_classad(
+        r#"hostname = "comet.xyz.com";
+           reqdSpace = 5G;
+           reqdRDBandwidth = 50K/Sec;
+           rank = other.availableSpace;
+           requirement = other.availableSpace >
+               5G && other.MaxRDBandwidth >
+               50K/Sec;"#,
+    )?;
+    println!("application request ClassAd:\n{request}");
+
+    // --- Decentralized selection (Figure 6) ---------------------------
+    let broker = Broker::new(
+        Arc::new(Mutex::new(catalog)),
+        Arc::new(info),
+        RankPolicy::ClassAdRank,
+    );
+    let sel = broker.select("run42.dat", &request)?;
+    let t = &sel.trace;
+    println!("SEARCH phase ({}µs):", t.search_us);
+    println!("  replica catalog -> {:?}", t.replica_sites);
+    println!("  + GRIS LDAP queries, LDIF responses");
+    println!("CONVERT ({}µs): LDIF -> ClassAds", t.convert_us);
+    println!("MATCH phase ({}µs):", t.match_us);
+    for (site, ok) in &t.match_results {
+        println!("  {site:<18} {}", if *ok { "MATCH" } else { "reject (requirements)" });
+    }
+    println!("  ranking by `rank = other.availableSpace`:");
+    for (site, score) in &t.ranking {
+        println!("    {site:<18} {:.0} GB", score / 1024f64.powi(3));
+    }
+    println!("  selected: {} ({})\n", sel.site, sel.url);
+
+    // --- ACCESS phase: fetch over the simulated GridFTP fabric -------
+    let cfg = GridConfig::generate(SITES.len(), 7);
+    let mut topo = Topology::build(&cfg);
+    let ftp = GridFtp::new(&topo, 16);
+    let site_idx = SITES.iter().position(|(s, ..)| *s == sel.site).unwrap();
+    let out = ftp.fetch(&mut topo, site_idx, "comet.xyz.com", 2.0 * 1024f64.powi(3));
+    println!(
+        "ACCESS phase: fetched 2G from {} in {:.1}s ({:.0} KB/s), instrumentation recorded",
+        sel.site,
+        out.duration,
+        out.bandwidth / 1024.0
+    );
+    {
+        let h = ftp.history(site_idx);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 1);
+        assert_eq!(h.rd.last_peer, "comet.xyz.com");
+    }
+
+    // The §4 storage ad should have produced the §5.2 expected outcome:
+    // ISI rejected (3G < 5G floor), ANL matches, LBL wins on space.
+    assert_eq!(sel.site, "dsd.lbl.gov");
+    assert_eq!(t.match_results.iter().filter(|(_, ok)| *ok).count(), 2);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing here runs at request time; ``make artifacts`` invokes
+``python -m compile.aot`` once and the Rust coordinator loads the
+resulting HLO-text artifacts through PJRT.
+"""

@@ -1,0 +1,131 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+
+* ``artifacts/forecast.hlo.txt`` — forecast_model at the AOT shapes
+* ``artifacts/rank.hlo.txt``     — rank_model at the AOT shapes
+* ``artifacts/manifest.json``    — shapes / dtypes / predictor-bank
+  layout consumed by ``rust/src/runtime/artifacts.rs``
+
+Python runs exactly once, at build time; the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.common import (
+    AOT_ATTRS,
+    AOT_REPLICAS,
+    AOT_REQUESTS,
+    AOT_SITES,
+    AOT_WINDOW,
+    EMA_ALPHAS,
+    NUM_PREDICTORS,
+    WINDOW_LONG,
+    WINDOW_SHORT,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+
+    specs = {
+        "forecast": dict(
+            lowered=model.jit_forecast(AOT_SITES, AOT_WINDOW),
+            inputs=[
+                {"name": "hist", "shape": [AOT_SITES, AOT_WINDOW], "dtype": "f32"},
+                {"name": "mask", "shape": [AOT_SITES, AOT_WINDOW], "dtype": "f32"},
+                {"name": "load", "shape": [AOT_SITES], "dtype": "f32"},
+            ],
+            outputs=[
+                {"name": "preds", "shape": [AOT_SITES, NUM_PREDICTORS], "dtype": "f32"},
+                {"name": "mses", "shape": [AOT_SITES, NUM_PREDICTORS], "dtype": "f32"},
+                {"name": "best", "shape": [AOT_SITES], "dtype": "f32"},
+                {"name": "eff", "shape": [AOT_SITES], "dtype": "f32"},
+            ],
+        ),
+        "rank": dict(
+            lowered=model.jit_rank(AOT_REPLICAS, AOT_REQUESTS, AOT_ATTRS),
+            inputs=[
+                {"name": "attrs", "shape": [AOT_REPLICAS, AOT_ATTRS], "dtype": "f32"},
+                {"name": "lo", "shape": [AOT_REQUESTS, AOT_ATTRS], "dtype": "f32"},
+                {"name": "hi", "shape": [AOT_REQUESTS, AOT_ATTRS], "dtype": "f32"},
+                {"name": "weights", "shape": [AOT_REQUESTS, AOT_ATTRS], "dtype": "f32"},
+            ],
+            outputs=[
+                {"name": "scores", "shape": [AOT_REQUESTS, AOT_REPLICAS], "dtype": "f32"},
+                {"name": "best_idx", "shape": [AOT_REQUESTS], "dtype": "i32"},
+                {"name": "best_score", "shape": [AOT_REQUESTS], "dtype": "f32"},
+            ],
+        ),
+    }
+
+    for name, spec in specs.items():
+        text = to_hlo_text(spec["lowered"])
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": spec["inputs"],
+            "outputs": spec["outputs"],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "interchange": "hlo-text",
+        "predictor_bank": {
+            "num_predictors": NUM_PREDICTORS,
+            "window_short": WINDOW_SHORT,
+            "window_long": WINDOW_LONG,
+            "ema_alphas": list(EMA_ALPHAS),
+            "names": [
+                "last_value",
+                "running_mean",
+                "sliding_mean_%d" % WINDOW_SHORT,
+                "sliding_mean_%d" % WINDOW_LONG,
+                *["ema_%.2f" % a for a in EMA_ALPHAS],
+                "median_3",
+            ],
+        },
+        "entries": entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower L2 graphs to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the replica-selection forecast engine.
+
+Two kernels:
+
+* :mod:`forecast` -- the NWS-style bandwidth predictor bank (paper 3.2):
+  one pass over each site's trailing transfer-bandwidth window producing a
+  bank of predictions *and* their backtested MSEs.
+* :mod:`rank` -- the constraint-masked replica scoring kernel used by the
+  broker's Match phase ranking (paper 4 / 5.2).
+
+:mod:`ref` holds the pure-``jax.numpy`` oracles the kernels are tested
+against (pytest + hypothesis, see ``python/tests``).
+"""

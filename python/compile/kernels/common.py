@@ -1,0 +1,52 @@
+"""Shared constants for the forecast predictor bank.
+
+The bank mirrors the forecaster families used by the Network Weather
+Service, which the paper (§7) identifies as the natural consumer of the
+published bandwidth history: last-value, running mean, sliding-window
+means, exponential smoothing at several gains, and a small-median robust
+predictor.
+
+Index layout of the ``P`` axis (must stay in sync with
+``rust/src/forecast/predictors.rs`` — checked by the cross-language test
+``rust/tests/it_runtime_artifacts.rs``):
+
+====  =======================  =========================
+ idx   predictor                parameter
+====  =======================  =========================
+  0    last value               —
+  1    running mean             full history
+  2    sliding mean             w = 4
+  3    sliding mean             w = 16
+  4    exponential smoothing    alpha = 0.10
+  5    exponential smoothing    alpha = 0.30
+  6    exponential smoothing    alpha = 0.60
+  7    median-of-3              last 3 observations
+====  =======================  =========================
+"""
+
+# Number of predictors in the bank.
+NUM_PREDICTORS = 8
+
+# Sliding-window widths for predictors 2 and 3.
+WINDOW_SHORT = 4
+WINDOW_LONG = 16
+
+# Exponential-smoothing gains for predictors 4..6.
+EMA_ALPHAS = (0.10, 0.30, 0.60)
+
+# Default AOT shapes (the Rust runtime pads batches to these — see
+# artifacts/manifest.json and rust/src/runtime/artifacts.rs).
+AOT_SITES = 128
+AOT_WINDOW = 64
+
+# Rank kernel AOT shapes: replicas x requests x attributes.
+AOT_REPLICAS = 128
+AOT_REQUESTS = 8
+AOT_ATTRS = 8
+
+# Site tile for the Pallas grid. 32 sites x 64-step window x f32 is 8 KiB
+# of history per tile plus ~10 small state vectors -> comfortably
+# VMEM-resident. (Perf log P1: widening to 128 was neutral at 128 sites
+# and ~45% slower at 512 on CPU PJRT — wider rows inflate every
+# dynamic-slice inside the window walk; kept at 32.)
+TILE_SITES = 32

@@ -1,0 +1,167 @@
+"""Pallas forecast kernel: the NWS-style bandwidth predictor bank.
+
+The broker's rank phase needs, for every candidate replica site, a
+prediction of the transfer bandwidth the site will deliver, derived from
+the GridFTP instrumentation history the site publishes through its GRIS
+(paper §3.2).  This kernel computes, in a single pass over each site's
+trailing observation window:
+
+* the current prediction of each of the ``NUM_PREDICTORS`` forecasters
+  (last-value, running mean, two sliding means, three EMA gains,
+  median-of-3 — the NWS forecaster family), and
+* the *backtested MSE* of each forecaster over the same window, which the
+  L2 model (and the Rust fallback) uses to select the per-site best
+  forecaster ("adaptive" prediction).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 1-D over site
+tiles; each program instance keeps its ``(TILE_SITES, WINDOW)`` history
+block plus ~10 small state vectors in VMEM and walks the window axis with
+``lax.fori_loop``, so HBM traffic is one read of the history block and
+one write of the two output blocks.  All arithmetic is VPU-shaped
+(element-wise + small sorts); there is no MXU work here.
+
+``interpret=True`` everywhere — the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are validated through the interpret path against
+:func:`compile.kernels.ref.forecast_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import EMA_ALPHAS, NUM_PREDICTORS, TILE_SITES, WINDOW_LONG, WINDOW_SHORT
+
+
+# State is a *flat* tuple of [TS] vectors (no [TS, k] stacking inside
+# the window walk — Perf log P5: per-step stack/concat on small tensors
+# cost ~15% on CPU PJRT):
+#   (count, last, total,
+#    l3a, l3b, l3c,            # last-3 ring, oldest..newest
+#    ema0, ema1, ema2,
+#    sw_sum_s, sw_cnt_s, sw_sum_l, sw_cnt_l)
+
+
+def _predict_list(state):
+    """The bank's predictions as a list of P [TS] vectors (no stack —
+    Perf log P6: the per-step [TS, P] stack cost ~10% on CPU PJRT)."""
+    (count, last, total, l3a, l3b, l3c, ema0, ema1, ema2, sws, cns, swl, cnl) = state
+    has = count > 0
+    preds = [
+        last,
+        jnp.where(has, total / jnp.maximum(count, 1.0), 0.0),
+        jnp.where(cns > 0, sws / jnp.maximum(cns, 1.0), last),
+        jnp.where(cnl > 0, swl / jnp.maximum(cnl, 1.0), last),
+        ema0,
+        ema1,
+        ema2,
+    ]
+    # Median of the 3-ring without sort: max(min pairs).
+    m3 = jnp.maximum(
+        jnp.minimum(jnp.maximum(l3a, l3b), l3c), jnp.minimum(l3a, l3b)
+    )
+    p7 = jnp.where(count >= 3, m3, jnp.where(count == 2, (l3b + l3c) / 2.0, last))
+    preds.append(p7)
+    return [jnp.where(has, p, 0.0) for p in preds]
+
+
+def _predict(state, ts):
+    """Stacked [TS, P] view (used once, after the walk)."""
+    return jnp.stack(_predict_list(state), axis=1)
+
+
+def _update(state, x, m):
+    """Fold one observation column into the bank state (masked)."""
+    (count, last, total, l3a, l3b, l3c, ema0, ema1, ema2, sws, cns, swl, cnl) = state
+    mb = m > 0.5
+    first = jnp.logical_and(mb, count == 0)
+    total = total + jnp.where(mb, x, 0.0)
+    l3a = jnp.where(mb, jnp.where(first, x, l3b), l3a)
+    l3b = jnp.where(mb, jnp.where(first, x, l3c), l3b)
+    l3c = jnp.where(mb, x, l3c)
+    emas = []
+    for a, e in zip(EMA_ALPHAS, (ema0, ema1, ema2)):
+        e2 = jnp.where(first, x, (1.0 - a) * e + a * x)
+        emas.append(jnp.where(mb, e2, e))
+    ema0, ema1, ema2 = emas
+    last = jnp.where(mb, x, last)
+    count = count + jnp.where(mb, 1.0, 0.0)
+    return (count, last, total, l3a, l3b, l3c, ema0, ema1, ema2, sws, cns, swl, cnl)
+
+
+def _forecast_kernel(hist_ref, mask_ref, preds_ref, mses_ref):
+    """One site tile: walk the window, emit predictions + backtest MSEs."""
+    hist = hist_ref[...]  # [TS, W] — VMEM resident for the whole walk
+    mask = mask_ref[...]
+    ts, window = hist.shape
+    xm = hist * mask
+
+    z = jnp.zeros((ts,), jnp.float32)
+    state0 = (z,) * 13  # see state layout above
+    err0 = tuple(z for _ in range(NUM_PREDICTORS))
+    nerr0 = z
+
+    def body(t, carry):
+        state, err, nerr = carry
+        x = lax.dynamic_slice_in_dim(hist, t, 1, axis=1)[:, 0]
+        m = lax.dynamic_slice_in_dim(mask, t, 1, axis=1)[:, 0]
+        count = state[0]
+        scorable = (jnp.logical_and(m > 0.5, count > 0)).astype(jnp.float32)
+        preds = _predict_list(state)
+        err = tuple(
+            e + scorable * (p - x) * (p - x) for e, p in zip(err, preds)
+        )
+        nerr = nerr + scorable
+        state = _update(state, x, m)
+        # Advance the sliding windows: [t-w, t) -> [t+1-w, t+1).
+        (count, last, total, l3a, l3b, l3c, ema0, ema1, ema2, sws, cns, swl, cnl) = state
+        add_x = x * m
+        new_sw = []
+        for w, (ss, cc) in ((WINDOW_SHORT, (sws, cns)), (WINDOW_LONG, (swl, cnl))):
+            drop = t - w  # slot leaving the window (may be negative)
+            safe = jnp.maximum(drop, 0)
+            live = (t >= w).astype(jnp.float32)
+            rem_x = lax.dynamic_slice_in_dim(xm, safe, 1, axis=1)[:, 0] * live
+            rem_m = lax.dynamic_slice_in_dim(mask, safe, 1, axis=1)[:, 0] * live
+            new_sw.append((ss + add_x - rem_x, cc + m - rem_m))
+        (sws, cns), (swl, cnl) = new_sw
+        state = (count, last, total, l3a, l3b, l3c, ema0, ema1, ema2, sws, cns, swl, cnl)
+        return state, err, nerr
+
+    # Perf log P2: unroll=8 was tried and *regressed* ~5-13% on CPU PJRT
+    # (longer body, same sequential dependency); plain fori_loop kept.
+    state, err, nerr = lax.fori_loop(0, window, body, (state0, err0, nerr0))
+    mses_ref[...] = jnp.stack(err, axis=1) / jnp.maximum(nerr, 1.0)[:, None]
+    preds_ref[...] = _predict(state, ts)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_sites",))
+def forecast(hist, mask, *, tile_sites=TILE_SITES):
+    """Run the predictor bank over ``hist``/``mask`` (f32[S, W]).
+
+    ``S`` must be a multiple of ``tile_sites`` (the AOT wrapper pads).
+    Returns ``(preds, mses)``, both f32[S, NUM_PREDICTORS].
+    """
+    hist = jnp.asarray(hist, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    n_sites, window = hist.shape
+    if n_sites % tile_sites != 0:
+        raise ValueError(f"n_sites={n_sites} not a multiple of tile={tile_sites}")
+    grid = (n_sites // tile_sites,)
+    out_shape = [
+        jax.ShapeDtypeStruct((n_sites, NUM_PREDICTORS), jnp.float32),
+        jax.ShapeDtypeStruct((n_sites, NUM_PREDICTORS), jnp.float32),
+    ]
+    in_spec = pl.BlockSpec((tile_sites, window), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile_sites, NUM_PREDICTORS), lambda i: (i, 0))
+    preds, mses = pl.pallas_call(
+        _forecast_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(hist, mask)
+    return preds, mses

@@ -1,0 +1,76 @@
+"""Pallas rank kernel: constraint-masked replica scoring.
+
+The Match phase of the broker evaluates the request ClassAd's
+``requirement`` against every storage ad and orders survivors by the
+``rank`` expression (paper §4, §5.2).  For the common case — interval
+constraints over numeric attributes and a linear rank expression — the
+broker compiles the ad pair down to dense matrices and calls this kernel,
+scoring *all* replicas against *all* outstanding requests in one shot:
+
+* ``attrs``   f32[R, A] — replica attribute matrix (one row per storage
+  ad: availableSpace, MaxRDBandwidth, predicted bandwidth, load, ...)
+* ``lo, hi``  f32[Q, A] — per-request interval constraints (±BIG for
+  unconstrained attributes)
+* ``weights`` f32[Q, A] — the linearized rank expression
+
+Score: ``weights @ attrs.T`` where feasible, ``-inf`` otherwise.
+
+TPU mapping: the weighted sum is a (Q, A) x (A, R) matmul — MXU work —
+while feasibility is a VPU broadcast-compare reduced over A.  The grid
+tiles replicas; Q and A are small and stay resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile over the replica axis; requests/attributes are small and resident.
+TILE_REPLICAS = 64
+
+
+def _rank_kernel(attrs_ref, lo_ref, hi_ref, w_ref, out_ref):
+    attrs = attrs_ref[...]  # [TR, A]
+    lo = lo_ref[...]  # [Q, A]
+    hi = hi_ref[...]
+    w = w_ref[...]
+    feas = jnp.all(
+        (attrs[None, :, :] >= lo[:, None, :]) & (attrs[None, :, :] <= hi[:, None, :]),
+        axis=2,
+    )  # [Q, TR]
+    raw = jnp.dot(w, attrs.T, preferred_element_type=jnp.float32)  # MXU
+    out_ref[...] = jnp.where(feas, raw, float("-inf"))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_replicas",))
+def rank(attrs, lo, hi, weights, *, tile_replicas=TILE_REPLICAS):
+    """Score replicas against requests. Returns f32[Q, R].
+
+    ``R`` must be a multiple of ``tile_replicas`` (the AOT wrapper pads;
+    padded replica rows carry out-of-interval sentinel attributes so they
+    score ``-inf`` and can never win).
+    """
+    attrs = jnp.asarray(attrs, jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
+    n_rep, n_attr = attrs.shape
+    n_req = lo.shape[0]
+    if n_rep % tile_replicas != 0:
+        raise ValueError(f"n_rep={n_rep} not a multiple of tile={tile_replicas}")
+    grid = (n_rep // tile_replicas,)
+    out = pl.pallas_call(
+        _rank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_replicas, n_attr), lambda i: (i, 0)),
+            pl.BlockSpec((n_req, n_attr), lambda i: (0, 0)),
+            pl.BlockSpec((n_req, n_attr), lambda i: (0, 0)),
+            pl.BlockSpec((n_req, n_attr), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_req, tile_replicas), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_req, n_rep), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(attrs, lo, hi, weights)
+    return out

@@ -1,0 +1,163 @@
+"""Pure-``jax.numpy`` oracles for the Pallas kernels.
+
+These are deliberately written as straight-line, obviously-correct code
+(python loop over the time axis, no pallas, no fori_loop state packing)
+so that any disagreement with the kernels points at the kernel.
+
+Semantics of the predictor bank (shared with
+``rust/src/forecast/predictors.rs``):
+
+* Observations arrive oldest -> newest along the window axis. ``mask`` is
+  1.0 where the slot holds a real observation, 0.0 for padding. Padding
+  may appear anywhere (sites report at different rates), and masked slots
+  must not perturb any predictor state.
+* Every predictor is *causal*: its backtest error at step ``t`` uses only
+  observations strictly before ``t``.
+* Backtest MSE for predictor ``p`` on site ``s`` is the mean over valid
+  steps ``t`` (mask 1, at least one prior valid observation) of
+  ``(pred_p(s, <t) - x[s, t])**2``. Sites with fewer than 2 valid
+  observations report MSE 0 and prediction equal to the last valid value
+  (or 0.0 if the site has no history at all).
+"""
+
+import jax.numpy as jnp
+
+from .common import EMA_ALPHAS, NUM_PREDICTORS, WINDOW_LONG, WINDOW_SHORT
+
+
+def _bank_state_init(n_sites):
+    """Initial predictor state for ``n_sites`` sites."""
+    z = jnp.zeros((n_sites,), jnp.float32)
+    return {
+        "count": z,                # valid observations so far
+        "last": z,                 # predictor 0
+        "sum": z,                  # predictor 1 (running mean numerator)
+        "last3": jnp.zeros((n_sites, 3), jnp.float32),  # predictor 7 ring
+        "ema": jnp.zeros((n_sites, len(EMA_ALPHAS)), jnp.float32),
+    }
+
+
+def _bank_predict(state, hist, mask, t):
+    """Predictions of each predictor given state *before* step ``t``.
+
+    ``hist``/``mask`` are the full [S, W] arrays; sliding-window
+    predictors read the trailing slices directly (they are causal: slice
+    ends at ``t`` exclusive).
+    """
+    s = state
+    count = s["count"]
+    has = count > 0
+    last = s["last"]
+    preds = []
+    # 0: last value
+    preds.append(last)
+    # 1: running mean
+    preds.append(jnp.where(has, s["sum"] / jnp.maximum(count, 1.0), 0.0))
+    # 2, 3: sliding means over the last w *valid* observations' slots
+    # (masked mean over the trailing w slots, falling back to last value
+    # when the trailing slots hold no valid data).
+    for w in (WINDOW_SHORT, WINDOW_LONG):
+        lo = max(0, t - w)
+        seg = hist[:, lo:t]
+        segm = mask[:, lo:t]
+        n = segm.sum(axis=1)
+        sm = (seg * segm).sum(axis=1)
+        preds.append(jnp.where(n > 0, sm / jnp.maximum(n, 1.0), last))
+    # 4..6: exponential smoothing
+    for i in range(len(EMA_ALPHAS)):
+        preds.append(s["ema"][:, i])
+    # 7: median of the last 3 valid observations (fewer -> degrade to
+    # median of what exists; none -> 0).
+    l3 = s["last3"]
+    m3 = jnp.sort(l3, axis=1)[:, 1]
+    p7 = jnp.where(count >= 3, m3, jnp.where(count == 2, (l3[:, 1] + l3[:, 2]) / 2.0, last))
+    preds.append(p7)
+    out = jnp.stack(preds, axis=1)  # [S, P]
+    # With no history at all every predictor reports 0.0.
+    return jnp.where(has[:, None], out, 0.0)
+
+
+def _bank_update(state, x, m):
+    """Fold observation ``x`` (valid where ``m``) into the state."""
+    s = dict(state)
+    mb = m > 0.5
+    first = jnp.logical_and(mb, s["count"] == 0)
+    s["sum"] = s["sum"] + jnp.where(mb, x, 0.0)
+    new_last3 = jnp.concatenate([s["last3"][:, 1:], x[:, None]], axis=1)
+    # Before 3 observations exist, keep the ring saturated with x so the
+    # median degrades gracefully.
+    seed3 = jnp.stack([x, x, x], axis=1)
+    s["last3"] = jnp.where(
+        mb[:, None], jnp.where(first[:, None], seed3, new_last3), s["last3"]
+    )
+    emas = []
+    for i, a in enumerate(EMA_ALPHAS):
+        e = s["ema"][:, i]
+        e2 = jnp.where(first, x, (1.0 - a) * e + a * x)
+        emas.append(jnp.where(mb, e2, e))
+    s["ema"] = jnp.stack(emas, axis=1)
+    s["last"] = jnp.where(mb, x, s["last"])
+    s["count"] = s["count"] + jnp.where(mb, 1.0, 0.0)
+    return s
+
+
+def forecast_ref(hist, mask):
+    """Oracle for the forecast kernel.
+
+    Args:
+      hist: f32[S, W] bandwidth observations, oldest -> newest.
+      mask: f32[S, W] validity mask (1.0 = real observation).
+
+    Returns:
+      preds: f32[S, P] final prediction of each predictor.
+      mses:  f32[S, P] backtest MSE of each predictor.
+    """
+    hist = jnp.asarray(hist, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    n_sites, window = hist.shape
+    state = _bank_state_init(n_sites)
+    err = jnp.zeros((n_sites, NUM_PREDICTORS), jnp.float32)
+    nerr = jnp.zeros((n_sites,), jnp.float32)
+    for t in range(window):
+        x = hist[:, t]
+        m = mask[:, t]
+        scorable = jnp.logical_and(m > 0.5, state["count"] > 0)
+        p = _bank_predict(state, hist, mask, t)
+        e = (p - x[:, None]) ** 2
+        err = err + jnp.where(scorable[:, None], e, 0.0)
+        nerr = nerr + jnp.where(scorable, 1.0, 0.0)
+        state = _bank_update(state, x, m)
+    mses = err / jnp.maximum(nerr, 1.0)[:, None]
+    preds = _bank_predict(state, hist, mask, window)
+    return preds, mses
+
+
+def rank_ref(attrs, lo, hi, weights):
+    """Oracle for the rank kernel.
+
+    Implements the broker's vectorized Match-phase scoring: a replica is
+    *feasible* for a request iff every attribute lies in [lo, hi]; the
+    score of a feasible replica is the weighted sum of its attributes
+    (the ClassAd ``rank`` expression compiled to a linear form), and
+    infeasible replicas score ``-inf``.
+
+    Args:
+      attrs:   f32[R, A] replica attribute matrix.
+      lo, hi:  f32[Q, A] per-request constraint bounds (use -/+ large
+               sentinels for unconstrained attributes).
+      weights: f32[Q, A] per-request rank weights.
+
+    Returns:
+      scores: f32[Q, R], ``-inf`` where infeasible.
+    """
+    attrs = jnp.asarray(attrs, jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
+    feas = jnp.all(
+        (attrs[None, :, :] >= lo[:, None, :]) & (attrs[None, :, :] <= hi[:, None, :]),
+        axis=2,
+    )  # [Q, R]
+    raw = weights @ attrs.T  # [Q, R] — the MXU-shaped part
+    neg = jnp.float32(-jnp.inf)
+    return jnp.where(feas, raw, neg)

@@ -1,0 +1,100 @@
+"""Layer-2 JAX model: the broker's forecast + rank compute graph.
+
+Two exported entry points (AOT-lowered to HLO text by :mod:`compile.aot`
+and executed from ``rust/src/runtime`` — Python never runs at request
+time):
+
+* :func:`forecast_model` — predictor bank over per-site bandwidth
+  history (L1 kernel), adaptive best-forecaster selection by backtest
+  MSE, and the paper's §3.2 heuristic of *“combining past observed
+  performance with current load of server”*: the effective bandwidth fed
+  to ranking is ``best_prediction * (1 - load)``.
+* :func:`rank_model` — constraint-masked scoring of all replicas against
+  all outstanding requests (L1 rank kernel) plus per-request argmax.
+
+Both are pure functions of dense arrays; the Rust side assembles the
+arrays from GRIS query results and pads to the AOT shapes recorded in
+``artifacts/manifest.json``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import forecast as fk
+from .kernels import rank as rk
+from .kernels.common import NUM_PREDICTORS
+
+
+def forecast_model(hist, mask, load):
+    """Adaptive bandwidth forecast for every site.
+
+    Args:
+      hist: f32[S, W] per-site bandwidth history, oldest -> newest.
+      mask: f32[S, W] validity mask.
+      load: f32[S] current utilization in [0, 1] (from the site's GRIS
+        dynamic attributes).
+
+    Returns a 4-tuple:
+      preds   f32[S, P] — every forecaster's prediction,
+      mses    f32[S, P] — every forecaster's backtest MSE,
+      best    f32[S]    — prediction of the per-site best (min-MSE)
+                          forecaster,
+      eff     f32[S]    — load-discounted effective bandwidth
+                          (the rank input).
+    """
+    preds, mses = fk.forecast(hist, mask)
+    best_idx = jnp.argmin(mses, axis=1)
+    best = jnp.take_along_axis(preds, best_idx[:, None], axis=1)[:, 0]
+    load = jnp.clip(jnp.asarray(load, jnp.float32), 0.0, 1.0)
+    eff = best * (1.0 - load)
+    return preds, mses, best, eff
+
+
+def rank_model(attrs, lo, hi, weights):
+    """Score replicas against requests and pick each request's winner.
+
+    Returns ``(scores f32[Q, R], best_idx i32[Q], best_score f32[Q])``.
+    A request with no feasible replica reports ``best_score = -inf``
+    (its ``best_idx`` is then meaningless and the Rust caller falls back
+    to 'no match', mirroring an unsatisfied ClassAd ``requirement``).
+    """
+    scores = rk.rank(attrs, lo, hi, weights)
+    best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=1)
+    return scores, best_idx, best_score
+
+
+def forecast_model_reference(hist, mask, load):
+    """Pure-jnp twin of :func:`forecast_model` (oracle for tests)."""
+    from .kernels import ref
+
+    preds, mses = ref.forecast_ref(hist, mask)
+    best_idx = jnp.argmin(mses, axis=1)
+    best = jnp.take_along_axis(preds, best_idx[:, None], axis=1)[:, 0]
+    load = jnp.clip(jnp.asarray(load, jnp.float32), 0.0, 1.0)
+    eff = best * (1.0 - load)
+    return preds, mses, best, eff
+
+
+def jit_forecast(n_sites, window):
+    """Lowered forecast_model for fixed AOT shapes."""
+    spec_h = jax.ShapeDtypeStruct((n_sites, window), jnp.float32)
+    spec_l = jax.ShapeDtypeStruct((n_sites,), jnp.float32)
+    return jax.jit(forecast_model).lower(spec_h, spec_h, spec_l)
+
+
+def jit_rank(n_rep, n_req, n_attr):
+    """Lowered rank_model for fixed AOT shapes."""
+    a = jax.ShapeDtypeStruct((n_rep, n_attr), jnp.float32)
+    q = jax.ShapeDtypeStruct((n_req, n_attr), jnp.float32)
+    return jax.jit(rank_model).lower(a, q, q, q)
+
+
+__all__ = [
+    "NUM_PREDICTORS",
+    "forecast_model",
+    "forecast_model_reference",
+    "jit_forecast",
+    "jit_rank",
+    "rank_model",
+]

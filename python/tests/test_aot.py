@@ -1,0 +1,106 @@
+"""AOT path: lowering produces loadable HLO text + a coherent manifest."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.common import (
+    AOT_ATTRS,
+    AOT_REPLICAS,
+    AOT_REQUESTS,
+    AOT_SITES,
+    AOT_WINDOW,
+    NUM_PREDICTORS,
+)
+
+
+class TestLowering:
+    def test_forecast_hlo_text(self):
+        text = aot.to_hlo_text(model.jit_forecast(AOT_SITES, AOT_WINDOW))
+        assert text.startswith("HloModule")
+        # AOT input/output shapes must appear in the entry computation.
+        assert f"f32[{AOT_SITES},{AOT_WINDOW}]" in text
+        assert f"f32[{AOT_SITES},{NUM_PREDICTORS}]" in text
+
+    def test_rank_hlo_text(self):
+        text = aot.to_hlo_text(model.jit_rank(AOT_REPLICAS, AOT_REQUESTS, AOT_ATTRS))
+        assert text.startswith("HloModule")
+        assert f"f32[{AOT_REQUESTS},{AOT_REPLICAS}]" in text
+
+    def test_no_mosaic_custom_calls(self):
+        """interpret=True must lower to plain HLO ops — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        for text in (
+            aot.to_hlo_text(model.jit_forecast(AOT_SITES, AOT_WINDOW)),
+            aot.to_hlo_text(model.jit_rank(AOT_REPLICAS, AOT_REQUESTS, AOT_ATTRS)),
+        ):
+            assert "tpu_custom_call" not in text
+            assert "mosaic" not in text.lower()
+
+
+class TestBuild:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.build(str(out))
+        return out, manifest
+
+    def test_files_exist(self, built):
+        out, manifest = built
+        for entry in manifest["entries"].values():
+            assert (out / entry["file"]).exists()
+
+    def test_manifest_round_trips(self, built):
+        out, manifest = built
+        on_disk = json.loads((out / "manifest.json").read_text())
+        assert on_disk == json.loads(json.dumps(manifest))
+        bank = on_disk["predictor_bank"]
+        assert bank["num_predictors"] == NUM_PREDICTORS
+        assert len(bank["names"]) == NUM_PREDICTORS
+
+    def test_manifest_shapes_match_kernel_constants(self, built):
+        _, manifest = built
+        fc = manifest["entries"]["forecast"]
+        assert fc["inputs"][0]["shape"] == [AOT_SITES, AOT_WINDOW]
+        rk = manifest["entries"]["rank"]
+        assert rk["outputs"][0]["shape"] == [AOT_REQUESTS, AOT_REPLICAS]
+
+    def test_sha256_matches_file(self, built):
+        import hashlib
+
+        out, manifest = built
+        for entry in manifest["entries"].values():
+            data = (out / entry["file"]).read_text().encode()
+            assert hashlib.sha256(data).hexdigest() == entry["sha256"]
+
+
+class TestExecutedArtifactSemantics:
+    """Run the lowered computation via jax itself and compare with the
+    eager model — catches lowering bugs before the Rust side ever loads
+    the artifact."""
+
+    def test_forecast_compiled_equals_eager(self):
+        rng = np.random.default_rng(0)
+        hist = rng.uniform(1, 100, (AOT_SITES, AOT_WINDOW)).astype(np.float32)
+        mask = (rng.random((AOT_SITES, AOT_WINDOW)) < 0.8).astype(np.float32)
+        load = rng.uniform(0, 1, (AOT_SITES,)).astype(np.float32)
+        compiled = model.jit_forecast(AOT_SITES, AOT_WINDOW).compile()
+        got = compiled(hist, mask, load)
+        want = model.forecast_model(hist, mask, load)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+    def test_rank_compiled_equals_eager(self):
+        rng = np.random.default_rng(1)
+        attrs = rng.uniform(0, 100, (AOT_REPLICAS, AOT_ATTRS)).astype(np.float32)
+        lo = rng.uniform(0, 50, (AOT_REQUESTS, AOT_ATTRS)).astype(np.float32)
+        hi = rng.uniform(50, 120, (AOT_REQUESTS, AOT_ATTRS)).astype(np.float32)
+        w = rng.uniform(-1, 1, (AOT_REQUESTS, AOT_ATTRS)).astype(np.float32)
+        compiled = model.jit_rank(AOT_REPLICAS, AOT_REQUESTS, AOT_ATTRS).compile()
+        got = compiled(attrs, lo, hi, w)
+        want = model.rank_model(attrs, lo, hi, w)
+        for g, w_ in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,85 @@
+"""Cross-language contract: constants the Rust side mirrors.
+
+`rust/src/forecast/predictors.rs` re-implements the predictor bank and
+`rust/tests/it_runtime_artifacts.rs` checks numerics through the
+compiled artifact; this file pins the *layout* contract from the Python
+side so a drift fails fast in `make test` before the Rust suite runs.
+"""
+
+import numpy as np
+
+from compile.kernels import forecast as fk
+from compile.kernels import ref
+from compile.kernels.common import (
+    AOT_ATTRS,
+    AOT_REPLICAS,
+    AOT_REQUESTS,
+    AOT_SITES,
+    AOT_WINDOW,
+    EMA_ALPHAS,
+    NUM_PREDICTORS,
+    TILE_SITES,
+    WINDOW_LONG,
+    WINDOW_SHORT,
+)
+
+
+class TestBankLayout:
+    def test_bank_constants(self):
+        # Mirrored in rust/src/forecast/predictors.rs — do not change
+        # one side without the other.
+        assert NUM_PREDICTORS == 8
+        assert WINDOW_SHORT == 4
+        assert WINDOW_LONG == 16
+        assert EMA_ALPHAS == (0.10, 0.30, 0.60)
+
+    def test_aot_shapes(self):
+        assert AOT_SITES % TILE_SITES == 0
+        assert AOT_SITES == 128 and AOT_WINDOW == 64
+        assert (AOT_REPLICAS, AOT_REQUESTS, AOT_ATTRS) == (128, 8, 8)
+
+    def test_predictor_index_semantics(self):
+        """Pin each index's meaning with a series where they differ."""
+        obs = np.array(
+            [[10.0] * 16 + [100.0] * 4], np.float32
+        ).repeat(4, 0)
+        mask = np.ones_like(obs)
+        p, _ = fk.forecast(obs, mask, tile_sites=4)
+        p = np.asarray(p)[0]
+        assert p[0] == 100.0  # last value
+        np.testing.assert_allclose(p[1], (10 * 16 + 100 * 4) / 20)  # run mean
+        np.testing.assert_allclose(p[2], 100.0)  # sliding-4
+        np.testing.assert_allclose(p[3], (10 * 12 + 100 * 4) / 16)  # sliding-16
+        assert p[4] < p[5] < p[6]  # EMA alphas ascending
+        assert p[7] == 100.0  # median-3 of trailing 100s
+
+    def test_vmem_budget_estimate(self):
+        """DESIGN.md hardware-adaptation claim: one tile's working set
+        stays far under a ~16 MiB VMEM budget."""
+        hist_bytes = TILE_SITES * AOT_WINDOW * 4 * 2  # hist + mask
+        state_bytes = TILE_SITES * 4 * 13  # flat state vectors
+        out_bytes = TILE_SITES * NUM_PREDICTORS * 4 * 2
+        total = hist_bytes + state_bytes + out_bytes
+        assert total < 1 << 20, f"{total} bytes exceeds 1 MiB guard"
+
+
+class TestRefSelfConsistency:
+    def test_ref_is_permutation_invariant_across_sites(self):
+        rng = np.random.default_rng(3)
+        hist = rng.uniform(1, 100, (6, 24)).astype(np.float32)
+        mask = (rng.random((6, 24)) > 0.2).astype(np.float32)
+        p, m = ref.forecast_ref(hist, mask)
+        perm = np.array([3, 1, 5, 0, 2, 4])
+        p2, m2 = ref.forecast_ref(hist[perm], mask[perm])
+        np.testing.assert_allclose(np.asarray(p)[perm], p2, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(m)[perm], m2, rtol=1e-6)
+
+    def test_ref_scale_equivariance(self):
+        """Predictions scale linearly; MSEs quadratically."""
+        rng = np.random.default_rng(4)
+        hist = rng.uniform(1, 100, (4, 20)).astype(np.float32)
+        mask = np.ones_like(hist)
+        p1, m1 = ref.forecast_ref(hist, mask)
+        p2, m2 = ref.forecast_ref(hist * 10.0, mask)
+        np.testing.assert_allclose(np.asarray(p1) * 10.0, p2, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m1) * 100.0, m2, rtol=1e-4)

@@ -1,0 +1,159 @@
+"""Forecast Pallas kernel vs the pure-jnp oracle (the core L1 signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forecast as fk
+from compile.kernels import ref
+from compile.kernels.common import NUM_PREDICTORS
+
+RTOL = 2e-4
+ATOL = 1e-3
+
+
+def _check(hist, mask, tile):
+    p1, m1 = fk.forecast(hist, mask, tile_sites=tile)
+    p2, m2 = ref.forecast_ref(hist, mask)
+    np.testing.assert_allclose(p1, p2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(m1, m2, rtol=RTOL, atol=ATOL)
+    return np.asarray(p1), np.asarray(m1)
+
+
+def _rand(seed, s, w, p_valid=0.8, lo=1.0, hi=100.0):
+    rng = np.random.default_rng(seed)
+    hist = rng.uniform(lo, hi, (s, w)).astype(np.float32)
+    mask = (rng.random((s, w)) < p_valid).astype(np.float32)
+    return hist, mask
+
+
+class TestAgainstOracle:
+    def test_dense_history(self):
+        hist, _ = _rand(1, 8, 32)
+        _check(hist, np.ones_like(hist), tile=4)
+
+    def test_sparse_history(self):
+        hist, mask = _rand(2, 12, 48, p_valid=0.4)
+        _check(hist, mask, tile=4)
+
+    def test_empty_site_predicts_zero(self):
+        hist, mask = _rand(3, 4, 16)
+        mask[0] = 0.0
+        p, m = _check(hist, mask, tile=4)
+        assert np.all(p[0] == 0.0)
+        assert np.all(m[0] == 0.0)
+
+    def test_single_observation_site(self):
+        hist, mask = _rand(4, 4, 16)
+        mask[1] = 0.0
+        mask[1, 7] = 1.0
+        p, m = _check(hist, mask, tile=4)
+        # Every predictor collapses to the lone observation; no backtest
+        # step was scorable so MSE stays 0.
+        np.testing.assert_allclose(p[1], np.full(NUM_PREDICTORS, hist[1, 7]), rtol=1e-6)
+        assert np.all(m[1] == 0.0)
+
+    def test_two_observations_median_path(self):
+        hist, mask = _rand(5, 4, 16)
+        mask[2] = 0.0
+        mask[2, 3] = 1.0
+        mask[2, 9] = 1.0
+        _check(hist, mask, tile=4)
+
+    def test_constant_series_zero_mse(self):
+        hist = np.full((4, 24), 42.0, np.float32)
+        mask = np.ones_like(hist)
+        p, m = _check(hist, mask, tile=4)
+        np.testing.assert_allclose(p, 42.0, rtol=1e-6)
+        np.testing.assert_allclose(m, 0.0, atol=1e-6)
+
+    def test_window_of_one(self):
+        hist, mask = _rand(6, 4, 1)
+        _check(hist, mask, tile=4)
+
+    def test_large_batch_matches_default_tile(self):
+        hist, mask = _rand(7, 128, 64)
+        _check(hist, mask, tile=32)
+
+    def test_tile_size_is_numerically_irrelevant(self):
+        hist, mask = _rand(8, 16, 40)
+        p4, m4 = fk.forecast(hist, mask, tile_sites=4)
+        p16, m16 = fk.forecast(hist, mask, tile_sites=16)
+        np.testing.assert_allclose(p4, p16, rtol=1e-6)
+        np.testing.assert_allclose(m4, m16, rtol=1e-6)
+
+    def test_non_multiple_tile_rejected(self):
+        hist, mask = _rand(9, 6, 8)
+        with pytest.raises(ValueError, match="multiple"):
+            fk.forecast(hist, mask, tile_sites=4)
+
+
+class TestPredictorSemantics:
+    def test_last_value_is_last_valid(self):
+        hist = np.array([[10.0, 20.0, 30.0, 40.0]], np.float32).repeat(4, 0)
+        mask = np.ones_like(hist)
+        mask[0, 3] = 0.0  # last slot invalid -> last value is 30
+        p, _ = fk.forecast(hist, mask, tile_sites=4)
+        assert p[0, 0] == 30.0
+        assert p[1, 0] == 40.0
+
+    def test_running_mean(self):
+        hist = np.arange(1, 9, dtype=np.float32)[None, :].repeat(4, 0)
+        mask = np.ones_like(hist)
+        p, _ = fk.forecast(hist, mask, tile_sites=4)
+        np.testing.assert_allclose(p[:, 1], 4.5, rtol=1e-6)
+
+    def test_sliding_mean_short(self):
+        hist = np.arange(1, 13, dtype=np.float32)[None, :].repeat(4, 0)
+        mask = np.ones_like(hist)
+        p, _ = fk.forecast(hist, mask, tile_sites=4)
+        # last 4 of 1..12 -> mean(9,10,11,12) = 10.5
+        np.testing.assert_allclose(p[:, 2], 10.5, rtol=1e-6)
+
+    def test_median_of_three_robust_to_spike(self):
+        hist = np.array([[50.0] * 10 + [5000.0, 50.0, 50.0]], np.float32).repeat(4, 0)
+        mask = np.ones_like(hist)
+        p, _ = fk.forecast(hist, mask, tile_sites=4)
+        # median of (5000, 50, 50)... window is last 3 = (5000, 50, 50)?
+        # last3 ring holds the final three observations (5000, 50, 50);
+        # the median is 50 — the spike is rejected.
+        np.testing.assert_allclose(p[:, 7], 50.0, rtol=1e-6)
+
+    def test_ema_tracks_step_change_fastest_at_high_alpha(self):
+        hist = np.array([[10.0] * 16 + [100.0] * 8], np.float32).repeat(4, 0)
+        mask = np.ones_like(hist)
+        p, _ = fk.forecast(hist, mask, tile_sites=4)
+        # alpha order: 0.1, 0.3, 0.6 -> higher alpha is closer to 100.
+        assert p[0, 4] < p[0, 5] < p[0, 6]
+        assert p[0, 6] > 90.0
+
+    def test_adaptive_selection_prefers_mean_on_noise(self):
+        # White noise around a constant: the running mean has the lowest
+        # backtest MSE among the bank (last-value has ~2x the variance).
+        rng = np.random.default_rng(11)
+        hist = (50.0 + rng.normal(0, 5, (8, 64))).astype(np.float32)
+        mask = np.ones_like(hist)
+        _, m = fk.forecast(hist, mask, tile_sites=8)
+        best = np.argmin(np.asarray(m), axis=1)
+        assert np.all(m[np.arange(8), best] <= m[:, 0] + 1e-6)
+        assert (best == 1).mean() >= 0.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    window=st.integers(1, 40),
+    p_valid=st.floats(0.0, 1.0),
+    scale=st.sampled_from([1.0, 1e-3, 1e4]),
+)
+def test_hypothesis_sweep(seed, tiles, window, p_valid, scale):
+    """Shape/mask/scale sweep: kernel == oracle everywhere."""
+    rng = np.random.default_rng(seed)
+    s = tiles * 4
+    hist = (rng.uniform(0.1, 100.0, (s, window)) * scale).astype(np.float32)
+    mask = (rng.random((s, window)) < p_valid).astype(np.float32)
+    p1, m1 = fk.forecast(hist, mask, tile_sites=4)
+    p2, m2 = ref.forecast_ref(hist, mask)
+    np.testing.assert_allclose(p1, p2, rtol=5e-4, atol=1e-3 * scale)
+    np.testing.assert_allclose(m1, m2, rtol=5e-4, atol=1e-3 * scale * scale)

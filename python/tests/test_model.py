@@ -1,0 +1,91 @@
+"""L2 model: shapes, adaptive selection, load discounting, padding."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels.common import AOT_SITES, AOT_WINDOW, NUM_PREDICTORS
+
+
+def _rand(seed, s=32, w=64, p_valid=0.9):
+    rng = np.random.default_rng(seed)
+    hist = rng.uniform(10, 90, (s, w)).astype(np.float32)
+    mask = (rng.random((s, w)) < p_valid).astype(np.float32)
+    load = rng.uniform(0, 1, (s,)).astype(np.float32)
+    return hist, mask, load
+
+
+class TestForecastModel:
+    def test_shapes(self):
+        hist, mask, load = _rand(0)
+        preds, mses, best, eff = model.forecast_model(hist, mask, load)
+        assert preds.shape == (32, NUM_PREDICTORS)
+        assert mses.shape == (32, NUM_PREDICTORS)
+        assert best.shape == (32,)
+        assert eff.shape == (32,)
+
+    def test_best_is_min_mse_prediction(self):
+        hist, mask, load = _rand(1)
+        preds, mses, best, _ = model.forecast_model(hist, mask, load)
+        preds, mses, best = map(np.asarray, (preds, mses, best))
+        idx = mses.argmin(axis=1)
+        np.testing.assert_allclose(best, preds[np.arange(32), idx], rtol=1e-6)
+
+    def test_eff_discounts_by_load(self):
+        hist, mask, _ = _rand(2)
+        _, _, best, eff0 = model.forecast_model(hist, mask, np.zeros(32, np.float32))
+        _, _, _, eff_half = model.forecast_model(
+            hist, mask, np.full(32, 0.5, np.float32)
+        )
+        np.testing.assert_allclose(np.asarray(eff0), np.asarray(best), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(eff_half), 0.5 * np.asarray(best), rtol=1e-6
+        )
+
+    def test_load_clipped(self):
+        hist, mask, _ = _rand(3)
+        _, _, _, eff = model.forecast_model(hist, mask, np.full(32, 7.0, np.float32))
+        np.testing.assert_allclose(np.asarray(eff), 0.0, atol=1e-6)
+
+    def test_matches_reference_model(self):
+        hist, mask, load = _rand(4)
+        got = model.forecast_model(hist, mask, load)
+        want = model.forecast_model_reference(hist, mask, load)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=5e-4, atol=1e-3)
+
+    def test_padding_rows_are_inert(self):
+        """Padded (all-masked) sites — how the Rust runtime feeds batches
+        smaller than AOT_SITES — predict 0 and never perturb real rows."""
+        hist, mask, load = _rand(5, s=AOT_SITES, w=AOT_WINDOW)
+        mask[40:] = 0.0
+        preds, mses, best, eff = map(
+            np.asarray, model.forecast_model(hist, mask, load)
+        )
+        assert np.all(preds[40:] == 0.0)
+        assert np.all(best[40:] == 0.0)
+        # Same real rows, different padding content -> identical output.
+        hist2 = hist.copy()
+        hist2[40:] = 123.0
+        preds2, _, best2, _ = map(np.asarray, model.forecast_model(hist2, mask, load))
+        np.testing.assert_allclose(preds[:40], preds2[:40], rtol=1e-6)
+        np.testing.assert_allclose(best[:40], best2[:40], rtol=1e-6)
+
+
+class TestRankModel:
+    def test_argmax_consistent(self):
+        rng = np.random.default_rng(6)
+        attrs = rng.uniform(0, 100, (64, 8)).astype(np.float32)
+        lo = np.full((4, 8), -1e9, np.float32)
+        hi = np.full((4, 8), 1e9, np.float32)
+        w = rng.uniform(0, 1, (4, 8)).astype(np.float32)
+        scores, idx, best = map(np.asarray, model.rank_model(attrs, lo, hi, w))
+        np.testing.assert_allclose(best, scores.max(axis=1), rtol=1e-6)
+        assert np.all(scores[np.arange(4), idx] == best)
+
+    def test_no_feasible_replica_reports_neg_inf(self):
+        attrs = np.zeros((64, 2), np.float32)
+        lo = np.full((1, 2), 5.0, np.float32)
+        hi = np.full((1, 2), 1e9, np.float32)
+        w = np.ones((1, 2), np.float32)
+        _, _, best = model.rank_model(attrs, lo, hi, w)
+        assert np.isneginf(np.asarray(best)[0])

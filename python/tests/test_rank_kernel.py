@@ -1,0 +1,91 @@
+"""Rank Pallas kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rank as rk
+from compile.kernels import ref
+
+BIG = 1e9
+
+
+def _check(attrs, lo, hi, w, tile=8):
+    s1 = rk.rank(attrs, lo, hi, w, tile_replicas=tile)
+    s2 = ref.rank_ref(attrs, lo, hi, w)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-4)
+    return np.asarray(s1)
+
+
+class TestRank:
+    def test_unconstrained_is_plain_matmul(self):
+        rng = np.random.default_rng(0)
+        attrs = rng.uniform(-5, 5, (16, 6)).astype(np.float32)
+        lo = np.full((3, 6), -BIG, np.float32)
+        hi = np.full((3, 6), BIG, np.float32)
+        w = rng.uniform(-1, 1, (3, 6)).astype(np.float32)
+        s = _check(attrs, lo, hi, w)
+        np.testing.assert_allclose(s, w @ attrs.T, rtol=1e-5)
+
+    def test_infeasible_scores_neg_inf(self):
+        attrs = np.tile(np.array([[1.0, 1.0], [9.0, 1.0]], np.float32), (4, 1))
+        lo = np.array([[2.0, -BIG]], np.float32)
+        hi = np.array([[BIG, BIG]], np.float32)
+        w = np.ones((1, 2), np.float32)
+        s = _check(attrs, lo, hi, w, tile=4)
+        assert np.isneginf(s[0, 0])
+        assert s[0, 1] == 10.0
+
+    def test_paper_example_ads(self):
+        """§4 storage ad vs §5.2 request: availableSpace=50G, MaxRD=75K,
+        request wants >5G and >50K ranked by availableSpace."""
+        # attrs: [availableSpace(GB), MaxRDBandwidth(KB/s)]
+        attrs = np.tile(
+            np.array(
+                [[50.0, 75.0], [3.0, 200.0], [80.0, 40.0], [60.0, 60.0]], np.float32
+            ),
+            (2, 1),
+        )
+        lo = np.array([[5.0, 50.0]], np.float32)
+        hi = np.full((1, 2), BIG, np.float32)
+        w = np.array([[1.0, 0.0]], np.float32)  # rank = other.availableSpace
+        s = _check(attrs, lo, hi, w, tile=8)
+        # Replica 1 fails space, replica 2 fails bandwidth.
+        assert np.isneginf(s[0, 1]) and np.isneginf(s[0, 2])
+        # Winner is the feasible replica with the most available space.
+        feas = np.where(np.isfinite(s[0]))[0]
+        assert s[0, feas].max() == 60.0
+
+    def test_boundary_is_inclusive(self):
+        attrs = np.array([[5.0]], np.float32).repeat(8, 0)
+        lo = np.array([[5.0]], np.float32)
+        hi = np.array([[5.0]], np.float32)
+        w = np.ones((1, 1), np.float32)
+        s = _check(attrs, lo, hi, w, tile=8)
+        assert np.all(np.isfinite(s))
+
+    def test_tile_invariance(self):
+        rng = np.random.default_rng(1)
+        attrs = rng.uniform(-5, 5, (32, 4)).astype(np.float32)
+        lo = rng.uniform(-6, 0, (2, 4)).astype(np.float32)
+        hi = rng.uniform(0, 6, (2, 4)).astype(np.float32)
+        w = rng.uniform(-1, 1, (2, 4)).astype(np.float32)
+        a = rk.rank(attrs, lo, hi, w, tile_replicas=8)
+        b = rk.rank(attrs, lo, hi, w, tile_replicas=32)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    n_req=st.integers(1, 8),
+    n_attr=st.integers(1, 12),
+)
+def test_hypothesis_sweep(seed, tiles, n_req, n_attr):
+    rng = np.random.default_rng(seed)
+    n_rep = tiles * 8
+    attrs = rng.uniform(-100, 100, (n_rep, n_attr)).astype(np.float32)
+    lo = rng.uniform(-120, 20, (n_req, n_attr)).astype(np.float32)
+    hi = rng.uniform(-20, 120, (n_req, n_attr)).astype(np.float32)
+    w = rng.uniform(-2, 2, (n_req, n_attr)).astype(np.float32)
+    _check(attrs, lo, hi, w, tile=8)

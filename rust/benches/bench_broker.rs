@@ -1,0 +1,87 @@
+//! R5 — broker phase breakdown (Figure 6) and the §5.1.1
+//! decentralized-vs-centralized scalability comparison.
+//!
+//! Prints: (a) Search / Convert / Match latency split vs replica count,
+//! (b) end-to-end selection latency, (c) virtual-time mean decision
+//! latency vs offered concurrency for one central manager vs per-client
+//! brokers (the paper's scalability argument, quantified).
+
+use globus_replica::broker::centralized::{
+    queueing_latencies_central, queueing_latencies_decentralized,
+};
+use globus_replica::broker::RankPolicy;
+use globus_replica::classad::parse_classad;
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::SimGrid;
+use globus_replica::simnet::WorkloadSpec;
+use globus_replica::util::bench::{report_metric, Bench};
+
+fn main() {
+    let mut b = Bench::new("broker phases (Figure 6; R5)");
+    let request = parse_classad(
+        r#"reqdSpace = 0; reqdRDBandwidth = 10K/Sec;
+           rank = other.availableSpace;
+           requirement = other.AvgRDBandwidth > 10K/Sec;"#,
+    )
+    .unwrap();
+
+    let mut service_s_8 = 0.0;
+    for sites in [4usize, 8, 32, 128] {
+        let cfg = GridConfig::generate(sites, 42);
+        let spec = WorkloadSpec { files: 4, ..Default::default() };
+        // Every file on every site so candidate count == sites.
+        let mut grid = SimGrid::build(&cfg, &spec, sites, 32);
+        grid.warm(4);
+        let logical = grid.files[0].clone();
+        let broker = grid.broker(RankPolicy::ClassAdRank);
+        let s = b.case_items(&format!("select e2e, {sites} replicas"), sites as f64, || {
+            broker.select(&logical, &request).unwrap().site.len()
+        });
+        if sites == 8 {
+            service_s_8 = s.mean_ns / 1e9;
+        }
+        // Phase split from the trace of one selection.
+        let sel = broker.select(&logical, &request).unwrap();
+        println!(
+            "    phase split {sites} replicas: search {}µs | convert {}µs | match {}µs",
+            sel.trace.search_us, sel.trace.convert_us, sel.trace.match_us
+        );
+        // Forecast policy comparison at the same size.
+        let fbroker = grid.broker(RankPolicy::ForecastBandwidth { engine: None });
+        b.case_items(
+            &format!("select e2e forecast-rank, {sites} replicas"),
+            sites as f64,
+            || fbroker.select(&logical, &request).unwrap().site.len(),
+        );
+    }
+    b.finish();
+
+    // §5.1.1 scalability: virtual-time queueing with the *measured*
+    // decision service time (8-replica broker).
+    println!("\n== decentralized vs centralized (paper §5.1.1) ==");
+    println!("service time per decision: {:.1}µs", service_s_8 * 1e6);
+    println!(
+        "{:>12} {:>16} {:>16} {:>8}",
+        "clients", "central mean", "decentral mean", "ratio"
+    );
+    for clients in [1usize, 2, 4, 8, 16, 32, 64] {
+        // All clients decide within one decision window (worst case the
+        // paper worries about).
+        let arrivals = vec![0.0; clients];
+        let client_of: Vec<usize> = (0..clients).collect();
+        let c = queueing_latencies_central(&arrivals, service_s_8);
+        let d = queueing_latencies_decentralized(&arrivals, service_s_8, &client_of, clients);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "{clients:>12} {:>14.1}µs {:>14.1}µs {:>8.1}",
+            mean(&c) * 1e6,
+            mean(&d) * 1e6,
+            mean(&c) / mean(&d)
+        );
+    }
+    report_metric(
+        "\nselection overhead vs access phase",
+        service_s_8 * 1e3,
+        "ms per decision (compare: simulated transfers take seconds-minutes)",
+    );
+}

@@ -1,0 +1,95 @@
+//! R4 — directory query cost (paper §3/§5.1.2 search phase): GRIS
+//! searches with dynamic providers, GIIS discovery at scale, and the
+//! full TCP round trip a deployed broker pays.
+
+use std::sync::{Arc, Mutex};
+
+use globus_replica::directory::client::DirectoryClient;
+use globus_replica::directory::server::DirectoryServer;
+use globus_replica::directory::{Dn, Entry, Filter, Giis, Gris, Scope};
+use globus_replica::util::bench::Bench;
+use globus_replica::util::prng::Rng;
+
+fn demo_gris(volumes: usize) -> Gris {
+    let mut rng = Rng::new(5);
+    let mut gris = Gris::new("anl", "mcs");
+    let base = gris.base_dn().clone();
+    for v in 0..volumes {
+        let vol = base.child("gss", &format!("vol{v}"));
+        let mut e = Entry::new(vol.clone());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put_f64("totalSpace", rng.range(1e10, 2e11));
+        e.put_f64("availableSpace", rng.range(1e9, 1e11));
+        e.put("mountPoint", format!("/data{v}"));
+        e.put_f64("diskTransferRate", 2e7);
+        e.put_f64("drdTime", 8.0);
+        e.put_f64("dwrTime", 9.0);
+        gris.add_entry(e);
+        // A dynamic provider per volume (the shell-backend analog).
+        gris.add_provider(
+            &vol,
+            Arc::new(move || vec![("load".into(), format!("{:.3}", (v % 10) as f64 / 10.0))]),
+        );
+    }
+    gris
+}
+
+fn main() {
+    let mut b = Bench::new("directory / MDS (paper §3; R4)");
+    let root = Dn::parse("o=grid").unwrap();
+    let f_all = Filter::parse("(objectClass=GridStorageServerVolume)").unwrap();
+    let f_sel = Filter::parse("(&(objectClass=GridStorage*)(availableSpace>=5000000000))").unwrap();
+
+    for volumes in [1usize, 8, 64] {
+        let gris = demo_gris(volumes);
+        b.case_items(
+            &format!("GRIS search sub, {volumes} volumes, w/ providers"),
+            volumes as f64,
+            || gris.search(&root, Scope::Sub, &f_all).len(),
+        );
+        b.case_items(
+            &format!("GRIS filtered search, {volumes} volumes"),
+            volumes as f64,
+            || gris.search(&root, Scope::Sub, &f_sel).len(),
+        );
+    }
+
+    // GIIS discovery at increasing registration counts.
+    for sites in [16usize, 256, 2048] {
+        let mut giis = Giis::new();
+        for s in 0..sites {
+            giis.register(
+                &format!("site{s}"),
+                &format!("10.0.0.{}:9000", s % 250),
+                Dn::parse(&format!("ou=s{s}, o=grid")).unwrap(),
+                vec![
+                    ("storageType".into(), if s % 3 == 0 { "tape" } else { "disk" }.into()),
+                    ("availableGB".into(), format!("{}", s % 100)),
+                ],
+            );
+        }
+        let f = Filter::parse("(&(storageType=disk)(availableGB>=50))").unwrap();
+        b.case_items(&format!("GIIS discover over {sites} regs"), sites as f64, || {
+            giis.discover(&f).len()
+        });
+    }
+
+    // The wire: full TCP search round trip (connect once, query many).
+    let server =
+        DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris(8))), 0).expect("bind");
+    let mut client = DirectoryClient::connect(server.addr()).expect("connect");
+    b.case("TCP GRIS search round trip (8 volumes)", || {
+        client.search(&root, Scope::Sub, &f_all).unwrap().len()
+    });
+    let mut giis_net = Giis::new();
+    giis_net.register("mcs", server.addr(), Dn::parse("ou=mcs, o=grid").unwrap(), vec![]);
+    let giis_srv = DirectoryServer::spawn(Arc::new(Mutex::new(giis_net)), 0).expect("bind");
+    let mut gc = DirectoryClient::connect(giis_srv.addr()).expect("connect");
+    b.case("TCP GIIS list round trip", || gc.list().unwrap().len());
+    b.case("TCP connect+search+close", || {
+        let mut c = DirectoryClient::connect(server.addr()).unwrap();
+        c.search(&root, Scope::Sub, &f_all).unwrap().len()
+    });
+
+    b.finish();
+}

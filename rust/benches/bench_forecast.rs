@@ -1,0 +1,134 @@
+//! R6 — §3.2 history-based prediction: forecaster-bank accuracy vs
+//! naive predictors, and kernel latency (pure-Rust bank vs the
+//! AOT-compiled JAX/Pallas artifact through PJRT).
+
+use globus_replica::forecast::forecast_bank;
+use globus_replica::runtime::engine::EngineHandle;
+use globus_replica::util::bench::{report_metric, Bench};
+use globus_replica::util::prng::Rng;
+
+/// AR(1) series: the regime the simulator produces and the forecaster
+/// family targets.
+fn ar1(rng: &mut Rng, n: usize, mean: f64, rho: f64, noise: f64) -> Vec<f64> {
+    let mut x = 0.0;
+    (0..n)
+        .map(|_| {
+            x = rho * x + rng.gauss(0.0, noise);
+            (mean * (1.0 + x)).max(1.0)
+        })
+        .collect()
+}
+
+/// White noise around a mean.
+fn white(rng: &mut Rng, n: usize, mean: f64, noise: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.gauss(mean, mean * noise).max(1.0)).collect()
+}
+
+/// Stable bandwidth with occasional congestion collapses.
+fn spiky(rng: &mut Rng, n: usize, mean: f64) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.1) {
+                rng.range(mean * 0.02, mean * 0.1)
+            } else {
+                rng.gauss(mean, mean * 0.05).max(1.0)
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // --- Accuracy: one-step-ahead MSE, normalized per series, over a
+    // *mixed* population of regimes (no single fixed predictor is best
+    // everywhere — the point of NWS-style adaptive selection).
+    println!("== forecast accuracy (paper §3.2; R6) — mixed bandwidth regimes ==");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>10}",
+        "regime", "last-value", "run-mean", "adaptive", "adapt-wins"
+    );
+    let mut agg = [0.0f64; 3];
+    let mut agg_n = 0.0;
+    for (label, gen) in [
+        ("ar1", 0usize),
+        ("white-noise", 1),
+        ("spiky", 2),
+    ] {
+        let mut errs = [0.0f64; 3];
+        let mut n_evals = 0.0;
+        for _ in 0..120 {
+            let series = match gen {
+                0 => ar1(&mut rng, 48, 500e3, 0.8, 0.15),
+                1 => white(&mut rng, 48, 500e3, 0.2),
+                _ => spiky(&mut rng, 48, 500e3),
+            };
+            let var = {
+                let m = series.iter().sum::<f64>() / series.len() as f64;
+                series.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / series.len() as f64
+            };
+            for t in 24..48 {
+                let past = &series[..t];
+                let mask = vec![1.0; past.len()];
+                let bank = forecast_bank(past, &mask);
+                let truth = series[t];
+                // Normalize by series variance so regimes weigh equally.
+                errs[0] += (bank.preds[0] - truth).powi(2) / var;
+                errs[1] += (bank.preds[1] - truth).powi(2) / var;
+                errs[2] += (bank.best() - truth).powi(2) / var;
+                n_evals += 1.0;
+            }
+        }
+        println!(
+            "{label:<14} {:>12.4} {:>12.4} {:>12.4} {:>10}",
+            errs[0] / n_evals,
+            errs[1] / n_evals,
+            errs[2] / n_evals,
+            if errs[2] <= errs[0].min(errs[1]) * 1.05 { "yes" } else { "no" }
+        );
+        for i in 0..3 {
+            agg[i] += errs[i];
+        }
+        agg_n += n_evals;
+    }
+    report_metric("aggregate nMSE, last-value", agg[0] / agg_n, "");
+    report_metric("aggregate nMSE, running-mean", agg[1] / agg_n, "");
+    report_metric("aggregate nMSE, adaptive bank", agg[2] / agg_n, "");
+    report_metric(
+        "adaptive vs best-fixed",
+        agg[0].min(agg[1]) / agg[2],
+        "x (>=1 = adaptive at least as good as any fixed predictor)",
+    );
+
+    // --- Latency: rust bank vs PJRT artifact --------------------------
+    let mut b = Bench::new("forecast latency (R6)");
+    let series64: Vec<Vec<f64>> = (0..512)
+        .map(|_| ar1(&mut rng, 64, 500e3, 0.8, 0.15))
+        .collect();
+    let mask64 = vec![1.0; 64];
+    b.case("rust bank, 1 site x 64 window", || {
+        forecast_bank(&series64[0], &mask64).best()
+    });
+    for n in [8usize, 64, 128] {
+        b.case_items(&format!("rust bank, {n} sites"), n as f64, || {
+            series64[..n]
+                .iter()
+                .map(|s| forecast_bank(s, &mask64).best())
+                .sum::<f64>()
+        });
+    }
+
+    match EngineHandle::spawn_default() {
+        Ok(engine) => {
+            for n in [8usize, 64, 128, 512] {
+                let hist = &series64[..n];
+                let load = vec![0.0; n];
+                b.case_items(&format!("pjrt artifact, {n} sites"), n as f64, || {
+                    engine.forecast(hist, &load).unwrap().best.len()
+                });
+            }
+        }
+        Err(e) => println!("(pjrt cases skipped: {e:#})"),
+    }
+    b.finish();
+}

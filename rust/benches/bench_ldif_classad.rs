@@ -1,0 +1,84 @@
+//! R2 — the paper's §6 claim: "the process of converting data,
+//! represented in LDAP format, into ClassAds is not cumbersome and is
+//! worth the effort."
+//!
+//! Measures LDIF parse, Entry→ClassAd conversion, and the combined
+//! pipeline at increasing batch sizes, plus the serialize direction.
+
+use globus_replica::broker::entries_to_candidate;
+use globus_replica::directory::entry::{Dn, Entry};
+use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
+use globus_replica::util::bench::Bench;
+use globus_replica::util::prng::Rng;
+
+fn site_entries(site: usize, rng: &mut Rng) -> Vec<Entry> {
+    let base = Dn::parse(&format!("ou=s{site}, o=org, o=grid")).unwrap();
+    let vol = base.child("gss", "vol0");
+    let mut e = Entry::new(vol.clone());
+    e.add("objectClass", "GridStorageServerVolume");
+    e.put_f64("totalSpace", rng.range(1e10, 2e11));
+    e.put_f64("availableSpace", rng.range(1e9, 1e11));
+    e.put("mountPoint", "/data");
+    e.put_f64("diskTransferRate", 2e7);
+    e.put_f64("drdTime", 8.5);
+    e.put_f64("dwrTime", 9.5);
+    e.put(
+        "requirements",
+        "other.reqdSpace < 10G && other.reqdRDBandwidth < 75K/Sec",
+    );
+    let mut bw = Entry::new(vol.child("gss", "bw"));
+    bw.add("objectClass", "GridStorageTransferBandwidth");
+    for a in [
+        "MaxRDBandwidth",
+        "MinRDBandwidth",
+        "AvgRDBandwidth",
+        "MaxWRBandwidth",
+        "MinWRBandwidth",
+        "AvgWRBandwidth",
+    ] {
+        bw.put_f64(a, rng.range(1e4, 1e6));
+    }
+    let mut src = Entry::new(vol.child("gss", "src"));
+    src.add("objectClass", "GridStorageSourceTransferBandwidth");
+    src.put_f64("lastRDBandwidth", rng.range(1e4, 1e6));
+    src.put("lastRDurl", "gsiftp://client/");
+    src.put_f64("lastWRBandwidth", rng.range(1e4, 1e6));
+    src.put("lastWRurl", "gsiftp://client/");
+    let hist: Vec<String> = (0..32).map(|_| format!("{:.0}", rng.range(1e4, 1e6))).collect();
+    src.put("rdHistory", hist.join(","));
+    vec![e, bw, src]
+}
+
+fn main() {
+    let mut rng = Rng::new(2026);
+    let mut b = Bench::new("LDIF -> ClassAd conversion (paper §6; R2)");
+
+    let one = site_entries(0, &mut rng);
+    let one_ldif = to_ldif_stream(&one);
+    b.case("serialize 1 site (3 entries) to LDIF", || to_ldif_stream(&one));
+    b.case("parse 1 site LDIF", || parse_ldif(&one_ldif).unwrap());
+    b.case("convert 1 site entries -> ClassAd", || {
+        entries_to_candidate("s0", "gsiftp://s0/f", &one)
+    });
+    b.case("full pipeline: LDIF text -> Candidate", || {
+        let entries = parse_ldif(&one_ldif).unwrap();
+        entries_to_candidate("s0", "gsiftp://s0/f", &entries)
+    });
+
+    for n in [8usize, 64, 512] {
+        let sites: Vec<Vec<Entry>> = (0..n).map(|i| site_entries(i, &mut rng)).collect();
+        let ldifs: Vec<String> = sites.iter().map(|e| to_ldif_stream(e)).collect();
+        b.case_items(&format!("convert {n} sites (LDIF->ClassAd)"), n as f64, || {
+            ldifs
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    let entries = parse_ldif(l).unwrap();
+                    entries_to_candidate(&format!("s{i}"), "u", &entries)
+                })
+                .count()
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,89 @@
+//! R3 — matchmaking cost (implied by paper §4): symmetric match + rank
+//! throughput as the candidate set grows.
+//!
+//! The paper's broker matches one request ad against every replica
+//! site's storage ad; this bench measures that Match-phase core from a
+//! single pair up to 4096 candidates, plus expression-evaluation and
+//! parser microbenches.
+
+use globus_replica::classad::{
+    parse_classad, parse_expr, rank_candidates, symmetric_match, AdBuilder, ClassAd,
+};
+use globus_replica::util::bench::Bench;
+use globus_replica::util::prng::Rng;
+
+fn storage_ads(n: usize, seed: u64) -> Vec<ClassAd> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            AdBuilder::new()
+                .str("hostname", format!("site{i}.grid"))
+                .bytes("availableSpace", rng.range(1.0, 100.0) * 1024f64.powi(3))
+                .rate("MaxRDBandwidth", rng.range(10.0, 100.0) * 1024.0)
+                .rate("AvgRDBandwidth", rng.range(10.0, 100.0) * 1024.0)
+                .real("load", rng.range(0.0, 1.0))
+                .expr(
+                    "requirements",
+                    "other.reqdSpace < 10G && other.reqdRDBandwidth < 100K/Sec",
+                )
+                .build()
+        })
+        .collect()
+}
+
+fn request() -> ClassAd {
+    parse_classad(
+        r#"hostname = "comet.xyz.com";
+           reqdSpace = 5G;
+           reqdRDBandwidth = 50K/Sec;
+           rank = other.availableSpace;
+           requirement = other.availableSpace > 5G
+               && other.MaxRDBandwidth > 50K/Sec;"#,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let req = request();
+    let mut b = Bench::new("matchmaking (paper §4; R3)");
+
+    let pair = storage_ads(1, 7);
+    b.case("symmetric_match/1 pair", || symmetric_match(&req, &pair[0]));
+
+    for n in [4usize, 16, 64, 256, 1024, 4096] {
+        let ads = storage_ads(n, 42 + n as u64);
+        b.case_items(&format!("match+rank/{n} candidates"), n as f64, || {
+            rank_candidates(&req, &ads).len()
+        });
+    }
+
+    // Expression microbenches: the requirement expression that every
+    // match evaluates twice.
+    let e = parse_expr("other.availableSpace > 5G && other.MaxRDBandwidth > 50K/Sec").unwrap();
+    let storage = &storage_ads(1, 9)[0];
+    b.case("eval requirement expr", || {
+        globus_replica::classad::eval(
+            globus_replica::classad::EvalCtx::matched(&req, storage),
+            &e,
+        )
+    });
+
+    b.case("parse request ad", || {
+        parse_classad(
+            r#"reqdSpace = 5G; reqdRDBandwidth = 50K/Sec;
+               rank = other.availableSpace;
+               requirement = other.availableSpace > 5G && other.MaxRDBandwidth > 50K/Sec;"#,
+        )
+        .unwrap()
+    });
+
+    let stats = b.finish();
+    // Sanity for EXPERIMENTS.md: match+rank over 1024 ads should beat
+    // 10^5 ads/s single-thread (DESIGN.md §Perf target).
+    if let Some(s) = stats.iter().find(|s| s.name.contains("1024")) {
+        println!(
+            "\nthroughput @1024 candidates: {:.0} ads/s (target ≥ 100000)",
+            s.throughput()
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! R7 — the headline experiment: selection quality of the informed
+//! broker vs the uninformed baselines on the simulated grid, across
+//! heterogeneity levels and replica counts.
+//!
+//! The paper's qualitative claims, quantified:
+//! * informed (history-ranked) selection beats random/round-robin;
+//! * history-based ranking beats ranking by static attributes
+//!   (availableSpace) — the §3.2 motivation;
+//! * the gap grows with site heterogeneity and with replica count
+//!   (more choices → more to gain from choosing well).
+
+use globus_replica::broker::selectors::SelectorKind;
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::run_quality;
+use globus_replica::simnet::WorkloadSpec;
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    let requests = if quick() { 60 } else { 250 };
+    let warm = 10;
+
+    println!("== selection quality (R7): {requests} requests/policy ==");
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>10} {:>10}",
+        "policy", "mean(s)", "p95(s)", "mean KB/s", "%optimal", "slowdown"
+    );
+    let cfg = GridConfig::generate(12, 42);
+    let spec = WorkloadSpec { files: 24, ..Default::default() };
+    let mut base_mean = None;
+    let mut forecast_mean = None;
+    for kind in SelectorKind::all() {
+        let r = run_quality(&cfg, &spec, requests, 4, warm, kind, None);
+        println!(
+            "{:<16} {:>10.1} {:>10.1} {:>12.0} {:>9.0}% {:>10.2}",
+            r.policy,
+            r.mean_time,
+            r.p95_time,
+            r.mean_bandwidth / 1024.0,
+            r.pct_optimal * 100.0,
+            r.mean_slowdown
+        );
+        if kind == SelectorKind::Random {
+            base_mean = Some(r.mean_time);
+        }
+        if kind == SelectorKind::Forecast {
+            forecast_mean = Some(r.mean_time);
+        }
+    }
+    println!(
+        "\nheadline speedup forecast vs random: {:.2}x",
+        base_mean.unwrap() / forecast_mean.unwrap()
+    );
+
+    // Sweep: replica count (choices per request).
+    println!("\n== speedup vs replica count ==");
+    println!("{:>10} {:>12} {:>12} {:>8}", "replicas", "random(s)", "forecast(s)", "speedup");
+    for replicas in [2usize, 4, 8] {
+        let rnd = run_quality(&cfg, &spec, requests / 2, replicas, warm, SelectorKind::Random, None);
+        let fc = run_quality(&cfg, &spec, requests / 2, replicas, warm, SelectorKind::Forecast, None);
+        println!(
+            "{replicas:>10} {:>12.1} {:>12.1} {:>8.2}",
+            rnd.mean_time,
+            fc.mean_time,
+            rnd.mean_time / fc.mean_time
+        );
+    }
+
+    // Sweep: heterogeneity (same mean bandwidth, growing spread).
+    println!("\n== speedup vs site heterogeneity ==");
+    println!("{:>14} {:>12} {:>12} {:>8}", "spread", "random(s)", "forecast(s)", "speedup");
+    for (label, squeeze) in [("low (1.5x)", 0.15), ("med (4x)", 0.55), ("high (20x)", 1.0)] {
+        let mut c = GridConfig::generate(12, 77);
+        // Compress log-spread of wan_bandwidth toward the geometric mean.
+        let logs: Vec<f64> = c.sites.iter().map(|s| s.wan_bandwidth.ln()).collect();
+        let mean_log = logs.iter().sum::<f64>() / logs.len() as f64;
+        for (s, l) in c.sites.iter_mut().zip(&logs) {
+            s.wan_bandwidth = (mean_log + (l - mean_log) * squeeze).exp();
+        }
+        let rnd = run_quality(&c, &spec, requests / 2, 4, warm, SelectorKind::Random, None);
+        let fc = run_quality(&c, &spec, requests / 2, 4, warm, SelectorKind::Forecast, None);
+        println!(
+            "{label:>14} {:>12.1} {:>12.1} {:>8.2}",
+            rnd.mean_time,
+            fc.mean_time,
+            rnd.mean_time / fc.mean_time
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! The centralized-manager comparator (paper §5.1.1).
+//!
+//! The paper argues for decentralized brokering because a central
+//! matchmaker is a scalability bottleneck and a single point of
+//! failure. This module models the Condor-style central manager the
+//! paper contrasts with: all clients funnel selections through one
+//! serialized decision queue. `bench_broker` measures selection latency
+//! vs. offered concurrency for both architectures; the decentralized
+//! broker stays flat while the central queue grows linearly.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::classad::ClassAd;
+
+use super::engine::{Broker, Selection};
+
+/// A central manager: one broker instance behind a mutex (the decision
+/// queue) plus an optional per-decision service cost modeling the
+/// manager's bookkeeping.
+pub struct CentralManager {
+    broker: Mutex<Broker>,
+    service_cost: Duration,
+    pub decisions: Mutex<u64>,
+}
+
+impl CentralManager {
+    pub fn new(broker: Broker, service_cost: Duration) -> Arc<CentralManager> {
+        Arc::new(CentralManager {
+            broker: Mutex::new(broker),
+            service_cost,
+            decisions: Mutex::new(0),
+        })
+    }
+
+    /// A client submits a selection request and blocks until the
+    /// manager serves it. Returns (selection, queueing+service time).
+    pub fn submit(&self, logical: &str, request: &ClassAd) -> Result<(Selection, Duration)> {
+        let t0 = Instant::now();
+        let broker = self.broker.lock().unwrap();
+        // Service time: the matchmaking work itself plus fixed cost.
+        let sel = broker.select(logical, request)?;
+        if !self.service_cost.is_zero() {
+            spin_for(self.service_cost);
+        }
+        *self.decisions.lock().unwrap() += 1;
+        Ok((sel, t0.elapsed()))
+    }
+}
+
+/// Busy-wait (sleep granularity is too coarse for µs-scale service
+/// costs on loaded CI machines).
+fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// Virtual-time queueing comparison (used when wall-clock threading
+/// cannot expose the difference, e.g. single-core CI): requests arrive
+/// at `arrivals` (seconds); each decision costs `service_s`.
+///
+/// * central manager = one FIFO server: `finish[i] =
+///   max(arrive[i], finish[i-1]) + service`.
+/// * decentralized = every client is its own server; a client's
+///   requests only queue behind its *own* previous request.
+///
+/// Returns per-request decision latency (seconds).
+pub fn queueing_latencies_central(arrivals: &[f64], service_s: f64) -> Vec<f64> {
+    let mut free_at = 0.0f64;
+    arrivals
+        .iter()
+        .map(|&at| {
+            let start = free_at.max(at);
+            free_at = start + service_s;
+            free_at - at
+        })
+        .collect()
+}
+
+/// See [`queueing_latencies_central`]; `client_of[i]` assigns request
+/// `i` to a client (its private broker).
+pub fn queueing_latencies_decentralized(
+    arrivals: &[f64],
+    service_s: f64,
+    client_of: &[usize],
+    clients: usize,
+) -> Vec<f64> {
+    let mut free_at = vec![0.0f64; clients];
+    arrivals
+        .iter()
+        .zip(client_of)
+        .map(|(&at, &c)| {
+            let start = free_at[c].max(at);
+            free_at[c] = start + service_s;
+            free_at[c] - at
+        })
+        .collect()
+}
+
+/// Run `clients` threads each performing `per_client` selections
+/// against the central manager; returns mean latency.
+pub fn run_centralized(
+    manager: &Arc<CentralManager>,
+    logical: &str,
+    request: &ClassAd,
+    clients: usize,
+    per_client: usize,
+) -> Duration {
+    let total_ns: u64 = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let mgr = manager.clone();
+            let req = request.clone();
+            handles.push(scope.spawn(move || {
+                let mut ns = 0u64;
+                for _ in 0..per_client {
+                    let (_sel, lat) = mgr.submit(logical, &req).expect("selection");
+                    ns += lat.as_nanos() as u64;
+                }
+                ns
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    Duration::from_nanos(total_ns / (clients * per_client) as u64)
+}
+
+/// The decentralized counterpart: every client runs its *own* broker
+/// clone; no shared lock. Returns mean latency.
+pub fn run_decentralized(
+    broker: &Broker,
+    logical: &str,
+    request: &ClassAd,
+    clients: usize,
+    per_client: usize,
+    service_cost: Duration,
+) -> Duration {
+    let total_ns: u64 = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let b = broker.clone();
+            let req = request.clone();
+            handles.push(scope.spawn(move || {
+                let mut ns = 0u64;
+                for _ in 0..per_client {
+                    let t0 = Instant::now();
+                    let _sel = b.select(logical, &req).expect("selection");
+                    if !service_cost.is_zero() {
+                        spin_for(service_cost);
+                    }
+                    ns += t0.elapsed().as_nanos() as u64;
+                }
+                ns
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    Duration::from_nanos(total_ns / (clients * per_client) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn central_queue_grows_with_offered_load() {
+        // 16 requests arriving simultaneously, 1ms service.
+        let arrivals = vec![0.0; 16];
+        let lat = queueing_latencies_central(&arrivals, 1e-3);
+        let mean: f64 = lat.iter().sum::<f64>() / lat.len() as f64;
+        // FIFO positions 1..16 -> mean 8.5ms.
+        assert!((mean - 8.5e-3).abs() < 1e-9, "mean {mean}");
+    }
+
+    #[test]
+    fn decentralized_stays_flat_per_client() {
+        let arrivals = vec![0.0; 16];
+        let client_of: Vec<usize> = (0..16).collect();
+        let lat = queueing_latencies_decentralized(&arrivals, 1e-3, &client_of, 16);
+        for l in lat {
+            assert!((l - 1e-3).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_arrivals_no_queueing_either_way() {
+        let arrivals: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let c = queueing_latencies_central(&arrivals, 1e-3);
+        let d = queueing_latencies_decentralized(
+            &arrivals,
+            1e-3,
+            &vec![0usize; 10],
+            1,
+        );
+        assert_eq!(c, d);
+        assert!(c.iter().all(|l| (l - 1e-3).abs() < 1e-12));
+    }
+}

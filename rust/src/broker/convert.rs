@@ -1,0 +1,210 @@
+//! LDIF/entry → ClassAd conversion — the paper's §6 "primitive
+//! libraries to achieve the conversion of this attribute set".
+//!
+//! A site's GRIS answers a broker query with several entries (the
+//! Figure-2 volume entry, the Figure-4 bandwidth summary, the Figure-5
+//! per-source record). [`entries_to_candidate`] folds them into one
+//! storage ClassAd: numeric strings become numbers, multi-valued
+//! attributes become lists, and a published `requirements` string is
+//! *parsed as a ClassAd expression* so site usage policies survive the
+//! trip (paper §3.1).
+
+use crate::classad::{parse_expr, ClassAd, Expr, Value};
+use crate::directory::entry::Entry;
+
+/// A selection candidate: one replica site's converted capability ad
+/// plus the side-band data the forecast policy needs.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub site: String,
+    pub url: String,
+    pub ad: ClassAd,
+    /// Per-source trailing bandwidth window (oldest → newest), from the
+    /// Figure-5 `rdHistory` attribute.
+    pub history: Vec<f64>,
+    /// Current utilization [0,1] from the GRIS dynamic `load` attribute.
+    pub load: f64,
+}
+
+/// Convert one attribute value: numbers become `Real`, everything else
+/// a string. (LDAP `cisfloat` attributes are numeric strings.)
+fn convert_value(v: &str) -> Value {
+    match v.trim().parse::<f64>() {
+        Ok(n) => Value::Real(n),
+        Err(_) => Value::Str(v.to_string()),
+    }
+}
+
+/// Fold one entry's attributes into the ad.
+fn fold_entry(ad: &mut ClassAd, entry: &Entry) {
+    for (name, values) in entry.iter() {
+        let lower = name.to_ascii_lowercase();
+        if lower == "objectclass" || lower == "rdhistory" {
+            continue;
+        }
+        if lower == "requirements" || lower == "requirement" {
+            // Site usage policy: parse as a ClassAd expression.
+            if let Some(first) = values.first() {
+                if let Ok(e) = parse_expr(first) {
+                    ad.set(name, e);
+                }
+            }
+            continue;
+        }
+        match values {
+            [] => {}
+            [single] => ad.set(name, Expr::Lit(convert_value(single))),
+            many => ad.set(
+                name,
+                Expr::Lit(Value::List(many.iter().map(|v| convert_value(v)).collect())),
+            ),
+        }
+    }
+}
+
+/// Parse the Figure-5 `rdHistory` attribute (comma-separated floats).
+fn parse_history(entry: &Entry) -> Vec<f64> {
+    entry
+        .get("rdHistory")
+        .map(|vals| {
+            vals.iter()
+                .flat_map(|v| v.split(','))
+                .filter_map(|s| s.trim().parse::<f64>().ok())
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Build a [`Candidate`] from everything one site's GRIS returned.
+pub fn entries_to_candidate(site: &str, url: &str, entries: &[Entry]) -> Candidate {
+    let mut ad = ClassAd::new();
+    ad.set_value("hostname", Value::Str(site.to_string()));
+    let mut history = Vec::new();
+    let mut load = 0.0;
+    for e in entries {
+        fold_entry(&mut ad, e);
+        let h = parse_history(e);
+        if !h.is_empty() {
+            history = h;
+        }
+        if let Some(l) = e.f64("load") {
+            load = l.clamp(0.0, 1.0);
+        }
+    }
+    Candidate { site: site.to_string(), url: url.to_string(), ad, history, load }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::{eval_in_match, parse_classad, symmetric_match};
+    use crate::directory::entry::Dn;
+    use crate::directory::ldif::parse_ldif;
+
+    fn volume_ldif() -> String {
+        "dn: gss=vol0, ou=mcs, o=anl, o=grid\n\
+         objectClass: GridStorageServerVolume\n\
+         availableSpace: 53687091200\n\
+         totalSpace: 107374182400\n\
+         mountPoint: /dev/sandbox\n\
+         diskTransferRate: 20971520\n\
+         drdTime: 8.5\n\
+         dwrTime: 9.5\n\
+         load: 0.25\n\
+         filesystem: ext3\n\
+         filesystem: xfs\n\
+         requirements: other.reqdSpace < 10G && other.reqdRDBandwidth < 75K/Sec\n\
+         \n\
+         dn: gss=bw, gss=vol0, ou=mcs, o=anl, o=grid\n\
+         objectClass: GridStorageTransferBandwidth\n\
+         MaxRDBandwidth: 76800\n\
+         MinRDBandwidth: 10240\n\
+         AvgRDBandwidth: 40960\n\
+         MaxWRBandwidth: 76800\n\
+         MinWRBandwidth: 10240\n\
+         AvgWRBandwidth: 30720\n\
+         \n\
+         dn: gss=src, gss=vol0, ou=mcs, o=anl, o=grid\n\
+         objectClass: GridStorageSourceTransferBandwidth\n\
+         lastRDBandwidth: 51200\n\
+         lastRDurl: gsiftp://comet.xyz.com/\n\
+         lastWRBandwidth: 20480\n\
+         lastWRurl: gsiftp://comet.xyz.com/\n\
+         rdHistory: 30720,40960,51200\n"
+            .to_string()
+    }
+
+    #[test]
+    fn converts_full_site_response() {
+        let entries = parse_ldif(&volume_ldif()).unwrap();
+        let c = entries_to_candidate("anl-mcs", "gsiftp://anl/f", &entries);
+        assert_eq!(c.ad.number("availableSpace").unwrap(), 53687091200.0);
+        assert_eq!(c.ad.number("MaxRDBandwidth").unwrap(), 76800.0);
+        assert_eq!(c.ad.number("lastRDBandwidth").unwrap(), 51200.0);
+        assert_eq!(c.ad.string("mountPoint").unwrap(), "/dev/sandbox");
+        assert_eq!(c.history, vec![30720.0, 40960.0, 51200.0]);
+        assert!((c.load - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn converted_ad_matches_paper_request() {
+        // End-to-end §6 claim: LDIF → ClassAd conversion feeds straight
+        // into Condor matchmaking.
+        let entries = parse_ldif(&volume_ldif()).unwrap();
+        let c = entries_to_candidate("anl-mcs", "u", &entries);
+        let request = parse_classad(
+            r#"hostname = "comet.xyz.com";
+               reqdSpace = 5G;
+               reqdRDBandwidth = 50K/Sec;
+               rank = other.availableSpace;
+               requirement = other.availableSpace > 5G
+                   && other.MaxRDBandwidth > 50K/Sec;"#,
+        )
+        .unwrap();
+        assert!(symmetric_match(&request, &c.ad));
+        let rank = eval_in_match(&request, &c.ad, "rank");
+        assert_eq!(rank.as_number().unwrap(), 53687091200.0);
+    }
+
+    #[test]
+    fn usage_policy_survives_conversion() {
+        let entries = parse_ldif(&volume_ldif()).unwrap();
+        let c = entries_to_candidate("anl-mcs", "u", &entries);
+        // A greedy request violates the *converted* site policy.
+        let greedy = parse_classad(
+            r#"reqdSpace = 20G; reqdRDBandwidth = 50K/Sec;
+               requirement = other.availableSpace > 1G;"#,
+        )
+        .unwrap();
+        assert!(!symmetric_match(&greedy, &c.ad));
+    }
+
+    #[test]
+    fn multi_valued_becomes_list() {
+        let entries = parse_ldif(&volume_ldif()).unwrap();
+        let c = entries_to_candidate("anl-mcs", "u", &entries);
+        // The request must satisfy the site's usage policy too (it
+        // references reqdSpace / reqdRDBandwidth).
+        let req = parse_classad(
+            r#"reqdSpace = 1G; reqdRDBandwidth = 10K/Sec;
+               requirement = member("xfs", other.filesystem);"#,
+        )
+        .unwrap();
+        assert!(symmetric_match(&req, &c.ad));
+    }
+
+    #[test]
+    fn empty_entries_still_have_hostname() {
+        let c = entries_to_candidate("site-x", "u", &[]);
+        assert_eq!(c.ad.string("hostname").unwrap(), "site-x");
+        assert!(c.history.is_empty());
+    }
+
+    #[test]
+    fn malformed_history_values_skipped() {
+        let mut e = Entry::new(Dn::parse("o=grid").unwrap());
+        e.add("rdHistory", "10,notanumber,30");
+        let c = entries_to_candidate("s", "u", &[e]);
+        assert_eq!(c.history, vec![10.0, 30.0]);
+    }
+}

@@ -1,0 +1,32 @@
+//! The storage broker — the paper's contribution (§5).
+//!
+//! Decentralized: *every client runs its own broker* (§5.1.1); there is
+//! no central matchmaker. A selection runs three phases (§5.1.2):
+//!
+//! 1. **Search** — replica-catalog lookup for the logical file, then an
+//!    LDAP query to each replica site's GRIS built from the request's
+//!    constraints ("specialized LDAP search queries").
+//! 2. **Match** — LDIF → ClassAd conversion ([`convert`], the paper §6
+//!    "primitive libraries"), Condor matchmaking of the request ad
+//!    against every storage ad, rank ordering of survivors.
+//! 3. **Access** — fetch through GridFTP; instrumentation feeds the
+//!    history that powers the next selection.
+//!
+//! Ranking policies ([`policy`]): the paper's §5.2 `rank =
+//! other.availableSpace` ClassAd rank, and the §3.2 history heuristic —
+//! predicted bandwidth (NWS-style bank, PJRT-accelerated when artifacts
+//! are built) discounted by current load. [`selectors`] adds the
+//! uninformed baselines the benches compare against; [`centralized`]
+//! the single-manager comparator for the §5.1.1 scalability argument.
+
+pub mod centralized;
+pub mod convert;
+pub mod engine;
+pub mod policy;
+pub mod replication;
+pub mod selectors;
+
+pub use convert::{entries_to_candidate, Candidate};
+pub use engine::{Broker, BrokerTrace, InfoService, LocalInfoService, RemoteInfoService};
+pub use policy::RankPolicy;
+pub use selectors::{Selector, SelectorKind};

@@ -1,0 +1,195 @@
+//! Ranking policies for the Match phase.
+
+use std::sync::Arc;
+
+use crate::classad::{rank_candidates, ClassAd};
+use crate::forecast::forecast_bank;
+use crate::runtime::engine::EngineHandle;
+
+use super::convert::Candidate;
+
+/// How survivors of the requirements match are ordered.
+#[derive(Clone)]
+pub enum RankPolicy {
+    /// The request ad's own `rank` expression (paper §5.2:
+    /// `rank = other.availableSpace`).
+    ClassAdRank,
+    /// The §3.2 heuristic: predicted transfer bandwidth from the
+    /// published history, discounted by current load. Uses the PJRT
+    /// forecast artifact when provided, else the pure-Rust bank.
+    ForecastBandwidth { engine: Option<Arc<EngineHandle>> },
+}
+
+impl std::fmt::Debug for RankPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RankPolicy::ClassAdRank => write!(f, "ClassAdRank"),
+            RankPolicy::ForecastBandwidth { engine } => write!(
+                f,
+                "ForecastBandwidth(engine={})",
+                if engine.is_some() { "pjrt" } else { "rust" }
+            ),
+        }
+    }
+}
+
+/// A ranked match: candidate index + the policy's score.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ranked {
+    pub index: usize,
+    pub score: f64,
+}
+
+impl RankPolicy {
+    /// Predicted effective bandwidth for every candidate (forecast
+    /// policy machinery; exposed for the benches).
+    pub fn predicted_bandwidth(&self, candidates: &[Candidate]) -> Vec<f64> {
+        match self {
+            RankPolicy::ForecastBandwidth { engine: Some(engine) } => {
+                let hist: Vec<Vec<f64>> = candidates.iter().map(|c| c.history.clone()).collect();
+                let load: Vec<f64> = candidates.iter().map(|c| c.load).collect();
+                match engine.forecast(&hist, &load) {
+                    Ok(out) => out.eff.iter().map(|&v| v as f64).collect(),
+                    Err(_) => Self::rust_predictions(candidates),
+                }
+            }
+            _ => Self::rust_predictions(candidates),
+        }
+    }
+
+    fn rust_predictions(candidates: &[Candidate]) -> Vec<f64> {
+        candidates
+            .iter()
+            .map(|c| {
+                if c.history.is_empty() {
+                    // No history: fall back to the static AvgRDBandwidth
+                    // the site published, if any.
+                    c.ad.number("AvgRDBandwidth").unwrap_or(0.0) * (1.0 - c.load)
+                } else {
+                    let mask = vec![1.0; c.history.len()];
+                    forecast_bank(&c.history, &mask).best() * (1.0 - c.load)
+                }
+            })
+            .collect()
+    }
+
+    /// Order the `matched` survivor indices best-first.
+    pub fn order(
+        &self,
+        request: &ClassAd,
+        candidates: &[Candidate],
+        matched: &[usize],
+    ) -> Vec<Ranked> {
+        match self {
+            RankPolicy::ClassAdRank => {
+                let ads: Vec<ClassAd> =
+                    matched.iter().map(|&i| candidates[i].ad.clone()).collect();
+                rank_candidates(request, &ads)
+                    .into_iter()
+                    .map(|m| Ranked { index: matched[m.index], score: m.rank })
+                    .collect()
+            }
+            RankPolicy::ForecastBandwidth { .. } => {
+                let preds = self.predicted_bandwidth(candidates);
+                let mut out: Vec<Ranked> = matched
+                    .iter()
+                    .map(|&i| Ranked { index: i, score: preds[i] })
+                    .collect();
+                out.sort_by(|a, b| {
+                    b.score
+                        .partial_cmp(&a.score)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.index.cmp(&b.index))
+                });
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::parse_classad;
+
+    fn candidate(site: &str, space_gb: f64, hist: &[f64], load: f64) -> Candidate {
+        let ad = parse_classad(&format!(
+            "hostname = \"{site}\"; availableSpace = {}; MaxRDBandwidth = 102400;",
+            space_gb * 1024f64.powi(3)
+        ))
+        .unwrap();
+        Candidate {
+            site: site.into(),
+            url: format!("gsiftp://{site}/f"),
+            ad,
+            history: hist.to_vec(),
+            load,
+        }
+    }
+
+    #[test]
+    fn classad_rank_orders_by_space() {
+        let request = parse_classad(
+            "rank = other.availableSpace; requirement = other.availableSpace > 0;",
+        )
+        .unwrap();
+        let cands = vec![
+            candidate("a", 10.0, &[], 0.0),
+            candidate("b", 80.0, &[], 0.0),
+            candidate("c", 40.0, &[], 0.0),
+        ];
+        let ranked = RankPolicy::ClassAdRank.order(&request, &cands, &[0, 1, 2]);
+        let order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn forecast_rank_prefers_fast_history() {
+        let request = parse_classad("requirement = TRUE;").unwrap();
+        let cands = vec![
+            candidate("slow", 99.0, &[10e3, 11e3, 10e3, 12e3], 0.0),
+            candidate("fast", 1.0, &[90e3, 95e3, 92e3, 96e3], 0.0),
+        ];
+        let policy = RankPolicy::ForecastBandwidth { engine: None };
+        let ranked = policy.order(&request, &cands, &[0, 1]);
+        assert_eq!(ranked[0].index, 1);
+        assert!(ranked[0].score > ranked[1].score);
+    }
+
+    #[test]
+    fn forecast_rank_discounts_load() {
+        let request = parse_classad("requirement = TRUE;").unwrap();
+        let hist = [50e3, 50e3, 50e3, 50e3];
+        let cands = vec![
+            candidate("busy", 1.0, &hist, 0.9),
+            candidate("idle", 1.0, &hist, 0.0),
+        ];
+        let policy = RankPolicy::ForecastBandwidth { engine: None };
+        let ranked = policy.order(&request, &cands, &[0, 1]);
+        assert_eq!(ranked[0].index, 1);
+        assert!((ranked[1].score - 5e3).abs() < 1.0);
+    }
+
+    #[test]
+    fn historyless_candidate_uses_published_average() {
+        let mut c = candidate("nohist", 1.0, &[], 0.0);
+        c.ad.set_value("AvgRDBandwidth", 1234.0);
+        let preds = RankPolicy::ForecastBandwidth { engine: None }
+            .predicted_bandwidth(&[c]);
+        assert_eq!(preds[0], 1234.0);
+    }
+
+    #[test]
+    fn order_respects_matched_subset() {
+        let request = parse_classad("rank = other.availableSpace;").unwrap();
+        let cands = vec![
+            candidate("a", 10.0, &[], 0.0),
+            candidate("b", 80.0, &[], 0.0),
+            candidate("c", 40.0, &[], 0.0),
+        ];
+        // b was filtered out by requirements: only a and c compete.
+        let ranked = RankPolicy::ClassAdRank.order(&request, &cands, &[0, 2]);
+        let order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order, vec![2, 0]);
+    }
+}

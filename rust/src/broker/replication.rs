@@ -1,0 +1,240 @@
+//! Replica management — the other Figure-1 higher-level service.
+//!
+//! "Replica management is the process of creating or deleting replicas
+//! at a storage site ... to harness certain performance benefits"
+//! (paper §2.2). The manager reuses the broker machinery in the *write*
+//! direction: destination sites are matched against a placement ad
+//! (space floor + site policy) and ranked by available space or
+//! write-bandwidth history, the replica is stored via GridFTP, and the
+//! catalog is updated atomically with the transfer outcome.
+
+use anyhow::{bail, Context, Result};
+
+use crate::catalog::PhysicalLocation;
+use crate::classad::{symmetric_match, AdBuilder, ClassAd};
+use crate::experiment::SimGrid;
+
+/// Destination-ranking policy for new replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Max published `availableSpace` (balances storage).
+    MostSpace,
+    /// Max `AvgWRBandwidth` (fastest creation).
+    FastestWrite,
+}
+
+/// Outcome of a replica creation.
+#[derive(Debug, Clone)]
+pub struct ReplicationOutcome {
+    pub logical: String,
+    pub site: String,
+    pub duration: f64,
+    pub bandwidth: f64,
+}
+
+/// The replica manager, operating over a [`SimGrid`] (the in-process
+/// deployment; a networked variant would swap the info/ftp handles).
+pub struct ReplicaManager<'g> {
+    grid: &'g mut SimGrid,
+    policy: PlacementPolicy,
+}
+
+impl<'g> ReplicaManager<'g> {
+    pub fn new(grid: &'g mut SimGrid, policy: PlacementPolicy) -> Self {
+        ReplicaManager { grid, policy }
+    }
+
+    /// The placement request ad for a file of `bytes`.
+    fn placement_ad(bytes: f64, policy: PlacementPolicy) -> ClassAd {
+        let rank_attr = match policy {
+            PlacementPolicy::MostSpace => "other.availableSpace",
+            PlacementPolicy::FastestWrite => "other.AvgWRBandwidth",
+        };
+        AdBuilder::new()
+            .str("hostname", "replica-manager")
+            .bytes("reqdSpace", bytes)
+            .rate("reqdRDBandwidth", 0.0)
+            .expr("rank", rank_attr)
+            .expr("requirement", "other.availableSpace > reqdSpace")
+            .build()
+    }
+
+    /// Create a new replica of `logical` at the best non-holding site.
+    pub fn create_replica(&mut self, logical: &str) -> Result<ReplicationOutcome> {
+        let f = self
+            .grid
+            .files
+            .iter()
+            .position(|n| n == logical)
+            .with_context(|| format!("unknown logical file {logical:?}"))?;
+        let bytes = self.grid.sizes[f];
+        let holders: Vec<String> = {
+            let cat = self.grid.catalog.lock().unwrap();
+            cat.locate(logical)?.iter().map(|l| l.site.clone()).collect()
+        };
+        let request = Self::placement_ad(bytes, self.policy);
+
+        // Candidate destinations: every site that does NOT hold a
+        // replica, viewed through its GRIS (live attributes).
+        self.grid.publish_dynamics();
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..self.grid.topo.len() {
+            let site = self.grid.topo.site(i).cfg.name.clone();
+            if holders.contains(&site) {
+                continue;
+            }
+            let entries = self
+                .grid
+                .info
+                .query_site_all(&site)
+                .unwrap_or_default();
+            let cand = super::convert::entries_to_candidate(&site, "", &entries);
+            if !symmetric_match(&request, &cand.ad) {
+                continue;
+            }
+            let score = crate::classad::eval_in_match(&request, &cand.ad, "rank")
+                .as_number()
+                .unwrap_or(0.0);
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        let (dest, _) = best.with_context(|| {
+            format!("no eligible destination for a new replica of {logical:?}")
+        })?;
+
+        // Write through GridFTP (instrumented), then commit to catalog.
+        let out = self
+            .grid
+            .ftp
+            .store(&mut self.grid.topo, dest, "replica-manager", bytes);
+        let site_name = self.grid.topo.site(dest).cfg.name.clone();
+        {
+            let mut cat = self.grid.catalog.lock().unwrap();
+            cat.add_replica(
+                logical,
+                PhysicalLocation {
+                    site: site_name.clone(),
+                    url: format!("gsiftp://{site_name}/{logical}"),
+                },
+            )?;
+        }
+        self.grid.placement[f].push(dest);
+        self.grid.publish_dynamics();
+        Ok(ReplicationOutcome {
+            logical: logical.to_string(),
+            site: site_name,
+            duration: out.duration,
+            bandwidth: out.bandwidth,
+        })
+    }
+
+    /// Delete the replica of `logical` at `site`, reclaiming space.
+    pub fn delete_replica(&mut self, logical: &str, site: &str) -> Result<()> {
+        let f = self
+            .grid
+            .files
+            .iter()
+            .position(|n| n == logical)
+            .with_context(|| format!("unknown logical file {logical:?}"))?;
+        let remaining = {
+            let cat = self.grid.catalog.lock().unwrap();
+            cat.locate(logical)?.len()
+        };
+        if remaining <= 1 {
+            bail!("refusing to delete the last replica of {logical:?}");
+        }
+        {
+            let mut cat = self.grid.catalog.lock().unwrap();
+            cat.remove_replica(logical, site)?;
+        }
+        if let Some(idx) = self.grid.topo.index_of(site) {
+            self.grid.topo.consume_space(idx, -self.grid.sizes[f]);
+            self.grid.placement[f].retain(|&s| s != idx);
+        }
+        self.grid.publish_dynamics();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+    use crate::simnet::WorkloadSpec;
+
+    fn grid() -> SimGrid {
+        let cfg = GridConfig::generate(6, 88);
+        let spec = WorkloadSpec { files: 4, ..Default::default() };
+        let mut g = SimGrid::build(&cfg, &spec, 2, 16);
+        g.warm(3);
+        g
+    }
+
+    #[test]
+    fn create_replica_adds_catalog_entry_on_non_holder() {
+        let mut g = grid();
+        let logical = g.files[0].clone();
+        let before: Vec<String> = {
+            let cat = g.catalog.lock().unwrap();
+            cat.locate(&logical).unwrap().iter().map(|l| l.site.clone()).collect()
+        };
+        let out = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replica(&logical)
+            .expect("replication");
+        assert!(!before.contains(&out.site), "must pick a non-holder");
+        let cat = g.catalog.lock().unwrap();
+        assert_eq!(cat.locate(&logical).unwrap().len(), before.len() + 1);
+        assert!(out.duration > 0.0);
+    }
+
+    #[test]
+    fn create_consumes_destination_space() {
+        let mut g = grid();
+        let logical = g.files[1].clone();
+        let out = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replica(&logical)
+            .unwrap();
+        let idx = g.topo.index_of(&out.site).unwrap();
+        let f = g.files.iter().position(|n| *n == logical).unwrap();
+        // GRIS now publishes the reduced space.
+        let d = g.dynamics[idx].read().unwrap();
+        assert!(d.available_space <= g.topo.site(idx).cfg.total_space - g.sizes[f] * 0.0 + 1.0);
+        assert!(g.placement[f].contains(&idx));
+    }
+
+    #[test]
+    fn write_transfer_is_instrumented() {
+        let mut g = grid();
+        let logical = g.files[2].clone();
+        let out = ReplicaManager::new(&mut g, PlacementPolicy::FastestWrite)
+            .create_replica(&logical)
+            .unwrap();
+        let idx = g.topo.index_of(&out.site).unwrap();
+        let h = g.ftp.history(idx);
+        assert!(h.read().unwrap().wr.count >= 1);
+    }
+
+    #[test]
+    fn delete_respects_last_replica_guard() {
+        let mut g = grid();
+        let logical = g.files[3].clone();
+        let sites: Vec<String> = {
+            let cat = g.catalog.lock().unwrap();
+            cat.locate(&logical).unwrap().iter().map(|l| l.site.clone()).collect()
+        };
+        let mut mgr = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace);
+        mgr.delete_replica(&logical, &sites[0]).unwrap();
+        let err = mgr.delete_replica(&logical, &sites[1]).unwrap_err();
+        assert!(format!("{err:#}").contains("last replica"));
+    }
+
+    #[test]
+    fn unknown_file_errors() {
+        let mut g = grid();
+        let err = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replica("nope.dat")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown logical file"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Baseline selectors — the uninformed strategies the benches compare
+//! the broker against (EXPERIMENTS.md R7). All operate on the same
+//! candidate lists the broker sees, so the only difference measured is
+//! the *selection policy*.
+
+use crate::util::prng::Rng;
+
+use super::convert::Candidate;
+use super::policy::RankPolicy;
+
+/// Which baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectorKind {
+    /// Uniform random replica.
+    Random,
+    /// Cycle through replicas.
+    RoundRobin,
+    /// Max published `availableSpace` (the paper's §5.2 rank, applied
+    /// statically).
+    StaticSpace,
+    /// Max published `AvgRDBandwidth` (static history summary, Fig 4).
+    AvgBandwidth,
+    /// Max `lastRDBandwidth` (Fig 5's most recent observation).
+    LastBandwidth,
+    /// Max `predictedRDBandwidth` as *published by the site's GRIS*
+    /// through the §7 NWS-style predictive feed — the broker itself
+    /// runs no forecasting code.
+    Published,
+    /// The full forecast policy (predictor bank + load discount).
+    Forecast,
+}
+
+impl SelectorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectorKind::Random => "random",
+            SelectorKind::RoundRobin => "round-robin",
+            SelectorKind::StaticSpace => "static-space",
+            SelectorKind::AvgBandwidth => "avg-bandwidth",
+            SelectorKind::LastBandwidth => "last-bandwidth",
+            SelectorKind::Published => "published-pred",
+            SelectorKind::Forecast => "forecast",
+        }
+    }
+
+    pub fn all() -> [SelectorKind; 7] {
+        [
+            SelectorKind::Random,
+            SelectorKind::RoundRobin,
+            SelectorKind::StaticSpace,
+            SelectorKind::AvgBandwidth,
+            SelectorKind::LastBandwidth,
+            SelectorKind::Published,
+            SelectorKind::Forecast,
+        ]
+    }
+}
+
+/// Stateful selector instance.
+pub struct Selector {
+    kind: SelectorKind,
+    rng: Rng,
+    rr_next: usize,
+}
+
+impl Selector {
+    pub fn new(kind: SelectorKind, seed: u64) -> Selector {
+        Selector { kind, rng: Rng::new(seed ^ 0x5E1E_C70E), rr_next: 0 }
+    }
+
+    pub fn kind(&self) -> SelectorKind {
+        self.kind
+    }
+
+    /// Pick among `eligible` indices into `candidates` (non-empty).
+    pub fn pick(&mut self, candidates: &[Candidate], eligible: &[usize]) -> usize {
+        assert!(!eligible.is_empty());
+        match self.kind {
+            SelectorKind::Random => eligible[self.rng.index(eligible.len())],
+            SelectorKind::RoundRobin => {
+                let i = eligible[self.rr_next % eligible.len()];
+                self.rr_next += 1;
+                i
+            }
+            SelectorKind::StaticSpace => Self::argmax(candidates, eligible, |c| {
+                c.ad.number("availableSpace").unwrap_or(0.0)
+            }),
+            SelectorKind::AvgBandwidth => Self::argmax(candidates, eligible, |c| {
+                c.ad.number("AvgRDBandwidth").unwrap_or(0.0)
+            }),
+            SelectorKind::LastBandwidth => Self::argmax(candidates, eligible, |c| {
+                c.ad.number("lastRDBandwidth").unwrap_or(0.0)
+            }),
+            SelectorKind::Published => Self::argmax(candidates, eligible, |c| {
+                c.ad.number("predictedRDBandwidth").unwrap_or(0.0)
+            }),
+            SelectorKind::Forecast => {
+                let preds = RankPolicy::ForecastBandwidth { engine: None }
+                    .predicted_bandwidth(candidates);
+                Self::argmax(candidates, eligible, |c| {
+                    let idx = candidates
+                        .iter()
+                        .position(|x| std::ptr::eq(x, c))
+                        .unwrap();
+                    preds[idx]
+                })
+            }
+        }
+    }
+
+    fn argmax(
+        candidates: &[Candidate],
+        eligible: &[usize],
+        f: impl Fn(&Candidate) -> f64,
+    ) -> usize {
+        let mut best = eligible[0];
+        let mut best_v = f(&candidates[best]);
+        for &i in &eligible[1..] {
+            let v = f(&candidates[i]);
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::parse_classad;
+
+    fn cands() -> Vec<Candidate> {
+        let mk = |site: &str, space: f64, avg: f64, last: f64, hist: &[f64]| Candidate {
+            site: site.into(),
+            url: format!("gsiftp://{site}/f"),
+            ad: parse_classad(&format!(
+                "availableSpace = {space}; AvgRDBandwidth = {avg}; lastRDBandwidth = {last};"
+            ))
+            .unwrap(),
+            history: hist.to_vec(),
+            load: 0.0,
+        };
+        vec![
+            mk("a", 10.0, 100.0, 500.0, &[100.0, 100.0, 100.0]),
+            mk("b", 90.0, 300.0, 100.0, &[300.0, 310.0, 305.0]),
+            mk("c", 40.0, 200.0, 900.0, &[200.0, 190.0, 210.0]),
+        ]
+    }
+
+    #[test]
+    fn static_selectors_pick_expected_sites() {
+        let cs = cands();
+        let all = [0usize, 1, 2];
+        assert_eq!(Selector::new(SelectorKind::StaticSpace, 0).pick(&cs, &all), 1);
+        assert_eq!(Selector::new(SelectorKind::AvgBandwidth, 0).pick(&cs, &all), 1);
+        assert_eq!(Selector::new(SelectorKind::LastBandwidth, 0).pick(&cs, &all), 2);
+        assert_eq!(Selector::new(SelectorKind::Forecast, 0).pick(&cs, &all), 1);
+    }
+
+    #[test]
+    fn round_robin_cycles_eligible() {
+        let cs = cands();
+        let mut s = Selector::new(SelectorKind::RoundRobin, 0);
+        let picks: Vec<usize> = (0..4).map(|_| s.pick(&cs, &[0, 2])).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed_and_in_range() {
+        let cs = cands();
+        let mut a = Selector::new(SelectorKind::Random, 7);
+        let mut b = Selector::new(SelectorKind::Random, 7);
+        for _ in 0..50 {
+            let pa = a.pick(&cs, &[1, 2]);
+            assert_eq!(pa, b.pick(&cs, &[1, 2]));
+            assert!([1, 2].contains(&pa));
+        }
+    }
+
+    #[test]
+    fn respects_eligible_subset() {
+        let cs = cands();
+        // b (index 1) has the most space but is not eligible.
+        assert_eq!(Selector::new(SelectorKind::StaticSpace, 0).pick(&cs, &[0, 2]), 2);
+    }
+
+    #[test]
+    fn all_kinds_have_names() {
+        for k in SelectorKind::all() {
+            assert!(!k.name().is_empty());
+        }
+    }
+}

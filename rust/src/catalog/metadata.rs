@@ -1,0 +1,116 @@
+//! Application metadata repository (paper §2.1 "Application Metadata",
+//! §5: "An application ... begins by querying an application specific
+//! metadata repository, specifying the characteristics of the desired
+//! data").
+//!
+//! Maps descriptive attribute/value pairs (experiment, run, energy,
+//! organism, ...) onto logical file names, with a conjunctive query
+//! interface.
+
+use std::collections::BTreeMap;
+
+/// The repository: logical file → descriptive attributes.
+#[derive(Debug, Default, Clone)]
+pub struct MetadataRepository {
+    records: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl MetadataRepository {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Describe (or re-describe) a logical file.
+    pub fn describe(&mut self, logical: &str, attrs: &[(&str, &str)]) {
+        let rec = self.records.entry(logical.to_string()).or_default();
+        for (k, v) in attrs {
+            rec.insert(k.to_ascii_lowercase(), v.to_string());
+        }
+    }
+
+    /// All attributes of a logical file.
+    pub fn attributes(&self, logical: &str) -> Option<&BTreeMap<String, String>> {
+        self.records.get(logical)
+    }
+
+    /// Conjunctive query: logical files whose metadata contains *all*
+    /// the given attribute/value pairs (values case-insensitive).
+    pub fn query(&self, needles: &[(&str, &str)]) -> Vec<&str> {
+        self.records
+            .iter()
+            .filter(|(_, attrs)| {
+                needles.iter().all(|(k, v)| {
+                    attrs
+                        .get(&k.to_ascii_lowercase())
+                        .map(|have| have.eq_ignore_ascii_case(v))
+                        .unwrap_or(false)
+                })
+            })
+            .map(|(name, _)| name.as_str())
+            .collect()
+    }
+
+    /// Unique query: exactly one logical file, else None.
+    pub fn identify(&self, needles: &[(&str, &str)]) -> Option<&str> {
+        let hits = self.query(needles);
+        match hits.as_slice() {
+            [one] => Some(one),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo() -> MetadataRepository {
+        let mut m = MetadataRepository::new();
+        m.describe(
+            "run42.dat",
+            &[("experiment", "CMS"), ("year", "2001"), ("beamEnergy", "7TeV")],
+        );
+        m.describe(
+            "run43.dat",
+            &[("experiment", "CMS"), ("year", "2001"), ("beamEnergy", "8TeV")],
+        );
+        m.describe("genome.fa", &[("organism", "E.coli"), ("assembly", "K12")]);
+        m
+    }
+
+    #[test]
+    fn conjunctive_query() {
+        let m = repo();
+        assert_eq!(m.query(&[("experiment", "CMS")]).len(), 2);
+        assert_eq!(
+            m.query(&[("experiment", "cms"), ("beamenergy", "7tev")]),
+            vec!["run42.dat"]
+        );
+        assert!(m.query(&[("experiment", "ATLAS")]).is_empty());
+    }
+
+    #[test]
+    fn identify_requires_uniqueness() {
+        let m = repo();
+        assert_eq!(m.identify(&[("beamEnergy", "7TeV")]), Some("run42.dat"));
+        assert_eq!(m.identify(&[("experiment", "CMS")]), None);
+        assert_eq!(m.identify(&[("nope", "x")]), None);
+    }
+
+    #[test]
+    fn redescribe_merges() {
+        let mut m = repo();
+        m.describe("run42.dat", &[("quality", "gold")]);
+        let attrs = m.attributes("run42.dat").unwrap();
+        assert_eq!(attrs.get("quality").unwrap(), "gold");
+        assert_eq!(attrs.get("experiment").unwrap(), "CMS");
+    }
+}

@@ -1,0 +1,13 @@
+//! Replica catalog + application metadata repository (paper §2.2, §5).
+//!
+//! The replica catalog maps **logical files** (and logical collections)
+//! to the **physical locations** holding replicas. The application
+//! metadata repository maps *content descriptions* to logical files, so
+//! an application can go `characteristics → logical file → replica
+//! locations` exactly as §5 describes.
+
+pub mod metadata;
+pub mod replica;
+
+pub use metadata::MetadataRepository;
+pub use replica::{LogicalFile, PhysicalLocation, ReplicaCatalog};

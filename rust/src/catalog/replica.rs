@@ -1,0 +1,208 @@
+//! The replica catalog: logical files, collections, physical locations.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+use crate::util::units::Bytes;
+
+/// A logical file known to the catalog.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogicalFile {
+    pub name: String,
+    pub size: Bytes,
+    /// Logical collection (dataset) the file belongs to.
+    pub collection: String,
+}
+
+/// One physical replica location: a storage site + path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhysicalLocation {
+    /// Site name — matches the GRIS site and gridftp endpoint name.
+    pub site: String,
+    /// URL-ish locator, e.g. `gsiftp://mcs.anl.gov/data/f001`.
+    pub url: String,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum CatalogError {
+    #[error("logical file {0:?} already registered")]
+    Duplicate(String),
+    #[error("logical file {0:?} not found")]
+    NotFound(String),
+    #[error("replica of {0:?} at site {1:?} already registered")]
+    DuplicateReplica(String, String),
+    #[error("replica of {0:?} at site {1:?} not found")]
+    ReplicaNotFound(String, String),
+}
+
+/// The catalog. Deterministic iteration (BTreeMap) keeps broker
+/// tiebreaks stable.
+#[derive(Debug, Default, Clone)]
+pub struct ReplicaCatalog {
+    files: BTreeMap<String, LogicalFile>,
+    replicas: BTreeMap<String, Vec<PhysicalLocation>>,
+}
+
+impl ReplicaCatalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a logical file.
+    pub fn create_logical(
+        &mut self,
+        name: &str,
+        size: Bytes,
+        collection: &str,
+    ) -> Result<(), CatalogError> {
+        if self.files.contains_key(name) {
+            return Err(CatalogError::Duplicate(name.into()));
+        }
+        self.files.insert(
+            name.to_string(),
+            LogicalFile { name: name.into(), size, collection: collection.into() },
+        );
+        self.replicas.insert(name.to_string(), Vec::new());
+        Ok(())
+    }
+
+    /// Add a replica location for a logical file.
+    pub fn add_replica(&mut self, logical: &str, loc: PhysicalLocation) -> Result<(), CatalogError> {
+        let reps = self
+            .replicas
+            .get_mut(logical)
+            .ok_or_else(|| CatalogError::NotFound(logical.into()))?;
+        if reps.iter().any(|r| r.site == loc.site) {
+            return Err(CatalogError::DuplicateReplica(logical.into(), loc.site));
+        }
+        reps.push(loc);
+        Ok(())
+    }
+
+    /// Remove a replica (replica management's delete operation).
+    pub fn remove_replica(&mut self, logical: &str, site: &str) -> Result<(), CatalogError> {
+        let reps = self
+            .replicas
+            .get_mut(logical)
+            .ok_or_else(|| CatalogError::NotFound(logical.into()))?;
+        let before = reps.len();
+        reps.retain(|r| r.site != site);
+        if reps.len() == before {
+            return Err(CatalogError::ReplicaNotFound(logical.into(), site.into()));
+        }
+        Ok(())
+    }
+
+    pub fn logical(&self, name: &str) -> Option<&LogicalFile> {
+        self.files.get(name)
+    }
+
+    /// All replica locations of a logical file (the Search-phase query,
+    /// §5.1.2 step 1).
+    pub fn locate(&self, logical: &str) -> Result<&[PhysicalLocation], CatalogError> {
+        self.replicas
+            .get(logical)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| CatalogError::NotFound(logical.into()))
+    }
+
+    /// Logical files in a collection.
+    pub fn collection(&self, name: &str) -> Vec<&LogicalFile> {
+        self.files.values().filter(|f| f.collection == name).collect()
+    }
+
+    pub fn logical_files(&self) -> impl Iterator<Item = &LogicalFile> {
+        self.files.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Total replica count across all files.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog() -> ReplicaCatalog {
+        let mut c = ReplicaCatalog::new();
+        c.create_logical("run42.dat", Bytes::from_gb(2.0), "cms-run2001").unwrap();
+        c.add_replica(
+            "run42.dat",
+            PhysicalLocation { site: "anl-mcs".into(), url: "gsiftp://anl/run42.dat".into() },
+        )
+        .unwrap();
+        c.add_replica(
+            "run42.dat",
+            PhysicalLocation { site: "lbl-dsd".into(), url: "gsiftp://lbl/run42.dat".into() },
+        )
+        .unwrap();
+        c
+    }
+
+    #[test]
+    fn create_and_locate() {
+        let c = catalog();
+        let reps = c.locate("run42.dat").unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].site, "anl-mcs");
+        assert_eq!(c.logical("run42.dat").unwrap().size, Bytes::from_gb(2.0));
+    }
+
+    #[test]
+    fn duplicate_logical_rejected() {
+        let mut c = catalog();
+        assert_eq!(
+            c.create_logical("run42.dat", Bytes(1.0), "x"),
+            Err(CatalogError::Duplicate("run42.dat".into()))
+        );
+    }
+
+    #[test]
+    fn duplicate_replica_site_rejected() {
+        let mut c = catalog();
+        let err = c.add_replica(
+            "run42.dat",
+            PhysicalLocation { site: "anl-mcs".into(), url: "other".into() },
+        );
+        assert!(matches!(err, Err(CatalogError::DuplicateReplica(_, _))));
+    }
+
+    #[test]
+    fn remove_replica() {
+        let mut c = catalog();
+        c.remove_replica("run42.dat", "anl-mcs").unwrap();
+        assert_eq!(c.locate("run42.dat").unwrap().len(), 1);
+        assert!(matches!(
+            c.remove_replica("run42.dat", "anl-mcs"),
+            Err(CatalogError::ReplicaNotFound(_, _))
+        ));
+    }
+
+    #[test]
+    fn unknown_logical_errors() {
+        let c = catalog();
+        assert!(matches!(c.locate("nope"), Err(CatalogError::NotFound(_))));
+    }
+
+    #[test]
+    fn collections_group_files() {
+        let mut c = catalog();
+        c.create_logical("run43.dat", Bytes::from_gb(1.0), "cms-run2001").unwrap();
+        c.create_logical("genome.fa", Bytes::from_mb(300.0), "genomics").unwrap();
+        assert_eq!(c.collection("cms-run2001").len(), 2);
+        assert_eq!(c.collection("genomics").len(), 1);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.replica_count(), 2);
+    }
+}

@@ -1,0 +1,414 @@
+//! ClassAd abstract syntax: expressions and the ad record itself.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::value::Value;
+
+/// Scope qualifier on an attribute reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Unqualified `attr` — resolved in the local ad first, then (during
+    /// matchmaking, per classic semantics) in the other ad.
+    Default,
+    /// `self.attr` / `my.attr` — local ad only.
+    My,
+    /// `other.attr` / `target.attr` — the ad on the other side of the
+    /// match (UNDEFINED outside a match context).
+    Other,
+}
+
+/// Binary operators, in the classic ClassAd grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Or,        // ||
+    And,       // &&
+    BitOr,     // |
+    BitXor,    // ^
+    BitAnd,    // &
+    Eq,        // ==
+    Ne,        // !=
+    Is,        // =?=  (strict)
+    Isnt,      // =!=  (strict)
+    Lt,        // <
+    Le,        // <=
+    Gt,        // >
+    Ge,        // >=
+    Shl,       // <<
+    Shr,       // >>  (arithmetic)
+    Ushr,      // >>> (logical)
+    Add,       // +
+    Sub,       // -
+    Mul,       // *
+    Div,       // /
+    Mod,       // %
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        use BinOp::*;
+        match self {
+            Or => "||",
+            And => "&&",
+            BitOr => "|",
+            BitXor => "^",
+            BitAnd => "&",
+            Eq => "==",
+            Ne => "!=",
+            Is => "=?=",
+            Isnt => "=!=",
+            Lt => "<",
+            Le => "<=",
+            Gt => ">",
+            Ge => ">=",
+            Shl => "<<",
+            Shr => ">>",
+            Ushr => ">>>",
+            Add => "+",
+            Sub => "-",
+            Mul => "*",
+            Div => "/",
+            Mod => "%",
+        }
+    }
+
+    /// Parser precedence (higher binds tighter).
+    pub fn precedence(self) -> u8 {
+        use BinOp::*;
+        match self {
+            Or => 1,
+            And => 2,
+            BitOr => 3,
+            BitXor => 4,
+            BitAnd => 5,
+            Eq | Ne | Is | Isnt => 6,
+            Lt | Le | Gt | Ge => 7,
+            Shl | Shr | Ushr => 8,
+            Add | Sub => 9,
+            Mul | Div | Mod => 10,
+        }
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Not,    // !
+    Neg,    // -
+    BitNot, // ~
+}
+
+/// A ClassAd expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Literal constant.
+    Lit(Value),
+    /// Attribute reference with optional scope (`other.x`, `my.x`, `x`).
+    Attr(Scope, String),
+    /// Unary operation.
+    Unary(UnOp, Box<Expr>),
+    /// Binary operation.
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Conditional `c ? t : f`.
+    Cond(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// Builtin function call.
+    Call(String, Vec<Expr>),
+    /// List construction `{ e1, e2, ... }`.
+    List(Vec<Expr>),
+}
+
+impl Expr {
+    pub fn lit(v: impl Into<Value>) -> Expr {
+        Expr::Lit(v.into())
+    }
+
+    pub fn attr(name: impl Into<String>) -> Expr {
+        Expr::Attr(Scope::Default, name.into())
+    }
+
+    pub fn other(name: impl Into<String>) -> Expr {
+        Expr::Attr(Scope::Other, name.into())
+    }
+
+    pub fn my(name: impl Into<String>) -> Expr {
+        Expr::Attr(Scope::My, name.into())
+    }
+
+    pub fn and(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::And, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn or(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Or, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn lt(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Lt, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn gt(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Gt, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn ge(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Ge, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn le(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Le, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn eq(self, rhs: Expr) -> Expr {
+        Expr::Binary(BinOp::Eq, Box::new(self), Box::new(rhs))
+    }
+}
+
+/// Unparse with minimal parentheses (child parenthesized when its
+/// precedence is lower than the parent's).
+fn fmt_expr(e: &Expr, parent_prec: u8, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    match e {
+        Expr::Lit(v) => write!(f, "{v}"),
+        Expr::Attr(Scope::Default, n) => write!(f, "{n}"),
+        Expr::Attr(Scope::My, n) => write!(f, "self.{n}"),
+        Expr::Attr(Scope::Other, n) => write!(f, "other.{n}"),
+        Expr::Unary(op, x) => {
+            let sym = match op {
+                UnOp::Not => "!",
+                UnOp::Neg => "-",
+                UnOp::BitNot => "~",
+            };
+            write!(f, "{sym}")?;
+            fmt_expr(x, 11, f)
+        }
+        Expr::Binary(op, l, r) => {
+            let p = op.precedence();
+            let need = p < parent_prec;
+            if need {
+                write!(f, "(")?;
+            }
+            fmt_expr(l, p, f)?;
+            write!(f, " {} ", op.symbol())?;
+            fmt_expr(r, p + 1, f)?; // left-assoc: rhs needs strictly higher
+            if need {
+                write!(f, ")")?;
+            }
+            Ok(())
+        }
+        Expr::Cond(c, t, x) => {
+            write!(f, "(")?;
+            fmt_expr(c, 0, f)?;
+            write!(f, " ? ")?;
+            fmt_expr(t, 0, f)?;
+            write!(f, " : ")?;
+            fmt_expr(x, 0, f)?;
+            write!(f, ")")
+        }
+        Expr::Call(name, args) => {
+            write!(f, "{name}(")?;
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                fmt_expr(a, 0, f)?;
+            }
+            write!(f, ")")
+        }
+        Expr::List(xs) => {
+            write!(f, "{{")?;
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                fmt_expr(x, 0, f)?;
+            }
+            write!(f, "}}")
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_expr(self, 0, f)
+    }
+}
+
+/// A classified advertisement: an ordered attribute → expression record.
+///
+/// Attribute names are case-insensitive (as in Condor and LDAP); the
+/// original spelling is preserved for unparsing.
+#[derive(Debug, Clone, Default)]
+pub struct ClassAd {
+    entries: Vec<(String, Expr)>,
+    index: HashMap<String, usize>,
+}
+
+impl ClassAd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert or replace an attribute.
+    pub fn set(&mut self, name: impl Into<String>, expr: Expr) {
+        let name = name.into();
+        let key = name.to_ascii_lowercase();
+        match self.index.get(&key) {
+            Some(&i) => self.entries[i] = (name, expr),
+            None => {
+                self.index.insert(key, self.entries.len());
+                self.entries.push((name, expr));
+            }
+        }
+    }
+
+    /// Insert a literal value.
+    pub fn set_value(&mut self, name: impl Into<String>, v: impl Into<Value>) {
+        self.set(name, Expr::Lit(v.into()));
+    }
+
+    /// Look up an attribute expression (case-insensitive).
+    pub fn get(&self, name: &str) -> Option<&Expr> {
+        self.index
+            .get(&name.to_ascii_lowercase())
+            .map(|&i| &self.entries[i].1)
+    }
+
+    /// Remove an attribute; returns whether it existed.
+    pub fn remove(&mut self, name: &str) -> bool {
+        let key = name.to_ascii_lowercase();
+        match self.index.remove(&key) {
+            None => false,
+            Some(i) => {
+                self.entries.remove(i);
+                for v in self.index.values_mut() {
+                    if *v > i {
+                        *v -= 1;
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(&name.to_ascii_lowercase())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate attributes in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Expr)> {
+        self.entries.iter().map(|(n, e)| (n.as_str(), e))
+    }
+
+    /// Evaluate an attribute in this ad alone (no `other` scope).
+    pub fn value(&self, name: &str) -> Value {
+        super::eval::eval_attr(self, name)
+    }
+
+    /// Convenience: evaluated numeric attribute.
+    pub fn number(&self, name: &str) -> Option<f64> {
+        self.value(name).as_number()
+    }
+
+    /// Convenience: evaluated string attribute.
+    pub fn string(&self, name: &str) -> Option<String> {
+        match self.value(name) {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl PartialEq for ClassAd {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len()
+            && self.iter().all(|(n, e)| other.get(n) == Some(e))
+    }
+}
+
+impl fmt::Display for ClassAd {
+    /// Unparse in the paper's bare `name = expr;` form.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (name, expr) in self.iter() {
+            writeln!(f, "{name} = {expr};")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_case_insensitive() {
+        let mut ad = ClassAd::new();
+        ad.set_value("AvailableSpace", 5i64);
+        assert!(ad.contains("availablespace"));
+        assert_eq!(ad.get("AVAILABLESPACE"), Some(&Expr::lit(5i64)));
+    }
+
+    #[test]
+    fn set_replaces_in_place() {
+        let mut ad = ClassAd::new();
+        ad.set_value("a", 1i64);
+        ad.set_value("b", 2i64);
+        ad.set_value("A", 3i64);
+        assert_eq!(ad.len(), 2);
+        let names: Vec<_> = ad.iter().map(|(n, _)| n.to_string()).collect();
+        assert_eq!(names, vec!["A", "b"]);
+    }
+
+    #[test]
+    fn remove_reindexes() {
+        let mut ad = ClassAd::new();
+        ad.set_value("a", 1i64);
+        ad.set_value("b", 2i64);
+        ad.set_value("c", 3i64);
+        assert!(ad.remove("b"));
+        assert!(!ad.remove("b"));
+        assert_eq!(ad.get("c"), Some(&Expr::lit(3i64)));
+        assert_eq!(ad.len(), 2);
+    }
+
+    #[test]
+    fn display_unparse_form() {
+        let mut ad = ClassAd::new();
+        ad.set_value("hostname", "hugo.mcs.anl.gov");
+        ad.set("requirement", Expr::other("reqdSpace").lt(Expr::lit(10i64)));
+        let text = ad.to_string();
+        assert!(text.contains("hostname = \"hugo.mcs.anl.gov\";"));
+        assert!(text.contains("requirement = other.reqdSpace < 10;"));
+    }
+
+    #[test]
+    fn expr_display_parenthesization() {
+        // (a + b) * c must keep its parens; a + b * c must not add any.
+        let e = Expr::Binary(
+            BinOp::Mul,
+            Box::new(Expr::Binary(
+                BinOp::Add,
+                Box::new(Expr::attr("a")),
+                Box::new(Expr::attr("b")),
+            )),
+            Box::new(Expr::attr("c")),
+        );
+        assert_eq!(e.to_string(), "(a + b) * c");
+        let e2 = Expr::Binary(
+            BinOp::Add,
+            Box::new(Expr::attr("a")),
+            Box::new(Expr::Binary(
+                BinOp::Mul,
+                Box::new(Expr::attr("b")),
+                Box::new(Expr::attr("c")),
+            )),
+        );
+        assert_eq!(e2.to_string(), "a + b * c");
+    }
+}

@@ -1,0 +1,151 @@
+//! Fluent programmatic construction of ClassAds.
+//!
+//! The broker's LDIF→ClassAd conversion layer (paper §6: "primitive
+//! libraries to achieve the conversion") and the examples build ads in
+//! code; this builder keeps that code readable.
+
+use super::ast::{ClassAd, Expr};
+use super::parser::{parse_expr, ParseError};
+use super::value::Value;
+
+/// Builder for a [`ClassAd`].
+#[derive(Debug, Default, Clone)]
+pub struct AdBuilder {
+    ad: ClassAd,
+}
+
+impl AdBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a literal string attribute.
+    pub fn str(mut self, name: &str, v: impl Into<String>) -> Self {
+        self.ad.set_value(name, Value::Str(v.into()));
+        self
+    }
+
+    /// Set a literal integer attribute.
+    pub fn int(mut self, name: &str, v: i64) -> Self {
+        self.ad.set_value(name, Value::Int(v));
+        self
+    }
+
+    /// Set a literal real attribute.
+    pub fn real(mut self, name: &str, v: f64) -> Self {
+        self.ad.set_value(name, Value::Real(v));
+        self
+    }
+
+    /// Set a boolean attribute.
+    pub fn bool(mut self, name: &str, v: bool) -> Self {
+        self.ad.set_value(name, Value::Bool(v));
+        self
+    }
+
+    /// Set a byte quantity (displays as `50G` style).
+    pub fn bytes(mut self, name: &str, bytes: f64) -> Self {
+        self.ad.set_value(name, Value::Quantity { base: bytes, rate: false });
+        self
+    }
+
+    /// Set a bandwidth quantity (displays as `75K/Sec` style).
+    pub fn rate(mut self, name: &str, bytes_per_sec: f64) -> Self {
+        self.ad
+            .set_value(name, Value::Quantity { base: bytes_per_sec, rate: true });
+        self
+    }
+
+    /// Set a list-of-strings attribute (e.g. `filesystem`).
+    pub fn strings(mut self, name: &str, vs: &[&str]) -> Self {
+        self.ad.set_value(
+            name,
+            Value::List(vs.iter().map(|s| Value::Str((*s).into())).collect()),
+        );
+        self
+    }
+
+    /// Set an attribute from ClassAd expression *text* (panics on parse
+    /// error — use [`AdBuilder::try_expr`] for untrusted input).
+    pub fn expr(mut self, name: &str, src: &str) -> Self {
+        self.ad.set(
+            name,
+            parse_expr(src).unwrap_or_else(|e| panic!("bad expr {src:?}: {e}")),
+        );
+        self
+    }
+
+    /// Fallible variant of [`AdBuilder::expr`].
+    pub fn try_expr(mut self, name: &str, src: &str) -> Result<Self, ParseError> {
+        self.ad.set(name, parse_expr(src)?);
+        Ok(self)
+    }
+
+    /// Set an already-built expression.
+    pub fn set(mut self, name: &str, e: Expr) -> Self {
+        self.ad.set(name, e);
+        self
+    }
+
+    pub fn build(self) -> ClassAd {
+        self.ad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::matchmaker::symmetric_match;
+    use crate::classad::parser::parse_classad;
+
+    #[test]
+    fn builds_the_paper_storage_ad() {
+        let built = AdBuilder::new()
+            .str("hostname", "hugo.mcs.anl.gov")
+            .str("volume", "/dev/sandbox")
+            .bytes("availableSpace", 50.0 * 1024f64.powi(3))
+            .rate("MaxRDBandwidth", 75.0 * 1024.0)
+            .expr(
+                "requirement",
+                "other.reqdSpace < 10G && other.reqdRDBandwidth < 75K/Sec",
+            )
+            .build();
+        let parsed = parse_classad(
+            r#"hostname = "hugo.mcs.anl.gov";
+               volume = "/dev/sandbox";
+               availableSpace = 50G;
+               MaxRDBandwidth = 75K/Sec;
+               requirement = other.reqdSpace < 10G && other.reqdRDBandwidth < 75K/Sec;"#,
+        )
+        .unwrap();
+        assert_eq!(built, parsed);
+    }
+
+    #[test]
+    fn built_ads_match_like_parsed_ads() {
+        let storage = AdBuilder::new()
+            .bytes("availableSpace", 50.0 * 1024f64.powi(3))
+            .rate("MaxRDBandwidth", 75.0 * 1024.0)
+            .build();
+        let request = AdBuilder::new()
+            .bytes("reqdSpace", 5.0 * 1024f64.powi(3))
+            .expr("requirement", "other.availableSpace > 5G")
+            .expr("rank", "other.availableSpace")
+            .build();
+        assert!(symmetric_match(&request, &storage));
+    }
+
+    #[test]
+    fn strings_list_and_member() {
+        let ad = AdBuilder::new().strings("filesystem", &["ext3", "xfs"]).build();
+        let req = AdBuilder::new()
+            .expr("requirement", "member(\"xfs\", other.filesystem)")
+            .build();
+        assert!(symmetric_match(&req, &ad));
+    }
+
+    #[test]
+    fn try_expr_reports_errors() {
+        assert!(AdBuilder::new().try_expr("x", "1 +").is_err());
+    }
+}

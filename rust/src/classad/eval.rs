@@ -1,0 +1,639 @@
+//! ClassAd evaluator: three-valued logic, `other` scoping, builtins.
+//!
+//! Evaluation happens either standalone (one ad) or inside a *match
+//! context* — the `MatchClassAd` of the Condor papers — where two ads
+//! are joined and each can refer to the other through `other.attr`.
+//! Per classic semantics, an unqualified attribute is resolved in the
+//! local ad first and then in the other ad.
+
+use std::collections::HashSet;
+
+use super::ast::{BinOp, ClassAd, Expr, Scope, UnOp};
+use super::value::Value;
+
+/// Maximum attribute-dereference depth (cycle guard; cycles evaluate to
+/// ERROR rather than hanging, mirroring Condor's behaviour).
+const MAX_DEPTH: usize = 64;
+
+/// Evaluation context: the local ad and (in a match) the other ad.
+#[derive(Clone, Copy)]
+pub struct EvalCtx<'a> {
+    pub my: &'a ClassAd,
+    pub other: Option<&'a ClassAd>,
+}
+
+impl<'a> EvalCtx<'a> {
+    pub fn solo(my: &'a ClassAd) -> Self {
+        EvalCtx { my, other: None }
+    }
+
+    pub fn matched(my: &'a ClassAd, other: &'a ClassAd) -> Self {
+        EvalCtx { my, other: Some(other) }
+    }
+
+    fn flipped(self) -> Option<EvalCtx<'a>> {
+        self.other.map(|o| EvalCtx { my: o, other: Some(self.my) })
+    }
+}
+
+/// Evaluate `expr` in `ctx`.
+pub fn eval(ctx: EvalCtx<'_>, expr: &Expr) -> Value {
+    let mut stack = HashSet::new();
+    eval_inner(ctx, expr, &mut stack, 0)
+}
+
+/// Evaluate attribute `name` of `ad` with no match partner.
+pub fn eval_attr(ad: &ClassAd, name: &str) -> Value {
+    match ad.get(name) {
+        Some(e) => eval(EvalCtx::solo(ad), e),
+        None => Value::Undefined,
+    }
+}
+
+/// Evaluate attribute `name` of `my` inside a match with `other`.
+pub fn eval_in_match(my: &ClassAd, other: &ClassAd, name: &str) -> Value {
+    match my.get(name) {
+        Some(e) => eval(EvalCtx::matched(my, other), e),
+        None => Value::Undefined,
+    }
+}
+
+fn eval_inner(
+    ctx: EvalCtx<'_>,
+    expr: &Expr,
+    stack: &mut HashSet<(bool, String)>,
+    depth: usize,
+) -> Value {
+    if depth > MAX_DEPTH {
+        return Value::Error;
+    }
+    match expr {
+        Expr::Lit(v) => v.clone(),
+        Expr::Attr(scope, name) => resolve_attr(ctx, *scope, name, stack, depth),
+        Expr::Unary(op, x) => {
+            let v = eval_inner(ctx, x, stack, depth + 1);
+            eval_unary(*op, v)
+        }
+        Expr::Binary(op, l, r) => eval_binary(ctx, *op, l, r, stack, depth),
+        Expr::Cond(c, t, f) => match eval_inner(ctx, c, stack, depth + 1) {
+            Value::Bool(true) => eval_inner(ctx, t, stack, depth + 1),
+            Value::Bool(false) => eval_inner(ctx, f, stack, depth + 1),
+            Value::Undefined => Value::Undefined,
+            _ => Value::Error,
+        },
+        Expr::Call(name, args) => {
+            let vals: Vec<Value> = args
+                .iter()
+                .map(|a| eval_inner(ctx, a, stack, depth + 1))
+                .collect();
+            super::eval::builtins::call(name, &vals, args, ctx)
+        }
+        Expr::List(xs) => Value::List(
+            xs.iter()
+                .map(|x| eval_inner(ctx, x, stack, depth + 1))
+                .collect(),
+        ),
+    }
+}
+
+fn resolve_attr(
+    ctx: EvalCtx<'_>,
+    scope: Scope,
+    name: &str,
+    stack: &mut HashSet<(bool, String)>,
+    depth: usize,
+) -> Value {
+    let lower = name.to_ascii_lowercase();
+    let try_local = |stack: &mut HashSet<(bool, String)>| -> Option<Value> {
+        ctx.my.get(name).map(|e| {
+            let key = (false, lower.clone());
+            if !stack.insert(key.clone()) {
+                return Value::Error; // cyclic definition
+            }
+            let v = eval_inner(ctx, e, stack, depth + 1);
+            stack.remove(&key);
+            v
+        })
+    };
+    let try_other = |stack: &mut HashSet<(bool, String)>| -> Option<Value> {
+        let flipped = ctx.flipped()?;
+        flipped.my.get(name).map(|e| {
+            let key = (true, lower.clone());
+            if !stack.insert(key.clone()) {
+                return Value::Error;
+            }
+            let v = eval_inner(flipped, e, stack, depth + 1);
+            stack.remove(&key);
+            v
+        })
+    };
+    match scope {
+        Scope::My => try_local(stack).unwrap_or(Value::Undefined),
+        Scope::Other => try_other(stack).unwrap_or(Value::Undefined),
+        Scope::Default => try_local(stack)
+            .or_else(|| try_other(stack))
+            .unwrap_or(Value::Undefined),
+    }
+}
+
+fn eval_unary(op: UnOp, v: Value) -> Value {
+    if v.is_exceptional() {
+        return v;
+    }
+    match op {
+        UnOp::Not => match v {
+            Value::Bool(b) => Value::Bool(!b),
+            _ => Value::Error,
+        },
+        UnOp::Neg => match v {
+            Value::Int(i) => Value::Int(-i),
+            Value::Real(r) => Value::Real(-r),
+            Value::Quantity { base, rate } => Value::Quantity { base: -base, rate },
+            _ => Value::Error,
+        },
+        UnOp::BitNot => match v {
+            Value::Int(i) => Value::Int(!i),
+            _ => Value::Error,
+        },
+    }
+}
+
+fn eval_binary(
+    ctx: EvalCtx<'_>,
+    op: BinOp,
+    l: &Expr,
+    r: &Expr,
+    stack: &mut HashSet<(bool, String)>,
+    depth: usize,
+) -> Value {
+    use BinOp::*;
+    // Lazy boolean operators with UNDEFINED-absorption.
+    if op == And || op == Or {
+        let lv = eval_inner(ctx, l, stack, depth + 1);
+        let decided = match (&op, &lv) {
+            (And, Value::Bool(false)) => Some(Value::Bool(false)),
+            (Or, Value::Bool(true)) => Some(Value::Bool(true)),
+            _ => None,
+        };
+        if let Some(v) = decided {
+            return v;
+        }
+        if lv.is_error() || matches!(lv, Value::Int(_) | Value::Real(_) | Value::Quantity { .. } | Value::Str(_) | Value::List(_)) {
+            if lv.is_error() {
+                return Value::Error;
+            }
+            return Value::Error;
+        }
+        let rv = eval_inner(ctx, r, stack, depth + 1);
+        return match (lv, rv) {
+            (_, Value::Error) => Value::Error,
+            (Value::Bool(_), Value::Bool(b)) => {
+                // lv is the neutral element here (TRUE for &&, FALSE for ||)
+                Value::Bool(b)
+            }
+            (Value::Undefined, Value::Bool(b)) => {
+                // UNDEFINED && FALSE == FALSE; UNDEFINED || TRUE == TRUE
+                if (op == And && !b) || (op == Or && b) {
+                    Value::Bool(b)
+                } else {
+                    Value::Undefined
+                }
+            }
+            (_, Value::Undefined) => Value::Undefined,
+            _ => Value::Error,
+        };
+    }
+    let lv = eval_inner(ctx, l, stack, depth + 1);
+    let rv = eval_inner(ctx, r, stack, depth + 1);
+    // Strict comparisons never propagate UNDEFINED/ERROR.
+    if op == Is {
+        return Value::Bool(lv.strict_eq(&rv));
+    }
+    if op == Isnt {
+        return Value::Bool(!lv.strict_eq(&rv));
+    }
+    if lv.is_exceptional() || rv.is_exceptional() {
+        return if lv.is_error() || rv.is_error() {
+            Value::Error
+        } else {
+            Value::Undefined
+        };
+    }
+    match op {
+        Eq | Ne => match lv.loose_eq(&rv) {
+            Some(b) => Value::Bool(if op == Eq { b } else { !b }),
+            None => Value::Error,
+        },
+        Lt | Le | Gt | Ge => match lv.loose_cmp(&rv) {
+            Some(ord) => {
+                let b = match op {
+                    Lt => ord.is_lt(),
+                    Le => ord.is_le(),
+                    Gt => ord.is_gt(),
+                    Ge => ord.is_ge(),
+                    _ => unreachable!(),
+                };
+                Value::Bool(b)
+            }
+            None => Value::Error,
+        },
+        Add | Sub | Mul | Div | Mod => arith(op, lv, rv),
+        BitOr | BitXor | BitAnd | Shl | Shr | Ushr => bits(op, lv, rv),
+        And | Or | Is | Isnt => unreachable!(),
+    }
+}
+
+fn arith(op: BinOp, lv: Value, rv: Value) -> Value {
+    use BinOp::*;
+    // String + string concatenates (convenience used by converted ads).
+    if op == Add {
+        if let (Value::Str(a), Value::Str(b)) = (&lv, &rv) {
+            return Value::Str(format!("{a}{b}"));
+        }
+    }
+    let both_int = matches!((&lv, &rv), (Value::Int(_), Value::Int(_)));
+    let (a, b) = match (lv.as_number(), rv.as_number()) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Value::Error,
+    };
+    if both_int {
+        let (a, b) = (a as i64, b as i64);
+        return match op {
+            Add => Value::Int(a.wrapping_add(b)),
+            Sub => Value::Int(a.wrapping_sub(b)),
+            Mul => Value::Int(a.wrapping_mul(b)),
+            Div => {
+                if b == 0 {
+                    Value::Error
+                } else {
+                    Value::Int(a.wrapping_div(b))
+                }
+            }
+            Mod => {
+                if b == 0 {
+                    Value::Error
+                } else {
+                    Value::Int(a.wrapping_rem(b))
+                }
+            }
+            _ => unreachable!(),
+        };
+    }
+    match op {
+        Add => Value::Real(a + b),
+        Sub => Value::Real(a - b),
+        Mul => Value::Real(a * b),
+        Div => {
+            if b == 0.0 {
+                Value::Error
+            } else {
+                Value::Real(a / b)
+            }
+        }
+        Mod => {
+            if b == 0.0 {
+                Value::Error
+            } else {
+                Value::Real(a % b)
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn bits(op: BinOp, lv: Value, rv: Value) -> Value {
+    use BinOp::*;
+    let (a, b) = match (&lv, &rv) {
+        (Value::Int(a), Value::Int(b)) => (*a, *b),
+        _ => return Value::Error,
+    };
+    match op {
+        BitOr => Value::Int(a | b),
+        BitXor => Value::Int(a ^ b),
+        BitAnd => Value::Int(a & b),
+        Shl => Value::Int(a.wrapping_shl(b as u32)),
+        Shr => Value::Int(a.wrapping_shr(b as u32)),
+        Ushr => Value::Int(((a as u64).wrapping_shr(b as u32)) as i64),
+        _ => unreachable!(),
+    }
+}
+
+/// Builtin function library.
+pub mod builtins {
+    use super::*;
+    use once_cell::sync::Lazy;
+
+    static REGEX_CACHE: Lazy<std::sync::Mutex<std::collections::HashMap<String, regex::Regex>>> =
+        Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
+
+    /// Dispatch a builtin by (lowercased) name.
+    pub fn call(name: &str, vals: &[Value], _args: &[Expr], _ctx: EvalCtx<'_>) -> Value {
+        // Any ERROR argument poisons the call; UNDEFINED poisons except
+        // for the explicit type-test builtins.
+        let type_test = matches!(
+            name,
+            "isundefined" | "iserror" | "isstring" | "isinteger" | "isreal" | "isboolean" | "islist"
+        );
+        if !type_test {
+            if vals.iter().any(|v| v.is_error()) {
+                return Value::Error;
+            }
+            if vals.iter().any(|v| v.is_undefined()) {
+                return Value::Undefined;
+            }
+        }
+        match (name, vals) {
+            ("isundefined", [v]) => Value::Bool(v.is_undefined()),
+            ("iserror", [v]) => Value::Bool(v.is_error()),
+            ("isstring", [v]) => Value::Bool(matches!(v, Value::Str(_))),
+            ("isinteger", [v]) => Value::Bool(matches!(v, Value::Int(_))),
+            ("isreal", [v]) => Value::Bool(matches!(v, Value::Real(_) | Value::Quantity { .. })),
+            ("isboolean", [v]) => Value::Bool(matches!(v, Value::Bool(_))),
+            ("islist", [v]) => Value::Bool(matches!(v, Value::List(_))),
+            ("typeof", [v]) => Value::Str(v.type_name().into()),
+
+            ("int", [v]) => match v.as_number() {
+                Some(n) => Value::Int(n as i64),
+                None => match v {
+                    Value::Str(s) => s
+                        .trim()
+                        .parse::<i64>()
+                        .map(Value::Int)
+                        .unwrap_or(Value::Error),
+                    Value::Bool(b) => Value::Int(*b as i64),
+                    _ => Value::Error,
+                },
+            },
+            ("real", [v]) => match v.as_number() {
+                Some(n) => Value::Real(n),
+                None => match v {
+                    Value::Str(s) => s
+                        .trim()
+                        .parse::<f64>()
+                        .map(Value::Real)
+                        .unwrap_or(Value::Error),
+                    Value::Bool(b) => Value::Real(*b as i64 as f64),
+                    _ => Value::Error,
+                },
+            },
+            ("string", [v]) => match v {
+                Value::Str(s) => Value::Str(s.clone()),
+                other => Value::Str(other.to_string()),
+            },
+            ("floor", [v]) => num1(v, f64::floor),
+            ("ceiling", [v]) => num1(v, f64::ceil),
+            ("round", [v]) => num1(v, f64::round),
+            ("abs", [v]) => match v {
+                Value::Int(i) => Value::Int(i.abs()),
+                other => match other.as_number() {
+                    Some(n) => Value::Real(n.abs()),
+                    None => Value::Error,
+                },
+            },
+            ("min", vs) if !vs.is_empty() => fold_num(vs, f64::min),
+            ("max", vs) if !vs.is_empty() => fold_num(vs, f64::max),
+
+            ("strcat", vs) => {
+                let mut out = String::new();
+                for v in vs {
+                    match v {
+                        Value::Str(s) => out.push_str(s),
+                        other => out.push_str(&other.to_string()),
+                    }
+                }
+                Value::Str(out)
+            }
+            ("strlen" | "size", [Value::Str(s)]) => Value::Int(s.len() as i64),
+            ("size", [Value::List(xs)]) => Value::Int(xs.len() as i64),
+            ("toupper", [Value::Str(s)]) => Value::Str(s.to_uppercase()),
+            ("tolower", [Value::Str(s)]) => Value::Str(s.to_lowercase()),
+            ("substr", [Value::Str(s), Value::Int(off)]) => substr(s, *off, i64::MAX),
+            ("substr", [Value::Str(s), Value::Int(off), Value::Int(len)]) => {
+                substr(s, *off, *len)
+            }
+            ("member", [x, Value::List(xs)]) => {
+                Value::Bool(xs.iter().any(|v| v.loose_eq(x) == Some(true)))
+            }
+            ("regexp", [Value::Str(pat), Value::Str(s)]) => {
+                let mut cache = REGEX_CACHE.lock().unwrap();
+                let re = match cache.get(pat) {
+                    Some(re) => re.clone(),
+                    None => match regex::Regex::new(pat) {
+                        Ok(re) => {
+                            cache.insert(pat.clone(), re.clone());
+                            re
+                        }
+                        Err(_) => return Value::Error,
+                    },
+                };
+                Value::Bool(re.is_match(s))
+            }
+            ("ifthenelse", [c, t, f]) => match c {
+                Value::Bool(true) => t.clone(),
+                Value::Bool(false) => f.clone(),
+                _ => Value::Error,
+            },
+            _ => Value::Error,
+        }
+    }
+
+    fn num1(v: &Value, f: impl Fn(f64) -> f64) -> Value {
+        match v {
+            Value::Int(i) => Value::Int(*i),
+            other => match other.as_number() {
+                Some(n) => Value::Int(f(n) as i64),
+                None => Value::Error,
+            },
+        }
+    }
+
+    fn fold_num(vs: &[Value], f: impl Fn(f64, f64) -> f64) -> Value {
+        let mut acc: Option<f64> = None;
+        let all_int = vs.iter().all(|v| matches!(v, Value::Int(_)));
+        for v in vs {
+            match v.as_number() {
+                Some(n) => acc = Some(acc.map_or(n, |a| f(a, n))),
+                None => return Value::Error,
+            }
+        }
+        let n = acc.unwrap();
+        if all_int {
+            Value::Int(n as i64)
+        } else {
+            Value::Real(n)
+        }
+    }
+
+    fn substr(s: &str, off: i64, len: i64) -> Value {
+        let chars: Vec<char> = s.chars().collect();
+        let n = chars.len() as i64;
+        let start = if off < 0 { (n + off).max(0) } else { off.min(n) };
+        let avail = n - start;
+        let take = if len < 0 { (avail + len).max(0) } else { len.min(avail) };
+        Value::Str(chars[start as usize..(start + take) as usize].iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::parser::{parse_classad, parse_expr};
+
+    fn ev(src: &str) -> Value {
+        let ad = ClassAd::new();
+        eval(EvalCtx::solo(&ad), &parse_expr(src).unwrap())
+    }
+
+    #[test]
+    fn arithmetic_int_and_real() {
+        assert_eq!(ev("1 + 2 * 3"), Value::Int(7));
+        assert_eq!(ev("7 / 2"), Value::Int(3));
+        assert_eq!(ev("7.0 / 2"), Value::Real(3.5));
+        assert_eq!(ev("7 % 3"), Value::Int(1));
+        assert_eq!(ev("1 / 0"), Value::Error);
+        assert_eq!(ev("-3"), Value::Int(-3));
+    }
+
+    #[test]
+    fn quantities_behave_numerically() {
+        assert_eq!(ev("5G < 10G"), Value::Bool(true));
+        assert_eq!(ev("1K + 1"), Value::Real(1025.0));
+        assert_eq!(ev("75K/Sec > 50K/Sec"), Value::Bool(true));
+    }
+
+    #[test]
+    fn three_valued_logic_tables() {
+        assert_eq!(ev("FALSE && UNDEFINED"), Value::Bool(false));
+        assert_eq!(ev("UNDEFINED && FALSE"), Value::Bool(false));
+        assert_eq!(ev("TRUE && UNDEFINED"), Value::Undefined);
+        assert_eq!(ev("UNDEFINED || TRUE"), Value::Bool(true));
+        assert_eq!(ev("UNDEFINED || FALSE"), Value::Undefined);
+        assert_eq!(ev("missing > 5"), Value::Undefined);
+        assert_eq!(ev("TRUE && ERROR"), Value::Error);
+        assert_eq!(ev("1 && TRUE"), Value::Error);
+    }
+
+    #[test]
+    fn strict_comparison_pierces_undefined() {
+        assert_eq!(ev("UNDEFINED =?= UNDEFINED"), Value::Bool(true));
+        assert_eq!(ev("missing =?= UNDEFINED"), Value::Bool(true));
+        assert_eq!(ev("1 =?= 1.0"), Value::Bool(false));
+        assert_eq!(ev("\"A\" =?= \"a\""), Value::Bool(false));
+        assert_eq!(ev("\"A\" == \"a\""), Value::Bool(true));
+        assert_eq!(ev("UNDEFINED =!= UNDEFINED"), Value::Bool(false));
+    }
+
+    #[test]
+    fn attr_chains_and_cycles() {
+        let ad = parse_classad("a = b + 1; b = 2;").unwrap();
+        assert_eq!(ad.value("a"), Value::Int(3));
+        let cyc = parse_classad("a = b; b = a;").unwrap();
+        assert_eq!(cyc.value("a"), Value::Error);
+        let selfcyc = parse_classad("a = a + 1;").unwrap();
+        assert_eq!(selfcyc.value("a"), Value::Error);
+    }
+
+    #[test]
+    fn other_scope_resolution() {
+        let a = parse_classad("x = 1; req = other.y == 2;").unwrap();
+        let b = parse_classad("y = 2;").unwrap();
+        assert_eq!(eval_in_match(&a, &b, "req"), Value::Bool(true));
+        // other.* outside a match is UNDEFINED
+        assert_eq!(a.value("req"), Value::Undefined);
+    }
+
+    #[test]
+    fn default_scope_falls_through_to_other() {
+        // Classic semantics: unqualified name looks at my ad, then other.
+        let a = parse_classad("req = y == 2;").unwrap();
+        let b = parse_classad("y = 2;").unwrap();
+        assert_eq!(eval_in_match(&a, &b, "req"), Value::Bool(true));
+    }
+
+    #[test]
+    fn conditional() {
+        assert_eq!(ev("1 < 2 ? \"yes\" : \"no\""), Value::from("yes"));
+        assert_eq!(ev("UNDEFINED ? 1 : 2"), Value::Undefined);
+        assert_eq!(ev("3 ? 1 : 2"), Value::Error);
+    }
+
+    #[test]
+    fn builtin_strings() {
+        assert_eq!(ev("strcat(\"a\", \"b\", 3)"), Value::from("ab3"));
+        assert_eq!(ev("toUpper(\"abc\")"), Value::from("ABC"));
+        assert_eq!(ev("strlen(\"abcd\")"), Value::Int(4));
+        assert_eq!(ev("substr(\"abcdef\", 2, 3)"), Value::from("cde"));
+        assert_eq!(ev("substr(\"abcdef\", -2)"), Value::from("ef"));
+        assert_eq!(ev("regexp(\"^hu.*gov$\", \"hugo.mcs.anl.gov\")"), Value::Bool(true));
+    }
+
+    #[test]
+    fn builtin_numeric_and_lists() {
+        assert_eq!(ev("floor(2.9)"), Value::Int(2));
+        assert_eq!(ev("ceiling(2.1)"), Value::Int(3));
+        assert_eq!(ev("round(2.5)"), Value::Int(3));
+        assert_eq!(ev("min(3, 1.5, 2)"), Value::Real(1.5));
+        assert_eq!(ev("max(3, 5)"), Value::Int(5));
+        assert_eq!(ev("member(\"xfs\", {\"ext3\", \"xfs\"})"), Value::Bool(true));
+        assert_eq!(ev("member(4, {1, 2, 3})"), Value::Bool(false));
+        assert_eq!(ev("size({1, 2, 3})"), Value::Int(3));
+    }
+
+    #[test]
+    fn builtin_type_tests_see_undefined() {
+        assert_eq!(ev("isUndefined(missing)"), Value::Bool(true));
+        assert_eq!(ev("isError(1/0)"), Value::Bool(true));
+        assert_eq!(ev("isString(\"x\")"), Value::Bool(true));
+        assert_eq!(ev("isReal(5G)"), Value::Bool(true));
+    }
+
+    #[test]
+    fn unknown_builtin_is_error() {
+        assert_eq!(ev("frobnicate(1)"), Value::Error);
+    }
+
+    #[test]
+    fn bitwise_ops() {
+        assert_eq!(ev("5 & 3"), Value::Int(1));
+        assert_eq!(ev("5 | 3"), Value::Int(7));
+        assert_eq!(ev("5 ^ 3"), Value::Int(6));
+        assert_eq!(ev("1 << 4"), Value::Int(16));
+        assert_eq!(ev("-8 >> 1"), Value::Int(-4));
+        assert_eq!(ev("~0"), Value::Int(-1));
+    }
+}
+
+#[cfg(test)]
+mod depth_tests {
+    use super::*;
+    use crate::classad::parser::parse_classad;
+
+    #[test]
+    fn deep_attribute_chains_hit_the_guard_not_the_stack() {
+        // a0 -> a1 -> ... -> a100: deeper than MAX_DEPTH, evaluates to
+        // ERROR instead of overflowing.
+        let mut src = String::new();
+        for i in 0..100 {
+            src.push_str(&format!("a{i} = a{};\n", i + 1));
+        }
+        src.push_str("a100 = 1;\n");
+        let ad = parse_classad(&src).unwrap();
+        assert_eq!(ad.value("a0"), Value::Error);
+        // A chain inside the budget still resolves.
+        let mut ok = String::new();
+        for i in 0..30 {
+            ok.push_str(&format!("b{i} = b{};\n", i + 1));
+        }
+        ok.push_str("b30 = 7;\n");
+        let ad2 = parse_classad(&ok).unwrap();
+        assert_eq!(ad2.value("b0"), Value::Int(7));
+    }
+
+    #[test]
+    fn mutual_recursion_through_other_scope_terminates() {
+        let a = parse_classad("x = other.y; requirement = other.y > 0;").unwrap();
+        let b = parse_classad("y = other.x;").unwrap();
+        // x -> other.y -> other.x (cycle across ads) must be ERROR.
+        assert_eq!(eval_in_match(&a, &b, "x"), Value::Error);
+    }
+}

@@ -1,0 +1,424 @@
+//! ClassAd lexer.
+//!
+//! Handles the classic token set plus the paper's unit-suffixed
+//! quantities: `50G`, `75K/Sec` lex as single `Quantity` tokens (a
+//! magnitude immediately followed by a K/M/G/T/P suffix, optionally
+//! followed immediately by `/Sec`). `a / Sec` with spaces still lexes as
+//! division by an identifier.
+
+use thiserror::Error;
+
+use crate::util::units::parse_quantity;
+
+/// Lexical token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Int(i64),
+    Real(f64),
+    Quantity { base: f64, rate: bool },
+    Str(String),
+    Ident(String),
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Assign,   // =
+    Question, // ?
+    Colon,    // :
+    Dot,      // .
+    OrOr,
+    AndAnd,
+    Pipe,
+    Caret,
+    Amp,
+    EqEq,
+    Ne,
+    Is,   // =?=
+    Isnt, // =!=
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Shl,
+    Shr,
+    Ushr,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Bang,
+    Tilde,
+}
+
+/// Lexer errors carry a byte offset for diagnostics.
+#[derive(Debug, Error, PartialEq)]
+pub enum LexError {
+    #[error("unterminated string starting at byte {0}")]
+    UnterminatedString(usize),
+    #[error("bad number {1:?} at byte {0}")]
+    BadNumber(usize, String),
+    #[error("unexpected character {1:?} at byte {0}")]
+    Unexpected(usize, char),
+}
+
+/// Tokenize `src` into a vector of tokens.
+pub fn lex(src: &str) -> Result<Vec<Tok>, LexError> {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i] as char;
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                i += 2;
+                while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                    i += 1;
+                }
+                i = (i + 2).min(b.len());
+            }
+            '"' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= b.len() {
+                        return Err(LexError::UnterminatedString(start));
+                    }
+                    match b[i] {
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\\' if i + 1 < b.len() => {
+                            let e = b[i + 1] as char;
+                            s.push(match e {
+                                'n' => '\n',
+                                't' => '\t',
+                                '\\' => '\\',
+                                '"' => '"',
+                                other => other,
+                            });
+                            i += 2;
+                        }
+                        other => {
+                            s.push(other as char);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Tok::Str(s));
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'.') {
+                    i += 1;
+                }
+                // exponent
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < b.len() && b[j].is_ascii_digit() {
+                        i = j;
+                        while i < b.len() && b[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let mag = &src[start..i];
+                // Unit suffix? K/M/G/T/P (optionally B/iB), maybe /Sec.
+                let suf_start = i;
+                while i < b.len() && (b[i] as char).is_ascii_alphabetic() {
+                    i += 1;
+                }
+                let suffix = &src[suf_start..i];
+                if suffix.is_empty() {
+                    // A bare number immediately followed by `/Sec` is a
+                    // rate quantity (how non-integral rates unparse).
+                    if src[i..].len() >= 4 && src[i..i + 4].eq_ignore_ascii_case("/sec") {
+                        let base: f64 = mag
+                            .parse()
+                            .map_err(|_| LexError::BadNumber(start, mag.into()))?;
+                        i += 4;
+                        out.push(Tok::Quantity { base, rate: true });
+                        continue;
+                    }
+                    let tok = if mag.contains('.') || mag.contains('e') || mag.contains('E') {
+                        Tok::Real(
+                            mag.parse()
+                                .map_err(|_| LexError::BadNumber(start, mag.into()))?,
+                        )
+                    } else {
+                        Tok::Int(
+                            mag.parse()
+                                .map_err(|_| LexError::BadNumber(start, mag.into()))?,
+                        )
+                    };
+                    out.push(tok);
+                } else {
+                    // maybe "/Sec" immediately after (no whitespace)
+                    let mut rate_len = 0;
+                    if i + 3 < b.len() + 1 && src[i..].len() >= 4 {
+                        let tail = &src[i..(i + 4).min(src.len())];
+                        if tail.eq_ignore_ascii_case("/sec") {
+                            rate_len = 4;
+                        }
+                    }
+                    let full = &src[start..i + rate_len];
+                    let (base, rate) = parse_quantity(full)
+                        .map_err(|_| LexError::BadNumber(start, full.into()))?;
+                    i += rate_len;
+                    out.push(Tok::Quantity { base, rate });
+                }
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < b.len()
+                    && ((b[i] as char).is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push(Tok::Ident(src[start..i].to_string()));
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '{' => {
+                out.push(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Tok::RBrace);
+                i += 1;
+            }
+            '[' => {
+                out.push(Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Tok::RBracket);
+                i += 1;
+            }
+            ',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            ';' => {
+                out.push(Tok::Semi);
+                i += 1;
+            }
+            '?' => {
+                out.push(Tok::Question);
+                i += 1;
+            }
+            ':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            '.' => {
+                out.push(Tok::Dot);
+                i += 1;
+            }
+            '+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            '%' => {
+                out.push(Tok::Percent);
+                i += 1;
+            }
+            '~' => {
+                out.push(Tok::Tilde);
+                i += 1;
+            }
+            '^' => {
+                out.push(Tok::Caret);
+                i += 1;
+            }
+            '|' => {
+                if b.get(i + 1) == Some(&b'|') {
+                    out.push(Tok::OrOr);
+                    i += 2;
+                } else {
+                    out.push(Tok::Pipe);
+                    i += 1;
+                }
+            }
+            '&' => {
+                if b.get(i + 1) == Some(&b'&') {
+                    out.push(Tok::AndAnd);
+                    i += 2;
+                } else {
+                    out.push(Tok::Amp);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ne);
+                    i += 2;
+                } else {
+                    out.push(Tok::Bang);
+                    i += 1;
+                }
+            }
+            '=' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::EqEq);
+                    i += 2;
+                } else if b.get(i + 1) == Some(&b'?') && b.get(i + 2) == Some(&b'=') {
+                    out.push(Tok::Is);
+                    i += 3;
+                } else if b.get(i + 1) == Some(&b'!') && b.get(i + 2) == Some(&b'=') {
+                    out.push(Tok::Isnt);
+                    i += 3;
+                } else {
+                    out.push(Tok::Assign);
+                    i += 1;
+                }
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Le);
+                    i += 2;
+                } else if b.get(i + 1) == Some(&b'<') {
+                    out.push(Tok::Shl);
+                    i += 2;
+                } else {
+                    out.push(Tok::Lt);
+                    i += 1;
+                }
+            }
+            '>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ge);
+                    i += 2;
+                } else if b.get(i + 1) == Some(&b'>') && b.get(i + 2) == Some(&b'>') {
+                    out.push(Tok::Ushr);
+                    i += 3;
+                } else if b.get(i + 1) == Some(&b'>') {
+                    out.push(Tok::Shr);
+                    i += 2;
+                } else {
+                    out.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            other => return Err(LexError::Unexpected(i, other)),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_paper_storage_ad_tokens() {
+        let toks = lex("availableSpace = 50G;").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("availableSpace".into()),
+                Tok::Assign,
+                Tok::Quantity { base: 50.0 * 1024f64.powi(3), rate: false },
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_rate_quantity() {
+        let toks = lex("MaxRDBandwidth = 75K/Sec;").unwrap();
+        assert!(matches!(
+            toks[2],
+            Tok::Quantity { base, rate: true } if (base - 76800.0).abs() < 1e-9
+        ));
+    }
+
+    #[test]
+    fn rate_requires_adjacency() {
+        // With whitespace, "/" is division and Sec an identifier.
+        let toks = lex("5K / Sec").unwrap();
+        assert_eq!(toks.len(), 3);
+        assert!(matches!(toks[0], Tok::Quantity { rate: false, .. }));
+        assert_eq!(toks[1], Tok::Slash);
+        assert_eq!(toks[2], Tok::Ident("Sec".into()));
+    }
+
+    #[test]
+    fn lexes_operators() {
+        let toks = lex("a =?= b =!= c << 1 >> 2 >>> 3 <= >= != ==").unwrap();
+        assert!(toks.contains(&Tok::Is));
+        assert!(toks.contains(&Tok::Isnt));
+        assert!(toks.contains(&Tok::Shl));
+        assert!(toks.contains(&Tok::Shr));
+        assert!(toks.contains(&Tok::Ushr));
+        assert!(toks.contains(&Tok::Le));
+        assert!(toks.contains(&Tok::Ge));
+        assert!(toks.contains(&Tok::Ne));
+        assert!(toks.contains(&Tok::EqEq));
+    }
+
+    #[test]
+    fn lexes_strings_with_escapes() {
+        let toks = lex(r#"host = "a\"b\n";"#).unwrap();
+        assert_eq!(toks[2], Tok::Str("a\"b\n".into()));
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(matches!(lex("\"abc"), Err(LexError::UnterminatedString(0))));
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let toks = lex("a // comment\n= /* inline */ 1").unwrap();
+        assert_eq!(toks.len(), 3);
+    }
+
+    #[test]
+    fn reals_and_exponents() {
+        let toks = lex("1.5 2e3 7").unwrap();
+        assert_eq!(
+            toks,
+            vec![Tok::Real(1.5), Tok::Real(2000.0), Tok::Int(7)]
+        );
+    }
+
+    #[test]
+    fn unexpected_char_reports_position() {
+        assert_eq!(lex("a @ b"), Err(LexError::Unexpected(2, '@')));
+    }
+}

@@ -1,0 +1,195 @@
+//! Condor matchmaking over ClassAds: symmetric `requirements`
+//! satisfaction plus `rank`-based ordering — the engine behind the
+//! broker's Match phase (paper §5.1.2, steps 2–3).
+
+use super::ast::ClassAd;
+use super::eval::eval_in_match;
+use super::value::Value;
+
+/// Names accepted for the requirements attribute. The paper's example
+/// ads spell it `requirement`; Condor spells it `requirements`. Both
+/// are honoured, preferring the ad's own spelling.
+const REQUIREMENT_ATTRS: [&str; 2] = ["requirements", "requirement"];
+
+/// Result of matching a request ad against one candidate ad.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Match {
+    /// Index of the candidate in the input slice.
+    pub index: usize,
+    /// Rank of the match from the *request's* `rank` expression
+    /// (0.0 when absent or non-numeric, per Condor).
+    pub rank: f64,
+}
+
+/// Evaluate one side's requirements against the other.
+///
+/// Missing requirements mean "always willing" (TRUE), matching the
+/// GRIS ads in the paper that publish no `requirements` attribute.
+fn requirements_hold(my: &ClassAd, other: &ClassAd) -> bool {
+    for attr in REQUIREMENT_ATTRS {
+        if my.contains(attr) {
+            return matches!(eval_in_match(my, other, attr), Value::Bool(true));
+        }
+    }
+    true
+}
+
+/// Symmetric two-way match: both ads' requirements must evaluate to
+/// TRUE in the joined (MatchClassAd) context. UNDEFINED and ERROR both
+/// fail the match, as in Condor.
+pub fn symmetric_match(a: &ClassAd, b: &ClassAd) -> bool {
+    requirements_hold(a, b) && requirements_hold(b, a)
+}
+
+/// One-way match used where only the requester constrains the pairing.
+pub fn match_ads(request: &ClassAd, candidate: &ClassAd) -> bool {
+    requirements_hold(request, candidate)
+}
+
+/// The request's rank of a candidate: `rank` evaluated with
+/// `my = request`, `other = candidate`; non-numeric ranks (including
+/// UNDEFINED when the ad has no rank) collapse to 0.0 — Condor's rule.
+pub fn rank_of(request: &ClassAd, candidate: &ClassAd) -> f64 {
+    match eval_in_match(request, candidate, "rank") {
+        v => v.as_number().unwrap_or(0.0),
+    }
+}
+
+/// Match `request` against every candidate, returning the survivors
+/// ordered best-rank-first (stable for equal ranks, preserving
+/// catalog order — the deterministic tiebreak the broker relies on).
+pub fn rank_candidates(request: &ClassAd, candidates: &[ClassAd]) -> Vec<Match> {
+    let mut out: Vec<Match> = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| symmetric_match(request, c))
+        .map(|(index, c)| Match { index, rank: rank_of(request, c) })
+        .collect();
+    out.sort_by(|a, b| {
+        b.rank
+            .partial_cmp(&a.rank)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::parser::parse_classad;
+
+    const STORAGE: &str = r#"
+        hostname = "hugo.mcs.anl.gov";
+        volume = "/dev/sandbox";
+        availableSpace = 50G;
+        MaxRDBandwidth = 75K/Sec;
+        requirement = other.reqdSpace < 10G
+            && other.reqdRDBandwidth < 75K/Sec;
+    "#;
+
+    const REQUEST: &str = r#"
+        hostname = "comet.xyz.com";
+        reqdSpace = 5G;
+        reqdRDBandwidth = 50K/Sec;
+        rank = other.availableSpace;
+        requirement = other.availableSpace > 5G
+            && other.MaxRDBandwidth > 50K/Sec;
+    "#;
+
+    #[test]
+    fn paper_ads_match_both_ways() {
+        let s = parse_classad(STORAGE).unwrap();
+        let r = parse_classad(REQUEST).unwrap();
+        assert!(symmetric_match(&r, &s));
+        assert!(symmetric_match(&s, &r));
+    }
+
+    #[test]
+    fn paper_rank_is_available_space() {
+        let s = parse_classad(STORAGE).unwrap();
+        let r = parse_classad(REQUEST).unwrap();
+        assert_eq!(rank_of(&r, &s), 50.0 * 1024f64.powi(3));
+    }
+
+    #[test]
+    fn storage_policy_rejects_greedy_request() {
+        // Request wanting 20G violates the storage ad's usage policy
+        // (other.reqdSpace < 10G) even though its own requirements hold.
+        let s = parse_classad(STORAGE).unwrap();
+        let r = parse_classad(
+            r#"reqdSpace = 20G;
+               reqdRDBandwidth = 50K/Sec;
+               requirement = other.availableSpace > 5G;"#,
+        )
+        .unwrap();
+        assert!(match_ads(&r, &s));
+        assert!(!symmetric_match(&r, &s));
+    }
+
+    #[test]
+    fn request_rejects_slow_storage() {
+        let s = parse_classad(
+            r#"availableSpace = 90G;
+               MaxRDBandwidth = 10K/Sec;
+               requirement = other.reqdSpace < 10G;"#,
+        )
+        .unwrap();
+        let r = parse_classad(REQUEST).unwrap();
+        assert!(!symmetric_match(&r, &s));
+    }
+
+    #[test]
+    fn undefined_requirement_fails_match() {
+        // Storage ad references an attribute the request doesn't publish:
+        // requirements evaluate UNDEFINED -> no match.
+        let s = parse_classad(r#"requirement = other.nonexistent < 5;"#).unwrap();
+        let r = parse_classad(r#"reqdSpace = 1G;"#).unwrap();
+        assert!(!symmetric_match(&r, &s));
+    }
+
+    #[test]
+    fn missing_requirements_always_willing() {
+        let s = parse_classad("availableSpace = 50G;").unwrap();
+        let r = parse_classad("reqdSpace = 1G;").unwrap();
+        assert!(symmetric_match(&r, &s));
+    }
+
+    #[test]
+    fn rank_candidates_orders_best_first() {
+        let r = parse_classad(REQUEST).unwrap();
+        let mk = |space: &str, bw: &str| {
+            parse_classad(&format!(
+                "availableSpace = {space}; MaxRDBandwidth = {bw};"
+            ))
+            .unwrap()
+        };
+        let candidates = vec![
+            mk("10G", "60K/Sec"),  // feasible, rank 10G
+            mk("3G", "60K/Sec"),   // infeasible (space)
+            mk("80G", "60K/Sec"),  // feasible, rank 80G — winner
+            mk("60G", "40K/Sec"),  // infeasible (bandwidth)
+            mk("20G", "90K/Sec"),  // feasible, rank 20G
+        ];
+        let ms = rank_candidates(&r, &candidates);
+        assert_eq!(ms.iter().map(|m| m.index).collect::<Vec<_>>(), vec![2, 4, 0]);
+        assert!(ms[0].rank > ms[1].rank && ms[1].rank > ms[2].rank);
+    }
+
+    #[test]
+    fn equal_ranks_tiebreak_by_catalog_order() {
+        let r = parse_classad("rank = 1; requirement = TRUE;").unwrap();
+        let ads: Vec<_> = (0..4)
+            .map(|i| parse_classad(&format!("id = {i};")).unwrap())
+            .collect();
+        let ms = rank_candidates(&r, &ads);
+        assert_eq!(ms.iter().map(|m| m.index).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rankless_request_ranks_zero() {
+        let r = parse_classad("requirement = TRUE;").unwrap();
+        let s = parse_classad("availableSpace = 50G;").unwrap();
+        assert_eq!(rank_of(&r, &s), 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! Condor Classified Advertisements (ClassAds), reimplemented in Rust.
+//!
+//! The paper (§4) uses ClassAds to describe storage resource
+//! capabilities/policies and application requirements, matched and
+//! ranked by the Condor matchmaking mechanism [Raman et al., HPDC'98].
+//! This module is a faithful implementation of the *classic* ClassAd
+//! language as those papers (and the paper's own examples) use it:
+//!
+//! * attribute = expression lists, e.g.
+//!   `availableSpace = 50G; requirement = other.reqdSpace < 10G;`
+//! * three-valued logic (`TRUE`/`FALSE`/`UNDEFINED`, plus `ERROR`),
+//! * cross-ad references through `other.attr` (and `self`/`my`),
+//! * unit-suffixed quantities (`50G`, `75K/Sec`) exactly as written in
+//!   the paper's example ads,
+//! * `requirements` matching (symmetric) and `rank`-based ordering,
+//! * a library of builtin functions (string, numeric, type-test,
+//!   list membership, regexp).
+//!
+//! Submodules:
+//! * [`lexer`] / [`parser`] — text form to AST,
+//! * [`ast`] — expressions and the [`ClassAd`](ast::ClassAd) record,
+//! * [`value`] — runtime values and three-valued logic,
+//! * [`eval`] — the evaluator (with `other`-scope resolution),
+//! * [`matchmaker`] — symmetric match + rank, the broker's Match phase
+//!   engine,
+//! * [`builder`] — ergonomic programmatic ad construction.
+
+pub mod ast;
+pub mod builder;
+pub mod eval;
+pub mod lexer;
+pub mod matchmaker;
+pub mod parser;
+pub mod value;
+
+pub use ast::{ClassAd, Expr};
+pub use builder::AdBuilder;
+pub use eval::{eval, eval_in_match, EvalCtx};
+pub use matchmaker::{match_ads, rank_candidates, symmetric_match, Match};
+pub use parser::{parse_classad, parse_expr};
+pub use value::Value;

@@ -1,0 +1,432 @@
+//! Recursive-descent / precedence-climbing parser for ClassAds.
+//!
+//! Accepts both the paper's bare form
+//!
+//! ```text
+//! hostname = "hugo.mcs.anl.gov";
+//! requirement = other.reqdSpace < 10G;
+//! ```
+//!
+//! and the bracketed new-ClassAd form `[ a = 1; b = a + 1 ]`.
+
+use thiserror::Error;
+
+use super::ast::{BinOp, ClassAd, Expr, Scope, UnOp};
+use super::lexer::{lex, LexError, Tok};
+use super::value::Value;
+
+/// Parse errors.
+#[derive(Debug, Error, PartialEq)]
+pub enum ParseError {
+    #[error(transparent)]
+    Lex(#[from] LexError),
+    #[error("unexpected end of input")]
+    Eof,
+    #[error("unexpected token {0:?} (expected {1})")]
+    Unexpected(String, &'static str),
+    #[error("trailing tokens after expression")]
+    Trailing,
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, what: &'static str) -> Result<(), ParseError> {
+        match self.next() {
+            Some(ref t) if t == want => Ok(()),
+            Some(t) => Err(ParseError::Unexpected(format!("{t:?}"), what)),
+            None => Err(ParseError::Eof),
+        }
+    }
+
+    fn bin_op(tok: &Tok) -> Option<BinOp> {
+        Some(match tok {
+            Tok::OrOr => BinOp::Or,
+            Tok::AndAnd => BinOp::And,
+            Tok::Pipe => BinOp::BitOr,
+            Tok::Caret => BinOp::BitXor,
+            Tok::Amp => BinOp::BitAnd,
+            Tok::EqEq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            Tok::Is => BinOp::Is,
+            Tok::Isnt => BinOp::Isnt,
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            Tok::Shl => BinOp::Shl,
+            Tok::Shr => BinOp::Shr,
+            Tok::Ushr => BinOp::Ushr,
+            Tok::Plus => BinOp::Add,
+            Tok::Minus => BinOp::Sub,
+            Tok::Star => BinOp::Mul,
+            Tok::Slash => BinOp::Div,
+            Tok::Percent => BinOp::Mod,
+            _ => return None,
+        })
+    }
+
+    /// expr := ternary
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let cond = self.binary(1)?;
+        if self.peek() == Some(&Tok::Question) {
+            self.next();
+            let t = self.expr()?;
+            self.expect(&Tok::Colon, "':' in conditional")?;
+            let f = self.expr()?;
+            Ok(Expr::Cond(Box::new(cond), Box::new(t), Box::new(f)))
+        } else {
+            Ok(cond)
+        }
+    }
+
+    /// Precedence climbing over binary operators.
+    fn binary(&mut self, min_prec: u8) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary()?;
+        while let Some(op) = self.peek().and_then(Self::bin_op) {
+            let p = op.precedence();
+            if p < min_prec {
+                break;
+            }
+            self.next();
+            let rhs = self.binary(p + 1)?; // left associative
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        match self.peek() {
+            Some(Tok::Bang) => {
+                self.next();
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.unary()?)))
+            }
+            Some(Tok::Minus) => {
+                self.next();
+                // Constant-fold negation of numeric literals so that
+                // `-5` parses as the literal -5 (unparse fixpoint).
+                Ok(match self.unary()? {
+                    Expr::Lit(Value::Int(i)) => Expr::Lit(Value::Int(-i)),
+                    Expr::Lit(Value::Real(r)) => Expr::Lit(Value::Real(-r)),
+                    Expr::Lit(Value::Quantity { base, rate }) => {
+                        Expr::Lit(Value::Quantity { base: -base, rate })
+                    }
+                    e => Expr::Unary(UnOp::Neg, Box::new(e)),
+                })
+            }
+            Some(Tok::Plus) => {
+                self.next();
+                self.unary()
+            }
+            Some(Tok::Tilde) => {
+                self.next();
+                Ok(Expr::Unary(UnOp::BitNot, Box::new(self.unary()?)))
+            }
+            _ => self.primary(),
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        let tok = self.next().ok_or(ParseError::Eof)?;
+        match tok {
+            Tok::Int(i) => Ok(Expr::Lit(Value::Int(i))),
+            Tok::Real(r) => Ok(Expr::Lit(Value::Real(r))),
+            Tok::Quantity { base, rate } => Ok(Expr::Lit(Value::Quantity { base, rate })),
+            Tok::Str(s) => Ok(Expr::Lit(Value::Str(s))),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            Tok::LBrace => {
+                let mut items = Vec::new();
+                if self.peek() != Some(&Tok::RBrace) {
+                    loop {
+                        items.push(self.expr()?);
+                        match self.peek() {
+                            Some(Tok::Comma) => {
+                                self.next();
+                            }
+                            _ => break,
+                        }
+                    }
+                }
+                self.expect(&Tok::RBrace, "'}'")?;
+                Ok(Expr::List(items))
+            }
+            Tok::Ident(name) => self.ident_tail(name),
+            other => Err(ParseError::Unexpected(format!("{other:?}"), "expression")),
+        }
+    }
+
+    /// Identifier followed by optional `.attr` scope access or a call.
+    fn ident_tail(&mut self, name: String) -> Result<Expr, ParseError> {
+        let lower = name.to_ascii_lowercase();
+        // Keywords.
+        match lower.as_str() {
+            "true" => return Ok(Expr::Lit(Value::Bool(true))),
+            "false" => return Ok(Expr::Lit(Value::Bool(false))),
+            "undefined" => return Ok(Expr::Lit(Value::Undefined)),
+            "error" => return Ok(Expr::Lit(Value::Error)),
+            _ => {}
+        }
+        // Scope prefix: other.x / target.x / self.x / my.x
+        if self.peek() == Some(&Tok::Dot) {
+            let scope = match lower.as_str() {
+                "other" | "target" => Some(Scope::Other),
+                "self" | "my" => Some(Scope::My),
+                _ => None,
+            };
+            if let Some(scope) = scope {
+                self.next(); // dot
+                match self.next() {
+                    Some(Tok::Ident(attr)) => return Ok(Expr::Attr(scope, attr)),
+                    Some(t) => {
+                        return Err(ParseError::Unexpected(
+                            format!("{t:?}"),
+                            "attribute name after scope",
+                        ))
+                    }
+                    None => return Err(ParseError::Eof),
+                }
+            }
+            // Unknown scope: treat `a.b` as attribute "a.b" (LDAP-ish
+            // dotted names appear in converted LDIF ads).
+            self.next();
+            match self.next() {
+                Some(Tok::Ident(attr)) => {
+                    return Ok(Expr::Attr(Scope::Default, format!("{name}.{attr}")))
+                }
+                Some(t) => {
+                    return Err(ParseError::Unexpected(format!("{t:?}"), "attribute name"))
+                }
+                None => return Err(ParseError::Eof),
+            }
+        }
+        // Call?
+        if self.peek() == Some(&Tok::LParen) {
+            self.next();
+            let mut args = Vec::new();
+            if self.peek() != Some(&Tok::RParen) {
+                loop {
+                    args.push(self.expr()?);
+                    match self.peek() {
+                        Some(Tok::Comma) => {
+                            self.next();
+                        }
+                        _ => break,
+                    }
+                }
+            }
+            self.expect(&Tok::RParen, "')' after call arguments")?;
+            return Ok(Expr::Call(lower, args));
+        }
+        Ok(Expr::Attr(Scope::Default, name))
+    }
+
+    /// classad := '[' bindings ']' | bindings
+    fn classad(&mut self) -> Result<ClassAd, ParseError> {
+        let bracketed = self.peek() == Some(&Tok::LBracket);
+        if bracketed {
+            self.next();
+        }
+        let mut ad = ClassAd::new();
+        loop {
+            match self.peek() {
+                None => break,
+                Some(Tok::RBracket) if bracketed => {
+                    self.next();
+                    break;
+                }
+                Some(Tok::Semi) => {
+                    self.next();
+                    continue;
+                }
+                Some(Tok::Ident(_)) => {
+                    let name = match self.next() {
+                        Some(Tok::Ident(n)) => n,
+                        _ => unreachable!(),
+                    };
+                    self.expect(&Tok::Assign, "'=' after attribute name")?;
+                    let e = self.expr()?;
+                    ad.set(name, e);
+                    match self.peek() {
+                        Some(Tok::Semi) => {
+                            self.next();
+                        }
+                        Some(Tok::RBracket) if bracketed => {}
+                        None => {}
+                        Some(t) => {
+                            return Err(ParseError::Unexpected(
+                                format!("{t:?}"),
+                                "';' between bindings",
+                            ))
+                        }
+                    }
+                }
+                Some(t) => {
+                    return Err(ParseError::Unexpected(
+                        format!("{t:?}"),
+                        "attribute binding",
+                    ))
+                }
+            }
+        }
+        Ok(ad)
+    }
+}
+
+/// Parse a full ClassAd (bare `a = e; ...` or bracketed `[a = e; ...]`).
+pub fn parse_classad(src: &str) -> Result<ClassAd, ParseError> {
+    let mut p = Parser { toks: lex(src)?, pos: 0 };
+    let ad = p.classad()?;
+    if p.pos != p.toks.len() {
+        return Err(ParseError::Trailing);
+    }
+    Ok(ad)
+}
+
+/// Parse a single expression.
+pub fn parse_expr(src: &str) -> Result<Expr, ParseError> {
+    let mut p = Parser { toks: lex(src)?, pos: 0 };
+    let e = p.expr()?;
+    if p.pos != p.toks.len() {
+        return Err(ParseError::Trailing);
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The storage ad exactly as printed in §4 of the paper.
+    pub const PAPER_STORAGE_AD: &str = r#"
+        hostname = "hugo.mcs.anl.gov";
+        volume = "/dev/sandbox";
+        availableSpace = 50G;
+        MaxRDBandwidth = 75K/Sec;
+        requirement = other.reqdSpace < 10G
+            && other.reqdRDBandwidth < 75K/Sec;
+    "#;
+
+    /// The request ad exactly as printed in §5.2 of the paper.
+    pub const PAPER_REQUEST_AD: &str = r#"
+        hostname = "comet.xyz.com";
+        reqdSpace = 5G;
+        reqdRDBandwidth = 50K/Sec;
+        rank = other.availableSpace;
+        requirement = other.availableSpace >
+            5G && other.MaxRDBandwidth >
+            50K/Sec;
+    "#;
+
+    #[test]
+    fn parses_paper_storage_ad() {
+        let ad = parse_classad(PAPER_STORAGE_AD).unwrap();
+        assert_eq!(ad.len(), 5);
+        assert_eq!(ad.string("hostname").unwrap(), "hugo.mcs.anl.gov");
+        assert_eq!(ad.number("availableSpace").unwrap(), 50.0 * 1024f64.powi(3));
+        assert!(ad.get("requirement").is_some());
+    }
+
+    #[test]
+    fn parses_paper_request_ad() {
+        let ad = parse_classad(PAPER_REQUEST_AD).unwrap();
+        assert_eq!(ad.number("reqdRDBandwidth").unwrap(), 50.0 * 1024.0);
+        assert_eq!(
+            ad.get("rank").unwrap(),
+            &Expr::Attr(Scope::Other, "availableSpace".into())
+        );
+    }
+
+    #[test]
+    fn parses_bracketed_form() {
+        let ad = parse_classad("[ a = 1; b = a + 1 ]").unwrap();
+        assert_eq!(ad.len(), 2);
+    }
+
+    #[test]
+    fn precedence_and_over_or() {
+        let e = parse_expr("a || b && c").unwrap();
+        assert_eq!(e.to_string(), "a || b && c");
+        match e {
+            Expr::Binary(BinOp::Or, _, rhs) => {
+                assert!(matches!(*rhs, Expr::Binary(BinOp::And, _, _)));
+            }
+            other => panic!("bad tree {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ternary_parses() {
+        let e = parse_expr("a > 1 ? \"big\" : \"small\"").unwrap();
+        assert!(matches!(e, Expr::Cond(_, _, _)));
+    }
+
+    #[test]
+    fn call_and_list_parse() {
+        let e = parse_expr("member(\"ext3\", {\"ext3\", \"xfs\"})").unwrap();
+        match e {
+            Expr::Call(name, args) => {
+                assert_eq!(name, "member");
+                assert_eq!(args.len(), 2);
+                assert!(matches!(args[1], Expr::List(_)));
+            }
+            other => panic!("bad parse {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scope_forms() {
+        assert_eq!(
+            parse_expr("other.x").unwrap(),
+            Expr::Attr(Scope::Other, "x".into())
+        );
+        assert_eq!(
+            parse_expr("target.x").unwrap(),
+            Expr::Attr(Scope::Other, "x".into())
+        );
+        assert_eq!(parse_expr("self.x").unwrap(), Expr::Attr(Scope::My, "x".into()));
+        assert_eq!(parse_expr("my.x").unwrap(), Expr::Attr(Scope::My, "x".into()));
+    }
+
+    #[test]
+    fn keywords_case_insensitive() {
+        assert_eq!(parse_expr("TRUE").unwrap(), Expr::Lit(Value::Bool(true)));
+        assert_eq!(parse_expr("Undefined").unwrap(), Expr::Lit(Value::Undefined));
+        assert_eq!(parse_expr("error").unwrap(), Expr::Lit(Value::Error));
+    }
+
+    #[test]
+    fn unparse_reparse_fixpoint() {
+        for src in [PAPER_STORAGE_AD, PAPER_REQUEST_AD] {
+            let ad = parse_classad(src).unwrap();
+            let re = parse_classad(&ad.to_string()).unwrap();
+            assert_eq!(ad, re);
+        }
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_classad("a = ;").is_err());
+        assert!(parse_expr("1 +").is_err());
+        assert!(parse_expr("(1").is_err());
+        assert!(matches!(parse_expr("1 2"), Err(ParseError::Trailing)));
+    }
+}

@@ -1,0 +1,278 @@
+//! Runtime values and the three-valued (really four-valued) logic of
+//! classic ClassAds: `TRUE`, `FALSE`, `UNDEFINED`, `ERROR`.
+//!
+//! `UNDEFINED` arises from referencing a missing attribute; `ERROR` from
+//! type mismatches (e.g. `"abc" * 3`). Both propagate through strict
+//! operators; the lazy boolean operators absorb them when the other
+//! operand decides the result (`FALSE && UNDEFINED == FALSE`).
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A ClassAd runtime value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Undefined,
+    Error,
+    Bool(bool),
+    Int(i64),
+    Real(f64),
+    /// A numeric quantity carrying its display unit (`50G`, `75K/Sec`).
+    /// Behaves exactly like `Real(bytes)` in arithmetic/comparisons but
+    /// unparses in the paper's notation.
+    Quantity {
+        base: f64,
+        rate: bool,
+    },
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// Numeric view (Int, Real, Quantity). None for other types.
+    pub fn as_number(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Real(r) => Some(*r),
+            Value::Quantity { base, .. } => Some(*base),
+            _ => None,
+        }
+    }
+
+    /// Boolean view. None when the value is not a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_undefined(&self) -> bool {
+        matches!(self, Value::Undefined)
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Value::Error)
+    }
+
+    /// True when the value is `UNDEFINED` or `ERROR` (propagating).
+    pub fn is_exceptional(&self) -> bool {
+        self.is_undefined() || self.is_error()
+    }
+
+    /// Classic-ClassAd equality used by `==`: numerics compare by value,
+    /// strings case-insensitively; mismatched types are an ERROR
+    /// (handled by the caller); returns None on type mismatch.
+    pub fn loose_eq(&self, other: &Value) -> Option<bool> {
+        match (self.as_number(), other.as_number()) {
+            (Some(a), Some(b)) => return Some(a == b),
+            _ => {}
+        }
+        match (self, other) {
+            (Value::Bool(a), Value::Bool(b)) => Some(a == b),
+            (Value::Str(a), Value::Str(b)) => Some(a.eq_ignore_ascii_case(b)),
+            _ => None,
+        }
+    }
+
+    /// Ordering for `<`, `<=`, `>`, `>=`. None on type mismatch.
+    pub fn loose_cmp(&self, other: &Value) -> Option<Ordering> {
+        if let (Some(a), Some(b)) = (self.as_number(), other.as_number()) {
+            return a.partial_cmp(&b);
+        }
+        match (self, other) {
+            (Value::Str(a), Value::Str(b)) => {
+                Some(a.to_ascii_lowercase().cmp(&b.to_ascii_lowercase()))
+            }
+            _ => None,
+        }
+    }
+
+    /// The strict `=?=` ("is") comparison: never UNDEFINED/ERROR; same
+    /// type and same value (strings case-*sensitive*, per Condor).
+    pub fn strict_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Undefined, Value::Undefined) => true,
+            (Value::Error, Value::Error) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::List(a), Value::List(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.strict_eq(y))
+            }
+            _ => match (self.as_number(), other.as_number()) {
+                (Some(a), Some(b)) => {
+                    // =?= requires same *type* class too: int vs real differ
+                    let same_class = matches!(
+                        (self, other),
+                        (Value::Int(_), Value::Int(_))
+                            | (Value::Real(_) | Value::Quantity { .. },
+                               Value::Real(_) | Value::Quantity { .. })
+                    );
+                    same_class && a == b
+                }
+                _ => false,
+            },
+        }
+    }
+
+    /// Type name for diagnostics and the `typeOf` builtin.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Undefined => "undefined",
+            Value::Error => "error",
+            Value::Bool(_) => "boolean",
+            Value::Int(_) => "integer",
+            Value::Real(_) | Value::Quantity { .. } => "real",
+            Value::Str(_) => "string",
+            Value::List(_) => "list",
+        }
+    }
+}
+
+/// Structural equality, except that `Quantity` is transparent over
+/// `Real` (a quantity is just a real with display units — `50G`
+/// unparses/reparses through raw-number form when non-integral).
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Undefined, Value::Undefined) => true,
+            (Value::Error, Value::Error) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::List(a), Value::List(b)) => a == b,
+            (
+                Value::Real(_) | Value::Quantity { .. },
+                Value::Real(_) | Value::Quantity { .. },
+            ) => self.as_number() == other.as_number(),
+            _ => false,
+        }
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::Int(i)
+    }
+}
+impl From<f64> for Value {
+    fn from(r: f64) -> Self {
+        Value::Real(r)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+/// `Display` writes the *ClassAd text form* (strings quoted, quantities
+/// with unit suffixes) so that unparsed ads re-parse to the same ad.
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Undefined => write!(f, "UNDEFINED"),
+            Value::Error => write!(f, "ERROR"),
+            Value::Bool(b) => write!(f, "{}", if *b { "TRUE" } else { "FALSE" }),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Real(r) => {
+                if r.fract() == 0.0 && r.abs() < 1e15 {
+                    write!(f, "{:.1}", r)
+                } else {
+                    write!(f, "{r}")
+                }
+            }
+            Value::Quantity { base, rate } => {
+                write!(f, "{}", crate::util::units::format_quantity(*base, *rate))
+            }
+            Value::Str(s) => {
+                write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+            }
+            Value::List(xs) => {
+                write!(f, "{{")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loose_eq_numeric_promotes() {
+        assert_eq!(Value::Int(3).loose_eq(&Value::Real(3.0)), Some(true));
+        assert_eq!(
+            Value::Quantity { base: 1024.0, rate: false }.loose_eq(&Value::Int(1024)),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn loose_eq_strings_case_insensitive() {
+        assert_eq!(
+            Value::from("Hugo.MCS.anl.gov").loose_eq(&Value::from("hugo.mcs.anl.gov")),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn loose_eq_type_mismatch_is_none() {
+        assert_eq!(Value::Int(1).loose_eq(&Value::from("1")), None);
+        assert_eq!(Value::Bool(true).loose_eq(&Value::Int(1)), None);
+    }
+
+    #[test]
+    fn strict_eq_discriminates_types() {
+        assert!(Value::Undefined.strict_eq(&Value::Undefined));
+        assert!(!Value::Int(3).strict_eq(&Value::Real(3.0)));
+        assert!(Value::Real(3.0).strict_eq(&Value::Quantity { base: 3.0, rate: false }));
+        assert!(!Value::from("A").strict_eq(&Value::from("a")));
+    }
+
+    #[test]
+    fn display_round_trip_forms() {
+        assert_eq!(Value::from("a\"b").to_string(), "\"a\\\"b\"");
+        assert_eq!(Value::Bool(true).to_string(), "TRUE");
+        assert_eq!(
+            Value::Quantity { base: 50.0 * 1024f64.powi(3), rate: false }.to_string(),
+            "50G"
+        );
+        assert_eq!(
+            Value::Quantity { base: 75.0 * 1024.0, rate: true }.to_string(),
+            "75K/Sec"
+        );
+    }
+
+    #[test]
+    fn ordering_numeric_and_string() {
+        use std::cmp::Ordering::*;
+        assert_eq!(Value::Int(2).loose_cmp(&Value::Real(3.0)), Some(Less));
+        assert_eq!(Value::from("b").loose_cmp(&Value::from("A")), Some(Greater));
+        assert_eq!(Value::Int(1).loose_cmp(&Value::from("x")), None);
+    }
+}

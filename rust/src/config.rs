@@ -1,0 +1,206 @@
+//! Grid configuration: the parameterization of sites, links and
+//! workloads used by the simulator, the daemons and the benches.
+//!
+//! Configs load from JSON (see `examples/` and `rust/tests/data`) or are
+//! generated procedurally from a seed, so every experiment in
+//! EXPERIMENTS.md is reproducible from its command line.
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Per-site storage + connectivity profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteConfig {
+    pub name: String,
+    pub org: String,
+    /// Local disk streaming rate (bytes/s).
+    pub disk_rate: f64,
+    /// Volume capacity (bytes).
+    pub total_space: f64,
+    /// Initially used fraction [0,1).
+    pub used_frac: f64,
+    /// Mean WAN bandwidth from this site to clients (bytes/s).
+    pub wan_bandwidth: f64,
+    /// Diurnal load swing amplitude as a fraction of the mean [0,1).
+    pub diurnal_amp: f64,
+    /// AR(1) noise: coefficient and innovation std (fraction of mean).
+    pub ar_coeff: f64,
+    pub noise_frac: f64,
+    /// Probability per sample of a heavy-tail congestion episode.
+    pub congestion_prob: f64,
+    /// One-way latency to the client population (seconds).
+    pub latency: f64,
+    /// Average disk-read seek overhead (ms) — the Fig-2 `drdTime`.
+    pub drd_time_ms: f64,
+    /// Average disk-write seek overhead (ms) — the Fig-2 `dwrTime`.
+    pub dwr_time_ms: f64,
+}
+
+/// Whole-grid configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridConfig {
+    pub sites: Vec<SiteConfig>,
+    /// Seed for everything stochastic downstream.
+    pub seed: u64,
+}
+
+impl GridConfig {
+    /// Procedurally generate a heterogeneous grid of `n` sites.
+    ///
+    /// Site profiles span the heterogeneity that makes replica selection
+    /// matter (paper §5): fast well-connected centers, mid-tier
+    /// university sites, and slow/overloaded archives, with parameters
+    /// drawn around 2001-era magnitudes (WAN bandwidths in the
+    /// 100 KB/s – 10 MB/s range; the paper's example ads use 50–75 KB/s).
+    pub fn generate(n: usize, seed: u64) -> GridConfig {
+        let mut rng = Rng::new(seed ^ 0x5173_C0DE);
+        let orgs = ["anl", "lbl", "isi", "ncsa", "sdsc", "olemiss"];
+        let mut sites = Vec::with_capacity(n);
+        for i in 0..n {
+            // Three site tiers with distinct profiles.
+            let tier = match i % 3 {
+                0 => "center",
+                1 => "campus",
+                _ => "archive",
+            };
+            let (bw_lo, bw_hi, amp, cong) = match tier {
+                "center" => (2.0e6, 10.0e6, 0.25, 0.02),
+                "campus" => (200e3, 2.0e6, 0.45, 0.05),
+                _ => (50e3, 400e3, 0.60, 0.10),
+            };
+            let wan = rng.range(bw_lo, bw_hi);
+            sites.push(SiteConfig {
+                name: format!("{}-s{:02}", orgs[i % orgs.len()], i),
+                org: orgs[i % orgs.len()].to_string(),
+                disk_rate: rng.range(10e6, 60e6),
+                total_space: rng.range(20.0, 200.0) * 1024f64.powi(3),
+                used_frac: rng.range(0.1, 0.8),
+                wan_bandwidth: wan,
+                diurnal_amp: amp * rng.range(0.7, 1.3),
+                ar_coeff: rng.range(0.55, 0.9),
+                noise_frac: rng.range(0.08, 0.25),
+                congestion_prob: cong,
+                latency: rng.range(0.01, 0.12),
+                drd_time_ms: rng.range(4.0, 14.0),
+                dwr_time_ms: rng.range(5.0, 16.0),
+            });
+        }
+        GridConfig { sites, seed }
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(src: &str) -> anyhow::Result<GridConfig> {
+        let v = Json::parse(src).context("parsing grid config JSON")?;
+        let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let sites_json = v
+            .get("sites")
+            .and_then(Json::as_arr)
+            .context("config needs a `sites` array")?;
+        let mut sites = Vec::new();
+        for (i, s) in sites_json.iter().enumerate() {
+            let f = |k: &str, d: f64| s.get(k).and_then(Json::as_f64).unwrap_or(d);
+            let name = match s.get("name").and_then(Json::as_str) {
+                Some(n) => n.to_string(),
+                None => bail!("site {i} missing `name`"),
+            };
+            sites.push(SiteConfig {
+                name,
+                org: s
+                    .get("org")
+                    .and_then(Json::as_str)
+                    .unwrap_or("grid")
+                    .to_string(),
+                disk_rate: f("disk_rate", 20e6),
+                total_space: f("total_space", 100.0 * 1024f64.powi(3)),
+                used_frac: f("used_frac", 0.5),
+                wan_bandwidth: f("wan_bandwidth", 1e6),
+                diurnal_amp: f("diurnal_amp", 0.4),
+                ar_coeff: f("ar_coeff", 0.7),
+                noise_frac: f("noise_frac", 0.15),
+                congestion_prob: f("congestion_prob", 0.05),
+                latency: f("latency", 0.05),
+                drd_time_ms: f("drd_time_ms", 8.0),
+                dwr_time_ms: f("dwr_time_ms", 10.0),
+            });
+        }
+        if sites.is_empty() {
+            bail!("config has no sites");
+        }
+        Ok(GridConfig { sites, seed })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let site = |s: &SiteConfig| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(s.name.clone()));
+            m.insert("org".into(), Json::Str(s.org.clone()));
+            m.insert("disk_rate".into(), Json::Num(s.disk_rate));
+            m.insert("total_space".into(), Json::Num(s.total_space));
+            m.insert("used_frac".into(), Json::Num(s.used_frac));
+            m.insert("wan_bandwidth".into(), Json::Num(s.wan_bandwidth));
+            m.insert("diurnal_amp".into(), Json::Num(s.diurnal_amp));
+            m.insert("ar_coeff".into(), Json::Num(s.ar_coeff));
+            m.insert("noise_frac".into(), Json::Num(s.noise_frac));
+            m.insert("congestion_prob".into(), Json::Num(s.congestion_prob));
+            m.insert("latency".into(), Json::Num(s.latency));
+            m.insert("drd_time_ms".into(), Json::Num(s.drd_time_ms));
+            m.insert("dwr_time_ms".into(), Json::Num(s.dwr_time_ms));
+            Json::Obj(m)
+        };
+        let mut top = BTreeMap::new();
+        top.insert("seed".into(), Json::Num(self.seed as f64));
+        top.insert(
+            "sites".into(),
+            Json::Arr(self.sites.iter().map(site).collect()),
+        );
+        Json::Obj(top).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = GridConfig::generate(8, 42);
+        let b = GridConfig::generate(8, 42);
+        assert_eq!(a, b);
+        let c = GridConfig::generate(8, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn generated_sites_are_heterogeneous() {
+        let g = GridConfig::generate(12, 1);
+        let bws: Vec<f64> = g.sites.iter().map(|s| s.wan_bandwidth).collect();
+        let max = bws.iter().cloned().fold(0.0, f64::max);
+        let min = bws.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 3.0, "heterogeneity too low: {min}..{max}");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let g = GridConfig::generate(4, 7);
+        let re = GridConfig::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, re);
+    }
+
+    #[test]
+    fn json_defaults_fill_in() {
+        let g = GridConfig::from_json(r#"{"sites": [{"name": "x"}]}"#).unwrap();
+        assert_eq!(g.sites[0].name, "x");
+        assert!(g.sites[0].wan_bandwidth > 0.0);
+    }
+
+    #[test]
+    fn json_errors() {
+        assert!(GridConfig::from_json("{}").is_err());
+        assert!(GridConfig::from_json(r#"{"sites": [{}]}"#).is_err());
+        assert!(GridConfig::from_json("notjson").is_err());
+    }
+}

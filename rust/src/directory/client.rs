@@ -1,0 +1,132 @@
+//! Directory client: the broker side of the GRIS/GIIS protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use thiserror::Error;
+
+use super::dit::Scope;
+use super::entry::{Dn, Entry};
+use super::filter::Filter;
+use super::ldif::parse_ldif;
+use super::proto::{Request, END_MARK};
+
+#[derive(Debug, Error)]
+pub enum ClientError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("server error: {0}")]
+    Server(String),
+    #[error("malformed response: {0}")]
+    Malformed(String),
+    #[error("ldif: {0}")]
+    Ldif(#[from] super::ldif::LdifError),
+}
+
+/// A connected directory client (one TCP session; requests are
+/// pipelined sequentially).
+pub struct DirectoryClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl DirectoryClient {
+    /// Connect with a default 5s timeout.
+    pub fn connect(addr: &str) -> Result<DirectoryClient, ClientError> {
+        Self::connect_timeout(addr, Duration::from_secs(5))
+    }
+
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<DirectoryClient, ClientError> {
+        let sock_addr = addr
+            .parse()
+            .map_err(|e| ClientError::Malformed(format!("bad addr {addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(DirectoryClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<(String, String), ClientError> {
+        self.writer.write_all(req.encode().as_bytes())?;
+        self.writer.flush()?;
+        let mut status = String::new();
+        if self.reader.read_line(&mut status)? == 0 {
+            return Err(ClientError::Malformed("connection closed".into()));
+        }
+        let status = status.trim_end().to_string();
+        let mut body = String::new();
+        if status != "BYE" {
+            loop {
+                let mut line = String::new();
+                if self.reader.read_line(&mut line)? == 0 {
+                    return Err(ClientError::Malformed("truncated response".into()));
+                }
+                if line.trim_end() == END_MARK {
+                    break;
+                }
+                body.push_str(&line);
+            }
+        }
+        if let Some(err) = status.strip_prefix("ERR\t") {
+            return Err(ClientError::Server(err.to_string()));
+        }
+        Ok((status, body))
+    }
+
+    /// LDAP-style search.
+    pub fn search(
+        &mut self,
+        base: &Dn,
+        scope: Scope,
+        filter: &Filter,
+    ) -> Result<Vec<Entry>, ClientError> {
+        let (_status, body) = self.roundtrip(&Request::Search {
+            base: base.clone(),
+            scope,
+            filter: filter.clone(),
+        })?;
+        Ok(parse_ldif(&body)?)
+    }
+
+    /// Register a GRIS with a GIIS.
+    pub fn register(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base: &Dn,
+        summary: Vec<(String, String)>,
+    ) -> Result<(), ClientError> {
+        self.roundtrip(&Request::Register {
+            site: site.into(),
+            addr: addr.into(),
+            base: base.clone(),
+            summary,
+        })?;
+        Ok(())
+    }
+
+    /// Broad GIIS discovery.
+    pub fn discover(&mut self, filter: &Filter) -> Result<Vec<Entry>, ClientError> {
+        let (_s, body) = self.roundtrip(&Request::Discover { filter: filter.clone() })?;
+        Ok(parse_ldif(&body)?)
+    }
+
+    /// All registrations on a GIIS.
+    pub fn list(&mut self) -> Result<Vec<Entry>, ClientError> {
+        let (_s, body) = self.roundtrip(&Request::List)?;
+        Ok(parse_ldif(&body)?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool, ClientError> {
+        let (status, _) = self.roundtrip(&Request::Ping)?;
+        Ok(status == "PONG")
+    }
+
+    pub fn quit(mut self) {
+        let _ = self.roundtrip(&Request::Quit);
+    }
+}

@@ -1,0 +1,284 @@
+//! The Directory Information Tree: an in-memory entry store with
+//! base/scope/filter search (the core of a GRIS/GIIS server).
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+use super::entry::{Dn, Entry};
+use super::filter::Filter;
+
+/// LDAP search scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// The base entry only.
+    Base,
+    /// Direct children of the base.
+    One,
+    /// The base and all descendants.
+    Sub,
+}
+
+impl Scope {
+    pub fn parse(s: &str) -> Option<Scope> {
+        match s.to_ascii_lowercase().as_str() {
+            "base" => Some(Scope::Base),
+            "one" | "onelevel" => Some(Scope::One),
+            "sub" | "subtree" => Some(Scope::Sub),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Scope::Base => "base",
+            Scope::One => "one",
+            Scope::Sub => "sub",
+        }
+    }
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum DitError {
+    #[error("entry {0} already exists")]
+    Exists(String),
+    #[error("parent of {0} not found")]
+    NoParent(String),
+    #[error("entry {0} not found")]
+    NotFound(String),
+}
+
+/// In-memory DIT. Entries are keyed by *normalized* DN; a BTreeMap keeps
+/// deterministic iteration order (stable search results).
+#[derive(Debug, Default, Clone)]
+pub struct Dit {
+    entries: BTreeMap<String, Entry>,
+}
+
+fn key(dn: &Dn) -> String {
+    dn.to_string().to_ascii_lowercase()
+}
+
+impl Dit {
+    pub fn new() -> Dit {
+        Dit::default()
+    }
+
+    /// Add an entry; its parent must exist (or be the root).
+    pub fn add(&mut self, entry: Entry) -> Result<(), DitError> {
+        let k = key(&entry.dn);
+        if self.entries.contains_key(&k) {
+            return Err(DitError::Exists(entry.dn.to_string()));
+        }
+        if let Some(parent) = entry.dn.parent() {
+            if !parent.is_root() && !self.entries.contains_key(&key(&parent)) {
+                return Err(DitError::NoParent(entry.dn.to_string()));
+            }
+        }
+        self.entries.insert(k, entry);
+        Ok(())
+    }
+
+    /// Add an entry, creating any missing ancestors as plain
+    /// `organizationalUnit`-ish scaffolding entries.
+    pub fn add_with_ancestors(&mut self, entry: Entry) -> Result<(), DitError> {
+        let mut chain = Vec::new();
+        let mut cur = entry.dn.parent();
+        while let Some(dn) = cur {
+            if dn.is_root() || self.entries.contains_key(&key(&dn)) {
+                break;
+            }
+            chain.push(dn.clone());
+            cur = dn.parent();
+        }
+        for dn in chain.into_iter().rev() {
+            let mut e = Entry::new(dn.clone());
+            e.add("objectClass", "GridOrganizationalNode");
+            if let Some((attr, val)) = dn.rdn() {
+                e.put(attr, val);
+            }
+            self.entries.insert(key(&dn), e);
+        }
+        self.add(entry)
+    }
+
+    /// Replace an existing entry (same DN).
+    pub fn replace(&mut self, entry: Entry) -> Result<(), DitError> {
+        let k = key(&entry.dn);
+        if !self.entries.contains_key(&k) {
+            return Err(DitError::NotFound(entry.dn.to_string()));
+        }
+        self.entries.insert(k, entry);
+        Ok(())
+    }
+
+    /// Insert-or-replace.
+    pub fn upsert(&mut self, entry: Entry) {
+        self.entries.insert(key(&entry.dn), entry);
+    }
+
+    pub fn remove(&mut self, dn: &Dn) -> Option<Entry> {
+        self.entries.remove(&key(dn))
+    }
+
+    pub fn get(&self, dn: &Dn) -> Option<&Entry> {
+        self.entries.get(&key(dn))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.values()
+    }
+
+    /// LDAP search: all entries under `base` within `scope` satisfying
+    /// `filter`.
+    pub fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<&Entry> {
+        self.entries
+            .values()
+            .filter(|e| match scope {
+                Scope::Base => &e.dn == base,
+                Scope::One => e.dn.parent().as_ref() == Some(base),
+                Scope::Sub => e.dn.under(base),
+            })
+            .filter(|e| filter.matches(e))
+            .collect()
+    }
+
+    /// Render the tree as indented text (the Figure-3 DIT view used by
+    /// the `gris_explorer` example).
+    pub fn render_tree(&self) -> String {
+        let mut out = String::new();
+        let mut dns: Vec<&Entry> = self.entries.values().collect();
+        dns.sort_by_key(|e| (e.dn.depth(), e.dn.to_string()));
+        for e in dns {
+            let indent = "  ".repeat(e.dn.depth().saturating_sub(1));
+            let rdn = e
+                .dn
+                .rdn()
+                .map(|(a, v)| format!("{a}={v}"))
+                .unwrap_or_else(|| "<root>".into());
+            let classes = e.object_classes().join(",");
+            out.push_str(&format!("{indent}{rdn}  [{classes}]\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site_dit() -> Dit {
+        let mut d = Dit::new();
+        let mk = |dn: &str, class: &str| {
+            let mut e = Entry::new(Dn::parse(dn).unwrap());
+            e.add("objectClass", class);
+            e
+        };
+        d.add(mk("o=grid", "GridTop")).unwrap();
+        d.add(mk("o=anl, o=grid", "GridOrganization")).unwrap();
+        d.add(mk("ou=mcs, o=anl, o=grid", "GridOrganizationalUnit")).unwrap();
+        let mut vol = mk("gss=vol0, ou=mcs, o=anl, o=grid", "GridStorageServerVolume");
+        vol.put("availableSpace", "53687091200");
+        d.add(vol).unwrap();
+        let mut bw = mk(
+            "gss=bw, gss=vol0, ou=mcs, o=anl, o=grid",
+            "GridStorageTransferBandwidth",
+        );
+        bw.put("AvgRDBandwidth", "81920");
+        d.add(bw).unwrap();
+        d
+    }
+
+    #[test]
+    fn add_requires_parent() {
+        let mut d = Dit::new();
+        let e = Entry::new(Dn::parse("ou=mcs, o=anl, o=grid").unwrap());
+        assert!(matches!(d.add(e), Err(DitError::NoParent(_))));
+    }
+
+    #[test]
+    fn add_with_ancestors_scaffolds() {
+        let mut d = Dit::new();
+        let e = Entry::new(Dn::parse("gss=vol0, ou=mcs, o=anl, o=grid").unwrap());
+        d.add_with_ancestors(e).unwrap();
+        assert_eq!(d.len(), 4);
+        assert!(d.get(&Dn::parse("o=anl, o=grid").unwrap()).is_some());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut d = Dit::new();
+        d.add(Entry::new(Dn::parse("o=grid").unwrap())).unwrap();
+        assert!(matches!(
+            d.add(Entry::new(Dn::parse("o=grid").unwrap())),
+            Err(DitError::Exists(_))
+        ));
+    }
+
+    #[test]
+    fn search_scopes() {
+        let d = site_dit();
+        let all = Filter::parse("(objectClass=*)").unwrap();
+        let base = Dn::parse("ou=mcs, o=anl, o=grid").unwrap();
+        assert_eq!(d.search(&base, Scope::Base, &all).len(), 1);
+        assert_eq!(d.search(&base, Scope::One, &all).len(), 1);
+        assert_eq!(d.search(&base, Scope::Sub, &all).len(), 3);
+        let root = Dn::parse("o=grid").unwrap();
+        assert_eq!(d.search(&root, Scope::Sub, &all).len(), 5);
+    }
+
+    #[test]
+    fn search_with_filter() {
+        let d = site_dit();
+        let root = Dn::parse("o=grid").unwrap();
+        let f = Filter::parse("(&(objectClass=GridStorage*)(availableSpace>=1))").unwrap();
+        let hits = d.search(&root, Scope::Sub, &f);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].dn.rdn().unwrap().1, "vol0");
+    }
+
+    #[test]
+    fn drill_down_pattern() {
+        // The paper's GIIS→GRIS pattern: find volumes broadly, then read
+        // one entry precisely.
+        let d = site_dit();
+        let f = Filter::parse("(objectClass=GridStorageTransferBandwidth)").unwrap();
+        let hits = d.search(&Dn::parse("o=grid").unwrap(), Scope::Sub, &f);
+        assert_eq!(hits.len(), 1);
+        let precise = d.get(&hits[0].dn).unwrap();
+        assert_eq!(precise.f64("AvgRDBandwidth").unwrap(), 81920.0);
+    }
+
+    #[test]
+    fn render_tree_shape() {
+        let text = site_dit().render_tree();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].starts_with("o=grid"));
+        assert!(lines[4].contains("gss=bw"));
+        assert!(lines[4].starts_with("        ")); // depth-5 indent
+    }
+
+    #[test]
+    fn upsert_and_replace() {
+        let mut d = site_dit();
+        let dn = Dn::parse("gss=vol0, ou=mcs, o=anl, o=grid").unwrap();
+        let mut e = Entry::new(dn.clone());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put("availableSpace", "1");
+        d.replace(e.clone()).unwrap();
+        assert_eq!(d.get(&dn).unwrap().f64("availableSpace").unwrap(), 1.0);
+        d.remove(&dn).unwrap();
+        assert!(d.replace(e.clone()).is_err());
+        d.upsert(e);
+        assert!(d.get(&dn).is_some());
+    }
+}

@@ -1,0 +1,247 @@
+//! Directory entries: distinguished names and multi-valued attributes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum DnError {
+    #[error("empty DN component in {0:?}")]
+    EmptyComponent(String),
+    #[error("missing '=' in RDN {0:?}")]
+    MissingEquals(String),
+}
+
+/// A distinguished name: ordered RDNs, most specific first, e.g.
+/// `gss=volume0, ou=storage, o=anl, o=grid`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Dn {
+    rdns: Vec<(String, String)>, // (attr, value), lowercased attr
+}
+
+impl Dn {
+    pub fn root() -> Dn {
+        Dn::default()
+    }
+
+    /// Parse `a=b,c=d,...`. Whitespace around components is ignored.
+    pub fn parse(s: &str) -> Result<Dn, DnError> {
+        let t = s.trim();
+        if t.is_empty() {
+            return Ok(Dn::root());
+        }
+        let mut rdns = Vec::new();
+        for part in t.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                return Err(DnError::EmptyComponent(s.to_string()));
+            }
+            let (a, v) = p.split_once('=').ok_or_else(|| DnError::MissingEquals(p.to_string()))?;
+            rdns.push((a.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        Ok(Dn { rdns })
+    }
+
+    /// Child DN: `rdn` prepended to `self`.
+    pub fn child(&self, attr: &str, value: &str) -> Dn {
+        let mut rdns = Vec::with_capacity(self.rdns.len() + 1);
+        rdns.push((attr.to_ascii_lowercase(), value.to_string()));
+        rdns.extend(self.rdns.iter().cloned());
+        Dn { rdns }
+    }
+
+    /// Parent DN (None at the root).
+    pub fn parent(&self) -> Option<Dn> {
+        if self.rdns.is_empty() {
+            None
+        } else {
+            Some(Dn { rdns: self.rdns[1..].to_vec() })
+        }
+    }
+
+    /// The leading (most specific) RDN.
+    pub fn rdn(&self) -> Option<(&str, &str)> {
+        self.rdns.first().map(|(a, v)| (a.as_str(), v.as_str()))
+    }
+
+    /// Number of RDN components.
+    pub fn depth(&self) -> usize {
+        self.rdns.len()
+    }
+
+    /// Is `self` equal to or under `base`?
+    pub fn under(&self, base: &Dn) -> bool {
+        let n = base.rdns.len();
+        self.rdns.len() >= n && self.rdns[self.rdns.len() - n..] == base.rdns[..]
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rdns.is_empty()
+    }
+}
+
+impl fmt::Display for Dn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, (a, v)) in self.rdns.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{a}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A directory entry: a DN plus case-insensitive, multi-valued
+/// attributes (insertion order of values preserved).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Entry {
+    pub dn: Dn,
+    attrs: BTreeMap<String, Vec<String>>, // key lowercased
+    names: BTreeMap<String, String>,      // lowercased -> display name
+}
+
+impl Entry {
+    pub fn new(dn: Dn) -> Entry {
+        Entry { dn, ..Default::default() }
+    }
+
+    /// Add a value to an attribute (multi-valued append).
+    pub fn add(&mut self, attr: &str, value: impl Into<String>) -> &mut Self {
+        let key = attr.to_ascii_lowercase();
+        self.names.entry(key.clone()).or_insert_with(|| attr.to_string());
+        self.attrs.entry(key).or_default().push(value.into());
+        self
+    }
+
+    /// Replace all values of an attribute.
+    pub fn put(&mut self, attr: &str, value: impl Into<String>) -> &mut Self {
+        let key = attr.to_ascii_lowercase();
+        self.names.insert(key.clone(), attr.to_string());
+        self.attrs.insert(key, vec![value.into()]);
+        self
+    }
+
+    /// Replace with a float value (canonical formatting).
+    pub fn put_f64(&mut self, attr: &str, value: f64) -> &mut Self {
+        self.put(attr, format_f64(value))
+    }
+
+    pub fn get(&self, attr: &str) -> Option<&[String]> {
+        self.attrs.get(&attr.to_ascii_lowercase()).map(|v| v.as_slice())
+    }
+
+    pub fn first(&self, attr: &str) -> Option<&str> {
+        self.get(attr).and_then(|v| v.first()).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, attr: &str) -> Option<f64> {
+        self.first(attr).and_then(|s| s.trim().parse().ok())
+    }
+
+    pub fn has(&self, attr: &str) -> bool {
+        self.attrs.contains_key(&attr.to_ascii_lowercase())
+    }
+
+    pub fn remove(&mut self, attr: &str) -> bool {
+        let key = attr.to_ascii_lowercase();
+        self.names.remove(&key);
+        self.attrs.remove(&key).is_some()
+    }
+
+    /// Iterate attributes as (display_name, values), sorted by key.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[String])> {
+        self.attrs.iter().map(|(k, v)| {
+            (
+                self.names.get(k).map(|s| s.as_str()).unwrap_or(k.as_str()),
+                v.as_slice(),
+            )
+        })
+    }
+
+    /// The entry's objectClass values.
+    pub fn object_classes(&self) -> Vec<&str> {
+        self.get("objectclass")
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn attr_count(&self) -> usize {
+        self.attrs.len()
+    }
+}
+
+/// Canonical float formatting used across GRIS attributes so values
+/// round-trip through LDIF text deterministically.
+pub fn format_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dn_parse_display_round_trip() {
+        let dn = Dn::parse("gss=volume0, ou=storage, o=anl, o=grid").unwrap();
+        assert_eq!(dn.depth(), 4);
+        assert_eq!(dn.to_string(), "gss=volume0, ou=storage, o=anl, o=grid");
+        assert_eq!(dn.rdn(), Some(("gss", "volume0")));
+    }
+
+    #[test]
+    fn dn_parent_child() {
+        let base = Dn::parse("o=grid").unwrap();
+        let child = base.child("o", "anl").child("ou", "storage");
+        assert_eq!(child.to_string(), "ou=storage, o=anl, o=grid");
+        assert_eq!(child.parent().unwrap().to_string(), "o=anl, o=grid");
+        assert!(child.under(&base));
+        assert!(!base.under(&child));
+        assert!(child.under(&child));
+    }
+
+    #[test]
+    fn dn_attr_case_insensitive() {
+        let a = Dn::parse("OU=Storage, O=Grid").unwrap();
+        let b = Dn::parse("ou=Storage, o=Grid").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dn_errors() {
+        assert!(Dn::parse("a=b,,c=d").is_err());
+        assert!(Dn::parse("nodelimiter").is_err());
+    }
+
+    #[test]
+    fn entry_multi_valued() {
+        let mut e = Entry::new(Dn::parse("o=grid").unwrap());
+        e.add("filesystem", "ext3").add("filesystem", "xfs");
+        assert_eq!(e.get("FILESYSTEM").unwrap(), &["ext3", "xfs"]);
+        e.put("filesystem", "zfs");
+        assert_eq!(e.get("filesystem").unwrap(), &["zfs"]);
+    }
+
+    #[test]
+    fn entry_numeric_round_trip() {
+        let mut e = Entry::new(Dn::root());
+        e.put_f64("availableSpace", 53687091200.0);
+        assert_eq!(e.first("availablespace").unwrap(), "53687091200");
+        assert_eq!(e.f64("availableSpace").unwrap(), 53687091200.0);
+        e.put_f64("drdTime", 8.5);
+        assert_eq!(e.first("drdtime").unwrap(), "8.5");
+    }
+
+    #[test]
+    fn entry_preserves_display_name() {
+        let mut e = Entry::new(Dn::root());
+        e.put("MaxRDBandwidth", "1");
+        let names: Vec<_> = e.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["MaxRDBandwidth"]);
+    }
+}

@@ -1,0 +1,320 @@
+//! LDAP search filters (RFC 2254 subset): `(&(objectClass=GridStorage*)
+//! (availableSpace>=5368709120))`, with `&`, `|`, `!`, equality,
+//! `>=`, `<=`, presence (`=*`) and substring (`=a*b*c`) matches.
+//!
+//! Numeric comparison applies when both sides parse as numbers (GRIS
+//! attributes are numeric strings), falling back to case-insensitive
+//! string ordering otherwise — matching how the paper's broker builds
+//! "specialized LDAP search queries" from ClassAd constraints.
+
+use thiserror::Error;
+
+use super::entry::Entry;
+
+/// A parsed search filter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Filter {
+    And(Vec<Filter>),
+    Or(Vec<Filter>),
+    Not(Box<Filter>),
+    /// attr = value (value may contain `*` wildcards; bare `*` = present)
+    Eq(String, String),
+    Ge(String, String),
+    Le(String, String),
+    Present(String),
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum FilterError {
+    #[error("unexpected end of filter")]
+    Eof,
+    #[error("expected {0:?} at byte {1}")]
+    Expected(char, usize),
+    #[error("empty attribute at byte {0}")]
+    EmptyAttr(usize),
+    #[error("trailing data at byte {0}")]
+    Trailing(usize),
+}
+
+impl Filter {
+    /// Parse a filter string. A filter with no outer parens is accepted
+    /// as a single comparison (`a>=1`).
+    pub fn parse(src: &str) -> Result<Filter, FilterError> {
+        let b = src.trim().as_bytes();
+        let mut pos = 0usize;
+        let f = parse_filter(b, &mut pos)?;
+        if pos != b.len() {
+            return Err(FilterError::Trailing(pos));
+        }
+        Ok(f)
+    }
+
+    /// Does `entry` satisfy the filter?
+    pub fn matches(&self, entry: &Entry) -> bool {
+        match self {
+            Filter::And(fs) => fs.iter().all(|f| f.matches(entry)),
+            Filter::Or(fs) => fs.iter().any(|f| f.matches(entry)),
+            Filter::Not(f) => !f.matches(entry),
+            Filter::Present(attr) => entry.has(attr),
+            Filter::Eq(attr, pattern) => entry
+                .get(attr)
+                .map(|vals| vals.iter().any(|v| wildcard_match(pattern, v)))
+                .unwrap_or(false),
+            Filter::Ge(attr, rhs) => cmp_any(entry, attr, rhs, |o| o >= 0),
+            Filter::Le(attr, rhs) => cmp_any(entry, attr, rhs, |o| o <= 0),
+        }
+    }
+}
+
+fn cmp_any(entry: &Entry, attr: &str, rhs: &str, ok: impl Fn(i32) -> bool) -> bool {
+    let Some(vals) = entry.get(attr) else {
+        return false;
+    };
+    vals.iter().any(|v| {
+        let ord = match (v.trim().parse::<f64>(), rhs.trim().parse::<f64>()) {
+            (Ok(a), Ok(b)) => a.partial_cmp(&b).map(|o| o as i32).unwrap_or(0),
+            _ => v
+                .to_ascii_lowercase()
+                .cmp(&rhs.to_ascii_lowercase()) as i32,
+        };
+        ok(ord)
+    })
+}
+
+/// Case-insensitive `*`-wildcard match.
+fn wildcard_match(pattern: &str, value: &str) -> bool {
+    let p: Vec<char> = pattern.to_ascii_lowercase().chars().collect();
+    let v: Vec<char> = value.to_ascii_lowercase().chars().collect();
+    // Dynamic programming over (pattern, value) positions.
+    let (np, nv) = (p.len(), v.len());
+    let mut dp = vec![false; nv + 1];
+    dp[0] = true;
+    for i in 0..np {
+        if p[i] == '*' {
+            for j in 1..=nv {
+                dp[j] = dp[j] || dp[j - 1];
+            }
+        } else {
+            let mut prev = dp[0];
+            dp[0] = false;
+            for j in 1..=nv {
+                let cur = dp[j];
+                dp[j] = prev && p[i] == v[j - 1];
+                prev = cur;
+            }
+        }
+    }
+    dp[nv]
+}
+
+fn parse_filter(b: &[u8], pos: &mut usize) -> Result<Filter, FilterError> {
+    skip_ws(b, pos);
+    if b.get(*pos) != Some(&b'(') {
+        // bare comparison
+        return parse_item(b, pos, b.len());
+    }
+    *pos += 1;
+    skip_ws(b, pos);
+    let f = match b.get(*pos) {
+        Some(b'&') => {
+            *pos += 1;
+            Filter::And(parse_list(b, pos)?)
+        }
+        Some(b'|') => {
+            *pos += 1;
+            Filter::Or(parse_list(b, pos)?)
+        }
+        Some(b'!') => {
+            *pos += 1;
+            let inner = parse_filter(b, pos)?;
+            Filter::Not(Box::new(inner))
+        }
+        Some(_) => {
+            // find closing paren at depth 0
+            let close = find_close(b, *pos)?;
+            let item = parse_item(b, pos, close)?;
+            item
+        }
+        None => return Err(FilterError::Eof),
+    };
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b')') => {
+            *pos += 1;
+            Ok(f)
+        }
+        Some(_) => Err(FilterError::Expected(')', *pos)),
+        None => Err(FilterError::Eof),
+    }
+}
+
+fn parse_list(b: &[u8], pos: &mut usize) -> Result<Vec<Filter>, FilterError> {
+    let mut items = Vec::new();
+    loop {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'(') => items.push(parse_filter(b, pos)?),
+            Some(b')') => break,
+            Some(_) => return Err(FilterError::Expected('(', *pos)),
+            None => return Err(FilterError::Eof),
+        }
+    }
+    Ok(items)
+}
+
+fn find_close(b: &[u8], from: usize) -> Result<usize, FilterError> {
+    let mut i = from;
+    while i < b.len() {
+        if b[i] == b')' {
+            return Ok(i);
+        }
+        i += 1;
+    }
+    Err(FilterError::Eof)
+}
+
+/// Parse `attr OP value` within `b[*pos..end]`.
+fn parse_item(b: &[u8], pos: &mut usize, end: usize) -> Result<Filter, FilterError> {
+    let seg = std::str::from_utf8(&b[*pos..end]).map_err(|_| FilterError::Eof)?;
+    let (attr, op, value) = if let Some(i) = seg.find(">=") {
+        (&seg[..i], ">=", &seg[i + 2..])
+    } else if let Some(i) = seg.find("<=") {
+        (&seg[..i], "<=", &seg[i + 2..])
+    } else if let Some(i) = seg.find('=') {
+        (&seg[..i], "=", &seg[i + 1..])
+    } else {
+        return Err(FilterError::Expected('=', *pos));
+    };
+    let attr = attr.trim();
+    if attr.is_empty() {
+        return Err(FilterError::EmptyAttr(*pos));
+    }
+    let value = value.trim();
+    *pos = end;
+    Ok(match op {
+        ">=" => Filter::Ge(attr.to_string(), value.to_string()),
+        "<=" => Filter::Le(attr.to_string(), value.to_string()),
+        _ if value == "*" => Filter::Present(attr.to_string()),
+        _ => Filter::Eq(attr.to_string(), value.to_string()),
+    })
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while b.get(*pos).map(|c| c.is_ascii_whitespace()).unwrap_or(false) {
+        *pos += 1;
+    }
+}
+
+impl std::fmt::Display for Filter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Filter::And(fs) => {
+                write!(f, "(&")?;
+                for x in fs {
+                    write!(f, "{x}")?;
+                }
+                write!(f, ")")
+            }
+            Filter::Or(fs) => {
+                write!(f, "(|")?;
+                for x in fs {
+                    write!(f, "{x}")?;
+                }
+                write!(f, ")")
+            }
+            Filter::Not(x) => write!(f, "(!{x})"),
+            Filter::Eq(a, v) => write!(f, "({a}={v})"),
+            Filter::Ge(a, v) => write!(f, "({a}>={v})"),
+            Filter::Le(a, v) => write!(f, "({a}<={v})"),
+            Filter::Present(a) => write!(f, "({a}=*)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::directory::entry::Dn;
+
+    fn entry() -> Entry {
+        let mut e = Entry::new(Dn::parse("gss=vol0, o=grid").unwrap());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put("availableSpace", "53687091200"); // 50G
+        e.put("totalSpace", "107374182400");
+        e.put("mountPoint", "/dev/sandbox");
+        e.add("filesystem", "ext3");
+        e.add("filesystem", "xfs");
+        e
+    }
+
+    #[test]
+    fn equality_and_presence() {
+        let e = entry();
+        assert!(Filter::parse("(mountPoint=/dev/sandbox)").unwrap().matches(&e));
+        assert!(Filter::parse("(availableSpace=*)").unwrap().matches(&e));
+        assert!(!Filter::parse("(nonexistent=*)").unwrap().matches(&e));
+    }
+
+    #[test]
+    fn numeric_comparisons() {
+        let e = entry();
+        assert!(Filter::parse("(availableSpace>=5368709120)").unwrap().matches(&e));
+        assert!(!Filter::parse("(availableSpace>=999999999999)").unwrap().matches(&e));
+        assert!(Filter::parse("(availableSpace<=107374182400)").unwrap().matches(&e));
+    }
+
+    #[test]
+    fn boolean_composition() {
+        let e = entry();
+        let f = Filter::parse(
+            "(&(objectClass=GridStorage*)(availableSpace>=1)(|(filesystem=xfs)(filesystem=zfs)))",
+        )
+        .unwrap();
+        assert!(f.matches(&e));
+        let g = Filter::parse("(!(mountPoint=/dev/sandbox))").unwrap();
+        assert!(!g.matches(&e));
+    }
+
+    #[test]
+    fn wildcards() {
+        let e = entry();
+        assert!(Filter::parse("(objectClass=Grid*Volume)").unwrap().matches(&e));
+        assert!(Filter::parse("(mountPoint=*sand*)").unwrap().matches(&e));
+        assert!(!Filter::parse("(mountPoint=sand*)").unwrap().matches(&e));
+        // multi-valued: any value may match
+        assert!(Filter::parse("(filesystem=x*)").unwrap().matches(&e));
+    }
+
+    #[test]
+    fn case_insensitive_matching() {
+        let e = entry();
+        assert!(Filter::parse("(MOUNTPOINT=/DEV/SANDBOX)").unwrap().matches(&e));
+        assert!(Filter::parse("(objectclass=gridstorage*)").unwrap().matches(&e));
+    }
+
+    #[test]
+    fn display_round_trip() {
+        for s in [
+            "(&(a=1)(b>=2))",
+            "(|(a=x*)(!(b<=3)))",
+            "(present=*)",
+        ] {
+            let f = Filter::parse(s).unwrap();
+            assert_eq!(Filter::parse(&f.to_string()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn bare_comparison_accepted() {
+        let e = entry();
+        assert!(Filter::parse("availableSpace>=1").unwrap().matches(&e));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Filter::parse("(&(a=1)").is_err());
+        assert!(Filter::parse("(=v)").is_err());
+        assert!(Filter::parse("(a=1))").is_err());
+        assert!(Filter::parse("(noop)").is_err());
+    }
+}

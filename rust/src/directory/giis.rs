@@ -1,0 +1,188 @@
+//! GIIS — the Grid Index Information Service.
+//!
+//! GRIS servers register here; clients direct *broad* queries at the
+//! GIIS to discover resources, then drill down with direct GRIS queries
+//! for fresh detail (paper §3). Registrations carry a TTL and must be
+//! refreshed, mirroring MDS soft-state registration.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use super::entry::{Dn, Entry};
+use super::filter::Filter;
+
+/// One GRIS registration record.
+#[derive(Debug, Clone)]
+pub struct Registration {
+    pub site: String,
+    /// host:port of the GRIS server.
+    pub addr: String,
+    /// Base DN the GRIS serves.
+    pub base_dn: Dn,
+    /// Coarse summary attributes pushed with the registration (lets the
+    /// GIIS answer broad queries without fanning out).
+    pub summary: Vec<(String, String)>,
+    registered_at: Instant,
+    ttl: Duration,
+}
+
+impl Registration {
+    pub fn expired(&self) -> bool {
+        self.registered_at.elapsed() > self.ttl
+    }
+}
+
+/// The index service.
+#[derive(Debug, Default)]
+pub struct Giis {
+    regs: BTreeMap<String, Registration>,
+    default_ttl: Duration,
+}
+
+impl Giis {
+    pub fn new() -> Giis {
+        Giis { regs: BTreeMap::new(), default_ttl: Duration::from_secs(300) }
+    }
+
+    pub fn with_ttl(ttl: Duration) -> Giis {
+        Giis { regs: BTreeMap::new(), default_ttl: ttl }
+    }
+
+    /// Register (or refresh) a GRIS.
+    pub fn register(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base_dn: Dn,
+        summary: Vec<(String, String)>,
+    ) {
+        self.regs.insert(
+            site.to_ascii_lowercase(),
+            Registration {
+                site: site.to_string(),
+                addr: addr.to_string(),
+                base_dn,
+                summary,
+                registered_at: Instant::now(),
+                ttl: self.default_ttl,
+            },
+        );
+    }
+
+    pub fn unregister(&mut self, site: &str) -> bool {
+        self.regs.remove(&site.to_ascii_lowercase()).is_some()
+    }
+
+    /// Drop expired registrations; returns how many were removed.
+    pub fn sweep(&mut self) -> usize {
+        let before = self.regs.len();
+        self.regs.retain(|_, r| !r.expired());
+        before - self.regs.len()
+    }
+
+    /// All live registrations.
+    pub fn registrations(&self) -> Vec<&Registration> {
+        self.regs.values().filter(|r| !r.expired()).collect()
+    }
+
+    pub fn lookup(&self, site: &str) -> Option<&Registration> {
+        self.regs
+            .get(&site.to_ascii_lowercase())
+            .filter(|r| !r.expired())
+    }
+
+    /// Broad discovery: match registrations' summary attributes against
+    /// an LDAP filter (each registration is viewed as one entry).
+    pub fn discover(&self, filter: &Filter) -> Vec<&Registration> {
+        self.registrations()
+            .into_iter()
+            .filter(|r| filter.matches(&registration_entry(r)))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.registrations().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// View a registration as a directory entry (`objectClass=
+/// GridServiceRegistration`) so filters apply uniformly.
+pub fn registration_entry(r: &Registration) -> Entry {
+    let mut e = Entry::new(Dn::parse(&format!("site={}, o=giis", r.site)).unwrap());
+    e.add("objectClass", "GridServiceRegistration");
+    e.put("site", &r.site);
+    e.put("addr", &r.addr);
+    e.put("baseDn", r.base_dn.to_string());
+    for (k, v) in &r.summary {
+        e.add(k, v.clone());
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dn(site: &str) -> Dn {
+        Dn::parse(&format!("ou={site}, o=anl, o=grid")).unwrap()
+    }
+
+    #[test]
+    fn register_lookup_unregister() {
+        let mut g = Giis::new();
+        g.register("mcs", "127.0.0.1:9001", dn("mcs"), vec![]);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.lookup("MCS").unwrap().addr, "127.0.0.1:9001");
+        assert!(g.unregister("mcs"));
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn refresh_replaces() {
+        let mut g = Giis::new();
+        g.register("mcs", "127.0.0.1:9001", dn("mcs"), vec![]);
+        g.register("mcs", "127.0.0.1:9002", dn("mcs"), vec![]);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.lookup("mcs").unwrap().addr, "127.0.0.1:9002");
+    }
+
+    #[test]
+    fn ttl_expiry_and_sweep() {
+        let mut g = Giis::with_ttl(Duration::from_millis(10));
+        g.register("mcs", "a:1", dn("mcs"), vec![]);
+        assert_eq!(g.len(), 1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(g.len(), 0);
+        assert!(g.lookup("mcs").is_none());
+        assert_eq!(g.sweep(), 1);
+    }
+
+    #[test]
+    fn discover_filters_on_summary() {
+        let mut g = Giis::new();
+        g.register(
+            "mcs",
+            "a:1",
+            dn("mcs"),
+            vec![("storageType".into(), "disk".into()), ("totalSpace".into(), "100".into())],
+        );
+        g.register(
+            "hpss",
+            "b:2",
+            dn("hpss"),
+            vec![("storageType".into(), "tape".into()), ("totalSpace".into(), "90000".into())],
+        );
+        let disk = g.discover(&Filter::parse("(storageType=disk)").unwrap());
+        assert_eq!(disk.len(), 1);
+        assert_eq!(disk[0].site, "mcs");
+        let big = g.discover(&Filter::parse("(totalSpace>=1000)").unwrap());
+        assert_eq!(big.len(), 1);
+        assert_eq!(big[0].site, "hpss");
+        let all = g.discover(&Filter::parse("(objectClass=GridServiceRegistration)").unwrap());
+        assert_eq!(all.len(), 2);
+    }
+}

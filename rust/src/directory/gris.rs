@@ -1,0 +1,212 @@
+//! GRIS — the per-resource Grid Resource Information Service.
+//!
+//! Each storage site runs one (paper §3.1). Static attributes (seek
+//! times, policies) come from the site's configuration; *dynamic*
+//! attributes (availableSpace, load, bandwidth history) are produced at
+//! query time by registered **providers** — the analog of the OpenLDAP
+//! "shell backend" scripts the paper describes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::dit::{Dit, Scope};
+use super::entry::{Dn, Entry};
+use super::filter::Filter;
+
+/// A dynamic-attribute provider: returns `(attr, value)` pairs merged
+/// into its entry at query time.
+pub type Provider = Arc<dyn Fn() -> Vec<(String, String)> + Send + Sync>;
+
+/// A GRIS instance for one site.
+pub struct Gris {
+    /// Site identity: `ou=<site>, o=<org>, o=grid`.
+    base_dn: Dn,
+    site: String,
+    /// Static portion of the tree.
+    dit: Dit,
+    /// Dynamic providers keyed by DN (DNs normalize attribute case at
+    /// parse time, so direct keying avoids per-query string building —
+    /// Perf log P3).
+    providers: HashMap<Dn, Vec<Provider>>,
+}
+
+impl Gris {
+    /// Create a GRIS rooted at `ou=<site>, o=<org>, o=grid` with the
+    /// scaffolding entries of the Figure-3 DIT.
+    pub fn new(org: &str, site: &str) -> Gris {
+        let root = Dn::parse("o=grid").unwrap();
+        let org_dn = root.child("o", org);
+        let base_dn = org_dn.child("ou", site);
+        let mut dit = Dit::new();
+        let mut top = Entry::new(root.clone());
+        top.add("objectClass", "GridTop");
+        dit.add(top).unwrap();
+        let mut o = Entry::new(org_dn.clone());
+        o.add("objectClass", "GridOrganization");
+        o.put("o", org);
+        dit.add(o).unwrap();
+        let mut ou = Entry::new(base_dn.clone());
+        ou.add("objectClass", "GridOrganizationalUnit");
+        ou.put("ou", site);
+        dit.add(ou).unwrap();
+        Gris { base_dn, site: site.to_string(), dit, providers: HashMap::new() }
+    }
+
+    pub fn base_dn(&self) -> &Dn {
+        &self.base_dn
+    }
+
+    pub fn site(&self) -> &str {
+        &self.site
+    }
+
+    /// Add a static entry under the site (ancestors must exist).
+    pub fn add_entry(&mut self, entry: Entry) {
+        self.dit
+            .add_with_ancestors(entry)
+            .expect("gris entry insert");
+    }
+
+    /// Attach a dynamic provider to the entry at `dn`.
+    pub fn add_provider(&mut self, dn: &Dn, p: Provider) {
+        self.providers.entry(dn.clone()).or_default().push(p);
+    }
+
+    /// Materialize an entry with its dynamic attributes applied.
+    fn materialize(&self, e: &Entry) -> Entry {
+        match self.providers.get(&e.dn) {
+            None => e.clone(),
+            Some(ps) => {
+                let mut out = e.clone();
+                for p in ps {
+                    for (attr, value) in p() {
+                        out.put(&attr, value);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// LDAP-style search with dynamic attributes resolved ("up-to-date,
+    /// detailed information", paper §3).
+    pub fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<Entry> {
+        // Dynamic attributes may affect filter outcomes, so materialize
+        // before filtering.
+        self.dit
+            .iter()
+            .filter(|e| match scope {
+                Scope::Base => &e.dn == base,
+                Scope::One => e.dn.parent().as_ref() == Some(base),
+                Scope::Sub => e.dn.under(base),
+            })
+            .map(|e| self.materialize(e))
+            .filter(|e| filter.matches(e))
+            .collect()
+    }
+
+    /// Snapshot the whole tree (dynamic attributes applied).
+    pub fn snapshot(&self) -> Vec<Entry> {
+        self.dit.iter().map(|e| self.materialize(e)).collect()
+    }
+
+    /// Render the live DIT (Figure 3 view).
+    pub fn render_tree(&self) -> String {
+        let mut d = Dit::new();
+        for e in self.snapshot() {
+            d.upsert(e);
+        }
+        d.render_tree()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn volume_entry(base: &Dn) -> Entry {
+        let mut e = Entry::new(base.child("gss", "vol0"));
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put("mountPoint", "/dev/sandbox");
+        e.put_f64("totalSpace", 107374182400.0);
+        e.put_f64("availableSpace", 0.0); // overwritten by provider
+        e.put_f64("diskTransferRate", 20971520.0);
+        e.put_f64("drdTime", 8.5);
+        e.put_f64("dwrTime", 9.5);
+        e
+    }
+
+    #[test]
+    fn static_search_works() {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        g.add_entry(volume_entry(&base));
+        let hits = g.search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(objectClass=GridStorageServerVolume)").unwrap(),
+        );
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].first("mountPoint").unwrap(), "/dev/sandbox");
+    }
+
+    #[test]
+    fn provider_values_fresh_per_query() {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        let vol_dn = base.child("gss", "vol0");
+        g.add_entry(volume_entry(&base));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c2 = counter.clone();
+        g.add_provider(
+            &vol_dn,
+            Arc::new(move || {
+                let n = c2.fetch_add(1, Ordering::SeqCst) + 1;
+                vec![("availableSpace".into(), format!("{}", n * 1000))]
+            }),
+        );
+        let f = Filter::parse("(objectClass=GridStorageServerVolume)").unwrap();
+        let root = Dn::parse("o=grid").unwrap();
+        let h1 = g.search(&root, Scope::Sub, &f);
+        let h2 = g.search(&root, Scope::Sub, &f);
+        assert_eq!(h1[0].f64("availableSpace").unwrap(), 1000.0);
+        assert_eq!(h2[0].f64("availableSpace").unwrap(), 2000.0);
+    }
+
+    #[test]
+    fn filter_sees_dynamic_values() {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        let vol_dn = base.child("gss", "vol0");
+        g.add_entry(volume_entry(&base));
+        g.add_provider(
+            &vol_dn,
+            Arc::new(|| vec![("availableSpace".into(), "555".into())]),
+        );
+        let hit = g.search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(availableSpace>=500)").unwrap(),
+        );
+        assert_eq!(hit.len(), 1);
+        let miss = g.search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(availableSpace>=600)").unwrap(),
+        );
+        assert!(miss.is_empty());
+    }
+
+    #[test]
+    fn tree_renders_site_hierarchy() {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        g.add_entry(volume_entry(&base));
+        let t = g.render_tree();
+        assert!(t.contains("o=grid"));
+        assert!(t.contains("o=anl"));
+        assert!(t.contains("ou=mcs"));
+        assert!(t.contains("gss=vol0"));
+    }
+}

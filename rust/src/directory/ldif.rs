@@ -1,0 +1,235 @@
+//! LDIF (LDAP Data Interchange Format) read/write.
+//!
+//! GRIS query responses travel as LDIF text (paper §3.1/§5.1.2 step 3);
+//! the broker's conversion library turns it into ClassAds. Supports
+//! multi-entry streams, comment lines, line folding (continuation lines
+//! start with a single space) and base64 values (`attr:: b64`).
+
+use thiserror::Error;
+
+use super::entry::{Dn, Entry};
+
+#[derive(Debug, Error, PartialEq)]
+pub enum LdifError {
+    #[error("entry at line {0} does not start with dn:")]
+    MissingDn(usize),
+    #[error("bad attribute line {0}: {1:?}")]
+    BadLine(usize, String),
+    #[error("bad dn at line {0}: {1}")]
+    BadDn(usize, String),
+    #[error("bad base64 at line {0}")]
+    BadBase64(usize),
+}
+
+/// Serialize one entry as LDIF.
+pub fn to_ldif(entry: &Entry) -> String {
+    let mut out = format!("dn: {}\n", entry.dn);
+    for (name, values) in entry.iter() {
+        for v in values {
+            if v.chars().all(|c| !c.is_control()) && !v.starts_with([' ', ':', '<']) {
+                out.push_str(&format!("{name}: {v}\n"));
+            } else {
+                out.push_str(&format!("{name}:: {}\n", b64_encode(v.as_bytes())));
+            }
+        }
+    }
+    out
+}
+
+/// Serialize a stream of entries separated by blank lines.
+pub fn to_ldif_stream(entries: &[Entry]) -> String {
+    entries.iter().map(to_ldif).collect::<Vec<_>>().join("\n")
+}
+
+/// Parse an LDIF stream into entries.
+pub fn parse_ldif(src: &str) -> Result<Vec<Entry>, LdifError> {
+    // Unfold continuation lines first.
+    let mut lines: Vec<(usize, String)> = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        if let Some(cont) = raw.strip_prefix(' ') {
+            if let Some(last) = lines.last_mut() {
+                last.1.push_str(cont);
+                continue;
+            }
+        }
+        lines.push((i + 1, raw.to_string()));
+    }
+
+    let mut entries = Vec::new();
+    let mut cur: Option<Entry> = None;
+    for (lineno, line) in lines {
+        let t = line.trim_end();
+        if t.is_empty() {
+            if let Some(e) = cur.take() {
+                entries.push(e);
+            }
+            continue;
+        }
+        if t.starts_with('#') {
+            continue;
+        }
+        let (attr, rest) = t
+            .split_once(':')
+            .ok_or_else(|| LdifError::BadLine(lineno, t.to_string()))?;
+        let attr = attr.trim();
+        let (value, b64) = match rest.strip_prefix(':') {
+            Some(v) => (v.trim(), true),
+            None => (rest.trim(), false),
+        };
+        let value = if b64 {
+            String::from_utf8(b64_decode(value).ok_or(LdifError::BadBase64(lineno))?)
+                .map_err(|_| LdifError::BadBase64(lineno))?
+        } else {
+            value.to_string()
+        };
+        if attr.eq_ignore_ascii_case("dn") {
+            if let Some(e) = cur.take() {
+                entries.push(e);
+            }
+            let dn = Dn::parse(&value).map_err(|e| LdifError::BadDn(lineno, e.to_string()))?;
+            cur = Some(Entry::new(dn));
+        } else {
+            match cur.as_mut() {
+                Some(e) => {
+                    e.add(attr, value);
+                }
+                None => return Err(LdifError::MissingDn(lineno)),
+            }
+        }
+    }
+    if let Some(e) = cur.take() {
+        entries.push(e);
+    }
+    Ok(entries)
+}
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
+        out.push(B64[(n >> 18 & 63) as usize] as char);
+        out.push(B64[(n >> 12 & 63) as usize] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6 & 63) as usize] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[(n & 63) as usize] as char } else { '=' });
+    }
+    out
+}
+
+fn b64_decode(s: &str) -> Option<Vec<u8>> {
+    let val = |c: u8| -> Option<u32> {
+        match c {
+            b'A'..=b'Z' => Some((c - b'A') as u32),
+            b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+            b'+' => Some(62),
+            b'/' => Some(63),
+            _ => None,
+        }
+    };
+    let bytes: Vec<u8> = s.bytes().filter(|b| !b.is_ascii_whitespace()).collect();
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let mut out = Vec::new();
+    for chunk in bytes.chunks(4) {
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        let mut n: u32 = 0;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' {
+                if i < 2 {
+                    return None;
+                }
+                0
+            } else {
+                val(c)?
+            };
+            n = (n << 6) | v;
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Entry {
+        let mut e = Entry::new(Dn::parse("gss=vol0, ou=mcs, o=anl, o=grid").unwrap());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put("availableSpace", "53687091200");
+        e.put("mountPoint", "/dev/sandbox");
+        e.add("filesystem", "ext3");
+        e.add("filesystem", "xfs");
+        e
+    }
+
+    #[test]
+    fn round_trips_single_entry() {
+        let e = sample();
+        let text = to_ldif(&e);
+        let parsed = parse_ldif(&text).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0], e);
+    }
+
+    #[test]
+    fn round_trips_stream() {
+        let mut e2 = Entry::new(Dn::parse("gss=vol1, o=grid").unwrap());
+        e2.put("totalSpace", "1");
+        let entries = vec![sample(), e2];
+        let parsed = parse_ldif(&to_ldif_stream(&entries)).unwrap();
+        assert_eq!(parsed, entries);
+    }
+
+    #[test]
+    fn multi_valued_preserved_in_order() {
+        let parsed = parse_ldif(&to_ldif(&sample())).unwrap();
+        assert_eq!(parsed[0].get("filesystem").unwrap(), &["ext3", "xfs"]);
+    }
+
+    #[test]
+    fn folding_and_comments() {
+        let src = "# a comment\ndn: o=grid\nattr: hello\n world\n";
+        let parsed = parse_ldif(src).unwrap();
+        assert_eq!(parsed[0].first("attr").unwrap(), "helloworld");
+    }
+
+    #[test]
+    fn base64_for_awkward_values() {
+        let mut e = Entry::new(Dn::parse("o=grid").unwrap());
+        e.put("note", " leading space");
+        e.put("ctl", "a\nb");
+        let text = to_ldif(&e);
+        assert!(text.contains("note:: "));
+        let parsed = parse_ldif(&text).unwrap();
+        assert_eq!(parsed[0].first("note").unwrap(), " leading space");
+        assert_eq!(parsed[0].first("ctl").unwrap(), "a\nb");
+    }
+
+    #[test]
+    fn b64_primitives() {
+        assert_eq!(b64_encode(b"hi"), "aGk=");
+        assert_eq!(b64_decode("aGk=").unwrap(), b"hi");
+        assert_eq!(b64_encode(b"hello!"), "aGVsbG8h");
+        assert_eq!(b64_decode("aGVsbG8h").unwrap(), b"hello!");
+        assert!(b64_decode("a").is_none());
+        assert!(b64_decode("====").is_none());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(parse_ldif("attr: 1\n"), Err(LdifError::MissingDn(1))));
+        assert!(parse_ldif("dn: o=grid\nbogusline\n").is_err());
+        assert!(parse_ldif("dn: notadn\n").is_err());
+    }
+}

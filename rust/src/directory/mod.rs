@@ -1,0 +1,39 @@
+//! LDAP-lite directory service — the Globus MDS substrate (paper §3).
+//!
+//! The paper publishes storage metadata through the Metacomputing
+//! Directory Service: per-resource **GRIS** servers answer LDAP searches
+//! with dynamically generated attributes and register with index
+//! servers (**GIIS**); information is organized in a Directory
+//! Information Tree of object classes (Figures 2–5) and interchanged as
+//! LDIF. This module implements that machinery:
+//!
+//! * [`entry`] — DNs and multi-valued attribute entries,
+//! * [`schema`] — the paper's object classes (`Grid::Storage::ServerVolume`,
+//!   `TransferBandwidth`, `SourceTransferBandwidth`) with MUST/MAY
+//!   validation and the Figure-3 DIT hierarchy,
+//! * [`filter`] — RFC-2254-style search filters (`(&(a>=1)(b=x*))`),
+//! * [`ldif`] — LDIF serialization / parsing,
+//! * [`dit`] — the in-memory tree with base/scope/filter search,
+//! * [`gris`] — a per-site GRIS daemon whose dynamic attributes are
+//!   produced by provider callbacks (the "shell backend" analog),
+//! * [`giis`] — the index service GRISes register with,
+//! * [`proto`], [`server`], [`client`] — a line-oriented TCP protocol so
+//!   brokers query GRIS/GIIS over the network exactly in the paper's
+//!   search-phase pattern.
+
+pub mod client;
+pub mod dit;
+pub mod entry;
+pub mod filter;
+pub mod giis;
+pub mod gris;
+pub mod ldif;
+pub mod proto;
+pub mod schema;
+pub mod server;
+
+pub use dit::{Dit, Scope};
+pub use entry::{Dn, Entry};
+pub use filter::Filter;
+pub use giis::Giis;
+pub use gris::{Gris, Provider};

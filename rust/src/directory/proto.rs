@@ -1,0 +1,180 @@
+//! Wire protocol for GRIS/GIIS over TCP.
+//!
+//! Line-oriented, tab-separated (DNs and filters contain spaces):
+//!
+//! ```text
+//! C: SEARCH\t<base dn>\t<scope>\t<filter>
+//! S: OK\t<n>
+//! S: <LDIF stream, entries separated by blank lines>
+//! S: .
+//!
+//! C: REGISTER\t<site>\t<host:port>\t<base dn>\t<k=v;k=v;...>
+//! S: OK\t0
+//! S: .
+//!
+//! C: DISCOVER\t<filter>          (GIIS only)
+//! C: LIST                        (GIIS only: all registrations)
+//! C: PING                        -> PONG
+//! C: QUIT
+//! ```
+//!
+//! Errors: `ERR\t<message>` followed by `.`.
+
+use thiserror::Error;
+
+use super::dit::Scope;
+use super::entry::Dn;
+use super::filter::Filter;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Search { base: Dn, scope: Scope, filter: Filter },
+    Register { site: String, addr: String, base: Dn, summary: Vec<(String, String)> },
+    Discover { filter: Filter },
+    List,
+    Ping,
+    Quit,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ProtoError {
+    #[error("empty request")]
+    Empty,
+    #[error("unknown verb {0:?}")]
+    UnknownVerb(String),
+    #[error("wrong number of fields for {0}")]
+    Arity(&'static str),
+    #[error("bad dn: {0}")]
+    BadDn(String),
+    #[error("bad scope {0:?}")]
+    BadScope(String),
+    #[error("bad filter: {0}")]
+    BadFilter(String),
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, ProtoError> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            return Err(ProtoError::Empty);
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        match fields[0].to_ascii_uppercase().as_str() {
+            "SEARCH" => {
+                if fields.len() != 4 {
+                    return Err(ProtoError::Arity("SEARCH"));
+                }
+                let base = Dn::parse(fields[1]).map_err(|e| ProtoError::BadDn(e.to_string()))?;
+                let scope =
+                    Scope::parse(fields[2]).ok_or_else(|| ProtoError::BadScope(fields[2].into()))?;
+                let filter = Filter::parse(fields[3])
+                    .map_err(|e| ProtoError::BadFilter(e.to_string()))?;
+                Ok(Request::Search { base, scope, filter })
+            }
+            "REGISTER" => {
+                if fields.len() != 5 {
+                    return Err(ProtoError::Arity("REGISTER"));
+                }
+                let base = Dn::parse(fields[3]).map_err(|e| ProtoError::BadDn(e.to_string()))?;
+                let summary = fields[4]
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .filter_map(|kv| kv.split_once('=').map(|(k, v)| (k.into(), v.into())))
+                    .collect();
+                Ok(Request::Register {
+                    site: fields[1].to_string(),
+                    addr: fields[2].to_string(),
+                    base,
+                    summary,
+                })
+            }
+            "DISCOVER" => {
+                if fields.len() != 2 {
+                    return Err(ProtoError::Arity("DISCOVER"));
+                }
+                let filter = Filter::parse(fields[1])
+                    .map_err(|e| ProtoError::BadFilter(e.to_string()))?;
+                Ok(Request::Discover { filter })
+            }
+            "LIST" => Ok(Request::List),
+            "PING" => Ok(Request::Ping),
+            "QUIT" => Ok(Request::Quit),
+            other => Err(ProtoError::UnknownVerb(other.to_string())),
+        }
+    }
+
+    /// Serialize a request to its wire line.
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Search { base, scope, filter } => {
+                format!("SEARCH\t{base}\t{}\t{filter}\n", scope.as_str())
+            }
+            Request::Register { site, addr, base, summary } => {
+                let kv = summary
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(";");
+                format!("REGISTER\t{site}\t{addr}\t{base}\t{kv}\n")
+            }
+            Request::Discover { filter } => format!("DISCOVER\t{filter}\n"),
+            Request::List => "LIST\n".to_string(),
+            Request::Ping => "PING\n".to_string(),
+            Request::Quit => "QUIT\n".to_string(),
+        }
+    }
+}
+
+/// Terminator line closing every response body.
+pub const END_MARK: &str = ".";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_round_trip() {
+        let r = Request::Search {
+            base: Dn::parse("ou=mcs, o=anl, o=grid").unwrap(),
+            scope: Scope::Sub,
+            filter: Filter::parse("(&(objectClass=Grid*)(availableSpace>=5))").unwrap(),
+        };
+        let line = r.encode();
+        assert_eq!(Request::parse(&line).unwrap(), r);
+    }
+
+    #[test]
+    fn register_round_trip() {
+        let r = Request::Register {
+            site: "mcs".into(),
+            addr: "127.0.0.1:9000".into(),
+            base: Dn::parse("ou=mcs, o=anl, o=grid").unwrap(),
+            summary: vec![("storageType".into(), "disk".into()), ("x".into(), "1".into())],
+        };
+        assert_eq!(Request::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn simple_verbs() {
+        assert_eq!(Request::parse("PING").unwrap(), Request::Ping);
+        assert_eq!(Request::parse("LIST\n").unwrap(), Request::List);
+        assert_eq!(Request::parse("quit").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(Request::parse(""), Err(ProtoError::Empty));
+        assert!(matches!(Request::parse("NOPE\tx"), Err(ProtoError::UnknownVerb(_))));
+        assert!(matches!(Request::parse("SEARCH\tb"), Err(ProtoError::Arity(_))));
+        assert!(matches!(
+            Request::parse("SEARCH\to=grid\tbogus\t(a=*)"),
+            Err(ProtoError::BadScope(_))
+        ));
+        assert!(matches!(
+            Request::parse("SEARCH\to=grid\tsub\t(((("),
+            Err(ProtoError::BadFilter(_))
+        ));
+    }
+}

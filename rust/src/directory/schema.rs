@@ -1,0 +1,342 @@
+//! The paper's LDAP object classes (Figures 2, 4, 5) and the Figure-3
+//! DIT hierarchy, with MUST/MAY validation.
+//!
+//! `Grid::Storage::ServerVolume` (Fig 2) publishes system-configuration
+//! metadata; `Grid::Storage::TransferBandwidth` (Fig 4) the site-wide
+//! GridFTP performance summary; `Grid::Storage::SourceTransferBandwidth`
+//! (Fig 5) per-source performance records. Attribute syntaxes follow
+//! the figures (`cisfloat` = numeric string, `cis` = case-insensitive
+//! string; `singular`/`multiple` arity).
+
+use std::collections::BTreeMap;
+
+use once_cell::sync::Lazy;
+use thiserror::Error;
+
+use super::entry::Entry;
+
+/// Attribute syntax, as written in the paper's figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Syntax {
+    /// `cisfloat` — numeric.
+    Float,
+    /// `cis` — case-insensitive string.
+    String,
+}
+
+/// Attribute arity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    Singular,
+    Multiple,
+}
+
+/// One attribute spec inside an object class.
+#[derive(Debug, Clone)]
+pub struct AttrSpec {
+    pub name: &'static str,
+    pub syntax: Syntax,
+    pub arity: Arity,
+    pub mandatory: bool,
+}
+
+/// An object-class definition (Figure 2/4/5 style).
+#[derive(Debug, Clone)]
+pub struct ObjectClass {
+    pub name: &'static str,
+    pub subclass_of: Option<&'static str>,
+    /// RDN attribute, e.g. `gss`.
+    pub rdn_attr: &'static str,
+    pub attrs: Vec<AttrSpec>,
+}
+
+impl ObjectClass {
+    pub fn must(&self) -> impl Iterator<Item = &AttrSpec> {
+        self.attrs.iter().filter(|a| a.mandatory)
+    }
+
+    pub fn may(&self) -> impl Iterator<Item = &AttrSpec> {
+        self.attrs.iter().filter(|a| !a.mandatory)
+    }
+
+    pub fn attr(&self, name: &str) -> Option<&AttrSpec> {
+        self.attrs.iter().find(|a| a.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Render in the paper's Figure-2 text style (used by the
+    /// `gris_explorer` example to regenerate the figure).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{}\nOBJECT CLASS ::={{\n", self.name));
+        if let Some(parent) = self.subclass_of {
+            s.push_str(&format!("SUBCLASS OF {parent}\n"));
+        }
+        s.push_str(&format!("RDN = {}({})\n", self.rdn_attr, self.name));
+        s.push_str("MUST CONTAIN {\n");
+        for a in self.must() {
+            s.push_str(&format!("  {}::{}::{},\n", a.name, syntax_str(a.syntax), arity_str(a.arity)));
+        }
+        s.push_str("}\nMAY CONTAIN {\n");
+        for a in self.may() {
+            s.push_str(&format!("  {}::{}::{},\n", a.name, syntax_str(a.syntax), arity_str(a.arity)));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+}
+
+fn syntax_str(s: Syntax) -> &'static str {
+    match s {
+        Syntax::Float => "cisfloat",
+        Syntax::String => "cis",
+    }
+}
+
+fn arity_str(a: Arity) -> &'static str {
+    match a {
+        Arity::Singular => "singular",
+        Arity::Multiple => "multiple",
+    }
+}
+
+/// Validation failures against an object class.
+#[derive(Debug, Error, PartialEq)]
+pub enum SchemaError {
+    #[error("entry lacks objectClass {0}")]
+    MissingObjectClass(&'static str),
+    #[error("missing mandatory attribute {0}")]
+    MissingMust(&'static str),
+    #[error("attribute {0} must be numeric, got {1:?}")]
+    NotNumeric(&'static str, String),
+    #[error("attribute {0} is singular but has {1} values")]
+    NotSingular(&'static str, usize),
+}
+
+const M: bool = true;
+const O: bool = false;
+
+fn spec(name: &'static str, syntax: Syntax, arity: Arity, mandatory: bool) -> AttrSpec {
+    AttrSpec { name, syntax, arity, mandatory }
+}
+
+/// `Grid::Storage::ServerVolume` — Figure 2.
+pub static SERVER_VOLUME: Lazy<ObjectClass> = Lazy::new(|| ObjectClass {
+    name: "GridStorageServerVolume",
+    subclass_of: Some("GridPhysicalResource"),
+    rdn_attr: "gss",
+    attrs: vec![
+        spec("totalSpace", Syntax::Float, Arity::Singular, M),
+        spec("availableSpace", Syntax::Float, Arity::Singular, M),
+        spec("mountPoint", Syntax::String, Arity::Singular, M),
+        spec("diskTransferRate", Syntax::Float, Arity::Singular, M),
+        spec("drdTime", Syntax::Float, Arity::Singular, M),
+        spec("dwrTime", Syntax::Float, Arity::Singular, M),
+        spec("requirements", Syntax::String, Arity::Singular, O),
+        spec("filesystem", Syntax::String, Arity::Multiple, O),
+    ],
+});
+
+/// `Grid::Storage::TransferBandwidth` — Figure 4.
+pub static TRANSFER_BANDWIDTH: Lazy<ObjectClass> = Lazy::new(|| ObjectClass {
+    name: "GridStorageTransferBandwidth",
+    subclass_of: Some("GridStorageServerVolume"),
+    rdn_attr: "gss",
+    attrs: vec![
+        spec("MaxRDBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("MinRDBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("AvgRDBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("MaxWRBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("MinWRBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("AvgWRBandwidth", Syntax::Float, Arity::Singular, M),
+        // Statistical extensions the paper motivates in §3.2.
+        spec("StdRDBandwidth", Syntax::Float, Arity::Singular, O),
+        spec("StdWRBandwidth", Syntax::Float, Arity::Singular, O),
+        spec("NumTransfers", Syntax::Float, Arity::Singular, O),
+    ],
+});
+
+/// `Grid::Storage::SourceTransferBandwidth` — Figure 5.
+pub static SOURCE_TRANSFER_BANDWIDTH: Lazy<ObjectClass> = Lazy::new(|| ObjectClass {
+    name: "GridStorageSourceTransferBandwidth",
+    subclass_of: Some("GridStorageTransferBandwidth"),
+    rdn_attr: "gss",
+    attrs: vec![
+        spec("lastWRBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("lastWRurl", Syntax::String, Arity::Singular, M),
+        spec("lastRDBandwidth", Syntax::Float, Arity::Singular, M),
+        spec("lastRDurl", Syntax::String, Arity::Singular, M),
+        // Per-source history window published for the forecast engine.
+        spec("rdHistory", Syntax::String, Arity::Multiple, O),
+        spec("AvgRDBandwidth", Syntax::Float, Arity::Singular, O),
+        spec("NumTransfers", Syntax::Float, Arity::Singular, O),
+    ],
+});
+
+/// All classes, by (case-insensitive) name.
+pub static REGISTRY: Lazy<BTreeMap<String, &'static ObjectClass>> = Lazy::new(|| {
+    let mut m = BTreeMap::new();
+    for oc in [&*SERVER_VOLUME, &*TRANSFER_BANDWIDTH, &*SOURCE_TRANSFER_BANDWIDTH] {
+        m.insert(oc.name.to_ascii_lowercase(), oc);
+    }
+    m
+});
+
+pub fn lookup(name: &str) -> Option<&'static ObjectClass> {
+    REGISTRY.get(&name.to_ascii_lowercase()).copied()
+}
+
+/// Validate an entry against an object class: the entry must carry the
+/// class in `objectClass`, all MUST attributes present, `cisfloat`
+/// values numeric, singular attributes single-valued.
+pub fn validate(entry: &Entry, oc: &ObjectClass) -> Result<(), SchemaError> {
+    let has_class = entry
+        .object_classes()
+        .iter()
+        .any(|c| c.eq_ignore_ascii_case(oc.name));
+    if !has_class {
+        return Err(SchemaError::MissingObjectClass(oc.name));
+    }
+    for a in &oc.attrs {
+        let vals = entry.get(a.name);
+        match vals {
+            None if a.mandatory => return Err(SchemaError::MissingMust(a.name)),
+            None => continue,
+            Some(vals) => {
+                if a.arity == Arity::Singular && vals.len() != 1 {
+                    return Err(SchemaError::NotSingular(a.name, vals.len()));
+                }
+                if a.syntax == Syntax::Float {
+                    for v in vals {
+                        if v.trim().parse::<f64>().is_err() {
+                            return Err(SchemaError::NotNumeric(a.name, v.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The Figure-3 DIT skeleton under which GRIS entries live:
+/// `o=grid / o=<org> / ou=<site> / gss=<volume>`.
+pub fn dit_levels() -> [&'static str; 4] {
+    ["o=grid", "o=<organization>", "ou=<organizational unit>", "gss=<server volume>"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::directory::entry::{Dn, Entry};
+
+    fn volume_entry() -> Entry {
+        let mut e = Entry::new(Dn::parse("gss=vol0, ou=mcs, o=anl, o=grid").unwrap());
+        e.add("objectClass", "GridPhysicalResource");
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put_f64("totalSpace", 107374182400.0);
+        e.put_f64("availableSpace", 53687091200.0);
+        e.put("mountPoint", "/dev/sandbox");
+        e.put_f64("diskTransferRate", 20971520.0);
+        e.put_f64("drdTime", 8.5);
+        e.put_f64("dwrTime", 9.5);
+        e
+    }
+
+    #[test]
+    fn fig2_class_shape() {
+        let oc = &*SERVER_VOLUME;
+        assert_eq!(oc.must().count(), 6);
+        assert_eq!(oc.may().count(), 2);
+        assert_eq!(oc.attr("requirements").unwrap().syntax, Syntax::String);
+        assert_eq!(oc.attr("filesystem").unwrap().arity, Arity::Multiple);
+    }
+
+    #[test]
+    fn fig4_class_shape() {
+        let oc = &*TRANSFER_BANDWIDTH;
+        let must: Vec<_> = oc.must().map(|a| a.name).collect();
+        assert_eq!(
+            must,
+            vec![
+                "MaxRDBandwidth",
+                "MinRDBandwidth",
+                "AvgRDBandwidth",
+                "MaxWRBandwidth",
+                "MinWRBandwidth",
+                "AvgWRBandwidth"
+            ]
+        );
+        assert_eq!(oc.subclass_of, Some("GridStorageServerVolume"));
+    }
+
+    #[test]
+    fn fig5_class_shape() {
+        let oc = &*SOURCE_TRANSFER_BANDWIDTH;
+        let must: Vec<_> = oc.must().map(|a| a.name).collect();
+        assert!(must.contains(&"lastRDBandwidth"));
+        assert!(must.contains(&"lastWRurl"));
+        assert_eq!(oc.subclass_of, Some("GridStorageTransferBandwidth"));
+    }
+
+    #[test]
+    fn validates_good_entry() {
+        assert_eq!(validate(&volume_entry(), &SERVER_VOLUME), Ok(()));
+    }
+
+    #[test]
+    fn rejects_missing_must() {
+        let mut e = volume_entry();
+        e.remove("drdTime");
+        assert_eq!(
+            validate(&e, &SERVER_VOLUME),
+            Err(SchemaError::MissingMust("drdTime"))
+        );
+    }
+
+    #[test]
+    fn rejects_non_numeric_float() {
+        let mut e = volume_entry();
+        e.put("availableSpace", "lots");
+        assert!(matches!(
+            validate(&e, &SERVER_VOLUME),
+            Err(SchemaError::NotNumeric("availableSpace", _))
+        ));
+    }
+
+    #[test]
+    fn rejects_multi_valued_singular() {
+        let mut e = volume_entry();
+        e.add("mountPoint", "/second");
+        assert_eq!(
+            validate(&e, &SERVER_VOLUME),
+            Err(SchemaError::NotSingular("mountPoint", 2))
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_class() {
+        let mut e = volume_entry();
+        e.remove("objectClass");
+        e.add("objectClass", "SomethingElse");
+        assert_eq!(
+            validate(&e, &SERVER_VOLUME),
+            Err(SchemaError::MissingObjectClass("GridStorageServerVolume"))
+        );
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(lookup("gridstorageservervolume").is_some());
+        assert!(lookup("GridStorageTransferBandwidth").is_some());
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn render_matches_figure_style() {
+        let text = SERVER_VOLUME.render();
+        assert!(text.contains("OBJECT CLASS ::={"));
+        assert!(text.contains("SUBCLASS OF GridPhysicalResource"));
+        assert!(text.contains("totalSpace::cisfloat::singular,"));
+        assert!(text.contains("filesystem::cis::multiple,"));
+    }
+}

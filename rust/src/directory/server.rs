@@ -1,0 +1,229 @@
+//! TCP server hosting a GRIS or GIIS backend.
+//!
+//! Thread-per-connection over `std::net` (the image ships no tokio; the
+//! protocol is tiny request/response so blocking I/O with a bounded
+//! accept loop is appropriate — see DESIGN.md §Substitutions).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::dit::Scope;
+use super::entry::{Dn, Entry};
+use super::filter::Filter;
+use super::giis::{registration_entry, Giis};
+use super::gris::Gris;
+use super::ldif::to_ldif_stream;
+use super::proto::{Request, END_MARK};
+
+/// What a directory server serves.
+pub trait Backend: Send {
+    /// Handle a SEARCH.
+    fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<Entry>;
+    /// Handle a REGISTER (GIIS only; GRIS returns an error message).
+    fn register(
+        &mut self,
+        _site: &str,
+        _addr: &str,
+        _base: Dn,
+        _summary: Vec<(String, String)>,
+    ) -> Result<(), String> {
+        Err("backend does not accept registrations".into())
+    }
+    /// Handle DISCOVER / LIST (GIIS only).
+    fn discover(&self, _filter: Option<&Filter>) -> Result<Vec<Entry>, String> {
+        Err("backend does not index registrations".into())
+    }
+}
+
+impl Backend for Gris {
+    fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<Entry> {
+        Gris::search(self, base, scope, filter)
+    }
+}
+
+impl Backend for Giis {
+    fn search(&self, _base: &Dn, _scope: Scope, filter: &Filter) -> Vec<Entry> {
+        // A GIIS answers searches over its registration records.
+        Giis::discover(self, filter)
+            .into_iter()
+            .map(registration_entry)
+            .collect()
+    }
+
+    fn register(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base: Dn,
+        summary: Vec<(String, String)>,
+    ) -> Result<(), String> {
+        Giis::register(self, site, addr, base, summary);
+        Ok(())
+    }
+
+    fn discover(&self, filter: Option<&Filter>) -> Result<Vec<Entry>, String> {
+        let regs = match filter {
+            Some(f) => Giis::discover(self, f),
+            None => self.registrations(),
+        };
+        Ok(regs.into_iter().map(registration_entry).collect())
+    }
+}
+
+/// Handle to a running directory server.
+pub struct DirectoryServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    served: Arc<AtomicU64>,
+}
+
+impl DirectoryServer {
+    /// Spawn a server for `backend` on `127.0.0.1:<port>` (port 0 picks
+    /// a free port; the bound address is available via [`Self::addr`]).
+    pub fn spawn(backend: Arc<Mutex<dyn Backend>>, port: u16) -> std::io::Result<DirectoryServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let stop2 = stop.clone();
+        let served2 = served.clone();
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let backend = backend.clone();
+                let served = served2.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, backend, served);
+                });
+            }
+        });
+        Ok(DirectoryServer { addr, stop, handle: Some(handle), served })
+    }
+
+    /// The bound `host:port`.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Total requests served (all connections).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DirectoryServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    backend: Arc<Mutex<dyn Backend>>,
+    served: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        served.fetch_add(1, Ordering::Relaxed);
+        let reply = match Request::parse(&line) {
+            Err(e) => format!("ERR\t{e}\n{END_MARK}\n"),
+            Ok(Request::Quit) => {
+                out.write_all(b"BYE\n")?;
+                return Ok(());
+            }
+            Ok(Request::Ping) => format!("PONG\n{END_MARK}\n"),
+            Ok(Request::Search { base, scope, filter }) => {
+                let entries = backend.lock().unwrap().search(&base, scope, &filter);
+                format!(
+                    "OK\t{}\n{}\n{END_MARK}\n",
+                    entries.len(),
+                    to_ldif_stream(&entries)
+                )
+            }
+            Ok(Request::Register { site, addr, base, summary }) => {
+                match backend.lock().unwrap().register(&site, &addr, base, summary) {
+                    Ok(()) => format!("OK\t0\n{END_MARK}\n"),
+                    Err(e) => format!("ERR\t{e}\n{END_MARK}\n"),
+                }
+            }
+            Ok(Request::Discover { filter }) => respond_entries(
+                backend.lock().unwrap().discover(Some(&filter)),
+            ),
+            Ok(Request::List) => respond_entries(backend.lock().unwrap().discover(None)),
+        };
+        out.write_all(reply.as_bytes())?;
+        out.flush()?;
+    }
+}
+
+fn respond_entries(res: Result<Vec<Entry>, String>) -> String {
+    match res {
+        Ok(entries) => format!(
+            "OK\t{}\n{}\n{END_MARK}\n",
+            entries.len(),
+            to_ldif_stream(&entries)
+        ),
+        Err(e) => format!("ERR\t{e}\n{END_MARK}\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn tiny_gris() -> Gris {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        let mut e = Entry::new(base.child("gss", "vol0"));
+        e.add("objectClass", "GridStorageServerVolume");
+        g.add_entry(e);
+        g
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_frees_port() {
+        let mut s = DirectoryServer::spawn(Arc::new(Mutex::new(tiny_gris())), 0).unwrap();
+        let addr = s.addr().to_string();
+        s.shutdown();
+        s.shutdown(); // second call is a no-op
+        // Port is released: we can bind it again.
+        let port: u16 = addr.rsplit(':').next().unwrap().parse().unwrap();
+        let rebind = std::net::TcpListener::bind(("127.0.0.1", port));
+        assert!(rebind.is_ok(), "port {port} still held after shutdown");
+    }
+
+    #[test]
+    fn served_counter_tracks_requests() {
+        let s = DirectoryServer::spawn(Arc::new(Mutex::new(tiny_gris())), 0).unwrap();
+        let mut c = crate::directory::client::DirectoryClient::connect(s.addr()).unwrap();
+        assert!(c.ping().unwrap());
+        assert!(c.ping().unwrap());
+        // Allow the handler thread to tick the counter.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(s.served() >= 2);
+    }
+}

@@ -1,0 +1,242 @@
+//! Assembly of a full in-process data grid.
+
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::broker::{Broker, LocalInfoService, RankPolicy};
+use crate::catalog::{MetadataRepository, PhysicalLocation, ReplicaCatalog};
+use crate::config::GridConfig;
+use crate::directory::entry::Entry;
+use crate::directory::gris::{Gris, Provider};
+use crate::gridftp::GridFtp;
+use crate::simnet::{Topology, Workload, WorkloadSpec};
+use crate::util::prng::Rng;
+
+/// Dynamic per-site state shared between the simulation loop and the
+/// site's GRIS providers (the "shell backend" data source).
+#[derive(Debug, Default)]
+pub struct SiteDynamics {
+    pub available_space: f64,
+    pub load: f64,
+}
+
+/// A complete simulated grid.
+pub struct SimGrid {
+    pub cfg: GridConfig,
+    pub topo: Topology,
+    pub ftp: GridFtp,
+    pub catalog: Arc<Mutex<ReplicaCatalog>>,
+    pub metadata: MetadataRepository,
+    pub info: Arc<LocalInfoService>,
+    pub dynamics: Vec<Arc<RwLock<SiteDynamics>>>,
+    /// file index → logical name.
+    pub files: Vec<String>,
+    /// file index → size in bytes.
+    pub sizes: Vec<f64>,
+    /// file index → replica site indices.
+    pub placement: Vec<Vec<usize>>,
+}
+
+impl SimGrid {
+    /// Build a grid: sites from `cfg`, `spec.files` logical files each
+    /// replicated at `replicas_per_file` distinct random sites, GRIS
+    /// per site with live providers, history window `window`.
+    pub fn build(
+        cfg: &GridConfig,
+        spec: &WorkloadSpec,
+        replicas_per_file: usize,
+        window: usize,
+    ) -> SimGrid {
+        let topo = Topology::build(cfg);
+        let ftp = GridFtp::new(&topo, window);
+        let mut catalog = ReplicaCatalog::new();
+        let mut metadata = MetadataRepository::new();
+        let mut info = LocalInfoService::new();
+        let mut rng = Rng::new(cfg.seed ^ 0x6121D);
+
+        // Dynamic state handles.
+        let dynamics: Vec<Arc<RwLock<SiteDynamics>>> = (0..topo.len())
+            .map(|i| {
+                Arc::new(RwLock::new(SiteDynamics {
+                    available_space: topo.site(i).available_space(),
+                    load: 0.0,
+                }))
+            })
+            .collect();
+
+        // One GRIS per site with Figure-2 static entry + providers.
+        for i in 0..topo.len() {
+            let sc = &topo.site(i).cfg;
+            let mut gris = Gris::new(&sc.org, &sc.name);
+            let base = gris.base_dn().clone();
+            let vol = base.child("gss", "vol0");
+            let mut e = Entry::new(vol.clone());
+            e.add("objectClass", "GridStorageServerVolume");
+            e.put_f64("totalSpace", sc.total_space);
+            e.put_f64("availableSpace", 0.0); // provider overwrites
+            e.put("mountPoint", "/data");
+            e.put_f64("diskTransferRate", sc.disk_rate);
+            e.put_f64("drdTime", sc.drd_time_ms);
+            e.put_f64("dwrTime", sc.dwr_time_ms);
+            gris.add_entry(e);
+            let dyn_handle = dynamics[i].clone();
+            let p: Provider = Arc::new(move || {
+                let d = dyn_handle.read().unwrap();
+                vec![
+                    (
+                        "availableSpace".to_string(),
+                        crate::directory::entry::format_f64(d.available_space),
+                    ),
+                    ("load".to_string(), format!("{:.4}", d.load)),
+                ]
+            });
+            gris.add_provider(&vol, p);
+
+            // Figure-4 + Figure-5 entries fed live from instrumentation.
+            let mut bw = Entry::new(vol.child("gss", "bw"));
+            bw.add("objectClass", "GridStorageTransferBandwidth");
+            gris.add_entry(bw);
+            let hist_handle = ftp.history(i);
+            let p4: Provider = Arc::new(move || hist_handle.write().unwrap().fig4_attributes());
+            gris.add_provider(&vol.child("gss", "bw"), p4);
+
+            let mut src = Entry::new(vol.child("gss", "src"));
+            src.add("objectClass", "GridStorageSourceTransferBandwidth");
+            gris.add_entry(src);
+            let hist_handle5 = ftp.history(i);
+            let p5: Provider = Arc::new(move || {
+                // Per-source data for the (single) client population —
+                // the sim's clients share a vantage point, matching the
+                // paper's "per source basis" with source = client org.
+                hist_handle5.write().unwrap().fig5_attributes("client")
+            });
+            gris.add_provider(&vol.child("gss", "src"), p5);
+            // §7 future-work loop: the NWS-style predictive feed
+            // publishes predictedRDBandwidth into the same entry.
+            let feed = crate::forecast::PredictiveFeed::new(ftp.history(i));
+            gris.add_provider(&vol.child("gss", "src"), feed.provider("client"));
+
+            info.add(&sc.name, Arc::new(RwLock::new(gris)));
+        }
+
+        // Logical files: sizes, placement, catalog, metadata.
+        let sizes = Workload::file_sizes(spec, cfg.seed, 80.0);
+        let mut files = Vec::with_capacity(spec.files);
+        let mut placement = Vec::with_capacity(spec.files);
+        for f in 0..spec.files {
+            let name = format!("file{f:04}.dat");
+            catalog
+                .create_logical(&name, crate::util::units::Bytes(sizes[f]), "sim")
+                .unwrap();
+            metadata.describe(&name, &[("collection", "sim"), ("index", &f.to_string())]);
+            let k = replicas_per_file.min(topo.len());
+            let mut sites: Vec<usize> = (0..topo.len()).collect();
+            rng.shuffle(&mut sites);
+            let mut chosen = sites[..k].to_vec();
+            chosen.sort_unstable();
+            for &s in &chosen {
+                catalog
+                    .add_replica(
+                        &name,
+                        PhysicalLocation {
+                            site: topo.site(s).cfg.name.clone(),
+                            url: format!("gsiftp://{}/{name}", topo.site(s).cfg.name),
+                        },
+                    )
+                    .unwrap();
+            }
+            placement.push(chosen);
+            files.push(name);
+        }
+
+        SimGrid {
+            cfg: cfg.clone(),
+            topo,
+            ftp,
+            catalog: Arc::new(Mutex::new(catalog)),
+            metadata,
+            info: Arc::new(info),
+            dynamics,
+            files,
+            sizes,
+            placement,
+        }
+    }
+
+    /// Refresh the dynamic state published by each GRIS from the live
+    /// topology (called by the simulation loop between requests).
+    pub fn publish_dynamics(&self) {
+        for i in 0..self.topo.len() {
+            let mut d = self.dynamics[i].write().unwrap();
+            d.available_space = self.topo.site(i).available_space();
+            d.load = self.topo.site(i).load();
+        }
+    }
+
+    /// A broker (decentralized — one per client) over this grid.
+    pub fn broker(&self, policy: RankPolicy) -> Broker {
+        Broker::new(self.catalog.clone(), self.info.clone(), policy)
+    }
+
+    /// Warm per-site histories with `n` probe transfers each.
+    pub fn warm(&mut self, n: usize) {
+        self.ftp.warm(&mut self.topo, "client", n, 8.0 * 1024.0 * 1024.0);
+        self.publish_dynamics();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::parse_classad;
+
+    fn grid() -> SimGrid {
+        let cfg = GridConfig::generate(5, 77);
+        let spec = WorkloadSpec { files: 6, ..Default::default() };
+        SimGrid::build(&cfg, &spec, 3, 16)
+    }
+
+    #[test]
+    fn builds_catalog_and_placement() {
+        let g = grid();
+        let cat = g.catalog.lock().unwrap();
+        assert_eq!(cat.len(), 6);
+        for (f, sites) in g.placement.iter().enumerate() {
+            assert_eq!(sites.len(), 3);
+            assert_eq!(cat.locate(&g.files[f]).unwrap().len(), 3);
+        }
+    }
+
+    #[test]
+    fn gris_publishes_live_dynamics() {
+        let mut g = grid();
+        g.warm(2);
+        let site0 = g.topo.site(0).cfg.name.clone();
+        let broker = g.broker(RankPolicy::ClassAdRank);
+        let req = parse_classad("requirement = TRUE;").unwrap();
+        // Find a file with a replica on site 0 to exercise the path.
+        let f = g
+            .placement
+            .iter()
+            .position(|sites| sites.contains(&0))
+            .expect("some file on site 0");
+        let (cands, _) = broker.search(&g.files[f], &req).unwrap();
+        let c0 = cands.iter().find(|c| c.site == site0).unwrap();
+        assert!(c0.ad.number("availableSpace").unwrap() > 0.0);
+        assert!(c0.ad.number("AvgRDBandwidth").unwrap() > 0.0);
+        assert!(!c0.history.is_empty(), "warm transfers must appear in rdHistory");
+    }
+
+    #[test]
+    fn metadata_identifies_files() {
+        let g = grid();
+        assert_eq!(g.metadata.identify(&[("index", "3")]), Some("file0003.dat"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = grid();
+        let b = grid();
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.sizes, b.sizes);
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment driver: the reusable simulation harness behind
+//! `examples/datagrid_sim`, `benches/bench_selection_quality` and the
+//! end-to-end integration tests.
+//!
+//! Builds a complete in-process data grid — simnet topology, GridFTP
+//! fabric, one GRIS per site with live providers (dynamic
+//! `availableSpace`/`load` + Figure-4/5 bandwidth attributes straight
+//! from the instrumentation store), replica catalog, metadata
+//! repository — then replays a workload under a chosen selection policy
+//! and scores the outcome against the clairvoyant oracle.
+
+pub mod grid;
+pub mod quality;
+
+pub use grid::SimGrid;
+pub use quality::{run_quality, run_quality_trace, QualityReport};

@@ -1,0 +1,248 @@
+//! Selection-quality experiment (EXPERIMENTS.md R7 — the headline).
+//!
+//! Replays the same workload under each selection policy on identically
+//! seeded grids and scores achieved transfer time against the
+//! clairvoyant oracle (which probes every replica on a cloned topology
+//! before choosing).
+
+use crate::broker::selectors::{Selector, SelectorKind};
+use crate::broker::RankPolicy;
+use crate::classad::{parse_classad, symmetric_match, ClassAd};
+use crate::config::GridConfig;
+use crate::simnet::{Request, Workload, WorkloadSpec};
+
+use super::grid::SimGrid;
+
+/// Aggregated outcome of one policy's run.
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub policy: String,
+    pub requests: usize,
+    /// Mean transfer duration (s).
+    pub mean_time: f64,
+    /// 95th percentile duration (s).
+    pub p95_time: f64,
+    /// Mean achieved bandwidth (bytes/s).
+    pub mean_bandwidth: f64,
+    /// Fraction of requests where the policy picked the oracle-best
+    /// replica.
+    pub pct_optimal: f64,
+    /// Mean slowdown vs the oracle pick (1.0 = always optimal).
+    pub mean_slowdown: f64,
+}
+
+fn request_ad(min_bw: f64) -> ClassAd {
+    if min_bw > 0.0 {
+        parse_classad(&format!(
+            "hostname = \"client\"; reqdSpace = 0; reqdRDBandwidth = {min_bw}; \
+             requirement = other.AvgRDBandwidth > {min_bw};"
+        ))
+        .unwrap()
+    } else {
+        parse_classad("hostname = \"client\"; reqdSpace = 0; requirement = TRUE;").unwrap()
+    }
+}
+
+/// Run `n_requests` of the synthetic workload under `kind` and score
+/// against the oracle.
+///
+/// `engine`: PJRT forecast engine for the `Forecast` selector when
+/// artifacts are built (None → pure-Rust bank; numerically equivalent).
+pub fn run_quality(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    n_requests: usize,
+    replicas_per_file: usize,
+    warm: usize,
+    kind: SelectorKind,
+    engine: Option<std::sync::Arc<crate::runtime::engine::EngineHandle>>,
+) -> QualityReport {
+    let mut workload = Workload::new(spec.clone(), cfg.seed);
+    let requests = workload.take(n_requests);
+    run_quality_trace(cfg, spec, &requests, replicas_per_file, warm, kind, engine)
+}
+
+/// Replay an explicit request trace (recorded or synthetic — see
+/// `simnet::trace`) under `kind` and score against the oracle.
+pub fn run_quality_trace(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    replicas_per_file: usize,
+    warm: usize,
+    kind: SelectorKind,
+    engine: Option<std::sync::Arc<crate::runtime::engine::EngineHandle>>,
+) -> QualityReport {
+    let n_requests = requests.len();
+    let mut grid = SimGrid::build(cfg, spec, replicas_per_file, 64);
+    grid.warm(warm);
+    let mut selector = Selector::new(kind, cfg.seed);
+    let policy = match kind {
+        SelectorKind::Forecast => RankPolicy::ForecastBandwidth { engine: engine.clone() },
+        _ => RankPolicy::ClassAdRank,
+    };
+    let broker = grid.broker(policy.clone());
+
+    let mut durations = Vec::with_capacity(n_requests);
+    let mut bandwidths = Vec::with_capacity(n_requests);
+    let mut optimal_hits = 0usize;
+    let mut slowdowns = Vec::with_capacity(n_requests);
+    let mut last_at = 0.0f64;
+
+    for req in requests {
+        grid.topo.advance((req.at - last_at).max(0.0));
+        last_at = req.at;
+        grid.publish_dynamics();
+        let logical = &grid.files[req.file];
+        let ad = request_ad(req.min_bandwidth);
+
+        // The candidate view every policy sees (Search + convert).
+        let (cands, mut trace) = broker.search(logical, &ad).expect("search");
+        // Requirements filter (Match phase step 2).
+        let matched: Vec<usize> = cands
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| symmetric_match(&ad, &c.ad))
+            .map(|(i, _)| i)
+            .collect();
+        // Unsatisfiable constraint: fall back to all replicas (the
+        // request still needs the file).
+        let eligible = if matched.is_empty() {
+            (0..cands.len()).collect::<Vec<_>>()
+        } else {
+            matched
+        };
+
+        // Oracle: probe every eligible replica on a cloned topology.
+        let site_indices: Vec<usize> = eligible
+            .iter()
+            .map(|&i| grid.topo.index_of(&cands[i].site).unwrap())
+            .collect();
+        let mut best_oracle = f64::INFINITY;
+        let mut best_site = site_indices[0];
+        for &s in &site_indices {
+            let mut probe = grid.topo.clone_for_probe();
+            let (d, _) = probe.transfer_from(s, grid.sizes[req.file]);
+            if d < best_oracle {
+                best_oracle = d;
+                best_site = s;
+            }
+        }
+
+        // The policy's pick.
+        let pick_idx = match kind {
+            SelectorKind::Forecast => {
+                let ranked = broker.match_phase(&ad, &cands, &mut trace);
+                ranked
+                    .iter()
+                    .find(|r| eligible.contains(&r.index))
+                    .map(|r| r.index)
+                    .unwrap_or(eligible[0])
+            }
+            _ => selector.pick(&cands, &eligible),
+        };
+        let pick_site = grid.topo.index_of(&cands[pick_idx].site).unwrap();
+
+        // Access phase: the real transfer (advances link state).
+        let out = grid
+            .ftp
+            .fetch(&mut grid.topo, pick_site, "client", grid.sizes[req.file]);
+        durations.push(out.duration);
+        bandwidths.push(out.bandwidth);
+        if pick_site == best_site {
+            optimal_hits += 1;
+        }
+        slowdowns.push(out.duration / best_oracle.max(1e-9));
+    }
+
+    durations.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_time = durations.iter().sum::<f64>() / durations.len() as f64;
+    let p95_time = durations[(durations.len() as f64 * 0.95) as usize % durations.len()];
+    QualityReport {
+        policy: kind.name().to_string(),
+        requests: n_requests,
+        mean_time,
+        p95_time,
+        mean_bandwidth: bandwidths.iter().sum::<f64>() / bandwidths.len() as f64,
+        pct_optimal: optimal_hits as f64 / n_requests as f64,
+        mean_slowdown: slowdowns.iter().sum::<f64>() / slowdowns.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (GridConfig, WorkloadSpec) {
+        let cfg = GridConfig::generate(6, 1234);
+        let spec = WorkloadSpec { files: 8, mean_interarrival: 120.0, ..Default::default() };
+        (cfg, spec)
+    }
+
+    #[test]
+    fn reports_are_sane() {
+        let (cfg, spec) = small();
+        let r = run_quality(&cfg, &spec, 40, 3, 4, SelectorKind::Random, None);
+        assert_eq!(r.requests, 40);
+        assert!(r.mean_time > 0.0);
+        assert!(r.p95_time >= r.mean_time * 0.2);
+        assert!((0.0..=1.0).contains(&r.pct_optimal));
+        assert!(r.mean_slowdown >= 0.99, "slowdown {}", r.mean_slowdown);
+    }
+
+    #[test]
+    fn forecast_beats_random_on_heterogeneous_grid() {
+        // The paper's core qualitative claim (R7): informed,
+        // history-based selection outperforms uninformed selection.
+        let (cfg, spec) = small();
+        let rnd = run_quality(&cfg, &spec, 60, 3, 6, SelectorKind::Random, None);
+        let fc = run_quality(&cfg, &spec, 60, 3, 6, SelectorKind::Forecast, None);
+        assert!(
+            fc.mean_time < rnd.mean_time,
+            "forecast {:.1}s !< random {:.1}s",
+            fc.mean_time,
+            rnd.mean_time
+        );
+        assert!(fc.pct_optimal > rnd.pct_optimal);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, spec) = small();
+        let a = run_quality(&cfg, &spec, 20, 3, 2, SelectorKind::RoundRobin, None);
+        let b = run_quality(&cfg, &spec, 20, 3, 2, SelectorKind::RoundRobin, None);
+        assert_eq!(a.mean_time, b.mean_time);
+        assert_eq!(a.pct_optimal, b.pct_optimal);
+    }
+}
+
+#[cfg(test)]
+mod trace_tests {
+    use super::*;
+    use crate::simnet::trace;
+
+    #[test]
+    fn replaying_the_same_trace_reproduces_the_report() {
+        let cfg = GridConfig::generate(5, 71);
+        let spec = WorkloadSpec { files: 6, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(25);
+        let a = run_quality_trace(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, None);
+        let b = run_quality_trace(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, None);
+        assert_eq!(a.mean_time, b.mean_time);
+        assert_eq!(a.pct_optimal, b.pct_optimal);
+    }
+
+    #[test]
+    fn trace_file_round_trip_drives_the_pipeline() {
+        let cfg = GridConfig::generate(5, 72);
+        let spec = WorkloadSpec { files: 6, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(20);
+        let path = std::env::temp_dir().join(format!("gr-q-{}.jsonl", std::process::id()));
+        trace::save(&path, &reqs).unwrap();
+        let loaded = trace::load(&path).unwrap();
+        let direct = run_quality_trace(&cfg, &spec, &reqs, 3, 2, SelectorKind::Random, None);
+        let replay = run_quality_trace(&cfg, &spec, &loaded, 3, 2, SelectorKind::Random, None);
+        assert_eq!(direct.mean_time, replay.mean_time);
+        std::fs::remove_file(&path).ok();
+    }
+}

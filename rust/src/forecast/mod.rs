@@ -1,0 +1,16 @@
+//! Bandwidth forecasting — the NWS-style predictor bank (paper §3.2/§7).
+//!
+//! The paper favours "historical information concerning data transfer
+//! rates ... as a predictor of future transfer times" and points at the
+//! Network Weather Service for the statistical machinery. This module
+//! is the pure-Rust reference implementation of the same predictor bank
+//! the L1 Pallas kernel computes (`python/compile/kernels/forecast.py`);
+//! the two are cross-validated bit-for-bit-ish (f32 vs f64 tolerance) in
+//! `rust/tests/it_runtime_artifacts.rs`. The broker uses this path when
+//! artifacts are absent and the PJRT path (`crate::runtime`) when built.
+
+pub mod nws;
+pub mod predictors;
+
+pub use nws::{PredictiveFeed, Prediction};
+pub use predictors::{forecast_bank, AdaptiveForecast, BankOutput, NUM_PREDICTORS};

@@ -1,0 +1,199 @@
+//! NWS-style predictive information service (paper §7).
+//!
+//! "Finally, the statistical information published by the storage
+//! resource can be fed to an information service, such as the Network
+//! Weather Service, to perform predictive analysis of the behavior of
+//! storage resources."
+//!
+//! [`PredictiveFeed`] closes that loop: it owns the per-(site, source)
+//! forecast state, ingests the instrumentation stream, and exposes a
+//! GRIS provider that publishes `predictedRDBandwidth`,
+//! `predictionError` (RMS of the chosen forecaster's backtest) and
+//! `predictor` (which bank member is currently winning) — so *any*
+//! broker, not just ours, can rank on predictions with a plain LDAP
+//! query.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::directory::gris::Provider;
+use crate::gridftp::HistoryStore;
+
+use super::predictors::forecast_bank;
+
+/// Names of the bank members, indexed like the predictor axis
+/// (mirrors `python/compile/kernels/common.py`).
+pub const PREDICTOR_NAMES: [&str; 8] = [
+    "last_value",
+    "running_mean",
+    "sliding_mean_4",
+    "sliding_mean_16",
+    "ema_0.10",
+    "ema_0.30",
+    "ema_0.60",
+    "median_3",
+];
+
+/// One site's published prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Predicted read bandwidth toward `source`, bytes/s.
+    pub bandwidth: f64,
+    /// RMS backtest error of the chosen forecaster.
+    pub rms_error: f64,
+    /// Winning bank member.
+    pub predictor: &'static str,
+    /// Observations backing the prediction.
+    pub samples: usize,
+}
+
+/// The predictive feed for one site's GRIS.
+pub struct PredictiveFeed {
+    history: Arc<RwLock<HistoryStore>>,
+    /// Cache: source → (history length at compute time, prediction).
+    cache: RwLock<BTreeMap<String, (usize, Prediction)>>,
+}
+
+impl PredictiveFeed {
+    pub fn new(history: Arc<RwLock<HistoryStore>>) -> Arc<PredictiveFeed> {
+        Arc::new(PredictiveFeed { history, cache: RwLock::new(BTreeMap::new()) })
+    }
+
+    /// Current prediction toward `source` (None with no history).
+    /// Recomputed only when new observations arrived.
+    pub fn predict(&self, source: &str) -> Option<Prediction> {
+        let (window, count) = {
+            let h = self.history.read().unwrap();
+            let src = h.source(source)?;
+            (src.window(), src.stats.count as usize)
+        };
+        if window.is_empty() {
+            return None;
+        }
+        if let Some((seen, pred)) = self.cache.read().unwrap().get(source) {
+            if *seen == count {
+                return Some(pred.clone());
+            }
+        }
+        let mask = vec![1.0; window.len()];
+        let bank = forecast_bank(&window, &mask);
+        let best = bank.best_index();
+        let pred = Prediction {
+            bandwidth: bank.preds[best],
+            rms_error: bank.mses[best].sqrt(),
+            predictor: PREDICTOR_NAMES[best],
+            samples: window.len(),
+        };
+        self.cache
+            .write()
+            .unwrap()
+            .insert(source.to_string(), (count, pred.clone()));
+        Some(pred)
+    }
+
+    /// A GRIS provider publishing the prediction toward `source` as
+    /// directory attributes (attach to the site's Figure-5 entry).
+    pub fn provider(self: &Arc<Self>, source: &str) -> Provider {
+        let feed = self.clone();
+        let source = source.to_string();
+        Arc::new(move || match feed.predict(&source) {
+            None => vec![],
+            Some(p) => vec![
+                (
+                    "predictedRDBandwidth".to_string(),
+                    crate::directory::entry::format_f64(p.bandwidth),
+                ),
+                (
+                    "predictionError".to_string(),
+                    crate::directory::entry::format_f64(p.rms_error),
+                ),
+                ("predictor".to_string(), p.predictor.to_string()),
+                ("predictionSamples".to_string(), p.samples.to_string()),
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridftp::history::{Direction, TransferRecord};
+
+    fn feed_with(bws: &[f64]) -> (Arc<PredictiveFeed>, Arc<RwLock<HistoryStore>>) {
+        let h = Arc::new(RwLock::new(HistoryStore::new("anl", 32)));
+        for (i, bw) in bws.iter().enumerate() {
+            h.write().unwrap().record(TransferRecord {
+                at: i as f64,
+                peer: "client".into(),
+                direction: Direction::Read,
+                bytes: *bw,
+                duration: 1.0,
+            });
+        }
+        (PredictiveFeed::new(h.clone()), h)
+    }
+
+    #[test]
+    fn no_history_no_prediction() {
+        let (feed, _) = feed_with(&[]);
+        assert!(feed.predict("client").is_none());
+        assert!(feed.predict("stranger").is_none());
+    }
+
+    #[test]
+    fn stable_series_predicts_the_level() {
+        let (feed, _) = feed_with(&[50e3; 12]);
+        let p = feed.predict("client").unwrap();
+        assert!((p.bandwidth - 50e3).abs() < 1.0);
+        assert!(p.rms_error < 1.0);
+        assert_eq!(p.samples, 12);
+    }
+
+    #[test]
+    fn cache_invalidates_on_new_transfers() {
+        let (feed, h) = feed_with(&[50e3; 8]);
+        let p1 = feed.predict("client").unwrap();
+        // Same history -> cached object.
+        assert_eq!(feed.predict("client").unwrap(), p1);
+        // New observation at a different level -> prediction moves.
+        h.write().unwrap().record(TransferRecord {
+            at: 99.0,
+            peer: "client".into(),
+            direction: Direction::Read,
+            bytes: 200e3,
+            duration: 1.0,
+        });
+        let p2 = feed.predict("client").unwrap();
+        assert_ne!(p1, p2);
+        assert!(p2.bandwidth > p1.bandwidth);
+    }
+
+    #[test]
+    fn provider_publishes_attributes() {
+        let (feed, _) = feed_with(&[10e3, 12e3, 11e3, 13e3]);
+        let p = feed.provider("client");
+        let attrs: std::collections::BTreeMap<String, String> = p().into_iter().collect();
+        assert!(attrs.contains_key("predictedRDBandwidth"));
+        assert!(attrs.contains_key("predictionError"));
+        assert!(PREDICTOR_NAMES.contains(&attrs["predictor"].as_str()));
+        assert_eq!(attrs["predictionSamples"], "4");
+        // Unknown source publishes nothing (entry stays as-is).
+        let p2 = feed.provider("stranger");
+        assert!(p2().is_empty());
+    }
+
+    #[test]
+    fn predictor_name_is_meaningful() {
+        // A spiky series should select a robust predictor, and its name
+        // must come from the shared bank layout.
+        let mut bws = vec![80e3; 20];
+        bws[5] = 2e3;
+        bws[12] = 3e3;
+        let (feed, _) = feed_with(&bws);
+        let p = feed.predict("client").unwrap();
+        assert!(PREDICTOR_NAMES.contains(&p.predictor));
+        // Prediction should be near the 80e3 level, not dragged to the
+        // collapse values.
+        assert!(p.bandwidth > 60e3, "bandwidth {}", p.bandwidth);
+    }
+}

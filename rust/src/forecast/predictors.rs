@@ -1,0 +1,306 @@
+//! The predictor bank. Index layout MUST match
+//! `python/compile/kernels/common.py`:
+//!
+//! | idx | predictor              | parameter |
+//! |-----|------------------------|-----------|
+//! | 0   | last value             | —         |
+//! | 1   | running mean           | full      |
+//! | 2   | sliding mean           | w = 4     |
+//! | 3   | sliding mean           | w = 16    |
+//! | 4   | exponential smoothing  | α = 0.10  |
+//! | 5   | exponential smoothing  | α = 0.30  |
+//! | 6   | exponential smoothing  | α = 0.60  |
+//! | 7   | median-of-3            | last 3    |
+
+/// Number of predictors in the bank.
+pub const NUM_PREDICTORS: usize = 8;
+
+/// Sliding-window widths (predictors 2, 3).
+pub const WINDOW_SHORT: usize = 4;
+pub const WINDOW_LONG: usize = 16;
+
+/// EMA gains (predictors 4–6).
+pub const EMA_ALPHAS: [f64; 3] = [0.10, 0.30, 0.60];
+
+/// Output of one site's bank evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankOutput {
+    /// Final prediction of each forecaster.
+    pub preds: [f64; NUM_PREDICTORS],
+    /// Backtest MSE of each forecaster over the window.
+    pub mses: [f64; NUM_PREDICTORS],
+}
+
+impl BankOutput {
+    /// Index of the minimum-MSE forecaster (ties → lowest index, same
+    /// as `jnp.argmin`).
+    pub fn best_index(&self) -> usize {
+        let mut best = 0;
+        for i in 1..NUM_PREDICTORS {
+            if self.mses[i] < self.mses[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The adaptive prediction: the min-MSE forecaster's value.
+    pub fn best(&self) -> f64 {
+        self.preds[self.best_index()]
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct State {
+    count: f64,
+    last: f64,
+    total: f64,
+    last3: [f64; 3],
+    ema: [f64; 3],
+}
+
+fn predict(s: &State, hist: &[f64], mask: &[f64], t: usize) -> [f64; NUM_PREDICTORS] {
+    let mut p = [0.0; NUM_PREDICTORS];
+    if s.count <= 0.0 {
+        return p;
+    }
+    p[0] = s.last;
+    p[1] = s.total / s.count.max(1.0);
+    for (slot, w) in [(2usize, WINDOW_SHORT), (3, WINDOW_LONG)] {
+        let lo = t.saturating_sub(w);
+        let mut n = 0.0;
+        let mut sum = 0.0;
+        for i in lo..t {
+            sum += hist[i] * mask[i];
+            n += mask[i];
+        }
+        p[slot] = if n > 0.0 { sum / n } else { s.last };
+    }
+    for i in 0..3 {
+        p[4 + i] = s.ema[i];
+    }
+    p[7] = if s.count >= 3.0 {
+        let mut v = s.last3;
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[1]
+    } else if s.count == 2.0 {
+        (s.last3[1] + s.last3[2]) / 2.0
+    } else {
+        s.last
+    };
+    p
+}
+
+fn update(s: &mut State, x: f64, m: f64) {
+    if m <= 0.5 {
+        return;
+    }
+    let first = s.count == 0.0;
+    s.total += x;
+    if first {
+        s.last3 = [x, x, x];
+        s.ema = [x, x, x];
+    } else {
+        s.last3 = [s.last3[1], s.last3[2], x];
+        for (i, a) in EMA_ALPHAS.iter().enumerate() {
+            s.ema[i] = (1.0 - a) * s.ema[i] + a * x;
+        }
+    }
+    s.last = x;
+    s.count += 1.0;
+}
+
+/// Run the bank over one site's masked window (oldest → newest); the
+/// exact semantics of `compile.kernels.ref.forecast_ref`.
+pub fn forecast_bank(hist: &[f64], mask: &[f64]) -> BankOutput {
+    assert_eq!(hist.len(), mask.len());
+    let mut s = State::default();
+    let mut err = [0.0; NUM_PREDICTORS];
+    let mut nerr = 0.0f64;
+    for t in 0..hist.len() {
+        let (x, m) = (hist[t], mask[t]);
+        if m > 0.5 && s.count > 0.0 {
+            let p = predict(&s, hist, mask, t);
+            for i in 0..NUM_PREDICTORS {
+                let d = p[i] - x;
+                err[i] += d * d;
+            }
+            nerr += 1.0;
+        }
+        update(&mut s, x, m);
+    }
+    let denom = nerr.max(1.0);
+    let mut mses = [0.0; NUM_PREDICTORS];
+    for i in 0..NUM_PREDICTORS {
+        mses[i] = err[i] / denom;
+    }
+    BankOutput { preds: predict(&s, hist, mask, hist.len()), mses }
+}
+
+/// Convenience wrapper for unmasked observation vectors.
+pub fn forecast_dense(obs: &[f64]) -> BankOutput {
+    let mask = vec![1.0; obs.len()];
+    forecast_bank(obs, &mask)
+}
+
+/// Streaming adaptive forecaster for one (site, client) stream — the
+/// incremental API the broker uses between GRIS refreshes.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveForecast {
+    obs: Vec<f64>,
+    capacity: usize,
+}
+
+impl AdaptiveForecast {
+    pub fn new(capacity: usize) -> Self {
+        AdaptiveForecast { obs: Vec::new(), capacity: capacity.max(1) }
+    }
+
+    pub fn observe(&mut self, bw: f64) {
+        self.obs.push(bw);
+        if self.obs.len() > self.capacity {
+            let drop = self.obs.len() - self.capacity;
+            self.obs.drain(..drop);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.obs.is_empty()
+    }
+
+    /// Current adaptive prediction (None with no history).
+    pub fn predict(&self) -> Option<f64> {
+        if self.obs.is_empty() {
+            None
+        } else {
+            Some(forecast_dense(&self.obs).best())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_history_predicts_zero() {
+        let out = forecast_bank(&[], &[]);
+        assert_eq!(out.preds, [0.0; NUM_PREDICTORS]);
+        assert_eq!(out.mses, [0.0; NUM_PREDICTORS]);
+    }
+
+    #[test]
+    fn single_observation_everywhere() {
+        let out = forecast_bank(&[0.0, 42.0, 0.0], &[0.0, 1.0, 0.0]);
+        for p in out.preds {
+            assert_eq!(p, 42.0);
+        }
+        assert_eq!(out.mses, [0.0; NUM_PREDICTORS]);
+    }
+
+    #[test]
+    fn constant_series_zero_mse() {
+        let obs = vec![7.0; 20];
+        let out = forecast_dense(&obs);
+        for p in out.preds {
+            assert!((p - 7.0).abs() < 1e-12);
+        }
+        for m in out.mses {
+            assert!(m.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn last_value_and_running_mean() {
+        let out = forecast_dense(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(out.preds[0], 40.0);
+        assert_eq!(out.preds[1], 25.0);
+    }
+
+    #[test]
+    fn sliding_means() {
+        let obs: Vec<f64> = (1..=12).map(|x| x as f64).collect();
+        let out = forecast_dense(&obs);
+        assert_eq!(out.preds[2], (9.0 + 10.0 + 11.0 + 12.0) / 4.0);
+        assert_eq!(out.preds[1], 6.5);
+    }
+
+    #[test]
+    fn median_rejects_spike() {
+        let mut obs = vec![50.0; 10];
+        obs.extend([5000.0, 50.0, 50.0]);
+        let out = forecast_dense(&obs);
+        assert_eq!(out.preds[7], 50.0);
+        // last-value also fine here; EMA 0.6 got dragged up.
+        assert!(out.preds[6] > 50.0);
+    }
+
+    #[test]
+    fn ema_ordering_after_step() {
+        let mut obs = vec![10.0; 16];
+        obs.extend(vec![100.0; 8]);
+        let out = forecast_dense(&obs);
+        assert!(out.preds[4] < out.preds[5]);
+        assert!(out.preds[5] < out.preds[6]);
+        assert!(out.preds[6] > 90.0);
+    }
+
+    #[test]
+    fn adaptive_prefers_mean_on_white_noise() {
+        // Deterministic pseudo-noise around 50.
+        let mut rng = crate::util::prng::Rng::new(5);
+        let obs: Vec<f64> = (0..64).map(|_| rng.gauss(50.0, 5.0)).collect();
+        let out = forecast_dense(&obs);
+        let best = out.best_index();
+        // An averaging predictor (running/long-window mean or an EMA)
+        // should win over last-value on white noise.
+        assert!(out.mses[best] <= out.mses[0]);
+        assert!([1usize, 3, 4, 5].contains(&best), "best {best}");
+        assert!(out.mses[1] < out.mses[0], "mean must beat last-value");
+    }
+
+    #[test]
+    fn adaptive_prefers_fast_tracker_on_random_walk() {
+        let mut rng = crate::util::prng::Rng::new(6);
+        let mut x = 500.0;
+        let obs: Vec<f64> = (0..64)
+            .map(|_| {
+                x += rng.gauss(0.0, 30.0);
+                x
+            })
+            .collect();
+        let out = forecast_dense(&obs);
+        let best = out.best_index();
+        // Last-value / fast EMA / short mean family tracks a walk best.
+        assert!([0usize, 2, 5, 6, 7].contains(&best), "best {best}");
+    }
+
+    #[test]
+    fn masked_slots_do_not_perturb() {
+        let hist = [10.0, 999.0, 20.0, 999.0, 30.0];
+        let mask = [1.0, 0.0, 1.0, 0.0, 1.0];
+        let dense = forecast_dense(&[10.0, 20.0, 30.0]);
+        let masked = forecast_bank(&hist, &mask);
+        // Predictors that only depend on the valid subsequence agree:
+        assert_eq!(masked.preds[0], dense.preds[0]);
+        assert_eq!(masked.preds[1], dense.preds[1]);
+        assert_eq!(masked.preds[4], dense.preds[4]);
+        assert_eq!(masked.preds[7], dense.preds[7]);
+    }
+
+    #[test]
+    fn streaming_wrapper_trims_and_predicts() {
+        let mut f = AdaptiveForecast::new(8);
+        assert!(f.predict().is_none());
+        for i in 0..20 {
+            f.observe(100.0 + i as f64);
+        }
+        assert_eq!(f.len(), 8);
+        let p = f.predict().unwrap();
+        assert!(p > 100.0 && p < 130.0);
+    }
+}

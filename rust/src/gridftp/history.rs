@@ -1,0 +1,344 @@
+//! Transfer instrumentation records and bandwidth history.
+//!
+//! Implements the data behind the paper's Figure 4 (site-wide
+//! `TransferBandwidth` summary: max/min/avg read+write bandwidth) and
+//! Figure 5 (`SourceTransferBandwidth`: last transfer per source), plus
+//! the §3.2 extensions the paper motivates: standard deviations and a
+//! trailing per-source observation window for prediction.
+
+use std::collections::BTreeMap;
+
+/// Transfer direction, from the storage server's point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Server → client (a read of the replica).
+    Read,
+    /// Client → server (a write / replica creation).
+    Write,
+}
+
+/// One instrumented transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferRecord {
+    /// Simulated start time.
+    pub at: f64,
+    /// The remote endpoint ("source site" in Fig 5 terms).
+    pub peer: String,
+    pub direction: Direction,
+    pub bytes: f64,
+    pub duration: f64,
+}
+
+impl TransferRecord {
+    pub fn bandwidth(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.bytes / self.duration
+        }
+    }
+}
+
+/// Streaming summary statistics (Welford) for one direction.
+#[derive(Debug, Clone, Default)]
+pub struct BandwidthStats {
+    pub count: u64,
+    pub max: f64,
+    pub min: f64,
+    mean: f64,
+    m2: f64,
+    pub last: f64,
+    pub last_peer: String,
+}
+
+impl BandwidthStats {
+    fn observe(&mut self, bw: f64, peer: &str) {
+        self.count += 1;
+        if self.count == 1 {
+            self.max = bw;
+            self.min = bw;
+        } else {
+            self.max = self.max.max(bw);
+            self.min = self.min.min(bw);
+        }
+        let delta = bw - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (bw - self.mean);
+        self.last = bw;
+        self.last_peer = peer.to_string();
+    }
+
+    pub fn avg(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / self.count as f64).sqrt()
+        }
+    }
+}
+
+/// Per-source trailing window of read-bandwidth observations.
+#[derive(Debug, Clone)]
+pub struct SourceHistory {
+    window: usize,
+    /// (time, bandwidth) oldest → newest.
+    obs: Vec<(f64, f64)>,
+    pub stats: BandwidthStats,
+}
+
+impl SourceHistory {
+    fn new(window: usize) -> Self {
+        SourceHistory { window, obs: Vec::new(), stats: BandwidthStats::default() }
+    }
+
+    fn push(&mut self, at: f64, bw: f64, peer: &str) {
+        self.stats.observe(bw, peer);
+        self.obs.push((at, bw));
+        if self.obs.len() > self.window {
+            let drop = self.obs.len() - self.window;
+            self.obs.drain(..drop);
+        }
+    }
+
+    /// The trailing bandwidth window, oldest → newest.
+    pub fn window(&self) -> Vec<f64> {
+        self.obs.iter().map(|(_, bw)| *bw).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.obs.is_empty()
+    }
+}
+
+/// The full history store of one storage site's GridFTP server.
+#[derive(Debug)]
+pub struct HistoryStore {
+    site: String,
+    window: usize,
+    pub rd: BandwidthStats,
+    pub wr: BandwidthStats,
+    per_source: BTreeMap<String, SourceHistory>,
+    records: Vec<TransferRecord>,
+    keep_records: usize,
+    /// Rendered-attribute caches, invalidated on `record` (GRIS
+    /// providers query far more often than transfers complete — Perf
+    /// log P4).
+    cache_fig4: Option<Vec<(String, String)>>,
+    cache_fig5: BTreeMap<String, Vec<(String, String)>>,
+}
+
+impl HistoryStore {
+    pub fn new(site: &str, window: usize) -> Self {
+        HistoryStore {
+            site: site.to_string(),
+            window,
+            rd: BandwidthStats::default(),
+            wr: BandwidthStats::default(),
+            per_source: BTreeMap::new(),
+            records: Vec::new(),
+            keep_records: 4096,
+            cache_fig4: None,
+            cache_fig5: BTreeMap::new(),
+        }
+    }
+
+    pub fn site(&self) -> &str {
+        &self.site
+    }
+
+    /// Ingest one instrumented transfer.
+    pub fn record(&mut self, rec: TransferRecord) {
+        let bw = rec.bandwidth();
+        match rec.direction {
+            Direction::Read => {
+                self.rd.observe(bw, &rec.peer);
+                self.per_source
+                    .entry(rec.peer.clone())
+                    .or_insert_with(|| SourceHistory::new(self.window))
+                    .push(rec.at, bw, &rec.peer);
+            }
+            Direction::Write => self.wr.observe(bw, &rec.peer),
+        }
+        self.records.push(rec);
+        if self.records.len() > self.keep_records {
+            let drop = self.records.len() - self.keep_records;
+            self.records.drain(..drop);
+        }
+        self.cache_fig4 = None;
+        self.cache_fig5.clear();
+    }
+
+    pub fn source(&self, peer: &str) -> Option<&SourceHistory> {
+        self.per_source.get(peer)
+    }
+
+    pub fn sources(&self) -> impl Iterator<Item = (&str, &SourceHistory)> {
+        self.per_source.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn records(&self) -> &[TransferRecord] {
+        &self.records
+    }
+
+    /// Figure-4 attributes, as GRIS `(attr, value)` pairs (cached
+    /// between transfers — GRIS queries dominate).
+    pub fn fig4_attributes(&mut self) -> Vec<(String, String)> {
+        if let Some(c) = &self.cache_fig4 {
+            return c.clone();
+        }
+        let out = self.render_fig4();
+        self.cache_fig4 = Some(out.clone());
+        out
+    }
+
+    fn render_fig4(&self) -> Vec<(String, String)> {
+        let f = crate::directory::entry::format_f64;
+        vec![
+            ("MaxRDBandwidth".into(), f(self.rd.max)),
+            ("MinRDBandwidth".into(), f(self.rd.min)),
+            ("AvgRDBandwidth".into(), f(self.rd.avg())),
+            ("MaxWRBandwidth".into(), f(self.wr.max)),
+            ("MinWRBandwidth".into(), f(self.wr.min)),
+            ("AvgWRBandwidth".into(), f(self.wr.avg())),
+            ("StdRDBandwidth".into(), f(self.rd.std())),
+            ("StdWRBandwidth".into(), f(self.wr.std())),
+            ("NumTransfers".into(), f((self.rd.count + self.wr.count) as f64)),
+        ]
+    }
+
+    /// Figure-5 attributes for one source, plus the trailing window the
+    /// forecast engine consumes (`rdHistory`). Cached per peer between
+    /// transfers.
+    pub fn fig5_attributes(&mut self, peer: &str) -> Vec<(String, String)> {
+        if let Some(c) = self.cache_fig5.get(peer) {
+            return c.clone();
+        }
+        let out = self.render_fig5(peer);
+        self.cache_fig5.insert(peer.to_string(), out.clone());
+        out
+    }
+
+    fn render_fig5(&self, peer: &str) -> Vec<(String, String)> {
+        let f = crate::directory::entry::format_f64;
+        let mut out = vec![
+            ("lastRDBandwidth".into(), f(self.rd.last)),
+            ("lastRDurl".into(), format!("gsiftp://{}/", self.rd.last_peer)),
+            ("lastWRBandwidth".into(), f(self.wr.last)),
+            ("lastWRurl".into(), format!("gsiftp://{}/", self.wr.last_peer)),
+        ];
+        if let Some(src) = self.source(peer) {
+            out.push(("AvgRDBandwidth".into(), f(src.stats.avg())));
+            out.push(("NumTransfers".into(), f(src.stats.count as f64)));
+            let hist = src
+                .window()
+                .iter()
+                .map(|bw| f(*bw))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push(("rdHistory".into(), hist));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(at: f64, peer: &str, dir: Direction, bytes: f64, duration: f64) -> TransferRecord {
+        TransferRecord { at, peer: peer.into(), direction: dir, bytes, duration }
+    }
+
+    #[test]
+    fn summary_stats_match_hand_computation() {
+        let mut h = HistoryStore::new("anl", 16);
+        // Bandwidths: 100, 200, 400.
+        h.record(rec(0.0, "c1", Direction::Read, 1000.0, 10.0));
+        h.record(rec(1.0, "c1", Direction::Read, 2000.0, 10.0));
+        h.record(rec(2.0, "c2", Direction::Read, 4000.0, 10.0));
+        assert_eq!(h.rd.count, 3);
+        assert_eq!(h.rd.max, 400.0);
+        assert_eq!(h.rd.min, 100.0);
+        assert!((h.rd.avg() - 233.333).abs() < 0.01);
+        let var = ((100.0f64 - 233.3333).powi(2) + (200.0 - 233.3333f64).powi(2) + (400.0 - 233.3333f64).powi(2)) / 3.0;
+        assert!((h.rd.std() - var.sqrt()).abs() < 0.01);
+        assert_eq!(h.rd.last, 400.0);
+        assert_eq!(h.rd.last_peer, "c2");
+    }
+
+    #[test]
+    fn read_write_separated() {
+        let mut h = HistoryStore::new("anl", 16);
+        h.record(rec(0.0, "c1", Direction::Read, 1000.0, 1.0));
+        h.record(rec(1.0, "c1", Direction::Write, 500.0, 1.0));
+        assert_eq!(h.rd.count, 1);
+        assert_eq!(h.wr.count, 1);
+        assert_eq!(h.wr.last, 500.0);
+    }
+
+    #[test]
+    fn per_source_window_trims() {
+        let mut h = HistoryStore::new("anl", 4);
+        for i in 0..10 {
+            h.record(rec(i as f64, "c1", Direction::Read, (i + 1) as f64 * 100.0, 1.0));
+        }
+        let src = h.source("c1").unwrap();
+        assert_eq!(src.len(), 4);
+        assert_eq!(src.window(), vec![700.0, 800.0, 900.0, 1000.0]);
+        assert_eq!(src.stats.count, 10); // stats see everything
+    }
+
+    #[test]
+    fn fig4_attributes_complete() {
+        let mut h = HistoryStore::new("anl", 8);
+        h.record(rec(0.0, "c1", Direction::Read, 100.0, 1.0));
+        h.record(rec(0.0, "c1", Direction::Write, 50.0, 1.0));
+        let attrs: BTreeMap<String, String> = h.fig4_attributes().into_iter().collect();
+        for key in [
+            "MaxRDBandwidth",
+            "MinRDBandwidth",
+            "AvgRDBandwidth",
+            "MaxWRBandwidth",
+            "MinWRBandwidth",
+            "AvgWRBandwidth",
+        ] {
+            assert!(attrs.contains_key(key), "missing {key}");
+        }
+        assert_eq!(attrs["NumTransfers"], "2");
+    }
+
+    #[test]
+    fn fig5_attributes_for_source() {
+        let mut h = HistoryStore::new("anl", 8);
+        h.record(rec(0.0, "comet.xyz.com", Direction::Read, 100.0, 1.0));
+        h.record(rec(1.0, "comet.xyz.com", Direction::Read, 300.0, 1.0));
+        let attrs: BTreeMap<String, String> =
+            h.fig5_attributes("comet.xyz.com").into_iter().collect();
+        assert_eq!(attrs["lastRDBandwidth"], "300");
+        assert_eq!(attrs["lastRDurl"], "gsiftp://comet.xyz.com/");
+        assert_eq!(attrs["rdHistory"], "100,300");
+        assert_eq!(attrs["NumTransfers"], "2");
+    }
+
+    #[test]
+    fn record_buffer_bounded() {
+        let mut h = HistoryStore::new("anl", 8);
+        h.keep_records = 100;
+        for i in 0..500 {
+            h.record(rec(i as f64, "c", Direction::Read, 1.0, 1.0));
+        }
+        assert_eq!(h.records().len(), 100);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated GridFTP fabric with transfer instrumentation (paper §3.2).
+//!
+//! "We gather this performance data by using instrumentation
+//! incorporated in the GridFTP server" — every transfer through
+//! [`service::GridFtp`] produces a [`history::TransferRecord`]; the
+//! per-site [`history::HistoryStore`] maintains the Figure-4 summary
+//! statistics and the Figure-5 per-source records, and exposes the
+//! trailing observation window the forecast engine consumes. A GRIS
+//! provider closure publishes all of it into the directory.
+
+pub mod history;
+pub mod service;
+
+pub use history::{HistoryStore, TransferRecord};
+pub use service::GridFtp;

@@ -1,0 +1,203 @@
+//! The simulated GridFTP service: executes transfers over the simnet
+//! topology and instruments every one of them into the history store.
+//!
+//! This is the Access-phase backend (paper §5.1.2) *and* the data
+//! source for §3.2's history-based prediction: the same
+//! `Arc<RwLock<HistoryStore>>` a `GridFtp` writes is read by the site's
+//! GRIS provider when a broker queries performance attributes.
+
+use std::sync::{Arc, RwLock};
+
+use crate::simnet::Topology;
+
+use super::history::{Direction, HistoryStore, TransferRecord};
+
+/// Outcome of one simulated transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferOutcome {
+    pub site: String,
+    pub bytes: f64,
+    pub duration: f64,
+    pub bandwidth: f64,
+    /// Simulated start time.
+    pub started_at: f64,
+}
+
+/// The per-grid GridFTP fabric: one logical server per site, all
+/// writing instrumentation into per-site history stores.
+pub struct GridFtp {
+    histories: Vec<Arc<RwLock<HistoryStore>>>,
+}
+
+impl GridFtp {
+    /// One history store per site in `topo`, with `window`-deep
+    /// per-source observation windows.
+    pub fn new(topo: &Topology, window: usize) -> GridFtp {
+        let histories = (0..topo.len())
+            .map(|i| {
+                Arc::new(RwLock::new(HistoryStore::new(
+                    &topo.site(i).cfg.name,
+                    window,
+                )))
+            })
+            .collect();
+        GridFtp { histories }
+    }
+
+    /// Shared handle to a site's history (for GRIS providers).
+    pub fn history(&self, site: usize) -> Arc<RwLock<HistoryStore>> {
+        self.histories[site].clone()
+    }
+
+    /// Execute a read transfer of `bytes` from `site` to `client`,
+    /// advancing nothing but sampling the topology's current state.
+    /// Returns the outcome and logs the instrumentation record.
+    pub fn fetch(
+        &self,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        bytes: f64,
+    ) -> TransferOutcome {
+        topo.begin_transfer(site);
+        let (duration, bandwidth) = topo.transfer_from(site, bytes);
+        topo.end_transfer(site);
+        let started_at = topo.now;
+        self.histories[site].write().unwrap().record(TransferRecord {
+            at: started_at,
+            peer: client.to_string(),
+            direction: Direction::Read,
+            bytes,
+            duration,
+        });
+        TransferOutcome {
+            site: topo.site(site).cfg.name.clone(),
+            bytes,
+            duration,
+            bandwidth,
+            started_at,
+        }
+    }
+
+    /// Execute a write (replica creation) to `site` from `client`.
+    pub fn store(
+        &self,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        bytes: f64,
+    ) -> TransferOutcome {
+        topo.begin_transfer(site);
+        let (duration, bandwidth) = topo.transfer_from(site, bytes);
+        topo.end_transfer(site);
+        topo.consume_space(site, bytes);
+        let started_at = topo.now;
+        self.histories[site].write().unwrap().record(TransferRecord {
+            at: started_at,
+            peer: client.to_string(),
+            direction: Direction::Write,
+            bytes,
+            duration,
+        });
+        TransferOutcome {
+            site: topo.site(site).cfg.name.clone(),
+            bytes,
+            duration,
+            bandwidth,
+            started_at,
+        }
+    }
+
+    /// Warm every site's history with `n` synthetic probe transfers per
+    /// site (what a freshly deployed grid accumulates organically).
+    pub fn warm(&self, topo: &mut Topology, client: &str, n: usize, probe_bytes: f64) {
+        for _ in 0..n {
+            for site in 0..self.histories.len() {
+                self.fetch(topo, site, client, probe_bytes);
+            }
+            topo.advance(60.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    fn setup() -> (Topology, GridFtp) {
+        let topo = Topology::build(&GridConfig::generate(4, 21));
+        let ftp = GridFtp::new(&topo, 16);
+        (topo, ftp)
+    }
+
+    #[test]
+    fn fetch_records_instrumentation() {
+        let (mut topo, ftp) = setup();
+        let out = ftp.fetch(&mut topo, 1, "comet.xyz.com", 5e6);
+        assert!(out.duration > 0.0);
+        let h = ftp.history(1);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 1);
+        assert_eq!(h.rd.last_peer, "comet.xyz.com");
+        assert!((h.rd.last - out.bandwidth).abs() / out.bandwidth < 1e-9);
+        assert_eq!(h.source("comet.xyz.com").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn store_consumes_space_and_logs_write() {
+        let (mut topo, ftp) = setup();
+        let avail0 = topo.site(2).available_space();
+        ftp.store(&mut topo, 2, "client-a", 1e9);
+        assert!(topo.site(2).available_space() < avail0);
+        let h = ftp.history(2);
+        assert_eq!(h.read().unwrap().wr.count, 1);
+        assert_eq!(h.read().unwrap().rd.count, 0);
+    }
+
+    #[test]
+    fn warm_populates_all_sites() {
+        let (mut topo, ftp) = setup();
+        ftp.warm(&mut topo, "probe", 5, 1e6);
+        for i in 0..4 {
+            let h = ftp.history(i);
+            let h = h.read().unwrap();
+            assert_eq!(h.rd.count, 5);
+            assert_eq!(h.source("probe").unwrap().len(), 5);
+        }
+        assert!(topo.now >= 5.0 * 60.0);
+    }
+
+    #[test]
+    fn faster_sites_deliver_higher_bandwidth_on_average() {
+        // Sanity link between config and outcomes: the best-connected
+        // site should out-deliver the worst over many transfers.
+        let cfg = GridConfig::generate(6, 33);
+        let mut topo = Topology::build(&cfg);
+        let ftp = GridFtp::new(&topo, 64);
+        ftp.warm(&mut topo, "probe", 30, 20e6);
+        let mean_bw = |i: usize| {
+            let h = ftp.history(i);
+            let h = h.read().unwrap();
+            h.rd.avg()
+        };
+        let best_cfg = (0..6).max_by(|&a, &b| {
+            cfg.sites[a]
+                .wan_bandwidth
+                .partial_cmp(&cfg.sites[b].wan_bandwidth)
+                .unwrap()
+        }).unwrap();
+        let worst_cfg = (0..6).min_by(|&a, &b| {
+            cfg.sites[a]
+                .wan_bandwidth
+                .partial_cmp(&cfg.sites[b].wan_bandwidth)
+                .unwrap()
+        }).unwrap();
+        assert!(
+            mean_bw(best_cfg) > mean_bw(worst_cfg),
+            "best {} worst {}",
+            mean_bw(best_cfg),
+            mean_bw(worst_cfg)
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # globus-replica
+//!
+//! A full reproduction of *“Replica Selection in the Globus Data Grid”*
+//! (Vazhkudai, Tuecke & Foster, 2001) as a three-layer Rust + JAX/Pallas
+//! system.
+//!
+//! The paper builds a **decentralized storage broker** that selects the best
+//! replica of a logical file by (1) querying a **replica catalog**, (2)
+//! pulling storage-system metadata from per-site **GRIS** directory servers
+//! (Globus MDS / LDAP), (3) converting the LDIF results into Condor
+//! **ClassAds** and matchmaking them against the application's request ad,
+//! and (4) ranking matches — e.g. by available space or by predicted
+//! transfer bandwidth derived from GridFTP instrumentation history.
+//!
+//! Every substrate the paper depends on is implemented here:
+//!
+//! * [`classad`] — the Condor ClassAd language: lexer, parser, three-valued
+//!   evaluator, `MatchClassAd` semantics, ranking.
+//! * [`directory`] — an LDAP-lite MDS: DIT, object-class schema (Figures
+//!   2–5 of the paper), search filters, LDIF, GRIS/GIIS servers with a TCP
+//!   wire protocol.
+//! * [`catalog`] — replica catalog + application metadata repository.
+//! * [`gridftp`] — a simulated GridFTP fabric with transfer instrumentation
+//!   feeding per-source bandwidth history (paper §3.2).
+//! * [`simnet`] — the time-varying wide-area network simulator standing in
+//!   for the authors' testbed.
+//! * [`forecast`] — NWS-style bandwidth predictor bank (pure Rust reference
+//!   implementation).
+//! * [`runtime`] — PJRT engine that loads the AOT-compiled JAX/Pallas
+//!   forecast + rank kernels (`artifacts/*.hlo.txt`) onto the broker's hot
+//!   path; Python never runs at request time.
+//! * [`broker`] — the paper's contribution: the decentralized storage
+//!   broker (Search / Match / Access phases) plus baseline selectors and a
+//!   centralized-manager comparator.
+//! * [`util`] — deterministic PRNG, unit parsing (`50G`, `75K/Sec`), JSON,
+//!   micro-benchmark + property-test harnesses (the image has no network,
+//!   so criterion/proptest equivalents are provided in-tree).
+
+pub mod broker;
+pub mod catalog;
+pub mod classad;
+pub mod config;
+pub mod directory;
+pub mod experiment;
+pub mod forecast;
+pub mod gridftp;
+pub mod metrics;
+pub mod runtime;
+pub mod simnet;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,169 @@
+//! Lightweight metrics registry: counters and latency histograms used
+//! by the broker, the directory servers and the gridftp fabric.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket log2 latency histogram (nanoseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // bucket i: [2^i, 2^(i+1)) ns
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_ns(&self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe(&self, d: std::time::Duration) {
+        self.observe_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A named registry of counters and histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as aligned text (the CLI's `--metrics` dump).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name:<40} {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist    {name:<40} n={} mean={:.1}µs p99≤{:.1}µs\n",
+                h.count(),
+                h.mean_ns() / 1e3,
+                h.quantile_ns(0.99) as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.counter("requests").inc();
+        m.counter("requests").add(4);
+        assert_eq!(m.counter("requests").get(), 5);
+        assert_eq!(m.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.observe_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_ns() > 0.0);
+        assert!(h.quantile_ns(0.5) >= 128);
+        assert!(h.quantile_ns(0.99) >= 65_536);
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let m = Metrics::new();
+        m.counter("broker.requests").inc();
+        m.histogram("broker.match_ns").observe_ns(1234);
+        let text = m.render();
+        assert!(text.contains("broker.requests"));
+        assert!(text.contains("broker.match_ns"));
+    }
+}

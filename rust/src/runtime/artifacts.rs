@@ -1,0 +1,214 @@
+//! Artifact manifest: shapes/dtypes of the AOT entry points, written by
+//! `python/compile/aot.py` and validated here before anything loads.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor's declared shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<EntrySpec>,
+    pub predictor_names: Vec<String>,
+    pub num_predictors: usize,
+}
+
+fn tensor_list(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().context("expected tensor array")?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor missing name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("tensor missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        if v.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest interchange format is not hlo-text");
+        }
+        let mut entries = Vec::new();
+        let emap = v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .context("manifest missing entries")?;
+        for (name, e) in emap {
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .context("entry missing file")?,
+            );
+            if !file.exists() {
+                bail!("artifact file {file:?} missing — run `make artifacts`");
+            }
+            entries.push(EntrySpec {
+                name: name.clone(),
+                file,
+                inputs: tensor_list(e.get("inputs").context("entry missing inputs")?)?,
+                outputs: tensor_list(e.get("outputs").context("entry missing outputs")?)?,
+            });
+        }
+        let bank = v.get("predictor_bank").context("manifest missing predictor_bank")?;
+        let predictor_names: Vec<String> = bank
+            .get("names")
+            .and_then(Json::as_arr)
+            .context("bank missing names")?
+            .iter()
+            .filter_map(|n| n.as_str().map(|s| s.to_string()))
+            .collect();
+        let num_predictors = bank
+            .get("num_predictors")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as usize;
+        if predictor_names.len() != num_predictors {
+            bail!(
+                "bank names ({}) disagree with num_predictors ({num_predictors})",
+                predictor_names.len()
+            );
+        }
+        Ok(Manifest { dir, entries, predictor_names, num_predictors })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The default artifact directory: `$ARTIFACTS_DIR` or
+    /// `<repo-root>/artifacts` discovered relative to the executable's
+    /// cwd.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("ARTIFACTS_DIR") {
+            return PathBuf::from(d);
+        }
+        // Walk up from cwd looking for artifacts/manifest.json.
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..5 {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{
+        "version": 1,
+        "interchange": "hlo-text",
+        "predictor_bank": {"num_predictors": 2, "names": ["a", "b"],
+                           "window_short": 4, "window_long": 16,
+                           "ema_alphas": [0.1]},
+        "entries": {
+            "toy": {
+                "file": "toy.hlo.txt",
+                "sha256": "x",
+                "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"}],
+                "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}]
+            }
+        }
+    }"#;
+
+    fn write_minimal(dir: &Path) {
+        std::fs::write(dir.join("manifest.json"), MINIMAL).unwrap();
+        std::fs::write(dir.join("toy.hlo.txt"), "HloModule toy").unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("gr-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_minimal(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.num_predictors, 2);
+        let e = m.entry("toy").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert!(m.entry("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("gr-manifest2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINIMAL).unwrap();
+        // no toy.hlo.txt
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft test: exercises the real artifacts when present.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entry("forecast").is_some());
+            assert!(m.entry("rank").is_some());
+            assert_eq!(m.num_predictors, 8);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! The PJRT engine: compile-once execution of the AOT artifacts.
+//!
+//! The `xla` crate's handles are `Rc`-based (not `Send`), so the
+//! thread-safe face of the runtime is [`EngineHandle`]: a dedicated
+//! worker thread owns the [`Engine`] and serves forecast/rank calls
+//! over channels. The broker clones the handle freely across client
+//! threads; the executable is still compiled exactly once.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+
+/// Output of the forecast entry point for `n` real sites.
+#[derive(Debug, Clone)]
+pub struct ForecastOutput {
+    /// [n][P] every forecaster's prediction.
+    pub preds: Vec<Vec<f32>>,
+    /// [n][P] every forecaster's backtest MSE.
+    pub mses: Vec<Vec<f32>>,
+    /// [n] the min-MSE forecaster's prediction.
+    pub best: Vec<f32>,
+    /// [n] load-discounted effective bandwidth.
+    pub eff: Vec<f32>,
+}
+
+/// Output of the rank entry point for `q` requests over `r` replicas.
+#[derive(Debug, Clone)]
+pub struct RankOutput {
+    /// [q][r] scores (-inf = infeasible).
+    pub scores: Vec<Vec<f32>>,
+    /// [q] winner index (meaningless when best_score is -inf).
+    pub best_idx: Vec<i32>,
+    /// [q] winner score.
+    pub best_score: Vec<f32>,
+}
+
+struct LoadedEntry {
+    exe: xla::PjRtLoadedExecutable,
+    inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// The engine: a shared CPU PJRT client plus one compiled executable
+/// per artifact entry.
+pub struct Engine {
+    manifest: Manifest,
+    forecast: LoadedEntry,
+    rank: LoadedEntry,
+    /// AOT shapes.
+    pub aot_sites: usize,
+    pub aot_window: usize,
+    pub aot_replicas: usize,
+    pub aot_requests: usize,
+    pub aot_attrs: usize,
+    pub num_predictors: usize,
+}
+
+fn load_entry(client: &xla::PjRtClient, manifest: &Manifest, name: &str) -> Result<LoadedEntry> {
+    let spec = manifest
+        .entry(name)
+        .with_context(|| format!("manifest has no entry {name:?}"))?;
+    let path = spec
+        .file
+        .to_str()
+        .context("artifact path not utf-8")?
+        .to_string();
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .with_context(|| format!("parsing HLO text {path}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .with_context(|| format!("PJRT compile of {name}"))?;
+    Ok(LoadedEntry {
+        exe,
+        inputs: spec
+            .inputs
+            .iter()
+            .map(|t| (t.shape.clone(), t.dtype.clone()))
+            .collect(),
+    })
+}
+
+impl Engine {
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(Manifest::default_dir())
+    }
+
+    /// Load + compile both entry points.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let forecast = load_entry(&client, &manifest, "forecast")?;
+        let rank = load_entry(&client, &manifest, "rank")?;
+        let fin = &forecast.inputs;
+        let rin = &rank.inputs;
+        let (aot_sites, aot_window) = (fin[0].0[0], fin[0].0[1]);
+        let (aot_replicas, aot_attrs) = (rin[0].0[0], rin[0].0[1]);
+        let aot_requests = rin[1].0[0];
+        let num_predictors = manifest.num_predictors;
+        Ok(Engine {
+            manifest,
+            forecast,
+            rank,
+            aot_sites,
+            aot_window,
+            aot_replicas,
+            aot_requests,
+            aot_attrs,
+            num_predictors,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run the forecast artifact over `n = hist.len()` sites, each with
+    /// up to `aot_window` trailing observations (shorter histories are
+    /// left-padded with masked slots). `n` may exceed `aot_sites`; the
+    /// engine batches in AOT-sized chunks.
+    pub fn forecast(&self, hist: &[Vec<f64>], load: &[f64]) -> Result<ForecastOutput> {
+        if hist.len() != load.len() {
+            bail!("hist ({}) and load ({}) disagree", hist.len(), load.len());
+        }
+        let n = hist.len();
+        let (s, w, p) = (self.aot_sites, self.aot_window, self.num_predictors);
+        let mut out = ForecastOutput {
+            preds: Vec::with_capacity(n),
+            mses: Vec::with_capacity(n),
+            best: Vec::with_capacity(n),
+            eff: Vec::with_capacity(n),
+        };
+        for chunk_start in (0..n).step_by(s) {
+            let chunk = &hist[chunk_start..(chunk_start + s).min(n)];
+            let loads = &load[chunk_start..(chunk_start + s).min(n)];
+            let mut h = vec![0f32; s * w];
+            let mut m = vec![0f32; s * w];
+            let mut l = vec![0f32; s];
+            for (i, series) in chunk.iter().enumerate() {
+                let take = series.len().min(w);
+                let src = &series[series.len() - take..];
+                // Right-align the observations: oldest first at w-take.
+                for (j, &v) in src.iter().enumerate() {
+                    h[i * w + (w - take) + j] = v as f32;
+                    m[i * w + (w - take) + j] = 1.0;
+                }
+                l[i] = loads[i].clamp(0.0, 1.0) as f32;
+            }
+            let lit_h = xla::Literal::vec1(&h).reshape(&[s as i64, w as i64])?;
+            let lit_m = xla::Literal::vec1(&m).reshape(&[s as i64, w as i64])?;
+            let lit_l = xla::Literal::vec1(&l);
+            let result = self.forecast.exe.execute::<xla::Literal>(&[lit_h, lit_m, lit_l])?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            let [preds, mses, best, eff]: [xla::Literal; 4] = tuple
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("forecast artifact returned wrong arity"))?;
+            let preds = preds.to_vec::<f32>()?;
+            let mses = mses.to_vec::<f32>()?;
+            let best = best.to_vec::<f32>()?;
+            let eff = eff.to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                out.preds.push(preds[i * p..(i + 1) * p].to_vec());
+                out.mses.push(mses[i * p..(i + 1) * p].to_vec());
+                out.best.push(best[i]);
+                out.eff.push(eff[i]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run the rank artifact: `attrs` is `r x a` (r ≤ aot_replicas per
+    /// call — the engine chunks), constraints and weights are `q x a`
+    /// with `q ≤ aot_requests`. Padded replica rows are filled with an
+    /// out-of-range sentinel so they can never win.
+    pub fn rank(
+        &self,
+        attrs: &[Vec<f64>],
+        lo: &[Vec<f64>],
+        hi: &[Vec<f64>],
+        weights: &[Vec<f64>],
+    ) -> Result<RankOutput> {
+        let (r_aot, q_aot, a) = (self.aot_replicas, self.aot_requests, self.aot_attrs);
+        let q = lo.len();
+        if q == 0 || q > q_aot {
+            bail!("rank supports 1..={q_aot} requests, got {q}");
+        }
+        if hi.len() != q || weights.len() != q {
+            bail!("lo/hi/weights arity mismatch");
+        }
+        for row in attrs {
+            if row.len() > a {
+                bail!("attribute row wider ({}) than AOT width {a}", row.len());
+            }
+        }
+        let n = attrs.len();
+        let mut scores: Vec<Vec<f32>> = vec![Vec::with_capacity(n); q];
+        const SENTINEL: f32 = -1e30;
+        for chunk_start in (0..n.max(1)).step_by(r_aot) {
+            let chunk_end = (chunk_start + r_aot).min(n);
+            let mut am = vec![SENTINEL; r_aot * a];
+            for (i, row) in attrs[chunk_start..chunk_end].iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    am[i * a + j] = v as f32;
+                }
+                // Unspecified trailing attrs default to 0 (in range for
+                // unconstrained requests).
+                for j in row.len()..a {
+                    am[i * a + j] = 0.0;
+                }
+            }
+            let fill = |rows: &[Vec<f64>], default: f32| -> Vec<f32> {
+                let mut m = vec![default; q_aot * a];
+                for (i, row) in rows.iter().enumerate() {
+                    for j in 0..a {
+                        m[i * a + j] = row.get(j).copied().unwrap_or(default as f64) as f32;
+                    }
+                }
+                m
+            };
+            let lom = fill(lo, -1e30);
+            let him = fill(hi, 1e30);
+            let wm = fill(weights, 0.0);
+            let mk = |v: &[f32], d0: usize| -> Result<xla::Literal> {
+                Ok(xla::Literal::vec1(v).reshape(&[d0 as i64, a as i64])?)
+            };
+            let result = self.rank.exe.execute::<xla::Literal>(&[
+                mk(&am, r_aot)?,
+                mk(&lom, q_aot)?,
+                mk(&him, q_aot)?,
+                mk(&wm, q_aot)?,
+            ])?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            let [sc, _bi, _bs]: [xla::Literal; 3] = tuple
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("rank artifact returned wrong arity"))?;
+            let sc = sc.to_vec::<f32>()?;
+            for qi in 0..q {
+                scores[qi].extend(&sc[qi * r_aot..qi * r_aot + (chunk_end - chunk_start)]);
+            }
+        }
+        // Recompute winners over the real (unpadded) score rows.
+        let mut best_idx = Vec::with_capacity(q);
+        let mut best_score = Vec::with_capacity(q);
+        for row in &scores {
+            let (mut bi, mut bs) = (0i32, f32::NEG_INFINITY);
+            for (i, &v) in row.iter().enumerate() {
+                if v > bs {
+                    bs = v;
+                    bi = i as i32;
+                }
+            }
+            best_idx.push(bi);
+            best_score.push(bs);
+        }
+        Ok(RankOutput { scores, best_idx, best_score })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-safe handle
+// ---------------------------------------------------------------------------
+
+enum Job {
+    Forecast {
+        hist: Vec<Vec<f64>>,
+        load: Vec<f64>,
+        reply: mpsc::Sender<Result<ForecastOutput>>,
+    },
+    Rank {
+        attrs: Vec<Vec<f64>>,
+        lo: Vec<Vec<f64>>,
+        hi: Vec<Vec<f64>>,
+        weights: Vec<Vec<f64>>,
+        reply: mpsc::Sender<Result<RankOutput>>,
+    },
+}
+
+/// `Send + Sync` face of the engine: requests are serialized through a
+/// worker thread that owns the non-`Send` PJRT handles.
+pub struct EngineHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    pub aot_sites: usize,
+    pub aot_window: usize,
+    pub num_predictors: usize,
+}
+
+impl EngineHandle {
+    /// Load + compile the artifacts on a dedicated worker thread.
+    pub fn spawn(dir: impl AsRef<std::path::Path>) -> Result<std::sync::Arc<EngineHandle>> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = boot_tx.send(Ok((e.aot_sites, e.aot_window, e.num_predictors)));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Forecast { hist, load, reply } => {
+                            let _ = reply.send(engine.forecast(&hist, &load));
+                        }
+                        Job::Rank { attrs, lo, hi, weights, reply } => {
+                            let _ = reply.send(engine.rank(&attrs, &lo, &hi, &weights));
+                        }
+                    }
+                }
+            })
+            .context("spawning engine worker")?;
+        let (aot_sites, aot_window, num_predictors) =
+            boot_rx.recv().context("engine worker died during load")??;
+        Ok(std::sync::Arc::new(EngineHandle {
+            tx: Mutex::new(tx),
+            aot_sites,
+            aot_window,
+            num_predictors,
+        }))
+    }
+
+    /// Spawn from the default artifact directory.
+    pub fn spawn_default() -> Result<std::sync::Arc<EngineHandle>> {
+        Self::spawn(Manifest::default_dir())
+    }
+
+    /// See [`Engine::forecast`].
+    pub fn forecast(&self, hist: &[Vec<f64>], load: &[f64]) -> Result<ForecastOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Forecast { hist: hist.to_vec(), load: load.to_vec(), reply })
+            .context("engine worker gone")?;
+        rx.recv().context("engine worker dropped reply")?
+    }
+
+    /// See [`Engine::rank`].
+    pub fn rank(
+        &self,
+        attrs: &[Vec<f64>],
+        lo: &[Vec<f64>],
+        hi: &[Vec<f64>],
+        weights: &[Vec<f64>],
+    ) -> Result<RankOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Rank {
+                attrs: attrs.to_vec(),
+                lo: lo.to_vec(),
+                hi: hi.to_vec(),
+                weights: weights.to_vec(),
+                reply,
+            })
+            .context("engine worker gone")?;
+        rx.recv().context("engine worker dropped reply")?
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and runs
+//! them on the broker's hot path.
+//!
+//! The Python side (`make artifacts`) lowers the L2 graphs to HLO
+//! *text*; this module parses the text with
+//! `HloModuleProto::from_text_file`, compiles once per entry point on a
+//! shared `PjRtClient::cpu()`, and exposes typed `forecast` / `rank`
+//! calls with automatic padding to the AOT shapes. Python never runs at
+//! request time.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::{Engine, ForecastOutput, RankOutput};

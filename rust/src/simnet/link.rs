@@ -1,0 +1,200 @@
+//! Time-varying link model.
+
+use crate::config::SiteConfig;
+use crate::util::prng::Rng;
+
+/// One directed WAN path from a storage site toward the client
+/// population. Bandwidth samples are generated lazily per *time bucket*
+/// so that queries at the same simulated time agree and the AR(1)
+/// correlation structure is respected no matter how irregularly the
+/// simulation samples.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Mean bandwidth, bytes/s.
+    pub mean: f64,
+    /// Diurnal amplitude (fraction of mean).
+    pub diurnal_amp: f64,
+    /// Diurnal period, seconds (24h scaled down in tests).
+    pub period: f64,
+    /// AR(1) coefficient of the noise process.
+    pub ar: f64,
+    /// Innovation std (fraction of mean).
+    pub noise_frac: f64,
+    /// Per-bucket congestion probability.
+    pub congestion_prob: f64,
+    /// One-way latency (s).
+    pub latency: f64,
+    /// Sample bucket width (s).
+    pub bucket: f64,
+    rng: Rng,
+    /// (bucket index, ar_state, congestion_factor) of the last sample.
+    state: Option<(i64, f64, f64)>,
+}
+
+impl Link {
+    pub fn from_site(cfg: &SiteConfig, rng: Rng) -> Link {
+        Link {
+            mean: cfg.wan_bandwidth,
+            diurnal_amp: cfg.diurnal_amp,
+            period: 86_400.0,
+            ar: cfg.ar_coeff,
+            noise_frac: cfg.noise_frac,
+            congestion_prob: cfg.congestion_prob,
+            latency: cfg.latency,
+            bucket: 60.0,
+            rng,
+            state: None,
+        }
+    }
+
+    /// Deterministic diurnal multiplier at time `t` (no randomness).
+    fn diurnal(&self, t: f64) -> f64 {
+        1.0 - self.diurnal_amp * 0.5 * (1.0 + (std::f64::consts::TAU * t / self.period).sin())
+    }
+
+    /// Advance the AR(1)/congestion state to the bucket containing `t`
+    /// and return the (bandwidth multiplier) noise state.
+    fn advance(&mut self, t: f64) -> (f64, f64) {
+        let target = (t / self.bucket).floor() as i64;
+        let (mut idx, mut ar_state, mut cong) = match self.state {
+            Some(s) if s.0 <= target => s,
+            // Time went backwards or first sample: re-seed at target.
+            _ => (target - 1, 0.0, 1.0),
+        };
+        while idx < target {
+            idx += 1;
+            ar_state = self.ar * ar_state + self.rng.gauss(0.0, self.noise_frac);
+            // Congestion episodes decay geometrically once triggered.
+            if self.rng.chance(self.congestion_prob) {
+                cong = (1.0 / self.rng.pareto(1.5, 1.2)).min(1.0); // share collapse
+            } else {
+                cong = (cong * 1.6).min(1.0); // recovery
+            }
+        }
+        self.state = Some((idx, ar_state, cong));
+        (ar_state, cong)
+    }
+
+    /// Bandwidth available to a *single* transfer starting at `t` that
+    /// shares the pipe with `concurrent` other active transfers.
+    /// Constant within one sample bucket (time is quantized so repeated
+    /// queries at the same instant agree).
+    pub fn bandwidth_at(&mut self, t: f64, concurrent: usize) -> f64 {
+        let (ar_state, cong) = self.advance(t);
+        let tq = (t / self.bucket).floor() * self.bucket;
+        let noise = (1.0 + ar_state).clamp(0.05, 3.0);
+        let share = 1.0 / (concurrent as f64 + 1.0);
+        (self.mean * self.diurnal(tq) * noise * cong * share).max(1.0)
+    }
+
+    /// Observe the *mean* bandwidth a transfer of `bytes` starting at
+    /// `t` would see, integrating over bucket transitions.
+    pub fn transfer_duration(&mut self, t: f64, bytes: f64, concurrent: usize) -> f64 {
+        let mut remaining = bytes;
+        let mut now = t;
+        let mut total = self.latency; // connection setup
+        // Integrate bucket by bucket; bail out after a hard cap.
+        for _ in 0..100_000 {
+            let bw = self.bandwidth_at(now, concurrent);
+            let bucket_end = (now / self.bucket).floor() * self.bucket + self.bucket;
+            let dt = (bucket_end - now).max(1e-6);
+            let can_move = bw * dt;
+            if can_move >= remaining {
+                total += remaining / bw;
+                return total;
+            }
+            remaining -= can_move;
+            total += dt;
+            now = bucket_end;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    fn link(seed: u64) -> Link {
+        let cfg = &GridConfig::generate(3, 9).sites[1];
+        Link::from_site(cfg, Rng::new(seed))
+    }
+
+    #[test]
+    fn bandwidth_positive_and_bounded() {
+        let mut l = link(1);
+        for i in 0..500 {
+            let bw = l.bandwidth_at(i as f64 * 30.0, 0);
+            assert!(bw > 0.0);
+            assert!(bw < l.mean * 4.0, "bw {bw} vs mean {}", l.mean);
+        }
+    }
+
+    #[test]
+    fn same_bucket_same_bandwidth() {
+        let mut l = link(2);
+        let a = l.bandwidth_at(1000.0, 0);
+        let b = l.bandwidth_at(1000.5, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn temporal_correlation_exists() {
+        // Lag-1 autocorrelation of consecutive bucket samples should be
+        // clearly positive — this is the signal history-based selection
+        // exploits.
+        let mut l = link(3);
+        l.congestion_prob = 0.0; // isolate the AR component
+        let xs: Vec<f64> = (0..2000)
+            .map(|i| l.bandwidth_at(i as f64 * l.bucket, 0))
+            .collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        let cov: f64 = xs.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum();
+        let rho = cov / var;
+        assert!(rho > 0.3, "lag-1 autocorrelation too low: {rho}");
+    }
+
+    #[test]
+    fn concurrency_shares_pipe() {
+        let mut a = link(4);
+        let mut b = link(4);
+        let t = 500.0;
+        let solo = a.bandwidth_at(t, 0);
+        let shared = b.bandwidth_at(t, 3);
+        assert!((solo / shared - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duration_scales_with_size() {
+        let mut l = link(5);
+        l.congestion_prob = 0.0;
+        let d1 = l.transfer_duration(0.0, 1e6, 0);
+        let mut l2 = link(5);
+        l2.congestion_prob = 0.0;
+        let d2 = l2.transfer_duration(0.0, 1e7, 0);
+        assert!(d2 > d1 * 5.0, "d1={d1} d2={d2}");
+    }
+
+    #[test]
+    fn diurnal_trough_slower_than_peak() {
+        let mut l = link(6);
+        l.noise_frac = 0.0;
+        l.congestion_prob = 0.0;
+        // quarter period: sin=1 (trough multiplier), three-quarters: sin=-1.
+        let trough = l.bandwidth_at(l.period * 0.25, 0);
+        let peak = l.bandwidth_at(l.period * 0.75, 0);
+        assert!(peak > trough);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = link(7);
+        let mut b = link(7);
+        for i in 0..100 {
+            let t = i as f64 * 77.0;
+            assert_eq!(a.bandwidth_at(t, 1), b.bandwidth_at(t, 1));
+        }
+    }
+}

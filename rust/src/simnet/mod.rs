@@ -1,0 +1,28 @@
+//! Wide-area network + storage simulator — the testbed substitute.
+//!
+//! The paper's evaluation ran on real Globus sites; with no such testbed
+//! available the reproduction simulates the property the paper's
+//! technique exploits: **per-(site,client) transfer bandwidth is
+//! temporally correlated** (history predicts the near future) while
+//! differing wildly across sites. Links combine
+//!
+//! * a site-specific mean (config `wan_bandwidth`),
+//! * a diurnal load cycle (slow sinusoid),
+//! * AR(1) noise (short-term correlation — what the forecasters latch
+//!   onto),
+//! * rare heavy-tailed congestion episodes (what robust predictors must
+//!   survive), and
+//! * a utilization-dependent share (concurrent transfers divide the
+//!   pipe).
+//!
+//! Simulated time is explicit (`f64` seconds) so experiments are fully
+//! deterministic given a seed.
+
+pub mod link;
+pub mod topology;
+pub mod trace;
+pub mod workload;
+
+pub use link::Link;
+pub use topology::{Site, Topology};
+pub use workload::{Request, Workload, WorkloadSpec};

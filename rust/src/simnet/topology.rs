@@ -1,0 +1,210 @@
+//! Grid topology: sites with storage state and their WAN links.
+
+use std::collections::BTreeMap;
+
+use crate::config::{GridConfig, SiteConfig};
+use crate::util::prng::Rng;
+
+use super::link::Link;
+
+/// A storage site's simulated state.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub cfg: SiteConfig,
+    /// Bytes currently used on the volume.
+    pub used: f64,
+    /// Number of transfers currently in flight from this site.
+    pub active_transfers: usize,
+}
+
+impl Site {
+    pub fn available_space(&self) -> f64 {
+        (self.cfg.total_space - self.used).max(0.0)
+    }
+
+    /// Current utilization in [0,1] — published as the GRIS "load"
+    /// dynamic attribute and used by the paper's §3.2 heuristic.
+    pub fn load(&self) -> f64 {
+        // Saturating occupancy model: each active transfer consumes a
+        // share of the site's service capacity.
+        (self.active_transfers as f64 / 8.0).min(1.0)
+    }
+}
+
+/// The whole simulated grid: sites + per-site client-facing links.
+#[derive(Clone)]
+pub struct Topology {
+    sites: Vec<Site>,
+    links: Vec<Link>,
+    by_name: BTreeMap<String, usize>,
+    /// Simulated wall clock (seconds).
+    pub now: f64,
+}
+
+impl Topology {
+    /// Build from a config; all randomness forks from `cfg.seed`.
+    pub fn build(cfg: &GridConfig) -> Topology {
+        let mut rng = Rng::new(cfg.seed);
+        let mut sites = Vec::new();
+        let mut links = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for (i, sc) in cfg.sites.iter().enumerate() {
+            by_name.insert(sc.name.clone(), i);
+            links.push(Link::from_site(sc, rng.fork(i as u64)));
+            sites.push(Site {
+                cfg: sc.clone(),
+                used: sc.total_space * sc.used_frac,
+                active_transfers: 0,
+            });
+        }
+        Topology { sites, links, by_name, now: 0.0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn site(&self, idx: usize) -> &Site {
+        &self.sites[idx]
+    }
+
+    pub fn site_mut(&mut self, idx: usize) -> &mut Site {
+        &mut self.sites[idx]
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn site_by_name(&self, name: &str) -> Option<&Site> {
+        self.index_of(name).map(|i| self.site(i))
+    }
+
+    pub fn sites(&self) -> impl Iterator<Item = &Site> {
+        self.sites.iter()
+    }
+
+    /// Advance simulated time.
+    pub fn advance(&mut self, dt: f64) {
+        self.now += dt;
+    }
+
+    /// Sample the instantaneous bandwidth a new transfer from `site`
+    /// would get right now.
+    pub fn current_bandwidth(&mut self, site: usize) -> f64 {
+        let concurrent = self.sites[site].active_transfers;
+        self.links[site].bandwidth_at(self.now, concurrent)
+    }
+
+    /// Simulate one read transfer of `bytes` from `site` starting now;
+    /// returns (duration_s, mean_bandwidth). Includes the disk-read
+    /// overhead (`drdTime`) and WAN latency; marks the transfer active
+    /// for the duration with respect to *itself* only (the caller
+    /// advances time between transfers as its workload dictates).
+    pub fn transfer_from(&mut self, site: usize, bytes: f64) -> (f64, f64) {
+        let concurrent = self.sites[site].active_transfers;
+        let disk = self.sites[site].cfg.drd_time_ms / 1e3
+            + bytes / self.sites[site].cfg.disk_rate;
+        let wan = self.links[site].transfer_duration(self.now, bytes, concurrent);
+        // Disk and WAN pipeline; the slower stage dominates.
+        let duration = disk.max(wan);
+        let mean_bw = bytes / duration;
+        (duration, mean_bw)
+    }
+
+    /// Mark a transfer in flight (affects sharing for others).
+    pub fn begin_transfer(&mut self, site: usize) {
+        self.sites[site].active_transfers += 1;
+    }
+
+    pub fn end_transfer(&mut self, site: usize) {
+        let s = &mut self.sites[site];
+        s.active_transfers = s.active_transfers.saturating_sub(1);
+    }
+
+    /// A probe copy: identical upcoming link behaviour (same RNG
+    /// state), so the clairvoyant oracle can measure "what would this
+    /// transfer have cost from site X" without disturbing the real
+    /// topology.
+    pub fn clone_for_probe(&self) -> Topology {
+        self.clone()
+    }
+
+    /// Consume space on a site (replica creation).
+    pub fn consume_space(&mut self, site: usize, bytes: f64) {
+        self.sites[site].used = (self.sites[site].used + bytes).min(self.sites[site].cfg.total_space);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::build(&GridConfig::generate(6, 11))
+    }
+
+    #[test]
+    fn build_indexes_sites() {
+        let t = topo();
+        assert_eq!(t.len(), 6);
+        let name = t.site(3).cfg.name.clone();
+        assert_eq!(t.index_of(&name), Some(3));
+        assert!(t.index_of("nope").is_none());
+    }
+
+    #[test]
+    fn load_tracks_active_transfers() {
+        let mut t = topo();
+        assert_eq!(t.site(0).load(), 0.0);
+        for _ in 0..4 {
+            t.begin_transfer(0);
+        }
+        assert_eq!(t.site(0).load(), 0.5);
+        for _ in 0..20 {
+            t.begin_transfer(0);
+        }
+        assert_eq!(t.site(0).load(), 1.0);
+        t.end_transfer(0);
+        assert!(t.site(0).load() < 1.0 || t.site(0).active_transfers >= 8);
+    }
+
+    #[test]
+    fn transfer_duration_reasonable() {
+        let mut t = topo();
+        let bytes = 10e6;
+        let (d, bw) = t.transfer_from(0, bytes);
+        assert!(d > 0.0);
+        assert!((bw - bytes / d).abs() < 1e-6);
+        // Mean bandwidth cannot exceed the configured pipe by much.
+        assert!(bw <= t.site(0).cfg.wan_bandwidth * 4.0);
+    }
+
+    #[test]
+    fn space_accounting() {
+        let mut t = topo();
+        let avail0 = t.site(2).available_space();
+        t.consume_space(2, 1e9);
+        assert!((avail0 - t.site(2).available_space() - 1e9).abs() < 1.0);
+        // Saturates at capacity.
+        t.consume_space(2, 1e18);
+        assert_eq!(t.site(2).available_space(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let mut a = topo();
+        let mut b = topo();
+        for i in 0..5 {
+            a.advance(100.0);
+            b.advance(100.0);
+            let (da, _) = a.transfer_from(i % 6, 5e6);
+            let (db, _) = b.transfer_from(i % 6, 5e6);
+            assert_eq!(da, db);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Workload traces: record request streams to JSONL and replay them.
+//!
+//! The original evaluation would have driven the broker with real
+//! application request logs; this module provides the equivalent
+//! interchange so experiments can run from a *recorded* trace instead
+//! of the synthetic generator — `examples/datagrid_sim --trace-out t.jsonl`
+//! records, `--trace-in t.jsonl` replays, and identical traces yield
+//! identical selections (seeded end to end).
+//!
+//! Format: one JSON object per line:
+//! `{"at": 12.5, "client": 3, "file": 17, "min_bandwidth": 51200}`
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::workload::Request;
+
+/// Serialize one request as a JSONL line.
+pub fn to_line(r: &Request) -> String {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("at".to_string(), Json::Num(r.at));
+    m.insert("client".to_string(), Json::Num(r.client as f64));
+    m.insert("file".to_string(), Json::Num(r.file as f64));
+    m.insert("min_bandwidth".to_string(), Json::Num(r.min_bandwidth));
+    Json::Obj(m).to_string()
+}
+
+/// Parse one JSONL line.
+pub fn from_line(line: &str) -> Result<Request> {
+    let v = Json::parse(line.trim()).context("parsing trace line")?;
+    let num = |k: &str| -> Result<f64> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("trace line missing {k:?}: {line}"))
+    };
+    Ok(Request {
+        at: num("at")?,
+        client: num("client")? as usize,
+        file: num("file")? as usize,
+        min_bandwidth: num("min_bandwidth")?,
+    })
+}
+
+/// Write a trace file.
+pub fn save(path: impl AsRef<Path>, requests: &[Request]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating trace {:?}", path.as_ref()))?;
+    for r in requests {
+        writeln!(f, "{}", to_line(r))?;
+    }
+    Ok(())
+}
+
+/// Load a trace file (blank lines and `#` comments ignored); validates
+/// that arrival times are non-decreasing.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening trace {:?}", path.as_ref()))?;
+    let mut out = Vec::new();
+    let mut last_at = f64::NEG_INFINITY;
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let r = from_line(t).with_context(|| format!("trace line {}", i + 1))?;
+        if r.at < last_at {
+            anyhow::bail!("trace not time-ordered at line {}", i + 1);
+        }
+        last_at = r.at;
+        out.push(r);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::workload::{Workload, WorkloadSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gr-trace-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trips_a_generated_trace() {
+        let mut w = Workload::new(WorkloadSpec::default(), 5);
+        let reqs = w.take(200);
+        let path = tmp("roundtrip.jsonl");
+        save(&path, &reqs).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, reqs);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let path = tmp("comments.jsonl");
+        std::fs::write(
+            &path,
+            "# a trace\n\n{\"at\":1,\"client\":0,\"file\":2,\"min_bandwidth\":0}\n",
+        )
+        .unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].file, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_time_disorder_and_garbage() {
+        let path = tmp("bad.jsonl");
+        std::fs::write(
+            &path,
+            "{\"at\":5,\"client\":0,\"file\":0,\"min_bandwidth\":0}\n\
+             {\"at\":1,\"client\":0,\"file\":0,\"min_bandwidth\":0}\n",
+        )
+        .unwrap();
+        assert!(load(&path).unwrap_err().to_string().contains("time-ordered"));
+        std::fs::write(&path, "{\"at\":5}\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "notjson\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,157 @@
+//! Workload generation: the request streams driving the experiments.
+//!
+//! Clients request logical files with Zipf popularity, Pareto file
+//! sizes (scientific datasets are heavy-tailed) and Poisson arrivals —
+//! the standard 2001-era data-grid workload assumptions.
+
+use crate::util::prng::Rng;
+
+/// One replica-access request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Arrival time (simulated seconds).
+    pub at: f64,
+    /// Client id.
+    pub client: usize,
+    /// Logical file index.
+    pub file: usize,
+    /// Required read bandwidth floor (bytes/s) the request ad carries
+    /// (0 = unconstrained).
+    pub min_bandwidth: f64,
+}
+
+/// Workload parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub clients: usize,
+    pub files: usize,
+    /// Mean request inter-arrival (seconds).
+    pub mean_interarrival: f64,
+    /// Zipf skew for file popularity (0 = uniform-ish, →1 = very skewed).
+    pub zipf_theta: f64,
+    /// Fraction of requests that carry a bandwidth floor.
+    pub constrained_frac: f64,
+    /// The floor, bytes/s, when present.
+    pub bandwidth_floor: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            clients: 8,
+            files: 32,
+            mean_interarrival: 30.0,
+            zipf_theta: 0.8,
+            constrained_frac: 0.2,
+            bandwidth_floor: 50.0 * 1024.0, // the paper's 50K/Sec
+        }
+    }
+}
+
+/// A lazily generated request stream.
+pub struct Workload {
+    spec: WorkloadSpec,
+    rng: Rng,
+    now: f64,
+}
+
+impl Workload {
+    pub fn new(spec: WorkloadSpec, seed: u64) -> Workload {
+        Workload { spec, rng: Rng::new(seed ^ 0x30AD_10AD), now: 0.0 }
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> Request {
+        self.now += self.rng.exp(1.0 / self.spec.mean_interarrival);
+        let file = self.rng.zipf(self.spec.files, self.spec.zipf_theta);
+        Request {
+            at: self.now,
+            client: self.rng.index(self.spec.clients),
+            file,
+            min_bandwidth: if self.rng.chance(self.spec.constrained_frac) {
+                self.spec.bandwidth_floor
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Generate `n` requests in arrival order.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Pareto file sizes for the catalog (index-addressed, deterministic
+    /// for a given workload seed).
+    pub fn file_sizes(spec: &WorkloadSpec, seed: u64, median_mb: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ 0xF11E_5125);
+        (0..spec.files)
+            .map(|_| {
+                let mb = rng.pareto(median_mb / 1.5, 1.3).min(median_mb * 100.0);
+                mb * 1024.0 * 1024.0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_poisson_ish() {
+        let mut w = Workload::new(WorkloadSpec::default(), 1);
+        let reqs = w.take(2000);
+        for pair in reqs.windows(2) {
+            assert!(pair[1].at >= pair[0].at);
+        }
+        let gaps: Vec<f64> = reqs.windows(2).map(|p| p[1].at - p[0].at).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 30.0).abs() < 3.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn popularity_skewed() {
+        let mut w = Workload::new(WorkloadSpec::default(), 2);
+        let reqs = w.take(5000);
+        let mut counts = vec![0usize; w.spec.files];
+        for r in &reqs {
+            counts[r.file] += 1;
+        }
+        let top: usize = counts.iter().copied().max().unwrap();
+        let med = {
+            let mut c = counts.clone();
+            c.sort_unstable();
+            c[c.len() / 2]
+        };
+        assert!(top > med * 3, "top {top} median {med}");
+    }
+
+    #[test]
+    fn constrained_fraction_respected() {
+        let mut w = Workload::new(WorkloadSpec { constrained_frac: 0.5, ..Default::default() }, 3);
+        let reqs = w.take(4000);
+        let frac = reqs.iter().filter(|r| r.min_bandwidth > 0.0).count() as f64 / 4000.0;
+        assert!((frac - 0.5).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn sizes_heavy_tailed_and_deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = Workload::file_sizes(&spec, 9, 100.0);
+        let b = Workload::file_sizes(&spec, 9, 100.0);
+        assert_eq!(a, b);
+        let max = a.iter().cloned().fold(0.0, f64::max);
+        let min = a.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 5.0);
+    }
+
+    #[test]
+    fn clients_in_range() {
+        let mut w = Workload::new(WorkloadSpec::default(), 4);
+        for r in w.take(500) {
+            assert!(r.client < 8);
+            assert!(r.file < 32);
+        }
+    }
+}

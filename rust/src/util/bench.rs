@@ -1,0 +1,196 @@
+//! Micro-benchmark harness (criterion substitute, offline image).
+//!
+//! Measures wall-clock per iteration with warmup, adaptive iteration
+//! counts, and robust statistics (mean, std, p50/p90/p99). Benches are
+//! plain binaries (`[[bench]] harness = false`) that print aligned rows
+//! so `cargo bench` output can be diffed against EXPERIMENTS.md.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
+    /// Optional caller-provided throughput denominator (items/iter).
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    /// items/second derived from mean latency.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:8.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:8.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2}ms", ns / 1e6)
+    } else {
+        format!("{:8.2}s ", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:7.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:7.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:7.2}K/s", r / 1e3)
+    } else {
+        format!("{r:7.1}/s ")
+    }
+}
+
+/// A benchmark group with shared config; prints rows as cases finish.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Honor a quick mode for CI-ish runs: BENCH_QUICK=1.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        let (warmup, budget) = if quick {
+            (Duration::from_millis(50), Duration::from_millis(200))
+        } else {
+            (Duration::from_millis(300), Duration::from_secs(2))
+        };
+        println!("\n== {group} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "case", "mean", "p50", "p99", "std", "thrpt"
+        );
+        Bench {
+            group: group.to_string(),
+            warmup,
+            budget,
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, treating each call as processing `items` items.
+    pub fn case_items<R>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> R) -> &Stats {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers < 3 {
+            black_box(f());
+            witers += 1;
+            if witers > 1_000_000 {
+                break;
+            }
+        }
+        let est = wstart.elapsed().as_nanos() as f64 / witers as f64;
+        // Sample in batches so Instant overhead stays <1%.
+        let batch = ((100.0 / est.max(1.0)).ceil() as u64).clamp(1, 10_000);
+        let target_samples = ((self.budget.as_nanos() as f64 / (est * batch as f64))
+            .ceil() as u64)
+            .clamp(self.min_iters, 100_000);
+        let mut samples = Vec::with_capacity(target_samples as usize);
+        let start = Instant::now();
+        for _ in 0..target_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if start.elapsed() > self.budget * 2 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n as u64 * batch,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            p50_ns: pct(0.50),
+            p90_ns: pct(0.90),
+            p99_ns: pct(0.99),
+            items_per_iter: items,
+        };
+        println!(
+            "{:<44} {} {} {} {} {}",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p99_ns),
+            fmt_ns(stats.std_ns),
+            fmt_rate(stats.throughput()),
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Time `f` with one logical item per iteration.
+    pub fn case<R>(&mut self, name: &str, f: impl FnMut() -> R) -> &Stats {
+        self.case_items(name, 1.0, f)
+    }
+
+    /// Finish the group, returning all stats.
+    pub fn finish(self) -> Vec<Stats> {
+        println!("-- {} done ({} cases)", self.group, self.results.len());
+        self.results
+    }
+}
+
+/// Print a labeled metric row (used by quality benches where the output
+/// is a domain number, not a latency).
+pub fn report_metric(name: &str, value: f64, unit: &str) {
+    println!("{name:<44} {value:>12.4} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane_for_fast_op() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let s = b.case("noop-ish", || std::hint::black_box(1 + 1)).clone();
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.iters >= 10);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            std_ns: 0.0,
+            p50_ns: 1000.0,
+            p90_ns: 1000.0,
+            p99_ns: 1000.0,
+            items_per_iter: 10.0,
+        };
+        assert_eq!(s.throughput(), 1e7);
+    }
+}

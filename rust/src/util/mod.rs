@@ -1,0 +1,17 @@
+//! Utility substrate: deterministic PRNG, unit-suffixed quantities,
+//! minimal JSON, micro-benchmark harness, property-test runner, CLI
+//! argument parsing.
+//!
+//! The build image has no network access, so the conventional crates
+//! (criterion, proptest, clap, serde_json) are replaced by small,
+//! purpose-built equivalents here. They are real implementations — the
+//! bench harness does warmup/outlier-aware statistics, the prop runner
+//! does seeded case generation with failure reporting — just scoped to
+//! what this repository needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod units;

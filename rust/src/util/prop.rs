@@ -1,0 +1,82 @@
+//! Property-test runner (proptest substitute, offline image).
+//!
+//! Runs a property over many seeded random cases; on failure reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use globus_replica::util::prop::{forall, Config};
+//! forall("addition commutes", Config::default(), |rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     if a + b != b + a {
+//!         return Err(format!("{a} + {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u64,
+    /// Base seed; case `i` runs with seed `base_seed + i`. Override with
+    /// env `PROP_SEED` to replay a failure.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let base_seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xDA7A_621D);
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(256);
+        Config { cases, base_seed }
+    }
+}
+
+/// Run `property` over `cfg.cases` seeded cases; panics (with the seed)
+/// on the first failure. The property returns `Err(description)` to
+/// fail, `Ok(())` to pass.
+pub fn forall<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {i} (replay with PROP_SEED={seed} PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("trivial", Config { cases: 16, base_seed: 1 }, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn reports_seed_on_failure() {
+        forall("fails", Config { cases: 4, base_seed: 7 }, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,225 @@
+//! Unit-suffixed quantities as they appear in ClassAds and GRIS records.
+//!
+//! The paper's ads use values like `50G`, `75K/Sec`, `5G`: a magnitude
+//! with a binary-ish storage suffix, optionally `/Sec` for rates. This
+//! module parses and formats those forms and provides typed wrappers
+//! ([`Bytes`], [`Bandwidth`]) used across the catalog, directory, and
+//! gridftp modules.
+
+use std::fmt;
+
+use thiserror::Error;
+
+/// Parse/format errors for unit-suffixed quantities.
+#[derive(Debug, Error, PartialEq)]
+pub enum UnitError {
+    #[error("empty quantity")]
+    Empty,
+    #[error("bad magnitude in {0:?}")]
+    BadMagnitude(String),
+    #[error("unknown unit suffix in {0:?}")]
+    BadSuffix(String),
+}
+
+/// Multiplier for a storage suffix (K/M/G/T/P, case-insensitive,
+/// optionally followed by `B` / `iB`). The 2001-era ads use powers of
+/// 1024, and so do we.
+fn suffix_multiplier(s: &str) -> Option<f64> {
+    let norm = s.trim().trim_end_matches("iB").trim_end_matches('B');
+    match norm.to_ascii_uppercase().as_str() {
+        "" => Some(1.0),
+        "K" => Some(1024.0),
+        "M" => Some(1024.0 * 1024.0),
+        "G" => Some(1024.0 * 1024.0 * 1024.0),
+        "T" => Some(1024.0f64.powi(4)),
+        "P" => Some(1024.0f64.powi(5)),
+        _ => None,
+    }
+}
+
+/// Parse a quantity like `50G`, `75K/Sec`, `1.5M`, `1024`.
+/// Returns (value_in_base_units, is_rate).
+pub fn parse_quantity(input: &str) -> Result<(f64, bool), UnitError> {
+    let t = input.trim();
+    if t.is_empty() {
+        return Err(UnitError::Empty);
+    }
+    let (body, is_rate) = match t
+        .to_ascii_lowercase()
+        .strip_suffix("/sec")
+        .map(|p| p.len())
+    {
+        Some(len) => (&t[..len], true),
+        None => (t, false),
+    };
+    let split = body
+        .char_indices()
+        .find(|(_, c)| !(c.is_ascii_digit() || *c == '.' || *c == '-' || *c == '+'))
+        .map(|(i, _)| i)
+        .unwrap_or(body.len());
+    let (mag, suffix) = body.split_at(split);
+    let value: f64 = mag
+        .parse()
+        .map_err(|_| UnitError::BadMagnitude(input.to_string()))?;
+    let mult = suffix_multiplier(suffix).ok_or_else(|| UnitError::BadSuffix(input.to_string()))?;
+    Ok((value * mult, is_rate))
+}
+
+/// Format a byte-ish magnitude. A unit suffix is used only when the
+/// value is an *exact* integral multiple of the unit, so formatted
+/// quantities always re-parse to the identical f64 (non-integral values
+/// print as full-precision raw numbers).
+pub fn format_quantity(value: f64, rate: bool) -> String {
+    let tiers: [(f64, &str); 4] = [
+        (1024.0f64.powi(4), "T"),
+        (1024.0f64.powi(3), "G"),
+        (1024.0 * 1024.0, "M"),
+        (1024.0, "K"),
+    ];
+    let mut body = None;
+    for (mult, suffix) in tiers {
+        if value.abs() >= mult {
+            let v = value / mult;
+            if v == v.round() && v.abs() < 1e15 && v.round() * mult == value {
+                body = Some(format!("{}{suffix}", v.round() as i64));
+            }
+            break;
+        }
+    }
+    // `{}` on f64 is Rust's shortest round-trip representation.
+    let body = body.unwrap_or_else(|| format!("{value}"));
+    if rate {
+        format!("{body}/Sec")
+    } else {
+        body
+    }
+}
+
+/// A byte count (storage capacity, file size).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Bytes(pub f64);
+
+impl Bytes {
+    pub fn from_gb(gb: f64) -> Self {
+        Bytes(gb * 1024.0f64.powi(3))
+    }
+    pub fn from_mb(mb: f64) -> Self {
+        Bytes(mb * 1024.0f64.powi(2))
+    }
+    pub fn from_kb(kb: f64) -> Self {
+        Bytes(kb * 1024.0)
+    }
+    pub fn gb(self) -> f64 {
+        self.0 / 1024.0f64.powi(3)
+    }
+    pub fn mb(self) -> f64 {
+        self.0 / 1024.0f64.powi(2)
+    }
+    pub fn parse(s: &str) -> Result<Self, UnitError> {
+        let (v, _) = parse_quantity(s)?;
+        Ok(Bytes(v))
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&format_quantity(self.0, false))
+    }
+}
+
+/// A transfer rate in bytes/second.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    pub fn from_kbps(kb: f64) -> Self {
+        Bandwidth(kb * 1024.0)
+    }
+    pub fn from_mbps(mb: f64) -> Self {
+        Bandwidth(mb * 1024.0 * 1024.0)
+    }
+    pub fn kbps(self) -> f64 {
+        self.0 / 1024.0
+    }
+    pub fn mbps(self) -> f64 {
+        self.0 / (1024.0 * 1024.0)
+    }
+    pub fn parse(s: &str) -> Result<Self, UnitError> {
+        let (v, _) = parse_quantity(s)?;
+        Ok(Bandwidth(v))
+    }
+    /// Seconds to move `bytes` at this rate.
+    pub fn transfer_time(self, bytes: Bytes) -> f64 {
+        if self.0 <= 0.0 {
+            f64::INFINITY
+        } else {
+            bytes.0 / self.0
+        }
+    }
+}
+
+impl fmt::Display for Bandwidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&format_quantity(self.0, true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_literals() {
+        // The exact literals from the paper's §4/§5.2 ads.
+        assert_eq!(parse_quantity("50G").unwrap(), (50.0 * 1024f64.powi(3), false));
+        assert_eq!(parse_quantity("10G").unwrap(), (10.0 * 1024f64.powi(3), false));
+        assert_eq!(parse_quantity("5G").unwrap(), (5.0 * 1024f64.powi(3), false));
+        assert_eq!(parse_quantity("75K/Sec").unwrap(), (75.0 * 1024.0, true));
+        assert_eq!(parse_quantity("50K/Sec").unwrap(), (50.0 * 1024.0, true));
+    }
+
+    #[test]
+    fn parses_plain_and_fractional() {
+        assert_eq!(parse_quantity("1024").unwrap(), (1024.0, false));
+        assert_eq!(parse_quantity("1.5K").unwrap(), (1536.0, false));
+        assert_eq!(parse_quantity("-2K").unwrap(), (-2048.0, false));
+    }
+
+    #[test]
+    fn parses_b_and_ib_forms() {
+        assert_eq!(parse_quantity("1KB").unwrap().0, 1024.0);
+        assert_eq!(parse_quantity("1KiB").unwrap().0, 1024.0);
+        assert_eq!(parse_quantity("3MB/Sec").unwrap(), (3.0 * 1024.0 * 1024.0, true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_quantity("").is_err());
+        assert!(parse_quantity("G").is_err());
+        assert!(parse_quantity("12Q").is_err());
+        assert!(parse_quantity("abc").is_err());
+    }
+
+    #[test]
+    fn round_trips_display() {
+        for s in ["50G", "75K/Sec", "3M", "1T"] {
+            let (v, rate) = parse_quantity(s).unwrap();
+            assert_eq!(format_quantity(v, rate), s);
+        }
+    }
+
+    #[test]
+    fn bytes_helpers() {
+        assert_eq!(Bytes::from_gb(5.0).gb(), 5.0);
+        assert_eq!(Bytes::parse("5G").unwrap(), Bytes::from_gb(5.0));
+        assert_eq!(Bytes::from_gb(2.0).to_string(), "2G");
+    }
+
+    #[test]
+    fn bandwidth_transfer_time() {
+        let bw = Bandwidth::from_kbps(75.0);
+        let t = bw.transfer_time(Bytes::from_mb(75.0 / 1024.0));
+        assert!((t - 1.0).abs() < 1e-9);
+        assert!(Bandwidth(0.0).transfer_time(Bytes(1.0)).is_infinite());
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration: the paper's §4/§5.2 example ads through the public API
+//! (experiment X1 in DESIGN.md).
+
+use globus_replica::classad::{
+    eval_in_match, parse_classad, rank_candidates, symmetric_match, Value,
+};
+
+/// Verbatim from the paper, §4.
+const STORAGE: &str = r#"
+    hostname = "hugo.mcs.anl.gov";
+    volume = "/dev/sandbox";
+    availableSpace = 50G;
+    MaxRDBandwidth = 75K/Sec;
+    requirement = other.reqdSpace < 10G
+        && other.reqdRDBandwidth < 75K/Sec;
+"#;
+
+/// Verbatim from the paper, §5.2.
+const REQUEST: &str = r#"
+    hostname = "comet.xyz.com";
+    reqdSpace = 5G;
+    reqdRDBandwidth = 50K/Sec;
+    rank = other.availableSpace;
+    requirement = other.availableSpace >
+        5G && other.MaxRDBandwidth >
+        50K/Sec;
+"#;
+
+#[test]
+fn paper_example_ads_match_and_rank() {
+    let storage = parse_classad(STORAGE).unwrap();
+    let request = parse_classad(REQUEST).unwrap();
+
+    // "Two ClassAds match if the logical expressions contained in the
+    // requirements attribute in both of them is satisfied."
+    assert!(symmetric_match(&request, &storage));
+
+    // "we rank the replica servers based on their available space"
+    let rank = eval_in_match(&request, &storage, "rank");
+    assert_eq!(rank.as_number(), Some(50.0 * 1024f64.powi(3)));
+    // The ad's `50G` literal keeps its unit through evaluation.
+    assert!(rank.strict_eq(&Value::Quantity {
+        base: 50.0 * 1024f64.powi(3),
+        rate: false
+    }));
+}
+
+#[test]
+fn policy_boundaries_from_section_4() {
+    let storage = parse_classad(STORAGE).unwrap();
+    // Storage accepts only requests needing < 10G and < 75K/Sec.
+    let at_limit = parse_classad(
+        "reqdSpace = 10G; reqdRDBandwidth = 50K/Sec; requirement = TRUE;",
+    )
+    .unwrap();
+    assert!(!symmetric_match(&at_limit, &storage), "10G is not < 10G");
+    let under = parse_classad(
+        "reqdSpace = 9.9G; reqdRDBandwidth = 74K/Sec; requirement = TRUE;",
+    )
+    .unwrap();
+    assert!(symmetric_match(&under, &storage));
+    let too_fast = parse_classad(
+        "reqdSpace = 1G; reqdRDBandwidth = 75K/Sec; requirement = TRUE;",
+    )
+    .unwrap();
+    assert!(!symmetric_match(&too_fast, &storage), "75K is not < 75K");
+}
+
+#[test]
+fn request_boundaries_from_section_5_2() {
+    let request = parse_classad(REQUEST).unwrap();
+    // > 5G and > 50K/Sec are strict.
+    let exactly = parse_classad("availableSpace = 5G; MaxRDBandwidth = 50K/Sec;").unwrap();
+    assert!(!symmetric_match(&request, &exactly));
+    let above = parse_classad("availableSpace = 5.1G; MaxRDBandwidth = 51K/Sec;").unwrap();
+    // The storage side has no requirements -> always willing; the
+    // request side must still satisfy its own.
+    assert!(symmetric_match(&request, &above));
+}
+
+#[test]
+fn best_match_is_max_available_space() {
+    let request = parse_classad(REQUEST).unwrap();
+    let ads: Vec<_> = [
+        ("10G", "60K/Sec"),
+        ("80G", "60K/Sec"),
+        ("3G", "90K/Sec"),   // infeasible: space
+        ("90G", "40K/Sec"),  // infeasible: bandwidth
+        ("20G", "90K/Sec"),
+    ]
+    .iter()
+    .map(|(space, bw)| {
+        parse_classad(&format!(
+            "availableSpace = {space}; MaxRDBandwidth = {bw};"
+        ))
+        .unwrap()
+    })
+    .collect();
+    let ranked = rank_candidates(&request, &ads);
+    assert_eq!(ranked.len(), 3);
+    assert_eq!(ranked[0].index, 1, "80G feasible replica must win");
+    assert_eq!(ranked[1].index, 4);
+    assert_eq!(ranked[2].index, 0);
+}
+
+#[test]
+fn unparse_reparse_preserves_matching_semantics() {
+    let storage = parse_classad(STORAGE).unwrap();
+    let request = parse_classad(REQUEST).unwrap();
+    let storage2 = parse_classad(&storage.to_string()).unwrap();
+    let request2 = parse_classad(&request.to_string()).unwrap();
+    assert!(symmetric_match(&request2, &storage2));
+    assert_eq!(
+        eval_in_match(&request2, &storage2, "rank"),
+        eval_in_match(&request, &storage, "rank")
+    );
+}

@@ -1,0 +1,185 @@
+//! Integration: GRIS/GIIS daemons over real TCP — the paper's §3/§5.1.2
+//! search-phase machinery (broad GIIS discovery → GRIS drill-down →
+//! LDIF → conversion).
+
+use std::sync::{Arc, Mutex};
+
+use globus_replica::broker::entries_to_candidate;
+use globus_replica::classad::{parse_classad, symmetric_match};
+use globus_replica::directory::client::DirectoryClient;
+use globus_replica::directory::server::DirectoryServer;
+use globus_replica::directory::{Dn, Entry, Filter, Giis, Gris, Scope};
+
+fn demo_gris(org: &str, site: &str, avail_gb: f64) -> Gris {
+    let mut gris = Gris::new(org, site);
+    let base = gris.base_dn().clone();
+    let vol = base.child("gss", "vol0");
+    let mut e = Entry::new(vol.clone());
+    e.add("objectClass", "GridStorageServerVolume");
+    e.put_f64("totalSpace", 100.0 * 1024f64.powi(3));
+    e.put_f64("availableSpace", avail_gb * 1024f64.powi(3));
+    e.put("mountPoint", "/data");
+    e.put_f64("diskTransferRate", 2e7);
+    e.put_f64("drdTime", 8.0);
+    e.put_f64("dwrTime", 9.0);
+    gris.add_entry(e);
+    let mut bw = Entry::new(vol.child("gss", "bw"));
+    bw.add("objectClass", "GridStorageTransferBandwidth");
+    for a in [
+        "MaxRDBandwidth",
+        "MinRDBandwidth",
+        "AvgRDBandwidth",
+        "MaxWRBandwidth",
+        "MinWRBandwidth",
+        "AvgWRBandwidth",
+    ] {
+        bw.put_f64(a, 64.0 * 1024.0);
+    }
+    gris.add_entry(bw);
+    gris
+}
+
+#[test]
+fn gris_search_over_tcp_round_trips_ldif() {
+    let server = DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris("anl", "mcs", 50.0))), 0)
+        .expect("bind");
+    let mut client = DirectoryClient::connect(server.addr()).expect("connect");
+    assert!(client.ping().unwrap());
+    let entries = client
+        .search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(objectClass=GridStorageServerVolume)").unwrap(),
+        )
+        .unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].f64("availableSpace").unwrap(), 50.0 * 1024f64.powi(3));
+    assert_eq!(entries[0].first("mountPoint").unwrap(), "/data");
+}
+
+#[test]
+fn filter_is_applied_server_side() {
+    let server = DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris("anl", "mcs", 50.0))), 0)
+        .expect("bind");
+    let mut client = DirectoryClient::connect(server.addr()).expect("connect");
+    let none = client
+        .search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(availableSpace>=999999999999999)").unwrap(),
+        )
+        .unwrap();
+    assert!(none.is_empty());
+}
+
+#[test]
+fn giis_register_discover_drilldown() {
+    // Two sites + an index: the full MDS discovery pattern.
+    let gris_a = demo_gris("anl", "mcs", 50.0);
+    let base_a = gris_a.base_dn().clone();
+    let gris_b = demo_gris("lbl", "dsd", 80.0);
+    let base_b = gris_b.base_dn().clone();
+    let srv_a = DirectoryServer::spawn(Arc::new(Mutex::new(gris_a)), 0).unwrap();
+    let srv_b = DirectoryServer::spawn(Arc::new(Mutex::new(gris_b)), 0).unwrap();
+    let giis = DirectoryServer::spawn(Arc::new(Mutex::new(Giis::new())), 0).unwrap();
+
+    let mut c = DirectoryClient::connect(giis.addr()).unwrap();
+    c.register("mcs", srv_a.addr(), &base_a, vec![("availableGB".into(), "50".into())])
+        .unwrap();
+    c.register("dsd", srv_b.addr(), &base_b, vec![("availableGB".into(), "80".into())])
+        .unwrap();
+    assert_eq!(c.list().unwrap().len(), 2);
+
+    let hits = c
+        .discover(&Filter::parse("(availableGB>=60)").unwrap())
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].first("site").unwrap(), "dsd");
+
+    // Drill down to the winning site's GRIS.
+    let addr = hits[0].first("addr").unwrap().to_string();
+    let mut drill = DirectoryClient::connect(&addr).unwrap();
+    let entries = drill
+        .search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(objectClass=GridStorage*)").unwrap(),
+        )
+        .unwrap();
+    assert_eq!(entries.len(), 2);
+}
+
+#[test]
+fn tcp_entries_convert_and_match_like_local_ones() {
+    // The full §5.1.2 pipeline over the wire: TCP search → LDIF →
+    // ClassAd → matchmaking.
+    let server = DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris("anl", "mcs", 50.0))), 0)
+        .expect("bind");
+    let mut client = DirectoryClient::connect(server.addr()).expect("connect");
+    let entries = client
+        .search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(objectClass=GridStorage*)").unwrap(),
+        )
+        .unwrap();
+    let cand = entries_to_candidate("mcs", "gsiftp://mcs/f", &entries);
+    let request = parse_classad(
+        r#"reqdSpace = 5G; reqdRDBandwidth = 50K/Sec;
+           rank = other.availableSpace;
+           requirement = other.availableSpace > 5G && other.MaxRDBandwidth > 50K/Sec;"#,
+    )
+    .unwrap();
+    assert!(symmetric_match(&request, &cand.ad));
+}
+
+#[test]
+fn concurrent_clients_are_served() {
+    let server = Arc::new(
+        DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris("anl", "mcs", 50.0))), 0)
+            .expect("bind"),
+    );
+    let addr = server.addr().to_string();
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = DirectoryClient::connect(&addr).unwrap();
+            for _ in 0..20 {
+                let entries = c
+                    .search(
+                        &Dn::parse("o=grid").unwrap(),
+                        Scope::Sub,
+                        &Filter::parse("(objectClass=*)").unwrap(),
+                    )
+                    .unwrap();
+                assert_eq!(entries.len(), 5);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(server.served() >= 160);
+}
+
+#[test]
+fn malformed_requests_get_err_not_hang() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = DirectoryServer::spawn(Arc::new(Mutex::new(demo_gris("anl", "mcs", 1.0))), 0)
+        .expect("bind");
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"BOGUS\tverb\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR\t"), "got {line:?}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "."); // response terminator
+    // Connection survives; a valid request still works.
+    stream.write_all(b"PING\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "PONG");
+}

@@ -1,0 +1,156 @@
+//! Integration: the PJRT runtime against the AOT artifacts, and the
+//! cross-language contract — the Rust predictor bank and the Pallas
+//! kernel (through the compiled artifact) must agree.
+//!
+//! Requires `make artifacts`; each test skips (with a notice) when the
+//! artifacts are absent so `cargo test` stays runnable pre-build.
+
+use globus_replica::forecast::forecast_bank;
+use globus_replica::runtime::engine::EngineHandle;
+use globus_replica::runtime::Manifest;
+use globus_replica::util::prng::Rng;
+
+fn engine() -> Option<std::sync::Arc<EngineHandle>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(EngineHandle::spawn(dir).expect("engine must load when artifacts exist"))
+}
+
+#[test]
+fn engine_loads_and_reports_aot_shapes() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.aot_sites, 128);
+    assert_eq!(e.aot_window, 64);
+    assert_eq!(e.num_predictors, 8);
+}
+
+#[test]
+fn forecast_artifact_agrees_with_rust_bank() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(77);
+    // 10 sites with varying history lengths, values at realistic
+    // bandwidth magnitudes.
+    let hist: Vec<Vec<f64>> = (0..10)
+        .map(|i| {
+            let n = 3 + (i * 7) % 60;
+            (0..n).map(|_| rng.range(10e3, 900e3)).collect()
+        })
+        .collect();
+    let load: Vec<f64> = (0..10).map(|i| (i as f64) / 12.0).collect();
+    let out = e.forecast(&hist, &load).expect("forecast");
+    for (i, series) in hist.iter().enumerate() {
+        let mask = vec![1.0; series.len()];
+        let want = forecast_bank(series, &mask);
+        for p in 0..8 {
+            let got = out.preds[i][p] as f64;
+            let rel = (got - want.preds[p]).abs() / want.preds[p].abs().max(1.0);
+            assert!(
+                rel < 1e-3,
+                "site {i} predictor {p}: pjrt {got} vs rust {}",
+                want.preds[p]
+            );
+        }
+        // Effective bandwidth = best * (1 - load), f32 tolerance.
+        let eff_want = want.best() * (1.0 - load[i]);
+        let rel = (out.eff[i] as f64 - eff_want).abs() / eff_want.abs().max(1.0);
+        assert!(rel < 2e-3, "site {i} eff: {} vs {eff_want}", out.eff[i]);
+    }
+}
+
+#[test]
+fn forecast_batches_beyond_aot_sites() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(78);
+    let n = 200; // > 128 AOT rows -> two chunks
+    let hist: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..16).map(|_| rng.range(1e4, 1e6)).collect())
+        .collect();
+    let load = vec![0.0; n];
+    let out = e.forecast(&hist, &load).expect("forecast");
+    assert_eq!(out.best.len(), n);
+    // Chunked and unchunked slices agree.
+    let out_head = e.forecast(&hist[..10], &load[..10]).unwrap();
+    for i in 0..10 {
+        assert_eq!(out.best[i], out_head.best[i]);
+    }
+}
+
+#[test]
+fn rank_artifact_scores_and_masks() {
+    let Some(e) = engine() else { return };
+    // 3 replicas x 2 attrs: [availableSpaceGB, bandwidthKBs].
+    let attrs = vec![
+        vec![50.0, 75.0],
+        vec![3.0, 90.0],  // infeasible: space
+        vec![80.0, 60.0],
+    ];
+    let lo = vec![vec![5.0, 50.0]];
+    let hi = vec![vec![1e9, 1e9]];
+    let weights = vec![vec![1.0, 0.0]]; // rank = availableSpace
+    let out = e.rank(&attrs, &lo, &hi, &weights).expect("rank");
+    assert_eq!(out.scores[0].len(), 3);
+    assert!(out.scores[0][1] < -1e29, "infeasible must be -inf-ish");
+    assert_eq!(out.best_idx[0], 2);
+    assert!((out.best_score[0] - 80.0).abs() < 1e-3);
+}
+
+#[test]
+fn rank_padding_rows_never_win() {
+    let Some(e) = engine() else { return };
+    // One mediocre but feasible replica; padding must not outrank it.
+    let attrs = vec![vec![1.0, 1.0]];
+    let lo = vec![vec![0.0, 0.0]];
+    let hi = vec![vec![10.0, 10.0]];
+    let weights = vec![vec![1.0, 1.0]];
+    let out = e.rank(&attrs, &lo, &hi, &weights).expect("rank");
+    assert_eq!(out.best_idx[0], 0);
+    assert!((out.best_score[0] - 2.0).abs() < 1e-4);
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let Some(e) = engine() else { return };
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let e = e.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for _ in 0..5 {
+                let hist: Vec<Vec<f64>> =
+                    (0..4).map(|_| (0..8).map(|_| rng.range(1e4, 1e6)).collect()).collect();
+                let out = e.forecast(&hist, &[0.0, 0.1, 0.2, 0.3]).unwrap();
+                assert_eq!(out.best.len(), 4);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn manifest_bank_matches_rust_constants() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(dir).unwrap();
+    assert_eq!(m.num_predictors, globus_replica::forecast::NUM_PREDICTORS);
+    assert_eq!(
+        m.predictor_names,
+        vec![
+            "last_value",
+            "running_mean",
+            "sliding_mean_4",
+            "sliding_mean_16",
+            "ema_0.10",
+            "ema_0.30",
+            "ema_0.60",
+            "median_3"
+        ]
+    );
+}

@@ -1,0 +1,231 @@
+//! Property-based tests over the coordinator's core invariants
+//! (routing/matching/state — the L3 contract), using the in-tree
+//! `util::prop` runner (seeded, replayable).
+
+use globus_replica::classad::{
+    eval_in_match, parse_classad, rank_candidates, symmetric_match, AdBuilder, Value,
+};
+use globus_replica::directory::entry::{Dn, Entry};
+use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
+use globus_replica::directory::{Dit, Filter, Scope};
+use globus_replica::forecast::forecast_bank;
+use globus_replica::util::prng::Rng;
+use globus_replica::util::prop::{forall, Config};
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+fn random_ad(rng: &mut Rng) -> globus_replica::classad::ClassAd {
+    let mut b = AdBuilder::new();
+    let n = 1 + rng.index(6);
+    for i in 0..n {
+        let name = format!("attr{i}");
+        b = match rng.index(5) {
+            0 => b.int(&name, rng.below(1_000_000) as i64 - 500_000),
+            1 => b.real(&name, rng.range(-1e6, 1e6)),
+            2 => b.str(&name, format!("s{}", rng.below(100))),
+            3 => b.bool(&name, rng.chance(0.5)),
+            _ => b.bytes(&name, rng.range(0.0, 1e12)),
+        };
+    }
+    b.build()
+}
+
+#[test]
+fn prop_classad_unparse_reparse_fixpoint() {
+    forall("classad unparse/reparse", cfg(300), |rng| {
+        let ad = random_ad(rng);
+        let text = ad.to_string();
+        let re = parse_classad(&text).map_err(|e| format!("{e} in {text:?}"))?;
+        if re != ad {
+            return Err(format!("mismatch:\n{ad}\nvs\n{re}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matchmaking_is_symmetric_and_rank_deterministic() {
+    forall("symmetric match + stable rank", cfg(200), |rng| {
+        let mut storage = random_ad(rng);
+        storage.set_value("availableSpace", Value::Real(rng.range(0.0, 1e12)));
+        let request = parse_classad(
+            "rank = other.availableSpace; requirement = other.availableSpace >= 0;",
+        )
+        .unwrap();
+        if symmetric_match(&request, &storage) != symmetric_match(&storage, &request) {
+            return Err("match not symmetric".into());
+        }
+        let ads = vec![storage.clone(), storage.clone()];
+        let ranked = rank_candidates(&request, &ads);
+        if ranked.len() == 2 && ranked[0].index != 0 {
+            return Err("equal ranks must preserve catalog order".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_ordering_matches_attribute_ordering() {
+    forall("rank order == availableSpace order", cfg(150), |rng| {
+        let n = 2 + rng.index(8);
+        let spaces: Vec<f64> = (0..n).map(|_| rng.range(1.0, 1e9)).collect();
+        let ads: Vec<_> = spaces
+            .iter()
+            .map(|s| AdBuilder::new().real("availableSpace", *s).build())
+            .collect();
+        let request = parse_classad("rank = other.availableSpace;").unwrap();
+        let ranked = rank_candidates(&request, &ads);
+        for w in ranked.windows(2) {
+            if w[0].rank < w[1].rank {
+                return Err(format!("rank order violated: {} < {}", w[0].rank, w[1].rank));
+            }
+        }
+        let best = ranked[0].index;
+        let max = spaces
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        if (spaces[best] - max).abs() > 1e-9 {
+            return Err("winner is not argmax(availableSpace)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_three_valued_logic_never_panics_and_is_total() {
+    // Random expressions over a small grammar evaluate to *some* value.
+    forall("eval is total", cfg(300), |rng| {
+        let atoms = ["1", "2.5", "\"x\"", "TRUE", "FALSE", "UNDEFINED", "ERROR", "missing", "5G"];
+        let ops = ["+", "-", "*", "/", "==", "!=", "<", ">", "&&", "||", "=?="];
+        let mut expr = (*rng.choose(&atoms)).to_string();
+        for _ in 0..rng.index(6) {
+            expr = format!("({expr} {} {})", rng.choose(&ops), rng.choose(&atoms));
+        }
+        let ad = parse_classad(&format!("x = {expr};")).map_err(|e| format!("{e}: {expr}"))?;
+        let _ = ad.value("x"); // must not panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ldif_round_trip() {
+    forall("ldif round trip", cfg(200), |rng| {
+        let n_entries = 1 + rng.index(4);
+        let mut entries = Vec::new();
+        for i in 0..n_entries {
+            let mut e = Entry::new(Dn::parse(&format!("gss=v{i}, o=grid")).unwrap());
+            e.add("objectClass", "GridStorageServerVolume");
+            for a in 0..rng.index(6) {
+                let val = match rng.index(3) {
+                    0 => format!("{}", rng.range(-1e9, 1e9)),
+                    1 => format!("str-{}", rng.below(1000)),
+                    _ => " leading space needs b64".to_string(),
+                };
+                e.add(&format!("attr{a}"), val);
+            }
+            entries.push(e);
+        }
+        let text = to_ldif_stream(&entries);
+        let parsed = parse_ldif(&text).map_err(|e| e.to_string())?;
+        if parsed != entries {
+            return Err("ldif round trip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dit_search_scope_containment() {
+    // Sub results ⊇ One results ⊇ nothing outside base.
+    forall("dit scope containment", cfg(100), |rng| {
+        let mut dit = Dit::new();
+        let orgs = ["anl", "lbl", "isi"];
+        for org in orgs {
+            for s in 0..(1 + rng.index(3)) {
+                let dn = Dn::parse(&format!("gss=v{s}, o={org}, o=grid")).unwrap();
+                let mut e = Entry::new(dn);
+                e.add("objectClass", "GridStorageServerVolume");
+                e.put_f64("availableSpace", rng.range(0.0, 100.0));
+                dit.add_with_ancestors(e).unwrap();
+            }
+        }
+        let base = Dn::parse(&format!("o={}, o=grid", rng.choose(&orgs))).unwrap();
+        let all = Filter::parse("(objectClass=*)").unwrap();
+        let sub = dit.search(&base, Scope::Sub, &all);
+        let one = dit.search(&base, Scope::One, &all);
+        for e in &one {
+            if !sub.iter().any(|s| s.dn == e.dn) {
+                return Err("One result missing from Sub".into());
+            }
+        }
+        for e in &sub {
+            if !e.dn.under(&base) {
+                return Err(format!("entry {} escapes base {base}", e.dn));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forecast_bank_invariants() {
+    forall("forecast bank invariants", cfg(200), |rng| {
+        let n = rng.index(50);
+        let hist: Vec<f64> = (0..n).map(|_| rng.range(1.0, 1e6)).collect();
+        let mask: Vec<f64> = (0..n).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+        let out = forecast_bank(&hist, &mask);
+        let lo = hist
+            .iter()
+            .zip(&mask)
+            .filter(|(_, m)| **m > 0.5)
+            .map(|(h, _)| *h)
+            .fold(f64::INFINITY, f64::min);
+        let hi = hist
+            .iter()
+            .zip(&mask)
+            .filter(|(_, m)| **m > 0.5)
+            .map(|(h, _)| *h)
+            .fold(f64::NEG_INFINITY, f64::max);
+        for (p, v) in out.preds.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(format!("predictor {p} not finite"));
+            }
+            if lo.is_finite() && (*v < lo - 1e-6 || *v > hi + 1e-6) {
+                return Err(format!(
+                    "predictor {p} = {v} outside observed range [{lo}, {hi}]"
+                ));
+            }
+        }
+        for (p, m) in out.mses.iter().enumerate() {
+            if *m < 0.0 || !m.is_finite() {
+                return Err(format!("mse {p} = {m} invalid"));
+            }
+        }
+        if out.mses[out.best_index()] > out.mses.iter().cloned().fold(f64::INFINITY, f64::min) {
+            return Err("best_index is not argmin".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_match_context_attribute_resolution() {
+    // other.X in the request always sees the storage value, regardless
+    // of name collisions with the request's own attributes.
+    forall("other-scope resolution", cfg(150), |rng| {
+        let v_req = rng.range(0.0, 1e6);
+        let v_sto = rng.range(0.0, 1e6);
+        let request = parse_classad(&format!(
+            "availableSpace = {v_req}; probe = other.availableSpace;"
+        ))
+        .unwrap();
+        let storage = parse_classad(&format!("availableSpace = {v_sto};")).unwrap();
+        match eval_in_match(&request, &storage, "probe") {
+            Value::Real(got) if (got - v_sto).abs() < 1e-9 => Ok(()),
+            other => Err(format!("probe = {other:?}, want {v_sto}")),
+        }
+    });
+}
