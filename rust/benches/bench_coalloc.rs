@@ -1,0 +1,76 @@
+//! Co-allocation microbenches: stripe planning and scheduler
+//! rebalancing on a 16-site topology, plus the end-to-end quality
+//! comparison (single-best vs striped) the subsystem exists for.
+
+use globus_replica::coalloc::{execute, plan_stripes, StripeSource};
+use globus_replica::config::{CoallocPolicy, GridConfig};
+use globus_replica::experiment::run_coalloc_quality;
+use globus_replica::gridftp::GridFtp;
+use globus_replica::simnet::{Topology, WorkloadSpec};
+use globus_replica::util::bench::{report_metric, Bench};
+
+fn main() {
+    let cfg = GridConfig::generate(16, 4242);
+    let policy = CoallocPolicy {
+        block_size: 8.0 * 1024.0 * 1024.0,
+        max_streams: 8,
+        tick: 2.0,
+        ..Default::default()
+    };
+    let sources: Vec<StripeSource> = cfg
+        .sites
+        .iter()
+        .enumerate()
+        .map(|(i, s)| StripeSource {
+            site: s.name.clone(),
+            url: format!("gsiftp://{}/f", s.name),
+            predicted_bw: 100e3 * (i + 1) as f64,
+        })
+        .collect();
+
+    let mut b = Bench::new("coalloc (16-site topology)");
+    b.case("plan 1G file over 16 sources, k=8", || {
+        plan_stripes(&sources, 1024.0 * 1024.0 * 1024.0, &policy).n_blocks
+    });
+    b.case("plan 64G file over 16 sources, k=16", || {
+        let wide = CoallocPolicy { max_streams: 16, ..policy.clone() };
+        plan_stripes(&sources, 64.0 * 1024f64.powi(3), &wide).n_blocks
+    });
+
+    // Scheduler: execute a 256 MB striped transfer on a fresh topology
+    // clone each iteration (execution mutates link state). The skew in
+    // predicted vs actual bandwidth forces rebalancing steals.
+    let base_topo = Topology::build(&cfg);
+    let plan = plan_stripes(&sources, 256.0 * 1024.0 * 1024.0, &policy);
+    let mut total_steals = 0usize;
+    let mut runs = 0usize;
+    b.case("schedule+rebalance 256M, 8 streams", || {
+        let mut topo = base_topo.clone_for_probe();
+        let ftp = GridFtp::new(&topo, 32);
+        let out = execute(&mut topo, &ftp, "bench-client", &plan, &policy).unwrap();
+        total_steals += out.steals;
+        runs += 1;
+        out.duration
+    });
+    b.finish();
+    if runs > 0 {
+        report_metric(
+            "mean rebalance steals per transfer",
+            total_steals as f64 / runs as f64,
+            "steals",
+        );
+    }
+
+    // Domain-level comparison on the paper-scale grid.
+    println!("\n== single-best vs co-allocated (16 sites, 4 replicas/file) ==");
+    let spec = WorkloadSpec { files: 12, mean_interarrival: 120.0, ..Default::default() };
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_requests = if quick { 10 } else { 40 };
+    let r = run_coalloc_quality(&cfg, &spec, n_requests, 4, 6, &policy);
+    report_metric("requests", r.requests as f64, "");
+    report_metric("mean single-best transfer time", r.single_mean_time, "s");
+    report_metric("mean co-allocated transfer time", r.coalloc_mean_time, "s");
+    report_metric("speedup (single / coalloc)", r.speedup, "x");
+    report_metric("mean streams per transfer", r.mean_streams, "");
+    report_metric("total rebalance steals", r.steals as f64, "");
+}

@@ -1,6 +1,7 @@
 //! The broker engine: Search → Match → Access orchestration.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -8,14 +9,18 @@ use anyhow::{bail, Context, Result};
 
 use crate::catalog::ReplicaCatalog;
 use crate::classad::{symmetric_match, ClassAd};
+use crate::coalloc::{plan_stripes, StripePlan, StripeSource};
+use crate::config::CoallocPolicy;
 use crate::directory::client::DirectoryClient;
 use crate::directory::dit::Scope;
 use crate::directory::entry::{Dn, Entry};
 use crate::directory::filter::Filter;
 use crate::directory::gris::Gris;
+use crate::metrics::Metrics;
 
 use super::convert::{entries_to_candidate, Candidate};
 use super::policy::{RankPolicy, Ranked};
+use super::selectors::Selector;
 
 /// Where the broker gets per-site capability data (the GRIS fan-out).
 /// Implementations: in-process ([`LocalInfoService`], for the simulator
@@ -23,6 +28,14 @@ use super::policy::{RankPolicy, Ranked};
 pub trait InfoService: Send + Sync {
     /// Query one site's GRIS; returns its matching entries.
     fn query_site(&self, site: &str, filter: &Filter) -> Result<Vec<Entry>>;
+
+    /// Whether the Search phase should fan site queries out across a
+    /// thread pool. True for services that block on real per-site I/O
+    /// (the TCP topology); the in-process registry answers from
+    /// memory, where thread-spawn overhead exceeds the query itself.
+    fn parallel_fanout(&self) -> bool {
+        true
+    }
 }
 
 /// In-process GRIS registry.
@@ -62,6 +75,10 @@ impl InfoService for LocalInfoService {
             .with_context(|| format!("no GRIS registered for site {site:?}"))?;
         let g = gris.read().unwrap();
         Ok(g.search(&Dn::parse("o=grid").unwrap(), Scope::Sub, filter))
+    }
+
+    fn parallel_fanout(&self) -> bool {
+        false // in-memory lookups; thread spawn would dominate
     }
 }
 
@@ -116,6 +133,30 @@ pub struct Selection {
     pub trace: BrokerTrace,
 }
 
+/// How the Access phase executes a selection (paper §5.1.2 step 3).
+#[derive(Debug, Clone)]
+pub enum AccessStrategy {
+    /// Fetch the whole file from the single best-ranked replica — the
+    /// paper's original behaviour.
+    SingleBest,
+    /// Stripe the file across the top-K ranked replicas and pull the
+    /// ranges in parallel (`crate::coalloc`).
+    Coallocated(CoallocPolicy),
+}
+
+/// A co-allocated selection: the ordinary ranked selection plus the
+/// stripe plan over its top-K survivors. Execution happens through
+/// [`crate::coalloc::execute`] because transfer simulation lives with
+/// the driver, exactly like the single-source Access phase.
+#[derive(Debug, Clone)]
+pub struct CoallocSelection {
+    pub selection: Selection,
+    /// Candidate indices the plan actually stripes over, in assignment
+    /// (byte-offset) order — one per `plan.assignments` entry.
+    pub sources: Vec<usize>,
+    pub plan: StripePlan,
+}
+
 /// The decentralized storage broker. One per client; cheap to clone
 /// (shared catalog + info service handles).
 #[derive(Clone)]
@@ -123,6 +164,7 @@ pub struct Broker {
     catalog: Arc<Mutex<ReplicaCatalog>>,
     info: Arc<dyn InfoService>,
     policy: RankPolicy,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl Broker {
@@ -131,7 +173,14 @@ impl Broker {
         info: Arc<dyn InfoService>,
         policy: RankPolicy,
     ) -> Broker {
-        Broker { catalog, info, policy }
+        Broker { catalog, info, policy, metrics: None }
+    }
+
+    /// Attach a metrics registry; the Search phase records per-site
+    /// GRIS query latency and failure counts into it.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Broker {
+        self.metrics = Some(metrics);
+        self
     }
 
     pub fn policy(&self) -> &RankPolicy {
@@ -166,13 +215,79 @@ impl Broker {
         }
         trace.replica_sites = locations.iter().map(|(s, _)| s.clone()).collect();
         let filter = Self::search_filter(request);
+        // GRIS fan-out: when the info service blocks on real per-site
+        // I/O, the sites are queried concurrently from a small
+        // scoped-thread pool. Workers pull site indices from a shared
+        // counter, so a hundred replicas still cost at most
+        // `MAX_FANOUT_WORKERS` threads, and responses are collected in
+        // catalog order so selection stays deterministic. In-process
+        // services answer inline (their queries are cheaper than a
+        // thread spawn); both paths record per-site latency.
+        const MAX_FANOUT_WORKERS: usize = 8;
+        let info: &dyn InfoService = self.info.as_ref();
+        let responses: Vec<(Result<Vec<Entry>>, u64)> = if locations.len() > 1
+            && info.parallel_fanout()
+        {
+            let next = AtomicUsize::new(0);
+            let mut slots: Vec<Option<(Result<Vec<Entry>>, u64)>> =
+                (0..locations.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..locations.len().min(MAX_FANOUT_WORKERS))
+                    .map(|_| {
+                        let next = &next;
+                        let filter = &filter;
+                        let locations = &locations;
+                        scope.spawn(move || {
+                            let mut mine = Vec::new();
+                            loop {
+                                let i = next.fetch_add(1, AtomicOrdering::Relaxed);
+                                if i >= locations.len() {
+                                    break;
+                                }
+                                let tq = Instant::now();
+                                let r = info.query_site(&locations[i].0, filter);
+                                mine.push((i, (r, tq.elapsed().as_nanos() as u64)));
+                            }
+                            mine
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (i, res) in h.join().expect("GRIS query worker panicked") {
+                        slots[i] = Some(res);
+                    }
+                }
+            });
+            slots
+                .into_iter()
+                .map(|s| s.expect("every replica site queried"))
+                .collect()
+        } else {
+            locations
+                .iter()
+                .map(|(site, _)| {
+                    let tq = Instant::now();
+                    let r = info.query_site(site, &filter);
+                    (r, tq.elapsed().as_nanos() as u64)
+                })
+                .collect()
+        };
         let mut raw: Vec<(String, String, Vec<Entry>)> = Vec::with_capacity(locations.len());
-        for (site, url) in &locations {
+        for ((site, url), (resp, ns)) in locations.iter().zip(responses) {
+            if let Some(m) = &self.metrics {
+                m.histogram("broker.search.site_ns").observe_ns(ns);
+                m.histogram(&format!("broker.search.site_ns.{site}")).observe_ns(ns);
+            }
             // A site that fails to answer is simply not a candidate —
             // the decentralized broker degrades, it does not fail.
-            match self.info.query_site(site, &filter) {
+            match resp {
                 Ok(entries) => raw.push((site.clone(), url.clone(), entries)),
-                Err(_) => log::warn!("site {site} did not answer; skipping"),
+                Err(_) => {
+                    if let Some(m) = &self.metrics {
+                        m.counter("broker.search.site_errors").inc();
+                    }
+                    log::warn!("site {site} did not answer; skipping");
+                }
             }
         }
         trace.search_us = t0.elapsed().as_micros();
@@ -232,6 +347,92 @@ impl Broker {
             trace,
         })
     }
+
+    /// Co-allocated selection (the [`AccessStrategy::Coallocated`]
+    /// planning step): run the ordinary Search + Match, keep the top-K
+    /// survivors by predicted bandwidth, and stripe `total_bytes`
+    /// across them proportionally to those predictions. The caller
+    /// executes the returned plan with [`crate::coalloc::execute`].
+    pub fn select_coalloc(
+        &self,
+        logical: &str,
+        request: &ClassAd,
+        total_bytes: f64,
+        policy: &CoallocPolicy,
+    ) -> Result<CoallocSelection> {
+        let selection = self.select(logical, request)?;
+        let preds = self.policy.predicted_bandwidth(&selection.candidates);
+        let top = Selector::top_k_set(&selection.ranked, &preds, policy.max_streams);
+        let stripe_sources: Vec<StripeSource> = top
+            .iter()
+            .map(|&i| StripeSource {
+                site: selection.candidates[i].site.clone(),
+                url: selection.candidates[i].url.clone(),
+                predicted_bw: preds[i],
+            })
+            .collect();
+        let plan = plan_stripes(&stripe_sources, total_bytes, policy);
+        // Report the candidates the plan actually stripes over — the
+        // planner may drop stragglers or cap streams at the block
+        // count, so `top` can be a superset of the final set. Keyed by
+        // URL: a site may host several replicas of one logical file.
+        let sources: Vec<usize> = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                selection
+                    .candidates
+                    .iter()
+                    .position(|c| c.url == a.source.url)
+                    .expect("stripe source originates from the candidate set")
+            })
+            .collect();
+        Ok(CoallocSelection { selection, sources, plan })
+    }
+
+    /// Plan the Access phase under `strategy`: [`AccessStrategy::
+    /// SingleBest`] yields a one-stream whole-file plan for the
+    /// *rank-policy winner* (the paper's original behaviour — one
+    /// block, so connection setup and seek are paid once, exactly like
+    /// [`crate::gridftp::GridFtp::fetch`]), [`AccessStrategy::
+    /// Coallocated`] a top-K stripe plan under the given policy.
+    /// Either way the caller executes the result with
+    /// [`crate::coalloc::execute`] (whose run-time knobs — tick,
+    /// downlink, steal threshold — come from the policy passed there;
+    /// block geometry is carried by the plan itself).
+    pub fn plan_access(
+        &self,
+        logical: &str,
+        request: &ClassAd,
+        total_bytes: f64,
+        strategy: &AccessStrategy,
+    ) -> Result<CoallocSelection> {
+        match strategy {
+            AccessStrategy::SingleBest => {
+                let selection = self.select(logical, request)?;
+                let preds = self.policy.predicted_bandwidth(&selection.candidates);
+                let best = selection.ranked[0].index;
+                let source = StripeSource {
+                    site: selection.candidates[best].site.clone(),
+                    url: selection.candidates[best].url.clone(),
+                    predicted_bw: preds[best],
+                };
+                let whole_file = CoallocPolicy {
+                    block_size: total_bytes.max(1.0),
+                    max_streams: 1,
+                    ..Default::default()
+                };
+                let plan = plan_stripes(&[source], total_bytes, &whole_file);
+                // Empty plan (zero-byte file) carries no sources.
+                let sources =
+                    if plan.assignments.is_empty() { Vec::new() } else { vec![best] };
+                Ok(CoallocSelection { selection, sources, plan })
+            }
+            AccessStrategy::Coallocated(policy) => {
+                self.select_coalloc(logical, request, total_bytes, policy)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -241,8 +442,22 @@ mod tests {
     use crate::classad::parse_classad;
     use crate::util::units::Bytes;
 
+    /// In-process info service that opts into the thread-pool fan-out
+    /// (exercises the parallel Search path without TCP).
+    struct ForceParallel(LocalInfoService);
+
+    impl InfoService for ForceParallel {
+        fn query_site(&self, site: &str, filter: &Filter) -> Result<Vec<Entry>> {
+            self.0.query_site(site, filter)
+        }
+    }
+
     /// Build a 3-site in-process grid with distinct capabilities.
     fn fixture(policy: RankPolicy) -> (Broker, ClassAd) {
+        fixture_impl(policy, false)
+    }
+
+    fn fixture_impl(policy: RankPolicy, parallel: bool) -> (Broker, ClassAd) {
         let mut catalog = ReplicaCatalog::new();
         catalog
             .create_logical("run42.dat", Bytes::from_gb(1.0), "cms")
@@ -308,8 +523,13 @@ mod tests {
                    && other.MaxRDBandwidth > 50K/Sec;"#,
         )
         .unwrap();
+        let info: Arc<dyn InfoService> = if parallel {
+            Arc::new(ForceParallel(info))
+        } else {
+            Arc::new(info)
+        };
         (
-            Broker::new(Arc::new(Mutex::new(catalog)), Arc::new(info), policy),
+            Broker::new(Arc::new(Mutex::new(catalog)), info, policy),
             request,
         )
     }
@@ -362,6 +582,92 @@ mod tests {
         // Timings are measured (may be 0µs on fast machines but the
         // fields exist and ranking is consistent with `ranked`).
         assert_eq!(sel.trace.ranking.len(), sel.ranked.len());
+    }
+
+    #[test]
+    fn coalloc_selection_stripes_over_feasible_survivors() {
+        let (broker, request) = fixture(RankPolicy::ForecastBandwidth { engine: None });
+        let policy = CoallocPolicy { max_streams: 3, ..Default::default() };
+        let sel = broker
+            .select_coalloc("run42.dat", &request, 1e9, &policy)
+            .unwrap();
+        // isi-grid fails the space requirement → only 2 sources remain
+        // even though max_streams allows 3.
+        assert_eq!(sel.sources.len(), 2);
+        let sites: Vec<&str> = sel
+            .plan
+            .assignments
+            .iter()
+            .map(|a| a.source.site.as_str())
+            .collect();
+        assert!(sites.contains(&"lbl-dsd") && sites.contains(&"anl-mcs"));
+        // The plan partitions the file, favouring the faster history.
+        let total: f64 = sel.plan.assignments.iter().map(|a| a.bytes).sum();
+        assert!((total - 1e9).abs() < 1.0);
+        let lbl = sel.plan.assignments.iter().find(|a| a.source.site == "lbl-dsd").unwrap();
+        let anl = sel.plan.assignments.iter().find(|a| a.source.site == "anl-mcs").unwrap();
+        assert!(lbl.share > anl.share, "lbl {} !> anl {}", lbl.share, anl.share);
+        // Single-best remains the ordinary selection.
+        assert_eq!(sel.selection.site, "lbl-dsd");
+    }
+
+    #[test]
+    fn parallel_fanout_matches_sequential_results() {
+        let (seq, request) = fixture(RankPolicy::ClassAdRank);
+        let (par, _) = fixture_impl(RankPolicy::ClassAdRank, true);
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        let par = par.with_metrics(metrics.clone());
+        let a = seq.select("run42.dat", &request).unwrap();
+        let b = par.select("run42.dat", &request).unwrap();
+        // Same winner, same candidate order (catalog order), same
+        // ranking — the thread pool must not perturb determinism.
+        assert_eq!(a.site, b.site);
+        assert_eq!(a.trace.replica_sites, b.trace.replica_sites);
+        let sites = |s: &Selection| {
+            s.candidates.iter().map(|c| c.site.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(sites(&a), sites(&b));
+        assert_eq!(a.trace.ranking, b.trace.ranking);
+        // Per-site latency lands in metrics on the pool path too.
+        assert_eq!(metrics.histogram("broker.search.site_ns").count(), 3);
+    }
+
+    #[test]
+    fn plan_access_dispatches_strategies() {
+        let (broker, request) = fixture(RankPolicy::ForecastBandwidth { engine: None });
+        let single = broker
+            .plan_access("run42.dat", &request, 1e9, &AccessStrategy::SingleBest)
+            .unwrap();
+        assert_eq!(single.plan.assignments.len(), 1);
+        assert_eq!(single.plan.assignments[0].source.site, single.selection.site);
+        let policy = CoallocPolicy { max_streams: 3, ..Default::default() };
+        let striped = broker
+            .plan_access(
+                "run42.dat",
+                &request,
+                1e9,
+                &AccessStrategy::Coallocated(policy),
+            )
+            .unwrap();
+        assert!(striped.plan.assignments.len() > 1);
+        assert_eq!(striped.sources.len(), striped.plan.assignments.len());
+    }
+
+    #[test]
+    fn search_records_per_site_latency_metrics() {
+        let (broker, request) = fixture(RankPolicy::ClassAdRank);
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        let broker = broker.with_metrics(metrics.clone());
+        broker.select("run42.dat", &request).unwrap();
+        assert_eq!(metrics.histogram("broker.search.site_ns").count(), 3);
+        for site in ["anl-mcs", "lbl-dsd", "isi-grid"] {
+            assert_eq!(
+                metrics.histogram(&format!("broker.search.site_ns.{site}")).count(),
+                1,
+                "missing latency sample for {site}"
+            );
+        }
+        assert_eq!(metrics.counter("broker.search.site_errors").get(), 0);
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub mod replication;
 pub mod selectors;
 
 pub use convert::{entries_to_candidate, Candidate};
-pub use engine::{Broker, BrokerTrace, InfoService, LocalInfoService, RemoteInfoService};
+pub use engine::{
+    AccessStrategy, Broker, BrokerTrace, CoallocSelection, InfoService, LocalInfoService,
+    RemoteInfoService,
+};
 pub use policy::RankPolicy;
 pub use selectors::{Selector, SelectorKind};

@@ -6,7 +6,7 @@
 use crate::util::prng::Rng;
 
 use super::convert::Candidate;
-use super::policy::RankPolicy;
+use super::policy::{RankPolicy, Ranked};
 
 /// Which baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,6 +108,22 @@ impl Selector {
         }
     }
 
+    /// Top-K *set* selection for co-allocated access: among the ranked
+    /// survivors, the `k` candidate indices with the highest predicted
+    /// bandwidth (ties broken by candidate index, so the choice is
+    /// deterministic). Returns fewer than `k` when fewer survived.
+    pub fn top_k_set(ranked: &[Ranked], preds: &[f64], k: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        order.sort_by(|&a, &b| {
+            preds[b]
+                .partial_cmp(&preds[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        order.truncate(k.max(1));
+        order
+    }
+
     fn argmax(
         candidates: &[Candidate],
         eligible: &[usize],
@@ -191,5 +207,28 @@ mod tests {
         for k in SelectorKind::all() {
             assert!(!k.name().is_empty());
         }
+    }
+
+    #[test]
+    fn top_k_set_orders_by_prediction() {
+        let ranked = vec![
+            Ranked { index: 0, score: 1.0 },
+            Ranked { index: 1, score: 2.0 },
+            Ranked { index: 2, score: 3.0 },
+        ];
+        let preds = [50.0, 300.0, 200.0];
+        assert_eq!(Selector::top_k_set(&ranked, &preds, 2), vec![1, 2]);
+        // k larger than the survivor set returns everyone.
+        assert_eq!(Selector::top_k_set(&ranked, &preds, 9), vec![1, 2, 0]);
+        // k = 0 still returns the best single candidate.
+        assert_eq!(Selector::top_k_set(&ranked, &preds, 0), vec![1]);
+    }
+
+    #[test]
+    fn top_k_set_respects_survivors_only() {
+        // Candidate 1 (highest prediction) did not survive matching.
+        let ranked = vec![Ranked { index: 0, score: 1.0 }, Ranked { index: 2, score: 2.0 }];
+        let preds = [50.0, 300.0, 200.0];
+        assert_eq!(Selector::top_k_set(&ranked, &preds, 2), vec![2, 0]);
     }
 }

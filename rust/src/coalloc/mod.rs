@@ -1,0 +1,31 @@
+//! Co-allocated (striped) transfers — downloading one logical file from
+//! several replicas at once.
+//!
+//! The paper's broker picks a *single* best replica; its future-work
+//! discussion and the companion GridFTP transport work (Allcock et al.,
+//! cs/0103022) point at parallel transfers that pull disjoint byte
+//! ranges of the same file from multiple servers, sized by the same
+//! dynamic bandwidth information the selection service already
+//! collects. This subsystem implements that Access-phase strategy:
+//!
+//! * [`planner`] — turns the broker's ranked top-K candidate set and
+//!   per-source bandwidth predictions (from [`crate::forecast`]) into a
+//!   contiguous byte-range assignment proportional to predicted
+//!   throughput.
+//! * [`scheduler`] — splits the file into fixed-size blocks, drives one
+//!   stream per replica through [`crate::simnet::FlowSet`] (concurrent
+//!   flows sharing link and downlink capacity), and work-steals blocks
+//!   from lagging streams so a slowing source sheds load to faster
+//!   peers. Every block is instrumented into the source site's
+//!   [`crate::gridftp::HistoryStore`] — the co-allocated Access phase
+//!   feeds the same selection history as single-source fetches.
+//!
+//! Entry points: [`crate::broker::Broker::select_coalloc`] builds the
+//! plan from a live selection; [`execute`] runs it against the grid.
+//! Tuning lives in [`crate::config::CoallocPolicy`].
+
+pub mod planner;
+pub mod scheduler;
+
+pub use planner::{plan_stripes, StripeAssignment, StripePlan, StripeSource};
+pub use scheduler::{execute, CoallocOutcome, StreamReport};

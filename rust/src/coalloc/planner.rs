@@ -1,0 +1,316 @@
+//! Stripe planning: turn a ranked candidate set + per-source bandwidth
+//! predictions into an initial contiguous byte-range assignment.
+//!
+//! The plan apportions whole blocks (the scheduler's transfer unit)
+//! proportionally to each source's predicted bandwidth using
+//! largest-remainder rounding, so the assignment partitions the file
+//! exactly and the fastest predicted source gets the most bytes. The
+//! plan is only the *opening position* — the chunk scheduler rebalances
+//! against reality as links drift.
+
+use crate::config::CoallocPolicy;
+
+/// One source replica offered to the planner.
+#[derive(Debug, Clone)]
+pub struct StripeSource {
+    /// Site name (resolved to a topology index at execution time).
+    pub site: String,
+    /// Physical URL of the replica.
+    pub url: String,
+    /// Predicted read bandwidth from this source (bytes/s).
+    pub predicted_bw: f64,
+}
+
+/// A contiguous byte-range assignment for one stream.
+#[derive(Debug, Clone)]
+pub struct StripeAssignment {
+    pub source: StripeSource,
+    /// First byte of the range.
+    pub offset: f64,
+    /// Length of the range in bytes.
+    pub bytes: f64,
+    /// First block index (inclusive).
+    pub first_block: usize,
+    /// Number of whole blocks in the range.
+    pub blocks: usize,
+    /// Planned fraction of the file.
+    pub share: f64,
+}
+
+/// The full stripe plan for one logical file.
+#[derive(Debug, Clone)]
+pub struct StripePlan {
+    pub total_bytes: f64,
+    pub block_size: f64,
+    /// Total number of blocks (last one may be partial).
+    pub n_blocks: usize,
+    /// Per-stream assignments, in block order (offsets ascending).
+    pub assignments: Vec<StripeAssignment>,
+}
+
+impl StripePlan {
+    /// Byte range of block `i`: (offset, length).
+    pub fn block_range(&self, i: usize) -> (f64, f64) {
+        let offset = i as f64 * self.block_size;
+        let len = (self.total_bytes - offset).min(self.block_size).max(0.0);
+        (offset, len)
+    }
+
+    /// Expected completion time if every source delivered exactly its
+    /// predicted bandwidth (the planner's own objective value).
+    pub fn predicted_makespan(&self) -> f64 {
+        self.assignments
+            .iter()
+            .map(|a| {
+                if a.bytes <= 0.0 {
+                    0.0
+                } else if a.source.predicted_bw <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    a.bytes / a.source.predicted_bw
+                }
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Compute the initial stripe plan for `total_bytes` across `sources`.
+///
+/// Sources beyond `policy.max_streams` are dropped (keeping the
+/// highest-predicted ones); non-positive predictions fall back to an
+/// equal split so a history-less grid still stripes. Returns an empty
+/// plan for an empty source list or a zero-byte file.
+pub fn plan_stripes(
+    sources: &[StripeSource],
+    total_bytes: f64,
+    policy: &CoallocPolicy,
+) -> StripePlan {
+    let block = policy.block_size.max(1.0);
+    let n_blocks = if total_bytes > 0.0 {
+        (total_bytes / block).ceil() as usize
+    } else {
+        0
+    };
+    let mut plan = StripePlan {
+        total_bytes: total_bytes.max(0.0),
+        block_size: block,
+        n_blocks,
+        assignments: Vec::new(),
+    };
+    if sources.is_empty() || n_blocks == 0 {
+        return plan;
+    }
+
+    // Keep the top `max_streams` sources by predicted bandwidth
+    // (stable: ties keep the caller's rank order).
+    let mut order: Vec<usize> = (0..sources.len()).collect();
+    order.sort_by(|&a, &b| {
+        sources[b]
+            .predicted_bw
+            .partial_cmp(&sources[a].predicted_bw)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order.truncate(policy.max_streams.max(1).min(n_blocks.max(1)));
+    // Straggler guard: adding a source only helps if it can finish at
+    // least one block before the sources already included could have
+    // moved the whole file. Greedily admit fastest-first while that
+    // holds; a replica 100x slower than the rest would otherwise turn
+    // the stripe's makespan into its single-block time.
+    if order.iter().any(|&i| sources[i].predicted_bw > 0.0) {
+        let block_bytes = block.min(total_bytes);
+        let mut kept: Vec<usize> = Vec::with_capacity(order.len());
+        let mut sum_bw = 0.0;
+        for &i in &order {
+            let bw = sources[i].predicted_bw;
+            if bw <= 0.0 {
+                continue;
+            }
+            if kept.is_empty() || block_bytes / bw <= total_bytes / sum_bw {
+                sum_bw += bw;
+                kept.push(i);
+            }
+        }
+        if !kept.is_empty() {
+            order = kept;
+        }
+    }
+    // Assign ranges in the caller's original order so offsets follow
+    // the broker's ranking, not the bandwidth sort.
+    order.sort_unstable();
+
+    let weights: Vec<f64> = {
+        let raw: Vec<f64> = order
+            .iter()
+            .map(|&i| sources[i].predicted_bw.max(0.0))
+            .collect();
+        let sum: f64 = raw.iter().sum();
+        if sum <= 0.0 {
+            vec![1.0 / order.len() as f64; order.len()]
+        } else {
+            raw.iter().map(|w| w / sum).collect()
+        }
+    };
+
+    // Largest-remainder apportionment of whole blocks.
+    let quotas: Vec<f64> = weights.iter().map(|w| w * n_blocks as f64).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut remainders: Vec<(usize, f64)> = quotas
+        .iter()
+        .enumerate()
+        .map(|(i, q)| (i, q - q.floor()))
+        .collect();
+    remainders.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    for k in 0..(n_blocks - assigned) {
+        counts[remainders[k % remainders.len()].0] += 1;
+    }
+
+    let mut next_block = 0usize;
+    for (pos, &src_idx) in order.iter().enumerate() {
+        let blocks = counts[pos];
+        let offset = next_block as f64 * block;
+        let end = ((next_block + blocks) as f64 * block).min(plan.total_bytes);
+        plan.assignments.push(StripeAssignment {
+            source: sources[src_idx].clone(),
+            offset,
+            bytes: (end - offset).max(0.0),
+            first_block: next_block,
+            blocks,
+            share: weights[pos],
+        });
+        next_block += blocks;
+    }
+    debug_assert_eq!(next_block, n_blocks);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(site: &str, bw: f64) -> StripeSource {
+        StripeSource {
+            site: site.into(),
+            url: format!("gsiftp://{site}/f"),
+            predicted_bw: bw,
+        }
+    }
+
+    fn policy(block: f64, k: usize) -> CoallocPolicy {
+        CoallocPolicy { block_size: block, max_streams: k, ..Default::default() }
+    }
+
+    #[test]
+    fn partitions_the_file_exactly() {
+        let p = plan_stripes(
+            &[src("a", 3e6), src("b", 1e6), src("c", 2e6)],
+            100e6,
+            &policy(8e6, 4),
+        );
+        assert_eq!(p.n_blocks, 13);
+        let total_blocks: usize = p.assignments.iter().map(|a| a.blocks).sum();
+        assert_eq!(total_blocks, 13);
+        let total_bytes: f64 = p.assignments.iter().map(|a| a.bytes).sum();
+        assert!((total_bytes - 100e6).abs() < 1.0);
+        // Ranges are contiguous and ascending.
+        let mut cursor = 0.0;
+        for a in &p.assignments {
+            assert_eq!(a.offset, cursor);
+            cursor += a.blocks as f64 * p.block_size;
+        }
+    }
+
+    #[test]
+    fn shares_proportional_to_prediction() {
+        let p = plan_stripes(
+            &[src("fast", 8e6), src("slow", 2e6)],
+            200e6,
+            &policy(4e6, 2),
+        );
+        let fast = p.assignments.iter().find(|a| a.source.site == "fast").unwrap();
+        let slow = p.assignments.iter().find(|a| a.source.site == "slow").unwrap();
+        assert_eq!(p.n_blocks, 50);
+        assert_eq!(fast.blocks, 40);
+        assert_eq!(slow.blocks, 10);
+        assert!((fast.share - 0.8).abs() < 1e-9);
+        // Balanced plan: both streams predict the same finish time.
+        let tf = fast.bytes / fast.source.predicted_bw;
+        let ts = slow.bytes / slow.source.predicted_bw;
+        assert!((tf - ts).abs() / tf < 0.1, "tf {tf} ts {ts}");
+        assert!((p.predicted_makespan() - tf.max(ts)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_streams_keeps_the_fastest() {
+        let p = plan_stripes(
+            &[src("a", 1e6), src("b", 9e6), src("c", 5e6), src("d", 7e6)],
+            64e6,
+            &policy(4e6, 2),
+        );
+        let sites: Vec<&str> =
+            p.assignments.iter().map(|a| a.source.site.as_str()).collect();
+        assert_eq!(sites, vec!["b", "d"]);
+    }
+
+    #[test]
+    fn straggler_sources_are_dropped() {
+        // The crawling replica cannot finish even one block before the
+        // fast one could move the whole file — admitting it would let
+        // its single-block time dominate the makespan.
+        let p = plan_stripes(
+            &[src("fast", 2e6), src("crawl", 20e3)],
+            80e6,
+            &policy(8e6, 4),
+        );
+        let sites: Vec<&str> =
+            p.assignments.iter().map(|a| a.source.site.as_str()).collect();
+        assert_eq!(sites, vec!["fast"]);
+        assert_eq!(p.assignments[0].blocks, p.n_blocks);
+        // A merely-slower (not pathological) source still participates.
+        let p = plan_stripes(
+            &[src("fast", 2e6), src("slower", 0.7e6)],
+            80e6,
+            &policy(8e6, 4),
+        );
+        assert_eq!(p.assignments.len(), 2);
+    }
+
+    #[test]
+    fn zero_predictions_fall_back_to_equal_split() {
+        let p = plan_stripes(
+            &[src("a", 0.0), src("b", 0.0)],
+            40e6,
+            &policy(10e6, 2),
+        );
+        assert_eq!(p.assignments[0].blocks, 2);
+        assert_eq!(p.assignments[1].blocks, 2);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let p = plan_stripes(&[], 10e6, &policy(1e6, 4));
+        assert!(p.assignments.is_empty());
+        let p = plan_stripes(&[src("a", 1e6)], 0.0, &policy(1e6, 4));
+        assert!(p.assignments.is_empty());
+        assert_eq!(p.n_blocks, 0);
+        // One tiny file: a single stream gets the single block.
+        let p = plan_stripes(&[src("a", 1e6), src("b", 2e6)], 100.0, &policy(1e6, 4));
+        assert_eq!(p.n_blocks, 1);
+        let total: usize = p.assignments.iter().map(|a| a.blocks).sum();
+        assert_eq!(total, 1);
+        assert_eq!(p.block_range(0), (0.0, 100.0));
+    }
+
+    #[test]
+    fn last_block_is_partial() {
+        let p = plan_stripes(&[src("a", 1e6)], 25e6, &policy(10e6, 1));
+        assert_eq!(p.n_blocks, 3);
+        assert_eq!(p.block_range(2), (20e6, 5e6));
+        assert_eq!(p.assignments[0].bytes, 25e6);
+    }
+}

@@ -1,0 +1,499 @@
+//! The chunk scheduler: executes a [`StripePlan`] over the simulated
+//! grid as one co-allocated transfer.
+//!
+//! Each assignment becomes a *stream* pinned to one replica site. A
+//! stream pulls blocks from its own queue; the streams' current blocks
+//! advance together through [`simnet::FlowSet`], so same-site streams
+//! split that link and all streams share the client downlink. When a
+//! stream drains its queue it *steals* the tail half of the largest
+//! backlog among its peers (policy `rebalance_threshold` gates the
+//! steal) — a slowing source sheds blocks to faster ones without any
+//! central re-planning.
+//!
+//! Every completed block is instrumented as a [`TransferRecord`] into
+//! the source site's `HistoryStore` via [`GridFtp::record`] — the same
+//! store the site's GRIS providers publish from — so co-allocated
+//! traffic feeds the selection history exactly like single-source
+//! fetches do (paper §3.2).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::config::CoallocPolicy;
+use crate::gridftp::history::{Direction, TransferRecord};
+use crate::gridftp::GridFtp;
+use crate::simnet::{FlowSet, Topology};
+
+use super::planner::StripePlan;
+
+/// Per-stream outcome.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub site: String,
+    pub site_index: usize,
+    /// Blocks this stream delivered (own + stolen).
+    pub blocks: usize,
+    /// Blocks it delivered that were stolen from peers.
+    pub stolen: usize,
+    /// Bytes delivered.
+    pub bytes: f64,
+    /// Mean delivered bandwidth over the stream's busy time (bytes/s).
+    pub mean_bandwidth: f64,
+}
+
+/// Outcome of one co-allocated transfer.
+#[derive(Debug, Clone)]
+pub struct CoallocOutcome {
+    pub bytes: f64,
+    /// Wall (simulated) time from start to last block completion.
+    pub duration: f64,
+    pub started_at: f64,
+    /// bytes / duration.
+    pub aggregate_bandwidth: f64,
+    /// Total steal events (a steal moves ≥1 block between queues).
+    pub steals: usize,
+    pub streams: Vec<StreamReport>,
+}
+
+struct Stream {
+    site: usize,
+    site_name: String,
+    queue: VecDeque<usize>,
+    /// (block id, flow id, assigned sim time) of the block in flight.
+    current: Option<(usize, usize, f64)>,
+    blocks_done: usize,
+    stolen_done: usize,
+    bytes_done: f64,
+    busy_time: f64,
+    /// Running bandwidth estimate: the planner's prediction, folded
+    /// with observed per-block throughput (EWMA). 0 = unknown.
+    est_bw: f64,
+    finished: bool,
+}
+
+/// Hand every idle stream its next block: own queue first, then a
+/// rate-gated steal of the tail half of the largest peer backlog (the
+/// stream must clear one block before the victim could drain its own
+/// backlog, judging by predicted-then-observed rates; unknown rates on
+/// either side permit the steal). A stream with nothing to run and no
+/// stealable peer backlog retires and releases its transfer slot; a
+/// gate-blocked stream stays idle and re-evaluates as estimates update.
+fn assign_idle(
+    streams: &mut [Stream],
+    topo: &mut Topology,
+    flows: &mut FlowSet,
+    flow_owner: &mut Vec<usize>,
+    steals: &mut usize,
+    plan: &StripePlan,
+    min_steal: usize,
+) {
+    for i in 0..streams.len() {
+        if streams[i].current.is_some() || streams[i].finished {
+            continue;
+        }
+        let block = match streams[i].queue.pop_front() {
+            Some(b) => Some(b),
+            None => {
+                let est_i = streams[i].est_bw;
+                let victim = (0..streams.len())
+                    .filter(|&j| {
+                        if j == i || streams[j].queue.len() < min_steal {
+                            return false;
+                        }
+                        let est_v = streams[j].est_bw;
+                        est_i <= 0.0
+                            || est_v <= 0.0
+                            || est_v < streams[j].queue.len() as f64 * est_i
+                    })
+                    .max_by_key(|&j| streams[j].queue.len());
+                match victim {
+                    Some(v) => {
+                        let take = (streams[v].queue.len() + 1) / 2;
+                        let mut grabbed: Vec<usize> = (0..take)
+                            .filter_map(|_| streams[v].queue.pop_back())
+                            .collect();
+                        grabbed.reverse(); // keep ascending offsets
+                        *steals += 1;
+                        let mut it = grabbed.into_iter();
+                        let first = it.next();
+                        for b in it {
+                            streams[i].queue.push_back(b);
+                        }
+                        first
+                    }
+                    None => {
+                        let any_backlog = (0..streams.len())
+                            .any(|j| j != i && streams[j].queue.len() >= min_steal);
+                        if !any_backlog {
+                            streams[i].finished = true;
+                            topo.end_transfer(streams[i].site);
+                        }
+                        None
+                    }
+                }
+            }
+        };
+        if let Some(b) = block {
+            let (_, len) = plan.block_range(b);
+            // Per-block setup: connection latency + the disk seek
+            // (`drdTime`) every ranged read pays; the streaming disk
+            // rate itself caps the flow in `FlowSet`.
+            let lead = {
+                let sc = &topo.site(streams[i].site).cfg;
+                sc.latency + sc.drd_time_ms / 1e3
+            };
+            let fid = flows.add(topo, streams[i].site, len, lead);
+            flow_owner.push(i);
+            streams[i].current = Some((b, fid, topo.now));
+        }
+    }
+}
+
+/// Instrument completed blocks into the history stores and fold the
+/// observed throughput into each stream's bandwidth estimate.
+#[allow(clippy::too_many_arguments)]
+fn record_completions(
+    completions: Vec<crate::simnet::Completion>,
+    streams: &mut [Stream],
+    flow_owner: &[usize],
+    planned_owner: &[usize],
+    plan: &StripePlan,
+    ftp: &GridFtp,
+    client: &str,
+    finish_at: &mut f64,
+) {
+    for c in completions {
+        let owner = flow_owner[c.flow];
+        let s = &mut streams[owner];
+        let (block, fid, assigned_at) = match s.current.take() {
+            Some(cur) => cur,
+            None => continue,
+        };
+        debug_assert_eq!(fid, c.flow);
+        let (_, len) = plan.block_range(block);
+        let duration = (c.at - assigned_at).max(1e-9);
+        ftp.record(
+            s.site,
+            TransferRecord {
+                at: assigned_at,
+                peer: client.to_string(),
+                direction: Direction::Read,
+                bytes: len,
+                duration,
+            },
+        );
+        s.blocks_done += 1;
+        if planned_owner[block] != owner {
+            s.stolen_done += 1;
+        }
+        s.bytes_done += len;
+        s.busy_time += duration;
+        let observed = len / duration;
+        s.est_bw = if s.est_bw > 0.0 {
+            0.5 * s.est_bw + 0.5 * observed
+        } else {
+            observed
+        };
+        if c.at > *finish_at {
+            *finish_at = c.at;
+        }
+    }
+}
+
+/// Execute `plan` against the live topology, instrumenting every block
+/// into the per-site history stores. `client` is the requesting
+/// endpoint (the Figure-5 "source" the GRIS publishes per-peer history
+/// for).
+pub fn execute(
+    topo: &mut Topology,
+    ftp: &GridFtp,
+    client: &str,
+    plan: &StripePlan,
+    policy: &CoallocPolicy,
+) -> Result<CoallocOutcome> {
+    let started_at = topo.now;
+    if plan.n_blocks == 0 || plan.assignments.is_empty() {
+        return Ok(CoallocOutcome {
+            bytes: 0.0,
+            duration: 0.0,
+            started_at,
+            aggregate_bandwidth: 0.0,
+            steals: 0,
+            streams: Vec::new(),
+        });
+    }
+
+    let mut streams: Vec<Stream> = Vec::with_capacity(plan.assignments.len());
+    for a in &plan.assignments {
+        let site = match topo.index_of(&a.source.site) {
+            Some(i) => i,
+            None => bail!("coalloc plan names unknown site {:?}", a.source.site),
+        };
+        streams.push(Stream {
+            site,
+            site_name: a.source.site.clone(),
+            queue: (a.first_block..a.first_block + a.blocks).collect(),
+            current: None,
+            blocks_done: 0,
+            stolen_done: 0,
+            bytes_done: 0.0,
+            busy_time: 0.0,
+            est_bw: a.source.predicted_bw.max(0.0),
+            finished: false,
+        });
+    }
+
+    // Register every stream as an in-flight transfer so GRIS `load`
+    // and link sharing see the co-allocated session, mirroring what
+    // `GridFtp::fetch` does for a single stream.
+    for s in &streams {
+        topo.begin_transfer(s.site);
+    }
+
+    let mut flows = FlowSet::new(policy.client_downlink);
+    // flow id → stream index (flows are append-only within the set).
+    let mut flow_owner: Vec<usize> = Vec::new();
+    // block id → the stream originally assigned it by the planner, so
+    // a delivery counts as "stolen" exactly when someone else's block
+    // lands (even after multi-hop or steal-back churn).
+    let mut planned_owner: Vec<usize> = vec![0; plan.n_blocks];
+    for (s, a) in plan.assignments.iter().enumerate() {
+        for b in a.first_block..a.first_block + a.blocks {
+            planned_owner[b] = s;
+        }
+    }
+    let mut steals = 0usize;
+    let mut finish_at = started_at;
+    let min_steal = policy.rebalance_threshold.max(1.0).ceil() as usize;
+    let tick = policy.tick.max(1e-3);
+    // Hard cap: bandwidth is floored at 1 B/s, so pathological configs
+    // terminate with an error instead of spinning forever.
+    let max_ticks = 2_000_000usize;
+
+    for _ in 0..max_ticks {
+        // 1. Hand idle streams work: own queue first, then steal.
+        assign_idle(&mut streams, topo, &mut flows, &mut flow_owner, &mut steals, plan, min_steal);
+
+        if streams.iter().all(|s| s.finished) {
+            break;
+        }
+
+        // 2/3. Advance one tick, re-dispatching freed streams at every
+        // completion instant (steal decisions included), so per-stream
+        // throughput is not quantized to one block per tick.
+        let mut tick_left = tick;
+        while tick_left > 1e-12 {
+            let (used, completions) = flows.advance_some(topo, tick_left);
+            tick_left -= used;
+            if completions.is_empty() {
+                break;
+            }
+            record_completions(
+                completions,
+                &mut streams,
+                &flow_owner,
+                &planned_owner,
+                plan,
+                ftp,
+                client,
+                &mut finish_at,
+            );
+            if tick_left > 1e-12 {
+                assign_idle(
+                    &mut streams,
+                    topo,
+                    &mut flows,
+                    &mut flow_owner,
+                    &mut steals,
+                    plan,
+                    min_steal,
+                );
+            }
+        }
+    }
+
+    if !streams.iter().all(|s| s.finished) {
+        // Release whatever is still registered before failing.
+        for s in &streams {
+            if !s.finished {
+                topo.end_transfer(s.site);
+            }
+        }
+        bail!("coalloc transfer did not converge within the tick budget");
+    }
+
+    let bytes: f64 = streams.iter().map(|s| s.bytes_done).sum();
+    let duration = (finish_at - started_at).max(0.0);
+    Ok(CoallocOutcome {
+        bytes,
+        duration,
+        started_at,
+        aggregate_bandwidth: if duration > 0.0 { bytes / duration } else { 0.0 },
+        steals,
+        streams: streams
+            .iter()
+            .map(|s| StreamReport {
+                site: s.site_name.clone(),
+                site_index: s.site,
+                blocks: s.blocks_done,
+                stolen: s.stolen_done,
+                bytes: s.bytes_done,
+                mean_bandwidth: if s.busy_time > 0.0 {
+                    s.bytes_done / s.busy_time
+                } else {
+                    0.0
+                },
+            })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coalloc::planner::{plan_stripes, StripeSource};
+    use crate::config::GridConfig;
+
+    fn flat_grid(n: usize, bw: f64) -> (GridConfig, Topology, GridFtp) {
+        let mut cfg = GridConfig::generate(n, 17);
+        for s in &mut cfg.sites {
+            s.wan_bandwidth = bw;
+            s.diurnal_amp = 0.0;
+            s.noise_frac = 0.0;
+            s.congestion_prob = 0.0;
+            s.ar_coeff = 0.0;
+            s.latency = 0.0;
+            s.disk_rate = 1e9;
+            s.drd_time_ms = 0.0;
+        }
+        let topo = Topology::build(&cfg);
+        let ftp = GridFtp::new(&topo, 32);
+        (cfg, topo, ftp)
+    }
+
+    fn sources(cfg: &GridConfig, bws: &[f64]) -> Vec<StripeSource> {
+        bws.iter()
+            .enumerate()
+            .map(|(i, &bw)| StripeSource {
+                site: cfg.sites[i].name.clone(),
+                url: format!("gsiftp://{}/f", cfg.sites[i].name),
+                predicted_bw: bw,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn delivers_every_byte_and_instruments_history() {
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let srcs = sources(&cfg, &[1e6, 1e6, 1e6]);
+        let plan = plan_stripes(&srcs, 60e6, &policy);
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        assert!((out.bytes - 60e6).abs() < 1.0);
+        let delivered: usize = out.streams.iter().map(|s| s.blocks).sum();
+        assert_eq!(delivered, plan.n_blocks);
+        // Instrumentation: every block is a read record under the
+        // client peer, in the same store the GRIS providers read.
+        for s in &out.streams {
+            let h = ftp.history(s.site_index);
+            let h = h.read().unwrap();
+            assert_eq!(h.rd.count as usize, s.blocks);
+            assert_eq!(
+                h.source("client").map(|sh| sh.stats.count).unwrap_or(0) as usize,
+                s.blocks
+            );
+        }
+        // All streams registered and released their transfer slots.
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn parallel_streams_beat_one_stream() {
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 4,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let (cfg, mut topo, ftp) = flat_grid(4, 1e6);
+        let srcs = sources(&cfg, &[1e6, 1e6, 1e6, 1e6]);
+        let plan = plan_stripes(&srcs, 80e6, &policy);
+        let par = execute(&mut topo, &ftp, "c", &plan, &policy).unwrap();
+
+        let (cfg1, mut topo1, ftp1) = flat_grid(4, 1e6);
+        let one = CoallocPolicy { max_streams: 1, ..policy.clone() };
+        let plan1 = plan_stripes(&sources(&cfg1, &[1e6]), 80e6, &one);
+        let solo = execute(&mut topo1, &ftp1, "c", &plan1, &one).unwrap();
+        assert!(
+            par.duration < solo.duration / 2.0,
+            "par {:.0}s !<< solo {:.0}s",
+            par.duration,
+            solo.duration
+        );
+    }
+
+    #[test]
+    fn slow_stream_sheds_blocks_to_fast_peers() {
+        let (mut cfg, _, _) = flat_grid(3, 1e6);
+        // Site 0 is actually 10x slower than the plan believes.
+        cfg.sites[0].wan_bandwidth = 0.1e6;
+        let mut topo = Topology::build(&cfg);
+        let ftp = GridFtp::new(&topo, 32);
+        let policy = CoallocPolicy {
+            block_size: 2e6,
+            max_streams: 3,
+            tick: 1.0,
+            rebalance_threshold: 2.0,
+            ..Default::default()
+        };
+        // Plan assumes all three are equally fast.
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6, 1e6]), 60e6, &policy);
+        let out = execute(&mut topo, &ftp, "c", &plan, &policy).unwrap();
+        assert!(out.steals > 0, "expected work stealing");
+        let slow = &out.streams[0];
+        let fast_blocks: usize =
+            out.streams[1..].iter().map(|s| s.blocks).sum();
+        assert!(
+            slow.blocks < fast_blocks / 2,
+            "slow did {} of {} blocks",
+            slow.blocks,
+            slow.blocks + fast_blocks
+        );
+        let stolen_total: usize = out.streams.iter().map(|s| s.stolen).sum();
+        assert!(stolen_total > 0);
+        // Rebalancing keeps the makespan near the fast links' pace:
+        // without stealing the slow stream alone would need ~200s for
+        // its 20 MB third at a 1/2-shared 0.1e6 B/s link.
+        assert!(out.duration < 150.0, "duration {:.0}s", out.duration);
+    }
+
+    #[test]
+    fn unknown_site_is_an_error() {
+        let (_, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy::default();
+        let plan = plan_stripes(
+            &[StripeSource { site: "ghost".into(), url: "u".into(), predicted_bw: 1e6 }],
+            1e6,
+            &policy,
+        );
+        assert!(execute(&mut topo, &ftp, "c", &plan, &policy).is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_a_noop() {
+        let (_, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy::default();
+        let plan = plan_stripes(&[], 0.0, &policy);
+        let out = execute(&mut topo, &ftp, "c", &plan, &policy).unwrap();
+        assert_eq!(out.bytes, 0.0);
+        assert_eq!(out.duration, 0.0);
+    }
+}

@@ -161,6 +161,78 @@ impl GridConfig {
     }
 }
 
+/// Tuning knobs for co-allocated (striped) transfers — the
+/// `crate::coalloc` subsystem. One logical file is pulled from up to
+/// `max_streams` replicas at once in `block_size` chunks; streams that
+/// drain their assignment steal blocks from lagging peers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoallocPolicy {
+    /// Chunk granularity in bytes. Smaller blocks rebalance faster but
+    /// pay more per-block latency; the GridFTP work used 1–64 MB.
+    pub block_size: f64,
+    /// Maximum parallel streams = size of the top-K replica set.
+    pub max_streams: usize,
+    /// Work-stealing trigger: an idle stream steals from the peer with
+    /// the largest backlog only if that backlog is at least this many
+    /// blocks (half the backlog moves).
+    pub rebalance_threshold: f64,
+    /// Scheduler step in simulated seconds (steal decisions happen at
+    /// this granularity; byte movement is exact within a step).
+    pub tick: f64,
+    /// Client downlink capacity shared by all streams (bytes/s);
+    /// `f64::INFINITY` leaves the WAN links as the only bottleneck.
+    pub client_downlink: f64,
+}
+
+impl Default for CoallocPolicy {
+    fn default() -> Self {
+        CoallocPolicy {
+            block_size: 16.0 * 1024.0 * 1024.0,
+            max_streams: 4,
+            rebalance_threshold: 2.0,
+            tick: 2.0,
+            client_downlink: f64::INFINITY,
+        }
+    }
+}
+
+impl CoallocPolicy {
+    /// Parse from JSON text; absent keys keep their defaults. A missing
+    /// or non-positive `client_downlink` means uncapped.
+    pub fn from_json(src: &str) -> anyhow::Result<CoallocPolicy> {
+        let v = Json::parse(src).context("parsing coalloc policy JSON")?;
+        let d = CoallocPolicy::default();
+        let f = |k: &str, dflt: f64| v.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+        let downlink = f("client_downlink", 0.0);
+        Ok(CoallocPolicy {
+            // Floored at 64 KiB: a degenerate block size would explode
+            // the block count (and the scheduler's queues) downstream.
+            block_size: f("block_size", d.block_size).max(64.0 * 1024.0),
+            max_streams: f("max_streams", d.max_streams as f64).max(1.0) as usize,
+            rebalance_threshold: f("rebalance_threshold", d.rebalance_threshold),
+            tick: f("tick", d.tick).max(1e-3),
+            client_downlink: if downlink > 0.0 { downlink } else { f64::INFINITY },
+        })
+    }
+
+    /// Serialize to JSON (an uncapped downlink is omitted).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("block_size".into(), Json::Num(self.block_size));
+        m.insert("max_streams".into(), Json::Num(self.max_streams as f64));
+        m.insert(
+            "rebalance_threshold".into(),
+            Json::Num(self.rebalance_threshold),
+        );
+        m.insert("tick".into(), Json::Num(self.tick));
+        if self.client_downlink.is_finite() {
+            m.insert("client_downlink".into(), Json::Num(self.client_downlink));
+        }
+        Json::Obj(m).to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,5 +274,34 @@ mod tests {
         assert!(GridConfig::from_json("{}").is_err());
         assert!(GridConfig::from_json(r#"{"sites": [{}]}"#).is_err());
         assert!(GridConfig::from_json("notjson").is_err());
+    }
+
+    #[test]
+    fn coalloc_policy_round_trip() {
+        let p = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 6,
+            rebalance_threshold: 3.0,
+            tick: 1.0,
+            client_downlink: 5e6,
+        };
+        let re = CoallocPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, re);
+        // Uncapped downlink survives the omit-on-serialize rule.
+        let unc = CoallocPolicy::default();
+        let re = CoallocPolicy::from_json(&unc.to_json()).unwrap();
+        assert_eq!(unc, re);
+    }
+
+    #[test]
+    fn coalloc_policy_defaults_and_floors() {
+        let p = CoallocPolicy::from_json("{}").unwrap();
+        assert_eq!(p, CoallocPolicy::default());
+        let p = CoallocPolicy::from_json(r#"{"max_streams": 0, "tick": 0, "block_size": 0}"#)
+            .unwrap();
+        assert_eq!(p.max_streams, 1);
+        assert!(p.tick > 0.0);
+        assert!(p.block_size >= 64.0 * 1024.0);
+        assert!(CoallocPolicy::from_json("nope").is_err());
     }
 }

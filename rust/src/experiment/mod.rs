@@ -13,4 +13,6 @@ pub mod grid;
 pub mod quality;
 
 pub use grid::SimGrid;
-pub use quality::{run_quality, run_quality_trace, QualityReport};
+pub use quality::{
+    run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,
+};

@@ -8,7 +8,8 @@
 use crate::broker::selectors::{Selector, SelectorKind};
 use crate::broker::RankPolicy;
 use crate::classad::{parse_classad, symmetric_match, ClassAd};
-use crate::config::GridConfig;
+use crate::coalloc;
+use crate::config::{CoallocPolicy, GridConfig};
 use crate::simnet::{Request, Workload, WorkloadSpec};
 
 use super::grid::SimGrid;
@@ -169,6 +170,112 @@ pub fn run_quality_trace(
     }
 }
 
+/// Aggregated outcome of the single-best vs co-allocated comparison.
+#[derive(Debug, Clone)]
+pub struct CoallocReport {
+    /// Requests actually executed (selection failures are skipped).
+    pub requests: usize,
+    /// Mean duration the best single-source fetch would have taken,
+    /// measured per request on a probe copy of the topology.
+    pub single_mean_time: f64,
+    /// Mean duration of the co-allocated transfer (executed for real).
+    pub coalloc_mean_time: f64,
+    /// `single_mean_time / coalloc_mean_time` (>1 ⇒ striping wins).
+    pub speedup: f64,
+    /// Mean number of streams per transfer.
+    pub mean_streams: f64,
+    /// Total work-stealing events across all transfers.
+    pub steals: usize,
+}
+
+/// Replay the synthetic workload with the co-allocated Access strategy
+/// and score it against the best single-source fetch of each request.
+///
+/// Both alternatives see identical link state: the single-source cost
+/// is measured on a [`crate::simnet::Topology::clone_for_probe`] copy
+/// (same upcoming RNG stream), then the striped transfer executes on
+/// the real topology, feeding the per-site history stores.
+pub fn run_coalloc_quality(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    n_requests: usize,
+    replicas_per_file: usize,
+    warm: usize,
+    policy: &CoallocPolicy,
+) -> CoallocReport {
+    let mut workload = Workload::new(spec.clone(), cfg.seed);
+    let requests = workload.take(n_requests);
+    let mut grid = SimGrid::build(cfg, spec, replicas_per_file, 64);
+    grid.warm(warm);
+    let broker = grid.broker(RankPolicy::ForecastBandwidth { engine: None });
+
+    let mut single = Vec::with_capacity(n_requests);
+    let mut co = Vec::with_capacity(n_requests);
+    let mut steals = 0usize;
+    let mut streams_total = 0usize;
+    let mut last_at = 0.0f64;
+    for req in &requests {
+        grid.topo.advance((req.at - last_at).max(0.0));
+        last_at = req.at;
+        grid.publish_dynamics();
+        let logical = &grid.files[req.file];
+        let size = grid.sizes[req.file];
+        let ad = request_ad(req.min_bandwidth);
+        let sel = match broker.select_coalloc(logical, &ad, size, policy) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // The best single-source Access, costed on a probe copy with
+        // the same sharing convention as `GridFtp::fetch`.
+        let best_site = grid.topo.index_of(&sel.selection.site).unwrap();
+        let mut probe = grid.topo.clone_for_probe();
+        probe.begin_transfer(best_site);
+        let (d_single, _) = probe.transfer_from(best_site, size);
+        // The co-allocated Access, executed for real: instrumentation
+        // lands in the same history stores the GRIS providers publish.
+        // A transfer that fails to converge is skipped — and the
+        // topology (clock + link state) is rolled back to the
+        // pre-transfer snapshot, since a failed execution may have
+        // advanced simulated time by its whole tick budget, which
+        // would poison every later measurement.
+        let before = grid.topo.clone_for_probe();
+        let out = match coalloc::execute(&mut grid.topo, &grid.ftp, "client", &sel.plan, policy)
+        {
+            Ok(out) => out,
+            Err(_) => {
+                grid.topo = before;
+                continue;
+            }
+        };
+        single.push(d_single);
+        co.push(out.duration);
+        steals += out.steals;
+        streams_total += out.streams.len();
+    }
+    let n = co.len();
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let single_mean_time = mean(&single);
+    let coalloc_mean_time = mean(&co);
+    CoallocReport {
+        requests: n,
+        single_mean_time,
+        coalloc_mean_time,
+        speedup: if coalloc_mean_time > 0.0 {
+            single_mean_time / coalloc_mean_time
+        } else {
+            1.0
+        },
+        mean_streams: if n > 0 { streams_total as f64 / n as f64 } else { 0.0 },
+        steals,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +320,33 @@ mod tests {
         let b = run_quality(&cfg, &spec, 20, 3, 2, SelectorKind::RoundRobin, None);
         assert_eq!(a.mean_time, b.mean_time);
         assert_eq!(a.pct_optimal, b.pct_optimal);
+    }
+
+    #[test]
+    fn coalloc_beats_single_best_with_enough_replicas() {
+        let (cfg, spec) = small();
+        let policy = CoallocPolicy { block_size: 8.0 * 1024.0 * 1024.0, ..Default::default() };
+        let r = run_coalloc_quality(&cfg, &spec, 25, 4, 4, &policy);
+        assert!(r.requests > 0);
+        assert!(r.mean_streams > 1.5, "streams {}", r.mean_streams);
+        assert!(
+            r.coalloc_mean_time < r.single_mean_time,
+            "coalloc {:.1}s !< single {:.1}s",
+            r.coalloc_mean_time,
+            r.single_mean_time
+        );
+        assert!(r.speedup > 1.0);
+    }
+
+    #[test]
+    fn coalloc_report_deterministic() {
+        let (cfg, spec) = small();
+        let policy = CoallocPolicy::default();
+        let a = run_coalloc_quality(&cfg, &spec, 10, 3, 3, &policy);
+        let b = run_coalloc_quality(&cfg, &spec, 10, 3, 3, &policy);
+        assert_eq!(a.coalloc_mean_time, b.coalloc_mean_time);
+        assert_eq!(a.single_mean_time, b.single_mean_time);
+        assert_eq!(a.steals, b.steals);
     }
 }
 

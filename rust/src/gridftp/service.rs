@@ -21,6 +21,8 @@ pub struct TransferOutcome {
     pub bandwidth: f64,
     /// Simulated start time.
     pub started_at: f64,
+    /// First byte of the fetched range (0 for whole-file transfers).
+    pub offset: f64,
 }
 
 /// The per-grid GridFTP fabric: one logical server per site, all
@@ -59,24 +61,52 @@ impl GridFtp {
         client: &str,
         bytes: f64,
     ) -> TransferOutcome {
+        self.fetch_range(topo, site, client, 0.0, bytes)
+    }
+
+    /// Execute a partial-range read (GridFTP extended block mode): the
+    /// `bytes` starting at `offset`. The range boundary only changes
+    /// where the read starts — seek overhead and link behaviour match a
+    /// whole-file fetch of the same length — but the instrumentation
+    /// record carries the true range length, so striped block fetches
+    /// feed the per-source history exactly like whole files do.
+    pub fn fetch_range(
+        &self,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        offset: f64,
+        bytes: f64,
+    ) -> TransferOutcome {
         topo.begin_transfer(site);
         let (duration, bandwidth) = topo.transfer_from(site, bytes);
         topo.end_transfer(site);
         let started_at = topo.now;
-        self.histories[site].write().unwrap().record(TransferRecord {
-            at: started_at,
-            peer: client.to_string(),
-            direction: Direction::Read,
-            bytes,
-            duration,
-        });
+        self.record(
+            site,
+            TransferRecord {
+                at: started_at,
+                peer: client.to_string(),
+                direction: Direction::Read,
+                bytes,
+                duration,
+            },
+        );
         TransferOutcome {
             site: topo.site(site).cfg.name.clone(),
             bytes,
             duration,
             bandwidth,
             started_at,
+            offset,
         }
+    }
+
+    /// Ingest one instrumentation record into `site`'s history store —
+    /// the entry point for transfer engines that simulate byte movement
+    /// themselves (the co-allocation scheduler's per-block records).
+    pub fn record(&self, site: usize, rec: TransferRecord) {
+        self.histories[site].write().unwrap().record(rec);
     }
 
     /// Execute a write (replica creation) to `site` from `client`.
@@ -105,6 +135,7 @@ impl GridFtp {
             duration,
             bandwidth,
             started_at,
+            offset: 0.0,
         }
     }
 
@@ -142,6 +173,40 @@ mod tests {
         assert_eq!(h.rd.last_peer, "comet.xyz.com");
         assert!((h.rd.last - out.bandwidth).abs() / out.bandwidth < 1e-9);
         assert_eq!(h.source("comet.xyz.com").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn range_fetches_instrument_like_whole_files() {
+        let (mut topo, ftp) = setup();
+        let a = ftp.fetch_range(&mut topo, 0, "client", 0.0, 4e6);
+        let b = ftp.fetch_range(&mut topo, 0, "client", 4e6, 4e6);
+        assert_eq!(a.offset, 0.0);
+        assert_eq!(b.offset, 4e6);
+        assert!(a.duration > 0.0 && b.duration > 0.0);
+        let h = ftp.history(0);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 2);
+        assert_eq!(h.source("client").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn record_feeds_history_directly() {
+        let (_, ftp) = setup();
+        ftp.record(
+            3,
+            TransferRecord {
+                at: 12.0,
+                peer: "striper".into(),
+                direction: Direction::Read,
+                bytes: 8e6,
+                duration: 4.0,
+            },
+        );
+        let h = ftp.history(3);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 1);
+        assert_eq!(h.rd.last, 2e6);
+        assert_eq!(h.source("striper").unwrap().window(), vec![2e6]);
     }
 
     #[test]

@@ -32,6 +32,12 @@
 //! * [`broker`] — the paper's contribution: the decentralized storage
 //!   broker (Search / Match / Access phases) plus baseline selectors and a
 //!   centralized-manager comparator.
+//! * [`coalloc`] — co-allocated (striped) Access: a stripe planner that
+//!   splits one logical file across the broker's top-K replicas in
+//!   proportion to forecast bandwidth, and a block scheduler with
+//!   work-stealing rebalancing that drives the parallel streams through
+//!   `simnet`'s concurrent-flow engine (the paper's §7 future work /
+//!   Allcock et al. parallel-GridFTP direction).
 //! * [`util`] — deterministic PRNG, unit parsing (`50G`, `75K/Sec`), JSON,
 //!   micro-benchmark + property-test harnesses (the image has no network,
 //!   so criterion/proptest equivalents are provided in-tree).
@@ -39,6 +45,7 @@
 pub mod broker;
 pub mod catalog;
 pub mod classad;
+pub mod coalloc;
 pub mod config;
 pub mod directory;
 pub mod experiment;

@@ -1,0 +1,405 @@
+//! Concurrent flow advancement — multiple simultaneous transfers that
+//! share link capacity.
+//!
+//! The single-transfer path ([`Topology::transfer_from`]) integrates one
+//! flow to completion. Co-allocated (striped) access needs the dual
+//! view: a *set* of flows, one per source replica, advanced together in
+//! simulated time so that (a) flows from the same site split that
+//! site's sampled link bandwidth, (b) all flows optionally share a
+//! client-side downlink cap, and (c) a completion immediately returns
+//! capacity to the survivors. [`FlowSet`] provides exactly that and
+//! nothing more; scheduling (which bytes go on which flow) lives in
+//! `crate::coalloc`.
+//!
+//! Sharing convention: per-flow bandwidth is
+//! [`Topology::current_bandwidth`], which divides the link by the
+//! site's `active_transfers` counter. Callers must `begin_transfer`
+//! once per stream before advancing flows (exactly what
+//! `GridFtp::fetch` does for single transfers); same-site flows then
+//! share that link through the counter itself, so single-source and
+//! co-allocated paths see the identical per-stream share and
+//! comparisons between them are fair. The downlink cap is the one
+//! piece of sharing the set computes internally.
+
+use crate::simnet::Topology;
+
+/// One in-flight transfer leg.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    /// Topology index of the source site.
+    pub site: usize,
+    /// Bytes still to move (0 once done).
+    pub remaining: f64,
+    /// Bytes delivered so far.
+    pub delivered: f64,
+    /// Connection-setup latency still to pay before bytes move.
+    pub lead: f64,
+    /// Simulated time the flow was added.
+    pub started_at: f64,
+    /// Completion time, once finished.
+    pub finished_at: Option<f64>,
+}
+
+impl Flow {
+    pub fn is_done(&self) -> bool {
+        self.finished_at.is_some()
+    }
+}
+
+/// A flow completion reported by [`FlowSet::advance`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    /// Index of the flow within the set (as returned by [`FlowSet::add`]).
+    pub flow: usize,
+    /// Absolute simulated completion time.
+    pub at: f64,
+}
+
+/// A set of concurrent flows sharing link capacity.
+#[derive(Debug, Clone)]
+pub struct FlowSet {
+    flows: Vec<Flow>,
+    /// Indices of flows that are not yet done — the working set every
+    /// sub-step iterates, so long transfers that accumulate thousands
+    /// of completed block-flows don't pay for them on every tick.
+    live_ids: Vec<usize>,
+    /// Client-side downlink capacity shared by all flows (bytes/s);
+    /// `f64::INFINITY` means the WAN links are the only bottleneck.
+    pub downlink: f64,
+}
+
+impl FlowSet {
+    pub fn new(downlink: f64) -> FlowSet {
+        FlowSet { flows: Vec::new(), live_ids: Vec::new(), downlink }
+    }
+
+    /// Add a flow of `bytes` from `site`, paying `lead` seconds of setup
+    /// latency first. Returns the flow's index.
+    pub fn add(&mut self, topo: &Topology, site: usize, bytes: f64, lead: f64) -> usize {
+        self.flows.push(Flow {
+            site,
+            remaining: bytes.max(0.0),
+            delivered: 0.0,
+            lead: lead.max(0.0),
+            started_at: topo.now,
+            finished_at: None,
+        });
+        self.live_ids.push(self.flows.len() - 1);
+        self.flows.len() - 1
+    }
+
+    pub fn flows(&self) -> &[Flow] {
+        &self.flows
+    }
+
+    pub fn flow(&self, idx: usize) -> &Flow {
+        &self.flows[idx]
+    }
+
+    /// Number of flows still moving bytes.
+    pub fn live(&self) -> usize {
+        self.live_ids.len()
+    }
+
+    fn retire(&mut self, flow: usize) {
+        if let Some(pos) = self.live_ids.iter().position(|&x| x == flow) {
+            self.live_ids.swap_remove(pos);
+        }
+    }
+
+    /// Byte rate of each *live* flow right now, as `(flow id, rate)`
+    /// pairs: the site link's sampled share via
+    /// [`Topology::current_bandwidth`] (same-site flows divide the link
+    /// through the `active_transfers` counter their registration
+    /// bumped), capped by the source's disk streaming rate (the
+    /// slower pipeline stage dominates, as in
+    /// [`Topology::transfer_from`]), then scaled down if the aggregate
+    /// exceeds the client downlink. Flows still paying connection-setup
+    /// latency move nothing yet and do not consume downlink.
+    pub fn bandwidths(&self, topo: &mut Topology) -> Vec<(usize, f64)> {
+        let mut bws: Vec<(usize, f64)> = Vec::with_capacity(self.live_ids.len());
+        for &i in &self.live_ids {
+            let f = &self.flows[i];
+            let bw = if f.lead > 0.0 {
+                0.0
+            } else {
+                let disk = topo.site(f.site).cfg.disk_rate;
+                topo.current_bandwidth(f.site).min(disk)
+            };
+            bws.push((i, bw));
+        }
+        let total: f64 = bws.iter().map(|&(_, b)| b).sum();
+        if total > self.downlink {
+            let scale = self.downlink / total;
+            for pair in &mut bws {
+                pair.1 *= scale;
+            }
+        }
+        bws
+    }
+
+    /// Advance every live flow by `dt` simulated seconds, splitting the
+    /// step at completions so freed capacity is re-shared immediately.
+    /// Advances `topo.now` by `dt` and returns the completions in time
+    /// order.
+    pub fn advance(&mut self, topo: &mut Topology, dt: f64) -> Vec<Completion> {
+        let mut out = Vec::new();
+        let mut left = dt.max(0.0);
+        let t_end = topo.now + left;
+        while left > 1e-12 && !self.live_ids.is_empty() {
+            let (used, mut done) = self.advance_some(topo, left);
+            left -= used;
+            let progressed = !done.is_empty();
+            out.append(&mut done);
+            if !progressed {
+                // The whole remainder elapsed with nothing finishing.
+                break;
+            }
+        }
+        // Idle remainder of the window (all flows done early).
+        if topo.now < t_end {
+            let gap = t_end - topo.now;
+            topo.advance(gap);
+        }
+        out
+    }
+
+    /// Advance until the first completion(s) or until `dt` elapses,
+    /// whichever comes first. Returns the simulated time consumed and
+    /// the completions (empty ⇔ the full `dt` passed, or no flows are
+    /// live). Unlike [`FlowSet::advance`] this never idles past an
+    /// event, so a scheduler can hand freed capacity new work at the
+    /// exact completion instant.
+    pub fn advance_some(&mut self, topo: &mut Topology, dt: f64) -> (f64, Vec<Completion>) {
+        let mut out = Vec::new();
+        let mut left = dt.max(0.0);
+        let mut consumed = 0.0;
+        while left > 1e-12 && !self.live_ids.is_empty() && out.is_empty() {
+            // Zero-length (or numerically drained) flows complete
+            // immediately — otherwise they would pin `step` at 0 and
+            // the loop could never consume `left`.
+            let now = topo.now;
+            let mut k = 0;
+            while k < self.live_ids.len() {
+                let i = self.live_ids[k];
+                let f = &mut self.flows[i];
+                if f.lead <= 0.0 && f.remaining <= 1e-6 {
+                    f.remaining = 0.0;
+                    f.finished_at = Some(now);
+                    out.push(Completion { flow: i, at: now });
+                    self.live_ids.swap_remove(k);
+                } else {
+                    k += 1;
+                }
+            }
+            if !out.is_empty() {
+                break;
+            }
+            let bws = self.bandwidths(topo);
+            // Earliest event within this sub-step: a flow finishing, or
+            // a flow leaving connection setup (its rate changes then).
+            let mut step = left;
+            for &(i, bw) in &bws {
+                let f = &self.flows[i];
+                if f.lead > 0.0 {
+                    step = step.min(f.lead);
+                } else if bw > 0.0 {
+                    step = step.min(f.remaining / bw);
+                }
+            }
+            // Move bytes for `step` seconds at the sampled rates.
+            for &(i, bw) in &bws {
+                let mut done = false;
+                {
+                    let f = &mut self.flows[i];
+                    let mut avail = step;
+                    if f.lead > 0.0 {
+                        let used = f.lead.min(avail);
+                        f.lead -= used;
+                        avail -= used;
+                    }
+                    if avail > 0.0 {
+                        let moved = (bw * avail).min(f.remaining);
+                        f.remaining -= moved;
+                        f.delivered += moved;
+                        if f.remaining <= 1e-6 {
+                            f.remaining = 0.0;
+                            f.finished_at = Some(now + step);
+                            done = true;
+                        }
+                    }
+                }
+                if done {
+                    out.push(Completion { flow: i, at: now + step });
+                    self.retire(i);
+                }
+            }
+            topo.advance(step);
+            consumed += step;
+            left -= step;
+        }
+        (consumed, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    fn flat_topo(n: usize) -> Topology {
+        // Deterministic links: no noise, no congestion, no diurnal.
+        let mut cfg = GridConfig::generate(n, 5);
+        for s in &mut cfg.sites {
+            s.wan_bandwidth = 1e6;
+            s.diurnal_amp = 0.0;
+            s.noise_frac = 0.0;
+            s.congestion_prob = 0.0;
+            s.ar_coeff = 0.0;
+            s.latency = 0.0;
+        }
+        Topology::build(&cfg)
+    }
+
+    #[test]
+    fn single_flow_matches_link_rate() {
+        let mut topo = flat_topo(2);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 1e6, 0.0);
+        // No begin_transfer: share = full pipe (1e6 B/s) → 1 second.
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 1);
+        assert!((done[0].at - 1.0).abs() < 1e-6, "at {}", done[0].at);
+        assert!((topo.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_site_flows_split_the_pipe() {
+        let mut topo = flat_topo(2);
+        // Both streams register, per the module convention.
+        topo.begin_transfer(0);
+        topo.begin_transfer(0);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 1e6, 0.0);
+        fs.add(&topo, 0, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 30.0);
+        // Identical to two concurrent GridFtp fetches: active=2 →
+        // share 1/3 each (1e6/3 B/s) → both complete at t=3.
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert!((c.at - 3.0).abs() < 1e-6, "at {}", c.at);
+        }
+    }
+
+    #[test]
+    fn completion_returns_downlink_capacity_mid_step() {
+        let mut topo = flat_topo(3);
+        let mut fs = FlowSet::new(1e6); // cap below the 2e6 aggregate
+        fs.add(&topo, 0, 0.5e6, 0.0); // finishes first
+        fs.add(&topo, 1, 1.5e6, 0.0);
+        let done = fs.advance(&mut topo, 30.0);
+        assert_eq!(done.len(), 2);
+        // Capped at 0.5e6 each until t=1; then the survivor takes the
+        // whole 1e6 cap: remaining 1.0e6 → done at t=2, not t=3.
+        assert!((done[0].at - 1.0).abs() < 1e-6, "first at {}", done[0].at);
+        assert!((done[1].at - 2.0).abs() < 1e-6, "second at {}", done[1].at);
+    }
+
+    #[test]
+    fn setup_phase_flows_do_not_consume_downlink() {
+        let mut topo = flat_topo(3);
+        let mut fs = FlowSet::new(1e6);
+        fs.add(&topo, 0, 1e6, 0.0);
+        fs.add(&topo, 1, 1e6, 2.0); // still connecting
+        let done = fs.advance(&mut topo, 30.0);
+        assert_eq!(done.len(), 2);
+        // The connecting flow must not halve the cap: flow A takes the
+        // whole 1e6 B/s and finishes at t=1, flow B at 2s lead + 1s.
+        assert!((done[0].at - 1.0).abs() < 1e-6, "A at {}", done[0].at);
+        assert!((done[1].at - 3.0).abs() < 1e-6, "B at {}", done[1].at);
+    }
+
+    #[test]
+    fn disk_rate_caps_flow_bandwidth() {
+        let mut topo = {
+            let mut cfg = crate::config::GridConfig::generate(2, 5);
+            for s in &mut cfg.sites {
+                s.wan_bandwidth = 10e6;
+                s.disk_rate = 1e6; // disk-bound site
+                s.diurnal_amp = 0.0;
+                s.noise_frac = 0.0;
+                s.congestion_prob = 0.0;
+                s.ar_coeff = 0.0;
+                s.latency = 0.0;
+            }
+            Topology::build(&cfg)
+        };
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 2e6, 0.0);
+        let done = fs.advance(&mut topo, 30.0);
+        // 2e6 bytes through a 1e6 B/s disk (WAN would allow 10e6).
+        assert!((done[0].at - 2.0).abs() < 1e-6, "at {}", done[0].at);
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_instead_of_hanging() {
+        let mut topo = flat_topo(2);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 0.0, 0.0);
+        fs.add(&topo, 1, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 2);
+        assert!((done[0].at - 0.0).abs() < 1e-9, "zero flow at {}", done[0].at);
+        assert!((done[1].at - 1.0).abs() < 1e-6);
+        assert!((topo.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_sites_do_not_interfere() {
+        let mut topo = flat_topo(3);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 1e6, 0.0);
+        fs.add(&topo, 1, 1e6, 0.0);
+        fs.add(&topo, 2, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert!((c.at - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn downlink_cap_bounds_aggregate() {
+        let mut topo = flat_topo(4);
+        let mut fs = FlowSet::new(1e6); // client pipe = one site's rate
+        for s in 0..4 {
+            fs.add(&topo, s, 1e6, 0.0);
+        }
+        let done = fs.advance(&mut topo, 60.0);
+        assert_eq!(done.len(), 4);
+        // 4e6 bytes through a 1e6 B/s cap → last completion at t≈4.
+        let last = done.iter().map(|c| c.at).fold(0.0, f64::max);
+        assert!((last - 4.0).abs() < 1e-6, "last {last}");
+    }
+
+    #[test]
+    fn lead_latency_delays_bytes() {
+        let mut topo = flat_topo(2);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 1e6, 0.5);
+        let done = fs.advance(&mut topo, 10.0);
+        assert!((done[0].at - 1.5).abs() < 1e-6, "at {}", done[0].at);
+    }
+
+    #[test]
+    fn respects_active_transfer_sharing_convention() {
+        let mut topo = flat_topo(2);
+        topo.begin_transfer(0); // the stream registered itself
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        // active_transfers=1 → share 1/2 → 2 seconds, matching what a
+        // GridFtp::fetch of the same bytes would see.
+        assert!((done[0].at - 2.0).abs() < 1e-6, "at {}", done[0].at);
+    }
+}

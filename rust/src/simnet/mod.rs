@@ -18,11 +18,13 @@
 //! Simulated time is explicit (`f64` seconds) so experiments are fully
 //! deterministic given a seed.
 
+pub mod flows;
 pub mod link;
 pub mod topology;
 pub mod trace;
 pub mod workload;
 
+pub use flows::{Completion, Flow, FlowSet};
 pub use link::Link;
 pub use topology::{Site, Topology};
 pub use workload::{Request, Workload, WorkloadSpec};

@@ -222,4 +222,64 @@ mod tests {
         assert!((t - 1.0).abs() < 1e-9);
         assert!(Bandwidth(0.0).transfer_time(Bytes(1.0)).is_infinite());
     }
+
+    #[test]
+    fn round_trips_every_tier_and_rate_form() {
+        for s in [
+            "0", "1", "1K", "1M", "1G", "1T", "512K", "2G/Sec", "1024/Sec", "7M/Sec",
+        ] {
+            let (v, rate) = parse_quantity(s).unwrap();
+            let formatted = format_quantity(v, rate);
+            let (v2, rate2) = parse_quantity(&formatted).unwrap();
+            assert_eq!((v, rate), (v2, rate2), "round trip of {s} via {formatted}");
+        }
+    }
+
+    #[test]
+    fn zero_and_fractional_values() {
+        assert_eq!(parse_quantity("0").unwrap(), (0.0, false));
+        assert_eq!(parse_quantity("0K").unwrap(), (0.0, false));
+        assert_eq!(parse_quantity("0.25K").unwrap(), (256.0, false));
+        assert_eq!(parse_quantity("2.5M/Sec").unwrap(), (2.5 * 1024.0 * 1024.0, true));
+        // Non-integral multiples format as raw numbers that re-parse
+        // to the identical f64.
+        let v = 1.5 * 1024.0;
+        let s = format_quantity(v, false);
+        assert_eq!(parse_quantity(&s).unwrap().0, v);
+        // Zero formats without a suffix.
+        assert_eq!(format_quantity(0.0, false), "0");
+        assert_eq!(format_quantity(0.0, true), "0/Sec");
+    }
+
+    #[test]
+    fn malformed_input_errors_instead_of_panicking() {
+        for s in [
+            "", "   ", "/Sec", "K/Sec", "--3K", "3..5K", "1e", "NaNK", "12QB", "K12",
+            "G5", "1KK",
+        ] {
+            assert!(parse_quantity(s).is_err(), "{s:?} should fail to parse");
+        }
+        assert!(Bytes::parse("12Q").is_err());
+        assert!(Bandwidth::parse("").is_err());
+        assert_eq!(parse_quantity("").unwrap_err(), UnitError::Empty);
+        assert!(matches!(
+            parse_quantity("xyz").unwrap_err(),
+            UnitError::BadMagnitude(_)
+        ));
+        assert!(matches!(
+            parse_quantity("3Z").unwrap_err(),
+            UnitError::BadSuffix(_)
+        ));
+    }
+
+    #[test]
+    fn paper_request_ad_quantities_round_trip_types() {
+        // `reqdSpace = 5G; reqdRDBandwidth = 50K/Sec` as typed wrappers.
+        let space = Bytes::parse("5G").unwrap();
+        let rate = Bandwidth::parse("50K/Sec").unwrap();
+        assert_eq!(space.to_string(), "5G");
+        assert_eq!(rate.to_string(), "50K/Sec");
+        assert_eq!(Bytes::parse(&space.to_string()).unwrap(), space);
+        assert_eq!(Bandwidth::parse(&rate.to_string()).unwrap(), rate);
+    }
 }

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification + hygiene, as specified in ROADMAP.md.
+#
+#   scripts/ci.sh           full run
+#   BENCH_QUICK=1 also shortens the in-tree bench harness if benches run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== hygiene: rustfmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt unavailable in this image; skipping format check"
+fi
+
+echo "CI OK"
