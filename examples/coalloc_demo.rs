@@ -70,6 +70,8 @@ fn main() -> anyhow::Result<()> {
 
     // The real co-allocated Access.
     let out = coalloc::execute(&mut grid.topo, &grid.ftp, "client", &sel.plan, &policy)?;
+    let metrics = globus_replica::metrics::Metrics::new();
+    out.record_metrics(&metrics);
 
     println!("\nper-stream outcome:");
     println!(
@@ -99,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         out.aggregate_bandwidth / 1024.0,
         out.streams.len()
     );
-    println!("\ncoalloc_demo OK");
+    println!("\nmetrics:\n{}", metrics.render());
+    println!("coalloc_demo OK");
     Ok(())
 }

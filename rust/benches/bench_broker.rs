@@ -9,7 +9,7 @@
 use globus_replica::broker::centralized::{
     queueing_latencies_central, queueing_latencies_decentralized,
 };
-use globus_replica::broker::RankPolicy;
+use globus_replica::broker::{RankPolicy, SelectScratch};
 use globus_replica::classad::parse_classad;
 use globus_replica::config::GridConfig;
 use globus_replica::experiment::SimGrid;
@@ -40,6 +40,20 @@ fn main() {
         if sites == 8 {
             service_s_8 = s.mean_ns / 1e9;
         }
+        // The match-many path: request compiled once, scratch reused.
+        let prepared = broker.prepare(&request);
+        let mut scratch = SelectScratch::default();
+        b.case_items(
+            &format!("select prepared e2e, {sites} replicas"),
+            sites as f64,
+            || {
+                broker
+                    .select_prepared(&logical, &prepared, &mut scratch)
+                    .unwrap()
+                    .site
+                    .len()
+            },
+        );
         // Phase split from the trace of one selection.
         let sel = broker.select(&logical, &request).unwrap();
         println!(

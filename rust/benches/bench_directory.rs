@@ -52,6 +52,15 @@ fn main() {
             volumes as f64,
             || gris.search(&root, Scope::Sub, &f_sel).len(),
         );
+        // Generation-cached materialization: repeated broker fan-outs
+        // against an unchanged site skip the provider-run + merge cost.
+        let mut cached = demo_gris(volumes);
+        cached.set_cache_ttl(Some(f64::INFINITY));
+        b.case_items(
+            &format!("GRIS search sub, {volumes} volumes, cached"),
+            volumes as f64,
+            || cached.search(&root, Scope::Sub, &f_all).len(),
+        );
     }
 
     // GIIS discovery at increasing registration counts.

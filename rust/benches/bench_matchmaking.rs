@@ -2,14 +2,25 @@
 //! throughput as the candidate set grows.
 //!
 //! The paper's broker matches one request ad against every replica
-//! site's storage ad; this bench measures that Match-phase core from a
-//! single pair up to 4096 candidates, plus expression-evaluation and
-//! parser microbenches.
+//! site's ad; this bench measures that Match-phase core from a single
+//! pair up to 4096 candidates, the **compiled/batch path**
+//! ([`CompiledMatch`], compile-once / match-many) against the per-pair
+//! path at 1,000 candidates, plus expression-evaluation and parser
+//! microbenches.
+//!
+//! With `BENCH_JSON=<path>` set, the headline numbers (ns/op, ops/sec,
+//! and the compiled-vs-per-pair speedup at 1,000 candidates) are
+//! written as JSON — `scripts/bench.sh` uses this to record
+//! `BENCH_matchmaking.json`.
+
+use std::collections::BTreeMap;
 
 use globus_replica::classad::{
-    parse_classad, parse_expr, rank_candidates, symmetric_match, AdBuilder, ClassAd,
+    parse_classad, parse_expr, rank_candidates, rank_of, symmetric_match, AdBuilder, ClassAd,
+    CompiledMatch, Match,
 };
-use globus_replica::util::bench::Bench;
+use globus_replica::util::bench::{Bench, Stats};
+use globus_replica::util::json::Json;
 use globus_replica::util::prng::Rng;
 
 fn storage_ads(n: usize, seed: u64) -> Vec<ClassAd> {
@@ -43,6 +54,36 @@ fn request() -> ClassAd {
     .unwrap()
 }
 
+/// The per-pair path: requirements matched per candidate through the
+/// string-keyed public API, rank per survivor, sort — what the broker
+/// ran before the compiled engine existed.
+fn per_pair_rank(req: &ClassAd, ads: &[ClassAd]) -> Vec<Match> {
+    let mut out: Vec<Match> = ads
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| symmetric_match(req, c))
+        .map(|(index, c)| Match { index, rank: rank_of(req, c) })
+        .collect();
+    out.sort_by(|a, b| {
+        b.rank
+            .partial_cmp(&a.rank)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+    out
+}
+
+fn stats_json(s: &Stats) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(s.name.clone()));
+    o.insert("ns_per_op".to_string(), Json::Num(s.mean_ns));
+    o.insert("p50_ns".to_string(), Json::Num(s.p50_ns));
+    o.insert("p99_ns".to_string(), Json::Num(s.p99_ns));
+    o.insert("items_per_iter".to_string(), Json::Num(s.items_per_iter));
+    o.insert("ops_per_sec".to_string(), Json::Num(s.throughput()));
+    Json::Obj(o)
+}
+
 fn main() {
     let req = request();
     let mut b = Bench::new("matchmaking (paper §4; R3)");
@@ -56,6 +97,27 @@ fn main() {
             rank_candidates(&req, &ads).len()
         });
     }
+
+    // Headline comparison (ISSUE 2 acceptance): per-pair vs the
+    // compiled/batch path over the same 1,000-candidate set. The
+    // compiled case includes the compile step — that is the honest
+    // batch cost (compile once, then stream the candidate set).
+    let n1000 = 1000usize;
+    let ads1000 = storage_ads(n1000, 1000);
+    b.case_items(&format!("per-pair/{n1000} candidates"), n1000 as f64, || {
+        per_pair_rank(&req, &ads1000).len()
+    });
+    b.case_items(&format!("compiled/{n1000} candidates"), n1000 as f64, || {
+        CompiledMatch::compile(&req).rank_candidates(&ads1000).len()
+    });
+    // Amortized variant: one compile reused across the whole run (the
+    // broker's `PreparedRequest` shape).
+    let compiled = CompiledMatch::compile(&req);
+    b.case_items(
+        &format!("compiled-reused/{n1000} candidates"),
+        n1000 as f64,
+        || compiled.rank_candidates(&ads1000).len(),
+    );
 
     // Expression microbenches: the requirement expression that every
     // match evaluates twice.
@@ -85,5 +147,36 @@ fn main() {
             "\nthroughput @1024 candidates: {:.0} ads/s (target ≥ 100000)",
             s.throughput()
         );
+    }
+    let find = |needle: &str| stats.iter().find(|s| s.name.starts_with(needle));
+    let speedup = match (find("per-pair/1000"), find("compiled/1000")) {
+        (Some(pp), Some(c)) if c.mean_ns > 0.0 => {
+            let x = pp.mean_ns / c.mean_ns;
+            println!(
+                "compiled-vs-per-pair @1000 candidates: {x:.2}x (acceptance target ≥ 5x)"
+            );
+            Some(x)
+        }
+        _ => None,
+    };
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("matchmaking".to_string()));
+        root.insert(
+            "cases".to_string(),
+            Json::Arr(stats.iter().map(stats_json).collect()),
+        );
+        if let Some(x) = speedup {
+            root.insert(
+                "speedup_compiled_vs_perpair_1000".to_string(),
+                Json::Num(x),
+            );
+        }
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
     }
 }

@@ -8,7 +8,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::catalog::ReplicaCatalog;
-use crate::classad::{symmetric_match, ClassAd};
+use crate::classad::{ClassAd, CompiledMatch};
 use crate::coalloc::{plan_stripes, StripePlan, StripeSource};
 use crate::config::CoallocPolicy;
 use crate::directory::client::DirectoryClient;
@@ -157,6 +157,36 @@ pub struct CoallocSelection {
     pub plan: StripePlan,
 }
 
+/// A request compiled for repeated selection: the search filter parsed
+/// once and the request's match/rank expressions compiled once
+/// ([`CompiledMatch`]). Build with [`Broker::prepare`], reuse across
+/// [`Broker::select_prepared`] / [`Broker::select_batch`] calls.
+#[derive(Clone)]
+pub struct PreparedRequest {
+    compiled: CompiledMatch,
+    filter: Filter,
+}
+
+impl PreparedRequest {
+    /// The snapshotted request ad (owned by the compiled handle).
+    pub fn ad(&self) -> &ClassAd {
+        self.compiled.request()
+    }
+
+    pub fn compiled(&self) -> &CompiledMatch {
+        &self.compiled
+    }
+}
+
+/// Reusable Search-phase buffers, so a batch of selections does not
+/// re-allocate the per-selection scaffolding (replica locations, raw
+/// per-site responses) for every logical file.
+#[derive(Default)]
+pub struct SelectScratch {
+    locations: Vec<(String, String)>,
+    raw: Vec<(String, String, Vec<Entry>)>,
+}
+
 /// The decentralized storage broker. One per client; cheap to clone
 /// (shared catalog + info service handles).
 #[derive(Clone)]
@@ -199,22 +229,45 @@ impl Broker {
         .unwrap()
     }
 
+    /// Compile `request` for repeated selection: parse the search
+    /// filter and pre-bind the match/rank expressions once.
+    pub fn prepare(&self, request: &ClassAd) -> PreparedRequest {
+        PreparedRequest {
+            compiled: CompiledMatch::compile(request),
+            filter: Self::search_filter(request),
+        }
+    }
+
     /// **Search phase**: catalog lookup + GRIS fan-out.
     pub fn search(&self, logical: &str, request: &ClassAd) -> Result<(Vec<Candidate>, BrokerTrace)> {
+        let filter = Self::search_filter(request);
+        self.search_with(logical, &filter, &mut SelectScratch::default())
+    }
+
+    /// Search with a pre-parsed filter and reusable buffers — the
+    /// batch path.
+    fn search_with(
+        &self,
+        logical: &str,
+        filter: &Filter,
+        scratch: &mut SelectScratch,
+    ) -> Result<(Vec<Candidate>, BrokerTrace)> {
+        let SelectScratch { locations, raw } = scratch;
         let mut trace = BrokerTrace { logical: logical.to_string(), ..Default::default() };
         let t0 = Instant::now();
-        let locations: Vec<(String, String)> = {
+        locations.clear();
+        {
             let cat = self.catalog.lock().unwrap();
-            cat.locate(logical)?
-                .iter()
-                .map(|l| (l.site.clone(), l.url.clone()))
-                .collect()
-        };
+            locations.extend(
+                cat.locate(logical)?
+                    .iter()
+                    .map(|l| (l.site.clone(), l.url.clone())),
+            );
+        }
         if locations.is_empty() {
             bail!("logical file {logical:?} has no replicas");
         }
         trace.replica_sites = locations.iter().map(|(s, _)| s.clone()).collect();
-        let filter = Self::search_filter(request);
         // GRIS fan-out: when the info service blocks on real per-site
         // I/O, the sites are queried concurrently from a small
         // scoped-thread pool. Workers pull site indices from a shared
@@ -225,6 +278,7 @@ impl Broker {
         // thread spawn); both paths record per-site latency.
         const MAX_FANOUT_WORKERS: usize = 8;
         let info: &dyn InfoService = self.info.as_ref();
+        let locations: &[(String, String)] = locations;
         let responses: Vec<(Result<Vec<Entry>>, u64)> = if locations.len() > 1
             && info.parallel_fanout()
         {
@@ -235,8 +289,6 @@ impl Broker {
                 let handles: Vec<_> = (0..locations.len().min(MAX_FANOUT_WORKERS))
                     .map(|_| {
                         let next = &next;
-                        let filter = &filter;
-                        let locations = &locations;
                         scope.spawn(move || {
                             let mut mine = Vec::new();
                             loop {
@@ -267,12 +319,13 @@ impl Broker {
                 .iter()
                 .map(|(site, _)| {
                     let tq = Instant::now();
-                    let r = info.query_site(site, &filter);
+                    let r = info.query_site(site, filter);
                     (r, tq.elapsed().as_nanos() as u64)
                 })
                 .collect()
         };
-        let mut raw: Vec<(String, String, Vec<Entry>)> = Vec::with_capacity(locations.len());
+        raw.clear();
+        raw.reserve(locations.len());
         for ((site, url), (resp, ns)) in locations.iter().zip(responses) {
             if let Some(m) = &self.metrics {
                 m.histogram("broker.search.site_ns").observe_ns(ns);
@@ -291,12 +344,18 @@ impl Broker {
             }
         }
         trace.search_us = t0.elapsed().as_micros();
+        if let Some(m) = &self.metrics {
+            m.histogram("broker.phase.search_ns").observe_ns(t0.elapsed().as_nanos() as u64);
+        }
         let t1 = Instant::now();
         let candidates = raw
             .iter()
             .map(|(site, url, entries)| entries_to_candidate(site, url, entries))
             .collect();
         trace.convert_us = t1.elapsed().as_micros();
+        if let Some(m) = &self.metrics {
+            m.histogram("broker.phase.convert_ns").observe_ns(t1.elapsed().as_nanos() as u64);
+        }
         Ok((candidates, trace))
     }
 
@@ -307,24 +366,56 @@ impl Broker {
         candidates: &[Candidate],
         trace: &mut BrokerTrace,
     ) -> Vec<Ranked> {
+        let compiled = CompiledMatch::compile(request);
+        self.match_phase_compiled(&compiled, candidates, trace)
+    }
+
+    /// Match phase against an already-compiled request: one fused pass
+    /// that evaluates each side's requirements at most once per
+    /// candidate and ranks only the survivors.
+    pub fn match_phase_compiled(
+        &self,
+        compiled: &CompiledMatch,
+        candidates: &[Candidate],
+        trace: &mut BrokerTrace,
+    ) -> Vec<Ranked> {
         let t0 = Instant::now();
-        let matched: Vec<usize> = candidates
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| symmetric_match(request, &c.ad))
-            .map(|(i, _)| i)
-            .collect();
-        trace.match_results = candidates
-            .iter()
-            .enumerate()
-            .map(|(i, c)| (c.site.clone(), matched.contains(&i)))
-            .collect();
-        let ranked = self.policy.order(request, candidates, &matched);
+        let ranked = match &self.policy {
+            RankPolicy::ClassAdRank => {
+                let (flags, ms) = compiled.match_and_rank(candidates.iter().map(|c| &c.ad));
+                trace.match_results = candidates
+                    .iter()
+                    .zip(&flags)
+                    .map(|(c, &ok)| (c.site.clone(), ok))
+                    .collect();
+                ms.into_iter()
+                    .map(|m| Ranked { index: m.index, score: m.rank })
+                    .collect()
+            }
+            RankPolicy::ForecastBandwidth { .. } => {
+                let mut matched = Vec::with_capacity(candidates.len());
+                trace.match_results = candidates
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let ok = compiled.matches(&c.ad);
+                        if ok {
+                            matched.push(i);
+                        }
+                        (c.site.clone(), ok)
+                    })
+                    .collect();
+                self.policy.order_compiled(compiled, candidates, &matched)
+            }
+        };
         trace.ranking = ranked
             .iter()
             .map(|r| (candidates[r.index].site.clone(), r.score))
             .collect();
         trace.match_us = t0.elapsed().as_micros();
+        if let Some(m) = &self.metrics {
+            m.histogram("broker.phase.match_ns").observe_ns(t0.elapsed().as_nanos() as u64);
+        }
         ranked
     }
 
@@ -332,12 +423,29 @@ impl Broker {
     /// the caller against the returned site — see `gridftp::GridFtp` —
     /// because transfer execution lives with the simulation/driver.)
     pub fn select(&self, logical: &str, request: &ClassAd) -> Result<Selection> {
-        let (candidates, mut trace) = self.search(logical, request)?;
-        let ranked = self.match_phase(request, &candidates, &mut trace);
+        let prepared = self.prepare(request);
+        self.select_prepared(logical, &prepared, &mut SelectScratch::default())
+    }
+
+    /// One selection on the match-many path: the request is already
+    /// compiled and the Search buffers are caller-owned, so the only
+    /// per-call work is the actual Search → Match pipeline.
+    pub fn select_prepared(
+        &self,
+        logical: &str,
+        prepared: &PreparedRequest,
+        scratch: &mut SelectScratch,
+    ) -> Result<Selection> {
+        let t0 = Instant::now();
+        let (candidates, mut trace) = self.search_with(logical, &prepared.filter, scratch)?;
+        let ranked = self.match_phase_compiled(&prepared.compiled, &candidates, &mut trace);
         let best = ranked
             .first()
             .cloned()
             .with_context(|| format!("no replica of {logical:?} satisfies the request"))?;
+        if let Some(m) = &self.metrics {
+            m.histogram("broker.select_ns").observe(t0.elapsed());
+        }
         Ok(Selection {
             site: candidates[best.index].site.clone(),
             url: candidates[best.index].url.clone(),
@@ -346,6 +454,33 @@ impl Broker {
             candidates,
             trace,
         })
+    }
+
+    /// Batch selection: compile the request once, then stream it across
+    /// every logical file, reusing one scratch arena for the whole
+    /// Search → Match pipeline. Per-file failures (no replicas, no
+    /// feasible replica) land in the corresponding result slot — one
+    /// missing file does not fail the batch.
+    pub fn select_batch<S: AsRef<str>>(
+        &self,
+        logicals: &[S],
+        request: &ClassAd,
+    ) -> Vec<Result<Selection>> {
+        let prepared = self.prepare(request);
+        let mut scratch = SelectScratch::default();
+        logicals
+            .iter()
+            .map(|logical| {
+                let r = self.select_prepared(logical.as_ref(), &prepared, &mut scratch);
+                if let Some(m) = &self.metrics {
+                    m.counter("broker.batch.selections").inc();
+                    if r.is_err() {
+                        m.counter("broker.batch.failures").inc();
+                    }
+                }
+                r
+            })
+            .collect()
     }
 
     /// Co-allocated selection (the [`AccessStrategy::Coallocated`]
@@ -668,6 +803,50 @@ mod tests {
             );
         }
         assert_eq!(metrics.counter("broker.search.site_errors").get(), 0);
+    }
+
+    #[test]
+    fn batch_selection_matches_one_shot() {
+        let (broker, request) = fixture(RankPolicy::ClassAdRank);
+        let one = broker.select("run42.dat", &request).unwrap();
+        let batch = broker.select_batch(&["run42.dat", "run42.dat", "nope.dat"], &request);
+        assert_eq!(batch.len(), 3);
+        for sel in &batch[..2] {
+            let sel = sel.as_ref().unwrap();
+            assert_eq!(sel.site, one.site);
+            assert_eq!(sel.trace.ranking, one.trace.ranking);
+            assert_eq!(sel.trace.match_results, one.trace.match_results);
+        }
+        assert!(batch[2].is_err(), "unknown logical must fail its own slot only");
+    }
+
+    #[test]
+    fn prepared_request_matches_per_call_forecast_policy() {
+        let (broker, request) = fixture(RankPolicy::ForecastBandwidth { engine: None });
+        let one = broker.select("run42.dat", &request).unwrap();
+        let prepared = broker.prepare(&request);
+        let mut scratch = SelectScratch::default();
+        for _ in 0..3 {
+            let sel = broker
+                .select_prepared("run42.dat", &prepared, &mut scratch)
+                .unwrap();
+            assert_eq!(sel.site, one.site);
+            assert_eq!(sel.ranked.len(), one.ranked.len());
+        }
+    }
+
+    #[test]
+    fn batch_and_phase_metrics_recorded() {
+        let (broker, request) = fixture(RankPolicy::ClassAdRank);
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        let broker = broker.with_metrics(metrics.clone());
+        let batch = broker.select_batch(&["run42.dat", "run42.dat"], &request);
+        assert!(batch.iter().all(|r| r.is_ok()));
+        assert_eq!(metrics.counter("broker.batch.selections").get(), 2);
+        assert_eq!(metrics.counter("broker.batch.failures").get(), 0);
+        assert_eq!(metrics.histogram("broker.phase.search_ns").count(), 2);
+        assert_eq!(metrics.histogram("broker.phase.match_ns").count(), 2);
+        assert_eq!(metrics.histogram("broker.select_ns").count(), 2);
     }
 
     #[test]

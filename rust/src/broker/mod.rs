@@ -29,7 +29,7 @@ pub mod selectors;
 pub use convert::{entries_to_candidate, Candidate};
 pub use engine::{
     AccessStrategy, Broker, BrokerTrace, CoallocSelection, InfoService, LocalInfoService,
-    RemoteInfoService,
+    PreparedRequest, RemoteInfoService, SelectScratch,
 };
 pub use policy::RankPolicy;
 pub use selectors::{Selector, SelectorKind};

@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use crate::classad::{rank_candidates, ClassAd};
+use crate::classad::{ClassAd, CompiledMatch};
 use crate::forecast::forecast_bank;
 use crate::runtime::engine::EngineHandle;
 
@@ -82,28 +82,48 @@ impl RankPolicy {
     ) -> Vec<Ranked> {
         match self {
             RankPolicy::ClassAdRank => {
-                let ads: Vec<ClassAd> =
-                    matched.iter().map(|&i| candidates[i].ad.clone()).collect();
-                rank_candidates(request, &ads)
-                    .into_iter()
+                let compiled = CompiledMatch::compile(request);
+                self.order_compiled(&compiled, candidates, matched)
+            }
+            RankPolicy::ForecastBandwidth { .. } => {
+                self.order_forecast(candidates, matched)
+            }
+        }
+    }
+
+    /// [`RankPolicy::order`] with an already-compiled request — the
+    /// match-many path; compiles nothing and clones no ads.
+    pub fn order_compiled(
+        &self,
+        compiled: &CompiledMatch,
+        candidates: &[Candidate],
+        matched: &[usize],
+    ) -> Vec<Ranked> {
+        match self {
+            RankPolicy::ClassAdRank => {
+                let (_, ms) =
+                    compiled.match_and_rank(matched.iter().map(|&i| &candidates[i].ad));
+                ms.into_iter()
                     .map(|m| Ranked { index: matched[m.index], score: m.rank })
                     .collect()
             }
-            RankPolicy::ForecastBandwidth { .. } => {
-                let preds = self.predicted_bandwidth(candidates);
-                let mut out: Vec<Ranked> = matched
-                    .iter()
-                    .map(|&i| Ranked { index: i, score: preds[i] })
-                    .collect();
-                out.sort_by(|a, b| {
-                    b.score
-                        .partial_cmp(&a.score)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(a.index.cmp(&b.index))
-                });
-                out
-            }
+            RankPolicy::ForecastBandwidth { .. } => self.order_forecast(candidates, matched),
         }
+    }
+
+    fn order_forecast(&self, candidates: &[Candidate], matched: &[usize]) -> Vec<Ranked> {
+        let preds = self.predicted_bandwidth(candidates);
+        let mut out: Vec<Ranked> = matched
+            .iter()
+            .map(|&i| Ranked { index: i, score: preds[i] })
+            .collect();
+        out.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.index.cmp(&b.index))
+        });
+        out
     }
 }
 

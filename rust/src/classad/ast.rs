@@ -3,6 +3,7 @@
 use std::collections::HashMap;
 use std::fmt;
 
+use super::intern::Sym;
 use super::value::Value;
 
 /// Scope qualifier on an attribute reference.
@@ -98,13 +99,62 @@ pub enum UnOp {
     BitNot, // ~
 }
 
+/// An attribute reference inside an expression: the original spelling
+/// (for unparsing) plus its interned symbol (for resolution). Equality
+/// is case-insensitive (symbol identity), matching attribute semantics.
+#[derive(Debug, Clone)]
+pub struct AttrName {
+    display: Box<str>,
+    sym: Sym,
+}
+
+impl AttrName {
+    pub fn new(name: impl Into<String>) -> AttrName {
+        let display: String = name.into();
+        let sym = Sym::intern(&display);
+        AttrName { display: display.into_boxed_str(), sym }
+    }
+
+    pub fn sym(&self) -> Sym {
+        self.sym
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.display
+    }
+}
+
+impl From<&str> for AttrName {
+    fn from(s: &str) -> Self {
+        AttrName::new(s)
+    }
+}
+
+impl From<String> for AttrName {
+    fn from(s: String) -> Self {
+        AttrName::new(s)
+    }
+}
+
+impl PartialEq for AttrName {
+    fn eq(&self, other: &Self) -> bool {
+        self.sym == other.sym
+    }
+}
+
+impl fmt::Display for AttrName {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.display)
+    }
+}
+
 /// A ClassAd expression tree.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
     /// Literal constant.
     Lit(Value),
     /// Attribute reference with optional scope (`other.x`, `my.x`, `x`).
-    Attr(Scope, String),
+    Attr(Scope, AttrName),
     /// Unary operation.
     Unary(UnOp, Box<Expr>),
     /// Binary operation.
@@ -123,15 +173,15 @@ impl Expr {
     }
 
     pub fn attr(name: impl Into<String>) -> Expr {
-        Expr::Attr(Scope::Default, name.into())
+        Expr::Attr(Scope::Default, AttrName::new(name))
     }
 
     pub fn other(name: impl Into<String>) -> Expr {
-        Expr::Attr(Scope::Other, name.into())
+        Expr::Attr(Scope::Other, AttrName::new(name))
     }
 
     pub fn my(name: impl Into<String>) -> Expr {
-        Expr::Attr(Scope::My, name.into())
+        Expr::Attr(Scope::My, AttrName::new(name))
     }
 
     pub fn and(self, rhs: Expr) -> Expr {
@@ -235,11 +285,13 @@ impl fmt::Display for Expr {
 /// A classified advertisement: an ordered attribute → expression record.
 ///
 /// Attribute names are case-insensitive (as in Condor and LDAP); the
-/// original spelling is preserved for unparsing.
+/// original spelling is preserved for unparsing. Internally the record
+/// is indexed by interned [`Sym`] — lowercasing happens once at insert,
+/// and the evaluator's lookups are a single integer-keyed hash probe.
 #[derive(Debug, Clone, Default)]
 pub struct ClassAd {
     entries: Vec<(String, Expr)>,
-    index: HashMap<String, usize>,
+    index: HashMap<Sym, usize>,
 }
 
 impl ClassAd {
@@ -250,11 +302,11 @@ impl ClassAd {
     /// Insert or replace an attribute.
     pub fn set(&mut self, name: impl Into<String>, expr: Expr) {
         let name = name.into();
-        let key = name.to_ascii_lowercase();
-        match self.index.get(&key) {
+        let sym = Sym::intern(&name);
+        match self.index.get(&sym) {
             Some(&i) => self.entries[i] = (name, expr),
             None => {
-                self.index.insert(key, self.entries.len());
+                self.index.insert(sym, self.entries.len());
                 self.entries.push((name, expr));
             }
         }
@@ -267,15 +319,21 @@ impl ClassAd {
 
     /// Look up an attribute expression (case-insensitive).
     pub fn get(&self, name: &str) -> Option<&Expr> {
-        self.index
-            .get(&name.to_ascii_lowercase())
-            .map(|&i| &self.entries[i].1)
+        self.get_sym(Sym::lookup(name)?)
+    }
+
+    /// Look up by pre-interned symbol — the evaluator's hot path.
+    pub fn get_sym(&self, sym: Sym) -> Option<&Expr> {
+        self.index.get(&sym).map(|&i| &self.entries[i].1)
     }
 
     /// Remove an attribute; returns whether it existed.
     pub fn remove(&mut self, name: &str) -> bool {
-        let key = name.to_ascii_lowercase();
-        match self.index.remove(&key) {
+        let sym = match Sym::lookup(name) {
+            Some(s) => s,
+            None => return false,
+        };
+        match self.index.remove(&sym) {
             None => false,
             Some(i) => {
                 self.entries.remove(i);
@@ -290,7 +348,11 @@ impl ClassAd {
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.index.contains_key(&name.to_ascii_lowercase())
+        Sym::lookup(name).map_or(false, |s| self.index.contains_key(&s))
+    }
+
+    pub fn contains_sym(&self, sym: Sym) -> bool {
+        self.index.contains_key(&sym)
     }
 
     pub fn len(&self) -> usize {

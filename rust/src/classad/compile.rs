@@ -1,0 +1,299 @@
+//! Compile-once / match-many matchmaking.
+//!
+//! The broker's Match phase evaluates one request ad against *every*
+//! replica site's ad on every selection (paper §5.1.2 step 2). The
+//! per-pair entry points ([`super::matchmaker`]) re-resolve the
+//! `requirements`/`rank` attributes of the request by name for each
+//! candidate; [`CompiledMatch`] hoists that work out of the loop:
+//!
+//! * the request's `requirements` and `rank` expressions are fetched
+//!   once and **constant-folded** (literal-only subtrees collapse to a
+//!   single literal),
+//! * the `requirements`/`requirement` attribute symbols are pre-interned,
+//!   so a candidate's own policy is found with one integer-keyed probe,
+//! * matching and ranking run as a **single fused pass**: each side's
+//!   requirements are evaluated at most once per candidate and rank
+//!   evaluation is skipped entirely for non-matches.
+//!
+//! Results are bit-identical to the per-pair path — the same evaluator
+//! runs underneath (see `it_match_parity`).
+
+use once_cell::sync::Lazy;
+
+use super::ast::{ClassAd, Expr};
+use super::eval::{eval, EvalCtx};
+use super::intern::Sym;
+use super::matchmaker::Match;
+use super::value::Value;
+
+/// Pre-interned requirements spellings, in lookup-preference order
+/// (Condor's `requirements`, then the paper's `requirement`).
+static REQUIREMENT_SYMS: Lazy<[Sym; 2]> =
+    Lazy::new(|| [Sym::intern("requirements"), Sym::intern("requirement")]);
+
+static RANK_SYM: Lazy<Sym> = Lazy::new(|| Sym::intern("rank"));
+
+/// A request ad compiled for repeated matchmaking.
+#[derive(Debug, Clone)]
+pub struct CompiledMatch {
+    request: ClassAd,
+    /// The request's requirements expression, constant-folded.
+    /// `None` = the ad publishes none = always willing.
+    req_requirements: Option<Expr>,
+    /// The request's rank expression, constant-folded. `None` ranks 0.
+    req_rank: Option<Expr>,
+}
+
+impl CompiledMatch {
+    /// Compile `request` (the ad is snapshotted; later mutations of the
+    /// original do not affect the handle).
+    pub fn compile(request: &ClassAd) -> CompiledMatch {
+        let req_requirements = requirements_expr(request).map(fold);
+        let req_rank = request.get_sym(*RANK_SYM).map(fold);
+        CompiledMatch { request: request.clone(), req_requirements, req_rank }
+    }
+
+    pub fn request(&self) -> &ClassAd {
+        &self.request
+    }
+
+    /// Symmetric two-way match against one candidate (both sides'
+    /// requirements must evaluate to TRUE, as in the per-pair
+    /// [`super::matchmaker::symmetric_match`]).
+    pub fn matches(&self, candidate: &ClassAd) -> bool {
+        self.request_side_holds(candidate) && candidate_side_holds(candidate, &self.request)
+    }
+
+    /// The request's rank of `candidate` (non-numeric collapses to 0.0).
+    pub fn rank(&self, candidate: &ClassAd) -> f64 {
+        match &self.req_rank {
+            None => 0.0,
+            Some(e) => eval(EvalCtx::matched(&self.request, candidate), e)
+                .as_number()
+                .unwrap_or(0.0),
+        }
+    }
+
+    fn request_side_holds(&self, candidate: &ClassAd) -> bool {
+        match &self.req_requirements {
+            None => true,
+            Some(e) => matches!(
+                eval(EvalCtx::matched(&self.request, candidate), e),
+                Value::Bool(true)
+            ),
+        }
+    }
+
+    /// The fused Match-phase pass: per-candidate match flags plus the
+    /// ranked survivors, best first (ties broken by candidate index —
+    /// the deterministic catalog-order tiebreak the broker relies on).
+    pub fn match_and_rank<'a, I>(&self, candidates: I) -> (Vec<bool>, Vec<Match>)
+    where
+        I: IntoIterator<Item = &'a ClassAd>,
+    {
+        let mut flags = Vec::new();
+        let mut out = Vec::new();
+        for (index, c) in candidates.into_iter().enumerate() {
+            let ok = self.matches(c);
+            flags.push(ok);
+            if ok {
+                out.push(Match { index, rank: self.rank(c) });
+            }
+        }
+        sort_matches(&mut out);
+        (flags, out)
+    }
+
+    /// Ranked survivors only (the [`super::matchmaker::rank_candidates`]
+    /// contract).
+    pub fn rank_candidates(&self, candidates: &[ClassAd]) -> Vec<Match> {
+        self.match_and_rank(candidates.iter()).1
+    }
+}
+
+/// Order best-rank-first, stable on candidate index for equal ranks.
+pub(crate) fn sort_matches(ms: &mut [Match]) {
+    ms.sort_by(|a, b| {
+        b.rank
+            .partial_cmp(&a.rank)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+}
+
+/// The candidate's own requirements, looked up by pre-interned symbol.
+fn candidate_side_holds(candidate: &ClassAd, request: &ClassAd) -> bool {
+    for &sym in REQUIREMENT_SYMS.iter() {
+        if let Some(e) = candidate.get_sym(sym) {
+            return matches!(eval(EvalCtx::matched(candidate, request), e), Value::Bool(true));
+        }
+    }
+    true
+}
+
+fn requirements_expr(ad: &ClassAd) -> Option<&Expr> {
+    REQUIREMENT_SYMS.iter().find_map(|&sym| ad.get_sym(sym))
+}
+
+/// Bottom-up constant folding: a node whose children are all literals
+/// evaluates to the same value for every candidate, so it collapses to
+/// that value now. Attribute references (any scope) block folding, and
+/// partial boolean folds are deliberately not attempted — `TRUE && x`
+/// is *not* equivalent to `x` under three-valued logic when `x` is
+/// non-boolean.
+pub fn fold(e: &Expr) -> Expr {
+    static EMPTY: Lazy<ClassAd> = Lazy::new(ClassAd::new);
+    match e {
+        Expr::Lit(_) | Expr::Attr(..) => e.clone(),
+        Expr::Unary(op, x) => {
+            let x = fold(x);
+            maybe_collapse(Expr::Unary(*op, Box::new(x)), &EMPTY)
+        }
+        Expr::Binary(op, l, r) => {
+            let l = fold(l);
+            let r = fold(r);
+            maybe_collapse(Expr::Binary(*op, Box::new(l), Box::new(r)), &EMPTY)
+        }
+        Expr::Cond(c, t, f) => {
+            let folded = Expr::Cond(Box::new(fold(c)), Box::new(fold(t)), Box::new(fold(f)));
+            maybe_collapse(folded, &EMPTY)
+        }
+        Expr::Call(name, args) => {
+            let folded = Expr::Call(name.clone(), args.iter().map(fold).collect());
+            maybe_collapse(folded, &EMPTY)
+        }
+        Expr::List(xs) => {
+            let folded = Expr::List(xs.iter().map(fold).collect());
+            maybe_collapse(folded, &EMPTY)
+        }
+    }
+}
+
+/// Collapse `e` to a literal when every immediate child is a literal;
+/// evaluation against the empty ad is then context-independent.
+fn maybe_collapse(e: Expr, empty: &ClassAd) -> Expr {
+    let all_lit = match &e {
+        Expr::Unary(_, x) => matches!(**x, Expr::Lit(_)),
+        Expr::Binary(_, l, r) => matches!(**l, Expr::Lit(_)) && matches!(**r, Expr::Lit(_)),
+        Expr::Cond(c, t, f) => {
+            matches!(**c, Expr::Lit(_))
+                && matches!(**t, Expr::Lit(_))
+                && matches!(**f, Expr::Lit(_))
+        }
+        Expr::Call(_, args) => args.iter().all(|a| matches!(a, Expr::Lit(_))),
+        Expr::List(xs) => xs.iter().all(|x| matches!(x, Expr::Lit(_))),
+        _ => false,
+    };
+    if all_lit {
+        Expr::Lit(eval(EvalCtx::solo(empty), &e))
+    } else {
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::matchmaker::{rank_of, symmetric_match};
+    use crate::classad::parser::{parse_classad, parse_expr};
+
+    const STORAGE: &str = r#"
+        hostname = "hugo.mcs.anl.gov";
+        availableSpace = 50G;
+        MaxRDBandwidth = 75K/Sec;
+        requirement = other.reqdSpace < 10G
+            && other.reqdRDBandwidth < 75K/Sec;
+    "#;
+
+    const REQUEST: &str = r#"
+        hostname = "comet.xyz.com";
+        reqdSpace = 5G;
+        reqdRDBandwidth = 50K/Sec;
+        rank = other.availableSpace;
+        requirement = other.availableSpace > 5G
+            && other.MaxRDBandwidth > 50K/Sec;
+    "#;
+
+    #[test]
+    fn fold_collapses_literal_subtrees() {
+        let e = parse_expr("1 + 2 * 3").unwrap();
+        assert_eq!(fold(&e), Expr::Lit(Value::Int(7)));
+        let e = parse_expr("{1, 2 + 3}").unwrap();
+        assert_eq!(
+            fold(&e),
+            Expr::Lit(Value::List(vec![Value::Int(1), Value::Int(5)]))
+        );
+        // 1/0 folds to the ERROR literal — same result, just earlier.
+        let e = parse_expr("1 / 0").unwrap();
+        assert_eq!(fold(&e), Expr::Lit(Value::Error));
+    }
+
+    #[test]
+    fn fold_keeps_attr_dependent_subtrees() {
+        let e = parse_expr("other.availableSpace > 5 * 1024").unwrap();
+        let f = fold(&e);
+        // rhs folded, lhs (attr ref) kept.
+        match f {
+            Expr::Binary(_, l, r) => {
+                assert!(matches!(*l, Expr::Attr(..)));
+                assert_eq!(*r, Expr::Lit(Value::Int(5120)));
+            }
+            other => panic!("unexpected fold result {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fold_does_not_partial_fold_booleans() {
+        // TRUE && x must stay a conjunction: if x is numeric the result
+        // is ERROR, which plain `x` would not produce.
+        let e = parse_expr("TRUE && x").unwrap();
+        assert!(matches!(fold(&e), Expr::Binary(..)));
+    }
+
+    #[test]
+    fn compiled_agrees_with_per_pair_on_paper_ads() {
+        let request = parse_classad(REQUEST).unwrap();
+        let storage = parse_classad(STORAGE).unwrap();
+        let cm = CompiledMatch::compile(&request);
+        assert_eq!(cm.matches(&storage), symmetric_match(&request, &storage));
+        assert_eq!(cm.rank(&storage), rank_of(&request, &storage));
+        assert_eq!(cm.rank(&storage), 50.0 * 1024f64.powi(3));
+    }
+
+    #[test]
+    fn fused_pass_flags_and_ranks() {
+        let request = parse_classad(REQUEST).unwrap();
+        let mk = |space: &str, bw: &str| {
+            parse_classad(&format!("availableSpace = {space}; MaxRDBandwidth = {bw};")).unwrap()
+        };
+        let cands = vec![
+            mk("10G", "60K/Sec"),
+            mk("3G", "60K/Sec"),
+            mk("80G", "60K/Sec"),
+            mk("60G", "40K/Sec"),
+            mk("20G", "90K/Sec"),
+        ];
+        let cm = CompiledMatch::compile(&request);
+        let (flags, ranked) = cm.match_and_rank(cands.iter());
+        assert_eq!(flags, vec![true, false, true, false, true]);
+        assert_eq!(ranked.iter().map(|m| m.index).collect::<Vec<_>>(), vec![2, 4, 0]);
+    }
+
+    #[test]
+    fn missing_requirements_and_rank_default() {
+        let request = parse_classad("reqdSpace = 1G;").unwrap();
+        let storage = parse_classad("availableSpace = 50G;").unwrap();
+        let cm = CompiledMatch::compile(&request);
+        assert!(cm.matches(&storage));
+        assert_eq!(cm.rank(&storage), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_stable_under_request_mutation() {
+        let mut request = parse_classad(REQUEST).unwrap();
+        let storage = parse_classad(STORAGE).unwrap();
+        let cm = CompiledMatch::compile(&request);
+        request.set("requirement", parse_expr("FALSE").unwrap());
+        assert!(cm.matches(&storage), "compiled handle must not see later edits");
+    }
+}

@@ -6,14 +6,45 @@
 //! Per classic semantics, an unqualified attribute is resolved in the
 //! local ad first and then in the other ad.
 
-use std::collections::HashSet;
-
-use super::ast::{BinOp, ClassAd, Expr, Scope, UnOp};
+use super::ast::{AttrName, BinOp, ClassAd, Expr, Scope, UnOp};
+use super::intern::Sym;
 use super::value::Value;
 
 /// Maximum attribute-dereference depth (cycle guard; cycles evaluate to
 /// ERROR rather than hanging, mirroring Condor's behaviour).
 const MAX_DEPTH: usize = 64;
+
+/// In-flight attribute frames: `(other-side?, symbol)` pairs. Replaces
+/// the old per-eval `HashSet<(bool, String)>` — this lives entirely on
+/// the machine stack (no heap allocation per eval) and membership is a
+/// linear scan over at most `MAX_DEPTH + 2` integer pairs.
+pub(crate) struct CycleStack {
+    frames: [(bool, Sym); MAX_DEPTH + 2],
+    len: usize,
+}
+
+impl CycleStack {
+    pub(crate) fn new() -> CycleStack {
+        CycleStack { frames: [(false, Sym::DUMMY); MAX_DEPTH + 2], len: 0 }
+    }
+
+    /// Push a frame; `false` means the frame is already active (a
+    /// cyclic definition) or the stack is full — both evaluate to
+    /// ERROR, exactly like the old set-based guard.
+    fn push(&mut self, other: bool, sym: Sym) -> bool {
+        let frame = (other, sym);
+        if self.frames[..self.len].contains(&frame) || self.len >= self.frames.len() {
+            return false;
+        }
+        self.frames[self.len] = frame;
+        self.len += 1;
+        true
+    }
+
+    fn pop(&mut self) {
+        self.len -= 1;
+    }
+}
 
 /// Evaluation context: the local ad and (in a match) the other ad.
 #[derive(Clone, Copy)]
@@ -38,7 +69,7 @@ impl<'a> EvalCtx<'a> {
 
 /// Evaluate `expr` in `ctx`.
 pub fn eval(ctx: EvalCtx<'_>, expr: &Expr) -> Value {
-    let mut stack = HashSet::new();
+    let mut stack = CycleStack::new();
     eval_inner(ctx, expr, &mut stack, 0)
 }
 
@@ -61,7 +92,7 @@ pub fn eval_in_match(my: &ClassAd, other: &ClassAd, name: &str) -> Value {
 fn eval_inner(
     ctx: EvalCtx<'_>,
     expr: &Expr,
-    stack: &mut HashSet<(bool, String)>,
+    stack: &mut CycleStack,
     depth: usize,
 ) -> Value {
     if depth > MAX_DEPTH {
@@ -99,41 +130,43 @@ fn eval_inner(
 fn resolve_attr(
     ctx: EvalCtx<'_>,
     scope: Scope,
-    name: &str,
-    stack: &mut HashSet<(bool, String)>,
+    name: &AttrName,
+    stack: &mut CycleStack,
     depth: usize,
 ) -> Value {
-    let lower = name.to_ascii_lowercase();
-    let try_local = |stack: &mut HashSet<(bool, String)>| -> Option<Value> {
-        ctx.my.get(name).map(|e| {
-            let key = (false, lower.clone());
-            if !stack.insert(key.clone()) {
-                return Value::Error; // cyclic definition
-            }
-            let v = eval_inner(ctx, e, stack, depth + 1);
-            stack.remove(&key);
-            v
-        })
-    };
-    let try_other = |stack: &mut HashSet<(bool, String)>| -> Option<Value> {
-        let flipped = ctx.flipped()?;
-        flipped.my.get(name).map(|e| {
-            let key = (true, lower.clone());
-            if !stack.insert(key.clone()) {
-                return Value::Error;
-            }
-            let v = eval_inner(flipped, e, stack, depth + 1);
-            stack.remove(&key);
-            v
-        })
-    };
+    let sym = name.sym();
     match scope {
-        Scope::My => try_local(stack).unwrap_or(Value::Undefined),
-        Scope::Other => try_other(stack).unwrap_or(Value::Undefined),
-        Scope::Default => try_local(stack)
-            .or_else(|| try_other(stack))
+        Scope::My => resolve_side(ctx, false, sym, stack, depth).unwrap_or(Value::Undefined),
+        Scope::Other => resolve_side(ctx, true, sym, stack, depth).unwrap_or(Value::Undefined),
+        Scope::Default => resolve_side(ctx, false, sym, stack, depth)
+            .or_else(|| resolve_side(ctx, true, sym, stack, depth))
             .unwrap_or(Value::Undefined),
     }
+}
+
+/// Resolve `sym` in the local (`other == false`) or flipped ad.
+/// `None` when the attribute is absent (or there is no other ad);
+/// cyclic definitions evaluate to `Some(Error)`.
+fn resolve_side(
+    ctx: EvalCtx<'_>,
+    other: bool,
+    sym: Sym,
+    stack: &mut CycleStack,
+    depth: usize,
+) -> Option<Value> {
+    let target = if other { ctx.flipped()? } else { ctx };
+    let e = target.my.get_sym(sym)?;
+    // Literal attributes (the overwhelmingly common case in converted
+    // GRIS ads) cannot participate in a cycle: skip the guard frame.
+    if let Expr::Lit(v) = e {
+        return Some(v.clone());
+    }
+    if !stack.push(other, sym) {
+        return Some(Value::Error); // cyclic definition
+    }
+    let v = eval_inner(target, e, stack, depth + 1);
+    stack.pop();
+    Some(v)
 }
 
 fn eval_unary(op: UnOp, v: Value) -> Value {
@@ -163,7 +196,7 @@ fn eval_binary(
     op: BinOp,
     l: &Expr,
     r: &Expr,
-    stack: &mut HashSet<(bool, String)>,
+    stack: &mut CycleStack,
     depth: usize,
 ) -> Value {
     use BinOp::*;
@@ -321,9 +354,11 @@ fn bits(op: BinOp, lv: Value, rv: Value) -> Value {
 /// Builtin function library.
 pub mod builtins {
     use super::*;
+    use crate::util::rex::Rex;
     use once_cell::sync::Lazy;
+    use std::sync::Arc;
 
-    static REGEX_CACHE: Lazy<std::sync::Mutex<std::collections::HashMap<String, regex::Regex>>> =
+    static REGEX_CACHE: Lazy<std::sync::Mutex<std::collections::HashMap<String, Arc<Rex>>>> =
         Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
 
     /// Dispatch a builtin by (lowercased) name.
@@ -415,16 +450,19 @@ pub mod builtins {
                 Value::Bool(xs.iter().any(|v| v.loose_eq(x) == Some(true)))
             }
             ("regexp", [Value::Str(pat), Value::Str(s)]) => {
-                let mut cache = REGEX_CACHE.lock().unwrap();
-                let re = match cache.get(pat) {
-                    Some(re) => re.clone(),
-                    None => match regex::Regex::new(pat) {
-                        Ok(re) => {
-                            cache.insert(pat.clone(), re.clone());
-                            re
-                        }
-                        Err(_) => return Value::Error,
-                    },
+                let re = {
+                    let mut cache = REGEX_CACHE.lock().unwrap();
+                    match cache.get(pat) {
+                        Some(re) => re.clone(),
+                        None => match Rex::new(pat) {
+                            Ok(re) => {
+                                let re = Arc::new(re);
+                                cache.insert(pat.clone(), re.clone());
+                                re
+                            }
+                            Err(_) => return Value::Error,
+                        },
+                    }
                 };
                 Value::Bool(re.is_match(s))
             }

@@ -1,0 +1,139 @@
+//! Global attribute-name interner.
+//!
+//! ClassAd attribute names are case-insensitive and drawn from a small
+//! vocabulary (the GRIS schema plus whatever a request ad declares), so
+//! every name is lowercased **once** and mapped to a dense [`Sym`]
+//! handle. Ads index their attributes by `Sym`, the evaluator's cycle
+//! guard stores `Sym` frames, and [`super::compile::CompiledMatch`]
+//! pre-binds attribute references to symbols — the match-many hot path
+//! never lowercases or allocates a key string again.
+//!
+//! Interned names are leaked (`&'static str`): the table only grows,
+//! and it is bounded by the number of *distinct* attribute names the
+//! process ever sees, which for this workload is tens of entries.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use once_cell::sync::Lazy;
+
+/// An interned, lowercased attribute name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(u32);
+
+struct Interner {
+    map: HashMap<&'static str, u32>,
+    names: Vec<&'static str>,
+}
+
+static TABLE: Lazy<RwLock<Interner>> =
+    Lazy::new(|| RwLock::new(Interner { map: HashMap::new(), names: Vec::new() }));
+
+fn has_upper(name: &str) -> bool {
+    name.bytes().any(|b| b.is_ascii_uppercase())
+}
+
+impl Sym {
+    /// Sentinel for uninitialized slots in fixed-size frame arrays;
+    /// never equal to an interned symbol. `as_str` must not be called
+    /// on it.
+    pub(crate) const DUMMY: Sym = Sym(u32::MAX);
+
+    /// Intern `name` (case-insensitively), allocating a table slot on
+    /// first sight. Already-lowercase names take the read-lock fast
+    /// path without allocating.
+    pub fn intern(name: &str) -> Sym {
+        if !has_upper(name) {
+            if let Some(&id) = TABLE.read().unwrap().map.get(name) {
+                return Sym(id);
+            }
+            return Self::insert(name.to_string());
+        }
+        let lower = name.to_ascii_lowercase();
+        if let Some(&id) = TABLE.read().unwrap().map.get(lower.as_str()) {
+            return Sym(id);
+        }
+        Self::insert(lower)
+    }
+
+    fn insert(lower: String) -> Sym {
+        let mut t = TABLE.write().unwrap();
+        // Re-check under the write lock (another thread may have won).
+        if let Some(&id) = t.map.get(lower.as_str()) {
+            return Sym(id);
+        }
+        let leaked: &'static str = Box::leak(lower.into_boxed_str());
+        let id = t.names.len() as u32;
+        t.names.push(leaked);
+        t.map.insert(leaked, id);
+        Sym(id)
+    }
+
+    /// Look `name` up without inserting. `None` means the name was
+    /// never interned anywhere — so no ad can contain it either.
+    pub fn lookup(name: &str) -> Option<Sym> {
+        let t = TABLE.read().unwrap();
+        if !has_upper(name) {
+            return t.map.get(name).map(|&id| Sym(id));
+        }
+        let lower = name.to_ascii_lowercase();
+        t.map.get(lower.as_str()).map(|&id| Sym(id))
+    }
+
+    /// The canonical (lowercased) spelling.
+    pub fn as_str(self) -> &'static str {
+        TABLE.read().unwrap().names[self.0 as usize]
+    }
+}
+
+impl std::fmt::Display for Sym {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_case_insensitive() {
+        let a = Sym::intern("AvailableSpace");
+        let b = Sym::intern("availablespace");
+        let c = Sym::intern("AVAILABLESPACE");
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        assert_eq!(a.as_str(), "availablespace");
+    }
+
+    #[test]
+    fn lookup_does_not_insert() {
+        assert_eq!(Sym::lookup("never-seen-attr-xyzzy"), None);
+        let s = Sym::intern("never-seen-attr-xyzzy");
+        assert_eq!(Sym::lookup("NEVER-SEEN-ATTR-XYZZY"), Some(s));
+    }
+
+    #[test]
+    fn distinct_names_distinct_symbols() {
+        assert_ne!(Sym::intern("reqdspace"), Sym::intern("reqdrdbandwidth"));
+    }
+
+    #[test]
+    fn concurrent_interning_converges() {
+        // 8 threads race to intern the same 10 names; every thread must
+        // observe the same symbol per name.
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..10)
+                        .map(|j| Sym::intern(&format!("race-attr-{j}")))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let rows: Vec<Vec<Sym>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for row in &rows[1..] {
+            assert_eq!(row, &rows[0]);
+        }
+    }
+}

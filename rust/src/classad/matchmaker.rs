@@ -50,28 +50,20 @@ pub fn match_ads(request: &ClassAd, candidate: &ClassAd) -> bool {
 /// `my = request`, `other = candidate`; non-numeric ranks (including
 /// UNDEFINED when the ad has no rank) collapse to 0.0 — Condor's rule.
 pub fn rank_of(request: &ClassAd, candidate: &ClassAd) -> f64 {
-    match eval_in_match(request, candidate, "rank") {
-        v => v.as_number().unwrap_or(0.0),
-    }
+    eval_in_match(request, candidate, "rank")
+        .as_number()
+        .unwrap_or(0.0)
 }
 
 /// Match `request` against every candidate, returning the survivors
 /// ordered best-rank-first (stable for equal ranks, preserving
 /// catalog order — the deterministic tiebreak the broker relies on).
+///
+/// Compiles the request once and runs the fused match+rank pass; for
+/// repeated selections against changing candidate sets, hold a
+/// [`super::compile::CompiledMatch`] instead of re-calling this.
 pub fn rank_candidates(request: &ClassAd, candidates: &[ClassAd]) -> Vec<Match> {
-    let mut out: Vec<Match> = candidates
-        .iter()
-        .enumerate()
-        .filter(|(_, c)| symmetric_match(request, c))
-        .map(|(index, c)| Match { index, rank: rank_of(request, c) })
-        .collect();
-    out.sort_by(|a, b| {
-        b.rank
-            .partial_cmp(&a.rank)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.index.cmp(&b.index))
-    });
-    out
+    super::compile::CompiledMatch::compile(request).rank_candidates(candidates)
 }
 
 #[cfg(test)]

@@ -18,24 +18,32 @@
 //!
 //! Submodules:
 //! * [`lexer`] / [`parser`] — text form to AST,
-//! * [`ast`] — expressions and the [`ClassAd`](ast::ClassAd) record,
+//! * [`ast`] — expressions and the [`ClassAd`](ast::ClassAd) record
+//!   (attributes indexed by interned symbol),
+//! * [`intern`] — the global attribute-name interner ([`Sym`]),
 //! * [`value`] — runtime values and three-valued logic,
-//! * [`eval`] — the evaluator (with `other`-scope resolution),
-//! * [`matchmaker`] — symmetric match + rank, the broker's Match phase
-//!   engine,
+//! * [`eval`] — the evaluator (with `other`-scope resolution and an
+//!   allocation-free cycle guard),
+//! * [`matchmaker`] — per-pair symmetric match + rank,
+//! * [`compile`] — [`CompiledMatch`], the compile-once / match-many
+//!   engine behind the broker's Match phase,
 //! * [`builder`] — ergonomic programmatic ad construction.
 
 pub mod ast;
 pub mod builder;
+pub mod compile;
 pub mod eval;
+pub mod intern;
 pub mod lexer;
 pub mod matchmaker;
 pub mod parser;
 pub mod value;
 
-pub use ast::{ClassAd, Expr};
+pub use ast::{AttrName, ClassAd, Expr};
 pub use builder::AdBuilder;
+pub use compile::CompiledMatch;
 pub use eval::{eval, eval_in_match, EvalCtx};
-pub use matchmaker::{match_ads, rank_candidates, symmetric_match, Match};
+pub use intern::Sym;
+pub use matchmaker::{match_ads, rank_candidates, rank_of, symmetric_match, Match};
 pub use parser::{parse_classad, parse_expr};
 pub use value::Value;

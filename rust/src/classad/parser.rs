@@ -195,7 +195,7 @@ impl Parser {
             if let Some(scope) = scope {
                 self.next(); // dot
                 match self.next() {
-                    Some(Tok::Ident(attr)) => return Ok(Expr::Attr(scope, attr)),
+                    Some(Tok::Ident(attr)) => return Ok(Expr::Attr(scope, attr.into())),
                     Some(t) => {
                         return Err(ParseError::Unexpected(
                             format!("{t:?}"),
@@ -210,7 +210,7 @@ impl Parser {
             self.next();
             match self.next() {
                 Some(Tok::Ident(attr)) => {
-                    return Ok(Expr::Attr(Scope::Default, format!("{name}.{attr}")))
+                    return Ok(Expr::Attr(Scope::Default, format!("{name}.{attr}").into()))
                 }
                 Some(t) => {
                     return Err(ParseError::Unexpected(format!("{t:?}"), "attribute name"))
@@ -236,7 +236,7 @@ impl Parser {
             self.expect(&Tok::RParen, "')' after call arguments")?;
             return Ok(Expr::Call(lower, args));
         }
-        Ok(Expr::Attr(Scope::Default, name))
+        Ok(Expr::Attr(Scope::Default, name.into()))
     }
 
     /// classad := '[' bindings ']' | bindings

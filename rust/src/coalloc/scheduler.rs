@@ -56,6 +56,26 @@ pub struct CoallocOutcome {
     pub streams: Vec<StreamReport>,
 }
 
+impl CoallocOutcome {
+    /// Surface this outcome's counters through a [`Metrics`] registry
+    /// (ROADMAP open item): transfer/steal counts, blocks stolen,
+    /// per-source bytes, and the completion time as a histogram sample.
+    /// Simulated seconds are recorded as nanoseconds so the existing
+    /// histogram quantile machinery applies unchanged.
+    pub fn record_metrics(&self, m: &crate::metrics::Metrics) {
+        m.counter("coalloc.transfers").inc();
+        m.counter("coalloc.steal_events").add(self.steals as u64);
+        m.counter("coalloc.bytes").add(self.bytes as u64);
+        m.histogram("coalloc.completion_ns")
+            .observe_ns((self.duration * 1e9) as u64);
+        for s in &self.streams {
+            m.counter("coalloc.blocks_stolen").add(s.stolen as u64);
+            m.counter(&format!("coalloc.bytes.{}", s.site)).add(s.bytes as u64);
+            m.counter(&format!("coalloc.blocks.{}", s.site)).add(s.blocks as u64);
+        }
+    }
+}
+
 struct Stream {
     site: usize,
     site_name: String,
@@ -473,6 +493,33 @@ mod tests {
         // without stealing the slow stream alone would need ~200s for
         // its 20 MB third at a 1/2-shared 0.1e6 B/s link.
         assert!(out.duration < 150.0, "duration {:.0}s", out.duration);
+    }
+
+    #[test]
+    fn outcome_records_metrics() {
+        let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 2,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let srcs = sources(&cfg, &[1e6, 1e6]);
+        let plan = plan_stripes(&srcs, 16e6, &policy);
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        let m = crate::metrics::Metrics::new();
+        out.record_metrics(&m);
+        assert_eq!(m.counter("coalloc.transfers").get(), 1);
+        assert_eq!(m.counter("coalloc.bytes").get(), out.bytes as u64);
+        assert_eq!(m.histogram("coalloc.completion_ns").count(), 1);
+        let per_site: u64 = out
+            .streams
+            .iter()
+            .map(|s| m.counter(&format!("coalloc.bytes.{}", s.site)).get())
+            .sum();
+        assert_eq!(per_site, out.bytes as u64);
+        let stolen: u64 = out.streams.iter().map(|s| s.stolen as u64).sum();
+        assert_eq!(m.counter("coalloc.blocks_stolen").get(), stolen);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! "shell backend" scripts the paper describes.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::dit::{Dit, Scope};
 use super::entry::{Dn, Entry};
@@ -16,6 +16,13 @@ use super::filter::Filter;
 /// A dynamic-attribute provider: returns `(attr, value)` pairs merged
 /// into its entry at query time.
 pub type Provider = Arc<dyn Fn() -> Vec<(String, String)> + Send + Sync>;
+
+/// One cached provider materialization (see [`Gris::set_cache_ttl`]).
+struct CachedMaterialization {
+    generation: u64,
+    filled_at: f64,
+    entry: Entry,
+}
 
 /// A GRIS instance for one site.
 pub struct Gris {
@@ -28,6 +35,20 @@ pub struct Gris {
     /// parse time, so direct keying avoids per-query string building —
     /// Perf log P3).
     providers: HashMap<Dn, Vec<Provider>>,
+    /// Content generation: bumped whenever the tree or provider set
+    /// changes, and by [`Gris::invalidate`]. Cached materializations
+    /// from older generations are stale.
+    generation: u64,
+    /// Provider-output caching policy. `None` (the default) re-runs
+    /// providers on every query — the paper's "up-to-date, detailed
+    /// information" freshness contract. `Some(ttl)` caches provider
+    /// output per `(dn, generation)` for `ttl` seconds of
+    /// [`Gris::tick`] time (use `f64::INFINITY` for
+    /// cache-until-invalidated).
+    cache_ttl: Option<f64>,
+    /// Logical clock advanced by [`Gris::tick`]; drives TTL expiry.
+    clock: f64,
+    cache: Mutex<HashMap<Dn, CachedMaterialization>>,
 }
 
 impl Gris {
@@ -49,7 +70,16 @@ impl Gris {
         ou.add("objectClass", "GridOrganizationalUnit");
         ou.put("ou", site);
         dit.add(ou).unwrap();
-        Gris { base_dn, site: site.to_string(), dit, providers: HashMap::new() }
+        Gris {
+            base_dn,
+            site: site.to_string(),
+            dit,
+            providers: HashMap::new(),
+            generation: 0,
+            cache_ttl: None,
+            clock: 0.0,
+            cache: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn base_dn(&self) -> &Dn {
@@ -65,34 +95,99 @@ impl Gris {
         self.dit
             .add_with_ancestors(entry)
             .expect("gris entry insert");
+        self.generation += 1;
     }
 
     /// Attach a dynamic provider to the entry at `dn`.
     pub fn add_provider(&mut self, dn: &Dn, p: Provider) {
         self.providers.entry(dn.clone()).or_default().push(p);
+        self.generation += 1;
     }
 
-    /// Materialize an entry with its dynamic attributes applied.
+    /// The current content generation (changes whenever cached
+    /// materializations become stale).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Mark all cached provider output stale: the next query re-runs
+    /// every provider. (A generation bump — the explicit way for a site
+    /// to signal "my dynamic state changed".)
+    pub fn invalidate(&mut self) {
+        self.generation += 1;
+    }
+
+    /// Enable (`Some(ttl_seconds)`) or disable (`None`) provider-output
+    /// caching. With caching on, repeated broker fan-outs against an
+    /// unchanged site stop paying the provider-run + merge cost; calls
+    /// to [`Gris::invalidate`] / [`Gris::tick`] restore freshness.
+    pub fn set_cache_ttl(&mut self, ttl: Option<f64>) {
+        self.cache_ttl = ttl;
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Advance the site's logical clock by `dt` seconds; cached
+    /// provider output older than the configured TTL expires.
+    pub fn tick(&mut self, dt: f64) {
+        self.clock += dt;
+    }
+
+    /// Run `entry`'s providers and merge their output.
+    fn run_providers(e: &Entry, ps: &[Provider]) -> Entry {
+        let mut out = e.clone();
+        for p in ps {
+            for (attr, value) in p() {
+                out.put(&attr, value);
+            }
+        }
+        out
+    }
+
+    /// Materialize an entry with its dynamic attributes applied,
+    /// through the `(dn, generation)` cache when enabled.
     fn materialize(&self, e: &Entry) -> Entry {
         match self.providers.get(&e.dn) {
             None => e.clone(),
-            Some(ps) => {
-                let mut out = e.clone();
-                for p in ps {
-                    for (attr, value) in p() {
-                        out.put(&attr, value);
-                    }
+            Some(ps) => self.materialize_dynamic(e, ps),
+        }
+    }
+
+    /// [`Gris::materialize`] for an entry whose provider list is
+    /// already in hand (the search path looks it up exactly once).
+    fn materialize_dynamic(&self, e: &Entry, ps: &[Provider]) -> Entry {
+        let ttl = match self.cache_ttl {
+            None => return Self::run_providers(e, ps),
+            Some(ttl) => ttl,
+        };
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(c) = cache.get(&e.dn) {
+                if c.generation == self.generation && self.clock - c.filled_at < ttl {
+                    return c.entry.clone();
                 }
-                out
             }
         }
+        // Providers run outside the cache lock (they are arbitrary
+        // closures); a concurrent miss at worst runs them twice.
+        let out = Self::run_providers(e, ps);
+        self.cache.lock().unwrap().insert(
+            e.dn.clone(),
+            CachedMaterialization {
+                generation: self.generation,
+                filled_at: self.clock,
+                entry: out.clone(),
+            },
+        );
+        out
     }
 
     /// LDAP-style search with dynamic attributes resolved ("up-to-date,
     /// detailed information", paper §3).
+    ///
+    /// Entries without providers are filtered *by reference* and cloned
+    /// only when they match; dynamic entries must materialize before
+    /// filtering (provider output can affect the filter outcome).
     pub fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<Entry> {
-        // Dynamic attributes may affect filter outcomes, so materialize
-        // before filtering.
         self.dit
             .iter()
             .filter(|e| match scope {
@@ -100,8 +195,23 @@ impl Gris {
                 Scope::One => e.dn.parent().as_ref() == Some(base),
                 Scope::Sub => e.dn.under(base),
             })
-            .map(|e| self.materialize(e))
-            .filter(|e| filter.matches(e))
+            .filter_map(|e| match self.providers.get(&e.dn) {
+                Some(ps) => {
+                    let m = self.materialize_dynamic(e, ps);
+                    if filter.matches(&m) {
+                        Some(m)
+                    } else {
+                        None
+                    }
+                }
+                None => {
+                    if filter.matches(e) {
+                        Some(e.clone())
+                    } else {
+                        None
+                    }
+                }
+            })
             .collect()
     }
 
@@ -196,6 +306,83 @@ mod tests {
             &Filter::parse("(availableSpace>=600)").unwrap(),
         );
         assert!(miss.is_empty());
+    }
+
+    /// A GRIS whose provider counts its own invocations.
+    fn counting_gris() -> (Gris, Arc<AtomicU64>) {
+        let mut g = Gris::new("anl", "mcs");
+        let base = g.base_dn().clone();
+        let vol_dn = base.child("gss", "vol0");
+        g.add_entry(volume_entry(&base));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c2 = counter.clone();
+        g.add_provider(
+            &vol_dn,
+            Arc::new(move || {
+                let n = c2.fetch_add(1, Ordering::SeqCst) + 1;
+                vec![("availableSpace".into(), format!("{}", n * 1000))]
+            }),
+        );
+        (g, counter)
+    }
+
+    fn space_of(g: &Gris) -> f64 {
+        let hits = g.search(
+            &Dn::parse("o=grid").unwrap(),
+            Scope::Sub,
+            &Filter::parse("(objectClass=GridStorageServerVolume)").unwrap(),
+        );
+        hits[0].f64("availableSpace").unwrap()
+    }
+
+    #[test]
+    fn cached_provider_output_reused_until_invalidated() {
+        let (mut g, counter) = counting_gris();
+        g.set_cache_ttl(Some(f64::INFINITY));
+        assert_eq!(space_of(&g), 1000.0);
+        assert_eq!(space_of(&g), 1000.0, "second query must hit the cache");
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        g.invalidate();
+        assert_eq!(space_of(&g), 2000.0, "invalidate() restores freshness");
+        assert_eq!(space_of(&g), 2000.0);
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn cache_ttl_expires_with_tick() {
+        let (mut g, counter) = counting_gris();
+        g.set_cache_ttl(Some(10.0));
+        assert_eq!(space_of(&g), 1000.0);
+        g.tick(5.0);
+        assert_eq!(space_of(&g), 1000.0, "within TTL: cached");
+        g.tick(6.0);
+        assert_eq!(space_of(&g), 2000.0, "past TTL: re-materialized");
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn structural_changes_bump_generation() {
+        let (mut g, _) = counting_gris();
+        g.set_cache_ttl(Some(f64::INFINITY));
+        assert_eq!(space_of(&g), 1000.0);
+        let g0 = g.generation();
+        let mut extra = Entry::new(g.base_dn().clone().child("gss", "vol1"));
+        extra.add("objectClass", "GridStorageServerVolume");
+        extra.put_f64("availableSpace", 7.0);
+        g.add_entry(extra);
+        assert!(g.generation() > g0);
+        // The cached vol0 materialization is stale now: re-runs.
+        assert_eq!(space_of(&g), 2000.0);
+    }
+
+    #[test]
+    fn disabling_cache_restores_per_query_freshness() {
+        let (mut g, _) = counting_gris();
+        g.set_cache_ttl(Some(f64::INFINITY));
+        assert_eq!(space_of(&g), 1000.0);
+        g.set_cache_ttl(None);
+        assert_eq!(space_of(&g), 2000.0);
+        assert_eq!(space_of(&g), 3000.0);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Utility substrate: deterministic PRNG, unit-suffixed quantities,
 //! minimal JSON, micro-benchmark harness, property-test runner, CLI
-//! argument parsing.
+//! argument parsing, and a small regular-expression engine.
 //!
 //! The build image has no network access, so the conventional crates
 //! (criterion, proptest, clap, serde_json) are replaced by small,
@@ -14,4 +14,5 @@ pub mod cli;
 pub mod json;
 pub mod prng;
 pub mod prop;
+pub mod rex;
 pub mod units;

@@ -1,0 +1,720 @@
+//! Minimal regular-expression engine for the ClassAd `regexp` builtin.
+//!
+//! The conventional `regex` crate is not available in the offline build
+//! image (see the module docs in [`crate::util`]), so this implements
+//! the subset the directory/ClassAd layer needs: literals, `.`,
+//! `*`/`+`/`?` and `{m}`/`{m,}`/`{m,n}` repetition, alternation `|`,
+//! grouping `(...)` (and non-capturing `(?:...)`), character classes
+//! `[a-z]`/`[^...]`, anchors `^`/`$`, and the `\d \D \w \W \s \S`
+//! shorthands. Matching is a backtracking VM over a compiled program
+//! with per-attempt `(pc, position)` state deduplication, so work is
+//! bounded by O(program × text) — pathological patterns stay fast and
+//! empty-width repetitions (`(a*)*`) terminate with the right answer.
+//! Escapes for *unimplemented* features (`\b`, `\A`, `\p{...}`) are
+//! compile errors, never silent literals.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum RexError {
+    #[error("unbalanced group in pattern")]
+    UnbalancedGroup,
+    #[error("unterminated character class")]
+    UnterminatedClass,
+    #[error("dangling repetition operator")]
+    DanglingRepeat,
+    #[error("bad repetition bounds")]
+    BadRepeat,
+    #[error("trailing backslash")]
+    TrailingEscape,
+    #[error("unsupported escape \\{0}")]
+    UnsupportedEscape(char),
+    #[error("pattern compiles to too large a program")]
+    TooLarge,
+}
+
+/// One alternative of a character class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+    Digit(bool),
+    Word(bool),
+    Space(bool),
+}
+
+impl ClassItem {
+    fn matches(&self, c: char) -> bool {
+        match *self {
+            ClassItem::Ch(x) => c == x,
+            ClassItem::Range(a, b) => a <= c && c <= b,
+            ClassItem::Digit(want) => c.is_ascii_digit() == want,
+            ClassItem::Word(want) => (c.is_alphanumeric() || c == '_') == want,
+            ClassItem::Space(want) => c.is_whitespace() == want,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Class {
+    neg: bool,
+    items: Vec<ClassItem>,
+}
+
+impl Class {
+    fn matches(&self, c: char) -> bool {
+        self.items.iter().any(|i| i.matches(c)) != self.neg
+    }
+}
+
+/// Parsed pattern tree.
+#[derive(Debug, Clone)]
+enum Ast {
+    Char(char),
+    Any,
+    Class(Class),
+    Start,
+    End,
+    Seq(Vec<Ast>),
+    Alt(Vec<Ast>),
+    Repeat { node: Box<Ast>, min: u32, max: Option<u32> },
+}
+
+/// Compiled instruction.
+#[derive(Debug, Clone, Copy)]
+enum Inst {
+    Char(char),
+    /// `.` — any char except newline (the regex-crate default).
+    Any,
+    /// Any char *including* newline — only the unanchored-search
+    /// prefix uses this, so a match after a newline is still found.
+    AnyNl,
+    Class(usize),
+    Start,
+    End,
+    /// Try `a` first (greedy), then `b`.
+    Split(usize, usize),
+    Jmp(usize),
+    Match,
+}
+
+/// A compiled pattern. Unanchored patterns carry a compiled-in leading
+/// "try here, else advance one char" loop, so matching is always a
+/// single VM run from position 0.
+#[derive(Debug)]
+pub struct Rex {
+    prog: Vec<Inst>,
+    classes: Vec<Class>,
+}
+
+/// Compiled-program size cap: nested bounded repeats (`(a{1000}){1000}`)
+/// expand by copying, so growth is bounded explicitly.
+const MAX_PROG: usize = 10_000;
+
+/// Dense visited-set cutover: `program × (text + 1)` cells up to this
+/// many (1 MiB of bytes) use a flat bitmap; larger products switch to a
+/// hash set bounded by [`MAX_STATES`], so a huge pattern against a huge
+/// string cannot allocate unboundedly.
+const MAX_DENSE: usize = 1 << 20;
+
+/// Sparse-mode cap on explored `(pc, position)` states; exceeding it
+/// reports no-match rather than consuming unbounded memory/CPU.
+const MAX_STATES: usize = 1 << 20;
+
+/// Visited `(pc, position)` states for one match run.
+enum Visited {
+    Dense(Vec<bool>),
+    Sparse(std::collections::HashSet<(u32, u32)>),
+}
+
+impl Visited {
+    /// Record the state; `false` when already present (or the sparse
+    /// cap is exhausted — the caller treats that as explored).
+    fn insert(&mut self, pc: usize, i: usize, width: usize) -> bool {
+        match self {
+            Visited::Dense(v) => {
+                let slot = &mut v[pc * width + i];
+                !std::mem::replace(slot, true)
+            }
+            Visited::Sparse(set) => {
+                if set.len() >= MAX_STATES {
+                    return false;
+                }
+                set.insert((pc as u32, i as u32))
+            }
+        }
+    }
+}
+
+impl Rex {
+    pub fn new(pattern: &str) -> Result<Rex, RexError> {
+        let chars: Vec<char> = pattern.chars().collect();
+        let mut p = Parser { c: &chars, i: 0 };
+        let ast = p.alt()?;
+        if p.i != chars.len() {
+            // Only an unmatched ')' can stop the parser early.
+            return Err(RexError::UnbalancedGroup);
+        }
+        let anchored = matches!(
+            &ast,
+            Ast::Start
+        ) || matches!(&ast, Ast::Seq(xs) if matches!(xs.first(), Some(Ast::Start)));
+        let mut c = Compiler { prog: Vec::new(), classes: Vec::new() };
+        if !anchored {
+            // Unanchored search compiled into the program — one run
+            // from position 0 covers every start offset (with state
+            // dedup this is O(program × text) total, not per-start):
+            //   0: Split(3, 1)   try the body here...
+            //   1: Any           ...or consume one char
+            //   2: Jmp 0         and retry at the next position
+            c.prog.push(Inst::Split(3, 1));
+            c.prog.push(Inst::AnyNl);
+            c.prog.push(Inst::Jmp(0));
+        }
+        c.emit(&ast);
+        c.prog.push(Inst::Match);
+        if c.prog.len() > MAX_PROG {
+            return Err(RexError::TooLarge);
+        }
+        Ok(Rex { prog: c.prog, classes: c.classes })
+    }
+
+    /// Does the pattern match anywhere in `text`? (Same contract as
+    /// `regex::Regex::is_match`.)
+    ///
+    /// The VM deduplicates `(pc, position)` states, which both
+    /// terminates empty-width repetition loops (`(a*)*`) with the
+    /// correct answer and bounds the work to O(program × text) — no
+    /// exponential backtracking. Memory is bounded too: a flat bitmap
+    /// for ordinary sizes, a capped hash set beyond [`MAX_DENSE`].
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        let width = chars.len() + 1;
+        let cells = self.prog.len() * width;
+        let mut visited = if cells <= MAX_DENSE {
+            Visited::Dense(vec![false; cells])
+        } else {
+            Visited::Sparse(std::collections::HashSet::new())
+        };
+        self.run(&chars, &mut visited, width)
+    }
+
+    fn run(&self, chars: &[char], visited: &mut Visited, width: usize) -> bool {
+        let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+        while let Some((mut pc, mut i)) = stack.pop() {
+            loop {
+                if !visited.insert(pc, i, width) {
+                    break; // state already explored (or state cap hit)
+                }
+                match self.prog[pc] {
+                    Inst::Match => return true,
+                    Inst::Jmp(t) => pc = t,
+                    Inst::Split(a, b) => {
+                        stack.push((b, i));
+                        pc = a;
+                    }
+                    Inst::Start => {
+                        if i == 0 {
+                            pc += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    Inst::End => {
+                        if i == chars.len() {
+                            pc += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    Inst::Char(c) => {
+                        if i < chars.len() && chars[i] == c {
+                            pc += 1;
+                            i += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    Inst::Any => {
+                        // `.` excludes newline, matching the regex
+                        // crate's default (no `(?s)` flag).
+                        if i < chars.len() && chars[i] != '\n' {
+                            pc += 1;
+                            i += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    Inst::AnyNl => {
+                        if i < chars.len() {
+                            pc += 1;
+                            i += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    Inst::Class(k) => {
+                        if i < chars.len() && self.classes[k].matches(chars[i]) {
+                            pc += 1;
+                            i += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+}
+
+struct Parser<'a> {
+    c: &'a [char],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<char> {
+        self.c.get(self.i).copied()
+    }
+
+    fn alt(&mut self) -> Result<Ast, RexError> {
+        let mut branches = vec![self.seq()?];
+        while self.peek() == Some('|') {
+            self.i += 1;
+            branches.push(self.seq()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { Ast::Alt(branches) })
+    }
+
+    fn seq(&mut self) -> Result<Ast, RexError> {
+        let mut items = Vec::new();
+        while let Some(ch) = self.peek() {
+            if ch == '|' || ch == ')' {
+                break;
+            }
+            items.push(self.repeat()?);
+        }
+        Ok(if items.len() == 1 { items.pop().unwrap() } else { Ast::Seq(items) })
+    }
+
+    fn repeat(&mut self) -> Result<Ast, RexError> {
+        let atom = self.atom()?;
+        let (min, max) = match self.peek() {
+            Some('*') => (0, None),
+            Some('+') => (1, None),
+            Some('?') => (0, Some(1)),
+            Some('{') => {
+                self.i += 1;
+                let (min, max) = self.bounds()?;
+                // Greediness suffix handled below; '{' consumed here.
+                if self.peek() == Some('?') {
+                    self.i += 1;
+                }
+                return Ok(Ast::Repeat { node: Box::new(atom), min, max });
+            }
+            _ => return Ok(atom),
+        };
+        self.i += 1;
+        // Accept and ignore a lazy-quantifier suffix: acceptance
+        // (`is_match`) is unaffected by greediness.
+        if self.peek() == Some('?') {
+            self.i += 1;
+        }
+        Ok(Ast::Repeat { node: Box::new(atom), min, max })
+    }
+
+    /// `{m}`, `{m,}`, `{m,n}` — the leading `{` is already consumed.
+    fn bounds(&mut self) -> Result<(u32, Option<u32>), RexError> {
+        let min = self.number().ok_or(RexError::BadRepeat)?;
+        match self.peek() {
+            Some('}') => {
+                self.i += 1;
+                Ok((min, Some(min)))
+            }
+            Some(',') => {
+                self.i += 1;
+                if self.peek() == Some('}') {
+                    self.i += 1;
+                    return Ok((min, None));
+                }
+                let max = self.number().ok_or(RexError::BadRepeat)?;
+                if self.peek() != Some('}') || max < min {
+                    return Err(RexError::BadRepeat);
+                }
+                self.i += 1;
+                Ok((min, Some(max)))
+            }
+            _ => Err(RexError::BadRepeat),
+        }
+    }
+
+    fn number(&mut self) -> Option<u32> {
+        let start = self.i;
+        while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return None;
+        }
+        // Cap at 1000 repetitions so compiled programs stay small.
+        let n: u32 = self.c[start..self.i].iter().collect::<String>().parse().ok()?;
+        if n > 1000 {
+            None
+        } else {
+            Some(n)
+        }
+    }
+
+    fn atom(&mut self) -> Result<Ast, RexError> {
+        let ch = self.peek().ok_or(RexError::DanglingRepeat)?;
+        match ch {
+            '(' => {
+                self.i += 1;
+                // Non-capturing marker: we capture nothing anyway.
+                if self.c[self.i..].starts_with(&['?', ':']) {
+                    self.i += 2;
+                }
+                let inner = self.alt()?;
+                if self.peek() != Some(')') {
+                    return Err(RexError::UnbalancedGroup);
+                }
+                self.i += 1;
+                Ok(inner)
+            }
+            '[' => {
+                self.i += 1;
+                self.class()
+            }
+            '.' => {
+                self.i += 1;
+                Ok(Ast::Any)
+            }
+            '^' => {
+                self.i += 1;
+                Ok(Ast::Start)
+            }
+            '$' => {
+                self.i += 1;
+                Ok(Ast::End)
+            }
+            '\\' => {
+                self.i += 1;
+                let esc = self.peek().ok_or(RexError::TrailingEscape)?;
+                self.i += 1;
+                Ok(match Self::shorthand(esc) {
+                    Some(item) => Ast::Class(Class { neg: false, items: vec![item] }),
+                    None => Ast::Char(Self::literal_escape(esc)?),
+                })
+            }
+            '*' | '+' | '?' => Err(RexError::DanglingRepeat),
+            _ => {
+                self.i += 1;
+                Ok(Ast::Char(ch))
+            }
+        }
+    }
+
+    fn shorthand(esc: char) -> Option<ClassItem> {
+        match esc {
+            'd' => Some(ClassItem::Digit(true)),
+            'D' => Some(ClassItem::Digit(false)),
+            'w' => Some(ClassItem::Word(true)),
+            'W' => Some(ClassItem::Word(false)),
+            's' => Some(ClassItem::Space(true)),
+            'S' => Some(ClassItem::Space(false)),
+            _ => None,
+        }
+    }
+
+    /// A `\x` escape that is not a class shorthand. Escaped
+    /// metacharacters and punctuation are literals; *unrecognized
+    /// alphanumeric* escapes (`\b`, `\A`, `\p`, ...) are rejected so a
+    /// pattern relying on unimplemented regex features fails loudly
+    /// (the `regexp()` builtin turns that into ERROR) instead of
+    /// silently matching the letter.
+    fn literal_escape(esc: char) -> Result<char, RexError> {
+        match esc {
+            'n' => Ok('\n'),
+            't' => Ok('\t'),
+            'r' => Ok('\r'),
+            c if c.is_ascii_alphanumeric() => Err(RexError::UnsupportedEscape(c)),
+            other => Ok(other),
+        }
+    }
+
+    /// Body of a character class; the leading `[` is already consumed.
+    fn class(&mut self) -> Result<Ast, RexError> {
+        let neg = self.peek() == Some('^');
+        if neg {
+            self.i += 1;
+        }
+        let mut items = Vec::new();
+        // A `]` first in the class is a literal.
+        if self.peek() == Some(']') {
+            items.push(ClassItem::Ch(']'));
+            self.i += 1;
+        }
+        loop {
+            let ch = self.peek().ok_or(RexError::UnterminatedClass)?;
+            if ch == ']' {
+                self.i += 1;
+                return Ok(Ast::Class(Class { neg, items }));
+            }
+            self.i += 1;
+            let lo = if ch == '\\' {
+                let esc = self.peek().ok_or(RexError::TrailingEscape)?;
+                self.i += 1;
+                if let Some(item) = Self::shorthand(esc) {
+                    items.push(item);
+                    continue;
+                }
+                Self::literal_escape(esc)?
+            } else {
+                ch
+            };
+            // Range `a-z` (a trailing `-` is a literal).
+            if self.peek() == Some('-')
+                && self.c.get(self.i + 1).map_or(false, |&c| c != ']')
+            {
+                self.i += 1;
+                let hi = self.peek().ok_or(RexError::UnterminatedClass)?;
+                self.i += 1;
+                let hi = if hi == '\\' {
+                    let esc = self.peek().ok_or(RexError::TrailingEscape)?;
+                    self.i += 1;
+                    Self::literal_escape(esc)?
+                } else {
+                    hi
+                };
+                items.push(ClassItem::Range(lo.min(hi), lo.max(hi)));
+            } else {
+                items.push(ClassItem::Ch(lo));
+            }
+        }
+    }
+}
+
+struct Compiler {
+    prog: Vec<Inst>,
+    classes: Vec<Class>,
+}
+
+impl Compiler {
+    fn emit(&mut self, ast: &Ast) {
+        // Stop growing once over the cap; `Rex::new` then reports
+        // TooLarge (the truncated program is never used).
+        if self.prog.len() > MAX_PROG {
+            return;
+        }
+        match ast {
+            Ast::Char(c) => self.prog.push(Inst::Char(*c)),
+            Ast::Any => self.prog.push(Inst::Any),
+            Ast::Start => self.prog.push(Inst::Start),
+            Ast::End => self.prog.push(Inst::End),
+            Ast::Class(cl) => {
+                self.classes.push(cl.clone());
+                self.prog.push(Inst::Class(self.classes.len() - 1));
+            }
+            Ast::Seq(items) => {
+                for x in items {
+                    self.emit(x);
+                }
+            }
+            Ast::Alt(branches) => {
+                // split b1, (split b2, (... bn)); each branch jumps out.
+                let mut jumps = Vec::new();
+                for (k, br) in branches.iter().enumerate() {
+                    if k + 1 < branches.len() {
+                        let split_at = self.prog.len();
+                        self.prog.push(Inst::Split(0, 0)); // patched below
+                        self.emit(br);
+                        jumps.push(self.prog.len());
+                        self.prog.push(Inst::Jmp(0)); // patched below
+                        let next = self.prog.len();
+                        self.prog[split_at] = Inst::Split(split_at + 1, next);
+                    } else {
+                        self.emit(br);
+                    }
+                }
+                let end = self.prog.len();
+                for j in jumps {
+                    self.prog[j] = Inst::Jmp(end);
+                }
+            }
+            Ast::Repeat { node, min, max } => {
+                for _ in 0..*min {
+                    self.emit(node);
+                }
+                match max {
+                    None => {
+                        // Greedy star over the remaining copies.
+                        let loop_at = self.prog.len();
+                        self.prog.push(Inst::Split(0, 0)); // patched
+                        self.emit(node);
+                        self.prog.push(Inst::Jmp(loop_at));
+                        let after = self.prog.len();
+                        self.prog[loop_at] = Inst::Split(loop_at + 1, after);
+                    }
+                    Some(max) => {
+                        // (max - min) nested optional copies.
+                        let mut splits = Vec::new();
+                        for _ in *min..*max {
+                            splits.push(self.prog.len());
+                            self.prog.push(Inst::Split(0, 0)); // patched
+                            self.emit(node);
+                        }
+                        let after = self.prog.len();
+                        for s in splits {
+                            self.prog[s] = Inst::Split(s + 1, after);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pat: &str, text: &str) -> bool {
+        Rex::new(pat).unwrap().is_match(text)
+    }
+
+    #[test]
+    fn literals_and_anchors() {
+        assert!(m("abc", "xxabcxx"));
+        assert!(!m("abc", "ab"));
+        assert!(m("^abc", "abcdef"));
+        assert!(!m("^abc", "xabc"));
+        assert!(m("def$", "abcdef"));
+        assert!(!m("def$", "defabc"));
+        assert!(m("^$", ""));
+        assert!(!m("^$", "x"));
+    }
+
+    #[test]
+    fn the_paper_hostname_pattern() {
+        // The pattern the eval tests use against the paper's hostname.
+        assert!(m("^hu.*gov$", "hugo.mcs.anl.gov"));
+        assert!(!m("^hu.*gov$", "comet.xyz.com"));
+    }
+
+    #[test]
+    fn dot_star_plus_question() {
+        assert!(m("a.c", "abc"));
+        assert!(!m("a.c", "ac"));
+        assert!(m("ab*c", "ac"));
+        assert!(m("ab*c", "abbbc"));
+        assert!(m("ab+c", "abbc"));
+        assert!(!m("ab+c", "ac"));
+        assert!(m("ab?c", "ac"));
+        assert!(m("ab?c", "abc"));
+        assert!(!m("ab?c", "abbc"));
+    }
+
+    #[test]
+    fn classes_and_shorthands() {
+        assert!(m("[a-c]+", "zzabz"));
+        assert!(!m("^[a-c]+$", "abd"));
+        assert!(m("[^0-9]", "a"));
+        assert!(!m("^[^0-9]+$", "a1"));
+        assert!(m(r"\d+", "run42"));
+        assert!(!m(r"^\d+$", "run42"));
+        assert!(m(r"\w+", "a_b9"));
+        assert!(m(r"\s", "a b"));
+        assert!(m(r"[\d]", "7"));
+        assert!(m("[]a]", "]"));
+    }
+
+    #[test]
+    fn alternation_and_groups() {
+        assert!(m("cat|dog", "hotdog"));
+        assert!(!m("^(cat|dog)$", "cow"));
+        assert!(m("^(ab)+$", "ababab"));
+        assert!(!m("^(ab)+$", "aba"));
+        assert!(m("^(?:gsi)?ftp$", "ftp"));
+        assert!(m("^(?:gsi)?ftp$", "gsiftp"));
+    }
+
+    #[test]
+    fn bounded_repetition() {
+        assert!(m("^a{3}$", "aaa"));
+        assert!(!m("^a{3}$", "aa"));
+        assert!(m("^a{2,}$", "aaaa"));
+        assert!(!m("^a{2,}$", "a"));
+        assert!(m("^a{1,3}$", "aa"));
+        assert!(!m("^a{1,3}$", "aaaa"));
+    }
+
+    #[test]
+    fn escaped_metacharacters() {
+        assert!(m(r"^a\.b$", "a.b"));
+        assert!(!m(r"^a\.b$", "axb"));
+        assert!(m(r"\$", "cost$"));
+        assert!(m(r"\\", r"a\b"));
+    }
+
+    #[test]
+    fn bad_patterns_are_errors() {
+        assert!(Rex::new("(ab").is_err());
+        assert!(Rex::new("ab)").is_err());
+        assert!(Rex::new("[ab").is_err());
+        assert!(Rex::new("*a").is_err());
+        assert!(Rex::new("a{2,1}").is_err());
+        assert!(Rex::new("a\\").is_err());
+    }
+
+    #[test]
+    fn pathological_pattern_terminates_correctly() {
+        // Classic exponential backtracker: state dedup makes it
+        // polynomial, and the answers stay right in both directions.
+        let re = Rex::new("^(a+)+$").unwrap();
+        assert!(!re.is_match(&("a".repeat(40) + "b")));
+        assert!(re.is_match(&"a".repeat(40)));
+    }
+
+    #[test]
+    fn nullable_repetition_still_matches() {
+        // An unbounded repeat over a nullable body must not spin on
+        // empty-width iterations.
+        assert!(m("^(a*)*$", "aaa"));
+        assert!(m("^(a*)*$", ""));
+        assert!(m("^(a?)+$", "aa"));
+        assert!(m("^(a|)+$", "aa"));
+        assert!(!m("^(a*)*$", "aab"));
+    }
+
+    #[test]
+    fn unsupported_escapes_are_errors_not_literals() {
+        // regex-crate features we do not implement must fail loudly
+        // (the regexp() builtin maps this to ERROR), never silently
+        // match the letter.
+        assert_eq!(Rex::new(r"\bgov\b").unwrap_err(), RexError::UnsupportedEscape('b'));
+        assert!(Rex::new(r"\A").is_err());
+        assert!(Rex::new(r"\p").is_err());
+        assert!(Rex::new(r"[\z]").is_err());
+    }
+
+    #[test]
+    fn oversized_programs_are_rejected() {
+        assert_eq!(Rex::new("(a{1000}){1000}").unwrap_err(), RexError::TooLarge);
+    }
+
+    #[test]
+    fn unicode_text() {
+        assert!(m("π+", "ππ"));
+        assert!(m("^.$", "π"));
+    }
+
+    #[test]
+    fn dot_excludes_newline_but_search_crosses_it() {
+        // regex-crate default: `.` does not match \n ...
+        assert!(!m("^a.c$", "a\nc"));
+        assert!(m("^a.c$", "abc"));
+        // ... but unanchored search still finds matches past one.
+        assert!(m("abc", "x\nabc"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Parity: the compiled match-many path must return *identical* results
+//! to the per-pair evaluator — on the paper's example ads (the same
+//! fixtures as `it_classad_paper.rs`), on UNDEFINED/ERROR requirement
+//! outcomes, on cyclic definitions, and under case-insensitive
+//! attribute lookup.
+
+use globus_replica::classad::{
+    eval_in_match, parse_classad, rank_candidates, rank_of, symmetric_match, ClassAd,
+    CompiledMatch, Match, Value,
+};
+
+/// Verbatim from the paper, §4 (Figure-4 storage ad shape).
+const STORAGE: &str = r#"
+    hostname = "hugo.mcs.anl.gov";
+    volume = "/dev/sandbox";
+    availableSpace = 50G;
+    MaxRDBandwidth = 75K/Sec;
+    requirement = other.reqdSpace < 10G
+        && other.reqdRDBandwidth < 75K/Sec;
+"#;
+
+/// Verbatim from the paper, §5.2.
+const REQUEST: &str = r#"
+    hostname = "comet.xyz.com";
+    reqdSpace = 5G;
+    reqdRDBandwidth = 50K/Sec;
+    rank = other.availableSpace;
+    requirement = other.availableSpace > 5G
+        && other.MaxRDBandwidth > 50K/Sec;
+"#;
+
+/// The per-pair path, exactly as the pre-compiled broker ran it:
+/// symmetric match per candidate, rank for survivors, sort best-first
+/// with catalog-order tiebreak.
+fn per_pair_rank(request: &ClassAd, candidates: &[ClassAd]) -> Vec<Match> {
+    let mut out: Vec<Match> = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| symmetric_match(request, c))
+        .map(|(index, c)| Match { index, rank: rank_of(request, c) })
+        .collect();
+    out.sort_by(|a, b| {
+        b.rank
+            .partial_cmp(&a.rank)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+    out
+}
+
+fn assert_parity(request: &ClassAd, candidates: &[ClassAd]) {
+    let compiled = CompiledMatch::compile(request);
+    for (i, c) in candidates.iter().enumerate() {
+        assert_eq!(
+            compiled.matches(c),
+            symmetric_match(request, c),
+            "match parity diverged on candidate {i}"
+        );
+        assert_eq!(
+            compiled.rank(c),
+            rank_of(request, c),
+            "rank parity diverged on candidate {i}"
+        );
+    }
+    assert_eq!(compiled.rank_candidates(candidates), per_pair_rank(request, candidates));
+    assert_eq!(rank_candidates(request, candidates), per_pair_rank(request, candidates));
+}
+
+#[test]
+fn paper_example_ads_full_parity() {
+    let request = parse_classad(REQUEST).unwrap();
+    let storage = parse_classad(STORAGE).unwrap();
+    assert_parity(&request, &[storage.clone()]);
+    // The compiled path reproduces the paper's numbers exactly.
+    let compiled = CompiledMatch::compile(&request);
+    assert!(compiled.matches(&storage));
+    assert_eq!(compiled.rank(&storage), 50.0 * 1024f64.powi(3));
+    // ... and the evaluated rank Value (not just the f64 view) agrees.
+    assert_eq!(
+        eval_in_match(&request, &storage, "rank"),
+        Value::Quantity { base: 50.0 * 1024f64.powi(3), rate: false }
+    );
+}
+
+#[test]
+fn mixed_fleet_parity_with_infeasible_candidates() {
+    let request = parse_classad(REQUEST).unwrap();
+    let mk = |space: &str, bw: &str| {
+        parse_classad(&format!("availableSpace = {space}; MaxRDBandwidth = {bw};")).unwrap()
+    };
+    let candidates = vec![
+        mk("10G", "60K/Sec"),
+        mk("3G", "60K/Sec"),   // infeasible: space
+        mk("80G", "60K/Sec"),
+        mk("60G", "40K/Sec"),  // infeasible: bandwidth
+        mk("20G", "90K/Sec"),
+        parse_classad("availableSpace = 20G; MaxRDBandwidth = 90K/Sec; id = 5;").unwrap(),
+    ];
+    assert_parity(&request, &candidates);
+    // Equal ranks (20G twice) keep catalog order in both paths.
+    let ranked = rank_candidates(&request, &candidates);
+    assert_eq!(ranked.iter().map(|m| m.index).collect::<Vec<_>>(), vec![2, 4, 5, 0]);
+}
+
+#[test]
+fn undefined_requirement_fails_both_paths() {
+    // The candidate references an attribute the request never publishes:
+    // its requirements evaluate UNDEFINED, which fails the match.
+    let request = parse_classad("reqdSpace = 1G; requirement = TRUE;").unwrap();
+    let candidate = parse_classad("requirement = other.nonexistent < 5;").unwrap();
+    assert_eq!(eval_in_match(&candidate, &request, "requirement"), Value::Undefined);
+    assert_parity(&request, &[candidate.clone()]);
+    assert!(!CompiledMatch::compile(&request).matches(&candidate));
+}
+
+#[test]
+fn error_requirement_fails_both_paths() {
+    let request = parse_classad("requirement = 1 / 0;").unwrap();
+    let candidate = parse_classad("availableSpace = 50G;").unwrap();
+    assert_eq!(eval_in_match(&request, &candidate, "requirement"), Value::Error);
+    assert_parity(&request, &[candidate.clone()]);
+    assert!(!CompiledMatch::compile(&request).matches(&candidate));
+}
+
+#[test]
+fn cyclic_definitions_error_in_both_paths() {
+    // Self-cycle inside the request's own requirements.
+    let request = parse_classad("requirement = requirement;").unwrap();
+    let candidate = parse_classad("availableSpace = 50G;").unwrap();
+    assert_eq!(eval_in_match(&request, &candidate, "requirement"), Value::Error);
+    assert_parity(&request, &[candidate.clone()]);
+
+    // Mutual cycle across the match: rank chases other.x -> other.y -> ...
+    let request = parse_classad("x = other.y; rank = x; requirement = TRUE;").unwrap();
+    let candidate = parse_classad("y = other.x;").unwrap();
+    assert_eq!(eval_in_match(&request, &candidate, "x"), Value::Error);
+    assert_parity(&request, &[candidate.clone()]);
+    // ERROR rank collapses to 0.0 on both paths (Condor's rule).
+    assert_eq!(CompiledMatch::compile(&request).rank(&candidate), 0.0);
+    assert_eq!(rank_of(&request, &candidate), 0.0);
+
+    // Attribute chains within budget still resolve identically.
+    let request =
+        parse_classad("a = b + 1; b = 2; rank = a; requirement = TRUE;").unwrap();
+    assert_eq!(eval_in_match(&request, &candidate, "a"), Value::Int(3));
+    assert_eq!(CompiledMatch::compile(&request).rank(&candidate), 3.0);
+    assert_eq!(rank_of(&request, &candidate), 3.0);
+}
+
+#[test]
+fn case_insensitive_lookup_everywhere() {
+    // Ads spell attributes one way, expressions reference them in
+    // another case, and the public lookup API accepts any casing.
+    let request = parse_classad(
+        r#"ReqdSpace = 5G;
+           rank = OTHER.AVAILABLESPACE;
+           requirement = other.availablespace > 1G;"#,
+    )
+    .unwrap();
+    let candidate = parse_classad(
+        r#"AvailableSpace = 50G;
+           requirement = OTHER.reqdspace < 10G;"#,
+    )
+    .unwrap();
+    assert!(request.contains("reqdspace"));
+    assert!(request.contains("REQDSPACE"));
+    assert_eq!(request.value("reqdSPACE").as_number(), Some(5.0 * 1024f64.powi(3)));
+    assert_eq!(candidate.value("availablespace").as_number(), Some(50.0 * 1024f64.powi(3)));
+    assert_parity(&request, &[candidate.clone()]);
+    assert!(CompiledMatch::compile(&request).matches(&candidate));
+    assert_eq!(
+        CompiledMatch::compile(&request).rank(&candidate),
+        50.0 * 1024f64.powi(3)
+    );
+}
+
+#[test]
+fn rankless_and_requirementless_ads_parity() {
+    let request = parse_classad("reqdSpace = 1G;").unwrap(); // no reqs, no rank
+    let candidates = vec![
+        parse_classad("availableSpace = 50G;").unwrap(),
+        parse_classad("requirement = other.reqdSpace < 10G;").unwrap(),
+        parse_classad("requirement = other.reqdSpace > 10G;").unwrap(), // rejects
+    ];
+    assert_parity(&request, &candidates);
+    let ranked = rank_candidates(&request, &candidates);
+    // All ranks 0.0: catalog order, rejecting candidate dropped.
+    assert_eq!(ranked.iter().map(|m| m.index).collect::<Vec<_>>(), vec![0, 1]);
+}
+
+#[test]
+fn requirements_spelling_preference_parity() {
+    // An ad with BOTH spellings must honour `requirements` (Condor's)
+    // over `requirement` (the paper's) on both paths.
+    let request = parse_classad(
+        "requirements = other.availableSpace > 1G; requirement = FALSE; rank = 1;",
+    )
+    .unwrap();
+    let candidate = parse_classad("availableSpace = 50G;").unwrap();
+    assert!(symmetric_match(&request, &candidate));
+    assert!(CompiledMatch::compile(&request).matches(&candidate));
+    assert_parity(&request, &[candidate]);
+}

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Perf-trajectory recorder (ROADMAP perf log).
+#
+#   scripts/bench.sh              full run; writes BENCH_matchmaking.json
+#   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
+#
+# Runs the three selection-path benches (matchmaking core, broker phase
+# breakdown, directory/GRIS) and records the matchmaking headline
+# numbers — ns/op, ops/sec, and the compiled-vs-per-pair speedup at
+# 1,000 candidates — as JSON, so the perf trajectory across PRs is
+# finally written down instead of scrolling away in bench output.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="${BENCH_JSON:-BENCH_matchmaking.json}"
+
+echo "== bench: matchmaking (JSON -> ${out}) =="
+BENCH_JSON="${out}" cargo bench --bench bench_matchmaking
+
+echo "== bench: broker =="
+cargo bench --bench bench_broker
+
+echo "== bench: directory =="
+cargo bench --bench bench_directory
+
+echo
+echo "recorded ${out}:"
+cat "${out}"
+echo
