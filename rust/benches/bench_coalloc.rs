@@ -1,13 +1,34 @@
 //! Co-allocation microbenches: stripe planning and scheduler
-//! rebalancing on a 16-site topology, plus the end-to-end quality
-//! comparison (single-best vs striped) the subsystem exists for.
+//! rebalancing on a 16-site topology, the failover path (steady state
+//! vs one replica death at 50% of the predicted makespan), plus the
+//! end-to-end quality comparisons (single-best vs striped; the churn
+//! scenario) the subsystem exists for.
+//!
+//! With `BENCH_JSON=<path>` set, the case stats and the churn headline
+//! numbers (completion rates and mean times per strategy) are written
+//! as JSON — `scripts/bench.sh` uses this to record
+//! `BENCH_coalloc.json` next to `BENCH_matchmaking.json`.
+
+use std::collections::BTreeMap;
 
 use globus_replica::coalloc::{execute, plan_stripes, StripeSource};
 use globus_replica::config::{CoallocPolicy, GridConfig};
-use globus_replica::experiment::run_coalloc_quality;
+use globus_replica::experiment::{run_churn, run_coalloc_quality, ChurnStrategyReport};
 use globus_replica::gridftp::GridFtp;
-use globus_replica::simnet::{Topology, WorkloadSpec};
-use globus_replica::util::bench::{report_metric, Bench};
+use globus_replica::simnet::{FaultKind, Topology, WorkloadSpec};
+use globus_replica::util::bench::{report_metric, Bench, Stats};
+use globus_replica::util::json::Json;
+
+fn churn_json(r: &ChurnStrategyReport) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("attempts".to_string(), Json::Num(r.attempts as f64));
+    o.insert("completed".to_string(), Json::Num(r.completed as f64));
+    o.insert("failed".to_string(), Json::Num(r.failed as f64));
+    o.insert("mean_time_s".to_string(), Json::Num(r.mean_time));
+    o.insert("failovers".to_string(), Json::Num(r.failovers as f64));
+    o.insert("blocks_requeued".to_string(), Json::Num(r.blocks_requeued as f64));
+    Json::Obj(o)
+}
 
 fn main() {
     let cfg = GridConfig::generate(16, 4242);
@@ -36,6 +57,12 @@ fn main() {
         let wide = CoallocPolicy { max_streams: 16, ..policy.clone() };
         plan_stripes(&sources, 64.0 * 1024f64.powi(3), &wide).n_blocks
     });
+    b.case("plan 1G, downlink-clipped to 1 MB/s", || {
+        let capped = CoallocPolicy { client_downlink: 1e6, ..policy.clone() };
+        plan_stripes(&sources, 1024.0 * 1024.0 * 1024.0, &capped)
+            .assignments
+            .len()
+    });
 
     // Scheduler: execute a 256 MB striped transfer on a fresh topology
     // clone each iteration (execution mutates link state). The skew in
@@ -52,12 +79,50 @@ fn main() {
         runs += 1;
         out.duration
     });
-    b.finish();
+
+    // Failover path: identical transfer, steady state vs the plan's
+    // largest stripe dying at 50% of the predicted makespan. The delta
+    // between the two cases is the scheduler-side cost of absorbing a
+    // death (detection, cancellation, re-queue, extra steals).
+    let victim = plan
+        .assignments
+        .iter()
+        .max_by(|a, b| a.share.partial_cmp(&b.share).unwrap())
+        .map(|a| a.source.site.clone())
+        .unwrap();
+    let victim_idx = base_topo.index_of(&victim).unwrap();
+    let death_at = plan.predicted_makespan() * 0.5;
+    b.case("failover: steady state 256M, 8 streams", || {
+        let mut topo = base_topo.clone_for_probe();
+        let ftp = GridFtp::new(&topo, 32);
+        execute(&mut topo, &ftp, "bench-client", &plan, &policy)
+            .unwrap()
+            .duration
+    });
+    let mut total_requeued = 0usize;
+    let mut failover_runs = 0usize;
+    b.case("failover: one death at 50%, 256M, 8 streams", || {
+        let mut topo = base_topo.clone_for_probe();
+        topo.schedule_fault(victim_idx, death_at, FaultKind::ReplicaDeath);
+        let ftp = GridFtp::new(&topo, 32);
+        let out = execute(&mut topo, &ftp, "bench-client", &plan, &policy).unwrap();
+        total_requeued += out.blocks_requeued;
+        failover_runs += 1;
+        out.duration
+    });
+    let stats = b.finish();
     if runs > 0 {
         report_metric(
             "mean rebalance steals per transfer",
             total_steals as f64 / runs as f64,
             "steals",
+        );
+    }
+    if failover_runs > 0 {
+        report_metric(
+            "mean blocks requeued per death",
+            total_requeued as f64 / failover_runs as f64,
+            "blocks",
         );
     }
 
@@ -73,4 +138,42 @@ fn main() {
     report_metric("speedup (single / coalloc)", r.speedup, "x");
     report_metric("mean streams per transfer", r.mean_streams, "");
     report_metric("total rebalance steals", r.steals as f64, "");
+
+    // Churn scenario: what each Access strategy survives when the
+    // predicted-best source dies halfway through (ISSUE 3).
+    println!("\n== churn: predicted-best source dies at 50% of makespan ==");
+    let churn_n = if quick { 6 } else { 20 };
+    let churn = run_churn(&cfg, &spec, churn_n, 4, 6, &policy, 0.5);
+    for s in churn.strategies() {
+        println!(
+            "{:<20} completed {:>3}/{:<3}  mean {:>8.1}s  failovers {:>3}  requeued {:>4}",
+            s.strategy, s.completed, s.attempts, s.mean_time, s.failovers, s.blocks_requeued
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("coalloc".to_string()));
+        root.insert(
+            "cases".to_string(),
+            Json::Arr(stats.iter().map(Stats::to_json).collect()),
+        );
+        let mut churn_obj = BTreeMap::new();
+        churn_obj.insert("single_best".to_string(), churn_json(&churn.single_best));
+        churn_obj.insert("striped".to_string(), churn_json(&churn.striped));
+        churn_obj.insert(
+            "striped_failover".to_string(),
+            churn_json(&churn.striped_failover),
+        );
+        root.insert("churn_death_at_50pct".to_string(), Json::Obj(churn_obj));
+        root.insert(
+            "coalloc_speedup_vs_single_best".to_string(),
+            Json::Num(r.speedup),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
 }

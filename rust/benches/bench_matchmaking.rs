@@ -73,17 +73,6 @@ fn per_pair_rank(req: &ClassAd, ads: &[ClassAd]) -> Vec<Match> {
     out
 }
 
-fn stats_json(s: &Stats) -> Json {
-    let mut o = BTreeMap::new();
-    o.insert("name".to_string(), Json::Str(s.name.clone()));
-    o.insert("ns_per_op".to_string(), Json::Num(s.mean_ns));
-    o.insert("p50_ns".to_string(), Json::Num(s.p50_ns));
-    o.insert("p99_ns".to_string(), Json::Num(s.p99_ns));
-    o.insert("items_per_iter".to_string(), Json::Num(s.items_per_iter));
-    o.insert("ops_per_sec".to_string(), Json::Num(s.throughput()));
-    Json::Obj(o)
-}
-
 fn main() {
     let req = request();
     let mut b = Bench::new("matchmaking (paper §4; R3)");
@@ -165,7 +154,7 @@ fn main() {
         root.insert("bench".to_string(), Json::Str("matchmaking".to_string()));
         root.insert(
             "cases".to_string(),
-            Json::Arr(stats.iter().map(stats_json).collect()),
+            Json::Arr(stats.iter().map(Stats::to_json).collect()),
         );
         if let Some(x) = speedup {
             root.insert(

@@ -22,6 +22,31 @@ use super::convert::{entries_to_candidate, Candidate};
 use super::policy::{RankPolicy, Ranked};
 use super::selectors::Selector;
 
+/// Generous default for how many *new* attribute names an untrusted
+/// request ad may introduce at the broker boundary. The GRIS schema
+/// vocabulary plus the paper's request attributes total a few dozen
+/// names; a legitimate request inventing more than this is implausible,
+/// while a hostile one generating fresh names per request would grow
+/// the leaked intern table forever (ROADMAP open item).
+pub const REQUEST_AD_NAME_BUDGET: usize = 64;
+
+/// Parse an untrusted request ad at the broker boundary, rejecting it
+/// *before interning* if it would add more than
+/// [`REQUEST_AD_NAME_BUDGET`] new attribute names to the global
+/// [`crate::classad::intern`] table (see
+/// [`crate::classad::parse_classad_bounded`]). Trusted in-process ads
+/// (schema vocabulary, test fixtures) can keep using `parse_classad`.
+pub fn parse_request_ad(src: &str) -> Result<ClassAd> {
+    parse_request_ad_with_budget(src, REQUEST_AD_NAME_BUDGET)
+}
+
+/// [`parse_request_ad`] with an explicit budget (deployments that trim
+/// or widen the boundary).
+pub fn parse_request_ad_with_budget(src: &str, max_new_names: usize) -> Result<ClassAd> {
+    crate::classad::parse_classad_bounded(src, max_new_names)
+        .map_err(|e| anyhow::anyhow!(e).context("rejecting request ad at the broker boundary"))
+}
+
 /// Where the broker gets per-site capability data (the GRIS fan-out).
 /// Implementations: in-process ([`LocalInfoService`], for the simulator
 /// and benches) and TCP ([`RemoteInfoService`], the deployed topology).
@@ -847,6 +872,24 @@ mod tests {
         assert_eq!(metrics.histogram("broker.phase.search_ns").count(), 2);
         assert_eq!(metrics.histogram("broker.phase.match_ns").count(), 2);
         assert_eq!(metrics.histogram("broker.select_ns").count(), 2);
+    }
+
+    #[test]
+    fn boundary_rejects_attribute_name_floods() {
+        // A hostile request ad generating fresh attribute names is
+        // rejected before the intern table grows (ROADMAP item).
+        let flood: String = (0..(REQUEST_AD_NAME_BUDGET + 10))
+            .map(|i| format!("broker_boundary_flood_{i} = {i};\n"))
+            .collect();
+        let err = parse_request_ad(&flood).unwrap_err();
+        assert!(format!("{err:#}").contains("broker boundary"));
+        assert!(crate::classad::Sym::lookup("broker_boundary_flood_0").is_none());
+        // The paper's request vocabulary sails through.
+        let ok = parse_request_ad(
+            "reqdSpace = 5G; rank = other.availableSpace; requirement = TRUE;",
+        )
+        .unwrap();
+        assert!(ok.get("rank").is_some());
     }
 
     #[test]

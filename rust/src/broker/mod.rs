@@ -28,8 +28,9 @@ pub mod selectors;
 
 pub use convert::{entries_to_candidate, Candidate};
 pub use engine::{
-    AccessStrategy, Broker, BrokerTrace, CoallocSelection, InfoService, LocalInfoService,
-    PreparedRequest, RemoteInfoService, SelectScratch,
+    parse_request_ad, parse_request_ad_with_budget, AccessStrategy, Broker, BrokerTrace,
+    CoallocSelection, InfoService, LocalInfoService, PreparedRequest, RemoteInfoService,
+    SelectScratch, REQUEST_AD_NAME_BUDGET,
 };
 pub use policy::RankPolicy;
 pub use selectors::{Selector, SelectorKind};

@@ -7,12 +7,24 @@
 //! (space floor + site policy) and ranked by available space or
 //! write-bandwidth history, the replica is stored via GridFTP, and the
 //! catalog is updated atomically with the transfer outcome.
+//!
+//! Creation dispatches on [`AccessStrategy`]: `SingleBest` stores one
+//! copy at the top-ranked destination (the paper's behaviour);
+//! `Coallocated` runs the **striped `store()`**
+//! ([`crate::coalloc::execute_store`]) — one full copy pushed to each
+//! of the top-K destinations in parallel, every copy that lands
+//! registered in the catalog, destinations lost mid-push dropped
+//! without failing the surviving copies.
 
 use anyhow::{bail, Context, Result};
 
 use crate::catalog::PhysicalLocation;
 use crate::classad::{symmetric_match, AdBuilder, ClassAd};
+use crate::coalloc::{execute_store, StoreTarget};
+use crate::config::CoallocPolicy;
 use crate::experiment::SimGrid;
+
+use super::AccessStrategy;
 
 /// Destination-ranking policy for new replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,28 +71,25 @@ impl<'g> ReplicaManager<'g> {
             .build()
     }
 
-    /// Create a new replica of `logical` at the best non-holding site.
-    pub fn create_replica(&mut self, logical: &str) -> Result<ReplicationOutcome> {
-        let f = self
-            .grid
-            .files
-            .iter()
-            .position(|n| n == logical)
-            .with_context(|| format!("unknown logical file {logical:?}"))?;
-        let bytes = self.grid.sizes[f];
+    /// Ranked candidate destinations for a new replica of `logical`
+    /// sized `bytes`: every non-holding site whose GRIS view matches
+    /// the placement ad, best placement rank first.
+    fn rank_destinations(&self, logical: &str, bytes: f64) -> Result<Vec<(usize, f64)>> {
         let holders: Vec<String> = {
             let cat = self.grid.catalog.lock().unwrap();
             cat.locate(logical)?.iter().map(|l| l.site.clone()).collect()
         };
         let request = Self::placement_ad(bytes, self.policy);
-
-        // Candidate destinations: every site that does NOT hold a
-        // replica, viewed through its GRIS (live attributes).
         self.grid.publish_dynamics();
-        let mut best: Option<(usize, f64)> = None;
+        let mut ranked: Vec<(usize, f64)> = Vec::new();
         for i in 0..self.grid.topo.len() {
             let site = self.grid.topo.site(i).cfg.name.clone();
             if holders.contains(&site) {
+                continue;
+            }
+            // A dead server cannot receive a copy (control channel
+            // down) — don't even rank it.
+            if !self.grid.topo.site_alive(i) {
                 continue;
             }
             let entries = self
@@ -95,13 +104,33 @@ impl<'g> ReplicaManager<'g> {
             let score = crate::classad::eval_in_match(&request, &cand.ad, "rank")
                 .as_number()
                 .unwrap_or(0.0);
-            if best.map(|(_, s)| score > s).unwrap_or(true) {
-                best = Some((i, score));
-            }
+            ranked.push((i, score));
         }
-        let (dest, _) = best.with_context(|| {
-            format!("no eligible destination for a new replica of {logical:?}")
-        })?;
+        // Best first; ties keep topology order (deterministic).
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        Ok(ranked)
+    }
+
+    /// Create a new replica of `logical` at the best non-holding site.
+    pub fn create_replica(&mut self, logical: &str) -> Result<ReplicationOutcome> {
+        let f = self
+            .grid
+            .files
+            .iter()
+            .position(|n| n == logical)
+            .with_context(|| format!("unknown logical file {logical:?}"))?;
+        let bytes = self.grid.sizes[f];
+        let (dest, _) = self
+            .rank_destinations(logical, bytes)?
+            .into_iter()
+            .next()
+            .with_context(|| {
+                format!("no eligible destination for a new replica of {logical:?}")
+            })?;
 
         // Write through GridFTP (instrumented), then commit to catalog.
         let out = self
@@ -109,6 +138,11 @@ impl<'g> ReplicaManager<'g> {
             .ftp
             .store(&mut self.grid.topo, dest, "replica-manager", bytes);
         let site_name = self.grid.topo.site(dest).cfg.name.clone();
+        if !out.duration.is_finite() {
+            // The destination died under the store (ranked while alive,
+            // gone by write time): never register a phantom replica.
+            bail!("destination {site_name} died during the store of {logical:?}");
+        }
         {
             let mut cat = self.grid.catalog.lock().unwrap();
             cat.add_replica(
@@ -127,6 +161,84 @@ impl<'g> ReplicaManager<'g> {
             duration: out.duration,
             bandwidth: out.bandwidth,
         })
+    }
+
+    /// Create replicas of `logical` under `strategy`:
+    /// [`AccessStrategy::SingleBest`] stores one copy at the top-ranked
+    /// destination; [`AccessStrategy::Coallocated`] pushes one copy to
+    /// each of the top `max_streams` destinations in parallel (the
+    /// striped `store()`), registering every copy that lands in the
+    /// catalog. Errors when no destination is eligible or no copy
+    /// survives the push.
+    pub fn create_replicas(
+        &mut self,
+        logical: &str,
+        strategy: &AccessStrategy,
+    ) -> Result<Vec<ReplicationOutcome>> {
+        match strategy {
+            AccessStrategy::SingleBest => Ok(vec![self.create_replica(logical)?]),
+            AccessStrategy::Coallocated(policy) => {
+                self.create_replicas_striped(logical, policy)
+            }
+        }
+    }
+
+    fn create_replicas_striped(
+        &mut self,
+        logical: &str,
+        policy: &CoallocPolicy,
+    ) -> Result<Vec<ReplicationOutcome>> {
+        let f = self
+            .grid
+            .files
+            .iter()
+            .position(|n| n == logical)
+            .with_context(|| format!("unknown logical file {logical:?}"))?;
+        let bytes = self.grid.sizes[f];
+        let ranked = self.rank_destinations(logical, bytes)?;
+        if ranked.is_empty() {
+            bail!("no eligible destination for a new replica of {logical:?}");
+        }
+        let targets: Vec<StoreTarget> = ranked
+            .iter()
+            .take(policy.max_streams.max(1))
+            .map(|&(i, _)| {
+                let site = self.grid.topo.site(i).cfg.name.clone();
+                StoreTarget { url: format!("gsiftp://{site}/{logical}"), site }
+            })
+            .collect();
+        let out = execute_store(
+            &mut self.grid.topo,
+            &self.grid.ftp,
+            "replica-manager",
+            &targets,
+            bytes,
+            policy,
+        )?;
+        // Commit the copies that landed; lost destinations are simply
+        // not registered (the catalog never names a partial replica).
+        let mut created = Vec::new();
+        for r in out.reports.iter().filter(|r| r.completed) {
+            {
+                let mut cat = self.grid.catalog.lock().unwrap();
+                cat.add_replica(
+                    logical,
+                    PhysicalLocation { site: r.site.clone(), url: r.url.clone() },
+                )?;
+            }
+            self.grid.placement[f].push(r.site_index);
+            created.push(ReplicationOutcome {
+                logical: logical.to_string(),
+                site: r.site.clone(),
+                duration: r.duration,
+                bandwidth: r.mean_bandwidth,
+            });
+        }
+        if created.is_empty() {
+            bail!("striped store of {logical:?} failed at every destination");
+        }
+        self.grid.publish_dynamics();
+        Ok(created)
     }
 
     /// Delete the replica of `logical` at `site`, reclaiming space.
@@ -213,6 +325,79 @@ mod tests {
         let idx = g.topo.index_of(&out.site).unwrap();
         let h = g.ftp.history(idx);
         assert!(h.read().unwrap().wr.count >= 1);
+    }
+
+    #[test]
+    fn striped_store_registers_every_landed_copy() {
+        let mut g = grid();
+        let logical = g.files[0].clone();
+        let before: Vec<String> = {
+            let cat = g.catalog.lock().unwrap();
+            cat.locate(&logical).unwrap().iter().map(|l| l.site.clone()).collect()
+        };
+        let policy = CoallocPolicy { max_streams: 2, ..Default::default() };
+        let outs = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replicas(&logical, &AccessStrategy::Coallocated(policy))
+            .expect("striped replication");
+        assert_eq!(outs.len(), 2, "both destinations should land");
+        for out in &outs {
+            assert!(!before.contains(&out.site), "must pick non-holders");
+            assert!(out.bandwidth > 0.0);
+        }
+        let f = g.files.iter().position(|n| *n == logical).unwrap();
+        let cat = g.catalog.lock().unwrap();
+        assert_eq!(cat.locate(&logical).unwrap().len(), before.len() + 2);
+        for out in &outs {
+            let idx = g.topo.index_of(&out.site).unwrap();
+            assert!(g.placement[f].contains(&idx));
+            // Write instrumentation reached the destination history.
+            assert!(g.ftp.history(idx).read().unwrap().wr.count >= 1);
+        }
+    }
+
+    #[test]
+    fn striped_store_drops_a_dying_destination() {
+        use crate::simnet::FaultKind;
+        let mut g = grid();
+        let logical = g.files[0].clone();
+        let bytes = g.sizes[0];
+        let policy = CoallocPolicy { max_streams: 2, ..Default::default() };
+        // Find the two destinations the manager will pick and kill the
+        // best one the moment bytes start moving.
+        let mgr = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace);
+        let ranked = mgr.rank_destinations(&logical, bytes).unwrap();
+        assert!(ranked.len() >= 2);
+        let doomed = ranked[0].0;
+        g.topo.schedule_fault(doomed, g.topo.now + 1.0, FaultKind::ReplicaDeath);
+        let doomed_name = g.topo.site(doomed).cfg.name.clone();
+        let outs = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replicas(&logical, &AccessStrategy::Coallocated(policy))
+            .expect("surviving copy");
+        assert_eq!(outs.len(), 1);
+        assert_ne!(outs[0].site, doomed_name);
+        // The dead destination was not registered.
+        let cat = g.catalog.lock().unwrap();
+        assert!(cat
+            .locate(&logical)
+            .unwrap()
+            .iter()
+            .all(|l| l.site != doomed_name));
+    }
+
+    #[test]
+    fn single_best_strategy_matches_create_replica() {
+        let mut g = grid();
+        let logical = g.files[1].clone();
+        let outs = ReplicaManager::new(&mut g, PlacementPolicy::FastestWrite)
+            .create_replicas(&logical, &AccessStrategy::SingleBest)
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let cat = g.catalog.lock().unwrap();
+        assert!(cat
+            .locate(&logical)
+            .unwrap()
+            .iter()
+            .any(|l| l.site == outs[0].site));
     }
 
     #[test]

@@ -86,6 +86,24 @@ impl Sym {
     }
 }
 
+/// Number of distinct names interned so far — the table's (leaked)
+/// footprint. Boundary code uses this plus [`Sym::lookup`] to reject
+/// untrusted ads that would grow the table past a budget *before* any
+/// interning happens (see `classad::parse_classad_bounded`).
+pub fn table_len() -> usize {
+    TABLE.read().unwrap().names.len()
+}
+
+/// Process-wide soft cap on what *untrusted* input may grow the table
+/// to: `classad::parse_classad_bounded` refuses ads whose new names
+/// would push [`table_len`] past this, so a stream of hostile
+/// budget-sized ads cannot leak memory linearly forever — per-ad
+/// budgets alone would. Trusted paths (`parse_classad`, programmatic
+/// [`Sym::intern`]) are not gated; "soft" because the check races
+/// benignly with concurrent interning. Orders of magnitude above the
+/// GRIS schema + request vocabulary (tens of names).
+pub const UNTRUSTED_TABLE_CAP: usize = 4096;
+
 impl std::fmt::Display for Sym {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())

@@ -45,5 +45,5 @@ pub use compile::CompiledMatch;
 pub use eval::{eval, eval_in_match, EvalCtx};
 pub use intern::Sym;
 pub use matchmaker::{match_ads, rank_candidates, rank_of, symmetric_match, Match};
-pub use parser::{parse_classad, parse_expr};
+pub use parser::{parse_classad, parse_classad_bounded, parse_expr};
 pub use value::Value;

@@ -26,6 +26,11 @@ pub enum ParseError {
     Unexpected(String, &'static str),
     #[error("trailing tokens after expression")]
     Trailing,
+    #[error(
+        "ad would intern {fresh} new attribute names (budget {budget}) — \
+         rejected to keep the global intern table bounded"
+    )]
+    AttrBudget { fresh: usize, budget: usize },
 }
 
 struct Parser {
@@ -291,14 +296,66 @@ impl Parser {
     }
 }
 
-/// Parse a full ClassAd (bare `a = e; ...` or bracketed `[a = e; ...]`).
-pub fn parse_classad(src: &str) -> Result<ClassAd, ParseError> {
-    let mut p = Parser { toks: lex(src)?, pos: 0 };
+/// Parse a pre-lexed ClassAd token stream — the shared tail of both
+/// the trusted and the budget-gated entry points.
+fn parse_classad_toks(toks: Vec<Tok>) -> Result<ClassAd, ParseError> {
+    let mut p = Parser { toks, pos: 0 };
     let ad = p.classad()?;
     if p.pos != p.toks.len() {
         return Err(ParseError::Trailing);
     }
     Ok(ad)
+}
+
+/// Parse a full ClassAd (bare `a = e; ...` or bracketed `[a = e; ...]`).
+pub fn parse_classad(src: &str) -> Result<ClassAd, ParseError> {
+    parse_classad_toks(lex(src)?)
+}
+
+/// Parse a ClassAd from an *untrusted* source, rejecting it — before
+/// any interning happens — if its identifiers would add more than
+/// `max_new_names` entries to the global attribute-name table
+/// ([`super::intern`]). Interned names are leaked by design, so an
+/// attacker feeding generated attribute names through an unbounded
+/// parse would grow the table forever; the pre-scan walks the token
+/// stream and counts distinct identifiers that [`Sym::lookup`] has
+/// never seen. The count is conservative (scope words and builtin
+/// function names an ad mentions first also count), so budgets should
+/// be generous — see `broker::parse_request_ad` for the boundary
+/// default. Beyond the per-ad budget, a process-wide cap
+/// ([`super::intern::UNTRUSTED_TABLE_CAP`]) bounds what untrusted
+/// input may ever grow the table to — a *stream* of budget-sized
+/// hostile ads is rejected once the cap is reached, while ads using
+/// only known vocabulary keep parsing forever.
+pub fn parse_classad_bounded(
+    src: &str,
+    max_new_names: usize,
+) -> Result<ClassAd, ParseError> {
+    use super::intern::Sym;
+    let toks = lex(src)?;
+    let mut fresh: std::collections::HashSet<String> = std::collections::HashSet::new();
+    for t in &toks {
+        if let Tok::Ident(name) = t {
+            if Sym::lookup(name).is_none() {
+                fresh.insert(name.to_ascii_lowercase());
+            }
+        }
+    }
+    if fresh.len() > max_new_names {
+        return Err(ParseError::AttrBudget { fresh: fresh.len(), budget: max_new_names });
+    }
+    // Per-ad budgets alone cannot bound the table: a stream of hostile
+    // budget-sized ads would still leak linearly. The process-wide cap
+    // (`intern::UNTRUSTED_TABLE_CAP`) closes that; ads whose names are
+    // all already known always pass (fresh is empty).
+    let have = super::intern::table_len();
+    if !fresh.is_empty() && have + fresh.len() > super::intern::UNTRUSTED_TABLE_CAP {
+        return Err(ParseError::AttrBudget {
+            fresh: fresh.len(),
+            budget: super::intern::UNTRUSTED_TABLE_CAP.saturating_sub(have),
+        });
+    }
+    parse_classad_toks(toks)
 }
 
 /// Parse a single expression.
@@ -428,5 +485,62 @@ mod tests {
         assert!(parse_expr("1 +").is_err());
         assert!(parse_expr("(1").is_err());
         assert!(matches!(parse_expr("1 2"), Err(ParseError::Trailing)));
+    }
+
+    #[test]
+    fn bounded_parse_rejects_name_floods_before_interning() {
+        use super::super::intern;
+        // An adversarial ad full of never-seen generated names.
+        let flood: String = (0..40)
+            .map(|i| format!("bounded_flood_attr_{i} = {i};\n"))
+            .collect();
+        let before = intern::table_len();
+        let err = parse_classad_bounded(&flood, 8).unwrap_err();
+        assert!(matches!(err, ParseError::AttrBudget { fresh: 40, budget: 8 }));
+        // The rejection happened BEFORE interning: none of the flood's
+        // names entered the table. (Checked per name, not via
+        // `table_len`, because parallel tests intern concurrently.)
+        assert!(intern::Sym::lookup("bounded_flood_attr_0").is_none());
+        assert!(intern::Sym::lookup("bounded_flood_attr_39").is_none());
+        // Within budget the same source parses fine (and only then
+        // interns its names).
+        let ad = parse_classad_bounded(&flood, 64).unwrap();
+        assert_eq!(ad.len(), 40);
+        assert!(intern::Sym::lookup("bounded_flood_attr_0").is_some());
+        assert!(intern::table_len() >= before + 40);
+        // Re-parsing is free: every name is now known, so even a
+        // budget of 0 admits the ad.
+        assert!(parse_classad_bounded(&flood, 0).is_ok());
+    }
+
+    #[test]
+    fn bounded_parse_enforces_the_process_wide_cap() {
+        use super::super::intern;
+        let room = intern::UNTRUSTED_TABLE_CAP.saturating_sub(intern::table_len());
+        // More fresh names than untrusted input may EVER intern, with a
+        // per-ad budget that would allow them — the global cap must
+        // reject what the per-ad gate admits.
+        let flood: String = (0..=room)
+            .map(|i| format!("global_cap_flood_{i} = {i};\n"))
+            .collect();
+        let err = parse_classad_bounded(&flood, usize::MAX).unwrap_err();
+        assert!(matches!(err, ParseError::AttrBudget { .. }));
+        // Rejected before interning: the table did not absorb it.
+        assert!(intern::Sym::lookup("global_cap_flood_0").is_none());
+    }
+
+    #[test]
+    fn bounded_parse_accepts_known_vocabulary() {
+        // Warm the vocabulary through the unbounded path (the GRIS
+        // schema is trusted), then the paper's request ad must pass
+        // with a tiny budget.
+        parse_classad(PAPER_REQUEST_AD).unwrap();
+        let ad = parse_classad_bounded(PAPER_REQUEST_AD, 0).unwrap();
+        assert!(ad.get("rank").is_some());
+    }
+
+    #[test]
+    fn bounded_parse_still_reports_syntax_errors() {
+        assert!(parse_classad_bounded("a = ;", 64).is_err());
     }
 }

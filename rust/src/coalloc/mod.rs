@@ -18,14 +18,27 @@
 //!   from lagging streams so a slowing source sheds load to faster
 //!   peers. Every block is instrumented into the source site's
 //!   [`crate::gridftp::HistoryStore`] — the co-allocated Access phase
-//!   feeds the same selection history as single-source fetches.
+//!   feeds the same selection history as single-source fetches. The
+//!   scheduler also survives *churn*: a source that dies or stalls
+//!   mid-transfer fails over — its blocks are re-queued to survivors
+//!   under the same stealing discipline, with bounded per-block
+//!   retries and an exactly-once integrity check (see the module docs'
+//!   failover state machine).
+//! * [`store`] — the write-direction dual: replica creation pushing
+//!   one logical file to several destination sites in parallel, with
+//!   the same per-block fault surface.
 //!
 //! Entry points: [`crate::broker::Broker::select_coalloc`] builds the
-//! plan from a live selection; [`execute`] runs it against the grid.
-//! Tuning lives in [`crate::config::CoallocPolicy`].
+//! plan from a live selection; [`execute`] runs it against the grid;
+//! [`execute_store`] creates replicas (see `ReplicaManager::
+//! create_replicas` for the catalog-registering wrapper). Tuning —
+//! block size, stream count, downlink cap, retry budget, stall
+//! timeout — lives in [`crate::config::CoallocPolicy`].
 
 pub mod planner;
 pub mod scheduler;
+pub mod store;
 
 pub use planner::{plan_stripes, StripeAssignment, StripePlan, StripeSource};
 pub use scheduler::{execute, CoallocOutcome, StreamReport};
+pub use store::{execute_store, StoreOutcome, StoreStreamReport, StoreTarget};

@@ -7,6 +7,17 @@
 //! exactly and the fastest predicted source gets the most bytes. The
 //! plan is only the *opening position* — the chunk scheduler rebalances
 //! against reality as links drift.
+//!
+//! **Downlink awareness:** when the policy carries a finite
+//! `client_downlink`, the planner water-fills that cap over the
+//! admitted sources fastest-first — each source contributes at most
+//! what remains of the client's absorption capacity, and a source whose
+//! whole contribution would be clipped to zero is not striped at all
+//! (no phantom parallelism: extra streams the client pipe cannot feed
+//! would only add per-block setup latency). Shares are proportional to
+//! the *clipped* bandwidths, so the partition matches the throughput
+//! each stream can actually sustain once the scheduler's
+//! [`crate::simnet::FlowSet`] enforces the same cap at execution time.
 
 use crate::config::CoallocPolicy;
 
@@ -135,15 +146,37 @@ pub fn plan_stripes(
             order = kept;
         }
     }
+    // Downlink clipping: water-fill the client's absorption capacity
+    // over the admitted sources fastest-first (`order` is still sorted
+    // by descending prediction here). Each source's *effective*
+    // bandwidth is what remains of the cap; sources clipped to zero are
+    // dropped entirely.
+    let mut eff: Vec<(usize, f64)> = Vec::with_capacity(order.len());
+    let cap = policy.client_downlink;
+    if cap.is_finite() && order.iter().any(|&i| sources[i].predicted_bw > 0.0) {
+        let mut remaining = cap.max(0.0);
+        for &i in &order {
+            if remaining <= 0.0 {
+                break;
+            }
+            let e = sources[i].predicted_bw.max(0.0).min(remaining);
+            eff.push((i, e));
+            remaining -= e;
+        }
+        if eff.is_empty() {
+            // Degenerate cap (≤ 0): a single stream still moves bytes.
+            eff.push((order[0], sources[order[0]].predicted_bw.max(0.0)));
+        }
+    } else {
+        eff.extend(order.iter().map(|&i| (i, sources[i].predicted_bw.max(0.0))));
+    }
     // Assign ranges in the caller's original order so offsets follow
     // the broker's ranking, not the bandwidth sort.
-    order.sort_unstable();
+    eff.sort_unstable_by_key(|&(i, _)| i);
+    let order: Vec<usize> = eff.iter().map(|&(i, _)| i).collect();
 
     let weights: Vec<f64> = {
-        let raw: Vec<f64> = order
-            .iter()
-            .map(|&i| sources[i].predicted_bw.max(0.0))
-            .collect();
+        let raw: Vec<f64> = eff.iter().map(|&(_, e)| e).collect();
         let sum: f64 = raw.iter().sum();
         if sum <= 0.0 {
             vec![1.0 / order.len() as f64; order.len()]
@@ -173,6 +206,13 @@ pub fn plan_stripes(
     let mut next_block = 0usize;
     for (pos, &src_idx) in order.iter().enumerate() {
         let blocks = counts[pos];
+        if blocks == 0 {
+            // A downlink-clipped sliver whose quota rounded to nothing:
+            // a zero-block stream would still open a connection and
+            // join the work-stealing pool — exactly the phantom
+            // parallelism the clipping exists to prevent.
+            continue;
+        }
         let offset = next_block as f64 * block;
         let end = ((next_block + blocks) as f64 * block).min(plan.total_bytes);
         plan.assignments.push(StripeAssignment {
@@ -278,6 +318,71 @@ mod tests {
             &policy(8e6, 4),
         );
         assert_eq!(p.assignments.len(), 2);
+    }
+
+    #[test]
+    fn stripes_clip_to_the_client_downlink() {
+        // Four 1 MB/s sources behind a 1.5 MB/s client pipe: only two
+        // streams can be fed — the second clipped to the 0.5 MB/s that
+        // remains of the cap — and the other two are phantom
+        // parallelism the planner must not schedule.
+        let mut policy = policy(4e6, 4);
+        policy.client_downlink = 1.5e6;
+        let p = plan_stripes(
+            &[src("a", 1e6), src("b", 1e6), src("c", 1e6), src("d", 1e6)],
+            120e6,
+            &policy,
+        );
+        assert_eq!(p.assignments.len(), 2, "downlink admits only two streams");
+        // Shares follow the clipped bandwidths: 1.0/1.5 and 0.5/1.5.
+        assert!((p.assignments[0].share - 2.0 / 3.0).abs() < 1e-9);
+        assert!((p.assignments[1].share - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(p.assignments[0].blocks, 20);
+        assert_eq!(p.assignments[1].blocks, 10);
+        // The plan still partitions the file exactly.
+        let total: f64 = p.assignments.iter().map(|a| a.bytes).sum();
+        assert!((total - 120e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn clipped_sliver_never_becomes_a_zero_block_stream() {
+        // Cap 3.01e6 over four 1e6 sources: the fourth source's
+        // water-fill share is a 0.01e6 sliver whose block quota rounds
+        // to zero — it must not appear in the plan at all.
+        let mut policy = policy(4e6, 4);
+        policy.client_downlink = 3.01e6;
+        let p = plan_stripes(
+            &[src("a", 1e6), src("b", 1e6), src("c", 1e6), src("d", 1e6)],
+            120e6,
+            &policy,
+        );
+        assert!(p.assignments.iter().all(|a| a.blocks > 0), "{:?}", p.assignments);
+        let total: usize = p.assignments.iter().map(|a| a.blocks).sum();
+        assert_eq!(total, p.n_blocks);
+    }
+
+    #[test]
+    fn ample_downlink_leaves_the_plan_unclipped() {
+        let srcs = [src("a", 3e6), src("b", 1e6)];
+        let uncapped = plan_stripes(&srcs, 80e6, &policy(8e6, 4));
+        let mut roomy = policy(8e6, 4);
+        roomy.client_downlink = 100e6; // far above the 4e6 aggregate
+        let capped = plan_stripes(&srcs, 80e6, &roomy);
+        assert_eq!(uncapped.assignments.len(), capped.assignments.len());
+        for (u, c) in uncapped.assignments.iter().zip(&capped.assignments) {
+            assert_eq!(u.blocks, c.blocks);
+            assert!((u.share - c.share).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_downlink_still_moves_bytes_on_one_stream() {
+        let mut policy = policy(4e6, 4);
+        policy.client_downlink = 0.0;
+        let p = plan_stripes(&[src("a", 2e6), src("b", 1e6)], 40e6, &policy);
+        assert_eq!(p.assignments.len(), 1);
+        assert_eq!(p.assignments[0].source.site, "a");
+        assert_eq!(p.assignments[0].blocks, p.n_blocks);
     }
 
     #[test]

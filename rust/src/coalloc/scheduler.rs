@@ -10,6 +10,21 @@
 //! steal) — a slowing source sheds blocks to faster ones without any
 //! central re-planning.
 //!
+//! **Failover state machine.** A stream is `running → finished` in the
+//! steady state. When its source *dies* (control channel down,
+//! [`Topology::site_alive`]) or *stalls* (one block in flight longer
+//! than `CoallocPolicy::block_timeout`), the stream transitions to
+//! `failed`: its in-flight flow is cancelled, the block is pushed back
+//! with a retry charged, its transfer slot is released, and its whole
+//! backlog becomes an *orphan queue* that survivors steal from with no
+//! backlog floor or rate gate (the usual stealing discipline, minus the
+//! gates — orphans must move). Streams that had already retired are
+//! revived so orphans always find a live adopter. The transfer fails
+//! fast when failover is disabled (`max_block_retries = 0`), when one
+//! block exhausts its retry budget, or when no live source remains —
+//! and a final integrity check asserts every byte range was delivered
+//! exactly once before the outcome is reported.
+//!
 //! Every completed block is instrumented as a [`TransferRecord`] into
 //! the source site's `HistoryStore` via [`GridFtp::record`] — the same
 //! store the site's GRIS providers publish from — so co-allocated
@@ -40,6 +55,10 @@ pub struct StreamReport {
     pub bytes: f64,
     /// Mean delivered bandwidth over the stream's busy time (bytes/s).
     pub mean_bandwidth: f64,
+    /// Blocks this stream had in flight when its source died/stalled.
+    pub failures: usize,
+    /// Whether the stream ended in the `failed` state (source lost).
+    pub failed: bool,
 }
 
 /// Outcome of one co-allocated transfer.
@@ -53,25 +72,42 @@ pub struct CoallocOutcome {
     pub aggregate_bandwidth: f64,
     /// Total steal events (a steal moves ≥1 block between queues).
     pub steals: usize,
+    /// Streams that failed over (source died or stalled mid-transfer).
+    pub failovers: usize,
+    /// Blocks re-queued off failed sources (in-flight + unscheduled).
+    pub blocks_requeued: usize,
+    /// Total retry charges across all blocks (= in-flight blocks
+    /// cancelled by failovers).
+    pub retries_total: usize,
+    /// Highest per-block retry count observed (≤ `max_block_retries`).
+    pub retries_peak: usize,
     pub streams: Vec<StreamReport>,
 }
 
 impl CoallocOutcome {
     /// Surface this outcome's counters through a [`Metrics`] registry
-    /// (ROADMAP open item): transfer/steal counts, blocks stolen,
-    /// per-source bytes, and the completion time as a histogram sample.
-    /// Simulated seconds are recorded as nanoseconds so the existing
-    /// histogram quantile machinery applies unchanged.
+    /// (ROADMAP open item): transfer/steal/failover counts, blocks
+    /// stolen and re-queued, per-source bytes and failures, and the
+    /// completion time as a histogram sample. Simulated seconds are
+    /// recorded as nanoseconds so the existing histogram quantile
+    /// machinery applies unchanged.
     pub fn record_metrics(&self, m: &crate::metrics::Metrics) {
         m.counter("coalloc.transfers").inc();
         m.counter("coalloc.steal_events").add(self.steals as u64);
         m.counter("coalloc.bytes").add(self.bytes as u64);
+        m.counter("coalloc.failovers").add(self.failovers as u64);
+        m.counter("coalloc.blocks_requeued").add(self.blocks_requeued as u64);
+        m.counter("coalloc.retries").add(self.retries_total as u64);
         m.histogram("coalloc.completion_ns")
             .observe_ns((self.duration * 1e9) as u64);
         for s in &self.streams {
             m.counter("coalloc.blocks_stolen").add(s.stolen as u64);
             m.counter(&format!("coalloc.bytes.{}", s.site)).add(s.bytes as u64);
             m.counter(&format!("coalloc.blocks.{}", s.site)).add(s.blocks as u64);
+            if s.failures > 0 || s.failed {
+                m.counter(&format!("coalloc.failures.{}", s.site))
+                    .add(s.failures.max(1) as u64);
+            }
         }
     }
 }
@@ -90,13 +126,121 @@ struct Stream {
     /// with observed per-block throughput (EWMA). 0 = unknown.
     est_bw: f64,
     finished: bool,
+    /// Source died or stalled; the queue is orphaned (steal-only).
+    failed: bool,
+    /// Blocks this stream failed to deliver (cancelled in flight).
+    failures: usize,
+}
+
+impl Stream {
+    /// Whether this stream currently holds a transfer slot
+    /// (`begin_transfer`d and neither retired nor failed).
+    fn active(&self) -> bool {
+        !self.finished && !self.failed
+    }
+}
+
+/// Release the transfer slot of every still-active stream (error
+/// paths; completed/failed streams released their slot already).
+fn release_active(streams: &[Stream], topo: &mut Topology) {
+    for s in streams {
+        if s.active() {
+            topo.end_transfer(s.site);
+        }
+    }
+}
+
+/// Failover detection (see the module docs' state machine): fail every
+/// running stream whose source died or whose in-flight block timed
+/// out. The in-flight block is cancelled, charged one retry and pushed
+/// back; the stream's slot is released; retired survivors are revived
+/// to adopt the orphans. Errors when failover is disabled, a block
+/// exhausts its retry budget, or no live source remains.
+#[allow(clippy::too_many_arguments)]
+fn detect_failures(
+    streams: &mut [Stream],
+    topo: &mut Topology,
+    flows: &mut FlowSet,
+    retries: &mut [usize],
+    policy: &CoallocPolicy,
+    failovers: &mut usize,
+    blocks_requeued: &mut usize,
+) -> Result<()> {
+    for i in 0..streams.len() {
+        if streams[i].finished || streams[i].failed {
+            continue;
+        }
+        let dead = !topo.site_alive(streams[i].site);
+        let stalled = matches!(
+            streams[i].current,
+            Some((_, _, at)) if topo.now - at > policy.block_timeout
+        );
+        if !dead && !stalled {
+            continue;
+        }
+        let reason = if dead { "died" } else { "stalled" };
+        let (site_name, orphans, over_budget) = {
+            let s = &mut streams[i];
+            s.failed = true;
+            *failovers += 1;
+            let mut orphans = s.queue.len();
+            let mut over_budget = None;
+            if let Some((block, fid, _)) = s.current.take() {
+                flows.cancel(fid);
+                s.failures += 1;
+                retries[block] += 1;
+                orphans += 1;
+                s.queue.push_front(block);
+                if retries[block] > policy.max_block_retries {
+                    over_budget = Some(block);
+                }
+            }
+            topo.end_transfer(s.site);
+            *blocks_requeued += orphans;
+            (s.site_name.clone(), orphans, over_budget)
+        };
+        if policy.max_block_retries == 0 && orphans > 0 {
+            // Paper-era behaviour: losing a source with work pending
+            // kills the whole transfer.
+            bail!(
+                "source {site_name} {reason} mid-transfer and failover is \
+                 disabled (max_block_retries = 0)"
+            );
+        }
+        if let Some(block) = over_budget {
+            bail!(
+                "block {block} exceeded its retry budget \
+                 ({} re-queues) after source {site_name} {reason}",
+                policy.max_block_retries
+            );
+        }
+        if orphans > 0 {
+            // Revive retired survivors: orphaned blocks must always
+            // find a live stream to adopt them.
+            for j in 0..streams.len() {
+                if streams[j].finished && topo.site_alive(streams[j].site) {
+                    streams[j].finished = false;
+                    topo.begin_transfer(streams[j].site);
+                }
+            }
+            if !streams.iter().any(|s| s.active()) {
+                bail!(
+                    "source {site_name} {reason} and no live source remains \
+                     to adopt its {orphans} blocks"
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Hand every idle stream its next block: own queue first, then a
 /// rate-gated steal of the tail half of the largest peer backlog (the
 /// stream must clear one block before the victim could drain its own
 /// backlog, judging by predicted-then-observed rates; unknown rates on
-/// either side permit the steal). A stream with nothing to run and no
+/// either side permit the steal). *Failed* peers are always valid
+/// victims regardless of backlog size or rates — their queues are
+/// orphans that must move. A stream with nothing to run and no
 /// stealable peer backlog retires and releases its transfer slot; a
 /// gate-blocked stream stays idle and re-evaluates as estimates update.
 fn assign_idle(
@@ -109,7 +253,7 @@ fn assign_idle(
     min_steal: usize,
 ) {
     for i in 0..streams.len() {
-        if streams[i].current.is_some() || streams[i].finished {
+        if streams[i].current.is_some() || streams[i].finished || streams[i].failed {
             continue;
         }
         let block = match streams[i].queue.pop_front() {
@@ -118,7 +262,13 @@ fn assign_idle(
                 let est_i = streams[i].est_bw;
                 let victim = (0..streams.len())
                     .filter(|&j| {
-                        if j == i || streams[j].queue.len() < min_steal {
+                        if j == i {
+                            return false;
+                        }
+                        if streams[j].failed {
+                            return !streams[j].queue.is_empty();
+                        }
+                        if streams[j].queue.len() < min_steal {
                             return false;
                         }
                         let est_v = streams[j].est_bw;
@@ -143,8 +293,14 @@ fn assign_idle(
                         first
                     }
                     None => {
-                        let any_backlog = (0..streams.len())
-                            .any(|j| j != i && streams[j].queue.len() >= min_steal);
+                        let any_backlog = (0..streams.len()).any(|j| {
+                            j != i
+                                && if streams[j].failed {
+                                    !streams[j].queue.is_empty()
+                                } else {
+                                    streams[j].queue.len() >= min_steal
+                                }
+                        });
                         if !any_backlog {
                             streams[i].finished = true;
                             topo.end_transfer(streams[i].site);
@@ -171,18 +327,20 @@ fn assign_idle(
 }
 
 /// Instrument completed blocks into the history stores and fold the
-/// observed throughput into each stream's bandwidth estimate.
+/// observed throughput into each stream's bandwidth estimate. Errors
+/// if a block lands twice (the exactly-once ledger is violated).
 #[allow(clippy::too_many_arguments)]
 fn record_completions(
     completions: Vec<crate::simnet::Completion>,
     streams: &mut [Stream],
     flow_owner: &[usize],
     planned_owner: &[usize],
+    delivered: &mut [bool],
     plan: &StripePlan,
     ftp: &GridFtp,
     client: &str,
     finish_at: &mut f64,
-) {
+) -> Result<()> {
     for c in completions {
         let owner = flow_owner[c.flow];
         let s = &mut streams[owner];
@@ -191,6 +349,10 @@ fn record_completions(
             None => continue,
         };
         debug_assert_eq!(fid, c.flow);
+        if delivered[block] {
+            bail!("integrity violation: block {block} delivered twice");
+        }
+        delivered[block] = true;
         let (_, len) = plan.block_range(block);
         let duration = (c.at - assigned_at).max(1e-9);
         ftp.record(
@@ -219,12 +381,15 @@ fn record_completions(
             *finish_at = c.at;
         }
     }
+    Ok(())
 }
 
 /// Execute `plan` against the live topology, instrumenting every block
 /// into the per-site history stores. `client` is the requesting
 /// endpoint (the Figure-5 "source" the GRIS publishes per-peer history
-/// for).
+/// for). Survives source churn per the module docs' failover state
+/// machine; the returned outcome passed the exactly-once integrity
+/// check over the assembled byte ranges.
 pub fn execute(
     topo: &mut Topology,
     ftp: &GridFtp,
@@ -240,6 +405,10 @@ pub fn execute(
             started_at,
             aggregate_bandwidth: 0.0,
             steals: 0,
+            failovers: 0,
+            blocks_requeued: 0,
+            retries_total: 0,
+            retries_peak: 0,
             streams: Vec::new(),
         });
     }
@@ -261,6 +430,8 @@ pub fn execute(
             busy_time: 0.0,
             est_bw: a.source.predicted_bw.max(0.0),
             finished: false,
+            failed: false,
+            failures: 0,
         });
     }
 
@@ -283,6 +454,11 @@ pub fn execute(
             planned_owner[b] = s;
         }
     }
+    // Exactly-once delivery ledger + per-block failover retry counts.
+    let mut delivered: Vec<bool> = vec![false; plan.n_blocks];
+    let mut retries: Vec<usize> = vec![0; plan.n_blocks];
+    let mut failovers = 0usize;
+    let mut blocks_requeued = 0usize;
     let mut steals = 0usize;
     let mut finish_at = started_at;
     let min_steal = policy.rebalance_threshold.max(1.0).ceil() as usize;
@@ -291,11 +467,21 @@ pub fn execute(
     // terminate with an error instead of spinning forever.
     let max_ticks = 2_000_000usize;
 
-    for _ in 0..max_ticks {
+    let mut err: Option<anyhow::Error> = None;
+    'ticks: for _ in 0..max_ticks {
+        // 0. Failover: detect dead/stalled sources, orphan their work.
+        if let Err(e) = detect_failures(
+            &mut streams, topo, &mut flows, &mut retries, policy,
+            &mut failovers, &mut blocks_requeued,
+        ) {
+            err = Some(e);
+            break;
+        }
+
         // 1. Hand idle streams work: own queue first, then steal.
         assign_idle(&mut streams, topo, &mut flows, &mut flow_owner, &mut steals, plan, min_steal);
 
-        if streams.iter().all(|s| s.finished) {
+        if streams.iter().all(|s| s.finished || s.failed) {
             break;
         }
 
@@ -309,17 +495,28 @@ pub fn execute(
             if completions.is_empty() {
                 break;
             }
-            record_completions(
+            if let Err(e) = record_completions(
                 completions,
                 &mut streams,
                 &flow_owner,
                 &planned_owner,
+                &mut delivered,
                 plan,
                 ftp,
                 client,
                 &mut finish_at,
-            );
+            ) {
+                err = Some(e);
+                break 'ticks;
+            }
             if tick_left > 1e-12 {
+                if let Err(e) = detect_failures(
+                    &mut streams, topo, &mut flows, &mut retries, policy,
+                    &mut failovers, &mut blocks_requeued,
+                ) {
+                    err = Some(e);
+                    break 'ticks;
+                }
                 assign_idle(
                     &mut streams,
                     topo,
@@ -333,17 +530,36 @@ pub fn execute(
         }
     }
 
-    if !streams.iter().all(|s| s.finished) {
+    if let Some(e) = err {
+        release_active(&streams, topo);
+        return Err(e);
+    }
+
+    if !streams.iter().all(|s| s.finished || s.failed) {
         // Release whatever is still registered before failing.
-        for s in &streams {
-            if !s.finished {
-                topo.end_transfer(s.site);
-            }
-        }
+        release_active(&streams, topo);
         bail!("coalloc transfer did not converge within the tick budget");
     }
 
+    // Final integrity check: the assembled ranges must cover the file
+    // exactly once (the per-completion ledger rejects duplicates; this
+    // rejects holes — e.g. every source died).
+    let undelivered = delivered.iter().filter(|&&d| !d).count();
+    if undelivered > 0 {
+        bail!(
+            "co-allocated transfer lost {undelivered} of {} blocks \
+             (no surviving source adopted them)",
+            plan.n_blocks
+        );
+    }
     let bytes: f64 = streams.iter().map(|s| s.bytes_done).sum();
+    if (bytes - plan.total_bytes).abs() > 1.0 {
+        bail!(
+            "integrity violation: assembled {bytes} bytes != file size {}",
+            plan.total_bytes
+        );
+    }
+
     let duration = (finish_at - started_at).max(0.0);
     Ok(CoallocOutcome {
         bytes,
@@ -351,6 +567,10 @@ pub fn execute(
         started_at,
         aggregate_bandwidth: if duration > 0.0 { bytes / duration } else { 0.0 },
         steals,
+        failovers,
+        blocks_requeued,
+        retries_total: retries.iter().sum(),
+        retries_peak: retries.iter().copied().max().unwrap_or(0),
         streams: streams
             .iter()
             .map(|s| StreamReport {
@@ -364,6 +584,8 @@ pub fn execute(
                 } else {
                     0.0
                 },
+                failures: s.failures,
+                failed: s.failed,
             })
             .collect(),
     })
@@ -374,6 +596,7 @@ mod tests {
     use super::*;
     use crate::coalloc::planner::{plan_stripes, StripeSource};
     use crate::config::GridConfig;
+    use crate::simnet::FaultKind;
 
     fn flat_grid(n: usize, bw: f64) -> (GridConfig, Topology, GridFtp) {
         let mut cfg = GridConfig::generate(n, 17);
@@ -418,6 +641,9 @@ mod tests {
         assert!((out.bytes - 60e6).abs() < 1.0);
         let delivered: usize = out.streams.iter().map(|s| s.blocks).sum();
         assert_eq!(delivered, plan.n_blocks);
+        assert_eq!(out.failovers, 0);
+        assert_eq!(out.blocks_requeued, 0);
+        assert_eq!(out.retries_peak, 0);
         // Instrumentation: every block is a read record under the
         // client peer, in the same store the GRIS providers read.
         for s in &out.streams {
@@ -496,6 +722,120 @@ mod tests {
     }
 
     #[test]
+    fn replica_death_fails_over_to_survivors() {
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            max_block_retries: 3,
+            ..Default::default()
+        };
+        let srcs = sources(&cfg, &[1e6, 1e6, 1e6]);
+        let plan = plan_stripes(&srcs, 60e6, &policy);
+        // Site 0 dies a third of the way into the transfer (~20s of
+        // the ~60s steady-state makespan over 3 × 1 MB/s links).
+        topo.schedule_fault(0, 20.0, FaultKind::ReplicaDeath);
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        // Every byte still arrives, exactly once.
+        assert!((out.bytes - 60e6).abs() < 1.0);
+        let delivered: usize = out.streams.iter().map(|s| s.blocks).sum();
+        assert_eq!(delivered, plan.n_blocks);
+        // The failover surfaced in the counters.
+        assert_eq!(out.failovers, 1);
+        assert!(out.blocks_requeued > 0);
+        assert_eq!(out.retries_total, 1, "one in-flight block was cancelled");
+        assert!(out.retries_peak <= policy.max_block_retries);
+        let dead = &out.streams[0];
+        assert!(dead.failed);
+        assert_eq!(dead.failures, 1);
+        // Survivors adopted the dead stream's share.
+        assert!(dead.blocks < plan.assignments[0].blocks);
+        let survivor_blocks: usize =
+            out.streams[1..].iter().map(|s| s.blocks).sum();
+        assert_eq!(dead.blocks + survivor_blocks, plan.n_blocks);
+        // Slot accounting stays balanced through the failover.
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn death_without_failover_fails_fast() {
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            max_block_retries: 0,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6, 1e6]), 60e6, &policy);
+        topo.schedule_fault(1, 20.0, FaultKind::ReplicaDeath);
+        let err = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("failover is disabled"),
+            "unexpected error: {err:#}"
+        );
+        // Error path released every slot.
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn all_sources_dying_is_an_error_not_a_hang() {
+        let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 2,
+            tick: 1.0,
+            max_block_retries: 5,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6]), 40e6, &policy);
+        topo.schedule_fault(0, 5.0, FaultKind::ReplicaDeath);
+        topo.schedule_fault(1, 5.0, FaultKind::ReplicaDeath);
+        let err = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no live source") || msg.contains("lost"),
+            "unexpected error: {msg}"
+        );
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn stalled_source_times_out_and_sheds_its_blocks() {
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            max_block_retries: 2,
+            block_timeout: 30.0,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6, 1e6]), 60e6, &policy);
+        // Site 2's link collapses to 0.1% — not dead on the control
+        // channel, but its 4 s blocks now take ~4000 s: a stall.
+        topo.schedule_fault(2, 10.0, FaultKind::LinkDegrade { factor: 0.001 });
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        assert!((out.bytes - 60e6).abs() < 1.0);
+        assert_eq!(out.failovers, 1);
+        let stalled = &out.streams[2];
+        assert!(stalled.failed);
+        // The healthy pair absorbed the remainder within their pace
+        // (not the stalled link's ~4000 s per block).
+        assert!(out.duration < 200.0, "duration {:.0}s", out.duration);
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
     fn outcome_records_metrics() {
         let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
         let policy = CoallocPolicy {
@@ -511,6 +851,8 @@ mod tests {
         out.record_metrics(&m);
         assert_eq!(m.counter("coalloc.transfers").get(), 1);
         assert_eq!(m.counter("coalloc.bytes").get(), out.bytes as u64);
+        assert_eq!(m.counter("coalloc.failovers").get(), 0);
+        assert_eq!(m.counter("coalloc.blocks_requeued").get(), 0);
         assert_eq!(m.histogram("coalloc.completion_ns").count(), 1);
         let per_site: u64 = out
             .streams
@@ -520,6 +862,26 @@ mod tests {
         assert_eq!(per_site, out.bytes as u64);
         let stolen: u64 = out.streams.iter().map(|s| s.stolen as u64).sum();
         assert_eq!(m.counter("coalloc.blocks_stolen").get(), stolen);
+    }
+
+    #[test]
+    fn failover_counters_reach_metrics() {
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6, 1e6]), 60e6, &policy);
+        topo.schedule_fault(0, 20.0, FaultKind::ReplicaDeath);
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        let m = crate::metrics::Metrics::new();
+        out.record_metrics(&m);
+        assert_eq!(m.counter("coalloc.failovers").get(), 1);
+        assert!(m.counter("coalloc.blocks_requeued").get() > 0);
+        let dead_site = &out.streams[0].site;
+        assert!(m.counter(&format!("coalloc.failures.{dead_site}")).get() >= 1);
     }
 
     #[test]

@@ -181,7 +181,20 @@ pub struct CoallocPolicy {
     pub tick: f64,
     /// Client downlink capacity shared by all streams (bytes/s);
     /// `f64::INFINITY` leaves the WAN links as the only bottleneck.
+    /// The planner also consumes this cap: stripes are clipped to what
+    /// the client can absorb, so sources whose bandwidth the downlink
+    /// could never use are not striped at all.
     pub client_downlink: f64,
+    /// Failover: how many times one block may be re-queued after its
+    /// source died or stalled before the whole transfer is declared
+    /// failed. 0 disables failover (the paper-era behaviour: a dying
+    /// replica kills the transfer).
+    pub max_block_retries: usize,
+    /// Failover: a block in flight longer than this many simulated
+    /// seconds marks its source as stalled (treated like a death — the
+    /// stream's blocks are re-queued to survivors). `INFINITY` trusts
+    /// sources to eventually deliver.
+    pub block_timeout: f64,
 }
 
 impl Default for CoallocPolicy {
@@ -192,6 +205,8 @@ impl Default for CoallocPolicy {
             rebalance_threshold: 2.0,
             tick: 2.0,
             client_downlink: f64::INFINITY,
+            max_block_retries: 3,
+            block_timeout: f64::INFINITY,
         }
     }
 }
@@ -204,6 +219,7 @@ impl CoallocPolicy {
         let d = CoallocPolicy::default();
         let f = |k: &str, dflt: f64| v.get(k).and_then(Json::as_f64).unwrap_or(dflt);
         let downlink = f("client_downlink", 0.0);
+        let timeout = f("block_timeout", 0.0);
         Ok(CoallocPolicy {
             // Floored at 64 KiB: a degenerate block size would explode
             // the block count (and the scheduler's queues) downstream.
@@ -212,6 +228,10 @@ impl CoallocPolicy {
             rebalance_threshold: f("rebalance_threshold", d.rebalance_threshold),
             tick: f("tick", d.tick).max(1e-3),
             client_downlink: if downlink > 0.0 { downlink } else { f64::INFINITY },
+            max_block_retries: f("max_block_retries", d.max_block_retries as f64)
+                .max(0.0) as usize,
+            // Missing or non-positive means "no stall detection".
+            block_timeout: if timeout > 0.0 { timeout } else { f64::INFINITY },
         })
     }
 
@@ -228,6 +248,13 @@ impl CoallocPolicy {
         m.insert("tick".into(), Json::Num(self.tick));
         if self.client_downlink.is_finite() {
             m.insert("client_downlink".into(), Json::Num(self.client_downlink));
+        }
+        m.insert(
+            "max_block_retries".into(),
+            Json::Num(self.max_block_retries as f64),
+        );
+        if self.block_timeout.is_finite() {
+            m.insert("block_timeout".into(), Json::Num(self.block_timeout));
         }
         Json::Obj(m).to_string()
     }
@@ -284,6 +311,8 @@ mod tests {
             rebalance_threshold: 3.0,
             tick: 1.0,
             client_downlink: 5e6,
+            max_block_retries: 2,
+            block_timeout: 120.0,
         };
         let re = CoallocPolicy::from_json(&p.to_json()).unwrap();
         assert_eq!(p, re);

@@ -9,9 +9,11 @@
 //! repository — then replays a workload under a chosen selection policy
 //! and scores the outcome against the clairvoyant oracle.
 
+pub mod churn;
 pub mod grid;
 pub mod quality;
 
+pub use churn::{run_churn, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
 pub use quality::{
     run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,

@@ -123,7 +123,9 @@ impl SourceHistory {
 }
 
 /// The full history store of one storage site's GridFTP server.
-#[derive(Debug)]
+/// `Clone` snapshots the whole store — experiment drivers use that to
+/// roll instrumentation back alongside `Topology::clone_for_probe`.
+#[derive(Debug, Clone)]
 pub struct HistoryStore {
     site: String,
     window: usize,

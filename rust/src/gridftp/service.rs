@@ -82,6 +82,19 @@ impl GridFtp {
         let (duration, bandwidth) = topo.transfer_from(site, bytes);
         topo.end_transfer(site);
         let started_at = topo.now;
+        if !duration.is_finite() {
+            // Dead source (control channel error): nothing moved and
+            // nothing is recorded — an infinite-duration sample would
+            // poison the bandwidth history the GRIS publishes.
+            return TransferOutcome {
+                site: topo.site(site).cfg.name.clone(),
+                bytes: 0.0,
+                duration,
+                bandwidth: 0.0,
+                started_at,
+                offset,
+            };
+        }
         self.record(
             site,
             TransferRecord {
@@ -117,11 +130,42 @@ impl GridFtp {
         client: &str,
         bytes: f64,
     ) -> TransferOutcome {
+        self.store_range(topo, site, client, 0.0, bytes)
+    }
+
+    /// Execute a partial-range write (GridFTP extended block mode):
+    /// push the `bytes` starting at `offset`, the write-direction dual
+    /// of [`Self::fetch_range`]. This is the *direct-execution*
+    /// primitive (one synchronous ranged write, instrumented with the
+    /// true range length and consuming the range's space); the striped
+    /// `store()` of [`crate::coalloc::store`] simulates its concurrent
+    /// pushes through `FlowSet` instead and feeds the same history via
+    /// [`Self::record`]. A dead destination moves nothing, records
+    /// nothing and consumes no space (infinite duration, the caller's
+    /// failure signal).
+    pub fn store_range(
+        &self,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        offset: f64,
+        bytes: f64,
+    ) -> TransferOutcome {
         topo.begin_transfer(site);
         let (duration, bandwidth) = topo.transfer_from(site, bytes);
         topo.end_transfer(site);
-        topo.consume_space(site, bytes);
         let started_at = topo.now;
+        if !duration.is_finite() {
+            return TransferOutcome {
+                site: topo.site(site).cfg.name.clone(),
+                bytes: 0.0,
+                duration,
+                bandwidth: 0.0,
+                started_at,
+                offset,
+            };
+        }
+        topo.consume_space(site, bytes);
         self.histories[site].write().unwrap().record(TransferRecord {
             at: started_at,
             peer: client.to_string(),
@@ -135,7 +179,7 @@ impl GridFtp {
             duration,
             bandwidth,
             started_at,
-            offset: 0.0,
+            offset,
         }
     }
 
@@ -218,6 +262,41 @@ mod tests {
         let h = ftp.history(2);
         assert_eq!(h.read().unwrap().wr.count, 1);
         assert_eq!(h.read().unwrap().rd.count, 0);
+    }
+
+    #[test]
+    fn range_stores_instrument_like_whole_files() {
+        let (mut topo, ftp) = setup();
+        let avail0 = topo.site(1).available_space();
+        let a = ftp.store_range(&mut topo, 1, "client", 0.0, 4e6);
+        let b = ftp.store_range(&mut topo, 1, "client", 4e6, 4e6);
+        assert_eq!(a.offset, 0.0);
+        assert_eq!(b.offset, 4e6);
+        assert!(a.duration > 0.0 && b.duration > 0.0);
+        let h = ftp.history(1);
+        assert_eq!(h.read().unwrap().wr.count, 2);
+        // Both ranges consumed their space.
+        assert!((avail0 - topo.site(1).available_space() - 8e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn dead_site_transfers_record_and_consume_nothing() {
+        use crate::simnet::FaultKind;
+        let (mut topo, ftp) = setup();
+        topo.schedule_fault(1, 0.0, FaultKind::ReplicaDeath);
+        let avail0 = topo.site(1).available_space();
+        let f = ftp.fetch(&mut topo, 1, "client", 5e6);
+        assert!(!f.duration.is_finite());
+        assert_eq!(f.bytes, 0.0);
+        let s = ftp.store_range(&mut topo, 1, "client", 0.0, 5e6);
+        assert!(!s.duration.is_finite());
+        // No history pollution, no phantom space consumption, and the
+        // transfer-slot accounting stayed balanced.
+        let h = ftp.history(1);
+        assert_eq!(h.read().unwrap().rd.count, 0);
+        assert_eq!(h.read().unwrap().wr.count, 0);
+        assert_eq!(topo.site(1).available_space(), avail0);
+        assert_eq!(topo.site(1).active_transfers, 0);
     }
 
     #[test]

@@ -34,10 +34,15 @@
 //!   centralized-manager comparator.
 //! * [`coalloc`] — co-allocated (striped) Access: a stripe planner that
 //!   splits one logical file across the broker's top-K replicas in
-//!   proportion to forecast bandwidth, and a block scheduler with
-//!   work-stealing rebalancing that drives the parallel streams through
-//!   `simnet`'s concurrent-flow engine (the paper's §7 future work /
-//!   Allcock et al. parallel-GridFTP direction).
+//!   proportion to forecast bandwidth (clipped to the client downlink —
+//!   no phantom parallelism), and a block scheduler with work-stealing
+//!   rebalancing that drives the parallel streams through `simnet`'s
+//!   concurrent-flow engine (the paper's §7 future work / Allcock et
+//!   al. parallel-GridFTP direction). Survives churn: sources that die
+//!   or stall mid-transfer fail over to survivors with bounded
+//!   per-block retries and an exactly-once integrity check, and the
+//!   write-direction dual — striped `store()` — creates replicas at
+//!   several destinations in parallel.
 //! * [`util`] — deterministic PRNG, unit parsing (`50G`, `75K/Sec`), JSON,
 //!   micro-benchmark + property-test harnesses (the image has no network,
 //!   so criterion/proptest equivalents are provided in-tree).

@@ -15,9 +15,8 @@
 
 use std::sync::{Arc, Mutex, RwLock};
 
-use globus_replica::broker::{Broker, LocalInfoService, RankPolicy};
+use globus_replica::broker::{parse_request_ad, Broker, LocalInfoService, RankPolicy};
 use globus_replica::catalog::{PhysicalLocation, ReplicaCatalog};
-use globus_replica::classad::parse_classad;
 use globus_replica::config::GridConfig;
 use globus_replica::directory::schema;
 use globus_replica::directory::server::DirectoryServer;
@@ -167,7 +166,9 @@ fn cmd_select(args: &Args) {
     };
     let (catalog, info, _cfg) = demo_grid(n, seed);
     let broker = Broker::new(catalog, info, policy);
-    let request = parse_classad(
+    // The CLI is a broker boundary: request ads go through the
+    // intern-budget gate even though this demo ad is a known literal.
+    let request = parse_request_ad(
         r#"hostname = "comet.xyz.com";
            reqdSpace = 5G;
            reqdRDBandwidth = 50K/Sec;

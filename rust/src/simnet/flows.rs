@@ -38,6 +38,10 @@ pub struct Flow {
     pub started_at: f64,
     /// Completion time, once finished.
     pub finished_at: Option<f64>,
+    /// True once the flow was abandoned via [`FlowSet::cancel`] — it
+    /// will never complete and its delivered bytes are discarded by the
+    /// caller (a cancelled block is re-fetched whole).
+    pub cancelled: bool,
 }
 
 impl Flow {
@@ -83,6 +87,7 @@ impl FlowSet {
             lead: lead.max(0.0),
             started_at: topo.now,
             finished_at: None,
+            cancelled: false,
         });
         self.live_ids.push(self.flows.len() - 1);
         self.flows.len() - 1
@@ -104,6 +109,17 @@ impl FlowSet {
     fn retire(&mut self, flow: usize) {
         if let Some(pos) = self.live_ids.iter().position(|&x| x == flow) {
             self.live_ids.swap_remove(pos);
+        }
+    }
+
+    /// Abandon a live flow: it stops moving bytes, never completes, and
+    /// frees its share of the downlink immediately. The failover path
+    /// uses this when a source dies or stalls mid-block. No-op on a
+    /// flow that already finished.
+    pub fn cancel(&mut self, flow: usize) {
+        if self.flows[flow].finished_at.is_none() {
+            self.flows[flow].cancelled = true;
+            self.retire(flow);
         }
     }
 
@@ -205,6 +221,16 @@ impl FlowSet {
                     step = step.min(f.lead);
                 } else if bw > 0.0 {
                     step = step.min(f.remaining / bw);
+                }
+            }
+            // A scheduled fault is an event too: stop the step at its
+            // trigger instant so a dying/degrading site's flows
+            // re-sample their rate there instead of coasting on
+            // pre-fault bandwidth until the next completion boundary.
+            if let Some(at) = topo.next_fault_after(now) {
+                let until = at - now;
+                if until > 1e-9 {
+                    step = step.min(until);
                 }
             }
             // Move bytes for `step` seconds at the sampled rates.
@@ -380,6 +406,66 @@ mod tests {
         // 4e6 bytes through a 1e6 B/s cap → last completion at t≈4.
         let last = done.iter().map(|c| c.at).fold(0.0, f64::max);
         assert!((last - 4.0).abs() < 1e-6, "last {last}");
+    }
+
+    #[test]
+    fn cancel_frees_downlink_and_never_completes() {
+        let mut topo = flat_topo(3);
+        let mut fs = FlowSet::new(1e6); // cap below the 2e6 aggregate
+        let a = fs.add(&topo, 0, 2e6, 0.0);
+        let b = fs.add(&topo, 1, 1e6, 0.0);
+        // Half a second at 0.5e6 B/s each, then flow A is abandoned.
+        let done = fs.advance(&mut topo, 0.5);
+        assert!(done.is_empty());
+        fs.cancel(a);
+        assert!(fs.flow(a).cancelled);
+        assert_eq!(fs.live(), 1);
+        // The survivor takes the whole cap: 0.75e6 left → done at t=1.25.
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].flow, b);
+        assert!((done[0].at - 1.25).abs() < 1e-6, "at {}", done[0].at);
+        assert!(fs.flow(a).finished_at.is_none());
+        // Cancelling a finished flow is a no-op.
+        fs.cancel(b);
+        assert!(!fs.flow(b).cancelled);
+    }
+
+    #[test]
+    fn death_mid_step_stops_bytes_at_the_fault_instant() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        // Alive, the 1e6-byte flow would finish at t=1; the site dies
+        // at t=0.5, so exactly half the bytes may move.
+        topo.schedule_fault(0, 0.5, FaultKind::ReplicaDeath);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let f = fs.add(&topo, 0, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        assert!(done.is_empty(), "dead site must not complete the flow");
+        assert!(
+            (fs.flow(f).delivered - 0.5e6).abs() < 1.0,
+            "delivered {} past the death instant",
+            fs.flow(f).delivered
+        );
+        assert!((topo.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dead_site_flows_stall_without_blocking_time() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        topo.schedule_fault(0, 0.0, FaultKind::ReplicaDeath);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let dead = fs.add(&topo, 0, 1e6, 0.0);
+        fs.add(&topo, 1, 1e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        // The healthy flow completes; the dead one stalls but time
+        // still advances past it.
+        assert_eq!(done.len(), 1);
+        assert!((done[0].at - 1.0).abs() < 1e-6);
+        assert!((topo.now - 10.0).abs() < 1e-9);
+        assert!(fs.flow(dead).finished_at.is_none());
+        assert_eq!(fs.flow(dead).delivered, 0.0);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! * rare heavy-tailed congestion episodes (what robust predictors must
 //!   survive), and
 //! * a utilization-dependent share (concurrent transfers divide the
-//!   pipe).
+//!   pipe), and
+//! * scheduled **faults** ([`Topology::schedule_fault`]): replica death
+//!   and link degradation at configurable times — the churn the
+//!   co-allocation failover path ([`crate::coalloc`]) exists to absorb.
 //!
 //! Simulated time is explicit (`f64` seconds) so experiments are fully
 //! deterministic given a seed.
@@ -26,5 +29,5 @@ pub mod workload;
 
 pub use flows::{Completion, Flow, FlowSet};
 pub use link::Link;
-pub use topology::{Site, Topology};
+pub use topology::{Fault, FaultKind, Site, Topology};
 pub use workload::{Request, Workload, WorkloadSpec};

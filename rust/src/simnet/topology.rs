@@ -31,12 +31,35 @@ impl Site {
     }
 }
 
+/// What happens to a site at a fault's trigger time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica server vanishes: transfers from it stall, and the
+    /// control channel reports it dead ([`Topology::site_alive`]).
+    ReplicaDeath,
+    /// The site's WAN link degrades to `factor` (in (0,1]) of its
+    /// modeled bandwidth — the EU-DataGrid "replica still there but
+    /// crawling" failure mode.
+    LinkDegrade { factor: f64 },
+}
+
+/// A scheduled fault: `kind` strikes `site` at simulated time `at` and
+/// persists until [`Topology::clear_faults`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    pub site: usize,
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
 /// The whole simulated grid: sites + per-site client-facing links.
 #[derive(Clone)]
 pub struct Topology {
     sites: Vec<Site>,
     links: Vec<Link>,
     by_name: BTreeMap<String, usize>,
+    /// Scheduled faults (unordered; each is checked against `now`).
+    faults: Vec<Fault>,
     /// Simulated wall clock (seconds).
     pub now: f64,
 }
@@ -57,7 +80,54 @@ impl Topology {
                 active_transfers: 0,
             });
         }
-        Topology { sites, links, by_name, now: 0.0 }
+        Topology { sites, links, by_name, faults: Vec::new(), now: 0.0 }
+    }
+
+    /// Schedule `kind` to strike `site` at simulated time `at`. Faults
+    /// persist (a dead replica stays dead) until [`Self::clear_faults`].
+    pub fn schedule_fault(&mut self, site: usize, at: f64, kind: FaultKind) {
+        debug_assert!(site < self.sites.len());
+        self.faults.push(Fault { site, at, kind });
+    }
+
+    /// Drop every scheduled fault (scenario reset between requests).
+    pub fn clear_faults(&mut self) {
+        self.faults.clear();
+    }
+
+    /// Whether `site`'s replica server is reachable right now — false
+    /// once a [`FaultKind::ReplicaDeath`] fault has triggered. This is
+    /// the control-channel view a GridFTP client gets; data flows from
+    /// a dead site deliver nothing (see [`Self::current_bandwidth`]).
+    pub fn site_alive(&self, site: usize) -> bool {
+        !self.faults.iter().any(|f| {
+            f.site == site && f.at <= self.now && f.kind == FaultKind::ReplicaDeath
+        })
+    }
+
+    /// Earliest scheduled fault trigger strictly after `t`, if any.
+    /// [`crate::simnet::FlowSet`] splits its integration steps there so
+    /// flow rates re-sample at the exact instant a fault lands instead
+    /// of coasting on pre-fault bandwidth to the next event boundary.
+    pub fn next_fault_after(&self, t: f64) -> Option<f64> {
+        self.faults
+            .iter()
+            .map(|f| f.at)
+            .filter(|&at| at > t)
+            .fold(None, |m, at| Some(m.map_or(at, |x: f64| x.min(at))))
+    }
+
+    /// Product of the active [`FaultKind::LinkDegrade`] factors on
+    /// `site` (1.0 when none have triggered).
+    pub fn degrade_factor(&self, site: usize) -> f64 {
+        self.faults
+            .iter()
+            .filter(|f| f.site == site && f.at <= self.now)
+            .map(|f| match f.kind {
+                FaultKind::LinkDegrade { factor } => factor.clamp(0.0, 1.0),
+                FaultKind::ReplicaDeath => 1.0,
+            })
+            .product()
     }
 
     pub fn len(&self) -> usize {
@@ -94,10 +164,14 @@ impl Topology {
     }
 
     /// Sample the instantaneous bandwidth a new transfer from `site`
-    /// would get right now.
+    /// would get right now. 0 for a dead site (its flows stall);
+    /// scaled down while a link-degradation fault is active.
     pub fn current_bandwidth(&mut self, site: usize) -> f64 {
+        if !self.site_alive(site) {
+            return 0.0;
+        }
         let concurrent = self.sites[site].active_transfers;
-        self.links[site].bandwidth_at(self.now, concurrent)
+        self.links[site].bandwidth_at(self.now, concurrent) * self.degrade_factor(site)
     }
 
     /// Simulate one read transfer of `bytes` from `site` starting now;
@@ -106,10 +180,23 @@ impl Topology {
     /// for the duration with respect to *itself* only (the caller
     /// advances time between transfers as its workload dictates).
     pub fn transfer_from(&mut self, site: usize, bytes: f64) -> (f64, f64) {
+        if !self.site_alive(site) {
+            // Dead replica: the fetch never completes.
+            return (f64::INFINITY, 0.0);
+        }
         let concurrent = self.sites[site].active_transfers;
         let disk = self.sites[site].cfg.drd_time_ms / 1e3
             + bytes / self.sites[site].cfg.disk_rate;
-        let wan = self.links[site].transfer_duration(self.now, bytes, concurrent);
+        let mut wan = self.links[site].transfer_duration(self.now, bytes, concurrent);
+        // An active link degradation stretches the byte-moving part of
+        // the WAN stage (approximation: the factor is treated as
+        // constant over the transfer, exact when the fault triggered
+        // before the transfer started).
+        let degrade = self.degrade_factor(site);
+        if degrade < 1.0 {
+            let latency = self.links[site].latency;
+            wan = latency + (wan - latency).max(0.0) / degrade.max(1e-9);
+        }
         // Disk and WAN pipeline; the slower stage dominates.
         let duration = disk.max(wan);
         let mean_bw = bytes / duration;
@@ -193,6 +280,44 @@ mod tests {
         // Saturates at capacity.
         t.consume_space(2, 1e18);
         assert_eq!(t.site(2).available_space(), 0.0);
+    }
+
+    #[test]
+    fn replica_death_triggers_at_scheduled_time() {
+        let mut t = topo();
+        t.schedule_fault(2, 100.0, FaultKind::ReplicaDeath);
+        assert!(t.site_alive(2));
+        assert!(t.current_bandwidth(2) > 0.0);
+        t.advance(100.0);
+        assert!(!t.site_alive(2));
+        assert_eq!(t.current_bandwidth(2), 0.0);
+        let (d, bw) = t.transfer_from(2, 1e6);
+        assert!(d.is_infinite());
+        assert_eq!(bw, 0.0);
+        // Other sites are unaffected.
+        assert!(t.site_alive(1));
+        assert!(t.current_bandwidth(1) > 0.0);
+        t.clear_faults();
+        assert!(t.site_alive(2));
+    }
+
+    #[test]
+    fn link_degradation_scales_bandwidth() {
+        let mut a = topo();
+        let mut b = topo();
+        b.schedule_fault(0, 0.0, FaultKind::LinkDegrade { factor: 0.25 });
+        assert_eq!(b.degrade_factor(0), 0.25);
+        let healthy = a.current_bandwidth(0);
+        let degraded = b.current_bandwidth(0);
+        assert!((degraded - healthy * 0.25).abs() < 1e-6);
+        // Degraded transfers take longer than healthy ones.
+        let (dh, _) = a.transfer_from(0, 20e6);
+        let (dd, _) = b.transfer_from(0, 20e6);
+        assert!(dd > dh, "degraded {dd} !> healthy {dh}");
+        // A not-yet-triggered fault changes nothing.
+        let mut c = topo();
+        c.schedule_fault(0, 1e9, FaultKind::LinkDegrade { factor: 0.25 });
+        assert_eq!(c.degrade_factor(0), 1.0);
     }
 
     #[test]

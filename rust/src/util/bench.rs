@@ -31,6 +31,20 @@ impl Stats {
             self.items_per_iter * 1e9 / self.mean_ns
         }
     }
+
+    /// The case's headline numbers as JSON — the shared shape every
+    /// `BENCH_*.json` artifact uses (`scripts/bench.sh`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("ns_per_op".to_string(), Json::Num(self.mean_ns));
+        o.insert("p50_ns".to_string(), Json::Num(self.p50_ns));
+        o.insert("p99_ns".to_string(), Json::Num(self.p99_ns));
+        o.insert("items_per_iter".to_string(), Json::Num(self.items_per_iter));
+        o.insert("ops_per_sec".to_string(), Json::Num(self.throughput()));
+        Json::Obj(o)
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {

@@ -2,17 +2,19 @@
 # Perf-trajectory recorder (ROADMAP perf log).
 #
 #   scripts/bench.sh              full run; writes BENCH_matchmaking.json
+#                                 and BENCH_coalloc.json
 #   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
 #
-# Runs the three selection-path benches (matchmaking core, broker phase
-# breakdown, directory/GRIS) and records the matchmaking headline
-# numbers — ns/op, ops/sec, and the compiled-vs-per-pair speedup at
-# 1,000 candidates — as JSON, so the perf trajectory across PRs is
-# finally written down instead of scrolling away in bench output.
+# Runs the selection-path benches (matchmaking core, broker phase
+# breakdown, directory/GRIS) plus the co-allocation bench (failover
+# path + churn scenario) and records the headline numbers as JSON, so
+# the perf trajectory across PRs is written down instead of scrolling
+# away in bench output.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 out="${BENCH_JSON:-BENCH_matchmaking.json}"
+coalloc_out="${BENCH_COALLOC_JSON:-BENCH_coalloc.json}"
 
 echo "== bench: matchmaking (JSON -> ${out}) =="
 BENCH_JSON="${out}" cargo bench --bench bench_matchmaking
@@ -23,7 +25,13 @@ cargo bench --bench bench_broker
 echo "== bench: directory =="
 cargo bench --bench bench_directory
 
+echo "== bench: coalloc (JSON -> ${coalloc_out}) =="
+BENCH_JSON="${coalloc_out}" cargo bench --bench bench_coalloc
+
 echo
 echo "recorded ${out}:"
 cat "${out}"
+echo
+echo "recorded ${coalloc_out}:"
+cat "${coalloc_out}"
 echo

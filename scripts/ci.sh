@@ -1,10 +1,36 @@
 #!/usr/bin/env bash
 # Tier-1 verification + hygiene, as specified in ROADMAP.md.
 #
-#   scripts/ci.sh           full run
+#   scripts/ci.sh                  full run
+#   CI_REQUIRE_TOOLCHAIN=1         fail (exit 2) instead of skipping when
+#                                  cargo is absent (what .github/workflows
+#                                  sets so CI never silently no-ops)
 #   BENCH_QUICK=1 also shortens the in-tree bench harness if benches run.
+#
+# Gates, in order: release build, tests, rustfmt --check, clippy with
+# -D warnings. The format/lint gates skip with a loud notice when the
+# component is not installed (minimal rustup profiles); the whole run
+# skips — loudly, as "desk-check mode" — when there is no Rust
+# toolchain at all, which is the documented state of several build
+# containers (see ROADMAP "Seed-test triage").
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "!!=========================================================!!"
+    echo "!! NO TOOLCHAIN — desk-check mode                          !!"
+    echo "!! cargo/rustc are not on PATH in this container: tier-1   !!"
+    echo "!! build, tests, rustfmt and clippy were NOT executed.     !!"
+    echo "!! Nothing has been verified. Run this script again from a !!"
+    echo "!! toolchain-equipped environment (CI does).               !!"
+    echo "!!=========================================================!!"
+    if [ "${CI_REQUIRE_TOOLCHAIN:-0}" != "0" ]; then
+        echo "CI FAILED: CI_REQUIRE_TOOLCHAIN is set and no toolchain found"
+        exit 2
+    fi
+    echo "CI SKIPPED (desk-check mode)"
+    exit 0
+fi
 
 echo "== tier-1: build =="
 cargo build --release
@@ -17,6 +43,13 @@ if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
 else
     echo "rustfmt unavailable in this image; skipping format check"
+fi
+
+echo "== hygiene: clippy =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "!! clippy unavailable in this image; LINT GATE SKIPPED !!"
 fi
 
 echo "CI OK"
