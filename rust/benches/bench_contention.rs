@@ -1,0 +1,117 @@
+//! Load-sweep bench for the open-loop runtime (ISSUE 4): arrival rate
+//! from idle to saturation, informed (Forecast) vs uninformed (Random)
+//! selection on identical traces — the Figure-style result the serial
+//! replay could never produce.
+//!
+//! With `BENCH_JSON=<path>` set, every sweep point's headline numbers
+//! (mean/p95 time, makespan, overlap counters, informed-vs-uninformed
+//! gap) are written as JSON — `scripts/bench.sh` uses this to record
+//! `BENCH_contention.json` next to the other perf artifacts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::{run_contention, ContentionPoint, OpenLoopOptions, OpenReport};
+use globus_replica::simnet::WorkloadSpec;
+use globus_replica::util::bench::report_metric;
+use globus_replica::util::json::Json;
+
+fn side_json(r: &OpenReport) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("requests".to_string(), Json::Num(r.quality.requests as f64));
+    o.insert("mean_time_s".to_string(), Json::Num(r.quality.mean_time));
+    o.insert("p95_time_s".to_string(), Json::Num(r.quality.p95_time));
+    o.insert(
+        "mean_bandwidth".to_string(),
+        Json::Num(r.quality.mean_bandwidth),
+    );
+    o.insert("pct_optimal".to_string(), Json::Num(r.quality.pct_optimal));
+    o.insert("makespan_s".to_string(), Json::Num(r.makespan));
+    o.insert(
+        "peak_in_flight".to_string(),
+        Json::Num(r.peak_in_flight as f64),
+    );
+    o.insert(
+        "overlapped_admissions".to_string(),
+        Json::Num(r.overlapped_admissions as f64),
+    );
+    Json::Obj(o)
+}
+
+fn point_json(p: &ContentionPoint) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "mean_interarrival_s".to_string(),
+        Json::Num(p.mean_interarrival),
+    );
+    o.insert("informed".to_string(), side_json(&p.informed));
+    o.insert("uninformed".to_string(), side_json(&p.uninformed));
+    o.insert("gap_uninformed_over_informed".to_string(), Json::Num(p.gap));
+    Json::Obj(o)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = GridConfig::generate(12, 777);
+    let spec = WorkloadSpec { files: 16, ..Default::default() };
+    let n_requests = if quick { 12 } else { 40 };
+    // Mean inter-arrival sweep: idle → busy → saturated (≥ 3 points,
+    // per the ISSUE-4 acceptance criteria).
+    let rates: &[f64] = &[240.0, 60.0, 15.0];
+    let opts = OpenLoopOptions::open();
+
+    println!("== contention: open-loop load sweep (12 sites, {n_requests} requests/point) ==");
+    let t0 = Instant::now();
+    let sweep = run_contention(&cfg, &spec, n_requests, 4, 6, rates, &opts);
+    let wall = t0.elapsed();
+
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>7}",
+        "interarrival", "inf mean", "inf p95", "uninf mean", "makespan", "peak", "overlap", "gap"
+    );
+    for p in &sweep.points {
+        println!(
+            "{:<14} {:>9.1}s {:>9.1}s {:>9.1}s {:>9.1}s {:>8} {:>8} {:>6.2}x",
+            format!("{}s", p.mean_interarrival),
+            p.informed.quality.mean_time,
+            p.informed.quality.p95_time,
+            p.uninformed.quality.mean_time,
+            p.informed.makespan,
+            p.informed.peak_in_flight,
+            p.informed.overlapped_admissions,
+            p.gap
+        );
+    }
+    report_metric("sweep wall time", wall.as_secs_f64(), "s");
+    if let Some(busiest) = sweep.points.last() {
+        report_metric(
+            "informed-vs-uninformed gap at saturation",
+            busiest.gap,
+            "x",
+        );
+        report_metric(
+            "peak transfers in flight at saturation",
+            busiest.informed.peak_in_flight as f64,
+            "",
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("contention".to_string()));
+        root.insert(
+            "requests_per_point".to_string(),
+            Json::Num(n_requests as f64),
+        );
+        root.insert(
+            "points".to_string(),
+            Json::Arr(sweep.points.iter().map(point_json).collect()),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

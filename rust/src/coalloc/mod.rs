@@ -12,11 +12,16 @@
 //!   per-source bandwidth predictions (from [`crate::forecast`]) into a
 //!   contiguous byte-range assignment proportional to predicted
 //!   throughput.
-//! * [`scheduler`] — splits the file into fixed-size blocks, drives one
-//!   stream per replica through [`crate::simnet::FlowSet`] (concurrent
-//!   flows sharing link and downlink capacity), and work-steals blocks
-//!   from lagging streams so a slowing source sheds load to faster
-//!   peers. Every block is instrumented into the source site's
+//! * [`scheduler`] — splits the file into fixed-size blocks and drives
+//!   one stream per replica as an event-driven
+//!   [`scheduler::CoallocSession`] on the `simnet` kernel: the
+//!   streams' blocks are flows in a [`crate::simnet::FlowSet`]
+//!   (concurrent flows sharing link and per-client downlink capacity),
+//!   and the session work-steals blocks from lagging streams so a
+//!   slowing source sheds load to faster peers — including sources
+//!   slowed by *other* clients' traffic when several sessions share
+//!   one grid-wide kernel (the open-loop runtime). Every block is
+//!   instrumented into the source site's
 //!   [`crate::gridftp::HistoryStore`] — the co-allocated Access phase
 //!   feeds the same selection history as single-source fetches. The
 //!   scheduler also survives *churn*: a source that dies or stalls
@@ -40,5 +45,5 @@ pub mod scheduler;
 pub mod store;
 
 pub use planner::{plan_stripes, StripeAssignment, StripePlan, StripeSource};
-pub use scheduler::{execute, CoallocOutcome, StreamReport};
+pub use scheduler::{execute, CoallocOutcome, CoallocSession, StreamReport};
 pub use store::{execute_store, StoreOutcome, StoreStreamReport, StoreTarget};

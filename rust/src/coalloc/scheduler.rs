@@ -1,14 +1,26 @@
 //! The chunk scheduler: executes a [`StripePlan`] over the simulated
-//! grid as one co-allocated transfer.
+//! grid as one co-allocated transfer — expressed, since ISSUE 4, as an
+//! event-driven **session** on the `simnet` kernel rather than a
+//! private lockstep loop.
 //!
 //! Each assignment becomes a *stream* pinned to one replica site. A
 //! stream pulls blocks from its own queue; the streams' current blocks
-//! advance together through [`simnet::FlowSet`], so same-site streams
-//! split that link and all streams share the client downlink. When a
-//! stream drains its queue it *steals* the tail half of the largest
-//! backlog among its peers (policy `rebalance_threshold` gates the
-//! steal) — a slowing source sheds blocks to faster ones without any
-//! central re-planning.
+//! are flows in a [`simnet::FlowSet`] — the session's own set when run
+//! through [`execute`], or a *shared, grid-wide* set when driven by an
+//! [`crate::simnet::Engine`] the session coexists on with other
+//! sessions and single-best fetches (each session gets its own
+//! downlink group, so clients cap independently while still contending
+//! on site links). The driver forwards the kernel's
+//! [`crate::simnet::Signal::FlowDone`] events to
+//! [`CoallocSession::on_flow_done`] and fires
+//! [`CoallocSession::step`] at `CoallocPolicy::tick` maintenance
+//! timers; the session reacts by re-dispatching freed streams at the
+//! exact completion instants. When a stream drains its queue it
+//! *steals* the tail half of the largest backlog among its peers
+//! (policy `rebalance_threshold` gates the steal) — a slowing source
+//! sheds blocks to faster ones without any central re-planning, and
+//! because the rates it observes include *external* contention, the
+//! same mechanism rebalances away from sites loaded by other clients.
 //!
 //! **Failover state machine.** A stream is `running → finished` in the
 //! steady state. When its source *dies* (control channel down,
@@ -31,14 +43,14 @@
 //! traffic feeds the selection history exactly like single-source
 //! fetches do (paper §3.2).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{bail, Result};
 
 use crate::config::CoallocPolicy;
 use crate::gridftp::history::{Direction, TransferRecord};
 use crate::gridftp::GridFtp;
-use crate::simnet::{FlowSet, Topology};
+use crate::simnet::{Completion, Engine, FlowSet, Signal, Topology};
 
 use super::planner::StripePlan;
 
@@ -150,223 +162,366 @@ fn release_active(streams: &[Stream], topo: &mut Topology) {
     }
 }
 
-/// Failover detection (see the module docs' state machine): fail every
-/// running stream whose source died or whose in-flight block timed
-/// out. The in-flight block is cancelled, charged one retry and pushed
-/// back; the stream's slot is released; retired survivors are revived
-/// to adopt the orphans. Errors when failover is disabled, a block
-/// exhausts its retry budget, or no live source remains.
-#[allow(clippy::too_many_arguments)]
-fn detect_failures(
-    streams: &mut [Stream],
-    topo: &mut Topology,
-    flows: &mut FlowSet,
-    retries: &mut [usize],
-    policy: &CoallocPolicy,
-    failovers: &mut usize,
-    blocks_requeued: &mut usize,
-) -> Result<()> {
-    for i in 0..streams.len() {
-        if streams[i].finished || streams[i].failed {
-            continue;
+/// One co-allocated transfer as an event-driven state machine on the
+/// `simnet` kernel. The session owns its streams, ledger and counters;
+/// the flows live in a caller-provided [`FlowSet`] (the session's own
+/// downlink `group` within it), so several sessions — and unrelated
+/// single-best fetches — coexist on one grid-wide set. Drive it by
+/// forwarding [`Signal::FlowDone`] events to
+/// [`CoallocSession::on_flow_done`] and firing
+/// [`CoallocSession::step`] at `CoallocPolicy::tick` maintenance
+/// timers; collect the result with [`CoallocSession::outcome`] once
+/// [`CoallocSession::is_done`]. [`execute`] wraps all of that for the
+/// one-transfer-alone case.
+pub struct CoallocSession {
+    streams: Vec<Stream>,
+    plan: StripePlan,
+    policy: CoallocPolicy,
+    client: String,
+    /// Downlink group this session's flows occupy in the shared set.
+    group: usize,
+    /// Live flow id → stream index (ids are global to the shared set).
+    flow_to_stream: BTreeMap<usize, usize>,
+    /// block id → the stream originally assigned it by the planner, so
+    /// a delivery counts as "stolen" exactly when someone else's block
+    /// lands (even after multi-hop or steal-back churn).
+    planned_owner: Vec<usize>,
+    /// Exactly-once delivery ledger + per-block failover retry counts.
+    delivered: Vec<bool>,
+    retries: Vec<usize>,
+    failovers: usize,
+    blocks_requeued: usize,
+    steals: usize,
+    started_at: f64,
+    finish_at: f64,
+    min_steal: usize,
+    /// Terminal error (sticky); `outcome` surfaces it.
+    err: Option<anyhow::Error>,
+    done: bool,
+}
+
+impl CoallocSession {
+    /// Start `plan` as a session: resolve sites, register every stream
+    /// as an in-flight transfer (so GRIS `load` and link sharing see
+    /// the co-allocated session, mirroring what `GridFtp::fetch` does
+    /// for a single stream), and dispatch the opening blocks into
+    /// `flows` under downlink `group`. An empty plan starts already
+    /// done with an empty outcome.
+    pub fn start(
+        flows: &mut FlowSet,
+        topo: &mut Topology,
+        plan: &StripePlan,
+        policy: &CoallocPolicy,
+        client: &str,
+        group: usize,
+    ) -> Result<CoallocSession> {
+        let mut streams: Vec<Stream> = Vec::with_capacity(plan.assignments.len());
+        for a in &plan.assignments {
+            let site = match topo.index_of(&a.source.site) {
+                Some(i) => i,
+                None => bail!("coalloc plan names unknown site {:?}", a.source.site),
+            };
+            streams.push(Stream {
+                site,
+                site_name: a.source.site.clone(),
+                queue: (a.first_block..a.first_block + a.blocks).collect(),
+                current: None,
+                blocks_done: 0,
+                stolen_done: 0,
+                bytes_done: 0.0,
+                busy_time: 0.0,
+                est_bw: a.source.predicted_bw.max(0.0),
+                finished: false,
+                failed: false,
+                failures: 0,
+            });
         }
-        let dead = !topo.site_alive(streams[i].site);
-        let stalled = matches!(
-            streams[i].current,
-            Some((_, _, at)) if topo.now - at > policy.block_timeout
-        );
-        if !dead && !stalled {
-            continue;
+        for s in &streams {
+            topo.begin_transfer(s.site);
         }
-        let reason = if dead { "died" } else { "stalled" };
-        let (site_name, orphans, over_budget) = {
-            let s = &mut streams[i];
-            s.failed = true;
-            *failovers += 1;
-            let mut orphans = s.queue.len();
-            let mut over_budget = None;
-            if let Some((block, fid, _)) = s.current.take() {
-                flows.cancel(fid);
-                s.failures += 1;
-                retries[block] += 1;
-                orphans += 1;
-                s.queue.push_front(block);
-                if retries[block] > policy.max_block_retries {
-                    over_budget = Some(block);
-                }
+        let mut planned_owner: Vec<usize> = vec![0; plan.n_blocks];
+        for (s, a) in plan.assignments.iter().enumerate() {
+            for b in a.first_block..a.first_block + a.blocks {
+                planned_owner[b] = s;
             }
-            topo.end_transfer(s.site);
-            *blocks_requeued += orphans;
-            (s.site_name.clone(), orphans, over_budget)
+        }
+        let mut session = CoallocSession {
+            streams,
+            plan: plan.clone(),
+            policy: policy.clone(),
+            client: client.to_string(),
+            group,
+            flow_to_stream: BTreeMap::new(),
+            planned_owner,
+            delivered: vec![false; plan.n_blocks],
+            retries: vec![0; plan.n_blocks],
+            failovers: 0,
+            blocks_requeued: 0,
+            steals: 0,
+            started_at: topo.now,
+            finish_at: topo.now,
+            min_steal: policy.rebalance_threshold.max(1.0).ceil() as usize,
+            err: None,
+            done: false,
         };
-        if policy.max_block_retries == 0 && orphans > 0 {
-            // Paper-era behaviour: losing a source with work pending
-            // kills the whole transfer.
-            bail!(
-                "source {site_name} {reason} mid-transfer and failover is \
-                 disabled (max_block_retries = 0)"
-            );
+        // The opening maintenance pass: failover check (a fault may
+        // already be active) + initial block dispatch.
+        session.step(flows, topo);
+        Ok(session)
+    }
+
+    /// The session's maintenance tick period (simulated seconds) — the
+    /// cadence drivers should fire [`Self::step`] at.
+    pub fn tick_period(&self) -> f64 {
+        self.policy.tick.max(1e-3)
+    }
+
+    /// Whether the session reached a terminal state (success or error).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// One maintenance pass: detect dead/stalled sources and orphan
+    /// their work, then hand every idle stream its next block (own
+    /// queue first, then steal). Safe to call at any instant — it is
+    /// idempotent at a fixed state — and a no-op once done.
+    pub fn step(&mut self, flows: &mut FlowSet, topo: &mut Topology) {
+        if self.done {
+            return;
         }
-        if let Some(block) = over_budget {
-            bail!(
-                "block {block} exceeded its retry budget \
-                 ({} re-queues) after source {site_name} {reason}",
-                policy.max_block_retries
-            );
+        if let Err(e) = self.detect_failures(flows, topo) {
+            self.abort(flows, topo, e);
+            return;
         }
-        if orphans > 0 {
-            // Revive retired survivors: orphaned blocks must always
-            // find a live stream to adopt them.
-            for j in 0..streams.len() {
-                if streams[j].finished && topo.site_alive(streams[j].site) {
-                    streams[j].finished = false;
-                    topo.begin_transfer(streams[j].site);
-                }
+        self.assign_idle(flows, topo);
+        if self.streams.iter().all(|s| s.finished || s.failed) {
+            self.done = true;
+        }
+    }
+
+    /// React to a flow completion from the kernel. Returns `false`
+    /// (and changes nothing) when the flow is not this session's — the
+    /// dispatch test for drivers multiplexing several sessions on one
+    /// shared set. Otherwise records the block into the history store,
+    /// folds the observed throughput into the stream's bandwidth
+    /// estimate, and immediately re-dispatches (steals included) so
+    /// throughput is not quantized to the maintenance tick.
+    pub fn on_flow_done(
+        &mut self,
+        flows: &mut FlowSet,
+        topo: &mut Topology,
+        ftp: &GridFtp,
+        c: &Completion,
+    ) -> bool {
+        let owner = match self.flow_to_stream.remove(&c.flow) {
+            Some(o) => o,
+            None => return false,
+        };
+        if self.done {
+            return true;
+        }
+        if let Err(e) = self.record_completion(ftp, owner, c) {
+            self.abort(flows, topo, e);
+            return true;
+        }
+        self.step(flows, topo);
+        true
+    }
+
+    /// Failover detection (see the module docs' state machine): fail
+    /// every running stream whose source died or whose in-flight block
+    /// timed out. The in-flight block is cancelled, charged one retry
+    /// and pushed back; the stream's slot is released; retired
+    /// survivors are revived to adopt the orphans. Errors when
+    /// failover is disabled, a block exhausts its retry budget, or no
+    /// live source remains.
+    fn detect_failures(&mut self, flows: &mut FlowSet, topo: &mut Topology) -> Result<()> {
+        for i in 0..self.streams.len() {
+            if self.streams[i].finished || self.streams[i].failed {
+                continue;
             }
-            if !streams.iter().any(|s| s.active()) {
+            let dead = !topo.site_alive(self.streams[i].site);
+            let stalled = matches!(
+                self.streams[i].current,
+                Some((_, _, at)) if topo.now - at > self.policy.block_timeout
+            );
+            if !dead && !stalled {
+                continue;
+            }
+            let reason = if dead { "died" } else { "stalled" };
+            let (site_name, orphans, over_budget) = {
+                let s = &mut self.streams[i];
+                s.failed = true;
+                self.failovers += 1;
+                let mut orphans = s.queue.len();
+                let mut over_budget = None;
+                if let Some((block, fid, _)) = s.current.take() {
+                    flows.cancel(fid);
+                    self.flow_to_stream.remove(&fid);
+                    s.failures += 1;
+                    self.retries[block] += 1;
+                    orphans += 1;
+                    s.queue.push_front(block);
+                    if self.retries[block] > self.policy.max_block_retries {
+                        over_budget = Some(block);
+                    }
+                }
+                topo.end_transfer(s.site);
+                self.blocks_requeued += orphans;
+                (s.site_name.clone(), orphans, over_budget)
+            };
+            if self.policy.max_block_retries == 0 && orphans > 0 {
+                // Paper-era behaviour: losing a source with work
+                // pending kills the whole transfer.
                 bail!(
-                    "source {site_name} {reason} and no live source remains \
-                     to adopt its {orphans} blocks"
+                    "source {site_name} {reason} mid-transfer and failover is \
+                     disabled (max_block_retries = 0)"
                 );
             }
-        }
-    }
-    Ok(())
-}
-
-/// Hand every idle stream its next block: own queue first, then a
-/// rate-gated steal of the tail half of the largest peer backlog (the
-/// stream must clear one block before the victim could drain its own
-/// backlog, judging by predicted-then-observed rates; unknown rates on
-/// either side permit the steal). *Failed* peers are always valid
-/// victims regardless of backlog size or rates — their queues are
-/// orphans that must move. A stream with nothing to run and no
-/// stealable peer backlog retires and releases its transfer slot; a
-/// gate-blocked stream stays idle and re-evaluates as estimates update.
-fn assign_idle(
-    streams: &mut [Stream],
-    topo: &mut Topology,
-    flows: &mut FlowSet,
-    flow_owner: &mut Vec<usize>,
-    steals: &mut usize,
-    plan: &StripePlan,
-    min_steal: usize,
-) {
-    for i in 0..streams.len() {
-        if streams[i].current.is_some() || streams[i].finished || streams[i].failed {
-            continue;
-        }
-        let block = match streams[i].queue.pop_front() {
-            Some(b) => Some(b),
-            None => {
-                let est_i = streams[i].est_bw;
-                let victim = (0..streams.len())
-                    .filter(|&j| {
-                        if j == i {
-                            return false;
-                        }
-                        if streams[j].failed {
-                            return !streams[j].queue.is_empty();
-                        }
-                        if streams[j].queue.len() < min_steal {
-                            return false;
-                        }
-                        let est_v = streams[j].est_bw;
-                        est_i <= 0.0
-                            || est_v <= 0.0
-                            || est_v < streams[j].queue.len() as f64 * est_i
-                    })
-                    .max_by_key(|&j| streams[j].queue.len());
-                match victim {
-                    Some(v) => {
-                        let take = (streams[v].queue.len() + 1) / 2;
-                        let mut grabbed: Vec<usize> = (0..take)
-                            .filter_map(|_| streams[v].queue.pop_back())
-                            .collect();
-                        grabbed.reverse(); // keep ascending offsets
-                        *steals += 1;
-                        let mut it = grabbed.into_iter();
-                        let first = it.next();
-                        for b in it {
-                            streams[i].queue.push_back(b);
-                        }
-                        first
-                    }
-                    None => {
-                        let any_backlog = (0..streams.len()).any(|j| {
-                            j != i
-                                && if streams[j].failed {
-                                    !streams[j].queue.is_empty()
-                                } else {
-                                    streams[j].queue.len() >= min_steal
-                                }
-                        });
-                        if !any_backlog {
-                            streams[i].finished = true;
-                            topo.end_transfer(streams[i].site);
-                        }
-                        None
+            if let Some(block) = over_budget {
+                bail!(
+                    "block {block} exceeded its retry budget \
+                     ({} re-queues) after source {site_name} {reason}",
+                    self.policy.max_block_retries
+                );
+            }
+            if orphans > 0 {
+                // Revive retired survivors: orphaned blocks must
+                // always find a live stream to adopt them.
+                for j in 0..self.streams.len() {
+                    if self.streams[j].finished && topo.site_alive(self.streams[j].site) {
+                        self.streams[j].finished = false;
+                        topo.begin_transfer(self.streams[j].site);
                     }
                 }
+                if !self.streams.iter().any(|s| s.active()) {
+                    bail!(
+                        "source {site_name} {reason} and no live source remains \
+                         to adopt its {orphans} blocks"
+                    );
+                }
             }
-        };
-        if let Some(b) = block {
-            let (_, len) = plan.block_range(b);
-            // Per-block setup: connection latency + the disk seek
-            // (`drdTime`) every ranged read pays; the streaming disk
-            // rate itself caps the flow in `FlowSet`.
-            let lead = {
-                let sc = &topo.site(streams[i].site).cfg;
-                sc.latency + sc.drd_time_ms / 1e3
+        }
+        Ok(())
+    }
+
+    /// Hand every idle stream its next block: own queue first, then a
+    /// rate-gated steal of the tail half of the largest peer backlog
+    /// (the stream must clear one block before the victim could drain
+    /// its own backlog, judging by predicted-then-observed rates;
+    /// unknown rates on either side permit the steal). *Failed* peers
+    /// are always valid victims regardless of backlog size or rates —
+    /// their queues are orphans that must move. A stream with nothing
+    /// to run and no stealable peer backlog retires and releases its
+    /// transfer slot; a gate-blocked stream stays idle and
+    /// re-evaluates as estimates update.
+    fn assign_idle(&mut self, flows: &mut FlowSet, topo: &mut Topology) {
+        for i in 0..self.streams.len() {
+            if self.streams[i].current.is_some()
+                || self.streams[i].finished
+                || self.streams[i].failed
+            {
+                continue;
+            }
+            let block = match self.streams[i].queue.pop_front() {
+                Some(b) => Some(b),
+                None => {
+                    let est_i = self.streams[i].est_bw;
+                    let victim = (0..self.streams.len())
+                        .filter(|&j| {
+                            if j == i {
+                                return false;
+                            }
+                            if self.streams[j].failed {
+                                return !self.streams[j].queue.is_empty();
+                            }
+                            if self.streams[j].queue.len() < self.min_steal {
+                                return false;
+                            }
+                            let est_v = self.streams[j].est_bw;
+                            est_i <= 0.0
+                                || est_v <= 0.0
+                                || est_v < self.streams[j].queue.len() as f64 * est_i
+                        })
+                        .max_by_key(|&j| self.streams[j].queue.len());
+                    match victim {
+                        Some(v) => {
+                            let take = (self.streams[v].queue.len() + 1) / 2;
+                            let mut grabbed: Vec<usize> = (0..take)
+                                .filter_map(|_| self.streams[v].queue.pop_back())
+                                .collect();
+                            grabbed.reverse(); // keep ascending offsets
+                            self.steals += 1;
+                            let mut it = grabbed.into_iter();
+                            let first = it.next();
+                            for b in it {
+                                self.streams[i].queue.push_back(b);
+                            }
+                            first
+                        }
+                        None => {
+                            let any_backlog = (0..self.streams.len()).any(|j| {
+                                j != i
+                                    && if self.streams[j].failed {
+                                        !self.streams[j].queue.is_empty()
+                                    } else {
+                                        self.streams[j].queue.len() >= self.min_steal
+                                    }
+                            });
+                            if !any_backlog {
+                                self.streams[i].finished = true;
+                                topo.end_transfer(self.streams[i].site);
+                            }
+                            None
+                        }
+                    }
+                }
             };
-            let fid = flows.add(topo, streams[i].site, len, lead);
-            flow_owner.push(i);
-            streams[i].current = Some((b, fid, topo.now));
+            if let Some(b) = block {
+                let (_, len) = self.plan.block_range(b);
+                // Per-block setup: connection latency + the disk seek
+                // (`drdTime`) every ranged read pays; the streaming
+                // disk rate itself caps the flow in `FlowSet`.
+                let lead = {
+                    let sc = &topo.site(self.streams[i].site).cfg;
+                    sc.latency + sc.drd_time_ms / 1e3
+                };
+                let fid = flows.add_in(topo, self.streams[i].site, len, lead, self.group);
+                self.flow_to_stream.insert(fid, i);
+                self.streams[i].current = Some((b, fid, topo.now));
+            }
         }
     }
-}
 
-/// Instrument completed blocks into the history stores and fold the
-/// observed throughput into each stream's bandwidth estimate. Errors
-/// if a block lands twice (the exactly-once ledger is violated).
-#[allow(clippy::too_many_arguments)]
-fn record_completions(
-    completions: Vec<crate::simnet::Completion>,
-    streams: &mut [Stream],
-    flow_owner: &[usize],
-    planned_owner: &[usize],
-    delivered: &mut [bool],
-    plan: &StripePlan,
-    ftp: &GridFtp,
-    client: &str,
-    finish_at: &mut f64,
-) -> Result<()> {
-    for c in completions {
-        let owner = flow_owner[c.flow];
-        let s = &mut streams[owner];
-        let (block, fid, assigned_at) = match s.current.take() {
+    /// Instrument one completed block into the history store and fold
+    /// the observed throughput into the stream's bandwidth estimate.
+    /// Errors if a block lands twice (the exactly-once ledger is
+    /// violated).
+    fn record_completion(&mut self, ftp: &GridFtp, owner: usize, c: &Completion) -> Result<()> {
+        let (block, fid, assigned_at) = match self.streams[owner].current.take() {
             Some(cur) => cur,
-            None => continue,
+            None => return Ok(()),
         };
         debug_assert_eq!(fid, c.flow);
-        if delivered[block] {
+        if self.delivered[block] {
             bail!("integrity violation: block {block} delivered twice");
         }
-        delivered[block] = true;
-        let (_, len) = plan.block_range(block);
+        self.delivered[block] = true;
+        let (_, len) = self.plan.block_range(block);
         let duration = (c.at - assigned_at).max(1e-9);
         ftp.record(
-            s.site,
+            self.streams[owner].site,
             TransferRecord {
                 at: assigned_at,
-                peer: client.to_string(),
+                peer: self.client.clone(),
                 direction: Direction::Read,
                 bytes: len,
                 duration,
             },
         );
+        let s = &mut self.streams[owner];
         s.blocks_done += 1;
-        if planned_owner[block] != owner {
+        if self.planned_owner[block] != owner {
             s.stolen_done += 1;
         }
         s.bytes_done += len;
@@ -377,12 +532,90 @@ fn record_completions(
         } else {
             observed
         };
-        if c.at > *finish_at {
-            *finish_at = c.at;
+        if c.at > self.finish_at {
+            self.finish_at = c.at;
         }
+        Ok(())
     }
-    Ok(())
+
+    /// Terminal failure: cancel this session's in-flight flows (their
+    /// downlink share returns to the survivors on the shared set),
+    /// release every still-active transfer slot, and latch the error.
+    fn abort(&mut self, flows: &mut FlowSet, topo: &mut Topology, e: anyhow::Error) {
+        for s in &mut self.streams {
+            if let Some((_, fid, _)) = s.current.take() {
+                flows.cancel(fid);
+                self.flow_to_stream.remove(&fid);
+            }
+        }
+        release_active(&self.streams, topo);
+        self.err = Some(e);
+        self.done = true;
+    }
+
+    /// Consume the session and produce its outcome: the latched error,
+    /// or the assembled transfer after the final integrity check (the
+    /// per-completion ledger rejects duplicates; this rejects holes —
+    /// e.g. every source died).
+    pub fn outcome(self) -> Result<CoallocOutcome> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        if !self.done {
+            bail!("coalloc session consumed before it finished");
+        }
+        let undelivered = self.delivered.iter().filter(|&&d| !d).count();
+        if undelivered > 0 {
+            bail!(
+                "co-allocated transfer lost {undelivered} of {} blocks \
+                 (no surviving source adopted them)",
+                self.plan.n_blocks
+            );
+        }
+        let bytes: f64 = self.streams.iter().map(|s| s.bytes_done).sum();
+        if (bytes - self.plan.total_bytes).abs() > 1.0 {
+            bail!(
+                "integrity violation: assembled {bytes} bytes != file size {}",
+                self.plan.total_bytes
+            );
+        }
+        let duration = (self.finish_at - self.started_at).max(0.0);
+        Ok(CoallocOutcome {
+            bytes,
+            duration,
+            started_at: self.started_at,
+            aggregate_bandwidth: if duration > 0.0 { bytes / duration } else { 0.0 },
+            steals: self.steals,
+            failovers: self.failovers,
+            blocks_requeued: self.blocks_requeued,
+            retries_total: self.retries.iter().sum(),
+            retries_peak: self.retries.iter().copied().max().unwrap_or(0),
+            streams: self
+                .streams
+                .iter()
+                .map(|s| StreamReport {
+                    site: s.site_name.clone(),
+                    site_index: s.site,
+                    blocks: s.blocks_done,
+                    stolen: s.stolen_done,
+                    bytes: s.bytes_done,
+                    mean_bandwidth: if s.busy_time > 0.0 {
+                        s.bytes_done / s.busy_time
+                    } else {
+                        0.0
+                    },
+                    failures: s.failures,
+                    failed: s.failed,
+                })
+                .collect(),
+        })
+    }
 }
+
+/// Event budget for [`execute`]: far above any real transfer (ticks +
+/// one completion per block), so pathological configs terminate with
+/// an error instead of spinning forever.
+const MAX_EXECUTE_EVENTS: usize = 4_000_000;
 
 /// Execute `plan` against the live topology, instrumenting every block
 /// into the per-site history stores. `client` is the requesting
@@ -390,6 +623,12 @@ fn record_completions(
 /// for). Survives source churn per the module docs' failover state
 /// machine; the returned outcome passed the exactly-once integrity
 /// check over the assembled byte ranges.
+///
+/// This is the one-transfer-alone wrapper: it spins up a private
+/// [`Engine`] whose `FlowSet` holds only this session's flows and
+/// drives the session to a terminal state. Drivers that want several
+/// transfers to contend — the open-loop runtime — run
+/// [`CoallocSession`] directly on their shared kernel instead.
 pub fn execute(
     topo: &mut Topology,
     ftp: &GridFtp,
@@ -397,198 +636,51 @@ pub fn execute(
     plan: &StripePlan,
     policy: &CoallocPolicy,
 ) -> Result<CoallocOutcome> {
-    let started_at = topo.now;
-    if plan.n_blocks == 0 || plan.assignments.is_empty() {
-        return Ok(CoallocOutcome {
-            bytes: 0.0,
-            duration: 0.0,
-            started_at,
-            aggregate_bandwidth: 0.0,
-            steals: 0,
-            failovers: 0,
-            blocks_requeued: 0,
-            retries_total: 0,
-            retries_peak: 0,
-            streams: Vec::new(),
-        });
+    let mut eng = Engine::new(FlowSet::new(policy.client_downlink));
+    let mut session = CoallocSession::start(&mut eng.flows, topo, plan, policy, client, 0)?;
+    let tick = session.tick_period();
+    let mut next_tick = topo.now + tick;
+    if !session.is_done() {
+        eng.schedule_tick(next_tick, 0);
     }
-
-    let mut streams: Vec<Stream> = Vec::with_capacity(plan.assignments.len());
-    for a in &plan.assignments {
-        let site = match topo.index_of(&a.source.site) {
-            Some(i) => i,
-            None => bail!("coalloc plan names unknown site {:?}", a.source.site),
-        };
-        streams.push(Stream {
-            site,
-            site_name: a.source.site.clone(),
-            queue: (a.first_block..a.first_block + a.blocks).collect(),
-            current: None,
-            blocks_done: 0,
-            stolen_done: 0,
-            bytes_done: 0.0,
-            busy_time: 0.0,
-            est_bw: a.source.predicted_bw.max(0.0),
-            finished: false,
-            failed: false,
-            failures: 0,
-        });
-    }
-
-    // Register every stream as an in-flight transfer so GRIS `load`
-    // and link sharing see the co-allocated session, mirroring what
-    // `GridFtp::fetch` does for a single stream.
-    for s in &streams {
-        topo.begin_transfer(s.site);
-    }
-
-    let mut flows = FlowSet::new(policy.client_downlink);
-    // flow id → stream index (flows are append-only within the set).
-    let mut flow_owner: Vec<usize> = Vec::new();
-    // block id → the stream originally assigned it by the planner, so
-    // a delivery counts as "stolen" exactly when someone else's block
-    // lands (even after multi-hop or steal-back churn).
-    let mut planned_owner: Vec<usize> = vec![0; plan.n_blocks];
-    for (s, a) in plan.assignments.iter().enumerate() {
-        for b in a.first_block..a.first_block + a.blocks {
-            planned_owner[b] = s;
-        }
-    }
-    // Exactly-once delivery ledger + per-block failover retry counts.
-    let mut delivered: Vec<bool> = vec![false; plan.n_blocks];
-    let mut retries: Vec<usize> = vec![0; plan.n_blocks];
-    let mut failovers = 0usize;
-    let mut blocks_requeued = 0usize;
-    let mut steals = 0usize;
-    let mut finish_at = started_at;
-    let min_steal = policy.rebalance_threshold.max(1.0).ceil() as usize;
-    let tick = policy.tick.max(1e-3);
-    // Hard cap: bandwidth is floored at 1 B/s, so pathological configs
-    // terminate with an error instead of spinning forever.
-    let max_ticks = 2_000_000usize;
-
-    let mut err: Option<anyhow::Error> = None;
-    'ticks: for _ in 0..max_ticks {
-        // 0. Failover: detect dead/stalled sources, orphan their work.
-        if let Err(e) = detect_failures(
-            &mut streams, topo, &mut flows, &mut retries, policy,
-            &mut failovers, &mut blocks_requeued,
-        ) {
-            err = Some(e);
+    let mut events = 0usize;
+    while !session.is_done() {
+        events += 1;
+        if events > MAX_EXECUTE_EVENTS {
+            session.abort(
+                &mut eng.flows,
+                topo,
+                anyhow::anyhow!("coalloc transfer did not converge within the tick budget"),
+            );
             break;
         }
-
-        // 1. Hand idle streams work: own queue first, then steal.
-        assign_idle(&mut streams, topo, &mut flows, &mut flow_owner, &mut steals, plan, min_steal);
-
-        if streams.iter().all(|s| s.finished || s.failed) {
-            break;
-        }
-
-        // 2/3. Advance one tick, re-dispatching freed streams at every
-        // completion instant (steal decisions included), so per-stream
-        // throughput is not quantized to one block per tick.
-        let mut tick_left = tick;
-        while tick_left > 1e-12 {
-            let (used, completions) = flows.advance_some(topo, tick_left);
-            tick_left -= used;
-            if completions.is_empty() {
+        match eng.next(topo) {
+            Some(Signal::FlowDone(c)) => {
+                session.on_flow_done(&mut eng.flows, topo, ftp, &c);
+            }
+            Some(Signal::Tick { .. }) => {
+                session.step(&mut eng.flows, topo);
+                if !session.is_done() {
+                    next_tick += tick;
+                    eng.schedule_tick(next_tick, 0);
+                }
+            }
+            Some(Signal::Arrival { .. }) => {
+                unreachable!("the private coalloc engine schedules no arrivals")
+            }
+            None => {
+                // No scheduled events and no flow progress — a stalled
+                // set the maintenance tick stopped watching.
+                session.abort(
+                    &mut eng.flows,
+                    topo,
+                    anyhow::anyhow!("coalloc transfer did not converge within the tick budget"),
+                );
                 break;
             }
-            if let Err(e) = record_completions(
-                completions,
-                &mut streams,
-                &flow_owner,
-                &planned_owner,
-                &mut delivered,
-                plan,
-                ftp,
-                client,
-                &mut finish_at,
-            ) {
-                err = Some(e);
-                break 'ticks;
-            }
-            if tick_left > 1e-12 {
-                if let Err(e) = detect_failures(
-                    &mut streams, topo, &mut flows, &mut retries, policy,
-                    &mut failovers, &mut blocks_requeued,
-                ) {
-                    err = Some(e);
-                    break 'ticks;
-                }
-                assign_idle(
-                    &mut streams,
-                    topo,
-                    &mut flows,
-                    &mut flow_owner,
-                    &mut steals,
-                    plan,
-                    min_steal,
-                );
-            }
         }
     }
-
-    if let Some(e) = err {
-        release_active(&streams, topo);
-        return Err(e);
-    }
-
-    if !streams.iter().all(|s| s.finished || s.failed) {
-        // Release whatever is still registered before failing.
-        release_active(&streams, topo);
-        bail!("coalloc transfer did not converge within the tick budget");
-    }
-
-    // Final integrity check: the assembled ranges must cover the file
-    // exactly once (the per-completion ledger rejects duplicates; this
-    // rejects holes — e.g. every source died).
-    let undelivered = delivered.iter().filter(|&&d| !d).count();
-    if undelivered > 0 {
-        bail!(
-            "co-allocated transfer lost {undelivered} of {} blocks \
-             (no surviving source adopted them)",
-            plan.n_blocks
-        );
-    }
-    let bytes: f64 = streams.iter().map(|s| s.bytes_done).sum();
-    if (bytes - plan.total_bytes).abs() > 1.0 {
-        bail!(
-            "integrity violation: assembled {bytes} bytes != file size {}",
-            plan.total_bytes
-        );
-    }
-
-    let duration = (finish_at - started_at).max(0.0);
-    Ok(CoallocOutcome {
-        bytes,
-        duration,
-        started_at,
-        aggregate_bandwidth: if duration > 0.0 { bytes / duration } else { 0.0 },
-        steals,
-        failovers,
-        blocks_requeued,
-        retries_total: retries.iter().sum(),
-        retries_peak: retries.iter().copied().max().unwrap_or(0),
-        streams: streams
-            .iter()
-            .map(|s| StreamReport {
-                site: s.site_name.clone(),
-                site_index: s.site,
-                blocks: s.blocks_done,
-                stolen: s.stolen_done,
-                bytes: s.bytes_done,
-                mean_bandwidth: if s.busy_time > 0.0 {
-                    s.bytes_done / s.busy_time
-                } else {
-                    0.0
-                },
-                failures: s.failures,
-                failed: s.failed,
-            })
-            .collect(),
-    })
+    session.outcome()
 }
 
 #[cfg(test)]
@@ -882,6 +974,83 @@ mod tests {
         assert!(m.counter("coalloc.blocks_requeued").get() > 0);
         let dead_site = &out.streams[0].site;
         assert!(m.counter(&format!("coalloc.failures.{dead_site}")).get() >= 1);
+    }
+
+    #[test]
+    fn two_sessions_coexist_on_one_shared_kernel() {
+        // Two co-allocated transfers from the same client population,
+        // driven concurrently on ONE engine + one grid-wide FlowSet:
+        // each session gets its own downlink group, both contend on
+        // the shared site links, and both deliver every byte exactly
+        // once. A serial baseline (one `execute` after the other on a
+        // fresh grid) shows the contention: overlapping sessions see
+        // slower links than transfers that run alone.
+        let (cfg, mut topo, ftp) = flat_grid(3, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 3,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let srcs = sources(&cfg, &[1e6, 1e6, 1e6]);
+        let plan_a = plan_stripes(&srcs, 36e6, &policy);
+        let plan_b = plan_stripes(&srcs, 36e6, &policy);
+
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let ga = eng.flows.add_group(policy.client_downlink);
+        let gb = eng.flows.add_group(policy.client_downlink);
+        let mut sa =
+            CoallocSession::start(&mut eng.flows, &mut topo, &plan_a, &policy, "a", ga).unwrap();
+        let mut sb =
+            CoallocSession::start(&mut eng.flows, &mut topo, &plan_b, &policy, "b", gb).unwrap();
+        let tick = sa.tick_period();
+        let mut next_tick = topo.now + tick;
+        eng.schedule_tick(next_tick, 0);
+        let mut guard = 0;
+        while !(sa.is_done() && sb.is_done()) {
+            guard += 1;
+            assert!(guard < 100_000, "shared-kernel run did not converge");
+            match eng.next(&mut topo) {
+                Some(Signal::FlowDone(c)) => {
+                    // Exactly one session owns each flow.
+                    let in_a = sa.on_flow_done(&mut eng.flows, &mut topo, &ftp, &c);
+                    if !in_a {
+                        assert!(sb.on_flow_done(&mut eng.flows, &mut topo, &ftp, &c));
+                    }
+                }
+                Some(Signal::Tick { .. }) => {
+                    sa.step(&mut eng.flows, &mut topo);
+                    sb.step(&mut eng.flows, &mut topo);
+                    if !(sa.is_done() && sb.is_done()) {
+                        next_tick += tick;
+                        eng.schedule_tick(next_tick, 0);
+                    }
+                }
+                other => panic!("unexpected signal {other:?}"),
+            }
+        }
+        let oa = sa.outcome().unwrap();
+        let ob = sb.outcome().unwrap();
+        assert!((oa.bytes - 36e6).abs() < 1.0);
+        assert!((ob.bytes - 36e6).abs() < 1.0);
+        // Contention check: run the same two transfers serially on a
+        // fresh grid — each alone on the links, so each is faster than
+        // the overlapped runs.
+        let (_, mut topo2, ftp2) = flat_grid(3, 1e6);
+        let solo_a = execute(&mut topo2, &ftp2, "a", &plan_a, &policy).unwrap();
+        let solo_b = execute(&mut topo2, &ftp2, "b", &plan_b, &policy).unwrap();
+        assert!(
+            oa.duration > solo_a.duration * 1.2 && ob.duration > solo_b.duration * 1.2,
+            "overlap {:.1}s/{:.1}s !> solo {:.1}s/{:.1}s",
+            oa.duration,
+            ob.duration,
+            solo_a.duration,
+            solo_b.duration
+        );
+        // Slot accounting stays balanced across both sessions.
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
     }
 
     #[test]

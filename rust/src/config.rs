@@ -193,7 +193,13 @@ pub struct CoallocPolicy {
     /// Failover: a block in flight longer than this many simulated
     /// seconds marks its source as stalled (treated like a death — the
     /// stream's blocks are re-queued to survivors). `INFINITY` trusts
-    /// sources to eventually deliver.
+    /// sources to eventually deliver. Deliberately wall-clock, not
+    /// progress-based: a link crawling at 0.1% is *the* stall failure
+    /// mode this exists for, so "slow but moving" still trips it.
+    /// Consequence for sessions sharing one open-loop kernel: size the
+    /// timeout for block time *under expected contention* (or leave it
+    /// infinite), because other clients' traffic legitimately
+    /// stretches in-flight times.
     pub block_timeout: f64,
 }
 

@@ -19,6 +19,12 @@
 //!
 //! The report shows the availability claim directly: completion rate
 //! under churn, plus the time and failover-counter costs of surviving.
+//!
+//! Since ISSUE 4, `coalloc::execute` itself runs as an event-driven
+//! session on the `simnet` kernel, so this scenario exercises the same
+//! machinery the open-loop contention runtime drives — one request at
+//! a time, which is exactly the regime a churn comparison wants (the
+//! injected death, not cross-request contention, is the variable).
 
 use crate::broker::{AccessStrategy, RankPolicy};
 use crate::classad::{parse_classad, ClassAd};
@@ -96,10 +102,11 @@ fn replay(
         steals: 0,
     };
     let mut durations = Vec::new();
-    let mut last_at = 0.0f64;
+    // Absolute arrival instants from the post-warm clock — the same
+    // arithmetic the open-loop kernel uses (see `run_quality_trace`).
+    let t0 = grid.topo.now;
     for req in &requests {
-        grid.topo.advance((req.at - last_at).max(0.0));
-        last_at = req.at;
+        grid.topo.advance_to(t0 + req.at);
         grid.publish_dynamics();
         let logical = &grid.files[req.file];
         let size = grid.sizes[req.file];

@@ -1,6 +1,6 @@
 //! Experiment driver: the reusable simulation harness behind
-//! `examples/datagrid_sim`, `benches/bench_selection_quality` and the
-//! end-to-end integration tests.
+//! `examples/datagrid_sim`, `benches/bench_selection_quality`,
+//! `benches/bench_contention` and the end-to-end integration tests.
 //!
 //! Builds a complete in-process data grid — simnet topology, GridFTP
 //! fabric, one GRIS per site with live providers (dynamic
@@ -8,13 +8,31 @@
 //! from the instrumentation store), replica catalog, metadata
 //! repository — then replays a workload under a chosen selection policy
 //! and scores the outcome against the clairvoyant oracle.
+//!
+//! Two replay regimes exist:
+//!
+//! * **Serial** ([`run_quality_trace`], [`run_churn`]): the clock jumps
+//!   to each arrival and one transfer runs at a time — the legacy
+//!   semantics, kept as the concurrency-1 reference the open-loop
+//!   parity test pins against.
+//! * **Open-loop** ([`run_quality_open`], [`run_contention`]): requests
+//!   are admitted at their Poisson instants on the `simnet` event
+//!   kernel, every in-flight transfer shares links and client
+//!   downlinks, and selection sees *live* in-flight load through the
+//!   GRIS dynamics — the contention regime the paper's
+//!   dynamic-information thesis is actually about.
 
 pub mod churn;
 pub mod grid;
+pub mod open_loop;
 pub mod quality;
 
 pub use churn::{run_churn, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
+pub use open_loop::{
+    run_contention, run_quality_open, AccessMode, ContentionPoint, ContentionReport,
+    OpenLoopOptions, OpenReport, RequestTrace,
+};
 pub use quality::{
     run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,
 };

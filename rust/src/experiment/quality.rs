@@ -2,8 +2,16 @@
 //!
 //! Replays the same workload under each selection policy on identically
 //! seeded grids and scores achieved transfer time against the
-//! clairvoyant oracle (which probes every replica on a cloned topology
-//! before choosing).
+//! clairvoyant oracle (which probes every replica — link-locally, via
+//! [`crate::simnet::Topology::probe_transfer`], not by deep-cloning
+//! the topology per candidate — before choosing).
+//!
+//! [`run_quality_trace`] is the *serial replay*: the clock jumps to
+//! each arrival and the transfer is costed in closed form, alone on
+//! the grid — the legacy semantics the open-loop kernel
+//! ([`super::open_loop`]) must reproduce exactly at concurrency 1 (the
+//! `it_contention` parity test pins this). Cross-request contention
+//! lives in the open-loop drivers, not here.
 
 use crate::broker::selectors::{Selector, SelectorKind};
 use crate::broker::RankPolicy;
@@ -32,7 +40,7 @@ pub struct QualityReport {
     pub mean_slowdown: f64,
 }
 
-fn request_ad(min_bw: f64) -> ClassAd {
+pub(crate) fn request_ad(min_bw: f64) -> ClassAd {
     if min_bw > 0.0 {
         parse_classad(&format!(
             "hostname = \"client\"; reqdSpace = 0; reqdRDBandwidth = {min_bw}; \
@@ -41,6 +49,116 @@ fn request_ad(min_bw: f64) -> ClassAd {
         .unwrap()
     } else {
         parse_classad("hostname = \"client\"; reqdSpace = 0; requirement = TRUE;").unwrap()
+    }
+}
+
+/// One request's Search + Match + oracle + pick — the per-request
+/// selection logic the serial replay and the open-loop kernel drivers
+/// share, so the parity between them is structural.
+pub(crate) struct PickOutcome {
+    /// Topology index of the policy's chosen source.
+    pub pick_site: usize,
+    /// Topology index of the oracle-best source.
+    pub best_site: usize,
+    /// The oracle-best probe duration (s).
+    pub best_oracle: f64,
+}
+
+pub(crate) fn pick_replica(
+    grid: &SimGrid,
+    broker: &crate::broker::Broker,
+    selector: &mut Selector,
+    kind: SelectorKind,
+    logical: &str,
+    size: f64,
+    ad: &ClassAd,
+) -> PickOutcome {
+    // The candidate view every policy sees (Search + convert).
+    let (cands, mut trace) = broker.search(logical, ad).expect("search");
+    // Requirements filter (Match phase step 2).
+    let matched: Vec<usize> = cands
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| symmetric_match(ad, &c.ad))
+        .map(|(i, _)| i)
+        .collect();
+    // Unsatisfiable constraint: fall back to all replicas (the
+    // request still needs the file).
+    let eligible = if matched.is_empty() {
+        (0..cands.len()).collect::<Vec<_>>()
+    } else {
+        matched
+    };
+
+    // Oracle: probe every eligible replica. `probe_transfer` clones
+    // only the one link it costs, so this is O(eligible) link clones
+    // per request instead of O(eligible) full-topology deep copies.
+    let site_indices: Vec<usize> = eligible
+        .iter()
+        .map(|&i| grid.topo.index_of(&cands[i].site).unwrap())
+        .collect();
+    let mut best_oracle = f64::INFINITY;
+    let mut best_site = site_indices[0];
+    for &s in &site_indices {
+        let (d, _) = grid.topo.probe_transfer(s, size, 0);
+        if d < best_oracle {
+            best_oracle = d;
+            best_site = s;
+        }
+    }
+
+    // The policy's pick.
+    let pick_idx = match kind {
+        SelectorKind::Forecast => {
+            let ranked = broker.match_phase(ad, &cands, &mut trace);
+            ranked
+                .iter()
+                .find(|r| eligible.contains(&r.index))
+                .map(|r| r.index)
+                .unwrap_or(eligible[0])
+        }
+        _ => selector.pick(&cands, &eligible),
+    };
+    PickOutcome {
+        pick_site: grid.topo.index_of(&cands[pick_idx].site).unwrap(),
+        best_site,
+        best_oracle,
+    }
+}
+
+/// Fold per-request measurements into a [`QualityReport`] — shared by
+/// the serial and open-loop drivers so the aggregation arithmetic (and
+/// therefore the parity) is identical to the last bit.
+pub(crate) fn finish_report(
+    policy: &str,
+    mut durations: Vec<f64>,
+    bandwidths: &[f64],
+    slowdowns: &[f64],
+    optimal_hits: usize,
+) -> QualityReport {
+    let n = durations.len();
+    if n == 0 {
+        return QualityReport {
+            policy: policy.to_string(),
+            requests: 0,
+            mean_time: 0.0,
+            p95_time: 0.0,
+            mean_bandwidth: 0.0,
+            pct_optimal: 0.0,
+            mean_slowdown: 0.0,
+        };
+    }
+    durations.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_time = durations.iter().sum::<f64>() / durations.len() as f64;
+    let p95_time = durations[(durations.len() as f64 * 0.95) as usize % durations.len()];
+    QualityReport {
+        policy: policy.to_string(),
+        requests: n,
+        mean_time,
+        p95_time,
+        mean_bandwidth: bandwidths.iter().sum::<f64>() / bandwidths.len() as f64,
+        pct_optimal: optimal_hits as f64 / n as f64,
+        mean_slowdown: slowdowns.iter().sum::<f64>() / slowdowns.len() as f64,
     }
 }
 
@@ -88,86 +206,30 @@ pub fn run_quality_trace(
     let mut bandwidths = Vec::with_capacity(n_requests);
     let mut optimal_hits = 0usize;
     let mut slowdowns = Vec::with_capacity(n_requests);
-    let mut last_at = 0.0f64;
+    // Arrivals are absolute offsets from the post-warm clock — the
+    // same arithmetic the event kernel uses to schedule them, so the
+    // concurrency-1 kernel run reproduces this replay bit-for-bit.
+    let t0 = grid.topo.now;
 
     for req in requests {
-        grid.topo.advance((req.at - last_at).max(0.0));
-        last_at = req.at;
+        grid.topo.advance_to(t0 + req.at);
         grid.publish_dynamics();
-        let logical = &grid.files[req.file];
+        let logical = grid.files[req.file].clone();
+        let size = grid.sizes[req.file];
         let ad = request_ad(req.min_bandwidth);
-
-        // The candidate view every policy sees (Search + convert).
-        let (cands, mut trace) = broker.search(logical, &ad).expect("search");
-        // Requirements filter (Match phase step 2).
-        let matched: Vec<usize> = cands
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| symmetric_match(&ad, &c.ad))
-            .map(|(i, _)| i)
-            .collect();
-        // Unsatisfiable constraint: fall back to all replicas (the
-        // request still needs the file).
-        let eligible = if matched.is_empty() {
-            (0..cands.len()).collect::<Vec<_>>()
-        } else {
-            matched
-        };
-
-        // Oracle: probe every eligible replica on a cloned topology.
-        let site_indices: Vec<usize> = eligible
-            .iter()
-            .map(|&i| grid.topo.index_of(&cands[i].site).unwrap())
-            .collect();
-        let mut best_oracle = f64::INFINITY;
-        let mut best_site = site_indices[0];
-        for &s in &site_indices {
-            let mut probe = grid.topo.clone_for_probe();
-            let (d, _) = probe.transfer_from(s, grid.sizes[req.file]);
-            if d < best_oracle {
-                best_oracle = d;
-                best_site = s;
-            }
-        }
-
-        // The policy's pick.
-        let pick_idx = match kind {
-            SelectorKind::Forecast => {
-                let ranked = broker.match_phase(&ad, &cands, &mut trace);
-                ranked
-                    .iter()
-                    .find(|r| eligible.contains(&r.index))
-                    .map(|r| r.index)
-                    .unwrap_or(eligible[0])
-            }
-            _ => selector.pick(&cands, &eligible),
-        };
-        let pick_site = grid.topo.index_of(&cands[pick_idx].site).unwrap();
+        let pick = pick_replica(&grid, &broker, &mut selector, kind, &logical, size, &ad);
 
         // Access phase: the real transfer (advances link state).
-        let out = grid
-            .ftp
-            .fetch(&mut grid.topo, pick_site, "client", grid.sizes[req.file]);
+        let out = grid.ftp.fetch(&mut grid.topo, pick.pick_site, "client", size);
         durations.push(out.duration);
         bandwidths.push(out.bandwidth);
-        if pick_site == best_site {
+        if pick.pick_site == pick.best_site {
             optimal_hits += 1;
         }
-        slowdowns.push(out.duration / best_oracle.max(1e-9));
+        slowdowns.push(out.duration / pick.best_oracle.max(1e-9));
     }
 
-    durations.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean_time = durations.iter().sum::<f64>() / durations.len() as f64;
-    let p95_time = durations[(durations.len() as f64 * 0.95) as usize % durations.len()];
-    QualityReport {
-        policy: kind.name().to_string(),
-        requests: n_requests,
-        mean_time,
-        p95_time,
-        mean_bandwidth: bandwidths.iter().sum::<f64>() / bandwidths.len() as f64,
-        pct_optimal: optimal_hits as f64 / n_requests as f64,
-        mean_slowdown: slowdowns.iter().sum::<f64>() / slowdowns.len() as f64,
-    }
+    finish_report(kind.name(), durations, &bandwidths, &slowdowns, optimal_hits)
 }
 
 /// Aggregated outcome of the single-best vs co-allocated comparison.
@@ -192,9 +254,10 @@ pub struct CoallocReport {
 /// and score it against the best single-source fetch of each request.
 ///
 /// Both alternatives see identical link state: the single-source cost
-/// is measured on a [`crate::simnet::Topology::clone_for_probe`] copy
-/// (same upcoming RNG stream), then the striped transfer executes on
-/// the real topology, feeding the per-site history stores.
+/// is measured with [`crate::simnet::Topology::probe_transfer`] (the
+/// same upcoming RNG stream, consumed on a link-local clone), then the
+/// striped transfer executes on the real topology, feeding the
+/// per-site history stores.
 pub fn run_coalloc_quality(
     cfg: &GridConfig,
     spec: &WorkloadSpec,
@@ -213,10 +276,9 @@ pub fn run_coalloc_quality(
     let mut co = Vec::with_capacity(n_requests);
     let mut steals = 0usize;
     let mut streams_total = 0usize;
-    let mut last_at = 0.0f64;
+    let t0 = grid.topo.now;
     for req in &requests {
-        grid.topo.advance((req.at - last_at).max(0.0));
-        last_at = req.at;
+        grid.topo.advance_to(t0 + req.at);
         grid.publish_dynamics();
         let logical = &grid.files[req.file];
         let size = grid.sizes[req.file];
@@ -225,12 +287,11 @@ pub fn run_coalloc_quality(
             Ok(s) => s,
             Err(_) => continue,
         };
-        // The best single-source Access, costed on a probe copy with
-        // the same sharing convention as `GridFtp::fetch`.
+        // The best single-source Access, costed link-locally with the
+        // same sharing convention as `GridFtp::fetch` (the transfer
+        // registers itself: one extra stream on the probe).
         let best_site = grid.topo.index_of(&sel.selection.site).unwrap();
-        let mut probe = grid.topo.clone_for_probe();
-        probe.begin_transfer(best_site);
-        let (d_single, _) = probe.transfer_from(best_site, size);
+        let (d_single, _) = grid.topo.probe_transfer(best_site, size, 1);
         // The co-allocated Access, executed for real: instrumentation
         // lands in the same history stores the GRIS providers publish.
         // A transfer that fails to converge is skipped — and the

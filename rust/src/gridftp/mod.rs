@@ -12,4 +12,4 @@ pub mod history;
 pub mod service;
 
 pub use history::{HistoryStore, TransferRecord};
-pub use service::GridFtp;
+pub use service::{GridFtp, OpenFetch};

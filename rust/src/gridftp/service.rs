@@ -8,7 +8,9 @@
 
 use std::sync::{Arc, RwLock};
 
-use crate::simnet::Topology;
+use anyhow::{bail, Result};
+
+use crate::simnet::{Engine, Topology};
 
 use super::history::{Direction, HistoryStore, TransferRecord};
 
@@ -23,6 +25,21 @@ pub struct TransferOutcome {
     pub started_at: f64,
     /// First byte of the fetched range (0 for whole-file transfers).
     pub offset: f64,
+}
+
+/// An in-flight open-loop fetch: the ticket [`GridFtp::fetch_begin`]
+/// returns and [`GridFtp::fetch_finish`] consumes when the kernel
+/// reports the flow done.
+#[derive(Debug, Clone)]
+pub struct OpenFetch {
+    /// Flow id in the kernel's shared `FlowSet`.
+    pub flow: usize,
+    /// Topology index of the source site.
+    pub site: usize,
+    /// Requesting endpoint (the history store's per-source peer key).
+    pub client: String,
+    pub bytes: f64,
+    pub started_at: f64,
 }
 
 /// The per-grid GridFTP fabric: one logical server per site, all
@@ -120,6 +137,75 @@ impl GridFtp {
     /// themselves (the co-allocation scheduler's per-block records).
     pub fn record(&self, site: usize, rec: TransferRecord) {
         self.histories[site].write().unwrap().record(rec);
+    }
+
+    /// Begin an *open-loop* fetch on the event kernel: registers the
+    /// transfer slot (the sharing convention every stream follows) and
+    /// a flow in `eng`'s shared [`crate::simnet::FlowSet`], in downlink
+    /// `group`. Unlike [`Self::fetch`], which costs the whole transfer
+    /// in closed form at one instant, the open fetch occupies its site
+    /// link — and contends with every other in-flight transfer — until
+    /// the kernel reports its flow done; the caller then completes it
+    /// with [`Self::fetch_finish`], which releases the slot and lands
+    /// the instrumentation record. Errors on a dead source (the
+    /// control-channel failure a closed-form fetch signals with an
+    /// infinite duration).
+    pub fn fetch_begin(
+        &self,
+        eng: &mut Engine,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        bytes: f64,
+        group: usize,
+    ) -> Result<OpenFetch> {
+        if !topo.site_alive(site) {
+            bail!(
+                "source {} is unreachable (control channel down)",
+                topo.site(site).cfg.name
+            );
+        }
+        topo.begin_transfer(site);
+        // Per-stream setup: connection latency + the disk seek, paid
+        // before bytes move (the same lead a co-allocated block pays).
+        let lead = {
+            let sc = &topo.site(site).cfg;
+            sc.latency + sc.drd_time_ms / 1e3
+        };
+        let flow = eng.flows.add_in(topo, site, bytes, lead, group);
+        Ok(OpenFetch {
+            flow,
+            site,
+            client: client.to_string(),
+            bytes,
+            started_at: topo.now,
+        })
+    }
+
+    /// Complete an open-loop fetch whose flow the kernel reported done
+    /// at instant `at`: release the transfer slot and record the
+    /// instrumentation exactly like a closed-form fetch would.
+    pub fn fetch_finish(&self, topo: &mut Topology, open: &OpenFetch, at: f64) -> TransferOutcome {
+        topo.end_transfer(open.site);
+        let duration = (at - open.started_at).max(1e-9);
+        self.record(
+            open.site,
+            TransferRecord {
+                at: open.started_at,
+                peer: open.client.clone(),
+                direction: Direction::Read,
+                bytes: open.bytes,
+                duration,
+            },
+        );
+        TransferOutcome {
+            site: topo.site(open.site).cfg.name.clone(),
+            bytes: open.bytes,
+            duration,
+            bandwidth: open.bytes / duration,
+            started_at: open.started_at,
+            offset: 0.0,
+        }
     }
 
     /// Execute a write (replica creation) to `site` from `client`.
@@ -296,6 +382,58 @@ mod tests {
         assert_eq!(h.read().unwrap().rd.count, 0);
         assert_eq!(h.read().unwrap().wr.count, 0);
         assert_eq!(topo.site(1).available_space(), avail0);
+        assert_eq!(topo.site(1).active_transfers, 0);
+    }
+
+    #[test]
+    fn open_fetch_occupies_the_link_and_records_on_finish() {
+        use crate::simnet::{Engine, FlowSet, Signal};
+        let mut cfg = crate::config::GridConfig::generate(2, 21);
+        for s in &mut cfg.sites {
+            s.wan_bandwidth = 1e6;
+            s.diurnal_amp = 0.0;
+            s.noise_frac = 0.0;
+            s.congestion_prob = 0.0;
+            s.ar_coeff = 0.0;
+            s.latency = 0.0;
+            s.drd_time_ms = 0.0;
+            s.disk_rate = 1e9;
+        }
+        let mut topo = crate::simnet::Topology::build(&cfg);
+        let ftp = GridFtp::new(&topo, 16);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let open = ftp
+            .fetch_begin(&mut eng, &mut topo, 0, "client", 1e6, 0)
+            .unwrap();
+        // The slot is held while the flow is in flight.
+        assert_eq!(topo.site(0).active_transfers, 1);
+        match eng.next(&mut topo) {
+            Some(Signal::FlowDone(c)) => {
+                assert_eq!(c.flow, open.flow);
+                // share 1/2 with its own registration → 2 s.
+                assert!((c.at - 2.0).abs() < 1e-6, "at {}", c.at);
+                let out = ftp.fetch_finish(&mut topo, &open, c.at);
+                assert!((out.duration - 2.0).abs() < 1e-6);
+                assert!((out.bandwidth - 0.5e6).abs() < 1.0);
+            }
+            other => panic!("expected FlowDone, got {other:?}"),
+        }
+        assert_eq!(topo.site(0).active_transfers, 0);
+        let h = ftp.history(0);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 1);
+        assert_eq!(h.source("client").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn open_fetch_refuses_dead_sources() {
+        use crate::simnet::{Engine, FaultKind, FlowSet};
+        let (mut topo, ftp) = setup();
+        topo.schedule_fault(1, 0.0, FaultKind::ReplicaDeath);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        assert!(ftp
+            .fetch_begin(&mut eng, &mut topo, 1, "client", 1e6, 0)
+            .is_err());
         assert_eq!(topo.site(1).active_transfers, 0);
     }
 

@@ -23,7 +23,10 @@
 //! * [`gridftp`] — a simulated GridFTP fabric with transfer instrumentation
 //!   feeding per-source bandwidth history (paper §3.2).
 //! * [`simnet`] — the time-varying wide-area network simulator standing in
-//!   for the authors' testbed.
+//!   for the authors' testbed, including the open-loop discrete-event
+//!   kernel (`simnet::engine`) under which many transfers are in flight
+//!   at once, sharing site links and per-client downlinks — the
+//!   contention regime the paper's dynamic-information thesis targets.
 //! * [`forecast`] — NWS-style bandwidth predictor bank (pure Rust reference
 //!   implementation).
 //! * [`runtime`] — PJRT engine that loads the AOT-compiled JAX/Pallas

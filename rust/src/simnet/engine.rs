@@ -1,0 +1,313 @@
+//! The open-loop discrete-event kernel (ISSUE 4 tentpole).
+//!
+//! Before this module, every experiment replayed requests *serially*:
+//! the clock jumped to each arrival and that one transfer ran to
+//! completion alone, so cross-request contention — the regime the
+//! paper's dynamic-information thesis actually bites in — could not
+//! occur. [`Engine`] replaces that with an event queue over
+//!
+//! * **arrivals** — requests admitted at their Poisson instants
+//!   ([`Engine::schedule_arrival`]),
+//! * **timers** — GRIS dynamics refresh ticks and the co-allocation
+//!   scheduler's maintenance ticks ([`Engine::schedule_tick`]), and
+//! * **flow completions** — discovered by integrating the one
+//!   grid-wide [`FlowSet`] between scheduled instants, so every
+//!   in-flight transfer (single-best fetches *and* co-allocated stripe
+//!   streams) shares site links and per-client downlinks
+//!   simultaneously. Scheduled topology faults are also integration
+//!   boundaries (the `FlowSet` splits its steps at trigger instants).
+//!
+//! The kernel is deliberately *polled*, not callback-driven: the
+//! driver loops on [`Engine::next`], which advances simulated time to
+//! the earliest event and returns it as a [`Signal`]. Ties at one
+//! instant resolve deterministically — buffered flow completions
+//! first, then scheduled entries in scheduling order — so every run is
+//! replayable from its seed. Like [`FlowSet`], the engine borrows the
+//! [`Topology`] per call instead of owning it, which lets drivers keep
+//! snapshot/rollback idioms (`clone_for_probe`) unchanged.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::simnet::{Completion, FlowSet, Topology};
+
+/// How far the kernel integrates live flows past the last scheduled
+/// event, per chunk, before checking for progress. A chunk that moves
+/// nothing (dead sources, nothing watching them) makes
+/// [`Engine::next`] return `None` instead of advancing the clock to
+/// infinity; chunks that *do* move bytes keep going until a completion
+/// fires (slow links are slow, not stalled).
+const STALL_CHUNK_S: f64 = 3_600.0;
+/// Backstop on progressing-but-never-completing chunks (≈ 11 simulated
+/// years) — unreachable for any finite flow over the ≥ 1 B/s link
+/// floor, so it only guards against float pathology.
+const STALL_CHUNKS_MAX: usize = 100_000;
+
+/// An event delivered by [`Engine::next`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Signal {
+    /// A scheduled request arrival reached its instant.
+    Arrival { id: u64, at: f64 },
+    /// A scheduled timer fired (GRIS refresh, scheduler maintenance).
+    Tick { id: u64, at: f64 },
+    /// A flow in the shared [`FlowSet`] delivered its last byte.
+    FlowDone(Completion),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SchedKind {
+    Arrival(u64),
+    Tick(u64),
+}
+
+/// A scheduled queue entry; ordered by time, ties by insertion order.
+#[derive(Debug, Clone, Copy)]
+struct Sched {
+    at: f64,
+    seq: u64,
+    kind: SchedKind,
+}
+
+impl PartialEq for Sched {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq && self.kind == other.kind
+    }
+}
+
+impl Eq for Sched {}
+
+impl Ord for Sched {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Sched {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The discrete-event kernel: a schedule of arrivals/ticks plus the
+/// grid-wide [`FlowSet`] whose completions are events too.
+pub struct Engine {
+    /// The shared flow set every in-flight transfer lives in. Drivers
+    /// and sessions register flows directly (`flows.add_in`) and get
+    /// their completions back as [`Signal::FlowDone`].
+    pub flows: FlowSet,
+    queue: BinaryHeap<std::cmp::Reverse<Sched>>,
+    pending: VecDeque<Completion>,
+    seq: u64,
+}
+
+impl Engine {
+    pub fn new(flows: FlowSet) -> Engine {
+        Engine {
+            flows,
+            queue: BinaryHeap::new(),
+            pending: VecDeque::new(),
+            seq: 0,
+        }
+    }
+
+    fn push(&mut self, at: f64, kind: SchedKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(std::cmp::Reverse(Sched { at, seq, kind }));
+    }
+
+    /// Schedule a request arrival at absolute simulated time `at`.
+    pub fn schedule_arrival(&mut self, at: f64, id: u64) {
+        self.push(at, SchedKind::Arrival(id));
+    }
+
+    /// Schedule a timer at absolute simulated time `at`.
+    pub fn schedule_tick(&mut self, at: f64, id: u64) {
+        self.push(at, SchedKind::Tick(id));
+    }
+
+    /// Scheduled entries (arrivals + ticks) not yet delivered.
+    pub fn scheduled(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Progress metric for stall detection: delivered bytes grow and
+    /// connection-setup leads shrink whenever *anything* moved.
+    fn progress(&self) -> f64 {
+        self.flows
+            .flows()
+            .iter()
+            .map(|f| f.delivered - f.lead)
+            .sum()
+    }
+
+    /// Advance simulated time to the earliest event and return it:
+    /// buffered completions first, then flow completions discovered on
+    /// the way to the next scheduled instant, then that instant itself.
+    /// Returns `None` when nothing is scheduled and no live flow can
+    /// make progress (all drained, or the survivors are stalled on
+    /// dead sources).
+    pub fn next(&mut self, topo: &mut Topology) -> Option<Signal> {
+        if let Some(c) = self.pending.pop_front() {
+            return Some(Signal::FlowDone(c));
+        }
+        loop {
+            let next_at = self.queue.peek().map(|r| r.0.at);
+            if self.flows.live() == 0 {
+                // Pure scheduling: jump the clock to the next entry.
+                let s = self.queue.pop()?.0;
+                topo.advance_to(s.at);
+                return Some(match s.kind {
+                    SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
+                    SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
+                });
+            }
+            match next_at {
+                Some(at) if at <= topo.now + 1e-12 => {
+                    // The scheduled instant is now; completions at this
+                    // instant were delivered on the way here.
+                    let s = self.queue.pop().expect("peeked entry").0;
+                    topo.advance_to(s.at);
+                    return Some(match s.kind {
+                        SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
+                        SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
+                    });
+                }
+                Some(at) => {
+                    // Integrate flows up to the scheduled instant; a
+                    // completion on the way preempts it.
+                    let (_, mut done) = self.flows.advance_some(topo, at - topo.now);
+                    if let Some(first) = done.first().cloned() {
+                        self.pending.extend(done.drain(1..));
+                        return Some(Signal::FlowDone(first));
+                    }
+                    // Reached the instant (advance_some consumed the
+                    // whole budget): snap exactly, loop pops it.
+                    topo.advance_to(at);
+                }
+                None => {
+                    // Live flows, nothing scheduled: integrate in
+                    // bounded chunks; give up when nothing moves.
+                    let mut chunks = 0usize;
+                    loop {
+                        let before = self.progress();
+                        let (_, mut done) = self.flows.advance_some(topo, STALL_CHUNK_S);
+                        if let Some(first) = done.first().cloned() {
+                            self.pending.extend(done.drain(1..));
+                            return Some(Signal::FlowDone(first));
+                        }
+                        chunks += 1;
+                        if self.progress() <= before + 1e-9 || chunks >= STALL_CHUNKS_MAX {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    fn flat_topo(n: usize) -> Topology {
+        let mut cfg = GridConfig::generate(n, 5);
+        for s in &mut cfg.sites {
+            s.wan_bandwidth = 1e6;
+            s.diurnal_amp = 0.0;
+            s.noise_frac = 0.0;
+            s.congestion_prob = 0.0;
+            s.ar_coeff = 0.0;
+            s.latency = 0.0;
+        }
+        Topology::build(&cfg)
+    }
+
+    #[test]
+    fn events_fire_in_time_order_with_stable_ties() {
+        let mut topo = flat_topo(2);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        eng.schedule_tick(5.0, 100);
+        eng.schedule_arrival(1.0, 0);
+        eng.schedule_arrival(5.0, 1); // tie with the tick, scheduled later
+        let a = eng.next(&mut topo).unwrap();
+        assert_eq!(a, Signal::Arrival { id: 0, at: 1.0 });
+        assert!((topo.now - 1.0).abs() < 1e-12);
+        let b = eng.next(&mut topo).unwrap();
+        assert_eq!(b, Signal::Tick { id: 100, at: 5.0 });
+        let c = eng.next(&mut topo).unwrap();
+        assert_eq!(c, Signal::Arrival { id: 1, at: 5.0 });
+        assert!(eng.next(&mut topo).is_none());
+    }
+
+    #[test]
+    fn flow_completions_interleave_with_schedule() {
+        let mut topo = flat_topo(2);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        // 1e6 bytes over a 1e6 B/s pipe → completes at t=1, between
+        // the two scheduled entries.
+        let f = eng.flows.add(&topo, 0, 1e6, 0.0);
+        eng.schedule_tick(0.5, 7);
+        eng.schedule_tick(2.0, 8);
+        assert_eq!(eng.next(&mut topo), Some(Signal::Tick { id: 7, at: 0.5 }));
+        match eng.next(&mut topo) {
+            Some(Signal::FlowDone(c)) => {
+                assert_eq!(c.flow, f);
+                assert!((c.at - 1.0).abs() < 1e-6, "at {}", c.at);
+            }
+            other => panic!("expected FlowDone, got {other:?}"),
+        }
+        assert_eq!(eng.next(&mut topo), Some(Signal::Tick { id: 8, at: 2.0 }));
+        assert!((topo.now - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simultaneous_completions_drain_one_per_call() {
+        let mut topo = flat_topo(3);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        eng.flows.add(&topo, 0, 1e6, 0.0);
+        eng.flows.add(&topo, 1, 1e6, 0.0);
+        let mut seen = 0;
+        while let Some(sig) = eng.next(&mut topo) {
+            match sig {
+                Signal::FlowDone(c) => {
+                    assert!((c.at - 1.0).abs() < 1e-6);
+                    seen += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn stalled_flows_end_the_run_instead_of_hanging() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        topo.schedule_fault(0, 0.0, FaultKind::ReplicaDeath);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        eng.flows.add(&topo, 0, 1e6, 0.0); // will never move a byte
+        assert!(eng.next(&mut topo).is_none());
+        assert!(topo.now.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_identical_schedules() {
+        let run = || {
+            let mut topo = flat_topo(3);
+            let mut eng = Engine::new(FlowSet::new(1e6));
+            eng.flows.add(&topo, 0, 2e6, 0.0);
+            eng.flows.add(&topo, 1, 1e6, 0.5);
+            eng.schedule_tick(1.5, 1);
+            eng.schedule_arrival(2.5, 2);
+            let mut log = Vec::new();
+            while let Some(sig) = eng.next(&mut topo) {
+                log.push(format!("{sig:?}"));
+            }
+            (log, topo.now)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -2,14 +2,16 @@
 //! share link capacity.
 //!
 //! The single-transfer path ([`Topology::transfer_from`]) integrates one
-//! flow to completion. Co-allocated (striped) access needs the dual
-//! view: a *set* of flows, one per source replica, advanced together in
-//! simulated time so that (a) flows from the same site split that
-//! site's sampled link bandwidth, (b) all flows optionally share a
-//! client-side downlink cap, and (c) a completion immediately returns
-//! capacity to the survivors. [`FlowSet`] provides exactly that and
-//! nothing more; scheduling (which bytes go on which flow) lives in
-//! `crate::coalloc`.
+//! flow to completion. Concurrent access — co-allocated stripe streams
+//! *and*, since the open-loop runtime (`simnet::engine`), unrelated
+//! requests in flight at once — needs the dual view: a *set* of flows
+//! advanced together in simulated time so that (a) flows from the same
+//! site split that site's sampled link bandwidth, (b) flows of the same
+//! client share that client's downlink cap, and (c) a completion
+//! immediately returns capacity to the survivors. [`FlowSet`] provides
+//! exactly that and nothing more; scheduling (which bytes go on which
+//! flow) lives in `crate::coalloc`, and event ordering in
+//! [`crate::simnet::engine`].
 //!
 //! Sharing convention: per-flow bandwidth is
 //! [`Topology::current_bandwidth`], which divides the link by the
@@ -18,8 +20,12 @@
 //! `GridFtp::fetch` does for single transfers); same-site flows then
 //! share that link through the counter itself, so single-source and
 //! co-allocated paths see the identical per-stream share and
-//! comparisons between them are fair. The downlink cap is the one
-//! piece of sharing the set computes internally.
+//! comparisons between them are fair. The downlink caps are the one
+//! piece of sharing the set computes internally: each flow belongs to a
+//! *group* (one per client endpoint — [`FlowSet::add_group`]), and a
+//! group's aggregate rate is clipped to its downlink capacity. A set
+//! built with [`FlowSet::new`] has a single group 0, which keeps the
+//! one-client co-allocation semantics unchanged.
 
 use crate::simnet::Topology;
 
@@ -42,6 +48,8 @@ pub struct Flow {
     /// will never complete and its delivered bytes are discarded by the
     /// caller (a cancelled block is re-fetched whole).
     pub cancelled: bool,
+    /// Downlink-sharing group (client endpoint) the flow belongs to.
+    pub group: usize,
 }
 
 impl Flow {
@@ -67,19 +75,54 @@ pub struct FlowSet {
     /// sub-step iterates, so long transfers that accumulate thousands
     /// of completed block-flows don't pay for them on every tick.
     live_ids: Vec<usize>,
-    /// Client-side downlink capacity shared by all flows (bytes/s);
-    /// `f64::INFINITY` means the WAN links are the only bottleneck.
-    pub downlink: f64,
+    /// Per-group client downlink capacities (bytes/s);
+    /// `f64::INFINITY` means the WAN links are the only bottleneck for
+    /// that group. Group 0 always exists (the [`FlowSet::new`] cap).
+    groups: Vec<f64>,
 }
 
 impl FlowSet {
+    /// A set with a single downlink group 0 capped at `downlink` — the
+    /// one-client configuration every pre-runtime caller uses.
     pub fn new(downlink: f64) -> FlowSet {
-        FlowSet { flows: Vec::new(), live_ids: Vec::new(), downlink }
+        FlowSet { flows: Vec::new(), live_ids: Vec::new(), groups: vec![downlink] }
     }
 
-    /// Add a flow of `bytes` from `site`, paying `lead` seconds of setup
-    /// latency first. Returns the flow's index.
+    /// Register another client endpoint with its own downlink capacity;
+    /// returns the group id to pass to [`FlowSet::add_in`]. Flows in
+    /// different groups contend only on shared site links, never on
+    /// each other's downlink.
+    pub fn add_group(&mut self, downlink: f64) -> usize {
+        self.groups.push(downlink);
+        self.groups.len() - 1
+    }
+
+    /// Downlink capacity of `group`.
+    pub fn group_cap(&self, group: usize) -> f64 {
+        self.groups[group]
+    }
+
+    /// Number of downlink groups (≥ 1).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Add a flow of `bytes` from `site` in downlink group 0, paying
+    /// `lead` seconds of setup latency first. Returns the flow's index.
     pub fn add(&mut self, topo: &Topology, site: usize, bytes: f64, lead: f64) -> usize {
+        self.add_in(topo, site, bytes, lead, 0)
+    }
+
+    /// [`FlowSet::add`] into an explicit downlink group.
+    pub fn add_in(
+        &mut self,
+        topo: &Topology,
+        site: usize,
+        bytes: f64,
+        lead: f64,
+        group: usize,
+    ) -> usize {
+        debug_assert!(group < self.groups.len());
         self.flows.push(Flow {
             site,
             remaining: bytes.max(0.0),
@@ -88,6 +131,7 @@ impl FlowSet {
             started_at: topo.now,
             finished_at: None,
             cancelled: false,
+            group,
         });
         self.live_ids.push(self.flows.len() - 1);
         self.flows.len() - 1
@@ -129,11 +173,13 @@ impl FlowSet {
     /// through the `active_transfers` counter their registration
     /// bumped), capped by the source's disk streaming rate (the
     /// slower pipeline stage dominates, as in
-    /// [`Topology::transfer_from`]), then scaled down if the aggregate
-    /// exceeds the client downlink. Flows still paying connection-setup
-    /// latency move nothing yet and do not consume downlink.
+    /// [`Topology::transfer_from`]), then scaled down per downlink
+    /// group if that group's aggregate exceeds its client downlink.
+    /// Flows still paying connection-setup latency move nothing yet and
+    /// do not consume downlink.
     pub fn bandwidths(&self, topo: &mut Topology) -> Vec<(usize, f64)> {
         let mut bws: Vec<(usize, f64)> = Vec::with_capacity(self.live_ids.len());
+        let mut totals = vec![0.0f64; self.groups.len()];
         for &i in &self.live_ids {
             let f = &self.flows[i];
             let bw = if f.lead > 0.0 {
@@ -142,13 +188,13 @@ impl FlowSet {
                 let disk = topo.site(f.site).cfg.disk_rate;
                 topo.current_bandwidth(f.site).min(disk)
             };
+            totals[f.group] += bw;
             bws.push((i, bw));
         }
-        let total: f64 = bws.iter().map(|&(_, b)| b).sum();
-        if total > self.downlink {
-            let scale = self.downlink / total;
-            for pair in &mut bws {
-                pair.1 *= scale;
+        for pair in &mut bws {
+            let g = self.flows[pair.0].group;
+            if totals[g] > self.groups[g] {
+                pair.1 *= self.groups[g] / totals[g];
             }
         }
         bws
@@ -475,6 +521,63 @@ mod tests {
         fs.add(&topo, 0, 1e6, 0.5);
         let done = fs.advance(&mut topo, 10.0);
         assert!((done[0].at - 1.5).abs() < 1e-6, "at {}", done[0].at);
+    }
+
+    #[test]
+    fn groups_do_not_share_downlink() {
+        let mut topo = flat_topo(3);
+        let mut fs = FlowSet::new(1e6);
+        let g2 = fs.add_group(1e6);
+        // Two flows from distinct sites in distinct groups: neither
+        // group's 1e6 cap binds (each group aggregates one 1e6 flow),
+        // so both finish at t=1 — unlike the single-group case where
+        // they would split one cap and finish at t=2.
+        fs.add_in(&topo, 0, 1e6, 0.0, 0);
+        fs.add_in(&topo, 1, 1e6, 0.0, g2);
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert!((c.at - 1.0).abs() < 1e-6, "at {}", c.at);
+        }
+    }
+
+    #[test]
+    fn per_group_caps_bind_independently() {
+        let mut topo = flat_topo(4);
+        let mut fs = FlowSet::new(0.5e6); // group 0: tight cap
+        let g2 = fs.add_group(f64::INFINITY); // group 1: uncapped
+        fs.add_in(&topo, 0, 1e6, 0.0, 0);
+        fs.add_in(&topo, 1, 1e6, 0.0, 0);
+        fs.add_in(&topo, 2, 1e6, 0.0, g2);
+        // Group 0: 2e6 aggregate clipped to 0.5e6 → 0.25e6 each → t=4.
+        // Group 1: full link rate → t=1.
+        let done = fs.advance(&mut topo, 30.0);
+        assert_eq!(done.len(), 3);
+        assert!((done[0].at - 1.0).abs() < 1e-6, "uncapped at {}", done[0].at);
+        assert!((done[1].at - 4.0).abs() < 1e-6, "capped at {}", done[1].at);
+        assert!((done[2].at - 4.0).abs() < 1e-6, "capped at {}", done[2].at);
+        assert_eq!(fs.group_count(), 2);
+        assert_eq!(fs.group_cap(0), 0.5e6);
+    }
+
+    #[test]
+    fn same_site_cross_group_flows_still_share_the_link() {
+        let mut topo = flat_topo(2);
+        // Two clients fetching from one site: the link is the shared
+        // resource even though downlinks are disjoint.
+        topo.begin_transfer(0);
+        topo.begin_transfer(0);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let g2 = fs.add_group(f64::INFINITY);
+        fs.add_in(&topo, 0, 1e6, 0.0, 0);
+        fs.add_in(&topo, 0, 1e6, 0.0, g2);
+        let done = fs.advance(&mut topo, 30.0);
+        // active=2 → share 1/3 each → both complete at t=3, exactly as
+        // two same-group streams would.
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert!((c.at - 3.0).abs() < 1e-6, "at {}", c.at);
+        }
     }
 
     #[test]

@@ -19,14 +19,23 @@
 //!   co-allocation failover path ([`crate::coalloc`]) exists to absorb.
 //!
 //! Simulated time is explicit (`f64` seconds) so experiments are fully
-//! deterministic given a seed.
+//! deterministic given a seed. Historically every experiment replayed
+//! requests serially (one transfer alone on the grid at a time); that
+//! assumption is gone: the [`engine`] module provides the open-loop
+//! discrete-event kernel — an event queue over arrivals, timers, and
+//! [`FlowSet`] completions — under which many transfers are in flight
+//! simultaneously, sharing site links and per-client downlinks. The
+//! serial replay survives only as the concurrency-1 special case the
+//! parity tests pin against (`experiment::run_quality_trace`).
 
+pub mod engine;
 pub mod flows;
 pub mod link;
 pub mod topology;
 pub mod trace;
 pub mod workload;
 
+pub use engine::{Engine, Signal};
 pub use flows::{Completion, Flow, FlowSet};
 pub use link::Link;
 pub use topology::{Fault, FaultKind, Site, Topology};

@@ -163,6 +163,17 @@ impl Topology {
         self.now += dt;
     }
 
+    /// Advance simulated time to the absolute instant `t` (no-op if
+    /// the clock is already past it). The event kernel
+    /// ([`crate::simnet::engine::Engine`]) uses this so scheduled
+    /// instants land exactly, with no accumulated floating-point drift
+    /// from repeated relative advances.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     /// Sample the instantaneous bandwidth a new transfer from `site`
     /// would get right now. 0 for a dead site (its flows stall);
     /// scaled down while a link-degradation fault is active.
@@ -172,6 +183,33 @@ impl Topology {
         }
         let concurrent = self.sites[site].active_transfers;
         self.links[site].bandwidth_at(self.now, concurrent) * self.degrade_factor(site)
+    }
+
+    /// Shared cost model behind [`Self::transfer_from`] and
+    /// [`Self::probe_transfer`]: disk stage (seek + streaming) and WAN
+    /// stage (latency + bucket-integrated byte movement, stretched by
+    /// any active link degradation) pipelined, the slower dominating.
+    fn transfer_cost(
+        site: &Site,
+        link: &mut Link,
+        degrade: f64,
+        now: f64,
+        bytes: f64,
+        concurrent: usize,
+    ) -> (f64, f64) {
+        let disk = site.cfg.drd_time_ms / 1e3 + bytes / site.cfg.disk_rate;
+        let mut wan = link.transfer_duration(now, bytes, concurrent);
+        // An active link degradation stretches the byte-moving part of
+        // the WAN stage (approximation: the factor is treated as
+        // constant over the transfer, exact when the fault triggered
+        // before the transfer started).
+        if degrade < 1.0 {
+            let latency = link.latency;
+            wan = latency + (wan - latency).max(0.0) / degrade.max(1e-9);
+        }
+        let duration = disk.max(wan);
+        let mean_bw = bytes / duration;
+        (duration, mean_bw)
     }
 
     /// Simulate one read transfer of `bytes` from `site` starting now;
@@ -184,23 +222,35 @@ impl Topology {
             // Dead replica: the fetch never completes.
             return (f64::INFINITY, 0.0);
         }
-        let concurrent = self.sites[site].active_transfers;
-        let disk = self.sites[site].cfg.drd_time_ms / 1e3
-            + bytes / self.sites[site].cfg.disk_rate;
-        let mut wan = self.links[site].transfer_duration(self.now, bytes, concurrent);
-        // An active link degradation stretches the byte-moving part of
-        // the WAN stage (approximation: the factor is treated as
-        // constant over the transfer, exact when the fault triggered
-        // before the transfer started).
         let degrade = self.degrade_factor(site);
-        if degrade < 1.0 {
-            let latency = self.links[site].latency;
-            wan = latency + (wan - latency).max(0.0) / degrade.max(1e-9);
+        let concurrent = self.sites[site].active_transfers;
+        let now = self.now;
+        Self::transfer_cost(
+            &self.sites[site],
+            &mut self.links[site],
+            degrade,
+            now,
+            bytes,
+            concurrent,
+        )
+    }
+
+    /// What a transfer of `bytes` from `site` would cost right now for
+    /// a client adding `extra_transfers` concurrent streams on top of
+    /// the site's current in-flight count — **without mutating any
+    /// real state**. Only the one link is cloned (its RNG stream is
+    /// consumed on the clone and discarded), which replaces the
+    /// clairvoyant oracle's full-topology probe clones: the old
+    /// `clone_for_probe()`-per-candidate pattern deep-copied every
+    /// site and link O(sites × requests) times per experiment.
+    pub fn probe_transfer(&self, site: usize, bytes: f64, extra_transfers: usize) -> (f64, f64) {
+        if !self.site_alive(site) {
+            return (f64::INFINITY, 0.0);
         }
-        // Disk and WAN pipeline; the slower stage dominates.
-        let duration = disk.max(wan);
-        let mean_bw = bytes / duration;
-        (duration, mean_bw)
+        let degrade = self.degrade_factor(site);
+        let concurrent = self.sites[site].active_transfers + extra_transfers;
+        let mut link = self.links[site].clone();
+        Self::transfer_cost(&self.sites[site], &mut link, degrade, self.now, bytes, concurrent)
     }
 
     /// Mark a transfer in flight (affects sharing for others).
@@ -318,6 +368,51 @@ mod tests {
         let mut c = topo();
         c.schedule_fault(0, 1e9, FaultKind::LinkDegrade { factor: 0.25 });
         assert_eq!(c.degrade_factor(0), 1.0);
+    }
+
+    #[test]
+    fn probe_transfer_matches_clone_probe_and_mutates_nothing() {
+        let mut t = topo();
+        t.advance(500.0);
+        t.begin_transfer(3);
+        // The link-local probe must agree exactly with the old
+        // full-topology clone probe...
+        let mut clone = t.clone_for_probe();
+        let (d_clone, bw_clone) = clone.transfer_from(3, 25e6);
+        let (d_probe, bw_probe) = t.probe_transfer(3, 25e6, 0);
+        assert_eq!(d_clone, d_probe);
+        assert_eq!(bw_clone, bw_probe);
+        // ...including the extra-stream variant (clone + begin_transfer).
+        let mut clone2 = t.clone_for_probe();
+        clone2.begin_transfer(3);
+        let (d2, _) = clone2.transfer_from(3, 25e6);
+        let (p2, _) = t.probe_transfer(3, 25e6, 1);
+        assert_eq!(d2, p2);
+        assert!(p2 > d_probe, "an extra stream must slow the probe");
+        // ...and leave the real topology untouched: a probe before a
+        // real transfer does not change the real transfer's outcome.
+        let mut fresh = topo();
+        fresh.advance(500.0);
+        fresh.begin_transfer(3);
+        let (d_fresh, _) = fresh.transfer_from(3, 25e6);
+        let (d_real, _) = t.transfer_from(3, 25e6);
+        assert_eq!(d_fresh, d_real);
+        // Dead sites probe as unreachable.
+        t.schedule_fault(1, 0.0, FaultKind::ReplicaDeath);
+        let (d_dead, bw_dead) = t.probe_transfer(1, 1e6, 0);
+        assert!(d_dead.is_infinite());
+        assert_eq!(bw_dead, 0.0);
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let mut t = topo();
+        t.advance_to(100.0);
+        assert_eq!(t.now, 100.0);
+        t.advance_to(50.0); // never backwards
+        assert_eq!(t.now, 100.0);
+        t.advance_to(100.0);
+        assert_eq!(t.now, 100.0);
     }
 
     #[test]

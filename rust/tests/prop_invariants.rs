@@ -1,14 +1,18 @@
 //! Property-based tests over the coordinator's core invariants
-//! (routing/matching/state — the L3 contract), using the in-tree
-//! `util::prop` runner (seeded, replayable).
+//! (routing/matching/state — the L3 contract) and the shared
+//! concurrent-flow engine (bandwidth conservation + no starvation,
+//! ISSUE 4), using the in-tree `util::prop` runner (seeded,
+//! replayable).
 
 use globus_replica::classad::{
     eval_in_match, parse_classad, rank_candidates, symmetric_match, AdBuilder, Value,
 };
+use globus_replica::config::GridConfig;
 use globus_replica::directory::entry::{Dn, Entry};
 use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
 use globus_replica::directory::{Dit, Filter, Scope};
 use globus_replica::forecast::forecast_bank;
+use globus_replica::simnet::{FaultKind, FlowSet, Topology};
 use globus_replica::util::prng::Rng;
 use globus_replica::util::prop::{forall, Config};
 
@@ -206,6 +210,203 @@ fn prop_forecast_bank_invariants() {
         }
         if out.mses[out.best_index()] > out.mses.iter().cloned().fold(f64::INFINITY, f64::min) {
             return Err("best_index is not argmin".into());
+        }
+        Ok(())
+    });
+}
+
+/// A deterministic flat topology for flow properties: per-site link
+/// rates are fixed (no noise/diurnal/congestion), so capacity bounds
+/// are exact.
+fn flow_topo(rng: &mut Rng, n: usize) -> (Topology, Vec<f64>) {
+    let mut cfg = GridConfig::generate(n, 1000 + rng.below(10_000));
+    let mut rates = Vec::with_capacity(n);
+    for s in &mut cfg.sites {
+        s.wan_bandwidth = rng.range(0.2e6, 3e6);
+        s.diurnal_amp = 0.0;
+        s.noise_frac = 0.0;
+        s.congestion_prob = 0.0;
+        s.ar_coeff = 0.0;
+        s.latency = 0.0;
+        s.drd_time_ms = 0.0;
+        s.disk_rate = 1e9;
+        rates.push(s.wan_bandwidth);
+    }
+    (Topology::build(&cfg), rates)
+}
+
+#[test]
+fn prop_flowset_bandwidth_conservation() {
+    // The shared-kernel invariant (ISSUE 4): at every instant, the sum
+    // of flow rates never exceeds (a) any site link's capacity or
+    // (b) any downlink group's cap — under randomized flows, groups,
+    // leads, advances and cancels.
+    forall("flowset conservation", cfg(80), |rng| {
+        let n_sites = 2 + rng.index(4);
+        let (mut topo, rates) = flow_topo(rng, n_sites);
+        let mut fs = FlowSet::new(rng.range(0.1e6, 4e6));
+        let n_groups = 1 + rng.index(3);
+        for _ in 1..n_groups {
+            fs.add_group(if rng.chance(0.3) {
+                f64::INFINITY
+            } else {
+                rng.range(0.1e6, 4e6)
+            });
+        }
+        let n_flows = 1 + rng.index(8);
+        let mut ids = Vec::new();
+        for _ in 0..n_flows {
+            let site = rng.index(n_sites);
+            let group = rng.index(n_groups);
+            // Per the sharing convention, every stream registers.
+            topo.begin_transfer(site);
+            ids.push(fs.add_in(
+                &topo,
+                site,
+                rng.range(1e5, 4e6),
+                if rng.chance(0.3) { rng.range(0.0, 2.0) } else { 0.0 },
+                group,
+            ));
+        }
+        for _ in 0..12 {
+            let bws = fs.bandwidths(&mut topo);
+            let mut per_site = vec![0.0f64; n_sites];
+            let mut per_group = vec![0.0f64; n_groups];
+            for &(id, bw) in &bws {
+                if bw < 0.0 {
+                    return Err(format!("negative rate {bw} on flow {id}"));
+                }
+                per_site[fs.flow(id).site] += bw;
+                per_group[fs.flow(id).group] += bw;
+            }
+            for (s, &sum) in per_site.iter().enumerate() {
+                // k registered streams on one link share k/(k+1) of the
+                // sampled rate, so the raw link rate bounds the sum.
+                if sum > rates[s] * (1.0 + 1e-9) {
+                    return Err(format!("site {s} oversubscribed: {sum} > {}", rates[s]));
+                }
+            }
+            for (g, &sum) in per_group.iter().enumerate() {
+                if sum > fs.group_cap(g) * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "group {g} over its downlink: {sum} > {}",
+                        fs.group_cap(g)
+                    ));
+                }
+            }
+            // Random walk: advance, sometimes cancel a live flow.
+            fs.advance(&mut topo, rng.range(0.05, 1.5));
+            if rng.chance(0.2) {
+                let id = ids[rng.index(ids.len())];
+                if fs.flow(id).finished_at.is_none() && !fs.flow(id).cancelled {
+                    fs.cancel(id);
+                    topo.end_transfer(fs.flow(id).site);
+                }
+            }
+            // Byte accounting never goes backwards or overshoots.
+            for &id in &ids {
+                let f = fs.flow(id);
+                if f.delivered < -1e-9 || f.remaining < -1e-9 {
+                    return Err(format!("negative accounting on flow {id}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flowset_no_starvation() {
+    // Every flow from a live site eventually completes — under random
+    // arrivals, cancels, per-group caps and an optional replica-death
+    // fault. Dead-site flows stall (never complete) but must not stop
+    // time or peers.
+    forall("flowset no starvation", cfg(60), |rng| {
+        let n_sites = 2 + rng.index(4);
+        let (mut topo, _) = flow_topo(rng, n_sites);
+        // A site may die at a random instant.
+        let dead_site = if rng.chance(0.4) {
+            let s = rng.index(n_sites);
+            topo.schedule_fault(s, rng.range(0.0, 5.0), FaultKind::ReplicaDeath);
+            Some(s)
+        } else {
+            None
+        };
+        let mut fs = FlowSet::new(rng.range(0.2e6, 2e6));
+        let g2 = fs.add_group(f64::INFINITY);
+        let n_flows = 1 + rng.index(6);
+        let mut ids = Vec::new();
+        let mut cancelled = Vec::new();
+        for k in 0..n_flows {
+            let site = rng.index(n_sites);
+            topo.begin_transfer(site);
+            let id = fs.add_in(
+                &topo,
+                site,
+                rng.range(1e5, 2e6),
+                rng.range(0.0, 1.0),
+                if k % 2 == 0 { 0 } else { g2 },
+            );
+            ids.push(id);
+            // Staggered arrivals + occasional cancels mid-run.
+            let step = rng.range(0.1, 2.0);
+            fs.advance(&mut topo, step);
+            // Only flows still in flight can be cancelled; one that
+            // already finished keeps its full accounting checks below.
+            if rng.chance(0.15) && fs.flow(id).finished_at.is_none() {
+                fs.cancel(id);
+                topo.end_transfer(site);
+                cancelled.push(id);
+            }
+        }
+        // Generous horizon: total bytes over the slowest possible
+        // aggregate path, plus leads and slack.
+        let t_end = topo.now + (n_flows as f64 * 2e6) / 0.2e6 * (n_flows as f64) + 60.0;
+        let mut guard = 0;
+        while fs.live() > 0 && topo.now < t_end {
+            fs.advance(&mut topo, 5.0);
+            guard += 1;
+            if guard > 100_000 {
+                return Err("advance loop did not converge".into());
+            }
+        }
+        for &id in &ids {
+            let f = fs.flow(id);
+            if cancelled.contains(&id) {
+                if f.finished_at.is_some() && f.cancelled {
+                    return Err(format!("cancelled flow {id} also completed"));
+                }
+                continue;
+            }
+            let from_dead = Some(f.site) == dead_site;
+            match f.finished_at {
+                // A dead-site flow may still complete legitimately if
+                // it drained before the death instant; the accounting
+                // checks below cover that case.
+                Some(at) => {
+                    if at < f.started_at - 1e-9 {
+                        return Err(format!("flow {id} finished before it started"));
+                    }
+                    if (f.delivered + f.remaining) < 1e5 - 1.0 {
+                        return Err(format!("flow {id} lost bytes"));
+                    }
+                    if f.remaining > 1e-6 {
+                        return Err(format!("flow {id} finished with bytes left"));
+                    }
+                }
+                None => {
+                    if !from_dead {
+                        return Err(format!(
+                            "live-site flow {id} starved (site {}, delivered {})",
+                            f.site, f.delivered
+                        ));
+                    }
+                }
+            }
+        }
+        // Time always advanced past stalls.
+        if fs.live() > 0 && topo.now < t_end {
+            return Err("clock stopped with live flows".into());
         }
         Ok(())
     });

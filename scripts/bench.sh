@@ -1,20 +1,21 @@
 #!/usr/bin/env bash
 # Perf-trajectory recorder (ROADMAP perf log).
 #
-#   scripts/bench.sh              full run; writes BENCH_matchmaking.json
-#                                 and BENCH_coalloc.json
+#   scripts/bench.sh              full run; writes BENCH_matchmaking.json,
+#                                 BENCH_coalloc.json and BENCH_contention.json
 #   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
 #
 # Runs the selection-path benches (matchmaking core, broker phase
-# breakdown, directory/GRIS) plus the co-allocation bench (failover
-# path + churn scenario) and records the headline numbers as JSON, so
-# the perf trajectory across PRs is written down instead of scrolling
-# away in bench output.
+# breakdown, directory/GRIS), the co-allocation bench (failover path +
+# churn scenario) and the open-loop contention load sweep, and records
+# the headline numbers as JSON, so the perf trajectory across PRs is
+# written down instead of scrolling away in bench output.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 out="${BENCH_JSON:-BENCH_matchmaking.json}"
 coalloc_out="${BENCH_COALLOC_JSON:-BENCH_coalloc.json}"
+contention_out="${BENCH_CONTENTION_JSON:-BENCH_contention.json}"
 
 echo "== bench: matchmaking (JSON -> ${out}) =="
 BENCH_JSON="${out}" cargo bench --bench bench_matchmaking
@@ -28,10 +29,16 @@ cargo bench --bench bench_directory
 echo "== bench: coalloc (JSON -> ${coalloc_out}) =="
 BENCH_JSON="${coalloc_out}" cargo bench --bench bench_coalloc
 
+echo "== bench: contention load sweep (JSON -> ${contention_out}) =="
+BENCH_JSON="${contention_out}" cargo bench --bench bench_contention
+
 echo
 echo "recorded ${out}:"
 cat "${out}"
 echo
 echo "recorded ${coalloc_out}:"
 cat "${coalloc_out}"
+echo
+echo "recorded ${contention_out}:"
+cat "${contention_out}"
 echo
