@@ -1,13 +1,28 @@
 //! R4 — directory query cost (paper §3/§5.1.2 search phase): GRIS
-//! searches with dynamic providers, GIIS discovery at scale, and the
-//! full TCP round trip a deployed broker pays.
+//! searches with dynamic providers, GIIS discovery at scale, the full
+//! TCP round trip a deployed broker pays, and (ISSUE 5) selection at
+//! hundreds of sites — GIIS-routed drill-down vs the direct full
+//! fan-out, plus the event-driven fan-out kernel drive.
+//!
+//! With `BENCH_JSON=<path>` set, the headline numbers (per-case stats,
+//! the GIIS-vs-direct speedup at 256 sites × 32 replicas, and the
+//! per-select query economy) are written as JSON — `scripts/bench.sh`
+//! records this as `BENCH_directory.json`.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use globus_replica::broker::RankPolicy;
+use globus_replica::classad::parse_classad;
+use globus_replica::config::GridConfig;
 use globus_replica::directory::client::DirectoryClient;
+use globus_replica::directory::fanout::{run_fanout_on, FanoutPolicy};
 use globus_replica::directory::server::DirectoryServer;
 use globus_replica::directory::{Dn, Entry, Filter, Giis, Gris, Scope};
-use globus_replica::util::bench::Bench;
+use globus_replica::experiment::SimGrid;
+use globus_replica::simnet::{Topology, WorkloadSpec};
+use globus_replica::util::bench::{Bench, Stats};
+use globus_replica::util::json::Json;
 use globus_replica::util::prng::Rng;
 
 fn demo_gris(volumes: usize) -> Gris {
@@ -100,5 +115,95 @@ fn main() {
         c.search(&root, Scope::Sub, &f_all).unwrap().len()
     });
 
-    b.finish();
+    // ISSUE 5 — discovery at hundreds of sites, on a live SimGrid
+    // (dynamic providers, history feeds): the direct route queries
+    // every replica site's GRIS per selection; the GIIS route pays one
+    // broad soft-state lookup plus K drill-downs.
+    let n_sites = 256usize;
+    let replicas = 32usize;
+    let drill = 4usize;
+    let cfg = GridConfig::generate(n_sites, 42);
+    let spec = WorkloadSpec { files: 4, ..Default::default() };
+    let mut grid = SimGrid::build(&cfg, &spec, replicas, 64);
+    grid.warm(2);
+    let req = parse_classad("reqdSpace = 0; requirement = TRUE;").unwrap();
+    let direct = grid.broker(RankPolicy::ForecastBandwidth { engine: None });
+    let dir = grid.hierarchy(f64::INFINITY);
+    let hier = grid.broker_hier(RankPolicy::ForecastBandwidth { engine: None }, dir, drill);
+    let logical = grid.files[0].clone();
+    let s_direct = b
+        .case(
+            &format!("direct select, {n_sites} sites × {replicas} replicas"),
+            || direct.select(&logical, &req).unwrap().ranked.len(),
+        )
+        .clone();
+    let s_hier = b
+        .case(
+            &format!("GIIS-routed select, drill {drill}"),
+            || hier.select(&logical, &req).unwrap().ranked.len(),
+        )
+        .clone();
+    // Sanity: the two routes agree on the winner under fresh soft
+    // state, and the query bills differ as designed.
+    let a = direct.select(&logical, &req).unwrap();
+    let h = hier.select(&logical, &req).unwrap();
+    assert_eq!(a.site, h.site, "fresh-registration parity");
+    let full_queries = a.candidates.len();
+    let hier_queries = h.trace.drill_downs;
+    assert!(hier_queries < full_queries);
+
+    // The event-driven fan-out kernel drive at hundreds of sites. One
+    // scratch clock topology reused across iterations, so the measured
+    // loop is the engine drive itself, not scratch setup.
+    let sites: Vec<(usize, f64)> = (0..n_sites)
+        .map(|i| (i, grid.topo.site(i).cfg.latency * 2.0))
+        .collect();
+    let mut scratch = Topology::build(&GridConfig::generate(1, 0));
+    b.case(&format!("event-driven fanout drive, {n_sites} queries"), || {
+        let now = scratch.now;
+        run_fanout_on(
+            &mut scratch,
+            now,
+            &sites,
+            FanoutPolicy { max_in_flight: 16, ..Default::default() },
+        )
+        .responses()
+        .len()
+    });
+
+    let stats = b.finish();
+    let speedup = if s_hier.mean_ns > 0.0 { s_direct.mean_ns / s_hier.mean_ns } else { 0.0 };
+    println!(
+        "\nGIIS-routed vs direct @{n_sites} sites × {replicas} replicas: {speedup:.2}x \
+         ({hier_queries} drill-downs vs {full_queries} site queries per select)"
+    );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("directory".to_string()));
+        root.insert(
+            "cases".to_string(),
+            Json::Arr(stats.iter().map(Stats::to_json).collect()),
+        );
+        // Key carries the measured geometry so retuning n_sites /
+        // replicas can't silently relabel the perf trajectory.
+        root.insert(
+            format!("giis_vs_direct_speedup_{n_sites}x{replicas}"),
+            Json::Num(speedup),
+        );
+        root.insert("sites".to_string(), Json::Num(n_sites as f64));
+        root.insert("replicas_per_file".to_string(), Json::Num(replicas as f64));
+        root.insert(
+            "drill_queries_per_select".to_string(),
+            Json::Num(hier_queries as f64),
+        );
+        root.insert(
+            "full_fanout_queries_per_select".to_string(),
+            Json::Num(full_queries as f64),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
 }

@@ -1,4 +1,23 @@
 //! The broker engine: Search → Match → Access orchestration.
+//!
+//! The Search phase has two discovery routes (ISSUE 5):
+//!
+//! * **Direct fan-out** (the default): every replica site's GRIS is
+//!   queried for fresh entries — through a bounded scoped-thread pool
+//!   when the [`InfoService`] blocks on real per-site I/O. Fresh, but
+//!   the query count grows with the replica set; at hundreds of sites
+//!   the *simulated* analog is the event-driven
+//!   [`crate::directory::fanout::DirectoryFanout`].
+//! * **Hierarchical GIIS → GRIS drill-down**
+//!   ([`Broker::with_discovery`]): the broad query is answered from the
+//!   GIIS's soft-state registration snapshots (stale by construction —
+//!   as old as each site's last refresh), sites without a live
+//!   registration are simply not discovered, and only the top
+//!   [`HierDiscovery::drill_down`] summary-ranked candidates get a
+//!   fresh GRIS query. Per selection this costs 1 broad lookup + K
+//!   drill-downs instead of N site queries; when every registration is
+//!   fresh the selection is *provably identical* to the direct route
+//!   (the `it_giis` parity suite pins this).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
@@ -16,6 +35,7 @@ use crate::directory::dit::Scope;
 use crate::directory::entry::{Dn, Entry};
 use crate::directory::filter::Filter;
 use crate::directory::gris::Gris;
+use crate::directory::hier::HierarchicalDirectory;
 use crate::metrics::Metrics;
 
 use super::convert::{entries_to_candidate, Candidate};
@@ -78,16 +98,22 @@ impl LocalInfoService {
         self.grises.insert(site.to_string(), gris);
     }
 
+    /// The registered GRIS handle for `site`, if any.
+    pub fn gris(&self, site: &str) -> Option<&Arc<RwLock<Gris>>> {
+        self.grises.get(site)
+    }
+
+    /// All registered (site, GRIS) handles — what a
+    /// [`HierarchicalDirectory`] is wired from.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Arc<RwLock<Gris>>)> {
+        self.grises.iter().map(|(s, g)| (s.as_str(), g))
+    }
+
     /// All storage entries of one site (replica-manager placement scan).
     pub fn query_site_all(&self, site: &str) -> Result<Vec<Entry>> {
         self.query_site(
             site,
-            &Filter::parse(
-                "(|(objectClass=GridStorageServerVolume)\
-                  (objectClass=GridStorageTransferBandwidth)\
-                  (objectClass=GridStorageSourceTransferBandwidth))",
-            )
-            .unwrap(),
+            &Filter::parse(crate::directory::hier::STORAGE_SEARCH_FILTER).unwrap(),
         )
     }
 }
@@ -143,6 +169,11 @@ pub struct BrokerTrace {
     pub match_results: Vec<(String, bool)>,
     /// Ranked survivors, best first: (site, score).
     pub ranking: Vec<(String, f64)>,
+    /// Hierarchical route only: fresh GRIS drill-down queries issued.
+    pub drill_downs: usize,
+    /// Hierarchical route only: candidates served purely from the
+    /// (stale) GIIS registration snapshot.
+    pub summary_sites: usize,
 }
 
 /// Result of a selection.
@@ -212,6 +243,16 @@ pub struct SelectScratch {
     raw: Vec<(String, String, Vec<Entry>)>,
 }
 
+/// Hierarchical-discovery configuration: the shared directory plus how
+/// many summary-ranked candidates get a fresh drill-down query.
+#[derive(Clone)]
+pub struct HierDiscovery {
+    pub dir: Arc<RwLock<HierarchicalDirectory>>,
+    /// Top-K sites (by predicted bandwidth over the *stale* snapshots)
+    /// whose GRIS is queried fresh per selection. 0 = summaries only.
+    pub drill_down: usize,
+}
+
 /// The decentralized storage broker. One per client; cheap to clone
 /// (shared catalog + info service handles).
 #[derive(Clone)]
@@ -220,6 +261,7 @@ pub struct Broker {
     info: Arc<dyn InfoService>,
     policy: RankPolicy,
     metrics: Option<Arc<Metrics>>,
+    discovery: Option<HierDiscovery>,
 }
 
 impl Broker {
@@ -228,7 +270,7 @@ impl Broker {
         info: Arc<dyn InfoService>,
         policy: RankPolicy,
     ) -> Broker {
-        Broker { catalog, info, policy, metrics: None }
+        Broker { catalog, info, policy, metrics: None, discovery: None }
     }
 
     /// Attach a metrics registry; the Search phase records per-site
@@ -238,20 +280,27 @@ impl Broker {
         self
     }
 
+    /// Route the Search phase through the hierarchical GIIS → GRIS
+    /// drill-down path instead of the direct per-site fan-out (see the
+    /// module docs).
+    pub fn with_discovery(mut self, discovery: HierDiscovery) -> Broker {
+        self.discovery = Some(discovery);
+        self
+    }
+
     pub fn policy(&self) -> &RankPolicy {
         &self.policy
     }
 
     /// Build the "specialized LDAP search query" (paper §5.2) from the
     /// request ad: always fetch storage + bandwidth entries; the GRIS
-    /// evaluates dynamic attributes at query time.
+    /// evaluates dynamic attributes at query time. The hierarchical
+    /// route snapshots and drills with this same filter
+    /// ([`crate::directory::hier::STORAGE_SEARCH_FILTER`]) — the
+    /// parity contract depends on the two routes fetching the same
+    /// entry set.
     fn search_filter(_request: &ClassAd) -> Filter {
-        Filter::parse(
-            "(|(objectClass=GridStorageServerVolume)\
-              (objectClass=GridStorageTransferBandwidth)\
-              (objectClass=GridStorageSourceTransferBandwidth))",
-        )
-        .unwrap()
+        Filter::parse(crate::directory::hier::STORAGE_SEARCH_FILTER).unwrap()
     }
 
     /// Compile `request` for repeated selection: parse the search
@@ -304,9 +353,9 @@ impl Broker {
         const MAX_FANOUT_WORKERS: usize = 8;
         let info: &dyn InfoService = self.info.as_ref();
         let locations: &[(String, String)] = locations;
-        let responses: Vec<(Result<Vec<Entry>>, u64)> = if locations.len() > 1
-            && info.parallel_fanout()
-        {
+        let responses: Vec<(Result<Vec<Entry>>, u64)> = if let Some(disc) = &self.discovery {
+            self.hier_responses(disc, locations, &mut trace)
+        } else if locations.len() > 1 && info.parallel_fanout() {
             let next = AtomicUsize::new(0);
             let mut slots: Vec<Option<(Result<Vec<Entry>>, u64)>> =
                 (0..locations.len()).map(|_| None).collect();
@@ -382,6 +431,74 @@ impl Broker {
             m.histogram("broker.phase.convert_ns").observe_ns(t1.elapsed().as_nanos() as u64);
         }
         Ok((candidates, trace))
+    }
+
+    /// The hierarchical Search route (one selection): answer the broad
+    /// query from every replica site's GIIS registration snapshot,
+    /// rank the discovered sites by predicted bandwidth over that
+    /// *stale* data — the only information a real client has before
+    /// drilling down — and issue fresh GRIS queries only to the top
+    /// [`HierDiscovery::drill_down`] of them. Result slots mirror
+    /// `locations`; a site without a live registration (never pushed,
+    /// or TTL-expired) answers with an error and is simply not a
+    /// candidate, exactly like an unreachable site on the direct
+    /// route. Cached slots report 0 ns (they are part of the single
+    /// broad index lookup); drill-downs report their real query time.
+    fn hier_responses(
+        &self,
+        disc: &HierDiscovery,
+        locations: &[(String, String)],
+        trace: &mut BrokerTrace,
+    ) -> Vec<(Result<Vec<Entry>>, u64)> {
+        let mut dir = disc.dir.write().unwrap();
+        dir.note_broad();
+        let mut cached: Vec<Option<Vec<Entry>>> = locations
+            .iter()
+            .map(|(site, _)| dir.cached(site).map(|(e, _)| e.to_vec()))
+            .collect();
+        let discovered: Vec<usize> = (0..locations.len())
+            .filter(|&i| cached[i].is_some())
+            .collect();
+        let drill = {
+            let stale_cands: Vec<Candidate> = discovered
+                .iter()
+                .map(|&i| {
+                    entries_to_candidate(
+                        &locations[i].0,
+                        &locations[i].1,
+                        cached[i].as_deref().unwrap(),
+                    )
+                })
+                .collect();
+            self.policy.drill_slots(&stale_cands, disc.drill_down)
+        };
+        let mut ns: Vec<u64> = vec![0; locations.len()];
+        let mut fresh: Vec<Option<Vec<Entry>>> = vec![None; locations.len()];
+        for &oi in &drill {
+            let li = discovered[oi];
+            let tq = Instant::now();
+            if let Some(entries) = dir.drill_down(&locations[li].0) {
+                fresh[li] = Some(entries);
+                ns[li] = tq.elapsed().as_nanos() as u64;
+            }
+        }
+        trace.drill_downs = fresh.iter().filter(|f| f.is_some()).count();
+        trace.summary_sites = discovered.len() - trace.drill_downs;
+        locations
+            .iter()
+            .enumerate()
+            .map(|(i, (site, _))| {
+                match fresh[i].take().or_else(|| cached[i].take()) {
+                    Some(entries) => (Ok(entries), ns[i]),
+                    None => (
+                        Err(anyhow::anyhow!(
+                            "site {site:?} has no live GIIS registration"
+                        )),
+                        0,
+                    ),
+                }
+            })
+            .collect()
     }
 
     /// **Match phase** over pre-fetched candidates.
@@ -618,6 +735,19 @@ mod tests {
     }
 
     fn fixture_impl(policy: RankPolicy, parallel: bool) -> (Broker, ClassAd) {
+        let (catalog, info, request) = fixture_parts();
+        let info: Arc<dyn InfoService> = if parallel {
+            Arc::new(ForceParallel(info))
+        } else {
+            Arc::new(info)
+        };
+        (
+            Broker::new(Arc::new(Mutex::new(catalog)), info, policy),
+            request,
+        )
+    }
+
+    fn fixture_parts() -> (ReplicaCatalog, LocalInfoService, ClassAd) {
         let mut catalog = ReplicaCatalog::new();
         catalog
             .create_logical("run42.dat", Bytes::from_gb(1.0), "cms")
@@ -683,15 +813,29 @@ mod tests {
                    && other.MaxRDBandwidth > 50K/Sec;"#,
         )
         .unwrap();
-        let info: Arc<dyn InfoService> = if parallel {
-            Arc::new(ForceParallel(info))
-        } else {
-            Arc::new(info)
-        };
-        (
-            Broker::new(Arc::new(Mutex::new(catalog)), info, policy),
-            request,
-        )
+        (catalog, info, request)
+    }
+
+    /// Direct + hierarchical brokers over one shared grid, plus the
+    /// hierarchy handle (registrations already pushed).
+    fn hier_fixture(
+        policy: RankPolicy,
+        drill_down: usize,
+        ttl: f64,
+    ) -> (Broker, Broker, Arc<RwLock<HierarchicalDirectory>>, ClassAd) {
+        let (catalog, info, request) = fixture_parts();
+        let mut dir = HierarchicalDirectory::new(ttl);
+        for (site, gris) in info.iter() {
+            dir.add_site(site, gris.clone());
+        }
+        dir.refresh_all();
+        let dir = Arc::new(RwLock::new(dir));
+        let catalog = Arc::new(Mutex::new(catalog));
+        let info: Arc<dyn InfoService> = Arc::new(info);
+        let direct = Broker::new(catalog.clone(), info.clone(), policy.clone());
+        let hier = Broker::new(catalog, info, policy)
+            .with_discovery(HierDiscovery { dir: dir.clone(), drill_down });
+        (direct, hier, dir, request)
     }
 
     #[test]
@@ -890,6 +1034,48 @@ mod tests {
         )
         .unwrap();
         assert!(ok.get("rank").is_some());
+    }
+
+    #[test]
+    fn hier_route_matches_direct_when_registrations_are_fresh() {
+        for k in [0usize, 1, 3] {
+            let (direct, hier, _, request) =
+                hier_fixture(RankPolicy::ForecastBandwidth { engine: None }, k, 300.0);
+            let a = direct.select("run42.dat", &request).unwrap();
+            let b = hier.select("run42.dat", &request).unwrap();
+            assert_eq!(a.site, b.site, "drill_down={k}");
+            assert_eq!(a.score, b.score);
+            assert_eq!(a.trace.ranking, b.trace.ranking);
+            assert_eq!(a.trace.match_results, b.trace.match_results);
+            assert_eq!(b.trace.drill_downs, k.min(3));
+            assert_eq!(b.trace.summary_sites, 3 - k.min(3));
+        }
+    }
+
+    #[test]
+    fn hier_route_counts_broad_and_drill_queries() {
+        let (_, hier, dir, request) =
+            hier_fixture(RankPolicy::ForecastBandwidth { engine: None }, 1, 300.0);
+        hier.select("run42.dat", &request).unwrap();
+        hier.select("run42.dat", &request).unwrap();
+        let stats = dir.read().unwrap().stats();
+        assert_eq!(stats.broad_queries, 2, "one broad lookup per selection");
+        assert_eq!(stats.drill_downs, 2, "one top-candidate drill-down per selection");
+        assert_eq!(stats.refreshes, 3, "the initial refresh_all only");
+    }
+
+    #[test]
+    fn hier_route_drops_expired_registrations() {
+        let (_, hier, dir, request) =
+            hier_fixture(RankPolicy::ClassAdRank, 3, 60.0);
+        assert!(hier.select("run42.dat", &request).is_ok());
+        dir.write().unwrap().advance_to(120.0);
+        // All soft state expired: nothing is discovered any more.
+        let err = hier.select("run42.dat", &request).unwrap_err();
+        assert!(format!("{err:#}").contains("satisfies"));
+        // A soft-state refresh revives discovery.
+        dir.write().unwrap().refresh_all();
+        assert!(hier.select("run42.dat", &request).is_ok());
     }
 
     #[test]

@@ -29,8 +29,8 @@ pub mod selectors;
 pub use convert::{entries_to_candidate, Candidate};
 pub use engine::{
     parse_request_ad, parse_request_ad_with_budget, AccessStrategy, Broker, BrokerTrace,
-    CoallocSelection, InfoService, LocalInfoService, PreparedRequest, RemoteInfoService,
-    SelectScratch, REQUEST_AD_NAME_BUDGET,
+    CoallocSelection, HierDiscovery, InfoService, LocalInfoService, PreparedRequest,
+    RemoteInfoService, SelectScratch, REQUEST_AD_NAME_BUDGET,
 };
 pub use policy::RankPolicy;
 pub use selectors::{Selector, SelectorKind};

@@ -73,6 +73,18 @@ impl RankPolicy {
             .collect()
     }
 
+    /// Drill-down slot selection for the hierarchical discovery routes
+    /// (the broker's GIIS Search path and the open-loop discovery
+    /// driver share this, so both drill the same sites for the same
+    /// stale view): indices of the top `k` candidates by predicted
+    /// bandwidth over their (stale) ads, index-ascending on ties.
+    pub fn drill_slots(&self, stale: &[Candidate], k: usize) -> Vec<usize> {
+        let preds = self.predicted_bandwidth(stale);
+        let mut order = crate::directory::hier::drill_order(&preds);
+        order.truncate(k);
+        order
+    }
+
     /// Order the `matched` survivor indices best-first.
     pub fn order(
         &self,

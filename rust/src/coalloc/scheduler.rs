@@ -665,8 +665,8 @@ pub fn execute(
                     eng.schedule_tick(next_tick, 0);
                 }
             }
-            Some(Signal::Arrival { .. }) => {
-                unreachable!("the private coalloc engine schedules no arrivals")
+            Some(Signal::Arrival { .. }) | Some(Signal::Query { .. }) => {
+                unreachable!("the private coalloc engine schedules no arrivals or queries")
             }
             None => {
                 // No scheduled events and no flow progress — a stalled

@@ -92,7 +92,7 @@ impl DirectoryClient {
         Ok(parse_ldif(&body)?)
     }
 
-    /// Register a GRIS with a GIIS.
+    /// Register a GRIS with a GIIS (server-default TTL).
     pub fn register(
         &mut self,
         site: &str,
@@ -100,11 +100,25 @@ impl DirectoryClient {
         base: &Dn,
         summary: Vec<(String, String)>,
     ) -> Result<(), ClientError> {
+        self.register_ttl(site, addr, base, summary, None)
+    }
+
+    /// Register a GRIS with a GIIS, requesting an explicit soft-state
+    /// lifetime (simulated seconds).
+    pub fn register_ttl(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base: &Dn,
+        summary: Vec<(String, String)>,
+        ttl: Option<f64>,
+    ) -> Result<(), ClientError> {
         self.roundtrip(&Request::Register {
             site: site.into(),
             addr: addr.into(),
             base: base.clone(),
             summary,
+            ttl,
         })?;
         Ok(())
     }

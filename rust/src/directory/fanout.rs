@@ -1,0 +1,403 @@
+//! Event-driven directory fan-out on the simulation kernel (ISSUE 5
+//! tentpole).
+//!
+//! The broker's original Search fan-out was a blocking ≤ 8-worker
+//! scoped-thread pool — fine for a handful of real TCP sockets,
+//! useless for *simulating* discovery at hundreds of slow sites (the
+//! pool consumes no simulated time, so every response is magically
+//! fresh). [`DirectoryFanout`] models the fan-out the way the kernel
+//! models transfers: each per-site query is an event
+//! ([`crate::simnet::Engine::schedule_query`]) whose response lands
+//! after that site's simulated round-trip latency, under
+//!
+//! * **bounded in-flight concurrency** — at most
+//!   [`FanoutPolicy::max_in_flight`] queries outstanding; the next
+//!   queued site is issued when a response (or timeout) frees a slot,
+//! * **a per-query deadline** — a site slower than
+//!   [`FanoutPolicy::per_query_deadline`] resolves as a timeout at the
+//!   deadline instant (the client stops waiting; the site contributes
+//!   no fresh data), and
+//! * **a straggler cutoff** — [`FanoutPolicy::straggler_cutoff`]
+//!   seconds after the fan-out starts, everything still queued or in
+//!   flight is abandoned and the fan-out completes with what it has.
+//!
+//! Because responses take simulated time, a driver that selects at
+//! fan-out completion sees data of *mixed ages* — the first site's
+//! answer is older than the last site's — which is exactly the
+//! staleness a real MDS client lives with (`experiment::run_quality_open`
+//! drives this; `prop_invariants` pins the cap/completion/determinism
+//! contracts).
+//!
+//! The fan-out is transport-only: it decides *when* each site's
+//! response arrives; the caller samples the site's data at that
+//! instant (e.g. [`super::hier::HierarchicalDirectory::drill_down`]).
+
+use std::collections::BTreeMap;
+
+use crate::simnet::{Engine, Signal, Topology};
+
+/// Bounds on one fan-out.
+#[derive(Debug, Clone, Copy)]
+pub struct FanoutPolicy {
+    /// Maximum queries outstanding at once (≥ 1; the paper-era thread
+    /// pool's 8 is the default).
+    pub max_in_flight: usize,
+    /// A query slower than this (seconds) resolves as a timeout.
+    pub per_query_deadline: f64,
+    /// The whole fan-out is cut off this many seconds after it starts.
+    pub straggler_cutoff: f64,
+}
+
+impl Default for FanoutPolicy {
+    fn default() -> Self {
+        FanoutPolicy {
+            max_in_flight: 8,
+            per_query_deadline: f64::INFINITY,
+            straggler_cutoff: f64::INFINITY,
+        }
+    }
+}
+
+/// Allocator for kernel query ids — globally unique across every live
+/// fan-out sharing one [`Engine`], so a driver can route
+/// [`Signal::Query`] events by id alone.
+#[derive(Debug, Default)]
+pub struct QueryIds {
+    next: u64,
+}
+
+impl QueryIds {
+    pub fn new() -> QueryIds {
+        QueryIds::default()
+    }
+
+    pub fn next(&mut self) -> u64 {
+        let id = self.next;
+        self.next += 1;
+        id
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QueryState {
+    Queued,
+    InFlight,
+    Responded,
+    TimedOut,
+    CutOff,
+}
+
+#[derive(Debug, Clone)]
+struct Query {
+    site: usize,
+    latency: f64,
+    qid: u64,
+    state: QueryState,
+    resolved_at: f64,
+}
+
+/// What one [`DirectoryFanout::on_query`] delivery meant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FanoutStep {
+    /// `site`'s response arrived at `at`: sample its data now.
+    Response { site: usize, at: f64 },
+    /// `site` blew its per-query deadline; no data.
+    TimedOut { site: usize, at: f64 },
+    /// The straggler cutoff fired; remaining sites were abandoned.
+    CutOff { at: f64 },
+    /// Not one of this fan-out's ids (or already finished) — ignore.
+    Ignored,
+}
+
+/// One in-progress fan-out (see module docs).
+#[derive(Debug)]
+pub struct DirectoryFanout {
+    queries: Vec<Query>,
+    by_qid: BTreeMap<u64, usize>,
+    policy: FanoutPolicy,
+    cutoff_qid: Option<u64>,
+    started_at: f64,
+    /// Index of the next queued entry to issue.
+    next_queued: usize,
+    in_flight: usize,
+    outstanding: usize,
+    peak_in_flight: usize,
+    finished_at: Option<f64>,
+}
+
+impl DirectoryFanout {
+    /// Start a fan-out over `sites` (site index + round-trip query
+    /// latency in simulated seconds, issued in the given order). The
+    /// first `max_in_flight` queries are scheduled immediately; ids
+    /// come from `ids` so several fan-outs can share one engine.
+    pub fn start(
+        eng: &mut Engine,
+        ids: &mut QueryIds,
+        now: f64,
+        sites: &[(usize, f64)],
+        policy: FanoutPolicy,
+    ) -> DirectoryFanout {
+        let max_in_flight = policy.max_in_flight.max(1);
+        let queries: Vec<Query> = sites
+            .iter()
+            .map(|&(site, latency)| Query {
+                site,
+                latency: latency.max(0.0),
+                qid: ids.next(),
+                state: QueryState::Queued,
+                resolved_at: f64::NAN,
+            })
+            .collect();
+        let by_qid = queries.iter().enumerate().map(|(i, q)| (q.qid, i)).collect();
+        let cutoff_qid = if policy.straggler_cutoff.is_finite() && !queries.is_empty() {
+            let qid = ids.next();
+            eng.schedule_query(now + policy.straggler_cutoff.max(0.0), qid);
+            Some(qid)
+        } else {
+            None
+        };
+        let mut f = DirectoryFanout {
+            outstanding: queries.len(),
+            queries,
+            by_qid,
+            policy: FanoutPolicy { max_in_flight, ..policy },
+            cutoff_qid,
+            started_at: now,
+            next_queued: 0,
+            in_flight: 0,
+            peak_in_flight: 0,
+            finished_at: if sites.is_empty() { Some(now) } else { None },
+        };
+        f.issue_up_to_cap(eng, now);
+        f
+    }
+
+    /// Every kernel id this fan-out owns (site queries + cutoff) — for
+    /// drivers that route [`Signal::Query`] events through a map.
+    pub fn qids(&self) -> Vec<u64> {
+        self.queries
+            .iter()
+            .map(|q| q.qid)
+            .chain(self.cutoff_qid)
+            .collect()
+    }
+
+    fn issue_up_to_cap(&mut self, eng: &mut Engine, now: f64) {
+        while self.in_flight < self.policy.max_in_flight && self.next_queued < self.queries.len()
+        {
+            let q = &mut self.queries[self.next_queued];
+            self.next_queued += 1;
+            q.state = QueryState::InFlight;
+            // A query that cannot beat its deadline resolves *at* the
+            // deadline as a timeout — the client stops waiting there.
+            let resolves_in = q.latency.min(self.policy.per_query_deadline);
+            eng.schedule_query(now + resolves_in, q.qid);
+            self.in_flight += 1;
+        }
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+    }
+
+    /// Deliver one [`Signal::Query`] event. Unknown ids (other
+    /// fan-outs, or events landing after this fan-out finished) come
+    /// back as [`FanoutStep::Ignored`].
+    pub fn on_query(&mut self, eng: &mut Engine, id: u64, at: f64) -> FanoutStep {
+        if self.finished_at.is_some() {
+            return FanoutStep::Ignored;
+        }
+        if Some(id) == self.cutoff_qid {
+            for q in &mut self.queries {
+                if matches!(q.state, QueryState::Queued | QueryState::InFlight) {
+                    q.state = QueryState::CutOff;
+                    q.resolved_at = at;
+                    self.outstanding -= 1;
+                }
+            }
+            self.in_flight = 0;
+            self.next_queued = self.queries.len();
+            self.finished_at = Some(at);
+            return FanoutStep::CutOff { at };
+        }
+        let Some(&i) = self.by_qid.get(&id) else {
+            return FanoutStep::Ignored;
+        };
+        if self.queries[i].state != QueryState::InFlight {
+            return FanoutStep::Ignored;
+        }
+        let timed_out = self.queries[i].latency > self.policy.per_query_deadline;
+        self.queries[i].state = if timed_out {
+            QueryState::TimedOut
+        } else {
+            QueryState::Responded
+        };
+        self.queries[i].resolved_at = at;
+        self.in_flight -= 1;
+        self.outstanding -= 1;
+        self.issue_up_to_cap(eng, at);
+        if self.outstanding == 0 {
+            self.finished_at = Some(at);
+        }
+        let site = self.queries[i].site;
+        if timed_out {
+            FanoutStep::TimedOut { site, at }
+        } else {
+            FanoutStep::Response { site, at }
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.finished_at.is_some()
+    }
+
+    /// Instant the fan-out completed (last resolution or cutoff).
+    pub fn finished_at(&self) -> Option<f64> {
+        self.finished_at
+    }
+
+    pub fn started_at(&self) -> f64 {
+        self.started_at
+    }
+
+    /// Queries outstanding right now.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// The most queries ever simultaneously outstanding — must never
+    /// exceed the policy cap (`prop_invariants`).
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight
+    }
+
+    /// Sites whose responses arrived, with arrival instants, in
+    /// resolution order.
+    pub fn responses(&self) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64, u64)> = self
+            .queries
+            .iter()
+            .filter(|q| q.state == QueryState::Responded)
+            .map(|q| (q.site, q.resolved_at, q.qid))
+            .collect();
+        out.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.cmp(&b.2)));
+        out.into_iter().map(|(s, at, _)| (s, at)).collect()
+    }
+
+    /// Sites that never answered (deadline or cutoff).
+    pub fn unresolved(&self) -> Vec<usize> {
+        self.queries
+            .iter()
+            .filter(|q| {
+                matches!(
+                    q.state,
+                    QueryState::TimedOut | QueryState::CutOff | QueryState::Queued
+                        | QueryState::InFlight
+                )
+            })
+            .map(|q| q.site)
+            .collect()
+    }
+}
+
+/// Drive one fan-out to completion on a private kernel, starting at
+/// absolute instant `now` — the blocking convenience for benches and
+/// serial drivers. Returns the finished fan-out (inspect
+/// [`DirectoryFanout::responses`] / [`DirectoryFanout::finished_at`]).
+/// The caller's topology is untouched: the kernel only needs a clock,
+/// so the drive runs on a one-site scratch [`Topology`] (no
+/// full-topology clone — that per-call deep-copy pattern is exactly
+/// what PR 4 removed from the oracle).
+pub fn run_fanout(now: f64, sites: &[(usize, f64)], policy: FanoutPolicy) -> DirectoryFanout {
+    let mut scratch = Topology::build(&crate::config::GridConfig::generate(1, 0));
+    run_fanout_on(&mut scratch, now, sites, policy)
+}
+
+/// [`run_fanout`] driving a caller-provided scratch topology — reuse
+/// one scratch across many drives to keep its construction out of
+/// measured loops (`bench_directory` does). Only the scratch's clock
+/// is consumed; it is advanced monotonically and never rolled back.
+pub fn run_fanout_on(
+    scratch: &mut Topology,
+    now: f64,
+    sites: &[(usize, f64)],
+    policy: FanoutPolicy,
+) -> DirectoryFanout {
+    scratch.advance_to(now);
+    let mut eng = Engine::new(crate::simnet::FlowSet::new(f64::INFINITY));
+    let mut ids = QueryIds::new();
+    let mut f = DirectoryFanout::start(&mut eng, &mut ids, now, sites, policy);
+    while !f.finished() {
+        match eng.next(scratch) {
+            Some(Signal::Query { id, at }) => {
+                f.on_query(&mut eng, id, at);
+            }
+            Some(_) => continue,
+            None => break,
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sites_respond_in_latency_order_under_the_cap() {
+        let sites = vec![(0, 0.30), (1, 0.10), (2, 0.20)];
+        let f = run_fanout(7.0, &sites, FanoutPolicy { max_in_flight: 3, ..Default::default() });
+        assert!(f.finished());
+        let order: Vec<usize> = f.responses().iter().map(|&(s, _)| s).collect();
+        assert_eq!(order, vec![1, 2, 0], "responses land in latency order");
+        assert!(f.unresolved().is_empty());
+        assert_eq!(f.peak_in_flight(), 3);
+        assert!((f.finished_at().unwrap() - 7.30).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_one_serializes_queries() {
+        let sites = vec![(0, 0.30), (1, 0.10), (2, 0.20)];
+        let f = run_fanout(0.0, &sites, FanoutPolicy { max_in_flight: 1, ..Default::default() });
+        assert_eq!(f.peak_in_flight(), 1);
+        // Serialized: total time is the sum of latencies, and issue
+        // order (not latency order) decides completion order.
+        let order: Vec<usize> = f.responses().iter().map(|&(s, _)| s).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert!((f.finished_at().unwrap() - 0.60).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_times_slow_sites_out() {
+        let sites = vec![(0, 5.0), (1, 0.1)];
+        let f = run_fanout(
+            0.0,
+            &sites,
+            FanoutPolicy { per_query_deadline: 1.0, ..Default::default() },
+        );
+        assert_eq!(f.responses().len(), 1);
+        assert_eq!(f.responses()[0].0, 1);
+        assert_eq!(f.unresolved(), vec![0]);
+        // The client stopped waiting at the deadline, not at 5 s.
+        assert!((f.finished_at().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_cutoff_abandons_the_tail() {
+        // Cap 1 ⇒ site 2 would start at 4.0; the cutoff at 2.5 lands
+        // mid-flight for site 1 and pre-issue for site 2.
+        let sites = vec![(0, 2.0), (1, 2.0), (2, 2.0)];
+        let f = run_fanout(
+            0.0,
+            &sites,
+            FanoutPolicy { max_in_flight: 1, straggler_cutoff: 2.5, ..Default::default() },
+        );
+        assert_eq!(f.responses().len(), 1);
+        assert_eq!(f.unresolved().len(), 2);
+        assert!((f.finished_at().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_fanout_finishes_immediately() {
+        let f = run_fanout(0.0, &[], FanoutPolicy::default());
+        assert!(f.finished());
+        assert!(f.responses().is_empty());
+    }
+}

@@ -4,12 +4,39 @@
 //! GIIS to discover resources, then drill down with direct GRIS queries
 //! for fresh detail (paper §3). Registrations carry a TTL and must be
 //! refreshed, mirroring MDS soft-state registration.
+//!
+//! **Clock discipline (ISSUE 5):** everything here runs on the
+//! *simulated* clock, not the wall clock. The original implementation
+//! stamped registrations with `std::time::Instant` — dead wrong under
+//! simulation, where a whole multi-hour sweep executes in microseconds
+//! of real time, so no registration ever expired. Expiry is now a pure
+//! function of an explicit [`SimInstant`] ([`Registration::expired`]),
+//! and the `Giis` carries its own logical clock
+//! ([`Giis::advance_to`] / [`Giis::tick`]) that drivers advance in
+//! lock-step with [`crate::simnet::Topology::now`]. TTL expiry,
+//! re-registration churn and cache ages are therefore deterministic
+//! and testable (`it_giis`).
+//!
+//! Besides the coarse `summary` attributes (what broad `discover`
+//! filters match against), a registration may carry a **cached entry
+//! snapshot** ([`Registration::cached`]) — the soft-state copy of the
+//! site's storage entries captured at registration time. This is what
+//! lets a GIIS answer a broker's broad Search without fanning out to
+//! every GRIS: the answer is *stale by construction* (as old as the
+//! registration), and the broker drills down to the site's GRIS only
+//! for the candidates it actually cares about
+//! (`crate::directory::hier`, `crate::broker::Broker::with_discovery`).
 
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
 
-use super::entry::{Dn, Entry};
+use super::entry::{format_f64, Dn, Entry};
 use super::filter::Filter;
+
+/// An instant on the simulated clock, in seconds — the same time base
+/// as [`crate::simnet::Topology::now`]. Wall-clock types
+/// (`std::time::Instant`) must never be stored in simulated soft
+/// state; see the module docs.
+pub type SimInstant = f64;
 
 /// One GRIS registration record.
 #[derive(Debug, Clone)]
@@ -20,41 +47,124 @@ pub struct Registration {
     /// Base DN the GRIS serves.
     pub base_dn: Dn,
     /// Coarse summary attributes pushed with the registration (lets the
-    /// GIIS answer broad queries without fanning out).
+    /// GIIS answer broad `discover` queries without fanning out).
     pub summary: Vec<(String, String)>,
-    registered_at: Instant,
-    ttl: Duration,
+    /// Soft-state snapshot of the site's storage entries, captured at
+    /// registration time (may be empty for summary-only registrations).
+    cached: Vec<Entry>,
+    registered_at: SimInstant,
+    /// Lifetime in simulated seconds.
+    ttl: f64,
 }
 
 impl Registration {
-    pub fn expired(&self) -> bool {
-        self.registered_at.elapsed() > self.ttl
+    /// Whether this registration has outlived its TTL at `now`. Takes
+    /// the instant explicitly: expiry is a property of *simulated*
+    /// elapsed time, never of the process wall clock.
+    pub fn expired(&self, now: SimInstant) -> bool {
+        now - self.registered_at > self.ttl
+    }
+
+    /// Simulated seconds since the registration was (re)pushed.
+    pub fn age(&self, now: SimInstant) -> f64 {
+        (now - self.registered_at).max(0.0)
+    }
+
+    pub fn registered_at(&self) -> SimInstant {
+        self.registered_at
+    }
+
+    pub fn ttl(&self) -> f64 {
+        self.ttl
+    }
+
+    /// The cached entry snapshot pushed with the registration.
+    pub fn cached(&self) -> &[Entry] {
+        &self.cached
     }
 }
 
 /// The index service.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Giis {
     regs: BTreeMap<String, Registration>,
-    default_ttl: Duration,
+    default_ttl: f64,
+    /// Logical clock (simulated seconds); drivers advance it in
+    /// lock-step with the topology clock.
+    clock: SimInstant,
+}
+
+impl Default for Giis {
+    fn default() -> Self {
+        Giis::new()
+    }
 }
 
 impl Giis {
     pub fn new() -> Giis {
-        Giis { regs: BTreeMap::new(), default_ttl: Duration::from_secs(300) }
+        Giis::with_ttl(300.0)
     }
 
-    pub fn with_ttl(ttl: Duration) -> Giis {
-        Giis { regs: BTreeMap::new(), default_ttl: ttl }
+    /// A GIIS whose registrations default to `ttl` simulated seconds.
+    pub fn with_ttl(ttl: f64) -> Giis {
+        Giis { regs: BTreeMap::new(), default_ttl: ttl, clock: 0.0 }
     }
 
-    /// Register (or refresh) a GRIS.
+    /// The GIIS's current simulated instant.
+    pub fn now(&self) -> SimInstant {
+        self.clock
+    }
+
+    /// Advance the logical clock to the absolute instant `t` (no-op if
+    /// already past it — same monotone contract as
+    /// `Topology::advance_to`).
+    pub fn advance_to(&mut self, t: SimInstant) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// Advance the logical clock by `dt` simulated seconds.
+    pub fn tick(&mut self, dt: f64) {
+        if dt > 0.0 {
+            self.clock += dt;
+        }
+    }
+
+    /// Register (or refresh) a GRIS with summary attributes only.
     pub fn register(
         &mut self,
         site: &str,
         addr: &str,
         base_dn: Dn,
         summary: Vec<(String, String)>,
+    ) {
+        self.register_full(site, addr, base_dn, summary, Vec::new(), None);
+    }
+
+    /// Register (or refresh) a GRIS, pushing a cached entry snapshot
+    /// alongside the coarse summary.
+    pub fn register_cached(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base_dn: Dn,
+        summary: Vec<(String, String)>,
+        cached: Vec<Entry>,
+    ) {
+        self.register_full(site, addr, base_dn, summary, cached, None);
+    }
+
+    /// The full registration: summary + cached snapshot + optional
+    /// per-registration TTL override (`None` = the GIIS default).
+    pub fn register_full(
+        &mut self,
+        site: &str,
+        addr: &str,
+        base_dn: Dn,
+        summary: Vec<(String, String)>,
+        cached: Vec<Entry>,
+        ttl: Option<f64>,
     ) {
         self.regs.insert(
             site.to_ascii_lowercase(),
@@ -63,8 +173,9 @@ impl Giis {
                 addr: addr.to_string(),
                 base_dn,
                 summary,
-                registered_at: Instant::now(),
-                ttl: self.default_ttl,
+                cached,
+                registered_at: self.clock,
+                ttl: ttl.unwrap_or(self.default_ttl),
             },
         );
     }
@@ -75,28 +186,33 @@ impl Giis {
 
     /// Drop expired registrations; returns how many were removed.
     pub fn sweep(&mut self) -> usize {
+        let now = self.clock;
         let before = self.regs.len();
-        self.regs.retain(|_, r| !r.expired());
+        self.regs.retain(|_, r| !r.expired(now));
         before - self.regs.len()
     }
 
     /// All live registrations.
     pub fn registrations(&self) -> Vec<&Registration> {
-        self.regs.values().filter(|r| !r.expired()).collect()
+        self.regs
+            .values()
+            .filter(|r| !r.expired(self.clock))
+            .collect()
     }
 
     pub fn lookup(&self, site: &str) -> Option<&Registration> {
         self.regs
             .get(&site.to_ascii_lowercase())
-            .filter(|r| !r.expired())
+            .filter(|r| !r.expired(self.clock))
     }
 
     /// Broad discovery: match registrations' summary attributes against
     /// an LDAP filter (each registration is viewed as one entry).
     pub fn discover(&self, filter: &Filter) -> Vec<&Registration> {
+        let now = self.clock;
         self.registrations()
             .into_iter()
-            .filter(|r| filter.matches(&registration_entry(r)))
+            .filter(|r| filter.matches(&registration_entry(r, now)))
             .collect()
     }
 
@@ -110,13 +226,16 @@ impl Giis {
 }
 
 /// View a registration as a directory entry (`objectClass=
-/// GridServiceRegistration`) so filters apply uniformly.
-pub fn registration_entry(r: &Registration) -> Entry {
+/// GridServiceRegistration`) so filters apply uniformly. `now` stamps
+/// the record's simulated age (`regAge`, seconds) so discovery filters
+/// can select on freshness.
+pub fn registration_entry(r: &Registration, now: SimInstant) -> Entry {
     let mut e = Entry::new(Dn::parse(&format!("site={}, o=giis", r.site)).unwrap());
     e.add("objectClass", "GridServiceRegistration");
     e.put("site", &r.site);
     e.put("addr", &r.addr);
     e.put("baseDn", r.base_dn.to_string());
+    e.put("regAge", format_f64(r.age(now)));
     for (k, v) in &r.summary {
         e.add(k, v.clone());
     }
@@ -142,27 +261,61 @@ mod tests {
     }
 
     #[test]
-    fn refresh_replaces() {
+    fn refresh_replaces_and_restamps() {
         let mut g = Giis::new();
         g.register("mcs", "127.0.0.1:9001", dn("mcs"), vec![]);
+        g.advance_to(100.0);
         g.register("mcs", "127.0.0.1:9002", dn("mcs"), vec![]);
         assert_eq!(g.len(), 1);
-        assert_eq!(g.lookup("mcs").unwrap().addr, "127.0.0.1:9002");
+        let r = g.lookup("mcs").unwrap();
+        assert_eq!(r.addr, "127.0.0.1:9002");
+        assert_eq!(r.registered_at(), 100.0);
+        assert_eq!(r.age(130.0), 30.0);
     }
 
     #[test]
-    fn ttl_expiry_and_sweep() {
-        let mut g = Giis::with_ttl(Duration::from_millis(10));
+    fn ttl_expiry_on_the_sim_clock() {
+        // No sleeps: expiry is purely a function of the logical clock,
+        // so a sweep that runs in microseconds of real time still ages
+        // registrations correctly.
+        let mut g = Giis::with_ttl(10.0);
         g.register("mcs", "a:1", dn("mcs"), vec![]);
-        assert_eq!(g.len(), 1);
-        std::thread::sleep(Duration::from_millis(25));
-        assert_eq!(g.len(), 0);
+        g.advance_to(9.0);
+        assert_eq!(g.len(), 1, "within TTL");
+        g.advance_to(10.5);
+        assert_eq!(g.len(), 0, "past TTL");
         assert!(g.lookup("mcs").is_none());
         assert_eq!(g.sweep(), 1);
+        // Re-registration (soft-state refresh) revives the site.
+        g.register("mcs", "a:1", dn("mcs"), vec![]);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.lookup("mcs").unwrap().registered_at(), 10.5);
     }
 
     #[test]
-    fn discover_filters_on_summary() {
+    fn per_registration_ttl_overrides_default() {
+        let mut g = Giis::with_ttl(10.0);
+        g.register_full("short", "a:1", dn("short"), vec![], Vec::new(), Some(2.0));
+        g.register("long", "b:2", dn("long"), vec![]);
+        g.advance_to(5.0);
+        assert!(g.lookup("short").is_none());
+        assert!(g.lookup("long").is_some());
+    }
+
+    #[test]
+    fn cached_snapshot_rides_the_registration() {
+        let mut g = Giis::new();
+        let mut e = Entry::new(dn("mcs").child("gss", "vol0"));
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put_f64("availableSpace", 42.0);
+        g.register_cached("mcs", "a:1", dn("mcs"), vec![], vec![e]);
+        let r = g.lookup("mcs").unwrap();
+        assert_eq!(r.cached().len(), 1);
+        assert_eq!(r.cached()[0].f64("availableSpace"), Some(42.0));
+    }
+
+    #[test]
+    fn discover_filters_on_summary_and_age() {
         let mut g = Giis::new();
         g.register(
             "mcs",
@@ -170,6 +323,7 @@ mod tests {
             dn("mcs"),
             vec![("storageType".into(), "disk".into()), ("totalSpace".into(), "100".into())],
         );
+        g.advance_to(40.0);
         g.register(
             "hpss",
             "b:2",
@@ -184,5 +338,9 @@ mod tests {
         assert_eq!(big[0].site, "hpss");
         let all = g.discover(&Filter::parse("(objectClass=GridServiceRegistration)").unwrap());
         assert_eq!(all.len(), 2);
+        // Freshness is a first-class discovery attribute.
+        let fresh = g.discover(&Filter::parse("(regAge<=10)").unwrap());
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].site, "hpss");
     }
 }

@@ -128,8 +128,24 @@ impl Gris {
 
     /// Advance the site's logical clock by `dt` seconds; cached
     /// provider output older than the configured TTL expires.
+    ///
+    /// Clock-discipline audit (ISSUE 5): unlike the original GIIS,
+    /// this cache TTL was never wall-clock — `clock` is logical time
+    /// the driver advances, so cache expiry is deterministic under
+    /// simulation. [`Gris::advance_to`] mirrors
+    /// `Topology::advance_to` for drivers that track absolute instants.
     pub fn tick(&mut self, dt: f64) {
-        self.clock += dt;
+        if dt > 0.0 {
+            self.clock += dt;
+        }
+    }
+
+    /// Advance the site's logical clock to the absolute instant `t`
+    /// (no-op if already past it).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
     }
 
     /// Run `entry`'s providers and merge their output.

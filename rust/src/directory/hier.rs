@@ -1,0 +1,309 @@
+//! Hierarchical MDS: per-site GRIS servers soft-state-registered into
+//! one GIIS, with broad queries answered from the registrations' cached
+//! snapshots and *drill-down* queries going to the live GRIS (ISSUE 5
+//! tentpole).
+//!
+//! The paper's discovery pattern (§3) is two-level: a broker asks the
+//! index ("which storage sites could serve this?") and then queries
+//! the interesting sites directly for "up-to-date, detailed
+//! information". [`HierarchicalDirectory`] packages that wiring for
+//! the in-process grid:
+//!
+//! * [`HierarchicalDirectory::refresh_site`] re-registers one site —
+//!   it runs the site's GRIS search *once*, caches the resulting
+//!   entries in the GIIS registration ([`Registration::cached`]) and
+//!   derives the coarse summary attributes broad `discover` filters
+//!   match against. Until the next refresh, everything the GIIS says
+//!   about the site is **stale by construction**: exactly as old as
+//!   the registration.
+//! * [`HierarchicalDirectory::cached`] is the broad path: no GRIS is
+//!   touched, the answer comes from the soft-state snapshot (plus its
+//!   age). Expired registrations answer nothing — an unreachable or
+//!   churned-out site simply is not discovered, the EU-DataGrid
+//!   failure mode the test suite pins.
+//! * [`HierarchicalDirectory::drill_down`] queries the live GRIS
+//!   (providers run now), and counts the query — the scarce resource
+//!   this layer exists to conserve at hundreds of sites.
+//!
+//! All timestamps live on the simulated clock ([`SimInstant`]); the
+//! driver advances it in lock-step with `Topology::now`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use super::dit::Scope;
+use super::entry::{format_f64, Dn, Entry};
+use super::filter::Filter;
+use super::giis::{Giis, SimInstant};
+use super::gris::Gris;
+
+/// Query accounting: what the discovery layer cost so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiscoveryStats {
+    /// Broad queries answered purely from GIIS soft state.
+    pub broad_queries: u64,
+    /// Fresh per-site GRIS queries (the expensive fan-out unit).
+    pub drill_downs: u64,
+    /// Site re-registrations (each runs one GRIS search to snapshot).
+    pub refreshes: u64,
+}
+
+/// Summary attributes lifted from a site's cached entries into the
+/// registration, so broad `discover` filters can select on them.
+const SUMMARY_ATTRS: [&str; 5] = [
+    "availableSpace",
+    "totalSpace",
+    "load",
+    "AvgRDBandwidth",
+    "predictedRDBandwidth",
+];
+
+/// The storage search filter — what a broker Search fetches and
+/// therefore exactly what registrations snapshot and drill-downs
+/// return. ONE definition: the GIIS↔direct parity contract depends on
+/// the hierarchical route capturing the same entry set the direct
+/// route queries, so `Broker::search_filter` parses this same string.
+pub const STORAGE_SEARCH_FILTER: &str = "(|(objectClass=GridStorageServerVolume)\
+    (objectClass=GridStorageTransferBandwidth)\
+    (objectClass=GridStorageSourceTransferBandwidth))";
+
+/// Indices of `preds` in drill-down order: predicted bandwidth
+/// descending, index ascending on ties. Shared by
+/// `Broker::with_discovery`'s Search route and the open-loop
+/// discovery driver so both routes drill the same sites for the same
+/// stale view.
+pub fn drill_order(preds: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..preds.len()).collect();
+    order.sort_by(|&a, &b| {
+        preds[b]
+            .partial_cmp(&preds[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// One GIIS over many GRIS handles (see module docs).
+pub struct HierarchicalDirectory {
+    giis: Giis,
+    sites: BTreeMap<String, Arc<RwLock<Gris>>>,
+    /// The storage filter whose results are snapshotted into
+    /// registrations and returned by drill-downs — the same constant
+    /// filter the broker's Search phase uses.
+    filter: Filter,
+    stats: DiscoveryStats,
+}
+
+impl HierarchicalDirectory {
+    /// A directory whose registrations live `ttl` simulated seconds
+    /// between refreshes.
+    pub fn new(ttl: f64) -> HierarchicalDirectory {
+        HierarchicalDirectory {
+            giis: Giis::with_ttl(ttl),
+            sites: BTreeMap::new(),
+            filter: Filter::parse(STORAGE_SEARCH_FILTER).unwrap(),
+            stats: DiscoveryStats::default(),
+        }
+    }
+
+    /// Attach a site's GRIS. The site is *not* registered until its
+    /// first [`Self::refresh_site`] — soft state must be pushed, never
+    /// assumed.
+    pub fn add_site(&mut self, site: &str, gris: Arc<RwLock<Gris>>) {
+        self.sites.insert(site.to_string(), gris);
+    }
+
+    pub fn now(&self) -> SimInstant {
+        self.giis.now()
+    }
+
+    /// Advance the simulated clock (lock-step with `Topology::now`).
+    pub fn advance_to(&mut self, t: SimInstant) {
+        self.giis.advance_to(t);
+    }
+
+    pub fn stats(&self) -> DiscoveryStats {
+        self.stats
+    }
+
+    /// The underlying index (registration-level inspection).
+    pub fn giis(&self) -> &Giis {
+        &self.giis
+    }
+
+    /// Number of attached sites (registered or not).
+    pub fn sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Re-register `site`: snapshot its current GRIS answer into the
+    /// GIIS. Returns false for an unknown site.
+    pub fn refresh_site(&mut self, site: &str) -> bool {
+        let Some(gris) = self.sites.get(site) else {
+            return false;
+        };
+        let (base_dn, entries) = {
+            let g = gris.read().unwrap();
+            let entries = g.search(&Dn::parse("o=grid").unwrap(), Scope::Sub, &self.filter);
+            (g.base_dn().clone(), entries)
+        };
+        let summary = summarize(&entries);
+        self.stats.refreshes += 1;
+        self.giis
+            .register_cached(site, &format!("sim://{site}"), base_dn, summary, entries);
+        true
+    }
+
+    /// Refresh every attached site (the periodic soft-state push).
+    pub fn refresh_all(&mut self) {
+        let names: Vec<String> = self.sites.keys().cloned().collect();
+        for s in names {
+            self.refresh_site(&s);
+        }
+    }
+
+    /// Drop `site`'s registration (simulated registration churn: the
+    /// site falls out of the index until its next refresh).
+    pub fn unregister(&mut self, site: &str) -> bool {
+        self.giis.unregister(site)
+    }
+
+    /// Count one broad query against the index. Callers answering a
+    /// multi-site broad query via repeated [`Self::cached`] lookups
+    /// charge it once, not per site.
+    pub fn note_broad(&mut self) {
+        self.stats.broad_queries += 1;
+    }
+
+    /// The broad path: `site`'s cached snapshot and its age in
+    /// simulated seconds. `None` when the site never registered or its
+    /// registration expired. Touches no GRIS.
+    pub fn cached(&self, site: &str) -> Option<(&[Entry], f64)> {
+        let r = self.giis.lookup(site)?;
+        Some((r.cached(), r.age(self.giis.now())))
+    }
+
+    /// Broad discovery over registration summaries (no GRIS touched):
+    /// live registered site names matching `filter`, with ages.
+    pub fn discover(&mut self, filter: &Filter) -> Vec<(String, f64)> {
+        self.note_broad();
+        let now = self.giis.now();
+        self.giis
+            .discover(filter)
+            .into_iter()
+            .map(|r| (r.site.clone(), r.age(now)))
+            .collect()
+    }
+
+    /// The drill-down path: a fresh query against `site`'s live GRIS
+    /// (dynamic providers run at this instant). Counted.
+    pub fn drill_down(&mut self, site: &str) -> Option<Vec<Entry>> {
+        let gris = self.sites.get(site)?;
+        self.stats.drill_downs += 1;
+        let g = gris.read().unwrap();
+        Some(g.search(&Dn::parse("o=grid").unwrap(), Scope::Sub, &self.filter))
+    }
+}
+
+/// Lift the coarse summary attributes out of a snapshot (first
+/// occurrence wins; entries are site-local so duplicates agree).
+fn summarize(entries: &[Entry]) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for attr in SUMMARY_ATTRS {
+        if let Some(v) = entries.iter().find_map(|e| e.f64(attr)) {
+            out.push((attr.to_string(), format_f64(v)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A site whose provider counts invocations and publishes a live
+    /// value from shared state.
+    fn counting_site(
+        name: &str,
+        value: Arc<RwLock<f64>>,
+    ) -> (Arc<RwLock<Gris>>, Arc<AtomicU64>) {
+        let mut g = Gris::new("org", name);
+        let base = g.base_dn().clone();
+        let vol = base.child("gss", "vol0");
+        let mut e = Entry::new(vol.clone());
+        e.add("objectClass", "GridStorageServerVolume");
+        e.put_f64("totalSpace", 100.0);
+        e.put_f64("availableSpace", 0.0);
+        g.add_entry(e);
+        let count = Arc::new(AtomicU64::new(0));
+        let c = count.clone();
+        g.add_provider(
+            &vol,
+            Arc::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                vec![(
+                    "availableSpace".into(),
+                    format_f64(*value.read().unwrap()),
+                )]
+            }),
+        );
+        (Arc::new(RwLock::new(g)), count)
+    }
+
+    #[test]
+    fn broad_path_serves_the_snapshot_without_touching_gris() {
+        let v = Arc::new(RwLock::new(10.0));
+        let (gris, count) = counting_site("mcs", v.clone());
+        let mut h = HierarchicalDirectory::new(300.0);
+        h.add_site("mcs", gris);
+        assert!(h.cached("mcs").is_none(), "nothing pushed yet");
+        h.refresh_site("mcs");
+        assert_eq!(count.load(Ordering::SeqCst), 1, "refresh runs providers once");
+        *v.write().unwrap() = 99.0; // the site changes after the push
+        let (cached, age) = h.cached("mcs").unwrap();
+        assert_eq!(age, 0.0);
+        let space = cached.iter().find_map(|e| e.f64("availableSpace")).unwrap();
+        assert_eq!(space, 10.0, "broad answer is the stale snapshot");
+        assert_eq!(count.load(Ordering::SeqCst), 1, "no GRIS touched");
+        // Drill-down sees the live value and is counted.
+        let fresh = h.drill_down("mcs").unwrap();
+        let space = fresh.iter().find_map(|e| e.f64("availableSpace")).unwrap();
+        assert_eq!(space, 99.0);
+        assert_eq!(h.stats().drill_downs, 1);
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn expiry_hides_the_site_until_refresh() {
+        let v = Arc::new(RwLock::new(1.0));
+        let (gris, _) = counting_site("mcs", v);
+        let mut h = HierarchicalDirectory::new(60.0);
+        h.add_site("mcs", gris);
+        h.refresh_site("mcs");
+        h.advance_to(59.0);
+        assert!(h.cached("mcs").is_some());
+        h.advance_to(61.0);
+        assert!(h.cached("mcs").is_none(), "expired soft state answers nothing");
+        h.refresh_site("mcs");
+        let (_, age) = h.cached("mcs").unwrap();
+        assert_eq!(age, 0.0, "refresh restamps at the current instant");
+    }
+
+    #[test]
+    fn discover_matches_summary_attributes() {
+        let small = Arc::new(RwLock::new(5.0));
+        let big = Arc::new(RwLock::new(500.0));
+        let (g1, _) = counting_site("small", small);
+        let (g2, _) = counting_site("big", big);
+        let mut h = HierarchicalDirectory::new(300.0);
+        h.add_site("small", g1);
+        h.add_site("big", g2);
+        h.refresh_all();
+        let hits = h.discover(&Filter::parse("(availableSpace>=100)").unwrap());
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, "big");
+        assert_eq!(h.stats().broad_queries, 1);
+        assert_eq!(h.stats().refreshes, 2);
+    }
+}

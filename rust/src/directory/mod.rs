@@ -16,17 +16,33 @@
 //! * [`dit`] — the in-memory tree with base/scope/filter search,
 //! * [`gris`] — a per-site GRIS daemon whose dynamic attributes are
 //!   produced by provider callbacks (the "shell backend" analog),
-//! * [`giis`] — the index service GRISes register with,
+//! * [`giis`] — the index service GRISes register with. Soft state
+//!   lives on the **simulated clock** ([`giis::SimInstant`]): TTL
+//!   expiry, refresh churn and registration ages are deterministic
+//!   functions of logical time, never of the process wall clock,
+//! * [`hier`] — the hierarchical discovery path (ISSUE 5): per-site
+//!   GRIS servers registered into one GIIS with cached entry
+//!   snapshots, so a broker answers broad queries from (stale by
+//!   construction) soft state and *drills down* to the live GRIS only
+//!   for its top candidates,
+//! * [`fanout`] — the event-driven directory client on the
+//!   `simnet` kernel: per-site query latency, bounded in-flight
+//!   concurrency, per-query deadlines and a straggler cutoff — the
+//!   replacement for blocking thread-pool fan-out at hundreds of slow
+//!   sites,
 //! * [`proto`], [`server`], [`client`] — a line-oriented TCP protocol so
 //!   brokers query GRIS/GIIS over the network exactly in the paper's
-//!   search-phase pattern.
+//!   search-phase pattern (REGISTER carries an optional soft-state
+//!   TTL).
 
 pub mod client;
 pub mod dit;
 pub mod entry;
+pub mod fanout;
 pub mod filter;
 pub mod giis;
 pub mod gris;
+pub mod hier;
 pub mod ldif;
 pub mod proto;
 pub mod schema;
@@ -34,6 +50,8 @@ pub mod server;
 
 pub use dit::{Dit, Scope};
 pub use entry::{Dn, Entry};
+pub use fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryIds};
 pub use filter::Filter;
-pub use giis::Giis;
+pub use giis::{Giis, SimInstant};
 pub use gris::{Gris, Provider};
+pub use hier::{DiscoveryStats, HierarchicalDirectory};

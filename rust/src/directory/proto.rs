@@ -8,7 +8,7 @@
 //! S: <LDIF stream, entries separated by blank lines>
 //! S: .
 //!
-//! C: REGISTER\t<site>\t<host:port>\t<base dn>\t<k=v;k=v;...>
+//! C: REGISTER\t<site>\t<host:port>\t<base dn>\t<k=v;k=v;...>[\t<ttl secs>]
 //! S: OK\t0
 //! S: .
 //!
@@ -30,7 +30,15 @@ use super::filter::Filter;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Search { base: Dn, scope: Scope, filter: Filter },
-    Register { site: String, addr: String, base: Dn, summary: Vec<(String, String)> },
+    Register {
+        site: String,
+        addr: String,
+        base: Dn,
+        summary: Vec<(String, String)>,
+        /// Soft-state lifetime in simulated seconds (`None` = server
+        /// default).
+        ttl: Option<f64>,
+    },
     Discover { filter: Filter },
     List,
     Ping,
@@ -51,6 +59,8 @@ pub enum ProtoError {
     BadScope(String),
     #[error("bad filter: {0}")]
     BadFilter(String),
+    #[error("bad ttl (want a positive number of seconds)")]
+    BadTtl,
 }
 
 impl Request {
@@ -74,7 +84,7 @@ impl Request {
                 Ok(Request::Search { base, scope, filter })
             }
             "REGISTER" => {
-                if fields.len() != 5 {
+                if fields.len() != 5 && fields.len() != 6 {
                     return Err(ProtoError::Arity("REGISTER"));
                 }
                 let base = Dn::parse(fields[3]).map_err(|e| ProtoError::BadDn(e.to_string()))?;
@@ -83,11 +93,24 @@ impl Request {
                     .filter(|s| !s.is_empty())
                     .filter_map(|kv| kv.split_once('=').map(|(k, v)| (k.into(), v.into())))
                     .collect();
+                // `inf` is a legal lifetime (never expires — the same
+                // convention as the in-process soft-state model); only
+                // NaN and non-positive values are malformed.
+                let ttl = match fields.get(5) {
+                    None => None,
+                    Some(t) => Some(
+                        t.parse::<f64>()
+                            .ok()
+                            .filter(|v| !v.is_nan() && *v > 0.0)
+                            .ok_or(ProtoError::BadTtl)?,
+                    ),
+                };
                 Ok(Request::Register {
                     site: fields[1].to_string(),
                     addr: fields[2].to_string(),
                     base,
                     summary,
+                    ttl,
                 })
             }
             "DISCOVER" => {
@@ -111,13 +134,16 @@ impl Request {
             Request::Search { base, scope, filter } => {
                 format!("SEARCH\t{base}\t{}\t{filter}\n", scope.as_str())
             }
-            Request::Register { site, addr, base, summary } => {
+            Request::Register { site, addr, base, summary, ttl } => {
                 let kv = summary
                     .iter()
                     .map(|(k, v)| format!("{k}={v}"))
                     .collect::<Vec<_>>()
                     .join(";");
-                format!("REGISTER\t{site}\t{addr}\t{base}\t{kv}\n")
+                match ttl {
+                    Some(t) => format!("REGISTER\t{site}\t{addr}\t{base}\t{kv}\t{t}\n"),
+                    None => format!("REGISTER\t{site}\t{addr}\t{base}\t{kv}\n"),
+                }
             }
             Request::Discover { filter } => format!("DISCOVER\t{filter}\n"),
             Request::List => "LIST\n".to_string(),
@@ -152,8 +178,34 @@ mod tests {
             addr: "127.0.0.1:9000".into(),
             base: Dn::parse("ou=mcs, o=anl, o=grid").unwrap(),
             summary: vec![("storageType".into(), "disk".into()), ("x".into(), "1".into())],
+            ttl: None,
         };
         assert_eq!(Request::parse(&r.encode()).unwrap(), r);
+        let with_ttl = Request::Register {
+            site: "mcs".into(),
+            addr: "127.0.0.1:9000".into(),
+            base: Dn::parse("ou=mcs, o=anl, o=grid").unwrap(),
+            summary: vec![],
+            ttl: Some(120.0),
+        };
+        assert_eq!(Request::parse(&with_ttl.encode()).unwrap(), with_ttl);
+        // Infinite TTL (= never expires) survives the wire round trip.
+        let forever = Request::Register {
+            site: "mcs".into(),
+            addr: "a:1".into(),
+            base: Dn::parse("o=grid").unwrap(),
+            summary: vec![],
+            ttl: Some(f64::INFINITY),
+        };
+        assert_eq!(Request::parse(&forever.encode()).unwrap(), forever);
+        assert!(matches!(
+            Request::parse("REGISTER\tmcs\ta:1\to=grid\t\t-5"),
+            Err(ProtoError::BadTtl)
+        ));
+        assert!(matches!(
+            Request::parse("REGISTER\tmcs\ta:1\to=grid\t\tNaN"),
+            Err(ProtoError::BadTtl)
+        ));
     }
 
     #[test]

@@ -23,12 +23,15 @@ pub trait Backend: Send {
     /// Handle a SEARCH.
     fn search(&self, base: &Dn, scope: Scope, filter: &Filter) -> Vec<Entry>;
     /// Handle a REGISTER (GIIS only; GRIS returns an error message).
+    /// `ttl` is the client-requested soft-state lifetime in simulated
+    /// seconds (`None` = backend default).
     fn register(
         &mut self,
         _site: &str,
         _addr: &str,
         _base: Dn,
         _summary: Vec<(String, String)>,
+        _ttl: Option<f64>,
     ) -> Result<(), String> {
         Err("backend does not accept registrations".into())
     }
@@ -47,9 +50,10 @@ impl Backend for Gris {
 impl Backend for Giis {
     fn search(&self, _base: &Dn, _scope: Scope, filter: &Filter) -> Vec<Entry> {
         // A GIIS answers searches over its registration records.
+        let now = self.now();
         Giis::discover(self, filter)
             .into_iter()
-            .map(registration_entry)
+            .map(|r| registration_entry(r, now))
             .collect()
     }
 
@@ -59,17 +63,19 @@ impl Backend for Giis {
         addr: &str,
         base: Dn,
         summary: Vec<(String, String)>,
+        ttl: Option<f64>,
     ) -> Result<(), String> {
-        Giis::register(self, site, addr, base, summary);
+        Giis::register_full(self, site, addr, base, summary, Vec::new(), ttl);
         Ok(())
     }
 
     fn discover(&self, filter: Option<&Filter>) -> Result<Vec<Entry>, String> {
+        let now = self.now();
         let regs = match filter {
             Some(f) => Giis::discover(self, f),
             None => self.registrations(),
         };
-        Ok(regs.into_iter().map(registration_entry).collect())
+        Ok(regs.into_iter().map(|r| registration_entry(r, now)).collect())
     }
 }
 
@@ -163,8 +169,8 @@ fn handle_conn(
                     to_ldif_stream(&entries)
                 )
             }
-            Ok(Request::Register { site, addr, base, summary }) => {
-                match backend.lock().unwrap().register(&site, &addr, base, summary) {
+            Ok(Request::Register { site, addr, base, summary, ttl }) => {
+                match backend.lock().unwrap().register(&site, &addr, base, summary, ttl) {
                     Ok(()) => format!("OK\t0\n{END_MARK}\n"),
                     Err(e) => format!("ERR\t{e}\n{END_MARK}\n"),
                 }

@@ -2,10 +2,11 @@
 
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::broker::{Broker, LocalInfoService, RankPolicy};
+use crate::broker::{Broker, HierDiscovery, LocalInfoService, RankPolicy};
 use crate::catalog::{MetadataRepository, PhysicalLocation, ReplicaCatalog};
 use crate::config::GridConfig;
 use crate::directory::entry::Entry;
+use crate::directory::hier::HierarchicalDirectory;
 use crate::directory::gris::{Gris, Provider};
 use crate::gridftp::GridFtp;
 use crate::simnet::{Topology, Workload, WorkloadSpec};
@@ -166,15 +167,49 @@ impl SimGrid {
     /// topology (called by the simulation loop between requests).
     pub fn publish_dynamics(&self) {
         for i in 0..self.topo.len() {
-            let mut d = self.dynamics[i].write().unwrap();
-            d.available_space = self.topo.site(i).available_space();
-            d.load = self.topo.site(i).load();
+            self.publish_site(i);
         }
+    }
+
+    /// Refresh one site's published dynamics — what a single drill-down
+    /// query needs; publishing the whole grid per query event would be
+    /// O(sites × queries) at scale.
+    pub fn publish_site(&self, i: usize) {
+        let mut d = self.dynamics[i].write().unwrap();
+        d.available_space = self.topo.site(i).available_space();
+        d.load = self.topo.site(i).load();
     }
 
     /// A broker (decentralized — one per client) over this grid.
     pub fn broker(&self, policy: RankPolicy) -> Broker {
         Broker::new(self.catalog.clone(), self.info.clone(), policy)
+    }
+
+    /// A hierarchical directory over this grid's GRIS servers:
+    /// registrations live `ttl` simulated seconds and are pushed once
+    /// at the current clock (callers re-push via
+    /// `HierarchicalDirectory::refresh_all` to model soft-state
+    /// refresh; see `experiment::run_scale`).
+    pub fn hierarchy(&self, ttl: f64) -> Arc<RwLock<HierarchicalDirectory>> {
+        let mut dir = HierarchicalDirectory::new(ttl);
+        for (site, gris) in self.info.iter() {
+            dir.add_site(site, gris.clone());
+        }
+        dir.advance_to(self.topo.now);
+        dir.refresh_all();
+        Arc::new(RwLock::new(dir))
+    }
+
+    /// A broker whose Search phase routes through the hierarchical
+    /// GIIS → GRIS drill-down path.
+    pub fn broker_hier(
+        &self,
+        policy: RankPolicy,
+        dir: Arc<RwLock<HierarchicalDirectory>>,
+        drill_down: usize,
+    ) -> Broker {
+        self.broker(policy)
+            .with_discovery(HierDiscovery { dir, drill_down })
     }
 
     /// Warm per-site histories with `n` probe transfers each.

@@ -20,19 +20,29 @@
 //!   kernel, every in-flight transfer shares links and client
 //!   downlinks, and selection sees *live* in-flight load through the
 //!   GRIS dynamics — the contention regime the paper's
-//!   dynamic-information thesis is actually about.
+//!   dynamic-information thesis is actually about. With
+//!   [`OpenLoopOptions::discovery`] set, selection additionally pays
+//!   for its information: broad answers come from stale GIIS soft
+//!   state and fresh detail arrives through an event-driven drill-down
+//!   fan-out with per-site latency.
+//!
+//! [`run_scale`] sweeps the discovery layer itself: site count ×
+//! soft-state staleness, GIIS-routed vs always-fresh direct selection,
+//! reporting the quality degradation and the query economy (ISSUE 5).
 
 pub mod churn;
 pub mod grid;
 pub mod open_loop;
 pub mod quality;
+pub mod scale;
 
 pub use churn::{run_churn, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
 pub use open_loop::{
     run_contention, run_quality_open, AccessMode, ContentionPoint, ContentionReport,
-    OpenLoopOptions, OpenReport, RequestTrace,
+    DiscoveryOptions, OpenLoopOptions, OpenReport, RequestTrace,
 };
 pub use quality::{
     run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,
 };
+pub use scale::{run_scale, ScaleOptions, ScalePoint, ScaleReport};

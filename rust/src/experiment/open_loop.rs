@@ -14,6 +14,15 @@
 //! the `it_contention` parity test asserts bit-for-bit agreement with
 //! [`super::run_quality_trace`].
 //!
+//! With [`OpenLoopOptions::discovery`] set (ISSUE 5), admission no
+//! longer selects from omniscient fresh data: the broad query is
+//! answered from GIIS soft-state snapshots and a bounded, event-driven
+//! drill-down fan-out ([`crate::directory::fanout`]) fetches fresh
+//! detail for the top candidates — each answer landing after that
+//! site's simulated round trip — so selection runs on **stale-by-
+//! construction, mixed-age** GRIS data, exactly as a real MDS client
+//! would see it.
+//!
 //! [`run_contention`] is the load sweep the paper's thesis wants:
 //! arrival rate from idle to saturation, informed (Forecast) vs
 //! uninformed (Random) selection on identical traces, reporting
@@ -22,18 +31,26 @@
 //! `BENCH_contention.json`).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, RwLock};
 
 use crate::broker::selectors::{Selector, SelectorKind};
-use crate::broker::{Broker, RankPolicy};
+use crate::broker::{entries_to_candidate, Broker, Candidate, RankPolicy};
 use crate::config::GridConfig;
+use crate::directory::entry::Entry;
+use crate::directory::fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryIds};
+use crate::directory::hier::HierarchicalDirectory;
 use crate::gridftp::OpenFetch;
 use crate::simnet::{Engine, FlowSet, Request, Signal, Workload, WorkloadSpec};
 
 use super::grid::SimGrid;
-use super::quality::{finish_report, pick_replica, request_ad, QualityReport};
+use super::quality::{
+    finish_report, pick_from_candidates, pick_replica, request_ad, PickOutcome, QualityReport,
+};
 
 /// Timer id of the recurring GRIS dynamics refresh.
 const GRIS_TICK_ID: u64 = u64::MAX;
+/// Timer id of the recurring GIIS soft-state re-registration push.
+const REG_TICK_ID: u64 = u64::MAX - 1;
 
 /// How the open-loop driver executes an admitted request's Access
 /// phase.
@@ -48,6 +65,45 @@ pub enum AccessMode {
     /// and the client's downlink until the completion event fires, so
     /// concurrent requests contend.
     Flow,
+}
+
+/// Hierarchical-discovery configuration for the open-loop driver
+/// (ISSUE 5): when set, an admitted request no longer selects
+/// instantaneously from omniscient fresh data — it answers the broad
+/// query from the GIIS's soft-state snapshots (stale by construction)
+/// and runs an **event-driven drill-down fan-out** on the kernel, so
+/// each fresh per-site answer arrives after that site's simulated
+/// round-trip latency and selection happens at fan-out completion over
+/// data of mixed ages — exactly what a real MDS client sees.
+#[derive(Debug, Clone)]
+pub struct DiscoveryOptions {
+    /// Fresh GRIS drill-downs per admission (top-K by predicted
+    /// bandwidth over the stale snapshots). 0 = summaries only.
+    pub drill_down: usize,
+    /// Bounds on the per-admission drill-down fan-out (in-flight cap,
+    /// per-query deadline, straggler cutoff).
+    pub fanout: FanoutPolicy,
+    /// Registration TTL in simulated seconds — sites not re-registered
+    /// within this window fall out of discovery entirely.
+    pub registration_ttl: f64,
+    /// Soft-state re-registration period (every site re-pushes its
+    /// snapshot); `f64::INFINITY` = register once at the start.
+    pub refresh_period: f64,
+    /// Drill-down query round trip = `rtt_factor` × the site's one-way
+    /// latency from the topology.
+    pub rtt_factor: f64,
+}
+
+impl Default for DiscoveryOptions {
+    fn default() -> Self {
+        DiscoveryOptions {
+            drill_down: 3,
+            fanout: FanoutPolicy::default(),
+            registration_ttl: 600.0,
+            refresh_period: 120.0,
+            rtt_factor: 2.0,
+        }
+    }
 }
 
 /// Configuration of one open-loop run.
@@ -67,6 +123,11 @@ pub struct OpenLoopOptions {
     /// are also republished at every admission. `f64::INFINITY` =
     /// admission-driven refresh only.
     pub gris_refresh: f64,
+    /// Route discovery through the hierarchical GIIS path with an
+    /// event-driven drill-down fan-out. `None` (the default, and the
+    /// parity-anchored legacy behaviour) selects instantaneously from
+    /// fresh direct-GRIS data.
+    pub discovery: Option<DiscoveryOptions>,
 }
 
 impl OpenLoopOptions {
@@ -77,6 +138,7 @@ impl OpenLoopOptions {
             max_in_flight: usize::MAX,
             client_downlink: f64::INFINITY,
             gris_refresh: f64::INFINITY,
+            discovery: None,
         }
     }
 
@@ -134,6 +196,9 @@ pub struct OpenReport {
     /// start/finish instants — the data the overlap assertions and the
     /// contention bench read.
     pub per_request: Vec<RequestTrace>,
+    /// Discovery-mode query accounting (broad lookups, drill-downs,
+    /// refreshes); `None` on the legacy fresh-data path.
+    pub discovery: Option<crate::directory::hier::DiscoveryStats>,
 }
 
 struct InFlight {
@@ -141,6 +206,22 @@ struct InFlight {
     open: OpenFetch,
     oracle_best: f64,
     hit_optimal: bool,
+}
+
+/// One admitted request whose discovery fan-out is still in flight:
+/// the broad (stale) snapshots are in hand, fresh drill-down answers
+/// accumulate as their query events land.
+struct PendingDiscovery {
+    request: usize,
+    size: f64,
+    /// Discovered replica slots in catalog order:
+    /// (site name, replica URL, topology index).
+    sites: Vec<(String, String, usize)>,
+    /// Per-slot GIIS snapshot (stale by construction).
+    stale: Vec<Vec<Entry>>,
+    /// Per-slot fresh drill-down answer, once its response arrives.
+    fresh: Vec<Option<Vec<Entry>>>,
+    fanout: DirectoryFanout,
 }
 
 /// Everything one open-loop run mutates, so the admission logic is a
@@ -158,6 +239,14 @@ struct Driver<'a> {
     inflight: BTreeMap<usize, InFlight>,
     /// Arrivals parked by the admission gate, FIFO.
     waiting: VecDeque<u64>,
+    /// Discovery mode only: the shared GIIS hierarchy.
+    hier: Option<Arc<RwLock<HierarchicalDirectory>>>,
+    /// Kernel query-id allocator (unique across all fan-outs).
+    qids: QueryIds,
+    /// Live kernel query id → request id.
+    qid_map: BTreeMap<u64, u64>,
+    /// Request id → its in-flight discovery.
+    pending_disc: BTreeMap<u64, PendingDiscovery>,
     finished: Vec<RequestTrace>,
     peak_in_flight: usize,
     overlapped_admissions: usize,
@@ -165,11 +254,24 @@ struct Driver<'a> {
 }
 
 impl Driver<'_> {
-    /// Admit one request *now*: republish dynamics, select against the
-    /// live grid, then run the Access phase per the configured mode.
+    /// Requests currently holding an admission slot: in-flight
+    /// transfers plus in-flight discoveries (a request occupies its
+    /// slot from admission through its last byte).
+    fn occupancy(&self) -> usize {
+        self.inflight.len() + self.pending_disc.len()
+    }
+
+    /// Admit one request *now*: republish dynamics, then either select
+    /// immediately against fresh direct-GRIS data (the legacy,
+    /// parity-anchored path) or start the event-driven hierarchical
+    /// discovery ([`DiscoveryOptions`]).
     fn admit(&mut self, eng: &mut Engine, id: u64) {
         let req = &self.requests[id as usize];
         self.grid.publish_dynamics();
+        if self.opts.discovery.is_some() {
+            self.begin_discovery(eng, id);
+            return;
+        }
         let logical = self.grid.files[req.file].clone();
         let size = self.grid.sizes[req.file];
         let ad = request_ad(req.min_bandwidth);
@@ -182,6 +284,163 @@ impl Driver<'_> {
             size,
             &ad,
         );
+        self.run_access(eng, id, size, pick);
+    }
+
+    /// Start the hierarchical discovery for request `id`: the broad
+    /// query is answered from GIIS soft state *now* (no simulated
+    /// cost — one index lookup), and a drill-down fan-out over the
+    /// top summary-ranked replicas goes onto the kernel. Selection
+    /// happens when the fan-out completes.
+    fn begin_discovery(&mut self, eng: &mut Engine, id: u64) {
+        let disc = self.opts.discovery.clone().expect("discovery mode");
+        let req = &self.requests[id as usize];
+        let logical = self.grid.files[req.file].clone();
+        let size = self.grid.sizes[req.file];
+        let now = self.grid.topo.now;
+        let hier = self.hier.clone().expect("discovery mode wires a hierarchy");
+        let mut sites = Vec::new();
+        let mut stale: Vec<Vec<Entry>> = Vec::new();
+        {
+            let mut dir = hier.write().unwrap();
+            dir.advance_to(now);
+            dir.note_broad();
+            for &s in &self.grid.placement[req.file] {
+                let name = self.grid.topo.site(s).cfg.name.clone();
+                if let Some((entries, _age)) = dir.cached(&name) {
+                    stale.push(entries.to_vec());
+                    let url = format!("gsiftp://{name}/{logical}");
+                    sites.push((name, url, s));
+                }
+            }
+        }
+        if sites.is_empty() {
+            // Every replica site's registration expired or was never
+            // pushed: the file is undiscoverable right now.
+            self.skipped += 1;
+            return;
+        }
+        // Drill-down selection: predicted bandwidth over the *stale*
+        // snapshots — all a real client knows before asking. Shares
+        // `RankPolicy::drill_slots` with the broker's hierarchical
+        // Search route so both drill the same sites for the same
+        // stale view.
+        let stale_cands: Vec<Candidate> = sites
+            .iter()
+            .zip(&stale)
+            .map(|((name, url, _), entries)| entries_to_candidate(name, url, entries))
+            .collect();
+        let fan_sites: Vec<(usize, f64)> = self
+            .broker
+            .policy()
+            .drill_slots(&stale_cands, disc.drill_down)
+            .into_iter()
+            .map(|slot| {
+                let rtt = disc.rtt_factor * self.grid.topo.site(sites[slot].2).cfg.latency;
+                (slot, rtt)
+            })
+            .collect();
+        let fanout = DirectoryFanout::start(eng, &mut self.qids, now, &fan_sites, disc.fanout);
+        let fresh = vec![None; sites.len()];
+        let pd = PendingDiscovery { request: id as usize, size, sites, stale, fresh, fanout };
+        if pd.fanout.finished() {
+            // drill_down = 0: summaries only, selection is immediate
+            // (no query ids to track — nothing was scheduled).
+            self.finish_discovery(eng, pd);
+        } else {
+            for q in pd.fanout.qids() {
+                self.qid_map.insert(q, id);
+            }
+            self.pending_disc.insert(id, pd);
+        }
+    }
+
+    /// A kernel query event: route it to its fan-out. A response
+    /// samples that site's *live* GRIS at this instant — by the time
+    /// the last answer arrives, the first one is already stale.
+    fn on_query(&mut self, eng: &mut Engine, qid: u64, at: f64) {
+        let Some(req_id) = self.qid_map.remove(&qid) else {
+            return;
+        };
+        let Some(mut pd) = self.pending_disc.remove(&req_id) else {
+            return;
+        };
+        if let FanoutStep::Response { site: slot, .. } = pd.fanout.on_query(eng, qid, at) {
+            // Only the responding site is queried, so only its
+            // dynamics need republishing at this instant.
+            self.grid.publish_site(pd.sites[slot].2);
+            let hier = self.hier.clone().expect("discovery mode");
+            let mut dir = hier.write().unwrap();
+            dir.advance_to(at);
+            if let Some(entries) = dir.drill_down(&pd.sites[slot].0) {
+                pd.fresh[slot] = Some(entries);
+            }
+        }
+        if pd.fanout.finished() {
+            // Drop every id this fan-out still owns (queued queries
+            // abandoned by a cutoff never get an engine event, so
+            // their routing entries would otherwise leak forever).
+            for q in pd.fanout.qids() {
+                self.qid_map.remove(&q);
+            }
+            self.finish_discovery(eng, pd);
+        } else {
+            self.pending_disc.insert(req_id, pd);
+        }
+    }
+
+    /// Discovery complete: assemble the mixed-age candidate set (fresh
+    /// drill-down answers where they arrived, stale snapshots
+    /// everywhere else), select, and run the Access phase.
+    fn finish_discovery(&mut self, eng: &mut Engine, pd: PendingDiscovery) {
+        let req = &self.requests[pd.request];
+        let cands: Vec<Candidate> = pd
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, (name, url, _))| {
+                let entries = pd.fresh[i].as_deref().unwrap_or(&pd.stale[i]);
+                entries_to_candidate(name, url, entries)
+            })
+            .collect();
+        let ad = request_ad(req.min_bandwidth);
+        match pick_from_candidates(
+            self.grid,
+            &self.broker,
+            &mut self.selector,
+            self.kind,
+            &cands,
+            pd.size,
+            &ad,
+        ) {
+            Some(pick) => self.run_access(eng, pd.request as u64, pd.size, pick),
+            None => self.skipped += 1,
+        }
+        // No gate drain here: the event loop runs `drain_gate` after
+        // every event, and draining from inside finish_discovery would
+        // recurse (admit → begin_discovery → finish_discovery when
+        // drill_down = 0) one stack frame per parked arrival.
+    }
+
+    /// Admit parked arrivals while the gate has room. Called from the
+    /// event loop after every event — admission slots free both on
+    /// flow completions and on discovery outcomes that never start a
+    /// flow (Analytic access, failed `fetch_begin`, undiscoverable
+    /// file), and only the latter path would otherwise strand the
+    /// queue: no flow completion ever fires for it.
+    fn drain_gate(&mut self, eng: &mut Engine) {
+        while self.occupancy() < self.opts.max_in_flight {
+            match self.waiting.pop_front() {
+                Some(id) => self.admit(eng, id),
+                None => break,
+            }
+        }
+    }
+
+    /// The Access phase for an admitted request whose selection is
+    /// made, per the configured mode.
+    fn run_access(&mut self, eng: &mut Engine, id: u64, size: f64, pick: PickOutcome) {
+        let req = &self.requests[id as usize];
         let overlapping = !self.inflight.is_empty();
         match self.opts.access {
             AccessMode::Analytic => {
@@ -238,9 +497,9 @@ impl Driver<'_> {
     }
 
     /// A flow completion from the kernel: finish the fetch (slot
-    /// release + instrumentation record), then let the admission gate
-    /// drain its queue at this instant.
-    fn complete(&mut self, eng: &mut Engine, c: &crate::simnet::Completion) {
+    /// release + instrumentation record). The event loop drains the
+    /// admission gate right after.
+    fn complete(&mut self, c: &crate::simnet::Completion) {
         let fi = match self.inflight.remove(&c.flow) {
             Some(fi) => fi,
             None => return,
@@ -256,12 +515,6 @@ impl Driver<'_> {
             oracle_best: fi.oracle_best,
             hit_optimal: fi.hit_optimal,
         });
-        while self.inflight.len() < self.opts.max_in_flight {
-            match self.waiting.pop_front() {
-                Some(id) => self.admit(eng, id),
-                None => break,
-            }
-        }
     }
 }
 
@@ -306,6 +559,14 @@ pub fn run_quality_open(
     if opts.gris_refresh.is_finite() && opts.gris_refresh > 0.0 {
         eng.schedule_tick(t0 + opts.gris_refresh, GRIS_TICK_ID);
     }
+    // Discovery mode: wire the GIIS hierarchy (initial soft-state push
+    // at t0) and its periodic re-registration tick.
+    let hier = opts.discovery.as_ref().map(|d| {
+        if d.refresh_period.is_finite() && d.refresh_period > 0.0 {
+            eng.schedule_tick(t0 + d.refresh_period, REG_TICK_ID);
+        }
+        grid.hierarchy(d.registration_ttl)
+    });
 
     let mut driver = Driver {
         grid: &mut grid,
@@ -317,6 +578,10 @@ pub fn run_quality_open(
         groups,
         inflight: BTreeMap::new(),
         waiting: VecDeque::new(),
+        hier,
+        qids: QueryIds::new(),
+        qid_map: BTreeMap::new(),
+        pending_disc: BTreeMap::new(),
         finished: Vec::new(),
         peak_in_flight: 0,
         overlapped_admissions: 0,
@@ -335,13 +600,25 @@ pub fn run_quality_open(
         }
         match eng.next(&mut driver.grid.topo) {
             Some(Signal::Arrival { id, .. }) => {
-                if driver.inflight.len() < driver.opts.max_in_flight {
+                if driver.occupancy() < driver.opts.max_in_flight {
                     driver.admit(&mut eng, id);
                 } else {
                     driver.waiting.push_back(id);
                 }
             }
-            Some(Signal::FlowDone(c)) => driver.complete(&mut eng, &c),
+            Some(Signal::FlowDone(c)) => driver.complete(&c),
+            Some(Signal::Query { id, at }) => driver.on_query(&mut eng, id, at),
+            Some(Signal::Tick { id: REG_TICK_ID, .. }) => {
+                // Soft-state push: every site re-registers its current
+                // snapshot (registration churn the TTL feeds on).
+                driver.grid.publish_dynamics();
+                if let (Some(h), Some(d)) = (&driver.hier, &driver.opts.discovery) {
+                    let mut dir = h.write().unwrap();
+                    dir.advance_to(driver.grid.topo.now);
+                    dir.refresh_all();
+                    eng.schedule_tick(driver.grid.topo.now + d.refresh_period, REG_TICK_ID);
+                }
+            }
             Some(Signal::Tick { .. }) => {
                 driver.grid.publish_dynamics();
                 let next = driver.grid.topo.now + driver.opts.gris_refresh;
@@ -351,6 +628,10 @@ pub fn run_quality_open(
             // whatever completed is the result.
             None => break,
         }
+        // Every event can free admission slots (a completion, or a
+        // discovery that resolved without starting a flow): drain the
+        // parked arrivals at this same instant.
+        driver.drain_gate(&mut eng);
     }
 
     // Wind down whatever never finished (stalled flows on faulted
@@ -364,7 +645,7 @@ pub fn run_quality_open(
         driver.grid.topo.end_transfer(fi.open.site);
         driver.skipped += 1;
     }
-    driver.skipped += driver.waiting.len();
+    driver.skipped += driver.pending_disc.len() + driver.waiting.len();
 
     let mut durations = Vec::with_capacity(driver.finished.len());
     let mut bandwidths = Vec::with_capacity(driver.finished.len());
@@ -393,6 +674,7 @@ pub fn run_quality_open(
             .fold(f64::NEG_INFINITY, f64::max);
         (last - first).max(0.0)
     };
+    let discovery_stats = driver.hier.as_ref().map(|h| h.read().unwrap().stats());
     OpenReport {
         quality: finish_report(kind.name(), durations, &bandwidths, &slowdowns, optimal_hits),
         makespan,
@@ -400,6 +682,7 @@ pub fn run_quality_open(
         overlapped_admissions: driver.overlapped_admissions,
         skipped: driver.skipped,
         per_request: driver.finished,
+        discovery: discovery_stats,
     }
 }
 
@@ -601,6 +884,90 @@ mod tests {
             idle.informed.overlapped_admissions
         );
         assert!(busy.gap > 0.0);
+    }
+
+    #[test]
+    fn discovery_mode_completes_and_pays_fewer_queries() {
+        let cfg = GridConfig::generate(6, 31);
+        let spec = WorkloadSpec { files: 6, mean_interarrival: 30.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(10);
+        let opts = OpenLoopOptions {
+            discovery: Some(DiscoveryOptions { drill_down: 2, ..Default::default() }),
+            ..OpenLoopOptions::open()
+        };
+        let r = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+        assert_eq!(r.quality.requests, 10, "skipped {}", r.skipped);
+        assert_eq!(r.skipped, 0);
+        let stats = r.discovery.expect("discovery stats recorded");
+        assert_eq!(stats.broad_queries, 10, "one broad lookup per admission");
+        // 2 drill-downs per request (deadline/cutoff infinite), which
+        // is strictly below the 3-replica full fan-out.
+        assert_eq!(stats.drill_downs, 20);
+        assert!(stats.drill_downs < 10 * 3);
+    }
+
+    #[test]
+    fn discovery_mode_is_deterministic() {
+        let cfg = GridConfig::generate(5, 32);
+        let spec = WorkloadSpec { files: 5, mean_interarrival: 12.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(12);
+        let opts = OpenLoopOptions {
+            discovery: Some(DiscoveryOptions {
+                drill_down: 2,
+                fanout: FanoutPolicy { max_in_flight: 1, ..Default::default() },
+                ..Default::default()
+            }),
+            ..OpenLoopOptions::open()
+        };
+        let run = || {
+            run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.quality.mean_time, b.quality.mean_time);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.discovery, b.discovery);
+    }
+
+    #[test]
+    fn gated_discovery_with_analytic_access_drains_every_arrival() {
+        // Regression: an Analytic access after discovery frees its
+        // admission slot with no flow-completion event — parked
+        // arrivals must still be admitted (finish_discovery drains
+        // the gate), not stranded until the event budget blows.
+        let cfg = GridConfig::generate(5, 34);
+        let spec = WorkloadSpec { files: 5, mean_interarrival: 2.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(10);
+        let opts = OpenLoopOptions {
+            access: AccessMode::Analytic,
+            max_in_flight: 1,
+            discovery: Some(DiscoveryOptions { drill_down: 2, ..Default::default() }),
+            ..OpenLoopOptions::open()
+        };
+        let r = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+        assert_eq!(r.quality.requests, 10, "skipped {}", r.skipped);
+        assert_eq!(r.skipped, 0);
+    }
+
+    #[test]
+    fn unrefreshed_registrations_expire_and_requests_skip() {
+        let cfg = GridConfig::generate(5, 33);
+        let spec = WorkloadSpec { files: 5, mean_interarrival: 20.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(10);
+        let opts = OpenLoopOptions {
+            discovery: Some(DiscoveryOptions {
+                registration_ttl: 1.0,
+                refresh_period: f64::INFINITY, // registered once, never again
+                ..Default::default()
+            }),
+            ..OpenLoopOptions::open()
+        };
+        let r = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+        assert_eq!(r.quality.requests + r.skipped, 10);
+        assert!(
+            r.skipped > 0,
+            "1 s TTL with no refresh must make later requests undiscoverable"
+        );
     }
 
     #[test]

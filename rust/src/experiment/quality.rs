@@ -74,7 +74,28 @@ pub(crate) fn pick_replica(
     ad: &ClassAd,
 ) -> PickOutcome {
     // The candidate view every policy sees (Search + convert).
-    let (cands, mut trace) = broker.search(logical, ad).expect("search");
+    let (cands, _trace) = broker.search(logical, ad).expect("search");
+    pick_from_candidates(grid, broker, selector, kind, &cands, size, ad)
+        .expect("search yielded no candidates")
+}
+
+/// [`pick_replica`] from an already-assembled candidate set — the
+/// entry point for drivers that gather candidates themselves (the
+/// event-driven discovery path assembles a mix of fresh drill-down
+/// answers and stale GIIS snapshots before selecting). Returns `None`
+/// when `cands` is empty (nothing was discovered).
+pub(crate) fn pick_from_candidates(
+    grid: &SimGrid,
+    broker: &crate::broker::Broker,
+    selector: &mut Selector,
+    kind: SelectorKind,
+    cands: &[crate::broker::Candidate],
+    size: f64,
+    ad: &ClassAd,
+) -> Option<PickOutcome> {
+    if cands.is_empty() {
+        return None;
+    }
     // Requirements filter (Match phase step 2).
     let matched: Vec<usize> = cands
         .iter()
@@ -110,20 +131,21 @@ pub(crate) fn pick_replica(
     // The policy's pick.
     let pick_idx = match kind {
         SelectorKind::Forecast => {
-            let ranked = broker.match_phase(ad, &cands, &mut trace);
+            let mut trace = crate::broker::BrokerTrace::default();
+            let ranked = broker.match_phase(ad, cands, &mut trace);
             ranked
                 .iter()
                 .find(|r| eligible.contains(&r.index))
                 .map(|r| r.index)
                 .unwrap_or(eligible[0])
         }
-        _ => selector.pick(&cands, &eligible),
+        _ => selector.pick(cands, &eligible),
     };
-    PickOutcome {
+    Some(PickOutcome {
         pick_site: grid.topo.index_of(&cands[pick_idx].site).unwrap(),
         best_site,
         best_oracle,
-    }
+    })
 }
 
 /// Fold per-request measurements into a [`QualityReport`] — shared by

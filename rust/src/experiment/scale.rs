@@ -1,0 +1,342 @@
+//! Discovery-at-scale sweep (ISSUE 5): selection quality and query
+//! cost of the hierarchical GIIS route as the grid grows and the soft
+//! state ages.
+//!
+//! [`run_scale`] replays one request trace per point of a
+//! `site count × refresh period` grid, twice on identically seeded
+//! grids:
+//!
+//! * **fresh** — the direct route: every replica site's GRIS queried
+//!   fresh at every selection (the always-fresh oracle of the
+//!   information layer; its query bill grows with the replica set);
+//! * **stale** — the hierarchical route: broad answers from GIIS
+//!   registration snapshots refreshed every `refresh_period` simulated
+//!   seconds, fresh drill-down only to the top
+//!   [`ScaleOptions::drill_down`] summary-ranked candidates.
+//!
+//! `refresh_period = 0` re-pushes every site's snapshot at every
+//! arrival — the parity anchor: the hierarchical route then selects
+//! identically to the direct route (degradation exactly 1.0), while
+//! still paying only `1 broad + K drill-downs` per request instead of
+//! `N` site queries. Growing the period opens the informed-vs-stale
+//! gap the EU-DataGrid experience report describes: summaries lag the
+//! live bandwidth history, so the broker drills into (and picks)
+//! yesterday's winners.
+
+use crate::broker::selectors::{Selector, SelectorKind};
+use crate::broker::RankPolicy;
+use crate::config::GridConfig;
+use crate::simnet::{Request, Workload, WorkloadSpec};
+
+use super::grid::SimGrid;
+use super::quality::{finish_report, pick_from_candidates, request_ad, QualityReport};
+
+/// Per-sweep knobs (the axes come as explicit slices to [`run_scale`]).
+#[derive(Debug, Clone)]
+pub struct ScaleOptions {
+    pub n_requests: usize,
+    pub replicas_per_file: usize,
+    pub warm: usize,
+    /// Fresh GRIS drill-downs per selection on the hierarchical route.
+    pub drill_down: usize,
+    /// Registration TTL in simulated seconds (`f64::INFINITY` keeps
+    /// every site discoverable however stale — the pure-staleness
+    /// study; finite values add expiry churn on top).
+    pub registration_ttl: f64,
+}
+
+impl Default for ScaleOptions {
+    fn default() -> Self {
+        ScaleOptions {
+            n_requests: 40,
+            replicas_per_file: 4,
+            warm: 3,
+            drill_down: 2,
+            registration_ttl: f64::INFINITY,
+        }
+    }
+}
+
+/// One (site count, refresh period) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub sites: usize,
+    /// Soft-state refresh period (0 = refresh at every arrival).
+    pub refresh_period: f64,
+    /// Direct always-fresh selection on the identically seeded grid.
+    pub fresh: QualityReport,
+    /// GIIS-routed selection under this staleness.
+    pub stale: QualityReport,
+    /// `stale.mean_slowdown / fresh.mean_slowdown` — 1.0 at parity,
+    /// growing as stale summaries misdirect the drill-down.
+    pub degradation: f64,
+    /// Fresh per-site GRIS queries the hierarchical route issued
+    /// (drill-downs only — the per-request fan-out cost).
+    pub drill_queries: u64,
+    /// Broad GIIS lookups (one per selection).
+    pub broad_queries: u64,
+    /// GRIS searches spent re-snapshotting registrations (amortized
+    /// background cost, paid per site per refresh, not per request).
+    pub refresh_queries: u64,
+    /// Per-site GRIS queries the direct route paid for the same trace.
+    pub full_fanout_queries: u64,
+    /// Hierarchical-route requests that found no live registration
+    /// (TTL expiry) and could not select at all.
+    pub undiscovered: u64,
+}
+
+/// The full sweep, row-major over `site_counts × refresh_periods`.
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    pub points: Vec<ScalePoint>,
+}
+
+/// One serial replay; `refresh_period: None` = direct fresh route.
+struct ReplayOutcome {
+    report: QualityReport,
+    queries: u64,
+    broad: u64,
+    refreshes: u64,
+    undiscovered: u64,
+}
+
+fn replay_serial(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    opts: &ScaleOptions,
+    refresh_period: Option<f64>,
+) -> ReplayOutcome {
+    let mut grid = SimGrid::build(cfg, spec, opts.replicas_per_file, 64);
+    grid.warm(opts.warm);
+    let mut selector = Selector::new(SelectorKind::Forecast, cfg.seed);
+    let policy = RankPolicy::ForecastBandwidth { engine: None };
+    let (broker, hier) = match refresh_period {
+        None => (grid.broker(policy), None),
+        Some(_) => {
+            let h = grid.hierarchy(opts.registration_ttl);
+            (
+                grid.broker_hier(policy, h.clone(), opts.drill_down),
+                Some(h),
+            )
+        }
+    };
+    let t0 = grid.topo.now;
+    let mut next_refresh = refresh_period
+        .filter(|p| p.is_finite() && *p > 0.0)
+        .map(|p| t0 + p);
+
+    let mut durations = Vec::with_capacity(requests.len());
+    let mut bandwidths = Vec::with_capacity(requests.len());
+    let mut slowdowns = Vec::with_capacity(requests.len());
+    let mut optimal_hits = 0usize;
+    let mut queries = 0u64;
+    let mut undiscovered = 0u64;
+    for req in requests {
+        grid.topo.advance_to(t0 + req.at);
+        grid.publish_dynamics();
+        if let Some(h) = &hier {
+            let mut dir = h.write().unwrap();
+            dir.advance_to(grid.topo.now);
+            match refresh_period {
+                // Period 0: every site re-pushes at every arrival —
+                // soft state is never stale (the parity anchor).
+                Some(p) if p == 0.0 => dir.refresh_all(),
+                Some(p) if p.is_finite() && p > 0.0 => {
+                    // The serial replay only observes state at arrival
+                    // instants, so a refresh whose nominal instant has
+                    // passed executes *now* and is stamped *now* —
+                    // the data it captures and the age it claims
+                    // agree. (Stamping it back at the nominal instant
+                    // would label arrival-fresh data as old and bias
+                    // the staleness sweep.)
+                    if let Some(at) = next_refresh {
+                        if at <= grid.topo.now {
+                            dir.refresh_all();
+                            let mut next = at;
+                            while next <= grid.topo.now {
+                                next += p;
+                            }
+                            next_refresh = Some(next);
+                        }
+                    }
+                }
+                // Infinite period: the t0 push is all there ever is.
+                _ => {}
+            }
+        }
+        let logical = grid.files[req.file].clone();
+        let size = grid.sizes[req.file];
+        let ad = request_ad(req.min_bandwidth);
+        let (cands, _trace) = broker.search(&logical, &ad).expect("search");
+        if refresh_period.is_none() {
+            queries += cands.len() as u64;
+        }
+        let pick = match pick_from_candidates(
+            &grid,
+            &broker,
+            &mut selector,
+            SelectorKind::Forecast,
+            &cands,
+            size,
+            &ad,
+        ) {
+            Some(p) => p,
+            None => {
+                undiscovered += 1;
+                continue;
+            }
+        };
+        let out = grid.ftp.fetch(&mut grid.topo, pick.pick_site, "client", size);
+        durations.push(out.duration);
+        bandwidths.push(out.bandwidth);
+        slowdowns.push(out.duration / pick.best_oracle.max(1e-9));
+        if pick.pick_site == pick.best_site {
+            optimal_hits += 1;
+        }
+    }
+    let (broad, refreshes) = match &hier {
+        Some(h) => {
+            let stats = h.read().unwrap().stats();
+            queries = stats.drill_downs;
+            (stats.broad_queries, stats.refreshes)
+        }
+        None => (0, 0),
+    };
+    ReplayOutcome {
+        report: finish_report("forecast", durations, &bandwidths, &slowdowns, optimal_hits),
+        queries,
+        broad,
+        refreshes,
+        undiscovered,
+    }
+}
+
+/// Sweep `site_counts × refresh_periods` (see the module docs). Each
+/// cell replays the same per-site-count trace on identically seeded
+/// grids, so the fresh and stale columns differ only in what the
+/// information layer told the broker.
+pub fn run_scale(
+    site_counts: &[usize],
+    refresh_periods: &[f64],
+    spec: &WorkloadSpec,
+    opts: &ScaleOptions,
+    seed: u64,
+) -> ScaleReport {
+    let mut points = Vec::new();
+    for &n_sites in site_counts {
+        let cfg = GridConfig::generate(n_sites, seed.wrapping_add(n_sites as u64));
+        let requests = Workload::new(spec.clone(), cfg.seed).take(opts.n_requests);
+        let fresh = replay_serial(&cfg, spec, &requests, opts, None);
+        for &period in refresh_periods {
+            let stale = replay_serial(&cfg, spec, &requests, opts, Some(period));
+            let degradation = if fresh.report.mean_slowdown > 0.0 {
+                stale.report.mean_slowdown / fresh.report.mean_slowdown
+            } else {
+                1.0
+            };
+            points.push(ScalePoint {
+                sites: n_sites,
+                refresh_period: period,
+                degradation,
+                drill_queries: stale.queries,
+                broad_queries: stale.broad,
+                refresh_queries: stale.refreshes,
+                full_fanout_queries: fresh.queries,
+                undiscovered: stale.undiscovered,
+                fresh: fresh.report.clone(),
+                stale: stale.report,
+            });
+        }
+    }
+    ScaleReport { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec { files: 6, mean_interarrival: 90.0, ..Default::default() }
+    }
+
+    #[test]
+    fn parity_at_zero_staleness_across_site_counts() {
+        // The acceptance anchor: with soft state refreshed at every
+        // arrival, GIIS-routed selection equals direct-GRIS selection
+        // bit-for-bit at every site count — while paying strictly
+        // fewer per-request GRIS queries than the full fan-out.
+        let opts = ScaleOptions { n_requests: 15, ..Default::default() };
+        let r = run_scale(&[8, 12, 16], &[0.0], &spec(), &opts, 501);
+        assert_eq!(r.points.len(), 3);
+        for p in &r.points {
+            assert_eq!(
+                p.stale.mean_time, p.fresh.mean_time,
+                "{} sites: hier route must reproduce direct selection exactly",
+                p.sites
+            );
+            assert_eq!(p.stale.pct_optimal, p.fresh.pct_optimal);
+            assert_eq!(p.degradation, 1.0);
+            assert_eq!(p.undiscovered, 0);
+            assert!(
+                p.drill_queries < p.full_fanout_queries,
+                "{} sites: drill {} !< full {}",
+                p.sites,
+                p.drill_queries,
+                p.full_fanout_queries
+            );
+            assert_eq!(p.broad_queries, 15);
+        }
+    }
+
+    #[test]
+    fn stale_points_complete_and_report_the_gap() {
+        let opts = ScaleOptions { n_requests: 15, ..Default::default() };
+        let r = run_scale(&[10], &[0.0, 300.0, 1e9], &spec(), &opts, 502);
+        assert_eq!(r.points.len(), 3);
+        for p in &r.points {
+            assert_eq!(p.stale.requests, 15, "TTL ∞ keeps every request discoverable");
+            assert!(p.degradation.is_finite() && p.degradation > 0.0);
+            assert!(p.drill_queries < p.full_fanout_queries);
+        }
+        // The gap is monotone-ish in expectation; at minimum the
+        // never-refreshed point cannot beat the parity point's
+        // oracle-relative slowdown by more than noise.
+        let parity = &r.points[0];
+        let stalest = &r.points[2];
+        assert_eq!(parity.degradation, 1.0);
+        assert!(
+            stalest.stale.mean_slowdown >= parity.stale.mean_slowdown * 0.95,
+            "stalest {} vs parity {}",
+            stalest.stale.mean_slowdown,
+            parity.stale.mean_slowdown
+        );
+    }
+
+    #[test]
+    fn expiry_makes_requests_undiscoverable() {
+        let opts = ScaleOptions {
+            n_requests: 12,
+            registration_ttl: 1.0,
+            ..Default::default()
+        };
+        // Registered once at t0, never refreshed, 1 s TTL: every
+        // arrival after the first second finds nothing.
+        let r = run_scale(&[8], &[1e18], &spec(), &opts, 503);
+        let p = &r.points[0];
+        assert!(p.undiscovered > 0);
+        assert_eq!(p.stale.requests as u64 + p.undiscovered, 12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let opts = ScaleOptions { n_requests: 10, ..Default::default() };
+        let a = run_scale(&[8], &[0.0, 600.0], &spec(), &opts, 504);
+        let b = run_scale(&[8], &[0.0, 600.0], &spec(), &opts, 504);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.stale.mean_time, y.stale.mean_time);
+            assert_eq!(x.fresh.mean_time, y.fresh.mean_time);
+            assert_eq!(x.drill_queries, y.drill_queries);
+        }
+    }
+}

@@ -18,7 +18,14 @@
 //!   evaluator, `MatchClassAd` semantics, ranking.
 //! * [`directory`] — an LDAP-lite MDS: DIT, object-class schema (Figures
 //!   2–5 of the paper), search filters, LDIF, GRIS/GIIS servers with a TCP
-//!   wire protocol.
+//!   wire protocol. Discovery is hierarchical (`directory::hier`): sites
+//!   soft-state-register into the GIIS on the *simulated* clock (TTL
+//!   expiry and refresh churn are deterministic), brokers answer broad
+//!   queries from the stale registration snapshots and drill down to live
+//!   GRIS servers only for their top candidates, and at scale the
+//!   per-site fan-out runs event-driven on the `simnet` kernel
+//!   (`directory::fanout`: per-site latency, bounded in-flight
+//!   concurrency, deadlines, straggler cutoff).
 //! * [`catalog`] — replica catalog + application metadata repository.
 //! * [`gridftp`] — a simulated GridFTP fabric with transfer instrumentation
 //!   feeding per-source bandwidth history (paper §3.2).

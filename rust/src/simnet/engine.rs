@@ -9,7 +9,11 @@
 //! * **arrivals** — requests admitted at their Poisson instants
 //!   ([`Engine::schedule_arrival`]),
 //! * **timers** — GRIS dynamics refresh ticks and the co-allocation
-//!   scheduler's maintenance ticks ([`Engine::schedule_tick`]), and
+//!   scheduler's maintenance ticks ([`Engine::schedule_tick`]),
+//! * **directory queries** — in-flight GRIS/GIIS round trips whose
+//!   responses land after a simulated network latency
+//!   ([`Engine::schedule_query`]; driven by
+//!   [`crate::directory::fanout::DirectoryFanout`]), and
 //! * **flow completions** — discovered by integrating the one
 //!   grid-wide [`FlowSet`] between scheduled instants, so every
 //!   in-flight transfer (single-best fetches *and* co-allocated stripe
@@ -50,6 +54,10 @@ pub enum Signal {
     Arrival { id: u64, at: f64 },
     /// A scheduled timer fired (GRIS refresh, scheduler maintenance).
     Tick { id: u64, at: f64 },
+    /// A scheduled directory query resolved (response arrived, or its
+    /// deadline/cutoff passed — the scheduler does not distinguish;
+    /// the issuing fan-out does).
+    Query { id: u64, at: f64 },
     /// A flow in the shared [`FlowSet`] delivered its last byte.
     FlowDone(Completion),
 }
@@ -58,6 +66,7 @@ pub enum Signal {
 enum SchedKind {
     Arrival(u64),
     Tick(u64),
+    Query(u64),
 }
 
 /// A scheduled queue entry; ordered by time, ties by insertion order.
@@ -126,6 +135,13 @@ impl Engine {
         self.push(at, SchedKind::Tick(id));
     }
 
+    /// Schedule a directory-query resolution at absolute simulated
+    /// time `at`. Ids are caller-allocated and must be unique across
+    /// live queries (see `directory::fanout::QueryIds`).
+    pub fn schedule_query(&mut self, at: f64, id: u64) {
+        self.push(at, SchedKind::Query(id));
+    }
+
     /// Scheduled entries (arrivals + ticks) not yet delivered.
     pub fn scheduled(&self) -> usize {
         self.queue.len()
@@ -160,6 +176,7 @@ impl Engine {
                 return Some(match s.kind {
                     SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
                     SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
+                    SchedKind::Query(id) => Signal::Query { id, at: s.at },
                 });
             }
             match next_at {
@@ -171,6 +188,7 @@ impl Engine {
                     return Some(match s.kind {
                         SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
                         SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
+                        SchedKind::Query(id) => Signal::Query { id, at: s.at },
                     });
                 }
                 Some(at) => {
@@ -239,6 +257,19 @@ mod tests {
         assert_eq!(b, Signal::Tick { id: 100, at: 5.0 });
         let c = eng.next(&mut topo).unwrap();
         assert_eq!(c, Signal::Arrival { id: 1, at: 5.0 });
+        assert!(eng.next(&mut topo).is_none());
+    }
+
+    #[test]
+    fn query_events_share_the_time_order() {
+        let mut topo = flat_topo(2);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        eng.schedule_query(0.2, 7);
+        eng.schedule_tick(0.1, 1);
+        eng.schedule_query(0.2, 8); // tie: scheduling order wins
+        assert_eq!(eng.next(&mut topo), Some(Signal::Tick { id: 1, at: 0.1 }));
+        assert_eq!(eng.next(&mut topo), Some(Signal::Query { id: 7, at: 0.2 }));
+        assert_eq!(eng.next(&mut topo), Some(Signal::Query { id: 8, at: 0.2 }));
         assert!(eng.next(&mut topo).is_none());
     }
 

@@ -1,0 +1,249 @@
+//! ISSUE 5 — hierarchical GIIS discovery: soft-state lifecycle on the
+//! simulated clock, broad-from-summaries vs drill-down freshness, the
+//! GIIS↔direct parity contract, and the scale sweep's acceptance
+//! criteria (parity at zero staleness, drill-down query economy).
+
+use std::sync::{Arc, Mutex, RwLock};
+
+use globus_replica::broker::{Broker, HierDiscovery, LocalInfoService, RankPolicy};
+use globus_replica::catalog::{PhysicalLocation, ReplicaCatalog};
+use globus_replica::classad::parse_classad;
+use globus_replica::directory::client::DirectoryClient;
+use globus_replica::directory::entry::{format_f64, Dn, Entry};
+use globus_replica::directory::server::DirectoryServer;
+use globus_replica::directory::{Giis, Gris, HierarchicalDirectory};
+use globus_replica::experiment::{run_scale, ScaleOptions, SimGrid};
+use globus_replica::simnet::WorkloadSpec;
+
+// ---------------------------------------------------------------- //
+// Soft-state lifecycle on the sim clock
+// ---------------------------------------------------------------- //
+
+#[test]
+fn registration_lifecycle_is_a_pure_function_of_simulated_time() {
+    let mut g = Giis::with_ttl(100.0);
+    let dn = Dn::parse("ou=mcs, o=anl, o=grid").unwrap();
+    g.register("mcs", "a:1", dn.clone(), vec![]);
+    // A whole "day" of simulated time passes in microseconds of real
+    // time; expiry must track the former, never the latter.
+    for (t, live) in [(50.0, true), (99.0, true), (101.0, false), (5000.0, false)] {
+        let mut probe = Giis::with_ttl(100.0);
+        probe.register("mcs", "a:1", dn.clone(), vec![]);
+        probe.advance_to(t);
+        assert_eq!(probe.lookup("mcs").is_some(), live, "t={t}");
+    }
+    // Refresh churn: expire → re-register → live again, restamped.
+    g.advance_to(150.0);
+    assert!(g.lookup("mcs").is_none());
+    assert_eq!(g.sweep(), 1);
+    g.register("mcs", "a:1", dn, vec![]);
+    let r = g.lookup("mcs").unwrap();
+    assert_eq!(r.registered_at(), 150.0);
+    assert!(!r.expired(249.0));
+    assert!(r.expired(251.0));
+}
+
+#[test]
+fn tcp_registration_carries_ttl_and_ages_on_the_sim_clock() {
+    let giis = Arc::new(Mutex::new(Giis::with_ttl(300.0)));
+    let srv = DirectoryServer::spawn(giis.clone(), 0).unwrap();
+    let mut c = DirectoryClient::connect(srv.addr()).unwrap();
+    let base = Dn::parse("ou=mcs, o=anl, o=grid").unwrap();
+    c.register_ttl("mcs", "10.0.0.1:9000", &base, vec![], Some(5.0))
+        .unwrap();
+    c.register("dsd", "10.0.0.2:9000", &base, vec![]).unwrap();
+    assert_eq!(c.list().unwrap().len(), 2);
+    // Advance the *server's* simulated clock past the short TTL.
+    giis.lock().unwrap().advance_to(10.0);
+    let live = c.list().unwrap();
+    assert_eq!(live.len(), 1, "5 s TTL expired, default TTL survived");
+    assert_eq!(live[0].first("site").unwrap(), "dsd");
+    assert_eq!(live[0].f64("regAge"), Some(10.0));
+}
+
+// ---------------------------------------------------------------- //
+// A two-site grid whose "fast" site turns slow after registration —
+// the staleness scenario the hierarchy must expose and drill-down
+// must correct.
+// ---------------------------------------------------------------- //
+
+struct TwoSiteGrid {
+    direct: Broker,
+    hier_dir: Arc<RwLock<HierarchicalDirectory>>,
+    catalog: Arc<Mutex<ReplicaCatalog>>,
+    info: Arc<LocalInfoService>,
+    /// Live history of the "flaky" site (fast at registration time).
+    flaky_hist: Arc<RwLock<Vec<f64>>>,
+}
+
+fn site_gris(name: &str, hist: Arc<RwLock<Vec<f64>>>) -> Arc<RwLock<Gris>> {
+    let mut g = Gris::new("org", name);
+    let base = g.base_dn().clone();
+    let vol = base.child("gss", "vol0");
+    let mut e = Entry::new(vol.clone());
+    e.add("objectClass", "GridStorageServerVolume");
+    e.put_f64("totalSpace", 1e12);
+    e.put_f64("availableSpace", 1e11);
+    g.add_entry(e);
+    g.add_provider(
+        &vol,
+        Arc::new(move || {
+            let h = hist.read().unwrap();
+            vec![
+                (
+                    "rdHistory".into(),
+                    h.iter().map(|v| format_f64(*v)).collect::<Vec<_>>().join(","),
+                ),
+                ("AvgRDBandwidth".into(), format_f64(h.iter().sum::<f64>() / h.len() as f64)),
+            ]
+        }),
+    );
+    Arc::new(RwLock::new(g))
+}
+
+fn two_site_grid() -> TwoSiteGrid {
+    let mut catalog = ReplicaCatalog::new();
+    catalog
+        .create_logical("data.bin", globus_replica::util::units::Bytes(1e9), "sim")
+        .unwrap();
+    let flaky_hist = Arc::new(RwLock::new(vec![100e3, 102e3, 101e3]));
+    let steady_hist = Arc::new(RwLock::new(vec![50e3, 51e3, 50e3]));
+    let mut info = LocalInfoService::new();
+    let mut dir = HierarchicalDirectory::new(f64::INFINITY);
+    for (site, hist) in [("flaky", flaky_hist.clone()), ("steady", steady_hist)] {
+        catalog
+            .add_replica(
+                "data.bin",
+                PhysicalLocation { site: site.into(), url: format!("gsiftp://{site}/data.bin") },
+            )
+            .unwrap();
+        let gris = site_gris(site, hist);
+        dir.add_site(site, gris.clone());
+        info.add(site, gris);
+    }
+    dir.refresh_all(); // snapshot while "flaky" is fast
+    let catalog = Arc::new(Mutex::new(catalog));
+    let info = Arc::new(info);
+    let direct = Broker::new(
+        catalog.clone(),
+        info.clone(),
+        RankPolicy::ForecastBandwidth { engine: None },
+    );
+    TwoSiteGrid {
+        direct,
+        hier_dir: Arc::new(RwLock::new(dir)),
+        catalog,
+        info,
+        flaky_hist,
+    }
+}
+
+impl TwoSiteGrid {
+    fn hier_broker(&self, drill_down: usize) -> Broker {
+        Broker::new(
+            self.catalog.clone(),
+            self.info.clone(),
+            RankPolicy::ForecastBandwidth { engine: None },
+        )
+        .with_discovery(HierDiscovery { dir: self.hier_dir.clone(), drill_down })
+    }
+}
+
+fn request() -> globus_replica::classad::ClassAd {
+    parse_classad("reqdSpace = 0; requirement = TRUE;").unwrap()
+}
+
+#[test]
+fn broad_query_serves_summaries_only_and_staleness_misleads_it() {
+    let g = two_site_grid();
+    // The flaky site collapses *after* registration.
+    *g.flaky_hist.write().unwrap() = vec![1e3, 1.1e3, 0.9e3];
+    let fresh = g.direct.select("data.bin", &request()).unwrap();
+    assert_eq!(fresh.site, "steady", "fresh data sees the collapse");
+    // Summaries-only hierarchy still believes the registration-time
+    // snapshot: the stale route picks yesterday's winner.
+    let stale = g.hier_broker(0).select("data.bin", &request()).unwrap();
+    assert_eq!(stale.site, "flaky", "stale soft state misdirects selection");
+    assert_eq!(stale.trace.drill_downs, 0);
+    assert_eq!(stale.trace.summary_sites, 2);
+    // A soft-state refresh re-converges the two routes.
+    g.hier_dir.write().unwrap().refresh_all();
+    let refreshed = g.hier_broker(0).select("data.bin", &request()).unwrap();
+    assert_eq!(refreshed.site, "steady");
+}
+
+#[test]
+fn drill_down_fetches_fresh_detail_for_the_top_candidate() {
+    let g = two_site_grid();
+    *g.flaky_hist.write().unwrap() = vec![1e3, 1.1e3, 0.9e3];
+    // Drill-down 1: the summary-ranked leader ("flaky", per the stale
+    // snapshot) gets a fresh query, which reveals the collapse — so
+    // selection lands on "steady" even though its data is stale.
+    let sel = g.hier_broker(1).select("data.bin", &request()).unwrap();
+    assert_eq!(sel.site, "steady", "one drill-down corrects the stale winner");
+    assert_eq!(sel.trace.drill_downs, 1);
+    assert_eq!(sel.trace.summary_sites, 1);
+    let stats = g.hier_dir.read().unwrap().stats();
+    assert_eq!(stats.drill_downs, 1);
+    assert_eq!(stats.broad_queries, 1);
+}
+
+#[test]
+fn parity_giis_routed_equals_direct_when_fresh() {
+    // The acceptance contract, on a full SimGrid with live dynamic
+    // providers (space/load/history/prediction feeds): with every
+    // registration freshly pushed, GIIS-routed selection is
+    // indistinguishable from direct-GRIS selection — same winner, same
+    // scores, same ranking — at any drill-down depth.
+    let cfg = globus_replica::config::GridConfig::generate(8, 77);
+    let spec = WorkloadSpec { files: 6, ..Default::default() };
+    let mut grid = SimGrid::build(&cfg, &spec, 4, 64);
+    grid.warm(3);
+    let dir = grid.hierarchy(f64::INFINITY); // snapshot at the current clock
+    let req = request();
+    for drill in [0usize, 2, 4] {
+        let direct = grid.broker(RankPolicy::ForecastBandwidth { engine: None });
+        let hier = grid.broker_hier(
+            RankPolicy::ForecastBandwidth { engine: None },
+            dir.clone(),
+            drill,
+        );
+        for file in &grid.files {
+            let a = direct.select(file, &req).unwrap();
+            let b = hier.select(file, &req).unwrap();
+            assert_eq!(a.site, b.site, "file {file}, drill {drill}");
+            assert_eq!(a.score, b.score);
+            assert_eq!(a.trace.ranking, b.trace.ranking);
+        }
+    }
+}
+
+#[test]
+fn scale_sweep_meets_the_acceptance_criteria() {
+    // ≥ 3 site-count points; at zero staleness the GIIS route matches
+    // the always-fresh oracle exactly, and at every point its
+    // drill-down query bill is strictly below the full fan-out's.
+    let spec = WorkloadSpec { files: 6, mean_interarrival: 60.0, ..Default::default() };
+    let opts = ScaleOptions { n_requests: 12, replicas_per_file: 4, drill_down: 2, ..Default::default() };
+    let r = run_scale(&[16, 32, 64], &[0.0, 1e9], &spec, &opts, 9001);
+    assert_eq!(r.points.len(), 6);
+    for p in &r.points {
+        assert!(
+            p.drill_queries < p.full_fanout_queries,
+            "{} sites @ refresh {}: drill {} !< full {}",
+            p.sites,
+            p.refresh_period,
+            p.drill_queries,
+            p.full_fanout_queries
+        );
+        if p.refresh_period == 0.0 {
+            assert_eq!(p.degradation, 1.0, "{} sites: parity at zero staleness", p.sites);
+            assert_eq!(p.stale.mean_time, p.fresh.mean_time);
+        } else {
+            // The stale column still completes every request (TTL ∞)
+            // and reports a finite, comparable gap.
+            assert_eq!(p.stale.requests, 12);
+            assert!(p.degradation.is_finite() && p.degradation > 0.0);
+        }
+    }
+}

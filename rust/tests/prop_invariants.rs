@@ -11,8 +11,9 @@ use globus_replica::config::GridConfig;
 use globus_replica::directory::entry::{Dn, Entry};
 use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
 use globus_replica::directory::{Dit, Filter, Scope};
+use globus_replica::directory::fanout::{run_fanout, DirectoryFanout, FanoutPolicy, QueryIds};
 use globus_replica::forecast::forecast_bank;
-use globus_replica::simnet::{FaultKind, FlowSet, Topology};
+use globus_replica::simnet::{Engine, FaultKind, FlowSet, Signal, Topology};
 use globus_replica::util::prng::Rng;
 use globus_replica::util::prop::{forall, Config};
 
@@ -407,6 +408,116 @@ fn prop_flowset_no_starvation() {
         // Time always advanced past stalls.
         if fs.live() > 0 && topo.now < t_end {
             return Err("clock stopped with live flows".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_directory_fanout_cap_completion_determinism() {
+    // The event-driven fan-out contract (ISSUE 5): in-flight never
+    // exceeds the cap; every query completes (response or explicit
+    // timeout/cutoff) regardless of latency ordering; and a fixed
+    // input replays bit-identically.
+    forall("fanout cap/completion/determinism", cfg(120), |rng| {
+        let t0 = rng.range(0.0, 1e4);
+        let n_sites = 1 + rng.index(24);
+        let sites: Vec<(usize, f64)> = (0..n_sites)
+            .map(|i| (i, rng.range(0.0, 5.0)))
+            .collect();
+        let cap = 1 + rng.index(6);
+        let deadline = if rng.chance(0.3) { rng.range(0.5, 4.0) } else { f64::INFINITY };
+        let cutoff = if rng.chance(0.3) { rng.range(0.5, 8.0) } else { f64::INFINITY };
+        let policy = FanoutPolicy {
+            max_in_flight: cap,
+            per_query_deadline: deadline,
+            straggler_cutoff: cutoff,
+        };
+        let f1 = run_fanout(t0, &sites, policy);
+        if !f1.finished() {
+            return Err("fan-out never finished".into());
+        }
+        if f1.peak_in_flight() > cap {
+            return Err(format!("in-flight peak {} > cap {cap}", f1.peak_in_flight()));
+        }
+        let responses = f1.responses();
+        if responses.len() + f1.unresolved().len() != n_sites {
+            return Err(format!(
+                "{} responses + {} unresolved != {n_sites} sites",
+                responses.len(),
+                f1.unresolved().len()
+            ));
+        }
+        if deadline.is_infinite() && cutoff.is_infinite() && !f1.unresolved().is_empty() {
+            return Err("unbounded fan-out left queries unresolved".into());
+        }
+        for &(site, at) in &responses {
+            let latency = sites[site].1;
+            if latency > deadline + 1e-9 {
+                return Err(format!("site {site} answered past its deadline"));
+            }
+            if at > t0 + cutoff + 1e-9 {
+                return Err(format!("site {site} answered after the cutoff"));
+            }
+            if at < t0 + latency - 1e-9 {
+                return Err(format!("site {site} answered before its latency elapsed"));
+            }
+        }
+        let f2 = run_fanout(t0, &sites, policy);
+        if f2.responses() != responses || f2.finished_at() != f1.finished_at() {
+            return Err("fan-out not deterministic for a fixed input".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_concurrent_fanouts_share_one_kernel_without_crosstalk() {
+    // Two fan-outs on one engine with one id allocator: every event
+    // routes to exactly one owner, both finish, neither sees the
+    // other's sites.
+    forall("fanout shared-kernel routing", cfg(60), |rng| {
+        let (mut topo, _) = flow_topo(rng, 2);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let mut ids = QueryIds::new();
+        let mk_sites = |rng: &mut Rng, n: usize| -> Vec<(usize, f64)> {
+            (0..n).map(|i| (i, rng.range(0.1, 3.0))).collect()
+        };
+        let na = 1 + rng.index(8);
+        let sa = mk_sites(rng, na);
+        let nb = 1 + rng.index(8);
+        let sb = mk_sites(rng, nb);
+        let pol = FanoutPolicy { max_in_flight: 1 + rng.index(3), ..Default::default() };
+        let now = topo.now;
+        let mut a = DirectoryFanout::start(&mut eng, &mut ids, now, &sa, pol);
+        let mut b = DirectoryFanout::start(&mut eng, &mut ids, now, &sb, pol);
+        let a_ids: std::collections::BTreeSet<u64> = a.qids().into_iter().collect();
+        let b_ids: std::collections::BTreeSet<u64> = b.qids().into_iter().collect();
+        if a_ids.intersection(&b_ids).next().is_some() {
+            return Err("fan-outs share query ids".into());
+        }
+        let mut guard = 0;
+        while !(a.finished() && b.finished()) {
+            guard += 1;
+            if guard > 10_000 {
+                return Err("shared kernel never drained".into());
+            }
+            match eng.next(&mut topo) {
+                Some(Signal::Query { id, at }) => {
+                    if a_ids.contains(&id) {
+                        a.on_query(&mut eng, id, at);
+                    } else if b_ids.contains(&id) {
+                        b.on_query(&mut eng, id, at);
+                    } else {
+                        return Err(format!("orphan query id {id}"));
+                    }
+                }
+                Some(_) => continue,
+                None => return Err("kernel drained before fan-outs finished".into()),
+            }
+        }
+        if a.responses().len() != sa.len() || b.responses().len() != sb.len() {
+            return Err("a fan-out lost responses to its neighbour".into());
         }
         Ok(())
     });

@@ -2,18 +2,21 @@
 # Perf-trajectory recorder (ROADMAP perf log).
 #
 #   scripts/bench.sh              full run; writes BENCH_matchmaking.json,
-#                                 BENCH_coalloc.json and BENCH_contention.json
+#                                 BENCH_directory.json, BENCH_coalloc.json
+#                                 and BENCH_contention.json
 #   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
 #
 # Runs the selection-path benches (matchmaking core, broker phase
-# breakdown, directory/GRIS), the co-allocation bench (failover path +
-# churn scenario) and the open-loop contention load sweep, and records
-# the headline numbers as JSON, so the perf trajectory across PRs is
-# written down instead of scrolling away in bench output.
+# breakdown, directory/GRIS + the ISSUE-5 GIIS-routed-vs-direct
+# discovery comparison at 256 sites), the co-allocation bench (failover
+# path + churn scenario) and the open-loop contention load sweep, and
+# records the headline numbers as JSON, so the perf trajectory across
+# PRs is written down instead of scrolling away in bench output.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 out="${BENCH_JSON:-BENCH_matchmaking.json}"
+directory_out="${BENCH_DIRECTORY_JSON:-BENCH_directory.json}"
 coalloc_out="${BENCH_COALLOC_JSON:-BENCH_coalloc.json}"
 contention_out="${BENCH_CONTENTION_JSON:-BENCH_contention.json}"
 
@@ -23,8 +26,8 @@ BENCH_JSON="${out}" cargo bench --bench bench_matchmaking
 echo "== bench: broker =="
 cargo bench --bench bench_broker
 
-echo "== bench: directory =="
-cargo bench --bench bench_directory
+echo "== bench: directory (JSON -> ${directory_out}) =="
+BENCH_JSON="${directory_out}" cargo bench --bench bench_directory
 
 echo "== bench: coalloc (JSON -> ${coalloc_out}) =="
 BENCH_JSON="${coalloc_out}" cargo bench --bench bench_coalloc
@@ -35,6 +38,9 @@ BENCH_JSON="${contention_out}" cargo bench --bench bench_contention
 echo
 echo "recorded ${out}:"
 cat "${out}"
+echo
+echo "recorded ${directory_out}:"
+cat "${directory_out}"
 echo
 echo "recorded ${coalloc_out}:"
 cat "${coalloc_out}"
