@@ -15,6 +15,7 @@ use globus_replica::coalloc::{execute, plan_stripes, StripeSource};
 use globus_replica::config::{CoallocPolicy, GridConfig};
 use globus_replica::experiment::{run_churn, run_coalloc_quality, ChurnStrategyReport};
 use globus_replica::gridftp::GridFtp;
+use globus_replica::metrics::Metrics;
 use globus_replica::simnet::{FaultKind, Topology, WorkloadSpec};
 use globus_replica::util::bench::{report_metric, Bench, Stats};
 use globus_replica::util::json::Json;
@@ -151,6 +152,18 @@ fn main() {
         );
     }
 
+    // One representative execution's counters routed through the
+    // Metrics registry; the BENCH JSON embeds the full stable-ordered
+    // `snapshot()` (P8) instead of bespoke counter printing.
+    let m = Metrics::new();
+    {
+        let mut topo = base_topo.clone_for_probe();
+        topo.schedule_fault(victim_idx, death_at, FaultKind::ReplicaDeath);
+        let ftp = GridFtp::new(&topo, 32);
+        let out = execute(&mut topo, &ftp, "bench-client", &plan, &policy).unwrap();
+        out.record_metrics(&m);
+    }
+
     if let Ok(path) = std::env::var("BENCH_JSON") {
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("coalloc".to_string()));
@@ -169,6 +182,10 @@ fn main() {
         root.insert(
             "coalloc_speedup_vs_single_best".to_string(),
             Json::Num(r.speedup),
+        );
+        root.insert(
+            "metrics".to_string(),
+            Json::parse(&m.to_json()).expect("snapshot JSON parses"),
         );
         let body = Json::Obj(root).to_string();
         match std::fs::write(&path, &body) {

@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use globus_replica::config::GridConfig;
 use globus_replica::experiment::{run_contention, ContentionPoint, OpenLoopOptions, OpenReport};
+use globus_replica::metrics::Metrics;
 use globus_replica::simnet::WorkloadSpec;
 use globus_replica::util::bench::report_metric;
 use globus_replica::util::json::Json;
@@ -97,6 +98,22 @@ fn main() {
         );
     }
 
+    // Aggregate counters and latency distributions go through the
+    // Metrics registry and are serialized in one stable-ordered
+    // `snapshot()` pass (P8) instead of bespoke per-field printing.
+    let m = Metrics::new();
+    m.counter("contention.points").add(sweep.points.len() as u64);
+    m.counter("contention.requests_per_point").add(n_requests as u64);
+    m.histogram("contention.sweep_wall_ns").observe(wall);
+    for p in &sweep.points {
+        m.histogram("contention.informed_mean_time_ns")
+            .observe_ns((p.informed.quality.mean_time * 1e9) as u64);
+        m.histogram("contention.informed_p95_time_ns")
+            .observe_ns((p.informed.quality.p95_time * 1e9) as u64);
+        m.counter("contention.overlapped_admissions")
+            .add(p.informed.overlapped_admissions as u64);
+    }
+
     if let Ok(path) = std::env::var("BENCH_JSON") {
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("contention".to_string()));
@@ -107,6 +124,10 @@ fn main() {
         root.insert(
             "points".to_string(),
             Json::Arr(sweep.points.iter().map(point_json).collect()),
+        );
+        root.insert(
+            "metrics".to_string(),
+            Json::parse(&m.to_json()).expect("snapshot JSON parses"),
         );
         let body = Json::Obj(root).to_string();
         match std::fs::write(&path, &body) {

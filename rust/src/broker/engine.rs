@@ -37,6 +37,7 @@ use crate::directory::filter::Filter;
 use crate::directory::gris::Gris;
 use crate::directory::hier::HierarchicalDirectory;
 use crate::metrics::Metrics;
+use crate::trace::{Ev, ReqId, TraceHandle};
 
 use super::convert::{entries_to_candidate, Candidate};
 use super::policy::{RankPolicy, Ranked};
@@ -174,6 +175,28 @@ pub struct BrokerTrace {
     /// Hierarchical route only: candidates served purely from the
     /// (stale) GIIS registration snapshot.
     pub summary_sites: usize,
+}
+
+impl BrokerTrace {
+    /// File this selection's phase timings into the flight recorder as
+    /// [`Ev::BrokerPhase`] spans under request `req` at simulated
+    /// instant `at`. Broker phases are *wall-clock* compute measured
+    /// inside Search/Convert/Match, so each event carries `wall_us`
+    /// rather than stretching simulated time; `trace-summary` reports
+    /// them as a per-phase overhead table, not as lifetime spans.
+    pub fn record_trace(&self, trace: &TraceHandle, at: f64, req: ReqId) {
+        if !trace.on() {
+            return;
+        }
+        for (phase, us) in [
+            ("search", self.search_us),
+            ("convert", self.convert_us),
+            ("match", self.match_us),
+        ] {
+            let wall_us = us.min(u64::MAX as u128) as u64;
+            trace.rec(at, req, Ev::BrokerPhase { phase, wall_us });
+        }
+    }
 }
 
 /// Result of a selection.
@@ -886,6 +909,28 @@ mod tests {
         // Timings are measured (may be 0µs on fast machines but the
         // fields exist and ranking is consistent with `ranked`).
         assert_eq!(sel.trace.ranking.len(), sel.ranked.len());
+    }
+
+    #[test]
+    fn trace_phases_reach_flight_recorder() {
+        let (broker, request) = fixture(RankPolicy::ClassAdRank);
+        let sel = broker.select("run42.dat", &request).unwrap();
+        let handle = TraceHandle::new(64);
+        sel.trace.record_trace(&handle, 12.5, 3);
+        let phases: Vec<&'static str> = handle
+            .read(|r| {
+                r.events()
+                    .iter()
+                    .filter_map(|e| match e.ev {
+                        Ev::BrokerPhase { phase, .. } => Some(phase),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap();
+        assert_eq!(phases, ["search", "convert", "match"]);
+        // A disabled handle records nothing and never allocates.
+        sel.trace.record_trace(&TraceHandle::disabled(), 12.5, 3);
     }
 
     #[test]

@@ -51,6 +51,7 @@ use crate::config::CoallocPolicy;
 use crate::gridftp::history::{Direction, TransferRecord};
 use crate::gridftp::GridFtp;
 use crate::simnet::{Completion, Engine, FlowSet, Signal, Topology};
+use crate::trace::{Ev, ReqId, TraceHandle};
 
 use super::planner::StripePlan;
 
@@ -198,6 +199,10 @@ pub struct CoallocSession {
     /// Terminal error (sticky); `outcome` surfaces it.
     err: Option<anyhow::Error>,
     done: bool,
+    /// Flight recorder (disabled by default; see [`crate::trace`]).
+    trace: TraceHandle,
+    /// Request id the recorder files this session's block events under.
+    trace_req: ReqId,
 }
 
 impl CoallocSession {
@@ -214,6 +219,24 @@ impl CoallocSession {
         policy: &CoallocPolicy,
         client: &str,
         group: usize,
+    ) -> Result<CoallocSession> {
+        Self::start_traced(flows, topo, plan, policy, client, group, TraceHandle::disabled(), 0)
+    }
+
+    /// [`Self::start`] with the flight recorder attached: every block
+    /// dispatch / steal / failover / retry / completion is recorded
+    /// under request id `req` — the opening dispatch included, since
+    /// the handle is installed before the first maintenance pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_traced(
+        flows: &mut FlowSet,
+        topo: &mut Topology,
+        plan: &StripePlan,
+        policy: &CoallocPolicy,
+        client: &str,
+        group: usize,
+        trace: TraceHandle,
+        req: ReqId,
     ) -> Result<CoallocSession> {
         let mut streams: Vec<Stream> = Vec::with_capacity(plan.assignments.len());
         for a in &plan.assignments {
@@ -263,6 +286,8 @@ impl CoallocSession {
             min_steal: policy.rebalance_threshold.max(1.0).ceil() as usize,
             err: None,
             done: false,
+            trace,
+            trace_req: req,
         };
         // The opening maintenance pass: failover check (a fault may
         // already be active) + initial block dispatch.
@@ -349,12 +374,13 @@ impl CoallocSession {
                 continue;
             }
             let reason = if dead { "died" } else { "stalled" };
-            let (site_name, orphans, over_budget) = {
+            let (site_name, orphans, over_budget, retried) = {
                 let s = &mut self.streams[i];
                 s.failed = true;
                 self.failovers += 1;
                 let mut orphans = s.queue.len();
                 let mut over_budget = None;
+                let mut retried = None;
                 if let Some((block, fid, _)) = s.current.take() {
                     flows.cancel(fid);
                     self.flow_to_stream.remove(&fid);
@@ -362,14 +388,26 @@ impl CoallocSession {
                     self.retries[block] += 1;
                     orphans += 1;
                     s.queue.push_front(block);
+                    retried = Some(block);
                     if self.retries[block] > self.policy.max_block_retries {
                         over_budget = Some(block);
                     }
                 }
                 topo.end_transfer(s.site);
                 self.blocks_requeued += orphans;
-                (s.site_name.clone(), orphans, over_budget)
+                (s.site_name.clone(), orphans, over_budget, retried)
             };
+            if self.trace.on() {
+                let (req, at, orphaned) = (self.trace_req, topo.now, orphans as u32);
+                let name = site_name.clone();
+                self.trace.with(|r| {
+                    let site = r.intern(&name);
+                    if let Some(b) = retried {
+                        r.push(at, req, Ev::BlockRetry { site, block: b as u64 });
+                    }
+                    r.push(at, req, Ev::BlockFailover { site, orphaned });
+                });
+            }
             if self.policy.max_block_retries == 0 && orphans > 0 {
                 // Paper-era behaviour: losing a source with work
                 // pending kills the whole transfer.
@@ -452,6 +490,17 @@ impl CoallocSession {
                                 .collect();
                             grabbed.reverse(); // keep ascending offsets
                             self.steals += 1;
+                            if self.trace.on() {
+                                let (req, at) = (self.trace_req, topo.now);
+                                let moved = grabbed.len() as u32;
+                                let from_name = self.streams[v].site_name.clone();
+                                let to_name = self.streams[i].site_name.clone();
+                                self.trace.with(|r| {
+                                    let from = r.intern(&from_name);
+                                    let to = r.intern(&to_name);
+                                    r.push(at, req, Ev::BlockSteal { from, to, blocks: moved });
+                                });
+                            }
                             let mut it = grabbed.into_iter();
                             let first = it.next();
                             for b in it {
@@ -489,6 +538,14 @@ impl CoallocSession {
                 let fid = flows.add_in(topo, self.streams[i].site, len, lead, self.group);
                 self.flow_to_stream.insert(fid, i);
                 self.streams[i].current = Some((b, fid, topo.now));
+                if self.trace.on() {
+                    let (req, at) = (self.trace_req, topo.now);
+                    let name = self.streams[i].site_name.clone();
+                    self.trace.with(|r| {
+                        let site = r.intern(&name);
+                        r.push(at, req, Ev::BlockStart { site, block: b as u64, bytes: len as u64 });
+                    });
+                }
             }
         }
     }
@@ -509,6 +566,14 @@ impl CoallocSession {
         self.delivered[block] = true;
         let (_, len) = self.plan.block_range(block);
         let duration = (c.at - assigned_at).max(1e-9);
+        if self.trace.on() {
+            let (req, at) = (self.trace_req, c.at);
+            let name = self.streams[owner].site_name.clone();
+            self.trace.with(|r| {
+                let site = r.intern(&name);
+                r.push(at, req, Ev::BlockFinish { site, block: block as u64, bytes: len as u64 });
+            });
+        }
         ftp.record(
             self.streams[owner].site,
             TransferRecord {
@@ -1051,6 +1116,67 @@ mod tests {
         for i in 0..topo.len() {
             assert_eq!(topo.site(i).active_transfers, 0);
         }
+    }
+
+    #[test]
+    fn traced_session_records_block_lifecycle() {
+        let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 2,
+            tick: 1.0,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6]), 16e6, &policy);
+        let trace = TraceHandle::new(1 << 12);
+        let mut eng = Engine::new(FlowSet::new(policy.client_downlink));
+        let mut session = CoallocSession::start_traced(
+            &mut eng.flows,
+            &mut topo,
+            &plan,
+            &policy,
+            "c",
+            0,
+            trace.clone(),
+            7,
+        )
+        .unwrap();
+        let tick = session.tick_period();
+        let mut next_tick = topo.now + tick;
+        eng.schedule_tick(next_tick, 0);
+        let mut guard = 0;
+        while !session.is_done() {
+            guard += 1;
+            assert!(guard < 100_000, "traced run did not converge");
+            match eng.next(&mut topo) {
+                Some(Signal::FlowDone(c)) => {
+                    session.on_flow_done(&mut eng.flows, &mut topo, &ftp, &c);
+                }
+                Some(Signal::Tick { .. }) => {
+                    session.step(&mut eng.flows, &mut topo);
+                    if !session.is_done() {
+                        next_tick += tick;
+                        eng.schedule_tick(next_tick, 0);
+                    }
+                }
+                other => panic!("unexpected signal {other:?}"),
+            }
+        }
+        let out = session.outcome().unwrap();
+        let (starts, finishes) = trace
+            .read(|r| {
+                let evs = r.events();
+                (
+                    evs.iter().filter(|e| matches!(e.ev, Ev::BlockStart { .. })).count(),
+                    evs.iter().filter(|e| matches!(e.ev, Ev::BlockFinish { .. })).count(),
+                )
+            })
+            .unwrap();
+        // Every block starts exactly once per attempt and finishes once.
+        assert_eq!(finishes, plan.n_blocks);
+        assert_eq!(starts, plan.n_blocks + out.retries_total);
+        // All events are filed under the session's request id.
+        assert!(trace.read(|r| r.events().iter().all(|e| e.req == 7)).unwrap());
     }
 
     #[test]

@@ -35,6 +35,7 @@
 use std::collections::BTreeMap;
 
 use crate::simnet::{Engine, Signal, Topology};
+use crate::trace::{Ev, ReqId, SiteId, TraceHandle};
 
 /// Bounds on one fan-out.
 #[derive(Debug, Clone, Copy)]
@@ -123,6 +124,14 @@ pub struct DirectoryFanout {
     outstanding: usize,
     peak_in_flight: usize,
     finished_at: Option<f64>,
+    /// Flight recorder (disabled unless [`DirectoryFanout::start_traced`]
+    /// wired one in): per-query issue/land/timeout/cutoff events keyed
+    /// by the owning request.
+    trace: TraceHandle,
+    trace_req: ReqId,
+    /// Interned display labels aligned with `queries` (empty when
+    /// untraced — the caller interns because only it knows site names).
+    labels: Vec<SiteId>,
 }
 
 impl DirectoryFanout {
@@ -136,6 +145,26 @@ impl DirectoryFanout {
         now: f64,
         sites: &[(usize, f64)],
         policy: FanoutPolicy,
+    ) -> DirectoryFanout {
+        Self::start_traced(eng, ids, now, sites, policy, TraceHandle::disabled(), 0, &[])
+    }
+
+    /// [`DirectoryFanout::start`] with a flight recorder attached:
+    /// every query issue/land/timeout and the straggler cutoff are
+    /// recorded against request `req`. `labels` carries one interned
+    /// site id per `sites` entry (the caller interns — only it knows
+    /// the display names behind the opaque site tokens); it may be
+    /// empty when `trace` is disabled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_traced(
+        eng: &mut Engine,
+        ids: &mut QueryIds,
+        now: f64,
+        sites: &[(usize, f64)],
+        policy: FanoutPolicy,
+        trace: TraceHandle,
+        req: ReqId,
+        labels: &[SiteId],
     ) -> DirectoryFanout {
         let max_in_flight = policy.max_in_flight.max(1);
         let queries: Vec<Query> = sites
@@ -167,6 +196,9 @@ impl DirectoryFanout {
             in_flight: 0,
             peak_in_flight: 0,
             finished_at: if sites.is_empty() { Some(now) } else { None },
+            trace,
+            trace_req: req,
+            labels: labels.to_vec(),
         };
         f.issue_up_to_cap(eng, now);
         f
@@ -193,6 +225,10 @@ impl DirectoryFanout {
             let resolves_in = q.latency.min(self.policy.per_query_deadline);
             eng.schedule_query(now + resolves_in, q.qid);
             self.in_flight += 1;
+            if self.trace.on() {
+                let site = self.labels.get(self.next_queued - 1).copied().unwrap_or(0);
+                self.trace.rec(now, self.trace_req, Ev::QueryIssue { site });
+            }
         }
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
     }
@@ -205,16 +241,21 @@ impl DirectoryFanout {
             return FanoutStep::Ignored;
         }
         if Some(id) == self.cutoff_qid {
+            let mut cut = 0u32;
             for q in &mut self.queries {
                 if matches!(q.state, QueryState::Queued | QueryState::InFlight) {
                     q.state = QueryState::CutOff;
                     q.resolved_at = at;
                     self.outstanding -= 1;
+                    cut += 1;
                 }
             }
             self.in_flight = 0;
             self.next_queued = self.queries.len();
             self.finished_at = Some(at);
+            if self.trace.on() {
+                self.trace.rec(at, self.trace_req, Ev::QueryCutoff { unresolved: cut });
+            }
             return FanoutStep::CutOff { at };
         }
         let Some(&i) = self.by_qid.get(&id) else {
@@ -237,6 +278,15 @@ impl DirectoryFanout {
             self.finished_at = Some(at);
         }
         let site = self.queries[i].site;
+        if self.trace.on() {
+            let label = self.labels.get(i).copied().unwrap_or(0);
+            let ev = if timed_out {
+                Ev::QueryTimeout { site: label }
+            } else {
+                Ev::QueryLand { site: label }
+            };
+            self.trace.rec(at, self.trace_req, ev);
+        }
         if timed_out {
             FanoutStep::TimedOut { site, at }
         } else {

@@ -31,6 +31,7 @@ use crate::classad::{parse_classad, ClassAd};
 use crate::coalloc;
 use crate::config::{CoallocPolicy, GridConfig};
 use crate::simnet::{FaultKind, Workload, WorkloadSpec};
+use crate::trace::{Ev, TraceHandle};
 
 use super::grid::SimGrid;
 
@@ -83,6 +84,8 @@ fn replay(
     strategy: &AccessStrategy,
     exec_policy: &CoallocPolicy,
     death_fraction: f64,
+    trace: &TraceHandle,
+    req_base: u64,
 ) -> ChurnStrategyReport {
     let mut workload = Workload::new(spec.clone(), cfg.seed);
     let requests = workload.take(n_requests);
@@ -105,19 +108,35 @@ fn replay(
     // Absolute arrival instants from the post-warm clock — the same
     // arithmetic the open-loop kernel uses (see `run_quality_trace`).
     let t0 = grid.topo.now;
-    for req in &requests {
+    for (i, req) in requests.iter().enumerate() {
+        let id = req_base + i as u64;
         grid.topo.advance_to(t0 + req.at);
         grid.publish_dynamics();
+        trace.rec(grid.topo.now, id, Ev::Arrival);
         let logical = &grid.files[req.file];
         let size = grid.sizes[req.file];
         let sel = match broker.plan_access(logical, &ad, size, strategy) {
             Ok(s) => s,
-            Err(_) => continue,
+            Err(_) => {
+                trace.rec(grid.topo.now, id, Ev::RequestSkipped { reason: "no_replica" });
+                continue;
+            }
         };
         if sel.plan.assignments.is_empty() {
+            trace.rec(grid.topo.now, id, Ev::RequestSkipped { reason: "no_replica" });
             continue;
         }
         report.attempts += 1;
+        if trace.on() {
+            let now = grid.topo.now;
+            let candidates = sel.plan.assignments.len() as u32;
+            let name = sel.plan.assignments[0].source.site.clone();
+            trace.with(|r| {
+                let site = r.intern(&name);
+                r.push(now, id, Ev::Selection { site, candidates });
+            });
+            sel.selection.trace.record_trace(trace, now, id);
+        }
         // Kill the plan's largest stripe — the predicted-best source —
         // a fraction of the way into its own predicted makespan.
         let victim = sel
@@ -151,10 +170,16 @@ fn replay(
                 report.failovers += out.failovers;
                 report.blocks_requeued += out.blocks_requeued;
                 report.steals += out.steals;
+                trace.rec(
+                    out.started_at + out.duration,
+                    id,
+                    Ev::RequestDone { transfer_s: out.duration },
+                );
                 durations.push(out.duration);
             }
             Err(_) => {
                 report.failed += 1;
+                trace.rec(grid.topo.now, id, Ev::RequestSkipped { reason: "dead_source" });
                 grid.topo = topo_before;
                 for (i, h) in hist_before.into_iter().enumerate() {
                     *grid.ftp.history(i).write().unwrap() = h;
@@ -184,6 +209,33 @@ pub fn run_churn(
     policy: &CoallocPolicy,
     death_fraction: f64,
 ) -> ChurnReport {
+    run_churn_traced(
+        cfg,
+        spec,
+        n_requests,
+        replicas_per_file,
+        warm,
+        policy,
+        death_fraction,
+        &TraceHandle::disabled(),
+    )
+}
+
+/// [`run_churn`] with the flight recorder attached: each strategy's
+/// request lifecycle roots land in `trace` under a disjoint request-id
+/// band (strategy index × [`CHURN_REQ_STRIDE`]), so one trace file
+/// holds all three replays without id collisions.
+#[allow(clippy::too_many_arguments)]
+pub fn run_churn_traced(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    n_requests: usize,
+    replicas_per_file: usize,
+    warm: usize,
+    policy: &CoallocPolicy,
+    death_fraction: f64,
+    trace: &TraceHandle,
+) -> ChurnReport {
     let no_failover = CoallocPolicy { max_block_retries: 0, ..policy.clone() };
     let with_failover = CoallocPolicy {
         max_block_retries: policy.max_block_retries.max(1),
@@ -200,6 +252,8 @@ pub fn run_churn(
             &AccessStrategy::SingleBest,
             &no_failover,
             death_fraction,
+            trace,
+            0,
         ),
         striped: replay(
             "striped",
@@ -211,6 +265,8 @@ pub fn run_churn(
             &AccessStrategy::Coallocated(no_failover.clone()),
             &no_failover,
             death_fraction,
+            trace,
+            CHURN_REQ_STRIDE,
         ),
         striped_failover: replay(
             "striped-failover",
@@ -222,9 +278,15 @@ pub fn run_churn(
             &AccessStrategy::Coallocated(with_failover.clone()),
             &with_failover,
             death_fraction,
+            trace,
+            2 * CHURN_REQ_STRIDE,
         ),
     }
 }
+
+/// Request-id band width separating the three strategies' lifecycle
+/// roots in one shared trace.
+pub const CHURN_REQ_STRIDE: u64 = 1_000_000;
 
 #[cfg(test)]
 mod tests {

@@ -36,7 +36,7 @@ pub mod open_loop;
 pub mod quality;
 pub mod scale;
 
-pub use churn::{run_churn, ChurnReport, ChurnStrategyReport};
+pub use churn::{run_churn, run_churn_traced, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
 pub use open_loop::{
     run_contention, run_quality_open, AccessMode, ContentionPoint, ContentionReport,

@@ -41,6 +41,7 @@ use crate::directory::fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryI
 use crate::directory::hier::HierarchicalDirectory;
 use crate::gridftp::OpenFetch;
 use crate::simnet::{Engine, FlowSet, Request, Signal, Workload, WorkloadSpec};
+use crate::trace::{Ev, SiteId, TraceHandle, SAMPLE_REQ};
 
 use super::grid::SimGrid;
 use super::quality::{
@@ -51,6 +52,8 @@ use super::quality::{
 const GRIS_TICK_ID: u64 = u64::MAX;
 /// Timer id of the recurring GIIS soft-state re-registration push.
 const REG_TICK_ID: u64 = u64::MAX - 1;
+/// Timer id of the flight recorder's time-series sampler.
+const SAMPLE_TICK_ID: u64 = u64::MAX - 2;
 
 /// How the open-loop driver executes an admitted request's Access
 /// phase.
@@ -128,6 +131,14 @@ pub struct OpenLoopOptions {
     /// parity-anchored legacy behaviour) selects instantaneously from
     /// fresh direct-GRIS data.
     pub discovery: Option<DiscoveryOptions>,
+    /// Flight recorder ([`crate::trace`]): disabled by default, in
+    /// which case every instrumentation point costs one branch and the
+    /// run is bit-identical to an untraced one (the parity anchor).
+    pub trace: TraceHandle,
+    /// Time-series sampler cadence in simulated seconds (in-flight
+    /// flows, gate depth, GIIS liveness, per-link utilization).
+    /// `f64::INFINITY` (default) = no sampling; requires `trace`.
+    pub sample_period: f64,
 }
 
 impl OpenLoopOptions {
@@ -139,6 +150,8 @@ impl OpenLoopOptions {
             client_downlink: f64::INFINITY,
             gris_refresh: f64::INFINITY,
             discovery: None,
+            trace: TraceHandle::disabled(),
+            sample_period: f64::INFINITY,
         }
     }
 
@@ -251,6 +264,9 @@ struct Driver<'a> {
     peak_in_flight: usize,
     overlapped_admissions: usize,
     skipped: usize,
+    /// Post-warm clock origin; arrival instants are `t0 + req.at`
+    /// (the flight recorder derives gate wait times from it).
+    t0: f64,
 }
 
 impl Driver<'_> {
@@ -275,6 +291,16 @@ impl Driver<'_> {
         let logical = self.grid.files[req.file].clone();
         let size = self.grid.sizes[req.file];
         let ad = request_ad(req.min_bandwidth);
+        if self.opts.trace.on() {
+            // Legacy direct-GRIS path: every placement is queried fresh
+            // and selection is instantaneous at this very event.
+            let placements = self.grid.placement[req.file].len() as u32;
+            self.opts.trace.rec(
+                self.grid.topo.now,
+                id,
+                Ev::DiscoveryStart { placements, drills: placements },
+            );
+        }
         let pick = pick_replica(
             self.grid,
             &self.broker,
@@ -284,6 +310,15 @@ impl Driver<'_> {
             size,
             &ad,
         );
+        if self.opts.trace.on() {
+            let now = self.grid.topo.now;
+            let candidates = self.grid.placement[req.file].len() as u32;
+            let name = self.grid.topo.site(pick.pick_site).cfg.name.clone();
+            self.opts.trace.with(|r| {
+                let s = r.intern(&name);
+                r.push(now, id, Ev::Selection { site: s, candidates });
+            });
+        }
         self.run_access(eng, id, size, pick);
     }
 
@@ -317,6 +352,7 @@ impl Driver<'_> {
         if sites.is_empty() {
             // Every replica site's registration expired or was never
             // pushed: the file is undiscoverable right now.
+            self.opts.trace.rec(now, id, Ev::RequestSkipped { reason: "undiscoverable" });
             self.skipped += 1;
             return;
         }
@@ -340,7 +376,30 @@ impl Driver<'_> {
                 (slot, rtt)
             })
             .collect();
-        let fanout = DirectoryFanout::start(eng, &mut self.qids, now, &fan_sites, disc.fanout);
+        let mut labels: Vec<SiteId> = Vec::new();
+        if self.opts.trace.on() {
+            self.opts.trace.rec(
+                now,
+                id,
+                Ev::DiscoveryStart {
+                    placements: sites.len() as u32,
+                    drills: fan_sites.len() as u32,
+                },
+            );
+            self.opts.trace.with(|r| {
+                labels = fan_sites.iter().map(|&(slot, _)| r.intern(&sites[slot].0)).collect();
+            });
+        }
+        let fanout = DirectoryFanout::start_traced(
+            eng,
+            &mut self.qids,
+            now,
+            &fan_sites,
+            disc.fanout,
+            self.opts.trace.clone(),
+            id,
+            &labels,
+        );
         let fresh = vec![None; sites.len()];
         let pd = PendingDiscovery { request: id as usize, size, sites, stale, fresh, fanout };
         if pd.fanout.finished() {
@@ -394,6 +453,14 @@ impl Driver<'_> {
     /// everywhere else), select, and run the Access phase.
     fn finish_discovery(&mut self, eng: &mut Engine, pd: PendingDiscovery) {
         let req = &self.requests[pd.request];
+        if self.opts.trace.on() {
+            let responses = pd.fresh.iter().filter(|f| f.is_some()).count() as u32;
+            self.opts.trace.rec(
+                self.grid.topo.now,
+                pd.request as u64,
+                Ev::DiscoveryEnd { responses },
+            );
+        }
         let cands: Vec<Candidate> = pd
             .sites
             .iter()
@@ -413,8 +480,26 @@ impl Driver<'_> {
             pd.size,
             &ad,
         ) {
-            Some(pick) => self.run_access(eng, pd.request as u64, pd.size, pick),
-            None => self.skipped += 1,
+            Some(pick) => {
+                if self.opts.trace.on() {
+                    let now = self.grid.topo.now;
+                    let candidates = cands.len() as u32;
+                    let name = self.grid.topo.site(pick.pick_site).cfg.name.clone();
+                    self.opts.trace.with(|r| {
+                        let s = r.intern(&name);
+                        r.push(now, pd.request as u64, Ev::Selection { site: s, candidates });
+                    });
+                }
+                self.run_access(eng, pd.request as u64, pd.size, pick)
+            }
+            None => {
+                self.opts.trace.rec(
+                    self.grid.topo.now,
+                    pd.request as u64,
+                    Ev::RequestSkipped { reason: "no_replica" },
+                );
+                self.skipped += 1
+            }
         }
         // No gate drain here: the event loop runs `drain_gate` after
         // every event, and draining from inside finish_discovery would
@@ -431,7 +516,18 @@ impl Driver<'_> {
     fn drain_gate(&mut self, eng: &mut Engine) {
         while self.occupancy() < self.opts.max_in_flight {
             match self.waiting.pop_front() {
-                Some(id) => self.admit(eng, id),
+                Some(id) => {
+                    if self.opts.trace.on() {
+                        let now = self.grid.topo.now;
+                        let arrived = self.t0 + self.requests[id as usize].at;
+                        self.opts.trace.rec(
+                            now,
+                            id,
+                            Ev::GateUnpark { waited_s: (now - arrived).max(0.0) },
+                        );
+                    }
+                    self.admit(eng, id)
+                }
                 None => break,
             }
         }
@@ -452,6 +548,17 @@ impl Driver<'_> {
                     .ftp
                     .fetch(&mut self.grid.topo, pick.pick_site, "client", size);
                 let now = self.grid.topo.now;
+                if self.opts.trace.on() {
+                    let name = self.grid.topo.site(pick.pick_site).cfg.name.clone();
+                    let dur = out.duration;
+                    self.opts.trace.with(|r| {
+                        let s = r.intern(&name);
+                        r.push(now, id, Ev::AnalyticAccess { site: s, transfer_s: dur });
+                        // The analytic fetch consumes no kernel time:
+                        // stamp the logical completion instant.
+                        r.push(now + dur, id, Ev::RequestDone { transfer_s: dur });
+                    });
+                }
                 self.finished.push(RequestTrace {
                     request: id as usize,
                     site: pick.pick_site,
@@ -479,6 +586,20 @@ impl Driver<'_> {
                         if overlapping {
                             self.overlapped_admissions += 1;
                         }
+                        if self.opts.trace.on() {
+                            let now = self.grid.topo.now;
+                            let name =
+                                self.grid.topo.site(pick.pick_site).cfg.name.clone();
+                            let flow = open.flow as u64;
+                            self.opts.trace.with(|r| {
+                                let s = r.intern(&name);
+                                r.push(
+                                    now,
+                                    id,
+                                    Ev::FlowStart { site: s, flow, bytes: size as u64 },
+                                );
+                            });
+                        }
                         self.inflight.insert(
                             open.flow,
                             InFlight {
@@ -490,7 +611,14 @@ impl Driver<'_> {
                         );
                         self.peak_in_flight = self.peak_in_flight.max(self.inflight.len());
                     }
-                    Err(_) => self.skipped += 1,
+                    Err(_) => {
+                        self.opts.trace.rec(
+                            self.grid.topo.now,
+                            id,
+                            Ev::RequestSkipped { reason: "dead_source" },
+                        );
+                        self.skipped += 1
+                    }
                 }
             }
         }
@@ -505,6 +633,18 @@ impl Driver<'_> {
             None => return,
         };
         let out = self.grid.ftp.fetch_finish(&mut self.grid.topo, &fi.open, c.at);
+        if self.opts.trace.on() {
+            let name = self.grid.topo.site(fi.open.site).cfg.name.clone();
+            let flow = c.flow as u64;
+            let dur = out.duration;
+            let req = fi.request as u64;
+            let at = c.at;
+            self.opts.trace.with(|r| {
+                let s = r.intern(&name);
+                r.push(at, req, Ev::FlowFinish { site: s, flow, transfer_s: dur });
+                r.push(at, req, Ev::RequestDone { transfer_s: dur });
+            });
+        }
         self.finished.push(RequestTrace {
             request: fi.request,
             site: fi.open.site,
@@ -515,6 +655,50 @@ impl Driver<'_> {
             oracle_best: fi.oracle_best,
             hit_optimal: fi.hit_optimal,
         });
+    }
+
+    /// The flight recorder's time-series sampler (SAMPLE_TICK): global
+    /// gauges (in-flight flows, gate depth, GIIS registration liveness)
+    /// plus one utilization row per site link with live flows.
+    fn sample(&mut self, eng: &Engine) {
+        let now = self.grid.topo.now;
+        let giis_live = self
+            .hier
+            .as_ref()
+            .map(|h| {
+                let mut dir = h.write().unwrap();
+                dir.advance_to(now);
+                dir.giis().registrations().len() as u32
+            })
+            .unwrap_or(0);
+        self.opts.trace.rec(
+            now,
+            SAMPLE_REQ,
+            Ev::Sample {
+                in_flight: self.inflight.len() as u32,
+                gate_depth: self.waiting.len() as u32,
+                giis_live,
+            },
+        );
+        // Per-link utilization: live per-flow rates (downlink-clipped,
+        // the same arithmetic the integrator uses) summed per source
+        // site over that site's current WAN bandwidth.
+        let rates = eng.flows.bandwidths(&mut self.grid.topo);
+        let mut per_site: BTreeMap<usize, (u32, f64)> = BTreeMap::new();
+        for (idx, rate) in rates {
+            let e = per_site.entry(eng.flows.flow(idx).site).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += rate;
+        }
+        for (site, (flows, rate)) in per_site {
+            let cap = self.grid.topo.current_bandwidth(site);
+            let utilization = if cap > 0.0 { rate / cap } else { 0.0 };
+            let name = self.grid.topo.site(site).cfg.name.clone();
+            self.opts.trace.with(|r| {
+                let s = r.intern(&name);
+                r.push(now, SAMPLE_REQ, Ev::LinkSample { site: s, flows, utilization });
+            });
+        }
     }
 }
 
@@ -544,6 +728,7 @@ pub fn run_quality_open(
     let broker = grid.broker(policy);
 
     let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+    eng.trace = opts.trace.clone();
     // Group 0 of the base set stays empty; every workload client gets
     // its own downlink group so client pipes cap independently.
     let groups: Vec<usize> = (0..spec.clients.max(1))
@@ -558,6 +743,9 @@ pub fn run_quality_open(
     }
     if opts.gris_refresh.is_finite() && opts.gris_refresh > 0.0 {
         eng.schedule_tick(t0 + opts.gris_refresh, GRIS_TICK_ID);
+    }
+    if opts.trace.on() && opts.sample_period.is_finite() && opts.sample_period > 0.0 {
+        eng.schedule_tick(t0 + opts.sample_period, SAMPLE_TICK_ID);
     }
     // Discovery mode: wire the GIIS hierarchy (initial soft-state push
     // at t0) and its periodic re-registration tick.
@@ -586,6 +774,7 @@ pub fn run_quality_open(
         peak_in_flight: 0,
         overlapped_admissions: 0,
         skipped: 0,
+        t0,
     };
 
     // Event budget: arrivals + completions + GRIS ticks for any sane
@@ -599,10 +788,18 @@ pub fn run_quality_open(
             break;
         }
         match eng.next(&mut driver.grid.topo) {
-            Some(Signal::Arrival { id, .. }) => {
+            Some(Signal::Arrival { id, at }) => {
+                driver.opts.trace.rec(at, id, Ev::Arrival);
                 if driver.occupancy() < driver.opts.max_in_flight {
                     driver.admit(&mut eng, id);
                 } else {
+                    if driver.opts.trace.on() {
+                        driver.opts.trace.rec(
+                            at,
+                            id,
+                            Ev::GatePark { occupancy: driver.occupancy() as u32 },
+                        );
+                    }
                     driver.waiting.push_back(id);
                 }
             }
@@ -618,6 +815,10 @@ pub fn run_quality_open(
                     dir.refresh_all();
                     eng.schedule_tick(driver.grid.topo.now + d.refresh_period, REG_TICK_ID);
                 }
+            }
+            Some(Signal::Tick { id: SAMPLE_TICK_ID, .. }) => {
+                driver.sample(&eng);
+                eng.schedule_tick(driver.grid.topo.now + opts.sample_period, SAMPLE_TICK_ID);
             }
             Some(Signal::Tick { .. }) => {
                 driver.grid.publish_dynamics();
@@ -640,10 +841,24 @@ pub fn run_quality_open(
     // silently shrinking the report — the per-policy comparisons in
     // `run_contention` read `skipped` to know the means cover
     // different request subsets. Parked arrivals count too.
+    let wind_down_at = driver.grid.topo.now;
     for (flow, fi) in std::mem::take(&mut driver.inflight) {
         eng.flows.cancel(flow);
         driver.grid.topo.end_transfer(fi.open.site);
+        driver.opts.trace.rec(
+            wind_down_at,
+            fi.request as u64,
+            Ev::RequestSkipped { reason: "wind_down" },
+        );
         driver.skipped += 1;
+    }
+    if driver.opts.trace.on() {
+        for (&id, _) in driver.pending_disc.iter() {
+            driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
+        }
+        for &id in driver.waiting.iter() {
+            driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
+        }
     }
     driver.skipped += driver.pending_disc.len() + driver.waiting.len();
 

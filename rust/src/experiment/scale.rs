@@ -27,6 +27,7 @@ use crate::broker::selectors::{Selector, SelectorKind};
 use crate::broker::RankPolicy;
 use crate::config::GridConfig;
 use crate::simnet::{Request, Workload, WorkloadSpec};
+use crate::trace::{Ev, TraceHandle};
 
 use super::grid::SimGrid;
 use super::quality::{finish_report, pick_from_candidates, request_ad, QualityReport};
@@ -43,6 +44,11 @@ pub struct ScaleOptions {
     /// every site discoverable however stale — the pure-staleness
     /// study; finite values add expiry churn on top).
     pub registration_ttl: f64,
+    /// Flight recorder for request lifecycle roots (disabled by
+    /// default). The handle is shared by every replay of the sweep and
+    /// request ids restart per replay, so attach it when running a
+    /// single cell (one site count × one refresh period).
+    pub trace: TraceHandle,
 }
 
 impl Default for ScaleOptions {
@@ -53,6 +59,7 @@ impl Default for ScaleOptions {
             warm: 3,
             drill_down: 2,
             registration_ttl: f64::INFINITY,
+            trace: TraceHandle::disabled(),
         }
     }
 }
@@ -132,9 +139,11 @@ fn replay_serial(
     let mut optimal_hits = 0usize;
     let mut queries = 0u64;
     let mut undiscovered = 0u64;
-    for req in requests {
+    for (i, req) in requests.iter().enumerate() {
+        let id = i as u64;
         grid.topo.advance_to(t0 + req.at);
         grid.publish_dynamics();
+        opts.trace.rec(grid.topo.now, id, Ev::Arrival);
         if let Some(h) = &hier {
             let mut dir = h.write().unwrap();
             dir.advance_to(grid.topo.now);
@@ -172,6 +181,19 @@ fn replay_serial(
         if refresh_period.is_none() {
             queries += cands.len() as u64;
         }
+        if opts.trace.on() {
+            // Direct route: every candidate got a fresh GRIS query;
+            // hierarchical: only the drill-down budget did.
+            let drills = match refresh_period {
+                None => cands.len() as u32,
+                Some(_) => opts.drill_down.min(cands.len()) as u32,
+            };
+            opts.trace.rec(
+                grid.topo.now,
+                id,
+                Ev::DiscoveryStart { placements: cands.len() as u32, drills },
+            );
+        }
         let pick = match pick_from_candidates(
             &grid,
             &broker,
@@ -183,11 +205,24 @@ fn replay_serial(
         ) {
             Some(p) => p,
             None => {
+                opts.trace.rec(grid.topo.now, id, Ev::RequestSkipped { reason: "no_replica" });
                 undiscovered += 1;
                 continue;
             }
         };
         let out = grid.ftp.fetch(&mut grid.topo, pick.pick_site, "client", size);
+        if opts.trace.on() {
+            let now = grid.topo.now;
+            let name = grid.topo.site(pick.pick_site).cfg.name.clone();
+            let candidates = cands.len() as u32;
+            let dur = out.duration;
+            opts.trace.with(|r| {
+                let site = r.intern(&name);
+                r.push(now, id, Ev::Selection { site, candidates });
+                r.push(now, id, Ev::AnalyticAccess { site, transfer_s: dur });
+                r.push(now + dur, id, Ev::RequestDone { transfer_s: dur });
+            });
+        }
         durations.push(out.duration);
         bandwidths.push(out.bandwidth);
         slowdowns.push(out.duration / pick.best_oracle.max(1e-9));

@@ -56,6 +56,44 @@
 //! * [`util`] — deterministic PRNG, unit parsing (`50G`, `75K/Sec`), JSON,
 //!   micro-benchmark + property-test harnesses (the image has no network,
 //!   so criterion/proptest equivalents are provided in-tree).
+//! * [`trace`] — the flight recorder: causal per-request tracing and
+//!   grid time-series sampling on the simulated clock, with JSONL and
+//!   Perfetto (Chrome trace-event) exporters and the `trace-summary`
+//!   critical-path analyzer behind the `globus-replica` binary.
+//!
+//! ## Reading a trace
+//!
+//! Every experiment runner can run with the flight recorder on
+//! (`OpenLoopOptions { trace: TraceHandle::new(cap), sample_period,
+//! .. }` or the `simulate --trace` subcommand); it then writes
+//! `TRACE_<name>.json` (Chrome trace-event JSON — drag into
+//! <https://ui.perfetto.dev> for one track per request and per site,
+//! plus `in_flight` / `gate_depth` / `giis_live` / per-link
+//! utilization counter series) and `TRACE_<name>.jsonl` (raw events).
+//! A slow request is diagnosed without any UI, straight from the
+//! artifact:
+//!
+//! ```text
+//! $ globus-replica trace-summary TRACE_open_loop.json --top 3
+//! requests 96 (skipped 4), dropped 0, min span coverage 100.0%
+//! phase       p50        p95        mean
+//! queue       0.000 s    41.3 s     12.9 s
+//! discovery   0.240 s    0.310 s    0.251 s
+//! transfer    155.1 s    402.7 s    182.4 s
+//! ...
+//! #1 slowest: req 4711  total 512.4 s = queue 301.2 + disc 0.3 + xfer 210.9
+//!     0.0 s arrival | 0.0 s gate_park occupancy=32 | 301.2 s gate_unpark ...
+//! ```
+//!
+//! The per-request chain is `arrival ──queue── admit ──discovery──
+//! selection ──transfer── done`; the three spans partition the
+//! request's simulated lifetime (coverage is exact by construction), so
+//! "where did the time go" always has a complete answer: here, req 4711
+//! was not slow at the chosen site — it sat 301 s in the admission
+//! gate. `trace-summary` also recomputes the report's `mean_time` /
+//! `p95_time` from the trace alone (same arithmetic as
+//! `finish_report`), which pins the recorder against the aggregates it
+//! explains.
 
 pub mod broker;
 pub mod catalog;
@@ -69,6 +107,7 @@ pub mod gridftp;
 pub mod metrics;
 pub mod runtime;
 pub mod simnet;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias.

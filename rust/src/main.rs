@@ -9,18 +9,27 @@
 //! * `select`   — one decentralized selection against a generated
 //!   in-process grid (prints the Figure-6 phase trace).
 //! * `simulate` — pointer to the end-to-end workload simulation
-//!   (`examples/datagrid_sim`).
+//!   (`examples/datagrid_sim`); with `--trace`, runs a flight-recorded
+//!   open-loop scenario here and writes `TRACE_*.json` artifacts.
+//! * `trace-summary` — critical-path analysis of an exported trace
+//!   (per-phase p50/p95 breakdown, report parity, slowest requests).
 //!
 //! Run `globus-replica help` for flags.
 
 use std::sync::{Arc, Mutex, RwLock};
 
-use globus_replica::broker::{parse_request_ad, Broker, LocalInfoService, RankPolicy};
+use globus_replica::broker::{
+    parse_request_ad, Broker, LocalInfoService, RankPolicy, SelectorKind,
+};
 use globus_replica::catalog::{PhysicalLocation, ReplicaCatalog};
 use globus_replica::config::GridConfig;
 use globus_replica::directory::schema;
 use globus_replica::directory::server::DirectoryServer;
 use globus_replica::directory::{Entry, Giis, Gris};
+use globus_replica::experiment::{run_quality_open, OpenLoopOptions};
+use globus_replica::metrics::Metrics;
+use globus_replica::simnet::{Workload, WorkloadSpec};
+use globus_replica::trace::{load_trace, summarize, TraceHandle, TraceSummary};
 use globus_replica::util::cli::Args;
 use globus_replica::util::units::Bytes;
 
@@ -34,7 +43,13 @@ commands:
   select [--sites N] [--seed K] [--policy classad|forecast]
                                  one brokered selection w/ phase trace
   simulate [--sites N] [--requests R] [--seed K]
-                                 workload simulation (quality metrics)
+           [--trace [--sample-period S] [--trace-name NAME]]
+                                 workload simulation; --trace runs a
+                                 flight-recorded open-loop and writes
+                                 TRACE_NAME.json + TRACE_NAME.jsonl
+  trace-summary <file> [--top N] [--metrics] [--json]
+                                 critical-path breakdown of a
+                                 TRACE_*.json / .jsonl artifact
   help                           this text
 ";
 
@@ -47,6 +62,7 @@ fn main() {
         "giis" => cmd_giis(&args),
         "select" => cmd_select(&args),
         "simulate" => cmd_simulate(&args),
+        "trace-summary" => cmd_trace_summary(&args),
         _ => print!("{USAGE}"),
     }
 }
@@ -198,11 +214,152 @@ fn cmd_select(args: &Args) {
 }
 
 fn cmd_simulate(args: &Args) {
-    // Thin pointer; the example hosts the full simulation driver.
     let n = args.usize_or("sites", 8);
     let requests = args.usize_or("requests", 200);
     let seed = args.u64_or("seed", 42);
-    println!(
-        "run `cargo run --release --example datagrid_sim -- --sites {n} --requests {requests} --seed {seed}`"
+    if !args.has("trace") {
+        // Thin pointer; the example hosts the full simulation driver.
+        println!(
+            "run `cargo run --release --example datagrid_sim -- --sites {n} --requests {requests} --seed {seed}`"
+        );
+        println!("(or add --trace to run a flight-recorded open-loop scenario here)");
+        return;
+    }
+
+    // Flight-recorded open-loop run: the same kernel the contention
+    // bench drives, with the recorder and the time-series sampler on.
+    let cfg = GridConfig::generate(n, seed);
+    let spec = WorkloadSpec {
+        files: n.max(4),
+        mean_interarrival: args.f64_or("interarrival", 60.0),
+        ..Default::default()
+    };
+    let mut workload = Workload::new(spec.clone(), seed);
+    let reqs = workload.take(requests);
+    let trace = TraceHandle::new(args.usize_or("trace-capacity", 1 << 18));
+    let opts = OpenLoopOptions {
+        trace: trace.clone(),
+        sample_period: args.f64_or("sample-period", 30.0),
+        ..OpenLoopOptions::open()
+    };
+    let report = run_quality_open(
+        &cfg,
+        &spec,
+        &reqs,
+        args.usize_or("replicas", 4),
+        args.usize_or("warm", 6),
+        SelectorKind::Forecast,
+        &opts,
+        None,
     );
+    println!(
+        "open-loop: {} requests ({} skipped), mean {:.1}s p95 {:.1}s, makespan {:.1}s, peak in flight {}",
+        report.quality.requests,
+        report.skipped,
+        report.quality.mean_time,
+        report.quality.p95_time,
+        report.makespan,
+        report.peak_in_flight,
+    );
+    let name = args.str_or("trace-name", "open_loop");
+    match trace.write_artifacts(&name) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {p}");
+            }
+            println!("inspect with `globus-replica trace-summary TRACE_{name}.json`");
+        }
+        Err(e) => eprintln!("could not write trace artifacts: {e:#}"),
+    }
+}
+
+fn cmd_trace_summary(args: &Args) {
+    let path = match args.positional().get(1) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("usage: globus-replica trace-summary <TRACE_file.json|.jsonl> [--top N]");
+            std::process::exit(2);
+        }
+    };
+    let src = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let rec = match load_trace(&src) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{path}: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let spans = rec.spans();
+    let summary = summarize(&spans, rec.dropped(), args.usize_or("top", 5));
+
+    // All aggregates flow through one Metrics registry so the JSON
+    // dump is the registry's stable-ordered `snapshot()`, not a
+    // hand-rolled serializer.
+    let m = Metrics::new();
+    m.counter("trace.requests").add(summary.requests as u64);
+    m.counter("trace.skipped").add(summary.skipped as u64);
+    m.counter("trace.dropped_events").add(summary.dropped);
+    for s in spans.iter().filter(|s| !s.skipped) {
+        m.histogram("trace.queue_ns").observe_ns((s.queue_s * 1e9) as u64);
+        m.histogram("trace.discovery_ns").observe_ns((s.discovery_s * 1e9) as u64);
+        m.histogram("trace.transfer_ns").observe_ns((s.transfer_s * 1e9) as u64);
+        m.histogram("trace.total_ns").observe_ns((s.total_s() * 1e9) as u64);
+    }
+    if args.has("json") {
+        println!("{}", m.to_json());
+        return;
+    }
+    print_trace_summary(&summary);
+    if args.has("metrics") {
+        println!("\n{}", m.render());
+    }
+}
+
+fn print_trace_summary(s: &TraceSummary) {
+    println!(
+        "requests {} (skipped {}), dropped {}, min span coverage {:.1}%",
+        s.requests,
+        s.skipped,
+        s.dropped,
+        s.min_coverage * 100.0
+    );
+    println!(
+        "{:<11} {:>10} {:>10} {:>10} {:>10}",
+        "phase", "p50", "p95", "mean", "max"
+    );
+    for (name, p) in [
+        ("queue", &s.queue),
+        ("discovery", &s.discovery),
+        ("transfer", &s.transfer),
+        ("total", &s.total),
+    ] {
+        println!(
+            "{:<11} {:>9.3}s {:>9.3}s {:>9.3}s {:>9.3}s",
+            name, p.p50_s, p.p95_s, p.mean_s, p.max_s
+        );
+    }
+    println!(
+        "report parity: mean_time {:.3}s  p95_time {:.3}s (finish_report arithmetic)",
+        s.mean_time, s.p95_time
+    );
+    for (k, r) in s.slowest.iter().enumerate() {
+        println!(
+            "#{} slowest: req {}  total {:.1}s = queue {:.1} + disc {:.1} + xfer {:.1}",
+            k + 1,
+            r.req,
+            r.total_s(),
+            r.queue_s,
+            r.discovery_s,
+            r.transfer_s
+        );
+        for e in &r.events {
+            println!("    {:>10.3}s  {}", e.at - r.arrival, e.ev.name());
+        }
+    }
 }

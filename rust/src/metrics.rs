@@ -23,12 +23,15 @@ impl Counter {
     }
 }
 
-/// A fixed-bucket log2 latency histogram (nanoseconds).
+/// A fixed-bucket log2 latency histogram (nanoseconds), plus exact
+/// min/max so quantile estimates can be clamped to observed reality.
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>, // bucket i: [2^i, 2^(i+1)) ns
     sum_ns: AtomicU64,
     count: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -37,6 +40,8 @@ impl Default for Histogram {
             buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
             sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
         }
     }
 }
@@ -47,6 +52,8 @@ impl Histogram {
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
     pub fn observe(&self, d: std::time::Duration) {
@@ -55,6 +62,20 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact smallest observation (0 before any observation).
+    pub fn min_ns(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min_ns.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Exact largest observation (0 before any observation).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -66,8 +87,39 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Quantile estimate: linear interpolation of the target rank
+    /// within its log2 bucket, clamped to the exact observed
+    /// `[min_ns, max_ns]` range. The clamp matters at the tail — a
+    /// lone p99 sample no longer reads as its bucket's upper bound
+    /// (up to 2× the real value) but as the exact maximum.
     pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= target {
+                let lo = 1u64 << i;
+                let hi = 1u64 << (i + 1);
+                let frac = (target - seen) as f64 / n as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).clamp(self.min_ns(), self.max_ns());
+            }
+            seen += n;
+        }
+        self.max_ns()
+    }
+
+    /// The pre-P8 estimate: the matching bucket's upper bound, which
+    /// overstates tail quantiles by up to 2×. Kept verbatim for parity
+    /// checks against historical dumps.
+    pub fn quantile_ns_upper_bound(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
@@ -122,13 +174,109 @@ impl Metrics {
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
-                "hist    {name:<40} n={} mean={:.1}µs p99≤{:.1}µs\n",
+                "hist    {name:<40} n={} mean={:.1}µs p99≈{:.1}µs max={:.1}µs\n",
                 h.count(),
                 h.mean_ns() / 1e3,
                 h.quantile_ns(0.99) as f64 / 1e3,
+                h.max_ns() as f64 / 1e3,
             ));
         }
         out
+    }
+
+    /// One stable-ordered pass over every counter and histogram
+    /// (BTreeMap iteration = alphabetical), capturing values at a
+    /// single instant. Benches and `trace-summary` serialize this
+    /// instead of ad-hoc printing.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| HistogramSummary {
+                name: name.clone(),
+                count: h.count(),
+                mean_ns: h.mean_ns(),
+                min_ns: h.min_ns(),
+                max_ns: h.max_ns(),
+                p50_ns: h.quantile_ns(0.50),
+                p95_ns: h.quantile_ns(0.95),
+                p99_ns: h.quantile_ns(0.99),
+            })
+            .collect();
+        MetricsSnapshot { counters, histograms }
+    }
+
+    /// [`Self::snapshot`] serialized as one stable-keyed JSON object.
+    pub fn to_json(&self) -> String {
+        self.snapshot().to_json()
+    }
+}
+
+/// Point-in-time summary of one histogram (exact min/max, interpolated
+/// quantiles).
+#[derive(Debug, Clone)]
+pub struct HistogramSummary {
+    pub name: String,
+    pub count: u64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// Stable-ordered capture of a whole [`Metrics`] registry.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// `(name, value)`, alphabetical by name.
+    pub counters: Vec<(String, u64)>,
+    /// Histogram summaries, alphabetical by name.
+    pub histograms: Vec<HistogramSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Serialize as `{"counters": {...}, "histograms": {name: {...}}}`
+    /// — key order is alphabetical at every level (BTreeMap-backed
+    /// [`Json`] objects), so identical registries produce identical
+    /// bytes.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(name, v)| (name.clone(), Json::Num(*v as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .iter()
+            .map(|h| {
+                let mut o = BTreeMap::new();
+                o.insert("count".to_string(), Json::Num(h.count as f64));
+                o.insert("mean_ns".to_string(), Json::Num(h.mean_ns));
+                o.insert("min_ns".to_string(), Json::Num(h.min_ns as f64));
+                o.insert("max_ns".to_string(), Json::Num(h.max_ns as f64));
+                o.insert("p50_ns".to_string(), Json::Num(h.p50_ns as f64));
+                o.insert("p95_ns".to_string(), Json::Num(h.p95_ns as f64));
+                o.insert("p99_ns".to_string(), Json::Num(h.p99_ns as f64));
+                (h.name.clone(), Json::Obj(o))
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(root).to_string()
     }
 }
 
@@ -155,6 +303,54 @@ mod tests {
         assert!(h.mean_ns() > 0.0);
         assert!(h.quantile_ns(0.5) >= 128);
         assert!(h.quantile_ns(0.99) >= 65_536);
+    }
+
+    #[test]
+    fn exact_extremes_and_interpolated_quantiles() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.observe_ns(ns);
+        }
+        assert_eq!(h.min_ns(), 100);
+        assert_eq!(h.max_ns(), 100_000);
+        // The old estimate returns the bucket upper bound (131072 for
+        // a 100000 ns sample — a 1.31× overstatement); the new one is
+        // clamped to the exact maximum.
+        assert_eq!(h.quantile_ns_upper_bound(0.99), 131_072);
+        assert_eq!(h.quantile_ns(0.99), 100_000);
+        // Interpolation stays within the observed range everywhere.
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile_ns(q);
+            assert!((100..=100_000).contains(&v), "q{q}: {v}");
+        }
+        // Empty histogram degrades to zeros.
+        let empty = Histogram::default();
+        assert_eq!(empty.min_ns(), 0);
+        assert_eq!(empty.max_ns(), 0);
+        assert_eq!(empty.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_is_stable_ordered_and_round_trips_as_json() {
+        let m = Metrics::new();
+        m.counter("z.last").add(3);
+        m.counter("a.first").inc();
+        m.histogram("broker.match_ns").observe_ns(1234);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a.first", "z.last"]);
+        let text = m.to_json();
+        assert_eq!(text, m.to_json(), "serialization must be deterministic");
+        // Metric names contain dots, so walk the objects directly
+        // (Json::get's path syntax would split them).
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        let counters = v.get("counters").unwrap().as_obj().unwrap();
+        assert_eq!(counters.get("a.first").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(counters.get("z.last").and_then(|j| j.as_f64()), Some(3.0));
+        let hists = v.get("histograms").unwrap().as_obj().unwrap();
+        let h = hists.get("broker.match_ns").unwrap().as_obj().unwrap();
+        assert_eq!(h.get("count").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(h.get("max_ns").and_then(|j| j.as_f64()), Some(1234.0));
     }
 
     #[test]

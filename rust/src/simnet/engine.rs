@@ -34,6 +34,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::simnet::{Completion, FlowSet, Topology};
+use crate::trace::{Ev, TraceHandle, KERNEL_REQ};
 
 /// How far the kernel integrates live flows past the last scheduled
 /// event, per chunk, before checking for progress. A chunk that moves
@@ -104,6 +105,9 @@ pub struct Engine {
     /// and sessions register flows directly (`flows.add_in`) and get
     /// their completions back as [`Signal::FlowDone`].
     pub flows: FlowSet,
+    /// Flight-recorder handle; disabled by default, in which case
+    /// dispatch accounting costs one branch per delivered signal.
+    pub trace: TraceHandle,
     queue: BinaryHeap<std::cmp::Reverse<Sched>>,
     pending: VecDeque<Completion>,
     seq: u64,
@@ -113,10 +117,25 @@ impl Engine {
     pub fn new(flows: FlowSet) -> Engine {
         Engine {
             flows,
+            trace: TraceHandle::disabled(),
             queue: BinaryHeap::new(),
             pending: VecDeque::new(),
             seq: 0,
         }
+    }
+
+    /// Record the dispatch of `sig` (when tracing) and hand it out.
+    fn deliver(&self, sig: Signal) -> Option<Signal> {
+        if self.trace.on() {
+            let (kind, at) = match &sig {
+                Signal::Arrival { at, .. } => ("arrival", *at),
+                Signal::Tick { at, .. } => ("tick", *at),
+                Signal::Query { at, .. } => ("query", *at),
+                Signal::FlowDone(c) => ("flow_done", c.at),
+            };
+            self.trace.rec(at, KERNEL_REQ, Ev::Dispatch { kind });
+        }
+        Some(sig)
     }
 
     fn push(&mut self, at: f64, kind: SchedKind) {
@@ -165,7 +184,7 @@ impl Engine {
     /// dead sources).
     pub fn next(&mut self, topo: &mut Topology) -> Option<Signal> {
         if let Some(c) = self.pending.pop_front() {
-            return Some(Signal::FlowDone(c));
+            return self.deliver(Signal::FlowDone(c));
         }
         loop {
             let next_at = self.queue.peek().map(|r| r.0.at);
@@ -173,7 +192,7 @@ impl Engine {
                 // Pure scheduling: jump the clock to the next entry.
                 let s = self.queue.pop()?.0;
                 topo.advance_to(s.at);
-                return Some(match s.kind {
+                return self.deliver(match s.kind {
                     SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
                     SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
                     SchedKind::Query(id) => Signal::Query { id, at: s.at },
@@ -185,7 +204,7 @@ impl Engine {
                     // instant were delivered on the way here.
                     let s = self.queue.pop().expect("peeked entry").0;
                     topo.advance_to(s.at);
-                    return Some(match s.kind {
+                    return self.deliver(match s.kind {
                         SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
                         SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
                         SchedKind::Query(id) => Signal::Query { id, at: s.at },
@@ -197,7 +216,7 @@ impl Engine {
                     let (_, mut done) = self.flows.advance_some(topo, at - topo.now);
                     if let Some(first) = done.first().cloned() {
                         self.pending.extend(done.drain(1..));
-                        return Some(Signal::FlowDone(first));
+                        return self.deliver(Signal::FlowDone(first));
                     }
                     // Reached the instant (advance_some consumed the
                     // whole budget): snap exactly, loop pops it.
@@ -212,7 +231,7 @@ impl Engine {
                         let (_, mut done) = self.flows.advance_some(topo, STALL_CHUNK_S);
                         if let Some(first) = done.first().cloned() {
                             self.pending.extend(done.drain(1..));
-                            return Some(Signal::FlowDone(first));
+                            return self.deliver(Signal::FlowDone(first));
                         }
                         chunks += 1;
                         if self.progress() <= before + 1e-9 || chunks >= STALL_CHUNKS_MAX {
@@ -322,6 +341,29 @@ mod tests {
         eng.flows.add(&topo, 0, 1e6, 0.0); // will never move a byte
         assert!(eng.next(&mut topo).is_none());
         assert!(topo.now.is_finite());
+    }
+
+    #[test]
+    fn dispatch_events_are_recorded_when_traced() {
+        let mut topo = flat_topo(2);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        eng.trace = TraceHandle::new(16);
+        eng.schedule_tick(1.0, 1);
+        eng.schedule_arrival(2.0, 2);
+        while eng.next(&mut topo).is_some() {}
+        let kinds: Vec<&'static str> = eng
+            .trace
+            .read(|r| {
+                r.events()
+                    .iter()
+                    .map(|e| match e.ev {
+                        Ev::Dispatch { kind } => kind,
+                        _ => "?",
+                    })
+                    .collect()
+            })
+            .unwrap();
+        assert_eq!(kinds, vec!["tick", "arrival"]);
     }
 
     #[test]

@@ -1,0 +1,1175 @@
+//! Flight recorder: causal per-request tracing and grid time-series
+//! sampling on the *simulated* clock.
+//!
+//! End-of-run aggregates (`OpenReport`, `CoallocOutcome`, the `metrics`
+//! histograms) say *how slow* the grid was; they cannot say *why request
+//! 4711 was slow* or *what link utilization looked like at t=300s*. This
+//! module adds the missing layer: a bounded ring-buffer [`Recorder`] of
+//! structured [`TraceEvent`]s, each stamped with the simulated clock
+//! ([`SimInstant`]) and keyed by request id, with enough causal structure
+//! (arrival → gate park/unpark → discovery → selection → transfer →
+//! done) that each request's **critical path** can be reconstructed from
+//! the trace alone.
+//!
+//! # Design contract: zero cost when disabled
+//!
+//! Every instrumented layer holds a [`TraceHandle`] — a
+//! `Option<Arc<Mutex<Recorder>>>` newtype. The default handle is
+//! *disabled* (`None`): recording an event is then a single branch, no
+//! allocation, no lock, no formatting. Event payloads ([`Ev`]) are
+//! `Copy` and hold only numbers and `&'static str`s; site names are
+//! interned into the recorder's name table ([`Recorder::intern`]) so the
+//! hot path never clones a `String`. This is what keeps
+//! `OpenLoopOptions::serial()` bit-for-bit equal to the serial driver
+//! and keeps `bench_contention` allocation-free per event when tracing
+//! is off.
+//!
+//! # Event model
+//!
+//! Events are flat, not nested: span structure is *reconstructed* from
+//! the per-request event sequence by [`spans`]. For an open-loop request
+//! the canonical chain is
+//!
+//! ```text
+//! arrival ──(queue)── admit ──(discovery)── selection ──(transfer)── done
+//! ```
+//!
+//! where `admit` is the gate-unpark instant (or the discovery-start
+//! instant when the gate had a free slot) and `selection` is the instant
+//! the broker ranked the candidates. The three phase durations partition
+//! `[arrival, done]` exactly, so the span tree accounts for 100% of each
+//! request's simulated time by construction. Rows with the
+//! pseudo-request ids [`SAMPLE_REQ`] (time-series sampler) and
+//! [`KERNEL_REQ`] (kernel dispatch) ride in the same buffer but are
+//! excluded from request reconstruction.
+//!
+//! # Exporters
+//!
+//! * [`Recorder::jsonl`] — one JSON object per line, stable key order,
+//!   byte-deterministic for identically seeded runs (pinned by a
+//!   property test).
+//! * [`Recorder::chrome_json`] — Chrome trace-event JSON loadable in
+//!   Perfetto (`chrome://tracing`): one track per request under the
+//!   "requests" process, one track per site under the "sites" process,
+//!   counter tracks for the sampler series. The raw events are embedded
+//!   under the `"rawEvents"` key so a `TRACE_*.json` artifact is
+//!   self-contained: `trace-summary` (see `main.rs`) re-analyzes it
+//!   without the JSONL sibling.
+//!
+//! [`load_trace`] accepts either format back.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::anyhow;
+
+use crate::util::json::Json;
+
+/// Simulated-clock instant in seconds (same convention as
+/// `directory::giis::SimInstant`).
+pub type SimInstant = f64;
+
+/// Request identifier: the workload index for experiment drivers.
+pub type ReqId = u64;
+
+/// Interned site-name id (index into the recorder's name table).
+pub type SiteId = u32;
+
+/// Pseudo-request id carried by time-series sampler rows.
+pub const SAMPLE_REQ: ReqId = u64::MAX;
+
+/// Pseudo-request id carried by kernel dispatch rows.
+pub const KERNEL_REQ: ReqId = u64::MAX - 1;
+
+/// Default ring capacity used by experiment runners (events, not bytes).
+pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+/// Structured trace event payload. `Copy` on purpose: recording must
+/// never allocate, so payloads carry only numbers, interned [`SiteId`]s
+/// and `&'static str` tags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Ev {
+    /// Request entered the system (root of its span tree).
+    Arrival,
+    /// Admission gate full; request parked behind `occupancy` in-flight.
+    GatePark { occupancy: u32 },
+    /// Parked request got a slot after `waited_s` seconds in the gate.
+    GateUnpark { waited_s: f64 },
+    /// Broad GIIS lookup answered from registration snapshots;
+    /// `drills` of the `placements` candidate sites get a fresh query.
+    DiscoveryStart { placements: u32, drills: u32 },
+    /// Directory fan-out put a per-site query on the wire.
+    QueryIssue { site: SiteId },
+    /// Per-site query answered.
+    QueryLand { site: SiteId },
+    /// Per-site query exceeded its deadline.
+    QueryTimeout { site: SiteId },
+    /// Fan-out straggler cutoff fired with `unresolved` queries open.
+    QueryCutoff { unresolved: u32 },
+    /// Synchronous fresh GRIS drill-down (serial discovery path).
+    DrillDown { site: SiteId },
+    /// Discovery resolved with `responses` usable site answers.
+    DiscoveryEnd { responses: u32 },
+    /// Broker phase wall-clock cost (µs, host clock — diagnostic only).
+    BrokerPhase { phase: &'static str, wall_us: u64 },
+    /// Replica chosen among `candidates` ranked matches.
+    Selection { site: SiteId, candidates: u32 },
+    /// Kernel flow started against `site`.
+    FlowStart { site: SiteId, flow: u64, bytes: u64 },
+    /// Kernel flow delivered its last byte.
+    FlowFinish { site: SiteId, flow: u64, transfer_s: f64 },
+    /// Closed-form (analytic) access: transfer modeled without a flow.
+    AnalyticAccess { site: SiteId, transfer_s: f64 },
+    /// Request finished; `transfer_s` is the service duration the
+    /// report aggregates (`QualityReport::mean_time` parity anchor).
+    RequestDone { transfer_s: f64 },
+    /// Request abandoned (undiscoverable, wind-down, no replica).
+    RequestSkipped { reason: &'static str },
+    /// Co-allocation: block dispatched to a stripe source.
+    BlockStart { site: SiteId, block: u64, bytes: u64 },
+    /// Co-allocation: `blocks` blocks stolen from `from`'s backlog.
+    BlockSteal { from: SiteId, to: SiteId, blocks: u32 },
+    /// Co-allocation: source declared failed, `orphaned` blocks requeued.
+    BlockFailover { site: SiteId, orphaned: u32 },
+    /// Co-allocation: block re-dispatched after a failure.
+    BlockRetry { site: SiteId, block: u64 },
+    /// Co-allocation: block delivered and ledgered exactly-once.
+    BlockFinish { site: SiteId, block: u64, bytes: u64 },
+    /// Kernel dispatched a signal (`arrival`/`tick`/`query`/`flow_done`).
+    Dispatch { kind: &'static str },
+    /// Sampler row: global gauges at the sample instant.
+    Sample { in_flight: u32, gate_depth: u32, giis_live: u32 },
+    /// Sampler row: one site link (`utilization` = rate / capacity).
+    LinkSample { site: SiteId, flows: u32, utilization: f64 },
+}
+
+impl Ev {
+    /// Stable export name (snake_case, used by both exporters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ev::Arrival => "arrival",
+            Ev::GatePark { .. } => "gate_park",
+            Ev::GateUnpark { .. } => "gate_unpark",
+            Ev::DiscoveryStart { .. } => "discovery_start",
+            Ev::QueryIssue { .. } => "query_issue",
+            Ev::QueryLand { .. } => "query_land",
+            Ev::QueryTimeout { .. } => "query_timeout",
+            Ev::QueryCutoff { .. } => "query_cutoff",
+            Ev::DrillDown { .. } => "drill_down",
+            Ev::DiscoveryEnd { .. } => "discovery_end",
+            Ev::BrokerPhase { .. } => "broker_phase",
+            Ev::Selection { .. } => "selection",
+            Ev::FlowStart { .. } => "flow_start",
+            Ev::FlowFinish { .. } => "flow_finish",
+            Ev::AnalyticAccess { .. } => "analytic_access",
+            Ev::RequestDone { .. } => "request_done",
+            Ev::RequestSkipped { .. } => "request_skipped",
+            Ev::BlockStart { .. } => "block_start",
+            Ev::BlockSteal { .. } => "block_steal",
+            Ev::BlockFailover { .. } => "block_failover",
+            Ev::BlockRetry { .. } => "block_retry",
+            Ev::BlockFinish { .. } => "block_finish",
+            Ev::Dispatch { .. } => "dispatch",
+            Ev::Sample { .. } => "sample",
+            Ev::LinkSample { .. } => "link_sample",
+        }
+    }
+}
+
+/// Map a parsed tag back to the closed set of `&'static str` values the
+/// instrumentation emits (payloads must stay `Copy`, so arbitrary
+/// strings cannot round-trip; unknown tags collapse to `"other"`).
+fn static_tag(s: &str) -> &'static str {
+    match s {
+        "arrival" => "arrival",
+        "tick" => "tick",
+        "query" => "query",
+        "flow_done" => "flow_done",
+        "search" => "search",
+        "convert" => "convert",
+        "match" => "match",
+        "undiscoverable" => "undiscoverable",
+        "wind_down" => "wind_down",
+        "no_replica" => "no_replica",
+        "dead_source" => "dead_source",
+        _ => "other",
+    }
+}
+
+/// One recorded event: simulated timestamp, owning request, payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub at: SimInstant,
+    pub req: ReqId,
+    pub ev: Ev,
+}
+
+fn site_json(names: &[String], id: SiteId) -> Json {
+    match names.get(id as usize) {
+        Some(n) => Json::Str(n.clone()),
+        None => Json::Str(format!("site#{id}")),
+    }
+}
+
+impl TraceEvent {
+    /// Export as a flat JSON object (site ids resolved to names).
+    pub fn to_json(&self, names: &[String]) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("at".to_string(), Json::Num(self.at));
+        let req = match self.req {
+            SAMPLE_REQ => Json::Str("sample".to_string()),
+            KERNEL_REQ => Json::Str("kernel".to_string()),
+            r => Json::Num(r as f64),
+        };
+        o.insert("req".to_string(), req);
+        o.insert("ev".to_string(), Json::Str(self.ev.name().to_string()));
+        fn num(o: &mut BTreeMap<String, Json>, k: &str, v: f64) {
+            o.insert(k.to_string(), Json::Num(v));
+        }
+        match self.ev {
+            Ev::Arrival => {}
+            Ev::GatePark { occupancy } => num(&mut o, "occupancy", occupancy as f64),
+            Ev::GateUnpark { waited_s } => num(&mut o, "waited_s", waited_s),
+            Ev::DiscoveryStart { placements, drills } => {
+                num(&mut o, "placements", placements as f64);
+                num(&mut o, "drills", drills as f64);
+            }
+            Ev::QueryCutoff { unresolved } => num(&mut o, "unresolved", unresolved as f64),
+            Ev::DiscoveryEnd { responses } => num(&mut o, "responses", responses as f64),
+            Ev::BrokerPhase { phase, wall_us } => {
+                o.insert("phase".to_string(), Json::Str(phase.to_string()));
+                o.insert("wall_us".to_string(), Json::Num(wall_us as f64));
+            }
+            Ev::RequestDone { transfer_s } => num(&mut o, "transfer_s", transfer_s),
+            Ev::RequestSkipped { reason } => {
+                o.insert("reason".to_string(), Json::Str(reason.to_string()));
+            }
+            Ev::Dispatch { kind } => {
+                o.insert("kind".to_string(), Json::Str(kind.to_string()));
+            }
+            Ev::Sample { in_flight, gate_depth, giis_live } => {
+                num(&mut o, "in_flight", in_flight as f64);
+                num(&mut o, "gate_depth", gate_depth as f64);
+                num(&mut o, "giis_live", giis_live as f64);
+            }
+            Ev::QueryIssue { site }
+            | Ev::QueryLand { site }
+            | Ev::QueryTimeout { site }
+            | Ev::DrillDown { site } => {
+                o.insert("site".to_string(), site_json(names, site));
+            }
+            Ev::Selection { site, candidates } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "candidates", candidates as f64);
+            }
+            Ev::FlowStart { site, flow, bytes } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "flow", flow as f64);
+                num(&mut o, "bytes", bytes as f64);
+            }
+            Ev::FlowFinish { site, flow, transfer_s } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "flow", flow as f64);
+                num(&mut o, "transfer_s", transfer_s);
+            }
+            Ev::AnalyticAccess { site, transfer_s } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "transfer_s", transfer_s);
+            }
+            Ev::BlockStart { site, block, bytes } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "block", block as f64);
+                num(&mut o, "bytes", bytes as f64);
+            }
+            Ev::BlockSteal { from, to, blocks } => {
+                o.insert("from".to_string(), site_json(names, from));
+                o.insert("to".to_string(), site_json(names, to));
+                num(&mut o, "blocks", blocks as f64);
+            }
+            Ev::BlockFailover { site, orphaned } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "orphaned", orphaned as f64);
+            }
+            Ev::BlockRetry { site, block } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "block", block as f64);
+            }
+            Ev::BlockFinish { site, block, bytes } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "block", block as f64);
+                num(&mut o, "bytes", bytes as f64);
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Parse one exported object back; `intern` resolves site names to
+    /// ids in the receiving recorder.
+    pub fn from_json(
+        v: &Json,
+        intern: &mut dyn FnMut(&str) -> SiteId,
+    ) -> Option<TraceEvent> {
+        let o = v.as_obj()?;
+        let at = o.get("at")?.as_f64()?;
+        let req = match o.get("req")? {
+            Json::Str(s) if s == "sample" => SAMPLE_REQ,
+            Json::Str(s) if s == "kernel" => KERNEL_REQ,
+            Json::Num(n) => *n as u64,
+            _ => return None,
+        };
+        let f = |k: &str| o.get(k).and_then(Json::as_f64);
+        let u = |k: &str| o.get(k).and_then(Json::as_f64).map(|n| n as u64);
+        let mut site = |k: &str| -> Option<SiteId> {
+            o.get(k).and_then(Json::as_str).map(|s| intern(s))
+        };
+        let ev = match o.get("ev")?.as_str()? {
+            "arrival" => Ev::Arrival,
+            "gate_park" => Ev::GatePark { occupancy: u("occupancy")? as u32 },
+            "gate_unpark" => Ev::GateUnpark { waited_s: f("waited_s")? },
+            "discovery_start" => Ev::DiscoveryStart {
+                placements: u("placements")? as u32,
+                drills: u("drills")? as u32,
+            },
+            "query_issue" => Ev::QueryIssue { site: site("site")? },
+            "query_land" => Ev::QueryLand { site: site("site")? },
+            "query_timeout" => Ev::QueryTimeout { site: site("site")? },
+            "query_cutoff" => Ev::QueryCutoff { unresolved: u("unresolved")? as u32 },
+            "drill_down" => Ev::DrillDown { site: site("site")? },
+            "discovery_end" => Ev::DiscoveryEnd { responses: u("responses")? as u32 },
+            "broker_phase" => Ev::BrokerPhase {
+                phase: static_tag(o.get("phase")?.as_str()?),
+                wall_us: u("wall_us")?,
+            },
+            "selection" => Ev::Selection {
+                site: site("site")?,
+                candidates: u("candidates")? as u32,
+            },
+            "flow_start" => Ev::FlowStart {
+                site: site("site")?,
+                flow: u("flow")?,
+                bytes: u("bytes")?,
+            },
+            "flow_finish" => Ev::FlowFinish {
+                site: site("site")?,
+                flow: u("flow")?,
+                transfer_s: f("transfer_s")?,
+            },
+            "analytic_access" => Ev::AnalyticAccess {
+                site: site("site")?,
+                transfer_s: f("transfer_s")?,
+            },
+            "request_done" => Ev::RequestDone { transfer_s: f("transfer_s")? },
+            "request_skipped" => Ev::RequestSkipped {
+                reason: static_tag(o.get("reason")?.as_str()?),
+            },
+            "block_start" => Ev::BlockStart {
+                site: site("site")?,
+                block: u("block")?,
+                bytes: u("bytes")?,
+            },
+            "block_steal" => Ev::BlockSteal {
+                from: site("from")?,
+                to: site("to")?,
+                blocks: u("blocks")? as u32,
+            },
+            "block_failover" => Ev::BlockFailover {
+                site: site("site")?,
+                orphaned: u("orphaned")? as u32,
+            },
+            "block_retry" => Ev::BlockRetry { site: site("site")?, block: u("block")? },
+            "block_finish" => Ev::BlockFinish {
+                site: site("site")?,
+                block: u("block")?,
+                bytes: u("bytes")?,
+            },
+            "dispatch" => Ev::Dispatch { kind: static_tag(o.get("kind")?.as_str()?) },
+            "sample" => Ev::Sample {
+                in_flight: u("in_flight")? as u32,
+                gate_depth: u("gate_depth")? as u32,
+                giis_live: u("giis_live")? as u32,
+            },
+            "link_sample" => Ev::LinkSample {
+                site: site("site")?,
+                flows: u("flows")? as u32,
+                utilization: f("utilization")?,
+            },
+            _ => return None,
+        };
+        Some(TraceEvent { at, req, ev })
+    }
+}
+
+/// Bounded ring buffer of trace events plus the site-name intern table.
+///
+/// When full, the oldest event is overwritten and `dropped` counts the
+/// loss — tracing must never grow without bound under million-request
+/// runs. Chronological order is preserved across the wrap.
+#[derive(Debug)]
+pub struct Recorder {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Next overwrite position once the buffer has wrapped.
+    head: usize,
+    dropped: u64,
+    names: Vec<String>,
+    by_name: BTreeMap<String, SiteId>,
+}
+
+impl Recorder {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Recorder {
+            cap,
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            names: Vec::new(),
+            by_name: BTreeMap::new(),
+        }
+    }
+
+    /// Intern a site (or client) name, returning its stable id.
+    pub fn intern(&mut self, name: &str) -> SiteId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len() as SiteId;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Name for an interned id (for rendering / exporters).
+    pub fn site_name(&self, id: SiteId) -> &str {
+        self.names.get(id as usize).map(String::as_str).unwrap_or("?")
+    }
+
+    /// The intern table, id-ordered.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Append one event, overwriting the oldest when at capacity.
+    pub fn push(&mut self, at: SimInstant, req: ReqId, ev: Ev) {
+        let e = TraceEvent { at, req, ev };
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Chronological copy of the retained events (unwraps the ring).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// JSONL export: one stable-key-order object per line. Identically
+    /// seeded runs produce byte-identical output (property-tested).
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&e.to_json(&self.names).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Per-request span reconstruction (sampler/kernel rows excluded).
+    pub fn spans(&self) -> Vec<RequestSpans> {
+        spans(&self.events())
+    }
+
+    /// Chrome trace-event JSON (Perfetto-loadable). Tracks: one per
+    /// request under pid 1 ("requests"), one per site under pid 2
+    /// ("sites"), counter series from the sampler. Raw events are
+    /// embedded under `"rawEvents"` so the artifact is self-contained.
+    pub fn chrome_json(&self) -> String {
+        let evs = self.events();
+        let request_spans = spans(&evs);
+        let mut tev: Vec<Json> = Vec::new();
+
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(
+                pairs
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect::<BTreeMap<_, _>>(),
+            )
+        };
+        let meta = |pid: f64, tid: f64, what: &str, name: String| {
+            obj(vec![
+                ("ph", Json::Str("M".to_string())),
+                ("name", Json::Str(what.to_string())),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+                ("args", obj(vec![("name", Json::Str(name))])),
+            ])
+        };
+        let complete = |pid: f64, tid: f64, name: String, at: f64, dur: f64| {
+            obj(vec![
+                ("ph", Json::Str("X".to_string())),
+                ("name", Json::Str(name)),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+                ("ts", Json::Num(at * 1e6)),
+                ("dur", Json::Num(dur.max(0.0) * 1e6)),
+            ])
+        };
+        let instant = |pid: f64, tid: f64, name: String, at: f64| {
+            obj(vec![
+                ("ph", Json::Str("i".to_string())),
+                ("s", Json::Str("t".to_string())),
+                ("name", Json::Str(name)),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+                ("ts", Json::Num(at * 1e6)),
+            ])
+        };
+        let counter = |name: String, at: f64, value: f64| {
+            obj(vec![
+                ("ph", Json::Str("C".to_string())),
+                ("name", Json::Str(name)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(at * 1e6)),
+                ("args", obj(vec![("value", Json::Num(value))])),
+            ])
+        };
+
+        tev.push(meta(1.0, 0.0, "process_name", "requests".to_string()));
+        tev.push(meta(2.0, 0.0, "process_name", "sites".to_string()));
+        for (i, n) in self.names.iter().enumerate() {
+            tev.push(meta(2.0, i as f64, "thread_name", format!("site {n}")));
+        }
+        for sp in &request_spans {
+            let tid = sp.req as f64;
+            tev.push(meta(1.0, tid, "thread_name", format!("req {}", sp.req)));
+            if sp.skipped {
+                tev.push(instant(1.0, tid, "skipped".to_string(), sp.arrival));
+                continue;
+            }
+            tev.push(complete(1.0, tid, "queue".to_string(), sp.arrival, sp.queue_s));
+            tev.push(complete(1.0, tid, "discovery".to_string(), sp.admit, sp.discovery_s));
+            tev.push(complete(1.0, tid, "transfer".to_string(), sp.select, sp.transfer_s));
+        }
+
+        // Site tracks: kernel flows, analytic accesses, coalloc markers.
+        let mut open_flows: BTreeMap<u64, (f64, SiteId, ReqId)> = BTreeMap::new();
+        for e in &evs {
+            match e.ev {
+                Ev::FlowStart { site, flow, .. } => {
+                    open_flows.insert(flow, (e.at, site, e.req));
+                }
+                Ev::FlowFinish { flow, .. } => {
+                    if let Some((t0, site, req)) = open_flows.remove(&flow) {
+                        tev.push(complete(
+                            2.0,
+                            site as f64,
+                            format!("flow req {req}"),
+                            t0,
+                            e.at - t0,
+                        ));
+                    }
+                }
+                Ev::AnalyticAccess { site, transfer_s } => {
+                    tev.push(complete(
+                        2.0,
+                        site as f64,
+                        format!("access req {}", e.req),
+                        e.at,
+                        transfer_s,
+                    ));
+                }
+                Ev::BlockSteal { to, blocks, .. } => {
+                    tev.push(instant(2.0, to as f64, format!("steal x{blocks}"), e.at));
+                }
+                Ev::BlockFailover { site, orphaned } => {
+                    tev.push(instant(
+                        2.0,
+                        site as f64,
+                        format!("failover orphaned {orphaned}"),
+                        e.at,
+                    ));
+                }
+                Ev::Sample { in_flight, gate_depth, giis_live } => {
+                    tev.push(counter("in_flight".to_string(), e.at, in_flight as f64));
+                    tev.push(counter("gate_depth".to_string(), e.at, gate_depth as f64));
+                    tev.push(counter("giis_live".to_string(), e.at, giis_live as f64));
+                }
+                Ev::LinkSample { site, utilization, .. } => {
+                    tev.push(counter(
+                        format!("util {}", self.site_name(site)),
+                        e.at,
+                        utilization,
+                    ));
+                }
+                _ => {}
+            }
+        }
+
+        let raw: Vec<Json> = evs.iter().map(|e| e.to_json(&self.names)).collect();
+        let mut top = BTreeMap::new();
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        top.insert("traceEvents".to_string(), Json::Arr(tev));
+        top.insert("rawEvents".to_string(), Json::Arr(raw));
+        top.insert("droppedEvents".to_string(), Json::Num(self.dropped as f64));
+        Json::Obj(top).to_string()
+    }
+}
+
+/// Shared, cloneable, zero-cost-when-disabled recorder handle.
+///
+/// The default (and [`TraceHandle::disabled`]) handle holds `None`:
+/// [`TraceHandle::rec`] is then a single branch — no lock, no
+/// allocation — which is the contract that keeps traced code paths
+/// bit-identical and allocation-free when tracing is off.
+#[derive(Debug, Clone, Default)]
+pub struct TraceHandle(Option<Arc<Mutex<Recorder>>>);
+
+impl TraceHandle {
+    /// A handle that records nothing (the default everywhere).
+    pub fn disabled() -> Self {
+        TraceHandle(None)
+    }
+
+    /// A live handle over a fresh ring of `capacity` events.
+    pub fn new(capacity: usize) -> Self {
+        TraceHandle(Some(Arc::new(Mutex::new(Recorder::new(capacity)))))
+    }
+
+    /// Is this handle recording?
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Record one event. One branch when disabled.
+    #[inline]
+    pub fn rec(&self, at: SimInstant, req: ReqId, ev: Ev) {
+        if let Some(r) = &self.0 {
+            r.lock().unwrap().push(at, req, ev);
+        }
+    }
+
+    /// Run `f` against the recorder when enabled (for events that need
+    /// name interning — the closure is never called when disabled, so
+    /// the disabled path still does no work).
+    #[inline]
+    pub fn with<F: FnOnce(&mut Recorder)>(&self, f: F) {
+        if let Some(r) = &self.0 {
+            f(&mut r.lock().unwrap());
+        }
+    }
+
+    /// Read access to the finished recorder (exporters, analyzers).
+    pub fn read<T>(&self, f: impl FnOnce(&Recorder) -> T) -> Option<T> {
+        self.0.as_ref().map(|r| f(&r.lock().unwrap()))
+    }
+
+    /// Write both artifacts (`TRACE_<name>.json` chrome +
+    /// `TRACE_<name>.jsonl`) into the current directory; returns the
+    /// paths written, empty when disabled.
+    pub fn write_artifacts(&self, name: &str) -> crate::Result<Vec<String>> {
+        let Some((chrome, jsonl)) = self.read(|r| (r.chrome_json(), r.jsonl())) else {
+            return Ok(Vec::new());
+        };
+        let json_path = format!("TRACE_{name}.json");
+        let jsonl_path = format!("TRACE_{name}.jsonl");
+        std::fs::write(&json_path, chrome)?;
+        std::fs::write(&jsonl_path, jsonl)?;
+        Ok(vec![json_path, jsonl_path])
+    }
+}
+
+/// Reconstructed span chain for one request:
+/// `[arrival, admit)` queue, `[admit, select)` discovery,
+/// `[select, finish)` transfer — a partition of the request's total
+/// simulated time, so coverage is exact by construction.
+#[derive(Debug, Clone)]
+pub struct RequestSpans {
+    pub req: ReqId,
+    pub arrival: SimInstant,
+    /// Gate-unpark instant (== arrival when the gate had a free slot).
+    pub admit: SimInstant,
+    /// Selection instant (discovery resolved, replica ranked).
+    pub select: SimInstant,
+    /// Completion instant.
+    pub finish: SimInstant,
+    pub queue_s: f64,
+    pub discovery_s: f64,
+    pub transfer_s: f64,
+    /// Service duration carried by `request_done` — what
+    /// `QualityReport::mean_time`/`p95_time` aggregate.
+    pub reported_transfer_s: f64,
+    /// Replica the broker picked, when one was recorded.
+    pub site: Option<SiteId>,
+    pub skipped: bool,
+    /// This request's full event timeline, chronological.
+    pub events: Vec<TraceEvent>,
+}
+
+impl RequestSpans {
+    pub fn total_s(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Fraction of `[arrival, finish]` covered by the three phase
+    /// spans (1.0 by construction; `< 1` would flag a malformed trace).
+    pub fn coverage(&self) -> f64 {
+        let total = self.total_s();
+        if total <= 0.0 {
+            1.0
+        } else {
+            (self.queue_s + self.discovery_s + self.transfer_s) / total
+        }
+    }
+}
+
+/// Rebuild per-request spans from a chronological event slice.
+pub fn spans(events: &[TraceEvent]) -> Vec<RequestSpans> {
+    struct B {
+        arrival: Option<f64>,
+        unpark: Option<f64>,
+        disc_start: Option<f64>,
+        select_at: Option<f64>,
+        flow_start: Option<f64>,
+        finish: Option<f64>,
+        analytic_end: Option<f64>,
+        reported: f64,
+        site: Option<SiteId>,
+        skipped: bool,
+        events: Vec<TraceEvent>,
+    }
+    let mut by_req: BTreeMap<ReqId, B> = BTreeMap::new();
+    for e in events {
+        if e.req == SAMPLE_REQ || e.req == KERNEL_REQ {
+            continue;
+        }
+        let b = by_req.entry(e.req).or_insert(B {
+            arrival: None,
+            unpark: None,
+            disc_start: None,
+            select_at: None,
+            flow_start: None,
+            finish: None,
+            analytic_end: None,
+            reported: 0.0,
+            site: None,
+            skipped: false,
+            events: Vec::new(),
+        });
+        b.events.push(*e);
+        match e.ev {
+            Ev::Arrival => {
+                if b.arrival.is_none() {
+                    b.arrival = Some(e.at);
+                }
+            }
+            Ev::GateUnpark { .. } => b.unpark = Some(e.at),
+            Ev::DiscoveryStart { .. } => {
+                if b.disc_start.is_none() {
+                    b.disc_start = Some(e.at);
+                }
+            }
+            Ev::Selection { site, .. } => {
+                b.select_at = Some(e.at);
+                b.site = Some(site);
+            }
+            Ev::FlowStart { site, .. } => {
+                if b.flow_start.is_none() {
+                    b.flow_start = Some(e.at);
+                }
+                if b.site.is_none() {
+                    b.site = Some(site);
+                }
+            }
+            Ev::AnalyticAccess { site, transfer_s } => {
+                if b.flow_start.is_none() {
+                    b.flow_start = Some(e.at);
+                }
+                if b.site.is_none() {
+                    b.site = Some(site);
+                }
+                b.analytic_end = Some(e.at + transfer_s);
+            }
+            Ev::RequestDone { transfer_s } => {
+                b.finish = Some(e.at);
+                b.reported = transfer_s;
+            }
+            Ev::RequestSkipped { .. } => b.skipped = true,
+            _ => {}
+        }
+    }
+    by_req
+        .into_iter()
+        .map(|(req, b)| {
+            let arrival = b.arrival.unwrap_or(0.0);
+            let admit = b.unpark.or(b.disc_start).or(b.select_at).unwrap_or(arrival);
+            let select = b.select_at.or(b.flow_start).unwrap_or(admit);
+            // Analytic accesses report completion at record time but
+            // logically finish `transfer_s` later; prefer the explicit
+            // done stamp, then the analytic end, then the select point.
+            let finish = b
+                .finish
+                .or(b.analytic_end)
+                .unwrap_or(select)
+                .max(select);
+            RequestSpans {
+                req,
+                arrival,
+                admit,
+                select,
+                finish,
+                queue_s: admit - arrival,
+                discovery_s: select - admit,
+                transfer_s: finish - select,
+                reported_transfer_s: b.reported,
+                site: b.site,
+                skipped: b.skipped,
+                events: b.events,
+            }
+        })
+        .collect()
+}
+
+/// Order statistics for one phase, using the same arithmetic as
+/// `experiment::quality::finish_report` (sorted, `mean = Σ/n`,
+/// `q = v[(n·q) as usize % n]`) so summary numbers are comparable to
+/// report numbers to the last bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseStats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+/// Fold a duration vector into [`PhaseStats`].
+pub fn phase_stats(mut v: Vec<f64>) -> PhaseStats {
+    let n = v.len();
+    if n == 0 {
+        return PhaseStats { n: 0, mean_s: 0.0, p50_s: 0.0, p95_s: 0.0, max_s: 0.0 };
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_s = v.iter().sum::<f64>() / n as f64;
+    let q = |q: f64| v[(n as f64 * q) as usize % n];
+    PhaseStats { n, mean_s, p50_s: q(0.5), p95_s: q(0.95), max_s: v[n - 1] }
+}
+
+/// `(mean, p95)` with exactly `finish_report`'s arithmetic — the
+/// cross-check that lets `trace-summary` reproduce
+/// `QualityReport::mean_time`/`p95_time` from a trace alone.
+pub fn mean_p95(mut durations: Vec<f64>) -> (f64, f64) {
+    if durations.is_empty() {
+        return (0.0, 0.0);
+    }
+    durations.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = durations.iter().sum::<f64>() / durations.len() as f64;
+    let p95 = durations[(durations.len() as f64 * 0.95) as usize % durations.len()];
+    (mean, p95)
+}
+
+/// Whole-trace analysis: phase breakdown + report parity + slowest-N.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// Completed requests found in the trace.
+    pub requests: usize,
+    pub skipped: usize,
+    /// Events lost to ring overwrite (0 when the ring never wrapped).
+    pub dropped: u64,
+    pub queue: PhaseStats,
+    pub discovery: PhaseStats,
+    pub transfer: PhaseStats,
+    pub total: PhaseStats,
+    /// Reproduction of `QualityReport::mean_time` from the trace alone.
+    pub mean_time: f64,
+    /// Reproduction of `QualityReport::p95_time` from the trace alone.
+    pub p95_time: f64,
+    /// Minimum per-request span coverage (should be 1.0).
+    pub min_coverage: f64,
+    /// Top-N slowest requests by total simulated time, slowest first.
+    pub slowest: Vec<RequestSpans>,
+}
+
+/// Summarize reconstructed spans; `top_n` bounds the slow-request list.
+pub fn summarize(all: &[RequestSpans], dropped: u64, top_n: usize) -> TraceSummary {
+    let done: Vec<&RequestSpans> = all.iter().filter(|s| !s.skipped).collect();
+    let queue = phase_stats(done.iter().map(|s| s.queue_s).collect());
+    let discovery = phase_stats(done.iter().map(|s| s.discovery_s).collect());
+    let transfer = phase_stats(done.iter().map(|s| s.transfer_s).collect());
+    let total = phase_stats(done.iter().map(|s| s.total_s()).collect());
+    let (mean_time, p95_time) =
+        mean_p95(done.iter().map(|s| s.reported_transfer_s).collect());
+    let min_coverage = done.iter().map(|s| s.coverage()).fold(1.0f64, f64::min);
+    let mut slowest: Vec<RequestSpans> = done.into_iter().cloned().collect();
+    slowest.sort_by(|a, b| {
+        b.total_s()
+            .partial_cmp(&a.total_s())
+            .unwrap()
+            .then(a.req.cmp(&b.req))
+    });
+    slowest.truncate(top_n);
+    TraceSummary {
+        requests: all.iter().filter(|s| !s.skipped).count(),
+        skipped: all.iter().filter(|s| s.skipped).count(),
+        dropped,
+        queue,
+        discovery,
+        transfer,
+        total,
+        mean_time,
+        p95_time,
+        min_coverage,
+        slowest,
+    }
+}
+
+/// Load a trace back from either exported format: Chrome JSON (reads
+/// the embedded `"rawEvents"`) or JSONL (one object per line).
+pub fn load_trace(src: &str) -> crate::Result<Recorder> {
+    let trimmed = src.trim_start();
+    let objects: Vec<Json> = if trimmed.starts_with('{') {
+        let v = Json::parse(src).map_err(|e| anyhow!("trace parse: {e}"))?;
+        v.get("rawEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace file has no rawEvents array"))?
+            .to_vec()
+    } else {
+        let mut out = Vec::new();
+        for (i, line) in src.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            out.push(
+                Json::parse(line)
+                    .map_err(|e| anyhow!("trace line {}: {e}", i + 1))?,
+            );
+        }
+        out
+    };
+    let mut rec = Recorder::new(objects.len().max(1));
+    for (i, o) in objects.iter().enumerate() {
+        // Split the borrow: intern against a detached table, then merge.
+        let ev = {
+            let names = &mut rec.names;
+            let by_name = &mut rec.by_name;
+            let mut intern = |s: &str| -> SiteId {
+                if let Some(&id) = by_name.get(s) {
+                    return id;
+                }
+                let id = names.len() as SiteId;
+                names.push(s.to_string());
+                by_name.insert(s.to_string(), id);
+                id
+            };
+            TraceEvent::from_json(o, &mut intern)
+                .ok_or_else(|| anyhow!("bad trace event at index {i}"))?
+        };
+        rec.push(ev.at, ev.req, ev.ev);
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = Recorder::new(4);
+        for i in 0..10 {
+            r.push(i as f64, i, Ev::Arrival);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let ats: Vec<f64> = r.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![6.0, 7.0, 8.0, 9.0], "chronological across wrap");
+    }
+
+    #[test]
+    fn disabled_handle_is_a_noop() {
+        let h = TraceHandle::disabled();
+        assert!(!h.on());
+        h.rec(1.0, 1, Ev::Arrival);
+        let mut called = false;
+        h.with(|_| called = true);
+        assert!(!called, "closure must not run when disabled");
+        assert!(h.read(|r| r.len()).is_none());
+        assert!(h.write_artifacts("noop").unwrap().is_empty());
+        // Default is disabled too — that is the hot-path contract.
+        assert!(!TraceHandle::default().on());
+    }
+
+    #[test]
+    fn enabled_handle_records_and_interns() {
+        let h = TraceHandle::new(16);
+        assert!(h.on());
+        h.with(|r| {
+            let s = r.intern("siteA");
+            r.push(0.5, 7, Ev::Selection { site: s, candidates: 3 });
+            assert_eq!(r.intern("siteA"), s, "intern is idempotent");
+        });
+        h.rec(0.6, 7, Ev::RequestDone { transfer_s: 0.1 });
+        assert_eq!(h.read(|r| r.len()), Some(2));
+        assert_eq!(h.read(|r| r.site_name(0).to_string()), Some("siteA".into()));
+    }
+
+    /// Hand-built trace: park 2s, discover 3s, transfer 4s.
+    fn hand_built() -> Recorder {
+        let mut r = Recorder::new(64);
+        let s = r.intern("siteA");
+        r.push(0.0, 1, Ev::Arrival);
+        r.push(0.0, 1, Ev::GatePark { occupancy: 4 });
+        r.push(2.0, 1, Ev::GateUnpark { waited_s: 2.0 });
+        r.push(2.0, 1, Ev::DiscoveryStart { placements: 3, drills: 2 });
+        r.push(2.1, 1, Ev::QueryIssue { site: s });
+        r.push(4.9, 1, Ev::QueryLand { site: s });
+        r.push(5.0, 1, Ev::DiscoveryEnd { responses: 2 });
+        r.push(5.0, 1, Ev::Selection { site: s, candidates: 2 });
+        r.push(5.0, 1, Ev::FlowStart { site: s, flow: 0, bytes: 1 << 20 });
+        r.push(9.0, 1, Ev::FlowFinish { site: s, flow: 0, transfer_s: 4.0 });
+        r.push(9.0, 1, Ev::RequestDone { transfer_s: 4.0 });
+        r
+    }
+
+    #[test]
+    fn critical_path_reconstruction() {
+        let r = hand_built();
+        let sp = r.spans();
+        assert_eq!(sp.len(), 1);
+        let s = &sp[0];
+        assert_eq!(s.req, 1);
+        assert_eq!(s.queue_s, 2.0);
+        assert_eq!(s.discovery_s, 3.0);
+        assert_eq!(s.transfer_s, 4.0);
+        assert_eq!(s.total_s(), 9.0);
+        assert_eq!(s.coverage(), 1.0, "phases partition the request");
+        assert_eq!(s.reported_transfer_s, 4.0);
+        assert!(!s.skipped);
+        assert_eq!(s.events.len(), 11);
+    }
+
+    #[test]
+    fn ungated_request_has_zero_queue() {
+        let mut r = Recorder::new(16);
+        let s = r.intern("b");
+        r.push(1.0, 2, Ev::Arrival);
+        r.push(1.0, 2, Ev::DiscoveryStart { placements: 1, drills: 0 });
+        r.push(1.5, 2, Ev::Selection { site: s, candidates: 1 });
+        r.push(1.5, 2, Ev::AnalyticAccess { site: s, transfer_s: 2.5 });
+        let sp = r.spans();
+        assert_eq!(sp[0].queue_s, 0.0);
+        assert_eq!(sp[0].discovery_s, 0.5);
+        // Analytic end stamps the logical finish even without an
+        // explicit request_done.
+        assert_eq!(sp[0].finish, 4.0);
+        assert_eq!(sp[0].transfer_s, 2.5);
+    }
+
+    #[test]
+    fn summary_uses_finish_report_arithmetic() {
+        let durations = vec![3.0, 1.0, 2.0, 5.0, 4.0];
+        let (mean, p95) = mean_p95(durations.clone());
+        assert_eq!(mean, 3.0);
+        // sorted = [1,2,3,4,5]; idx = (5*0.95) as usize % 5 = 4
+        assert_eq!(p95, 5.0);
+        let ps = phase_stats(durations);
+        assert_eq!(ps.p50_s, 3.0); // idx (5*0.5) as usize = 2
+        assert_eq!(ps.max_s, 5.0);
+        assert_eq!(phase_stats(Vec::new()).n, 0);
+    }
+
+    #[test]
+    fn summarize_ranks_slowest_and_counts_skips() {
+        let mut r = Recorder::new(64);
+        let s = r.intern("a");
+        for (req, dur) in [(1u64, 2.0f64), (2, 8.0), (3, 5.0)] {
+            r.push(0.0, req, Ev::Arrival);
+            r.push(0.0, req, Ev::Selection { site: s, candidates: 1 });
+            r.push(dur, req, Ev::RequestDone { transfer_s: dur });
+        }
+        r.push(0.0, 4, Ev::Arrival);
+        r.push(0.0, 4, Ev::RequestSkipped { reason: "wind_down" });
+        let sum = summarize(&r.spans(), r.dropped(), 2);
+        assert_eq!(sum.requests, 3);
+        assert_eq!(sum.skipped, 1);
+        assert_eq!(sum.slowest.len(), 2);
+        assert_eq!(sum.slowest[0].req, 2);
+        assert_eq!(sum.slowest[1].req, 3);
+        assert_eq!(sum.min_coverage, 1.0);
+        let (mean, p95) = mean_p95(vec![2.0, 8.0, 5.0]);
+        assert_eq!(sum.mean_time, mean);
+        assert_eq!(sum.p95_time, p95);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let r = hand_built();
+        let text = r.jsonl();
+        assert_eq!(text.lines().count(), 11);
+        let back = load_trace(&text).unwrap();
+        assert_eq!(back.events(), r.events());
+        assert_eq!(back.names(), r.names());
+        let a = summarize(&r.spans(), 0, 5);
+        let b = summarize(&back.spans(), 0, 5);
+        assert_eq!(a.mean_time, b.mean_time);
+        assert_eq!(a.total.p95_s, b.total.p95_s);
+    }
+
+    #[test]
+    fn chrome_json_round_trips_via_raw_events() {
+        let mut r = hand_built();
+        r.push(
+            1.0,
+            SAMPLE_REQ,
+            Ev::Sample { in_flight: 1, gate_depth: 0, giis_live: 3 },
+        );
+        r.push(1.0, KERNEL_REQ, Ev::Dispatch { kind: "tick" });
+        let text = r.chrome_json();
+        let v = Json::parse(&text).unwrap();
+        assert!(v.get("traceEvents").unwrap().as_arr().unwrap().len() >= 5);
+        let back = load_trace(&text).unwrap();
+        assert_eq!(back.events(), r.events());
+        // Pseudo-request rows survive the string-sentinel encoding.
+        let evs = back.events();
+        assert!(evs.iter().any(|e| e.req == SAMPLE_REQ));
+        assert!(evs.iter().any(|e| e.req == KERNEL_REQ));
+        // Sampler/kernel rows never become request spans.
+        assert_eq!(back.spans().len(), 1);
+    }
+
+    #[test]
+    fn skipped_only_request_reconstructs_without_panic() {
+        let mut r = Recorder::new(8);
+        r.push(3.0, 9, Ev::Arrival);
+        r.push(3.0, 9, Ev::RequestSkipped { reason: "undiscoverable" });
+        let sp = r.spans();
+        assert!(sp[0].skipped);
+        assert_eq!(sp[0].total_s(), 0.0);
+        let sum = summarize(&sp, 0, 3);
+        assert_eq!(sum.requests, 0);
+        assert_eq!(sum.skipped, 1);
+        assert_eq!(sum.mean_time, 0.0);
+    }
+}

@@ -12,8 +12,11 @@ use globus_replica::directory::entry::{Dn, Entry};
 use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
 use globus_replica::directory::{Dit, Filter, Scope};
 use globus_replica::directory::fanout::{run_fanout, DirectoryFanout, FanoutPolicy, QueryIds};
+use globus_replica::broker::SelectorKind;
+use globus_replica::experiment::{run_quality_open, OpenLoopOptions};
 use globus_replica::forecast::forecast_bank;
-use globus_replica::simnet::{Engine, FaultKind, FlowSet, Signal, Topology};
+use globus_replica::simnet::{Engine, FaultKind, FlowSet, Signal, Topology, Workload, WorkloadSpec};
+use globus_replica::trace::TraceHandle;
 use globus_replica::util::prng::Rng;
 use globus_replica::util::prop::{forall, Config};
 
@@ -539,5 +542,59 @@ fn prop_match_context_attribute_resolution() {
             Value::Real(got) if (got - v_sto).abs() < 1e-9 => Ok(()),
             other => Err(format!("probe = {other:?}, want {v_sto}")),
         }
+    });
+}
+
+#[test]
+fn prop_traced_open_loop_runs_are_byte_identical() {
+    // The determinism contract the flight recorder rides on (P8):
+    // identically seeded open-loop runs, each with a fresh recorder,
+    // export byte-identical JSONL and Chrome traces — the simulated
+    // clock, the event order, and the name-interning order are all
+    // functions of the seed alone.
+    forall("traced open-loop determinism", cfg(5), |rng| {
+        let n = 4 + rng.index(4);
+        let seed = 5000 + rng.below(10_000);
+        let grid_cfg = GridConfig::generate(n, seed);
+        let spec = WorkloadSpec { files: 6, mean_interarrival: 40.0, ..Default::default() };
+        let mut wl = Workload::new(spec.clone(), seed);
+        let reqs = wl.take(10);
+        let run = || {
+            let trace = TraceHandle::new(1 << 16);
+            let opts = OpenLoopOptions {
+                trace: trace.clone(),
+                sample_period: 25.0,
+                ..OpenLoopOptions::open()
+            };
+            let report = run_quality_open(
+                &grid_cfg,
+                &spec,
+                &reqs,
+                3,
+                2,
+                SelectorKind::Forecast,
+                &opts,
+                None,
+            );
+            let (jsonl, chrome) = trace.read(|r| (r.jsonl(), r.chrome_json())).unwrap();
+            (report.quality.mean_time, report.quality.p95_time, jsonl, chrome)
+        };
+        let (mean_a, p95_a, jsonl_a, chrome_a) = run();
+        let (mean_b, p95_b, jsonl_b, chrome_b) = run();
+        if mean_a != mean_b || p95_a != p95_b {
+            return Err(format!(
+                "reports diverged: mean {mean_a} vs {mean_b}, p95 {p95_a} vs {p95_b}"
+            ));
+        }
+        if jsonl_a != jsonl_b {
+            return Err("JSONL exports diverged".into());
+        }
+        if chrome_a != chrome_b {
+            return Err("Chrome exports diverged".into());
+        }
+        if jsonl_a.is_empty() {
+            return Err("traced run recorded nothing".into());
+        }
+        Ok(())
     });
 }

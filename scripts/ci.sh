@@ -38,6 +38,19 @@ cargo build --release
 echo "== tier-1: tests =="
 cargo test -q
 
+echo "== tier-1: traced smoke (flight recorder end-to-end) =="
+# Tiny flight-recorded open-loop scenario: exports TRACE_ci_smoke.json
+# (Chrome trace-event) + .jsonl, then feeds the export back through
+# `trace-summary`, whose loader rejects malformed JSON with exit 2 —
+# that round trip IS the "exported JSON parses" validation.
+cargo run --release --quiet -- simulate --trace \
+    --sites 4 --requests 8 --seed 7 --trace-name ci_smoke
+test -s TRACE_ci_smoke.json
+test -s TRACE_ci_smoke.jsonl
+cargo run --release --quiet -- trace-summary TRACE_ci_smoke.json --json >/dev/null
+cargo run --release --quiet -- trace-summary TRACE_ci_smoke.jsonl >/dev/null
+echo "traced smoke OK (TRACE_ci_smoke.json round-tripped through trace-summary)"
+
 echo "== hygiene: rustfmt =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
