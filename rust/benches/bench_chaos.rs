@@ -1,0 +1,174 @@
+//! Chaos sweep bench (ISSUE 7): fault intensity × recovery policy on
+//! identically seeded grids — the robustness headline. Each weather
+//! point replays the same request trace three times (fail-fast, pinned
+//! retry, retry+failover); the completion-rate gap between the first
+//! and last arm is the number the PR exists to move.
+//!
+//! With `BENCH_JSON=<path>` set, every point's per-arm headline numbers
+//! (completion rate, mean time-to-recover, p95, goodput, retry/failover
+//! counters) are written as JSON — `scripts/bench.sh` uses this to
+//! record `BENCH_chaos.json` next to the other perf artifacts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::{run_chaos, ChaosArm, ChaosOptions, RetryOptions};
+use globus_replica::metrics::Metrics;
+use globus_replica::simnet::{WeatherSpec, WorkloadSpec};
+use globus_replica::util::bench::report_metric;
+use globus_replica::util::json::Json;
+
+fn arm_json(a: &ChaosArm) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("completion_rate".to_string(), Json::Num(a.completion_rate));
+    o.insert("mttr_s".to_string(), Json::Num(a.mttr));
+    o.insert("p95_time_s".to_string(), Json::Num(a.p95));
+    o.insert("goodput_bps".to_string(), Json::Num(a.goodput));
+    o.insert("retries".to_string(), Json::Num(a.retries as f64));
+    o.insert("failovers".to_string(), Json::Num(a.failovers as f64));
+    o.insert("gave_up".to_string(), Json::Num(a.gave_up as f64));
+    o.insert("skipped".to_string(), Json::Num(a.skipped as f64));
+    Json::Obj(o)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = GridConfig::generate(10, 777);
+    let spec = WorkloadSpec { files: 12, mean_interarrival: 12.0, ..Default::default() };
+    let n_requests = if quick { 10 } else { 30 };
+
+    // Fault intensity ladder: calm (no weather — the parity floor),
+    // breeze (rare healing crashes), storm (frequent crashes, some
+    // permanent, flapping links), hurricane (most of the grid down at
+    // some point; permanent deaths common).
+    let weathers: Vec<(&str, WeatherSpec)> = vec![
+        ("calm", WeatherSpec::default()),
+        (
+            "breeze",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 600.0,
+                mttr: 60.0,
+                ..WeatherSpec::default()
+            },
+        ),
+        (
+            "storm",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 180.0,
+                mttr: 90.0,
+                perm_frac: 0.2,
+                flap_rate: 1.0 / 300.0,
+                flap_duration: 45.0,
+                flap_floor: 0.1,
+                ..WeatherSpec::default()
+            },
+        ),
+        (
+            "hurricane",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 80.0,
+                mttr: 120.0,
+                perm_frac: 0.4,
+                flap_rate: 1.0 / 150.0,
+                flap_duration: 60.0,
+                flap_floor: 0.05,
+                ..WeatherSpec::default()
+            },
+        ),
+    ];
+
+    let opts = ChaosOptions {
+        retry: RetryOptions { transfer_timeout: 30.0, ..RetryOptions::default() },
+        ..ChaosOptions::default()
+    };
+
+    println!("== chaos: weather sweep (10 sites, {n_requests} requests/arm, 3 arms/point) ==");
+    let t0 = Instant::now();
+    let report = run_chaos(&cfg, &spec, n_requests, 4, 4, &weathers, &opts);
+    let wall = t0.elapsed();
+
+    println!(
+        "{:<11} {:>7} {:>7} | {:>9} {:>9} {:>9} | {:>8} {:>8} {:>8}",
+        "weather", "crashes", "faults", "ff done", "rt done", "fo done", "fo mttr", "fo p95", "gave up"
+    );
+    for p in &report.points {
+        println!(
+            "{:<11} {:>7} {:>7} | {:>8.0}% {:>8.0}% {:>8.0}% | {:>7.1}s {:>7.1}s {:>8}",
+            p.label,
+            p.crashes,
+            p.faults,
+            p.fail_fast.completion_rate * 100.0,
+            p.retry.completion_rate * 100.0,
+            p.retry_failover.completion_rate * 100.0,
+            p.retry_failover.mttr,
+            p.retry_failover.p95,
+            p.fail_fast.gave_up,
+        );
+    }
+    report_metric("sweep wall time", wall.as_secs_f64(), "s");
+    if let Some(worst) = report.points.last() {
+        report_metric(
+            "failover-over-fail-fast completion gain at worst weather",
+            worst.retry_failover.completion_rate - worst.fail_fast.completion_rate,
+            "",
+        );
+        report_metric(
+            "mean time-to-recover at worst weather",
+            worst.retry_failover.mttr,
+            "s",
+        );
+    }
+
+    let m = Metrics::new();
+    m.counter("chaos.points").add(report.points.len() as u64);
+    m.counter("chaos.requests_per_arm").add(n_requests as u64);
+    m.histogram("chaos.sweep_wall_ns").observe(wall);
+    for p in &report.points {
+        m.counter("chaos.crashes").add(p.crashes as u64);
+        m.counter("chaos.retries").add(p.retry_failover.retries as u64);
+        m.counter("chaos.failovers").add(p.retry_failover.failovers as u64);
+        m.counter("chaos.gave_up_fail_fast").add(p.fail_fast.gave_up as u64);
+        m.counter("chaos.gave_up_failover").add(p.retry_failover.gave_up as u64);
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("chaos".to_string()));
+        root.insert("requests_per_arm".to_string(), Json::Num(n_requests as f64));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                report
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("weather".to_string(), Json::Str(p.label.clone()));
+                        o.insert("crashes".to_string(), Json::Num(p.crashes as f64));
+                        o.insert("faults".to_string(), Json::Num(p.faults as f64));
+                        o.insert("fail_fast".to_string(), arm_json(&p.fail_fast));
+                        o.insert("retry".to_string(), arm_json(&p.retry));
+                        o.insert(
+                            "retry_failover".to_string(),
+                            arm_json(&p.retry_failover),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "metrics".to_string(),
+            Json::parse(&m.to_json()).expect("snapshot JSON parses"),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

@@ -175,6 +175,16 @@ pub struct BrokerTrace {
     /// Hierarchical route only: candidates served purely from the
     /// (stale) GIIS registration snapshot.
     pub summary_sites: usize,
+    /// Degrade chain ([`HierDiscovery::degrade`]): candidates served
+    /// from an *expired* GIIS snapshot after the live index had
+    /// nothing.
+    pub degrade_stale: usize,
+    /// Degrade chain: candidates recovered by querying the site's GRIS
+    /// directly, bypassing the dead index entirely.
+    pub degrade_direct: usize,
+    /// Degrade chain: candidates admitted blind (no information at
+    /// all — an empty ad the selector can only pick at random).
+    pub degrade_blind: usize,
 }
 
 impl BrokerTrace {
@@ -274,6 +284,14 @@ pub struct HierDiscovery {
     /// Top-K sites (by predicted bandwidth over the *stale* snapshots)
     /// whose GRIS is queried fresh per selection. 0 = summaries only.
     pub drill_down: usize,
+    /// Information-plane degrade chain (ISSUE 7). Off (the default):
+    /// a site without a live registration is simply not a candidate —
+    /// the strict behaviour the staleness experiments pin. On: the
+    /// broker walks live GIIS → *expired* GIIS snapshot → direct GRIS
+    /// query → blind candidate, counting each step in
+    /// [`BrokerTrace`], so selection survives a dead or lagging index
+    /// at the cost of selecting on worse information.
+    pub degrade: bool,
 }
 
 /// The decentralized storage broker. One per client; cheap to clone
@@ -507,18 +525,45 @@ impl Broker {
         }
         trace.drill_downs = fresh.iter().filter(|f| f.is_some()).count();
         trace.summary_sites = discovered.len() - trace.drill_downs;
+        let degrade_filter = disc
+            .degrade
+            .then(|| Filter::parse(crate::directory::hier::STORAGE_SEARCH_FILTER).unwrap());
         locations
             .iter()
             .enumerate()
             .map(|(i, (site, _))| {
                 match fresh[i].take().or_else(|| cached[i].take()) {
                     Some(entries) => (Ok(entries), ns[i]),
-                    None => (
-                        Err(anyhow::anyhow!(
-                            "site {site:?} has no live GIIS registration"
-                        )),
-                        0,
-                    ),
+                    None => match &degrade_filter {
+                        // Degrade chain: expired snapshot → direct
+                        // GRIS → blind. Every step yields *a*
+                        // candidate — under grid weather a degraded
+                        // answer beats an absent one.
+                        Some(filter) => {
+                            if let Some((entries, _age)) = dir.cached_any(site) {
+                                trace.degrade_stale += 1;
+                                (Ok(entries.to_vec()), 0)
+                            } else {
+                                let tq = Instant::now();
+                                match self.info.query_site(site, filter) {
+                                    Ok(entries) => {
+                                        trace.degrade_direct += 1;
+                                        (Ok(entries), tq.elapsed().as_nanos() as u64)
+                                    }
+                                    Err(_) => {
+                                        trace.degrade_blind += 1;
+                                        (Ok(Vec::new()), 0)
+                                    }
+                                }
+                            }
+                        }
+                        None => (
+                            Err(anyhow::anyhow!(
+                                "site {site:?} has no live GIIS registration"
+                            )),
+                            0,
+                        ),
+                    },
                 }
             })
             .collect()
@@ -857,7 +902,7 @@ mod tests {
         let info: Arc<dyn InfoService> = Arc::new(info);
         let direct = Broker::new(catalog.clone(), info.clone(), policy.clone());
         let hier = Broker::new(catalog, info, policy)
-            .with_discovery(HierDiscovery { dir: dir.clone(), drill_down });
+            .with_discovery(HierDiscovery { dir: dir.clone(), drill_down, degrade: false });
         (direct, hier, dir, request)
     }
 
@@ -1121,6 +1166,69 @@ mod tests {
         // A soft-state refresh revives discovery.
         dir.write().unwrap().refresh_all();
         assert!(hier.select("run42.dat", &request).is_ok());
+    }
+
+    /// ISSUE 7: with the degrade chain on, a fully expired index no
+    /// longer kills selection — every slot falls back to its expired
+    /// snapshot, and the trace says so.
+    #[test]
+    fn degrade_chain_survives_a_fully_expired_index() {
+        let (_, hier, dir, request) =
+            hier_fixture(RankPolicy::ClassAdRank, 0, 60.0);
+        let degraded = {
+            let mut disc = hier.discovery.clone().unwrap();
+            disc.degrade = true;
+            hier.clone().with_discovery(disc)
+        };
+        dir.write().unwrap().advance_to(120.0);
+        // Strict route: everything expired, selection fails (the
+        // pinned pre-ISSUE-7 contract).
+        assert!(hier.select("run42.dat", &request).is_err());
+        // Degrade chain: expired snapshots still carry Figure-2 data,
+        // so selection succeeds on stale information.
+        let sel = degraded.select("run42.dat", &request).unwrap();
+        assert_eq!(sel.site, "lbl-dsd", "stale data is yesterday's truth, not garbage");
+        assert_eq!(sel.trace.degrade_stale, 3, "every slot came from an expired snapshot");
+        assert_eq!(sel.trace.degrade_direct, 0);
+        assert_eq!(sel.trace.degrade_blind, 0);
+    }
+
+    /// A site the GIIS never registered falls through the stale step
+    /// to a direct GRIS query; a site with no GRIS at all becomes a
+    /// blind candidate instead of an error.
+    #[test]
+    fn degrade_chain_falls_back_to_direct_gris_then_blind() {
+        let (catalog, info, request) = fixture_parts();
+        // Hierarchy that only ever knew about one of the three sites.
+        let mut dir = HierarchicalDirectory::new(60.0);
+        let gris = info.iter().next().map(|(s, g)| (s.to_string(), g.clone())).unwrap();
+        dir.add_site(&gris.0, gris.1);
+        dir.refresh_all();
+        // A ghost replica with no GRIS anywhere.
+        let mut catalog = catalog;
+        catalog
+            .add_replica(
+                "run42.dat",
+                PhysicalLocation { site: "ghost".into(), url: "gsiftp://ghost/f".into() },
+            )
+            .unwrap();
+        let broker = Broker::new(
+            Arc::new(Mutex::new(catalog)),
+            Arc::new(info),
+            RankPolicy::ClassAdRank,
+        )
+        .with_discovery(HierDiscovery {
+            dir: Arc::new(RwLock::new(dir)),
+            drill_down: 0,
+            degrade: true,
+        });
+        let sel = broker.select("run42.dat", &request).unwrap();
+        // 1 slot live (the registered site), 2 recovered by direct
+        // GRIS queries, and the ghost admitted blind.
+        assert_eq!(sel.trace.degrade_direct, 2);
+        assert_eq!(sel.trace.degrade_blind, 1);
+        assert_eq!(sel.trace.degrade_stale, 0);
+        assert_eq!(sel.candidates.len(), 4);
     }
 
     #[test]

@@ -361,6 +361,22 @@ impl CoallocSession {
     /// failover is disabled, a block exhausts its retry budget, or no
     /// live source remains.
     fn detect_failures(&mut self, flows: &mut FlowSet, topo: &mut Topology) -> Result<()> {
+        // Crash → recover (ISSUE 7 grid weather): a failed stream
+        // whose source healed rejoins the session while work remains —
+        // it re-acquires its transfer slot and runs its own orphan
+        // queue (or steals) instead of sitting out the rest of the
+        // transfer. A re-crash just fails it over again; the per-block
+        // retry budget bounds the flapping. This runs as a pre-pass so
+        // a failure detected below already sees every healed peer as a
+        // live adopter, whatever the stream order.
+        if self.streams.iter().any(|s| !s.queue.is_empty()) {
+            for i in 0..self.streams.len() {
+                if self.streams[i].failed && topo.site_alive(self.streams[i].site) {
+                    self.streams[i].failed = false;
+                    topo.begin_transfer(self.streams[i].site);
+                }
+            }
+        }
         for i in 0..self.streams.len() {
             if self.streams[i].finished || self.streams[i].failed {
                 continue;
@@ -959,6 +975,71 @@ mod tests {
             msg.contains("no live source") || msg.contains("lost"),
             "unexpected error: {msg}"
         );
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn healed_source_rejoins_and_delivers_again() {
+        let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 2,
+            tick: 1.0,
+            max_block_retries: 3,
+            ..Default::default()
+        };
+        // 10 × 4 MB blocks per stream at ~4 s/block on a 1 MB/s link.
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6]), 80e6, &policy);
+        // Site 0 crashes early and recovers mid-transfer — long before
+        // the survivor (busy with its own 40 s stripe) would steal the
+        // whole orphan queue.
+        topo.schedule_fault_for(0, 6.0, 20.0, FaultKind::ReplicaDeath);
+        let out = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap();
+        assert!((out.bytes - 80e6).abs() < 1.0);
+        let delivered: usize = out.streams.iter().map(|s| s.blocks).sum();
+        assert_eq!(delivered, plan.n_blocks);
+        assert_eq!(out.failovers, 1);
+        let healed = &out.streams[0];
+        assert!(!healed.failed, "revived stream must not end in the failed state");
+        assert_eq!(healed.failures, 1, "the crash cancelled its in-flight block");
+        // It rejoined and moved real data after the heal: one block
+        // pre-crash, so ≥ 2 proves post-heal deliveries.
+        assert!(healed.blocks >= 2, "healed stream delivered only {}", healed.blocks);
+        // Slot accounting balanced through fail → revive → finish.
+        for i in 0..topo.len() {
+            assert_eq!(topo.site(i).active_transfers, 0);
+        }
+    }
+
+    #[test]
+    fn flapping_source_exhausts_the_block_retry_budget() {
+        // Crash/heal cycles re-fail the same stream; each cycle
+        // charges the in-flight block a retry, and the budget turns
+        // unbounded flapping into a clean error instead of livelock.
+        let (cfg, mut topo, ftp) = flat_grid(2, 1e6);
+        let policy = CoallocPolicy {
+            block_size: 4e6,
+            max_streams: 2,
+            tick: 1.0,
+            max_block_retries: 2,
+            ..Default::default()
+        };
+        let plan = plan_stripes(&sources(&cfg, &[1e6, 1e6]), 80e6, &policy);
+        // Staggered flaps — site 0 down on [2,4),[6,8),…, site 1 on
+        // [4,6),[8,10),… — so a live adopter always exists (the
+        // no-live-source bail never fires) but no 2 s up-window fits a
+        // 4 s block. Each crash cancels the stream's front block and
+        // charges it a retry; site 0's first block blows the budget of
+        // 2 on its third cancellation at t=10.
+        for k in 0..40 {
+            topo.schedule_fault_for(0, 2.0 + 4.0 * k as f64, 2.0, FaultKind::ReplicaDeath);
+            topo.schedule_fault_for(1, 4.0 + 4.0 * k as f64, 2.0, FaultKind::ReplicaDeath);
+        }
+        let err = execute(&mut topo, &ftp, "client", &plan, &policy).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("retry budget"), "unexpected error: {msg}");
         for i in 0..topo.len() {
             assert_eq!(topo.site(i).active_transfers, 0);
         }

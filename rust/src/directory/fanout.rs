@@ -16,7 +16,11 @@
 //! * **a per-query deadline** — a site slower than
 //!   [`FanoutPolicy::per_query_deadline`] resolves as a timeout at the
 //!   deadline instant (the client stops waiting; the site contributes
-//!   no fresh data), and
+//!   no fresh data),
+//! * **bounded retry with backoff** — a timed-out query is re-issued
+//!   up to [`FanoutPolicy::max_retries`] times, each after
+//!   [`FanoutPolicy::retry_backoff`] seconds, before the site is
+//!   abandoned (ISSUE 7: one slow attempt is weather, not death), and
 //! * **a straggler cutoff** — [`FanoutPolicy::straggler_cutoff`]
 //!   seconds after the fan-out starts, everything still queued or in
 //!   flight is abandoned and the fan-out completes with what it has.
@@ -47,6 +51,18 @@ pub struct FanoutPolicy {
     pub per_query_deadline: f64,
     /// The whole fan-out is cut off this many seconds after it starts.
     pub straggler_cutoff: f64,
+    /// Extra attempts after a blown deadline before the site is
+    /// abandoned (0 = legacy fail-fast). The GRIS keeps computing its
+    /// answer server-side while the client has stopped waiting, so a
+    /// retry resumes from `latency − attempts·deadline` of remaining
+    /// work — a slow-but-alive site eventually answers, a dead one
+    /// (infinite latency) times out every attempt and exhausts the
+    /// budget.
+    pub max_retries: usize,
+    /// Seconds to wait after a timed-out attempt before re-issuing.
+    /// The query keeps its in-flight slot through the backoff — the
+    /// concurrency cap bounds *commitments*, not wire activity.
+    pub retry_backoff: f64,
 }
 
 impl Default for FanoutPolicy {
@@ -55,6 +71,8 @@ impl Default for FanoutPolicy {
             max_in_flight: 8,
             per_query_deadline: f64::INFINITY,
             straggler_cutoff: f64::INFINITY,
+            max_retries: 0,
+            retry_backoff: 0.0,
         }
     }
 }
@@ -92,7 +110,12 @@ enum QueryState {
 struct Query {
     site: usize,
     latency: f64,
-    qid: u64,
+    /// One pre-allocated kernel id per attempt (`1 + max_retries`), so
+    /// retried queries stay routable through a driver's qid→request
+    /// map built once at [`DirectoryFanout::start`].
+    qids: Vec<u64>,
+    /// 0-based attempt currently (or last) in flight.
+    attempt: u32,
     state: QueryState,
     resolved_at: f64,
 }
@@ -104,6 +127,10 @@ pub enum FanoutStep {
     Response { site: usize, at: f64 },
     /// `site` blew its per-query deadline; no data.
     TimedOut { site: usize, at: f64 },
+    /// `site`'s attempt timed out but retries remain: the query was
+    /// re-issued after the backoff (`attempt` is the 1-based retry now
+    /// pending). Not a terminal outcome — the site is still in flight.
+    Retried { site: usize, attempt: u32, at: f64 },
     /// The straggler cutoff fired; remaining sites were abandoned.
     CutOff { at: f64 },
     /// Not one of this fan-out's ids (or already finished) — ignore.
@@ -123,6 +150,7 @@ pub struct DirectoryFanout {
     in_flight: usize,
     outstanding: usize,
     peak_in_flight: usize,
+    retries: usize,
     finished_at: Option<f64>,
     /// Flight recorder (disabled unless [`DirectoryFanout::start_traced`]
     /// wired one in): per-query issue/land/timeout/cutoff events keyed
@@ -172,12 +200,17 @@ impl DirectoryFanout {
             .map(|&(site, latency)| Query {
                 site,
                 latency: latency.max(0.0),
-                qid: ids.next(),
+                qids: (0..=policy.max_retries).map(|_| ids.next()).collect(),
+                attempt: 0,
                 state: QueryState::Queued,
                 resolved_at: f64::NAN,
             })
             .collect();
-        let by_qid = queries.iter().enumerate().map(|(i, q)| (q.qid, i)).collect();
+        let by_qid = queries
+            .iter()
+            .enumerate()
+            .flat_map(|(i, q)| q.qids.iter().map(move |&qid| (qid, i)))
+            .collect();
         let cutoff_qid = if policy.straggler_cutoff.is_finite() && !queries.is_empty() {
             let qid = ids.next();
             eng.schedule_query(now + policy.straggler_cutoff.max(0.0), qid);
@@ -195,6 +228,7 @@ impl DirectoryFanout {
             next_queued: 0,
             in_flight: 0,
             peak_in_flight: 0,
+            retries: 0,
             finished_at: if sites.is_empty() { Some(now) } else { None },
             trace,
             trace_req: req,
@@ -209,7 +243,7 @@ impl DirectoryFanout {
     pub fn qids(&self) -> Vec<u64> {
         self.queries
             .iter()
-            .map(|q| q.qid)
+            .flat_map(|q| q.qids.iter().copied())
             .chain(self.cutoff_qid)
             .collect()
     }
@@ -223,7 +257,7 @@ impl DirectoryFanout {
             // A query that cannot beat its deadline resolves *at* the
             // deadline as a timeout — the client stops waiting there.
             let resolves_in = q.latency.min(self.policy.per_query_deadline);
-            eng.schedule_query(now + resolves_in, q.qid);
+            eng.schedule_query(now + resolves_in, q.qids[0]);
             self.in_flight += 1;
             if self.trace.on() {
                 let site = self.labels.get(self.next_queued - 1).copied().unwrap_or(0);
@@ -264,7 +298,38 @@ impl DirectoryFanout {
         if self.queries[i].state != QueryState::InFlight {
             return FanoutStep::Ignored;
         }
-        let timed_out = self.queries[i].latency > self.policy.per_query_deadline;
+        let deadline = self.policy.per_query_deadline;
+        // Server-side progress carries across attempts (the GRIS keeps
+        // computing after the client stops waiting), so attempt k
+        // resumes with `latency − k·deadline` of work left. attempt 0
+        // is special-cased to dodge `0 × ∞ = NaN` under the default
+        // infinite deadline.
+        let attempt = self.queries[i].attempt;
+        let remaining = if attempt == 0 {
+            self.queries[i].latency
+        } else {
+            self.queries[i].latency - attempt as f64 * deadline
+        };
+        let timed_out = remaining > deadline;
+        if timed_out && (attempt as usize) < self.policy.max_retries {
+            // Retry budget left: re-issue after the backoff instead of
+            // abandoning the site. The slot stays held (in-flight
+            // count, outstanding count unchanged) so the concurrency
+            // cap keeps bounding commitments.
+            let q = &mut self.queries[i];
+            q.attempt += 1;
+            let resolves_in = (remaining - deadline).min(deadline);
+            let reissue_at = at + self.policy.retry_backoff.max(0.0);
+            eng.schedule_query(reissue_at + resolves_in, q.qids[q.attempt as usize]);
+            self.retries += 1;
+            let (site, attempt) = (q.site, q.attempt);
+            if self.trace.on() {
+                let label = self.labels.get(i).copied().unwrap_or(0);
+                self.trace.rec(at, self.trace_req, Ev::QueryTimeout { site: label });
+                self.trace.rec(reissue_at, self.trace_req, Ev::QueryIssue { site: label });
+            }
+            return FanoutStep::Retried { site, attempt, at };
+        }
         self.queries[i].state = if timed_out {
             QueryState::TimedOut
         } else {
@@ -318,6 +383,11 @@ impl DirectoryFanout {
         self.peak_in_flight
     }
 
+    /// Timed-out attempts that were re-issued instead of abandoned.
+    pub fn retries(&self) -> usize {
+        self.retries
+    }
+
     /// Sites whose responses arrived, with arrival instants, in
     /// resolution order.
     pub fn responses(&self) -> Vec<(usize, f64)> {
@@ -325,7 +395,7 @@ impl DirectoryFanout {
             .queries
             .iter()
             .filter(|q| q.state == QueryState::Responded)
-            .map(|q| (q.site, q.resolved_at, q.qid))
+            .map(|q| (q.site, q.resolved_at, q.qids[0]))
             .collect();
         out.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.cmp(&b.2)));
         out.into_iter().map(|(s, at, _)| (s, at)).collect()
@@ -425,8 +495,81 @@ mod tests {
         assert_eq!(f.responses().len(), 1);
         assert_eq!(f.responses()[0].0, 1);
         assert_eq!(f.unresolved(), vec![0]);
+        assert_eq!(f.retries(), 0, "fail-fast default never retries");
         // The client stopped waiting at the deadline, not at 5 s.
         assert!((f.finished_at().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn retries_let_a_slow_but_alive_site_answer() {
+        // latency 2.5 against a 1.0 s per-attempt deadline: attempt 0
+        // times out at 1.0, retry waits 0.5 and resumes 1.5 s of work
+        // (times out again at 2.5+0.5=3.0... attempt 1 runs 1.5→2.5),
+        // attempt 2 runs the final 0.5 s. Timeline: t=1.0 timeout,
+        // reissue 1.5, t=2.5 timeout, reissue 3.0, answer at 3.5.
+        let sites = vec![(0, 2.5)];
+        let f = run_fanout(
+            0.0,
+            &sites,
+            FanoutPolicy {
+                per_query_deadline: 1.0,
+                max_retries: 2,
+                retry_backoff: 0.5,
+                ..Default::default()
+            },
+        );
+        assert!(f.finished());
+        assert_eq!(f.retries(), 2);
+        assert_eq!(f.responses().len(), 1, "third attempt lands the answer");
+        assert!(f.unresolved().is_empty());
+        assert!((f.finished_at().unwrap() - 3.5).abs() < 1e-9, "{:?}", f.finished_at());
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_abandons_a_dead_site() {
+        // An unreachable site (infinite latency) times out every
+        // attempt; after 1 + max_retries tries it is abandoned, and a
+        // healthy peer is unaffected.
+        let sites = vec![(0, f64::INFINITY), (1, 0.1)];
+        let f = run_fanout(
+            0.0,
+            &sites,
+            FanoutPolicy {
+                per_query_deadline: 1.0,
+                max_retries: 2,
+                retry_backoff: 0.0,
+                ..Default::default()
+            },
+        );
+        assert!(f.finished());
+        assert_eq!(f.retries(), 2);
+        assert_eq!(f.responses().len(), 1);
+        assert_eq!(f.responses()[0].0, 1);
+        assert_eq!(f.unresolved(), vec![0]);
+        // Three back-to-back 1 s waits on the dead site.
+        assert!((f.finished_at().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cutoff_cancels_a_query_waiting_out_its_backoff() {
+        // The straggler cutoff fires while site 0 sits in retry
+        // backoff: the pending retry is abandoned, not resurrected.
+        let sites = vec![(0, f64::INFINITY)];
+        let f = run_fanout(
+            0.0,
+            &sites,
+            FanoutPolicy {
+                per_query_deadline: 1.0,
+                max_retries: 5,
+                retry_backoff: 10.0,
+                straggler_cutoff: 5.0,
+                ..Default::default()
+            },
+        );
+        assert!(f.finished());
+        assert_eq!(f.retries(), 1, "one reissue before the cutoff");
+        assert_eq!(f.unresolved(), vec![0]);
+        assert!((f.finished_at().unwrap() - 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -206,6 +206,16 @@ impl Giis {
             .filter(|r| !r.expired(self.clock))
     }
 
+    /// Like [`Self::lookup`] but ignoring TTL expiry: the last
+    /// registration record ever pushed, however stale. This is the
+    /// degrade-chain fallback (ISSUE 7) — a resilient broker that finds
+    /// the live index empty would rather act on an expired snapshot
+    /// than on nothing. Never returned by [`Self::registrations`] or
+    /// [`Self::discover`]; normal discovery still hides expired sites.
+    pub fn lookup_any(&self, site: &str) -> Option<&Registration> {
+        self.regs.get(&site.to_ascii_lowercase())
+    }
+
     /// Broad discovery: match registrations' summary attributes against
     /// an LDAP filter (each registration is viewed as one entry).
     pub fn discover(&self, filter: &Filter) -> Vec<&Registration> {

@@ -183,6 +183,17 @@ impl HierarchicalDirectory {
         Some((r.cached(), r.age(self.giis.now())))
     }
 
+    /// Degrade-chain accessor (ISSUE 7): `site`'s snapshot **even if
+    /// the registration expired** — the stale-snapshot fallback a
+    /// resilient broker consults when the live index answers nothing.
+    /// `None` only when the site never registered at all. Normal broad
+    /// discovery never serves expired state; callers opting into this
+    /// accept arbitrarily old data over no data.
+    pub fn cached_any(&self, site: &str) -> Option<(&[Entry], f64)> {
+        let r = self.giis.lookup_any(site)?;
+        Some((r.cached(), r.age(self.giis.now())))
+    }
+
     /// Broad discovery over registration summaries (no GRIS touched):
     /// live registered site names matching `filter`, with ages.
     pub fn discover(&mut self, filter: &Filter) -> Vec<(String, f64)> {
@@ -288,6 +299,22 @@ mod tests {
         h.refresh_site("mcs");
         let (_, age) = h.cached("mcs").unwrap();
         assert_eq!(age, 0.0, "refresh restamps at the current instant");
+    }
+
+    #[test]
+    fn cached_any_serves_expired_snapshots_with_their_true_age() {
+        let v = Arc::new(RwLock::new(7.0));
+        let (gris, _) = counting_site("mcs", v);
+        let mut h = HierarchicalDirectory::new(60.0);
+        h.add_site("mcs", gris);
+        assert!(h.cached_any("mcs").is_none(), "never registered → nothing");
+        h.refresh_site("mcs");
+        h.advance_to(200.0);
+        assert!(h.cached("mcs").is_none(), "expired for the normal path");
+        let (entries, age) = h.cached_any("mcs").expect("degrade path still answers");
+        assert_eq!(age, 200.0);
+        let space = entries.iter().find_map(|e| e.f64("availableSpace")).unwrap();
+        assert_eq!(space, 7.0, "the pre-expiry snapshot survives");
     }
 
     #[test]

@@ -175,6 +175,14 @@ impl SimGrid {
     /// query needs; publishing the whole grid per query event would be
     /// O(sites × queries) at scale.
     pub fn publish_site(&self, i: usize) {
+        // A down site's GRIS cannot answer its providers: the last
+        // snapshot published before the outage persists and goes stale,
+        // exactly what a real client staring at a dead MDS entry sees.
+        // Liveness-filtered refresh paths (the open-loop soft-state
+        // tick) skip the site entirely, so its registration ages out.
+        if !self.topo.site_alive(i) {
+            return;
+        }
         let mut d = self.dynamics[i].write().unwrap();
         d.available_space = self.topo.site(i).available_space();
         d.load = self.topo.site(i).load();
@@ -209,7 +217,7 @@ impl SimGrid {
         drill_down: usize,
     ) -> Broker {
         self.broker(policy)
-            .with_discovery(HierDiscovery { dir, drill_down })
+            .with_discovery(HierDiscovery { dir, drill_down, degrade: false })
     }
 
     /// Warm per-site histories with `n` probe transfers each.

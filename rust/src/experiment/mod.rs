@@ -29,18 +29,25 @@
 //! [`run_scale`] sweeps the discovery layer itself: site count ×
 //! soft-state staleness, GIIS-routed vs always-fresh direct selection,
 //! reporting the quality degradation and the query economy (ISSUE 5).
+//!
+//! [`run_chaos`] is the robustness counterpart (ISSUE 7): seeded grid
+//! weather ([`crate::simnet::WeatherPlan`]) × recovery policy
+//! (fail-fast / retry / retry+failover) on identically seeded grids,
+//! reporting completion rate, time-to-recover, p95 and goodput.
 
+pub mod chaos;
 pub mod churn;
 pub mod grid;
 pub mod open_loop;
 pub mod quality;
 pub mod scale;
 
+pub use chaos::{run_chaos, ChaosArm, ChaosOptions, ChaosPoint, ChaosReport};
 pub use churn::{run_churn, run_churn_traced, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
 pub use open_loop::{
     run_contention, run_quality_open, AccessMode, ContentionPoint, ContentionReport,
-    DiscoveryOptions, OpenLoopOptions, OpenReport, RequestTrace,
+    DiscoveryOptions, OpenLoopOptions, OpenReport, RequestTrace, RetryOptions,
 };
 pub use quality::{
     run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,

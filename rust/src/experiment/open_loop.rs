@@ -23,6 +23,16 @@
 //! construction, mixed-age** GRIS data, exactly as a real MDS client
 //! would see it.
 //!
+//! With [`OpenLoopOptions::retry`] set (ISSUE 7), the driver survives
+//! grid weather ([`OpenLoopOptions::faults`]): a per-flow progress
+//! check detects transfers starved by a mid-flight crash or link flap,
+//! cancels them, backs off exponentially (deterministic jitter), and
+//! re-issues from the delivered byte offset — against the best
+//! surviving replica when `failover` is on — under a bounded attempt
+//! budget whose exhaustion is an explicit `gave_up` outcome. See
+//! [`super::chaos::run_chaos`] for the fault-intensity × policy sweep
+//! built on it.
+//!
 //! [`run_contention`] is the load sweep the paper's thesis wants:
 //! arrival rate from idle to saturation, informed (Forecast) vs
 //! uninformed (Random) selection on identical traces, reporting
@@ -40,8 +50,11 @@ use crate::directory::entry::Entry;
 use crate::directory::fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryIds};
 use crate::directory::hier::HierarchicalDirectory;
 use crate::gridftp::OpenFetch;
-use crate::simnet::{Engine, FlowSet, Request, Signal, Workload, WorkloadSpec};
-use crate::trace::{Ev, SiteId, TraceHandle, SAMPLE_REQ};
+use crate::simnet::{
+    Engine, Fault, FaultKind, FlowSet, Request, Signal, WeatherPlan, Workload, WorkloadSpec,
+};
+use crate::trace::{Ev, SiteId, TraceHandle, KERNEL_REQ, SAMPLE_REQ};
+use crate::util::prng::Rng;
 
 use super::grid::SimGrid;
 use super::quality::{
@@ -54,6 +67,10 @@ const GRIS_TICK_ID: u64 = u64::MAX;
 const REG_TICK_ID: u64 = u64::MAX - 1;
 /// Timer id of the flight recorder's time-series sampler.
 const SAMPLE_TICK_ID: u64 = u64::MAX - 2;
+/// First id of the per-transfer retry/timeout timer range; the driver
+/// allocates downward from here, so retry timers can never collide
+/// with the reserved recurring ticks above.
+const RETRY_TIMER_BASE: u64 = u64::MAX - 3;
 
 /// How the open-loop driver executes an admitted request's Access
 /// phase.
@@ -109,6 +126,59 @@ impl Default for DiscoveryOptions {
     }
 }
 
+/// End-to-end transfer resilience (ISSUE 7): how the open-loop driver
+/// reacts when an in-flight flow stops making progress — its source
+/// crashed mid-transfer, or a link flap starved it. The driver arms a
+/// progress-check timer per flow; a check that finds no new bytes (or
+/// a dead source) cancels the flow, backs off exponentially with
+/// deterministic jitter, re-selects among *surviving* replicas
+/// (failover) or re-tries the original source (pinned), and resumes
+/// from the delivered byte offset via
+/// [`crate::gridftp::GridFtp::fetch_begin_range`]. A bounded attempt
+/// budget turns the worst case into an explicit `gave_up` outcome
+/// instead of an unbounded stall.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryOptions {
+    /// Progress-check period (s): a flow that delivered no new bytes
+    /// over one whole period is declared stalled and cancelled.
+    pub transfer_timeout: f64,
+    /// Total attempt budget per request (1 = fail fast: the initial
+    /// attempt only, no retry).
+    pub max_attempts: u32,
+    /// Backoff before attempt `n+1` is
+    /// `min(backoff_base · backoff_factor^(n−1), backoff_max)`,
+    /// jittered by ±`jitter_frac` (deterministic, seeded).
+    pub backoff_base: f64,
+    pub backoff_factor: f64,
+    pub backoff_max: f64,
+    pub jitter_frac: f64,
+    /// Re-select among surviving replicas (`true`) or pin every retry
+    /// to the originally chosen source (`false`).
+    pub failover: bool,
+}
+
+impl Default for RetryOptions {
+    fn default() -> Self {
+        RetryOptions {
+            transfer_timeout: 60.0,
+            max_attempts: 4,
+            backoff_base: 2.0,
+            backoff_factor: 2.0,
+            backoff_max: 60.0,
+            jitter_frac: 0.2,
+            failover: true,
+        }
+    }
+}
+
+impl RetryOptions {
+    /// Retry with backoff but never switch sources — the middle arm of
+    /// the chaos experiment's policy comparison.
+    pub fn pinned() -> RetryOptions {
+        RetryOptions { failover: false, ..RetryOptions::default() }
+    }
+}
+
 /// Configuration of one open-loop run.
 #[derive(Debug, Clone)]
 pub struct OpenLoopOptions {
@@ -139,6 +209,18 @@ pub struct OpenLoopOptions {
     /// flows, gate depth, GIIS liveness, per-link utilization).
     /// `f64::INFINITY` (default) = no sampling; requires `trace`.
     pub sample_period: f64,
+    /// Transfer resilience ([`RetryOptions`]). `None` (the default,
+    /// and the parity-anchored legacy behaviour): a dead source at
+    /// admission is skipped and a mid-flight death stalls until
+    /// wind-down.
+    pub retry: Option<RetryOptions>,
+    /// Grid weather: a fault schedule with *relative* instants
+    /// (t = 0 is the post-warm clock origin), applied onto the
+    /// topology at the start of the run — typically
+    /// [`crate::simnet::WeatherPlan::generate`]'s output. Empty
+    /// (the default) leaves the run bit-identical to pre-weather
+    /// builds.
+    pub faults: Vec<Fault>,
 }
 
 impl OpenLoopOptions {
@@ -152,6 +234,8 @@ impl OpenLoopOptions {
             discovery: None,
             trace: TraceHandle::disabled(),
             sample_period: f64::INFINITY,
+            retry: None,
+            faults: Vec::new(),
         }
     }
 
@@ -185,6 +269,13 @@ pub struct RequestTrace {
     pub oracle_best: f64,
     /// Whether the policy picked the oracle-best replica.
     pub hit_optimal: bool,
+    /// Transfer attempts beyond the first (0 = clean first try).
+    pub retries: u32,
+    /// Instant the request first lost its transfer (stall detected or
+    /// dead source), if it ever did — `finished_at − first_failure_at`
+    /// is the request's time-to-recover, the chaos experiment's MTTR
+    /// numerator.
+    pub first_failure_at: Option<f64>,
 }
 
 /// Aggregate + per-request outcome of one open-loop run.
@@ -212,6 +303,17 @@ pub struct OpenReport {
     /// Discovery-mode query accounting (broad lookups, drill-downs,
     /// refreshes); `None` on the legacy fresh-data path.
     pub discovery: Option<crate::directory::hier::DiscoveryStats>,
+    /// Re-issued transfer attempts across the run (0 without
+    /// [`OpenLoopOptions::retry`]).
+    pub retries: usize,
+    /// Retries that switched to a different source than the one that
+    /// failed (⊆ `retries`).
+    pub failovers: usize,
+    /// Requests that exhausted their attempt budget. Disjoint from
+    /// `skipped`: a gave-up request *tried* — its death is visible in
+    /// the trace as `transfer_retry` events ending in a `gave_up`
+    /// skip record.
+    pub gave_up: usize,
 }
 
 struct InFlight {
@@ -219,6 +321,46 @@ struct InFlight {
     open: OpenFetch,
     oracle_best: f64,
     hit_optimal: bool,
+    /// 1-based attempt number of this flow.
+    attempt: u32,
+    /// The request's original admission instant (survives retries;
+    /// `open.started_at` restarts on every attempt).
+    admitted_at: f64,
+    first_failure_at: Option<f64>,
+    /// Retries consumed so far by this request.
+    retries: u32,
+    /// Delivered bytes observed by the last progress check.
+    last_delivered: f64,
+}
+
+/// What a driver-owned kernel timer means when it fires.
+enum TimerKind {
+    /// Per-flow progress check ([`RetryOptions::transfer_timeout`]).
+    Timeout { flow: usize },
+    /// A backed-off request's re-issue instant.
+    Resume(PendingRetry),
+}
+
+/// A request between attempts: its flow was cancelled (stall, dead
+/// source, or a failed re-issue) and it sits out its backoff before
+/// re-selecting. It still holds its admission slot — the request is in
+/// service, just not on the wire.
+struct PendingRetry {
+    request: usize,
+    /// Attempts consumed so far.
+    attempt: u32,
+    /// Absolute byte offset already delivered (resume point).
+    offset: f64,
+    /// Bytes still owed.
+    remaining: f64,
+    /// Source of the failed attempt (the pinned policy's only
+    /// candidate; failover avoids counting a re-pick of it).
+    last_site: usize,
+    oracle_best: f64,
+    hit_optimal: bool,
+    admitted_at: f64,
+    first_failure_at: f64,
+    retries: u32,
 }
 
 /// One admitted request whose discovery fan-out is still in flight:
@@ -260,10 +402,25 @@ struct Driver<'a> {
     qid_map: BTreeMap<u64, u64>,
     /// Request id → its in-flight discovery.
     pending_disc: BTreeMap<u64, PendingDiscovery>,
+    /// Live driver-owned timers (progress checks, backoff resumes),
+    /// keyed by kernel timer id. Stale ids (flow already completed)
+    /// fire harmlessly and are dropped.
+    timers: BTreeMap<u64, TimerKind>,
+    /// Next retry-range timer id (allocated downward from
+    /// [`RETRY_TIMER_BASE`]; never reused within a run).
+    next_timer: u64,
+    /// How many [`TimerKind::Resume`] entries are pending — requests
+    /// holding admission slots while backing off.
+    retry_waiting: usize,
+    /// Deterministic jitter stream for backoff delays.
+    retry_rng: Rng,
     finished: Vec<RequestTrace>,
     peak_in_flight: usize,
     overlapped_admissions: usize,
     skipped: usize,
+    retries: usize,
+    failovers: usize,
+    gave_up: usize,
     /// Post-warm clock origin; arrival instants are `t0 + req.at`
     /// (the flight recorder derives gate wait times from it).
     t0: f64,
@@ -271,10 +428,19 @@ struct Driver<'a> {
 
 impl Driver<'_> {
     /// Requests currently holding an admission slot: in-flight
-    /// transfers plus in-flight discoveries (a request occupies its
-    /// slot from admission through its last byte).
+    /// transfers, in-flight discoveries, and backed-off retries (a
+    /// request occupies its slot from admission through its last byte
+    /// or its give-up).
     fn occupancy(&self) -> usize {
-        self.inflight.len() + self.pending_disc.len()
+        self.inflight.len() + self.pending_disc.len() + self.retry_waiting
+    }
+
+    /// Allocate a fresh driver timer id (downward from
+    /// [`RETRY_TIMER_BASE`]).
+    fn alloc_timer(&mut self) -> u64 {
+        let id = self.next_timer;
+        self.next_timer -= 1;
+        id
     }
 
     /// Admit one request *now*: republish dynamics, then either select
@@ -568,6 +734,8 @@ impl Driver<'_> {
                     bandwidth: out.bandwidth,
                     oracle_best: pick.best_oracle,
                     hit_optimal: pick.pick_site == pick.best_site,
+                    retries: 0,
+                    first_failure_at: None,
                 });
             }
             AccessMode::Flow => {
@@ -600,27 +768,223 @@ impl Driver<'_> {
                                 );
                             });
                         }
+                        let now = self.grid.topo.now;
+                        let flow = open.flow;
                         self.inflight.insert(
-                            open.flow,
+                            flow,
                             InFlight {
                                 request: id as usize,
                                 open,
                                 oracle_best: pick.best_oracle,
                                 hit_optimal: pick.pick_site == pick.best_site,
+                                attempt: 1,
+                                admitted_at: now,
+                                first_failure_at: None,
+                                retries: 0,
+                                last_delivered: 0.0,
                             },
                         );
                         self.peak_in_flight = self.peak_in_flight.max(self.inflight.len());
+                        if let Some(r) = self.opts.retry {
+                            let tid = self.alloc_timer();
+                            self.timers.insert(tid, TimerKind::Timeout { flow });
+                            eng.schedule_tick(now + r.transfer_timeout, tid);
+                        }
                     }
                     Err(_) => {
-                        self.opts.trace.rec(
-                            self.grid.topo.now,
-                            id,
-                            Ev::RequestSkipped { reason: "dead_source" },
-                        );
-                        self.skipped += 1
+                        if self.opts.retry.is_some() {
+                            // A source that died between selection and
+                            // the control channel's open is the first
+                            // failed attempt, not a silent skip.
+                            let now = self.grid.topo.now;
+                            self.schedule_retry(
+                                eng,
+                                PendingRetry {
+                                    request: id as usize,
+                                    attempt: 1,
+                                    offset: 0.0,
+                                    remaining: size,
+                                    last_site: pick.pick_site,
+                                    oracle_best: pick.best_oracle,
+                                    hit_optimal: pick.pick_site == pick.best_site,
+                                    admitted_at: now,
+                                    first_failure_at: now,
+                                    retries: 0,
+                                },
+                                now,
+                            );
+                        } else {
+                            self.opts.trace.rec(
+                                self.grid.topo.now,
+                                id,
+                                Ev::RequestSkipped { reason: "dead_source" },
+                            );
+                            self.skipped += 1
+                        }
                     }
                 }
             }
+        }
+    }
+
+    /// A driver timer fired: a per-flow progress check or a backed-off
+    /// request's resume instant. Unknown ids (a check armed for a flow
+    /// that since completed) are stale and ignored — flow ids are
+    /// never reused, so staleness is unambiguous.
+    fn on_timer(&mut self, eng: &mut Engine, tid: u64, at: f64) {
+        match self.timers.remove(&tid) {
+            Some(TimerKind::Timeout { flow }) => self.check_timeout(eng, flow, at),
+            Some(TimerKind::Resume(pr)) => {
+                self.retry_waiting -= 1;
+                self.resume(eng, pr, at);
+            }
+            None => {}
+        }
+    }
+
+    /// Progress check on one in-flight flow: new bytes since the last
+    /// check and a live source re-arm the timer; a stalled or dead
+    /// flow is cancelled and its request enters backoff, owing only
+    /// the bytes not yet delivered.
+    fn check_timeout(&mut self, eng: &mut Engine, flow: usize, at: f64) {
+        let r = self.opts.retry.expect("progress timers exist only with retry configured");
+        let Some(fi) = self.inflight.get(&flow) else {
+            return; // completed before the check fired
+        };
+        let (site, seen) = (fi.open.site, fi.last_delivered);
+        let delivered = eng.flows.flow(flow).delivered;
+        if self.grid.topo.site_alive(site) && delivered > seen + 1e-9 {
+            let tid = self.alloc_timer();
+            self.timers.insert(tid, TimerKind::Timeout { flow });
+            eng.schedule_tick(at + r.transfer_timeout, tid);
+            if let Some(fi) = self.inflight.get_mut(&flow) {
+                fi.last_delivered = delivered;
+            }
+            return;
+        }
+        let fi = self.inflight.remove(&flow).expect("checked above");
+        eng.flows.cancel(flow);
+        self.grid.topo.end_transfer(fi.open.site);
+        let delivered = delivered.clamp(0.0, fi.open.bytes);
+        self.schedule_retry(
+            eng,
+            PendingRetry {
+                request: fi.request,
+                attempt: fi.attempt,
+                offset: fi.open.offset + delivered,
+                remaining: fi.open.bytes - delivered,
+                last_site: fi.open.site,
+                oracle_best: fi.oracle_best,
+                hit_optimal: fi.hit_optimal,
+                admitted_at: fi.admitted_at,
+                first_failure_at: fi.first_failure_at.unwrap_or(at),
+                retries: fi.retries,
+            },
+            at,
+        );
+    }
+
+    /// A failed attempt: either give up (budget exhausted) or park the
+    /// request for its exponential-backoff delay, jittered from the
+    /// seeded retry stream so two identically seeded runs back off
+    /// identically.
+    fn schedule_retry(&mut self, eng: &mut Engine, pr: PendingRetry, at: f64) {
+        let r = self.opts.retry.expect("retry configured");
+        if pr.attempt >= r.max_attempts {
+            self.opts.trace.rec(at, pr.request as u64, Ev::RequestSkipped { reason: "gave_up" });
+            self.gave_up += 1;
+            return;
+        }
+        let exp = r.backoff_base * r.backoff_factor.powi(pr.attempt.saturating_sub(1) as i32);
+        let jitter = 1.0 + r.jitter_frac * self.retry_rng.range(-1.0, 1.0);
+        let delay = (exp.min(r.backoff_max) * jitter).max(1e-3);
+        let tid = self.alloc_timer();
+        self.timers.insert(tid, TimerKind::Resume(pr));
+        self.retry_waiting += 1;
+        eng.schedule_tick(at + delay, tid);
+    }
+
+    /// A backed-off request's re-issue: pick the best surviving
+    /// replica (or the pinned original source), resume from the
+    /// delivered byte offset, and re-arm the progress check. No
+    /// survivor, or an open that fails under our feet, burns the
+    /// attempt and backs off again.
+    fn resume(&mut self, eng: &mut Engine, mut pr: PendingRetry, at: f64) {
+        let r = self.opts.retry.expect("retry configured");
+        let req = &self.requests[pr.request];
+        let mut best: Option<(usize, f64)> = None;
+        for &s in &self.grid.placement[req.file] {
+            if !r.failover && s != pr.last_site {
+                continue;
+            }
+            if !self.grid.topo.site_alive(s) {
+                continue;
+            }
+            let (d, _) = self.grid.topo.probe_transfer(s, pr.remaining, 0);
+            let better = match best {
+                Some((_, bd)) => d < bd,
+                None => true,
+            };
+            if d.is_finite() && better {
+                best = Some((s, d));
+            }
+        }
+        pr.attempt += 1;
+        let Some((site, _)) = best else {
+            // Nobody can serve it right now (every replica down, or
+            // the pinned source still dead): burn the attempt.
+            self.schedule_retry(eng, pr, at);
+            return;
+        };
+        let group = self.groups[req.client % self.groups.len()];
+        match self.grid.ftp.fetch_begin_range(
+            eng,
+            &mut self.grid.topo,
+            site,
+            "client",
+            pr.offset,
+            pr.remaining,
+            group,
+        ) {
+            Ok(open) => {
+                if self.opts.trace.on() {
+                    let name = self.grid.topo.site(site).cfg.name.clone();
+                    let id = pr.request as u64;
+                    let attempt = pr.attempt;
+                    let offset = pr.offset as u64;
+                    let flow = open.flow as u64;
+                    let bytes = pr.remaining as u64;
+                    self.opts.trace.with(|r| {
+                        let s = r.intern(&name);
+                        r.push(at, id, Ev::TransferRetry { site: s, attempt, offset });
+                        r.push(at, id, Ev::FlowStart { site: s, flow, bytes });
+                    });
+                }
+                self.retries += 1;
+                if site != pr.last_site {
+                    self.failovers += 1;
+                }
+                let flow = open.flow;
+                self.inflight.insert(
+                    flow,
+                    InFlight {
+                        request: pr.request,
+                        open,
+                        oracle_best: pr.oracle_best,
+                        hit_optimal: pr.hit_optimal,
+                        attempt: pr.attempt,
+                        admitted_at: pr.admitted_at,
+                        first_failure_at: Some(pr.first_failure_at),
+                        retries: pr.retries + 1,
+                        last_delivered: 0.0,
+                    },
+                );
+                self.peak_in_flight = self.peak_in_flight.max(self.inflight.len());
+                let tid = self.alloc_timer();
+                self.timers.insert(tid, TimerKind::Timeout { flow });
+                eng.schedule_tick(at + r.transfer_timeout, tid);
+            }
+            Err(_) => self.schedule_retry(eng, pr, at),
         }
     }
 
@@ -645,15 +1009,28 @@ impl Driver<'_> {
                 r.push(at, req, Ev::RequestDone { transfer_s: dur });
             });
         }
+        // A retried request's duration spans admission → last byte
+        // (backoffs included) and its bandwidth covers every byte of
+        // the file across all attempts; a clean first try keeps the
+        // instrumentation's own arithmetic bit-for-bit (the parity
+        // anchor).
+        let (duration, bandwidth) = if fi.retries == 0 {
+            (out.duration, out.bandwidth)
+        } else {
+            let d = (c.at - fi.admitted_at).max(1e-9);
+            (d, (fi.open.offset + fi.open.bytes) / d)
+        };
         self.finished.push(RequestTrace {
             request: fi.request,
             site: fi.open.site,
-            admitted_at: fi.open.started_at,
+            admitted_at: fi.admitted_at,
             finished_at: c.at,
-            duration: out.duration,
-            bandwidth: out.bandwidth,
+            duration,
+            bandwidth,
             oracle_best: fi.oracle_best,
             hit_optimal: fi.hit_optimal,
+            retries: fi.retries,
+            first_failure_at: fi.first_failure_at,
         });
     }
 
@@ -741,6 +1118,31 @@ pub fn run_quality_open(
     for (i, r) in requests.iter().enumerate() {
         eng.schedule_arrival(t0 + r.at, i as u64);
     }
+    // Grid weather: the fault schedule's relative instants land on the
+    // post-warm clock — identical `opts.faults` on identically seeded
+    // grids means identical weather, the chaos experiment's control.
+    if !opts.faults.is_empty() {
+        WeatherPlan { faults: opts.faults.clone() }.apply(&mut grid.topo, t0);
+    }
+    // Flight-recorder view of the weather: every trigger and heal
+    // boundary, in chronological order, emitted as kernel-track events
+    // as the run's clock passes them.
+    let mut weather: Vec<(f64, usize, Option<(f64, f64)>)> = Vec::new();
+    if opts.trace.on() {
+        for f in grid.topo.faults() {
+            let degrade = match f.kind {
+                FaultKind::ReplicaDeath => 0.0,
+                FaultKind::LinkDegrade { factor } => factor,
+            };
+            let heal_s = if f.heal_at.is_finite() { f.heal_at } else { -1.0 };
+            weather.push((f.at, f.site, Some((degrade, heal_s))));
+            if f.heal_at.is_finite() {
+                weather.push((f.heal_at, f.site, None));
+            }
+        }
+        weather.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    }
+    let mut wx = 0usize;
     if opts.gris_refresh.is_finite() && opts.gris_refresh > 0.0 {
         eng.schedule_tick(t0 + opts.gris_refresh, GRIS_TICK_ID);
     }
@@ -770,10 +1172,17 @@ pub fn run_quality_open(
         qids: QueryIds::new(),
         qid_map: BTreeMap::new(),
         pending_disc: BTreeMap::new(),
+        timers: BTreeMap::new(),
+        next_timer: RETRY_TIMER_BASE,
+        retry_waiting: 0,
+        retry_rng: Rng::new(cfg.seed ^ 0x5245_5452_5921), // "RETRY!"
         finished: Vec::new(),
         peak_in_flight: 0,
         overlapped_admissions: 0,
         skipped: 0,
+        retries: 0,
+        failovers: 0,
+        gave_up: 0,
         t0,
     };
 
@@ -782,12 +1191,32 @@ pub fn run_quality_open(
     // a finite refresh period) terminates instead of spinning.
     let max_events = 1_000_000 + 100 * requests.len();
     let mut events = 0usize;
-    while driver.finished.len() + driver.skipped < requests.len() {
+    while driver.finished.len() + driver.skipped + driver.gave_up < requests.len() {
         events += 1;
         if events > max_events {
             break;
         }
-        match eng.next(&mut driver.grid.topo) {
+        let signal = eng.next(&mut driver.grid.topo);
+        // Narrate the weather boundaries the clock just passed (the
+        // kernel advanced `topo.now` to this signal's instant).
+        if signal.is_some() && wx < weather.len() {
+            let now = driver.grid.topo.now;
+            while wx < weather.len() && weather[wx].0 <= now + 1e-12 {
+                let (t, site, mark) = weather[wx];
+                let name = driver.grid.topo.site(site).cfg.name.clone();
+                driver.opts.trace.with(|r| {
+                    let s = r.intern(&name);
+                    match mark {
+                        Some((degrade, heal_s)) => {
+                            r.push(t, KERNEL_REQ, Ev::SiteFault { site: s, degrade, heal_s })
+                        }
+                        None => r.push(t, KERNEL_REQ, Ev::SiteHeal { site: s }),
+                    }
+                });
+                wx += 1;
+            }
+        }
+        match signal {
             Some(Signal::Arrival { id, at }) => {
                 driver.opts.trace.rec(at, id, Ev::Arrival);
                 if driver.occupancy() < driver.opts.max_in_flight {
@@ -806,13 +1235,21 @@ pub fn run_quality_open(
             Some(Signal::FlowDone(c)) => driver.complete(&c),
             Some(Signal::Query { id, at }) => driver.on_query(&mut eng, id, at),
             Some(Signal::Tick { id: REG_TICK_ID, .. }) => {
-                // Soft-state push: every site re-registers its current
-                // snapshot (registration churn the TTL feeds on).
+                // Soft-state push: every *live* site re-registers its
+                // current snapshot. A down site cannot push, so its
+                // registration ages toward the TTL — and on the first
+                // tick after its heal it re-registers by itself, with
+                // no special recovery path (ISSUE 7).
                 driver.grid.publish_dynamics();
                 if let (Some(h), Some(d)) = (&driver.hier, &driver.opts.discovery) {
                     let mut dir = h.write().unwrap();
                     dir.advance_to(driver.grid.topo.now);
-                    dir.refresh_all();
+                    for i in 0..driver.grid.topo.len() {
+                        if driver.grid.topo.site_alive(i) {
+                            let name = driver.grid.topo.site(i).cfg.name.clone();
+                            dir.refresh_site(&name);
+                        }
+                    }
                     eng.schedule_tick(driver.grid.topo.now + d.refresh_period, REG_TICK_ID);
                 }
             }
@@ -820,11 +1257,12 @@ pub fn run_quality_open(
                 driver.sample(&eng);
                 eng.schedule_tick(driver.grid.topo.now + opts.sample_period, SAMPLE_TICK_ID);
             }
-            Some(Signal::Tick { .. }) => {
+            Some(Signal::Tick { id: GRIS_TICK_ID, .. }) => {
                 driver.grid.publish_dynamics();
                 let next = driver.grid.topo.now + driver.opts.gris_refresh;
                 eng.schedule_tick(next, GRIS_TICK_ID);
             }
+            Some(Signal::Tick { id, at }) => driver.on_timer(&mut eng, id, at),
             // Stalled in-flight transfers with nothing scheduled:
             // whatever completed is the result.
             None => break,
@@ -861,6 +1299,19 @@ pub fn run_quality_open(
         }
     }
     driver.skipped += driver.pending_disc.len() + driver.waiting.len();
+    // Requests still sitting out a backoff when the run wound down
+    // (e.g. a blown event budget): surface them as skipped too.
+    for (_, k) in std::mem::take(&mut driver.timers) {
+        if let TimerKind::Resume(pr) = k {
+            driver.opts.trace.rec(
+                wind_down_at,
+                pr.request as u64,
+                Ev::RequestSkipped { reason: "wind_down" },
+            );
+            driver.skipped += 1;
+        }
+    }
+    driver.retry_waiting = 0;
 
     let mut durations = Vec::with_capacity(driver.finished.len());
     let mut bandwidths = Vec::with_capacity(driver.finished.len());
@@ -898,6 +1349,9 @@ pub fn run_quality_open(
         skipped: driver.skipped,
         per_request: driver.finished,
         discovery: discovery_stats,
+        retries: driver.retries,
+        failovers: driver.failovers,
+        gave_up: driver.gave_up,
     }
 }
 
@@ -1182,6 +1636,192 @@ mod tests {
         assert!(
             r.skipped > 0,
             "1 s TTL with no refresh must make later requests undiscoverable"
+        );
+    }
+
+    /// One site dies mid-transfer and never heals: without retry the
+    /// request stalls to wind-down; with retry+failover it resumes on
+    /// a survivor and completes.
+    #[test]
+    fn retry_failover_recovers_a_mid_flight_death() {
+        let cfg = flat_cfg(3, 21);
+        // One ~160 s transfer; kill whichever site was picked 10 s in.
+        let spec = WorkloadSpec { files: 1, mean_interarrival: 1.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(1);
+        let run = |retry: Option<RetryOptions>| {
+            // Crash every site at t=10 for 1e9 s except one survivor:
+            // we don't know the pick a priori, so kill sites 0 and 1
+            // and replicate on all 3 — site 2 always survives.
+            let faults: Vec<Fault> = (0..2)
+                .map(|s| Fault {
+                    site: s,
+                    at: 10.0,
+                    heal_at: f64::INFINITY,
+                    kind: FaultKind::ReplicaDeath,
+                })
+                .collect();
+            let opts = OpenLoopOptions {
+                retry,
+                faults,
+                ..OpenLoopOptions::open()
+            };
+            run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None)
+        };
+        let resilient = run(Some(RetryOptions {
+            transfer_timeout: 20.0,
+            backoff_base: 1.0,
+            ..RetryOptions::default()
+        }));
+        assert_eq!(
+            resilient.quality.requests + resilient.skipped,
+            1,
+            "gave_up {}",
+            resilient.gave_up
+        );
+        if resilient.per_request.first().map(|t| t.site) != Some(2) {
+            // The pick died mid-flight: the retry machine must have
+            // failed over to the survivor and completed.
+            assert_eq!(resilient.quality.requests, 1, "retry must complete the request");
+            let t = &resilient.per_request[0];
+            assert_eq!(t.site, 2, "failover must land on the survivor");
+            assert!(t.retries >= 1);
+            assert!(t.first_failure_at.is_some());
+            assert!(resilient.failovers >= 1);
+            assert_eq!(resilient.gave_up, 0);
+        }
+    }
+
+    /// Same weather, identical seeds: fail-fast (attempt budget 1)
+    /// must not beat retry+failover on completion rate, and with every
+    /// replica of a file dead it gives up explicitly instead of
+    /// stalling silently.
+    #[test]
+    fn attempt_budget_exhaustion_is_an_explicit_gave_up() {
+        let cfg = flat_cfg(3, 22);
+        let spec = WorkloadSpec { files: 2, mean_interarrival: 5.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(4);
+        // The whole grid dies 10 s in and never heals.
+        let faults: Vec<Fault> = (0..3)
+            .map(|s| Fault {
+                site: s,
+                at: 10.0,
+                heal_at: f64::INFINITY,
+                kind: FaultKind::ReplicaDeath,
+            })
+            .collect();
+        let opts = OpenLoopOptions {
+            retry: Some(RetryOptions {
+                transfer_timeout: 15.0,
+                max_attempts: 3,
+                backoff_base: 1.0,
+                ..RetryOptions::default()
+            }),
+            faults,
+            ..OpenLoopOptions::open()
+        };
+        let r = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+        assert_eq!(
+            r.quality.requests + r.skipped + r.gave_up,
+            4,
+            "every request must be accounted for"
+        );
+        assert!(r.gave_up > 0, "a dead grid must exhaust attempt budgets");
+        assert_eq!(r.quality.requests, 0, "nothing can complete on a dead grid");
+    }
+
+    /// Retry enabled but no weather scheduled: nothing stalls, so the
+    /// progress checks never fire a retry and the run's outcome
+    /// matches the retry-free configuration exactly.
+    #[test]
+    fn retry_is_inert_without_faults() {
+        let cfg = GridConfig::generate(5, 23);
+        let spec = WorkloadSpec { files: 5, mean_interarrival: 10.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(10);
+        let base = run_quality_open(
+            &cfg,
+            &spec,
+            &reqs,
+            3,
+            2,
+            SelectorKind::Forecast,
+            &OpenLoopOptions::open(),
+            None,
+        );
+        let with_retry = run_quality_open(
+            &cfg,
+            &spec,
+            &reqs,
+            3,
+            2,
+            SelectorKind::Forecast,
+            &OpenLoopOptions { retry: Some(RetryOptions::default()), ..OpenLoopOptions::open() },
+            None,
+        );
+        assert_eq!(with_retry.retries, 0);
+        assert_eq!(with_retry.failovers, 0);
+        assert_eq!(with_retry.gave_up, 0);
+        assert_eq!(base.quality.requests, with_retry.quality.requests);
+        assert_eq!(base.skipped, with_retry.skipped);
+        // The progress-check ticks subdivide the kernel's integration
+        // intervals, so allow last-bit float drift but nothing more.
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(1.0);
+        assert!(
+            close(base.quality.mean_time, with_retry.quality.mean_time),
+            "{} vs {}",
+            base.quality.mean_time,
+            with_retry.quality.mean_time
+        );
+        assert!(close(base.makespan, with_retry.makespan));
+        assert!(close(base.quality.mean_bandwidth, with_retry.quality.mean_bandwidth));
+    }
+
+    /// A transfer interrupted mid-flight resumes from its delivered
+    /// offset: the bytes delivered across all attempts equal the file
+    /// size, not a multiple of it.
+    #[test]
+    fn resumed_transfers_do_not_refetch_delivered_bytes() {
+        let cfg = flat_cfg(2, 24);
+        let spec = WorkloadSpec { files: 1, mean_interarrival: 1.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(1);
+        // Both replicas on both sites; the whole grid crashes at 45 s
+        // (every Pareto-drawn file needs ≥ 53 s on the flat 1e6 B/s
+        // links, so the crash is always mid-flight) and heals at 65 s:
+        // the resume happens on a partially delivered file.
+        let faults: Vec<Fault> = (0..2)
+            .map(|s| Fault {
+                site: s,
+                at: 45.0,
+                heal_at: 65.0,
+                kind: FaultKind::ReplicaDeath,
+            })
+            .collect();
+        let opts = OpenLoopOptions {
+            retry: Some(RetryOptions {
+                transfer_timeout: 10.0,
+                max_attempts: 8,
+                backoff_base: 2.0,
+                backoff_max: 8.0,
+                ..RetryOptions::default()
+            }),
+            faults,
+            ..OpenLoopOptions::open()
+        };
+        let r = run_quality_open(&cfg, &spec, &reqs, 2, 2, SelectorKind::Forecast, &opts, None);
+        assert_eq!(r.quality.requests, 1, "heal at 65 s must let the transfer finish");
+        let t = &r.per_request[0];
+        assert!(t.retries >= 1, "the crash must have forced at least one retry");
+        assert_eq!(t.first_failure_at.map(|f| f > 0.0), Some(true));
+        // Resume-from-offset pays the clean transfer time plus the
+        // outage window and backoff slack (≈ +30 s); a full re-fetch
+        // would additionally repay the ≥ 45 s of pre-crash bytes
+        // (≈ +75 s). The +50 s bound separates the two.
+        let size = Workload::file_sizes(&spec, cfg.seed, 80.0)[0];
+        let clean = size / 1e6;
+        assert!(
+            t.duration < clean + 50.0,
+            "resume-from-offset must not refetch delivered bytes \
+             (took {:.0}s, clean transfer {clean:.0}s)",
+            t.duration
         );
     }
 

@@ -40,6 +40,10 @@ pub struct OpenFetch {
     pub client: String,
     pub bytes: f64,
     pub started_at: f64,
+    /// First byte of the fetched range — non-zero when a retry resumes
+    /// a cancelled fetch from its delivered offset (extended block
+    /// mode, the open-loop dual of [`GridFtp::fetch_range`]).
+    pub offset: f64,
 }
 
 /// The per-grid GridFTP fabric: one logical server per site, all
@@ -159,6 +163,26 @@ impl GridFtp {
         bytes: f64,
         group: usize,
     ) -> Result<OpenFetch> {
+        self.fetch_begin_range(eng, topo, site, client, 0.0, bytes, group)
+    }
+
+    /// [`Self::fetch_begin`] from a byte `offset`: fetch the `bytes`
+    /// starting there. The transfer-resilience path uses this to
+    /// resume a cancelled fetch from its delivered offset on another
+    /// (or the healed) replica instead of re-paying the whole file.
+    /// The range start changes nothing about link behaviour — the
+    /// stream pays the same connection/seek lead — but the outcome and
+    /// instrumentation carry the true range length.
+    pub fn fetch_begin_range(
+        &self,
+        eng: &mut Engine,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        offset: f64,
+        bytes: f64,
+        group: usize,
+    ) -> Result<OpenFetch> {
         if !topo.site_alive(site) {
             bail!(
                 "source {} is unreachable (control channel down)",
@@ -179,6 +203,7 @@ impl GridFtp {
             client: client.to_string(),
             bytes,
             started_at: topo.now,
+            offset,
         })
     }
 
@@ -204,7 +229,7 @@ impl GridFtp {
             duration,
             bandwidth: open.bytes / duration,
             started_at: open.started_at,
-            offset: 0.0,
+            offset: open.offset,
         }
     }
 
@@ -423,6 +448,29 @@ mod tests {
         let h = h.read().unwrap();
         assert_eq!(h.rd.count, 1);
         assert_eq!(h.source("client").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn open_range_fetch_carries_its_offset_and_records_the_range() {
+        use crate::simnet::{Engine, FlowSet, Signal};
+        let (mut topo, ftp) = setup();
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let open = ftp
+            .fetch_begin_range(&mut eng, &mut topo, 2, "client", 3e6, 5e6, 0)
+            .unwrap();
+        assert_eq!(open.offset, 3e6);
+        match eng.next(&mut topo) {
+            Some(Signal::FlowDone(c)) => {
+                let out = ftp.fetch_finish(&mut topo, &open, c.at);
+                assert_eq!(out.offset, 3e6);
+                assert_eq!(out.bytes, 5e6);
+            }
+            other => panic!("expected FlowDone, got {other:?}"),
+        }
+        // The record carries the range length like any whole file.
+        let h = ftp.history(2);
+        let h = h.read().unwrap();
+        assert_eq!(h.rd.count, 1);
     }
 
     #[test]

@@ -34,6 +34,14 @@
 //!   kernel (`simnet::engine`) under which many transfers are in flight
 //!   at once, sharing site links and per-client downlinks — the
 //!   contention regime the paper's dynamic-information thesis targets.
+//!   Its failure model is **grid weather** (`simnet::weather`): seeded
+//!   crash/recover and link-degrade/restore schedules over explicit
+//!   `[at, heal_at)` intervals, against which every request path —
+//!   transfers (timeout, exponential backoff, failover, byte-offset
+//!   resume), directory fan-out (bounded query retry), broker discovery
+//!   (live GIIS → stale snapshot → direct GRIS → blind degrade chain)
+//!   and co-allocated streams (crash-then-recover revival) — carries
+//!   end-to-end retry and failover, swept by `experiment::run_chaos`.
 //! * [`forecast`] — NWS-style bandwidth predictor bank (pure Rust reference
 //!   implementation).
 //! * [`runtime`] — PJRT engine that loads the AOT-compiled JAX/Pallas

@@ -11,6 +11,10 @@
 //! * `simulate` — pointer to the end-to-end workload simulation
 //!   (`examples/datagrid_sim`); with `--trace`, runs a flight-recorded
 //!   open-loop scenario here and writes `TRACE_*.json` artifacts.
+//! * `chaos`    — grid-weather sweep (ISSUE 7): replays one seeded
+//!   request trace under seeded crash/flap schedules, once per recovery
+//!   policy (fail-fast / retry / retry+failover), and reports the
+//!   completion-rate gap. Fully deterministic: same flags, same output.
 //! * `trace-summary` — critical-path analysis of an exported trace
 //!   (per-phase p50/p95 breakdown, report parity, slowest requests).
 //!
@@ -26,9 +30,11 @@ use globus_replica::config::GridConfig;
 use globus_replica::directory::schema;
 use globus_replica::directory::server::DirectoryServer;
 use globus_replica::directory::{Entry, Giis, Gris};
-use globus_replica::experiment::{run_quality_open, OpenLoopOptions};
+use globus_replica::experiment::{
+    run_chaos, run_quality_open, ChaosArm, ChaosOptions, OpenLoopOptions, RetryOptions,
+};
 use globus_replica::metrics::Metrics;
-use globus_replica::simnet::{Workload, WorkloadSpec};
+use globus_replica::simnet::{WeatherSpec, Workload, WorkloadSpec};
 use globus_replica::trace::{load_trace, summarize, TraceHandle, TraceSummary};
 use globus_replica::util::cli::Args;
 use globus_replica::util::units::Bytes;
@@ -47,6 +53,12 @@ commands:
                                  workload simulation; --trace runs a
                                  flight-recorded open-loop and writes
                                  TRACE_NAME.json + TRACE_NAME.jsonl
+  chaos    [--sites N] [--requests R] [--seed K] [--weather-seed W]
+           [--weather calm|breeze|storm|hurricane|all] [--out FILE]
+                                 fault-intensity x recovery-policy sweep
+                                 (fail-fast / retry / retry+failover) on
+                                 identically seeded grids; --out writes
+                                 the deterministic JSON report
   trace-summary <file> [--top N] [--metrics] [--json]
                                  critical-path breakdown of a
                                  TRACE_*.json / .jsonl artifact
@@ -62,6 +74,7 @@ fn main() {
         "giis" => cmd_giis(&args),
         "select" => cmd_select(&args),
         "simulate" => cmd_simulate(&args),
+        "chaos" => cmd_chaos(&args),
         "trace-summary" => cmd_trace_summary(&args),
         _ => print!("{USAGE}"),
     }
@@ -270,6 +283,149 @@ fn cmd_simulate(args: &Args) {
             println!("inspect with `globus-replica trace-summary TRACE_{name}.json`");
         }
         Err(e) => eprintln!("could not write trace artifacts: {e:#}"),
+    }
+}
+
+/// The named weather intensities the `chaos` subcommand sweeps.
+fn weather_ladder() -> Vec<(&'static str, WeatherSpec)> {
+    vec![
+        ("calm", WeatherSpec::default()),
+        (
+            "breeze",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 600.0,
+                mttr: 60.0,
+                ..WeatherSpec::default()
+            },
+        ),
+        (
+            "storm",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 180.0,
+                mttr: 90.0,
+                perm_frac: 0.2,
+                flap_rate: 1.0 / 300.0,
+                flap_duration: 45.0,
+                flap_floor: 0.1,
+                ..WeatherSpec::default()
+            },
+        ),
+        (
+            "hurricane",
+            WeatherSpec {
+                horizon: 1200.0,
+                mtbf: 80.0,
+                mttr: 120.0,
+                perm_frac: 0.4,
+                flap_rate: 1.0 / 150.0,
+                flap_duration: 60.0,
+                flap_floor: 0.05,
+                ..WeatherSpec::default()
+            },
+        ),
+    ]
+}
+
+fn cmd_chaos(args: &Args) {
+    use std::collections::BTreeMap;
+    use globus_replica::util::json::Json;
+
+    let n = args.usize_or("sites", 8);
+    let requests = args.usize_or("requests", 20);
+    let seed = args.u64_or("seed", 42);
+    let which = args.str_or("weather", "storm");
+    let ladder = weather_ladder();
+    let weathers: Vec<(&str, WeatherSpec)> = if which == "all" {
+        ladder
+    } else {
+        match ladder.into_iter().find(|(name, _)| *name == which) {
+            Some(w) => vec![w],
+            None => {
+                eprintln!(
+                    "unknown --weather {which:?} (use calm, breeze, storm, hurricane or all)"
+                );
+                std::process::exit(2);
+            }
+        }
+    };
+    let cfg = GridConfig::generate(n, seed);
+    let spec = WorkloadSpec {
+        files: n.max(4),
+        mean_interarrival: args.f64_or("interarrival", 12.0),
+        ..Default::default()
+    };
+    let opts = ChaosOptions {
+        retry: RetryOptions {
+            transfer_timeout: args.f64_or("transfer-timeout", 30.0),
+            ..RetryOptions::default()
+        },
+        weather_seed: args.u64_or("weather-seed", 7),
+        ..ChaosOptions::default()
+    };
+    let report = run_chaos(&cfg, &spec, requests, 4, 4, &weathers, &opts);
+
+    println!(
+        "{:<11} {:>7} {:>7} | {:>9} {:>9} {:>9} | {:>8} {:>8}",
+        "weather", "crashes", "faults", "ff done", "rt done", "fo done", "fo mttr", "ff quit"
+    );
+    for p in &report.points {
+        println!(
+            "{:<11} {:>7} {:>7} | {:>8.0}% {:>8.0}% {:>8.0}% | {:>7.1}s {:>8}",
+            p.label,
+            p.crashes,
+            p.faults,
+            p.fail_fast.completion_rate * 100.0,
+            p.retry.completion_rate * 100.0,
+            p.retry_failover.completion_rate * 100.0,
+            p.retry_failover.mttr,
+            p.fail_fast.gave_up,
+        );
+    }
+
+    if args.has("out") {
+        let arm_json = |a: &ChaosArm| {
+            let mut o = BTreeMap::new();
+            o.insert("completion_rate".to_string(), Json::Num(a.completion_rate));
+            o.insert("mttr_s".to_string(), Json::Num(a.mttr));
+            o.insert("p95_time_s".to_string(), Json::Num(a.p95));
+            o.insert("goodput_bps".to_string(), Json::Num(a.goodput));
+            o.insert("retries".to_string(), Json::Num(a.retries as f64));
+            o.insert("failovers".to_string(), Json::Num(a.failovers as f64));
+            o.insert("gave_up".to_string(), Json::Num(a.gave_up as f64));
+            o.insert("skipped".to_string(), Json::Num(a.skipped as f64));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("sweep".to_string(), Json::Str("chaos".to_string()));
+        root.insert("sites".to_string(), Json::Num(n as f64));
+        root.insert("requests".to_string(), Json::Num(requests as f64));
+        root.insert("seed".to_string(), Json::Num(seed as f64));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                report
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("weather".to_string(), Json::Str(p.label.clone()));
+                        o.insert("crashes".to_string(), Json::Num(p.crashes as f64));
+                        o.insert("faults".to_string(), Json::Num(p.faults as f64));
+                        o.insert("fail_fast".to_string(), arm_json(&p.fail_fast));
+                        o.insert("retry".to_string(), arm_json(&p.retry));
+                        o.insert("retry_failover".to_string(), arm_json(&p.retry_failover));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        let path = args.str_or("out", "CHAOS_report.json");
+        match std::fs::write(&path, Json::Obj(root).to_string()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
     }
 }
 

@@ -269,10 +269,11 @@ impl FlowSet {
                     step = step.min(f.remaining / bw);
                 }
             }
-            // A scheduled fault is an event too: stop the step at its
-            // trigger instant so a dying/degrading site's flows
-            // re-sample their rate there instead of coasting on
-            // pre-fault bandwidth until the next completion boundary.
+            // A scheduled fault boundary is an event too — trigger
+            // *and* heal instants: stop the step there so a
+            // dying/degrading site's flows re-sample their rate at the
+            // exact boundary instead of coasting. No bytes delivered
+            // past a death, no free bytes before a heal.
             if let Some(at) = topo.next_fault_after(now) {
                 let until = at - now;
                 if until > 1e-9 {
@@ -494,6 +495,62 @@ mod tests {
             fs.flow(f).delivered
         );
         assert!((topo.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heal_mid_step_resumes_bytes_at_the_heal_instant() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        // The site is down over [0.5, 1.5): a 2e6-byte flow on the
+        // 1e6 B/s pipe moves 0.5e6 bytes, stalls one second, then
+        // finishes the remaining 1.5e6 — completion at exactly t=3.
+        topo.schedule_fault_for(0, 0.5, 1.0, FaultKind::ReplicaDeath);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let f = fs.add(&topo, 0, 2e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 1, "healed flow must complete");
+        assert!((done[0].at - 3.0).abs() < 1e-6, "at {}", done[0].at);
+        assert!((fs.flow(f).delivered - 2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn no_free_bytes_before_the_heal_instant() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        topo.schedule_fault_for(0, 0.5, 1.0, FaultKind::ReplicaDeath);
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let f = fs.add(&topo, 0, 2e6, 0.0);
+        // Integrate through the outage in coarse steps that straddle
+        // both boundaries; the sub-step split must pin the byte count
+        // to exactly the up-time.
+        fs.advance(&mut topo, 1.0); // t=1.0: inside the outage
+        assert!(
+            (fs.flow(f).delivered - 0.5e6).abs() < 1.0,
+            "delivered {} while the site was down",
+            fs.flow(f).delivered
+        );
+        fs.advance(&mut topo, 0.4); // t=1.4: still down
+        assert!((fs.flow(f).delivered - 0.5e6).abs() < 1.0);
+        fs.advance(&mut topo, 0.6); // t=2.0: healed at 1.5, 0.5 s of flow
+        assert!(
+            (fs.flow(f).delivered - 1.0e6).abs() < 1.0,
+            "delivered {} after the heal",
+            fs.flow(f).delivered
+        );
+    }
+
+    #[test]
+    fn flap_interval_slows_then_restores_the_rate() {
+        use crate::simnet::topology::FaultKind;
+        let mut topo = flat_topo(2);
+        // 0.5× degradation over [0.0, 1.0): a 2e6-byte flow moves
+        // 0.5e6 in the flap, then 1.5e6 at full rate → done at 2.5.
+        topo.schedule_fault_for(0, 0.0, 1.0, FaultKind::LinkDegrade { factor: 0.5 });
+        let mut fs = FlowSet::new(f64::INFINITY);
+        fs.add(&topo, 0, 2e6, 0.0);
+        let done = fs.advance(&mut topo, 10.0);
+        assert_eq!(done.len(), 1);
+        assert!((done[0].at - 2.5).abs() < 1e-6, "at {}", done[0].at);
     }
 
     #[test]

@@ -27,16 +27,51 @@
 //! simultaneously, sharing site links and per-client downlinks. The
 //! serial replay survives only as the concurrency-1 special case the
 //! parity tests pin against (`experiment::run_quality_trace`).
+//!
+//! # Failure model (ISSUE 7: grid weather)
+//!
+//! Faults are **intervals**, not one-shot events. A [`Fault`] is
+//! active over `[at, heal_at)`; `heal_at = ∞` reproduces the original
+//! permanent semantics ([`Topology::schedule_fault`]), a finite heal
+//! ([`Topology::schedule_fault_for`]) models a crash the site recovers
+//! from. Two fault kinds exist:
+//!
+//! * [`FaultKind::ReplicaDeath`] — the site's control channel is down
+//!   ([`Topology::site_alive`] is false) and its data flows deliver
+//!   zero bytes while the fault is active; at the heal instant stalled
+//!   flows resume from their delivered offset.
+//! * [`FaultKind::LinkDegrade`] — the site's WAN bandwidth is scaled
+//!   by the product of the active factors
+//!   ([`Topology::degrade_factor`]); a finite heal makes it a *flap*.
+//!
+//! [`FlowSet`] integration sub-steps split at **every** fault boundary
+//! — triggers and heals alike ([`Topology::next_fault_after`]) — so no
+//! bytes are delivered past a death and no free bytes accrue before a
+//! heal. The hot-path liveness/degradation checks read a per-site
+//! cache refreshed when the clock crosses the next boundary, not a
+//! linear scan over the fault list.
+//!
+//! [`weather`] generates seeded random fault schedules
+//! ([`weather::WeatherPlan`]): per-site crash/heal renewal processes
+//! (MTBF/MTTR, a `perm_frac` share of permanent deaths) plus link-flap
+//! episodes. The retry/backoff knobs that let the request paths ride
+//! this weather out live with their consumers:
+//! `experiment::open_loop::RetryOptions` (transfer timeout, bounded
+//! attempts, exponential backoff + deterministic jitter, failover) and
+//! `directory::fanout::FanoutPolicy::{max_retries, retry_backoff}`
+//! (information-plane query retry).
 
 pub mod engine;
 pub mod flows;
 pub mod link;
 pub mod topology;
 pub mod trace;
+pub mod weather;
 pub mod workload;
 
 pub use engine::{Engine, Signal};
 pub use flows::{Completion, Flow, FlowSet};
 pub use link::Link;
 pub use topology::{Fault, FaultKind, Site, Topology};
+pub use weather::{WeatherPlan, WeatherSpec};
 pub use workload::{Request, Workload, WorkloadSpec};

@@ -44,12 +44,55 @@ pub enum FaultKind {
 }
 
 /// A scheduled fault: `kind` strikes `site` at simulated time `at` and
-/// persists until [`Topology::clear_faults`].
+/// stays active over `[at, heal_at)`. `heal_at = ∞` is the PR-5
+/// permanent fault; a finite `heal_at` models a crash the site
+/// *recovers* from (grid weather) — at that instant the site is alive
+/// again / the degradation lifts, and stalled flows resume.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Fault {
     pub site: usize,
     pub at: f64,
+    /// Instant the fault heals; `f64::INFINITY` = never.
+    pub heal_at: f64,
     pub kind: FaultKind,
+}
+
+impl Fault {
+    /// Whether this fault is active at instant `t` (`[at, heal_at)`).
+    pub fn active_at(&self, t: f64) -> bool {
+        self.at <= t && t < self.heal_at
+    }
+}
+
+/// Per-site view of the fault set evaluated at `Topology::now`, so the
+/// hot paths (`site_alive`, `degrade_factor` — called per flow per
+/// integration sub-step) are O(1) lookups instead of linear scans over
+/// every scheduled fault. Refreshed whenever the clock crosses
+/// `next_change` (the earliest upcoming trigger or heal instant) and
+/// whenever the fault set itself changes.
+#[derive(Debug, Clone)]
+struct FaultView {
+    /// Indices into `Topology::faults`, per site, insertion order (the
+    /// degrade product is order-sensitive in principle; keeping
+    /// insertion order makes the cached product bit-identical to the
+    /// old linear scan).
+    by_site: Vec<Vec<usize>>,
+    dead: Vec<bool>,
+    degrade: Vec<f64>,
+    /// Earliest instant strictly after the evaluation time at which
+    /// any site's active set changes; `∞` when settled.
+    next_change: f64,
+}
+
+impl FaultView {
+    fn empty(n: usize) -> FaultView {
+        FaultView {
+            by_site: vec![Vec::new(); n],
+            dead: vec![false; n],
+            degrade: vec![1.0; n],
+            next_change: f64::INFINITY,
+        }
+    }
 }
 
 /// The whole simulated grid: sites + per-site client-facing links.
@@ -58,8 +101,9 @@ pub struct Topology {
     sites: Vec<Site>,
     links: Vec<Link>,
     by_name: BTreeMap<String, usize>,
-    /// Scheduled faults (unordered; each is checked against `now`).
+    /// Scheduled faults (unordered; evaluated through `fault_view`).
     faults: Vec<Fault>,
+    fault_view: FaultView,
     /// Simulated wall clock (seconds).
     pub now: f64,
 }
@@ -80,54 +124,115 @@ impl Topology {
                 active_transfers: 0,
             });
         }
-        Topology { sites, links, by_name, faults: Vec::new(), now: 0.0 }
+        Topology {
+            fault_view: FaultView::empty(sites.len()),
+            sites,
+            links,
+            by_name,
+            faults: Vec::new(),
+            now: 0.0,
+        }
     }
 
-    /// Schedule `kind` to strike `site` at simulated time `at`. Faults
-    /// persist (a dead replica stays dead) until [`Self::clear_faults`].
+    /// Schedule `kind` to strike `site` at simulated time `at`,
+    /// permanently (heals only at [`Self::clear_faults`] — the PR-5
+    /// semantics every existing caller relies on).
     pub fn schedule_fault(&mut self, site: usize, at: f64, kind: FaultKind) {
-        debug_assert!(site < self.sites.len());
-        self.faults.push(Fault { site, at, kind });
+        self.schedule(Fault { site, at, heal_at: f64::INFINITY, kind });
+    }
+
+    /// Schedule `kind` to strike `site` at `at` and heal `downtime`
+    /// seconds later (a crash the site recovers from). A non-finite
+    /// `downtime` is permanent.
+    pub fn schedule_fault_for(&mut self, site: usize, at: f64, downtime: f64, kind: FaultKind) {
+        let heal_at = if downtime.is_finite() { at + downtime } else { f64::INFINITY };
+        self.schedule(Fault { site, at, heal_at, kind });
+    }
+
+    /// Schedule a fully specified fault (weather plans build these).
+    pub fn schedule(&mut self, fault: Fault) {
+        debug_assert!(fault.site < self.sites.len());
+        debug_assert!(fault.heal_at >= fault.at);
+        let idx = self.faults.len();
+        self.faults.push(fault);
+        self.fault_view.by_site[fault.site].push(idx);
+        self.refresh_fault_view();
     }
 
     /// Drop every scheduled fault (scenario reset between requests).
     pub fn clear_faults(&mut self) {
         self.faults.clear();
+        self.fault_view = FaultView::empty(self.sites.len());
+    }
+
+    /// Every scheduled fault, in scheduling order (weather inspection,
+    /// trace pre-recording).
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Re-evaluate the per-site fault cache at `self.now`.
+    fn refresh_fault_view(&mut self) {
+        let now = self.now;
+        let mut next = f64::INFINITY;
+        for site in 0..self.sites.len() {
+            let mut dead = false;
+            let mut degrade = 1.0f64;
+            for &fi in &self.fault_view.by_site[site] {
+                let f = &self.faults[fi];
+                if f.at > now {
+                    next = next.min(f.at);
+                    continue;
+                }
+                if now < f.heal_at {
+                    if f.heal_at.is_finite() {
+                        next = next.min(f.heal_at);
+                    }
+                    match f.kind {
+                        FaultKind::ReplicaDeath => dead = true,
+                        FaultKind::LinkDegrade { factor } => degrade *= factor.clamp(0.0, 1.0),
+                    }
+                }
+            }
+            self.fault_view.dead[site] = dead;
+            self.fault_view.degrade[site] = degrade;
+        }
+        self.fault_view.next_change = next;
     }
 
     /// Whether `site`'s replica server is reachable right now — false
-    /// once a [`FaultKind::ReplicaDeath`] fault has triggered. This is
-    /// the control-channel view a GridFTP client gets; data flows from
-    /// a dead site deliver nothing (see [`Self::current_bandwidth`]).
+    /// while a [`FaultKind::ReplicaDeath`] fault is active (between its
+    /// trigger and its heal instant). This is the control-channel view
+    /// a GridFTP client gets; data flows from a dead site deliver
+    /// nothing (see [`Self::current_bandwidth`]). O(1): reads the
+    /// per-site cache refreshed on clock advances.
     pub fn site_alive(&self, site: usize) -> bool {
-        !self.faults.iter().any(|f| {
-            f.site == site && f.at <= self.now && f.kind == FaultKind::ReplicaDeath
-        })
+        !self.fault_view.dead[site]
     }
 
-    /// Earliest scheduled fault trigger strictly after `t`, if any.
-    /// [`crate::simnet::FlowSet`] splits its integration steps there so
-    /// flow rates re-sample at the exact instant a fault lands instead
-    /// of coasting on pre-fault bandwidth to the next event boundary.
+    /// Earliest scheduled fault **boundary** (trigger or finite heal)
+    /// strictly after `t`, if any. [`crate::simnet::FlowSet`] splits
+    /// its integration steps there so flow rates re-sample at the exact
+    /// instant a fault lands — and, symmetrically, at the exact instant
+    /// it heals: no bytes delivered past a death, no free bytes before
+    /// a heal.
     pub fn next_fault_after(&self, t: f64) -> Option<f64> {
-        self.faults
-            .iter()
-            .map(|f| f.at)
-            .filter(|&at| at > t)
-            .fold(None, |m, at| Some(m.map_or(at, |x: f64| x.min(at))))
+        let mut min: Option<f64> = None;
+        for f in &self.faults {
+            if f.at > t {
+                min = Some(min.map_or(f.at, |m: f64| m.min(f.at)));
+            }
+            if f.heal_at.is_finite() && f.heal_at > t {
+                min = Some(min.map_or(f.heal_at, |m: f64| m.min(f.heal_at)));
+            }
+        }
+        min
     }
 
     /// Product of the active [`FaultKind::LinkDegrade`] factors on
-    /// `site` (1.0 when none have triggered).
+    /// `site` (1.0 when none are active). O(1): cached per site.
     pub fn degrade_factor(&self, site: usize) -> f64 {
-        self.faults
-            .iter()
-            .filter(|f| f.site == site && f.at <= self.now)
-            .map(|f| match f.kind {
-                FaultKind::LinkDegrade { factor } => factor.clamp(0.0, 1.0),
-                FaultKind::ReplicaDeath => 1.0,
-            })
-            .product()
+        self.fault_view.degrade[site]
     }
 
     pub fn len(&self) -> usize {
@@ -161,6 +266,9 @@ impl Topology {
     /// Advance simulated time.
     pub fn advance(&mut self, dt: f64) {
         self.now += dt;
+        if self.now >= self.fault_view.next_change {
+            self.refresh_fault_view();
+        }
     }
 
     /// Advance simulated time to the absolute instant `t` (no-op if
@@ -171,6 +279,9 @@ impl Topology {
     pub fn advance_to(&mut self, t: f64) {
         if t > self.now {
             self.now = t;
+            if self.now >= self.fault_view.next_change {
+                self.refresh_fault_view();
+            }
         }
     }
 
@@ -402,6 +513,70 @@ mod tests {
         let (d_dead, bw_dead) = t.probe_transfer(1, 1e6, 0);
         assert!(d_dead.is_infinite());
         assert_eq!(bw_dead, 0.0);
+    }
+
+    #[test]
+    fn timed_fault_heals_on_schedule() {
+        let mut t = topo();
+        t.schedule_fault_for(2, 10.0, 5.0, FaultKind::ReplicaDeath);
+        assert!(t.site_alive(2), "not triggered yet");
+        t.advance_to(10.0);
+        assert!(!t.site_alive(2), "trigger is inclusive");
+        assert_eq!(t.current_bandwidth(2), 0.0);
+        t.advance_to(14.9);
+        assert!(!t.site_alive(2));
+        // The heal instant itself is alive again: [at, heal_at).
+        t.advance_to(15.0);
+        assert!(t.site_alive(2), "healed at at + downtime");
+        assert!(t.current_bandwidth(2) > 0.0);
+        let (d, _) = t.transfer_from(2, 1e6);
+        assert!(d.is_finite());
+    }
+
+    #[test]
+    fn flapping_degrade_lifts_at_heal() {
+        let mut t = topo();
+        t.schedule_fault_for(0, 0.0, 5.0, FaultKind::LinkDegrade { factor: 0.25 });
+        assert_eq!(t.degrade_factor(0), 0.25);
+        t.advance_to(4.0);
+        assert_eq!(t.degrade_factor(0), 0.25);
+        t.advance_to(5.0);
+        assert_eq!(t.degrade_factor(0), 1.0, "degradation lifts at the heal instant");
+    }
+
+    #[test]
+    fn next_fault_after_includes_heal_instants() {
+        let mut t = topo();
+        t.schedule_fault_for(1, 10.0, 5.0, FaultKind::ReplicaDeath);
+        t.schedule_fault(2, 40.0, FaultKind::ReplicaDeath);
+        assert_eq!(t.next_fault_after(0.0), Some(10.0));
+        assert_eq!(t.next_fault_after(10.0), Some(15.0), "the heal is a boundary");
+        assert_eq!(t.next_fault_after(15.0), Some(40.0));
+        assert_eq!(t.next_fault_after(40.0), None, "permanent faults have no heal");
+    }
+
+    #[test]
+    fn overlapping_crash_intervals_stay_dead_until_the_last_heals() {
+        let mut t = topo();
+        t.schedule_fault_for(3, 0.0, 10.0, FaultKind::ReplicaDeath);
+        t.schedule_fault_for(3, 5.0, 10.0, FaultKind::ReplicaDeath);
+        t.advance_to(10.0);
+        assert!(!t.site_alive(3), "second crash still active");
+        t.advance_to(15.0);
+        assert!(t.site_alive(3));
+    }
+
+    #[test]
+    fn fault_cache_survives_schedule_after_advance() {
+        // Scheduling with the clock already inside the fault interval
+        // must take effect immediately (the cache refreshes on every
+        // fault-set mutation, not only on clock advances).
+        let mut t = topo();
+        t.advance_to(50.0);
+        t.schedule_fault_for(4, 20.0, 100.0, FaultKind::ReplicaDeath);
+        assert!(!t.site_alive(4));
+        t.clear_faults();
+        assert!(t.site_alive(4));
     }
 
     #[test]

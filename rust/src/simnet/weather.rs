@@ -1,0 +1,232 @@
+//! Grid weather (ISSUE 7 tentpole): seeded, deterministic crash/heal
+//! and link-flap schedules.
+//!
+//! The EU-DataGrid operations experience is that production sites
+//! crash *and come back*: outages are intervals, not one-shot deaths.
+//! [`WeatherPlan::generate`] draws, per site, an alternating renewal
+//! process on [`crate::util::prng::Rng`] —
+//!
+//! * **crashes**: up-times ~ Exp(mean = `mtbf`), downtimes ~ Exp(mean
+//!   = `mttr`); a `perm_frac` fraction of crashes never heal (the
+//!   site churns out of the grid for good, the PR-5 permanent fault);
+//! * **flaps**: [`FaultKind::LinkDegrade`] episodes arriving at
+//!   `flap_rate` per second with Exp(mean = `flap_duration`) lengths
+//!   and a uniform degradation factor in `[flap_floor, 1)`.
+//!
+//! Every draw forks from one seed, so two plans generated with the
+//! same `(spec, n_sites, seed)` are identical — the property the
+//! chaos experiment's identically-seeded policy comparison and the
+//! byte-identical trace-export acceptance check stand on. Fault
+//! instants in a plan are *relative* (t = 0 is the start of the
+//! weather window); [`WeatherPlan::apply`] offsets them onto the
+//! topology's clock.
+
+use crate::util::prng::Rng;
+
+use super::topology::{Fault, FaultKind, Topology};
+
+/// Weather intensity knobs (all times in simulated seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct WeatherSpec {
+    /// Length of the weather window; no fault triggers after it.
+    pub horizon: f64,
+    /// Mean up-time between crashes per site (`∞` disables crashes).
+    pub mtbf: f64,
+    /// Mean downtime per healing crash.
+    pub mttr: f64,
+    /// Fraction of crashes that are permanent (never heal).
+    pub perm_frac: f64,
+    /// Link-flap arrivals per second per site (0 disables flaps).
+    pub flap_rate: f64,
+    /// Mean flap length in seconds.
+    pub flap_duration: f64,
+    /// Worst degradation factor a flap can impose (factor is uniform
+    /// in `[flap_floor, 1)`).
+    pub flap_floor: f64,
+}
+
+impl Default for WeatherSpec {
+    fn default() -> Self {
+        WeatherSpec {
+            horizon: 3_600.0,
+            mtbf: f64::INFINITY,
+            mttr: 120.0,
+            perm_frac: 0.0,
+            flap_rate: 0.0,
+            flap_duration: 60.0,
+            flap_floor: 0.2,
+        }
+    }
+}
+
+/// A deterministic fault schedule (relative instants; see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeatherPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl WeatherPlan {
+    /// No weather at all (the fair-skies control arm).
+    pub fn calm() -> WeatherPlan {
+        WeatherPlan { faults: Vec::new() }
+    }
+
+    /// Draw a plan for `n_sites` sites. Identical inputs yield an
+    /// identical plan; each site's weather comes from its own forked
+    /// stream, so adding sites never perturbs existing ones.
+    pub fn generate(spec: &WeatherSpec, n_sites: usize, seed: u64) -> WeatherPlan {
+        let mut faults = Vec::new();
+        let mut root = Rng::new(seed ^ 0x5745_4154_4845_5221); // "WEATHER!"
+        for site in 0..n_sites {
+            let mut r = root.fork(site as u64);
+            if spec.mtbf.is_finite() && spec.mtbf > 0.0 {
+                let mut t = r.exp(1.0 / spec.mtbf);
+                while t < spec.horizon {
+                    let permanent = spec.perm_frac > 0.0 && r.chance(spec.perm_frac);
+                    // The downtime draw happens unconditionally so a
+                    // permanent crash consumes the same RNG budget as
+                    // a healing one (plan stability under perm_frac).
+                    let downtime = r.exp(1.0 / spec.mttr.max(1e-9));
+                    let heal_at = if permanent { f64::INFINITY } else { t + downtime };
+                    faults.push(Fault { site, at: t, heal_at, kind: FaultKind::ReplicaDeath });
+                    if !heal_at.is_finite() {
+                        break; // dead for good; no further weather matters
+                    }
+                    t = heal_at + r.exp(1.0 / spec.mtbf);
+                }
+            }
+            if spec.flap_rate > 0.0 {
+                let mut fr = root.fork(0x0001_0000 | site as u64);
+                let mut t = fr.exp(spec.flap_rate);
+                while t < spec.horizon {
+                    let len = fr.exp(1.0 / spec.flap_duration.max(1e-9));
+                    let factor = fr.range(spec.flap_floor.clamp(0.0, 1.0), 1.0);
+                    faults.push(Fault {
+                        site,
+                        at: t,
+                        heal_at: t + len,
+                        kind: FaultKind::LinkDegrade { factor },
+                    });
+                    t = t + len + fr.exp(spec.flap_rate);
+                }
+            }
+        }
+        // Deterministic presentation order: by trigger, then site.
+        faults.sort_by(|a, b| {
+            a.at.total_cmp(&b.at)
+                .then(a.site.cmp(&b.site))
+                .then(a.heal_at.total_cmp(&b.heal_at))
+        });
+        WeatherPlan { faults }
+    }
+
+    /// Schedule every fault onto `topo`, offsetting the plan's
+    /// relative instants by `t0` (typically the post-warm clock).
+    pub fn apply(&self, topo: &mut Topology, t0: f64) {
+        for f in &self.faults {
+            topo.schedule(Fault {
+                site: f.site,
+                at: t0 + f.at,
+                heal_at: if f.heal_at.is_finite() { t0 + f.heal_at } else { f64::INFINITY },
+                kind: f.kind,
+            });
+        }
+    }
+
+    /// Crash faults in the plan (heal-aware deaths, permanent or not).
+    pub fn crashes(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| f.kind == FaultKind::ReplicaDeath)
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    fn stormy() -> WeatherSpec {
+        WeatherSpec {
+            horizon: 2_000.0,
+            mtbf: 400.0,
+            mttr: 150.0,
+            perm_frac: 0.25,
+            flap_rate: 1.0 / 500.0,
+            flap_duration: 80.0,
+            flap_floor: 0.3,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = WeatherPlan::generate(&stormy(), 8, 42);
+        let b = WeatherPlan::generate(&stormy(), 8, 42);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "a stormy spec must produce weather");
+        let c = WeatherPlan::generate(&stormy(), 8, 43);
+        assert_ne!(a, c, "a different seed must produce different weather");
+    }
+
+    #[test]
+    fn faults_are_well_formed_and_inside_the_horizon() {
+        let spec = stormy();
+        let plan = WeatherPlan::generate(&spec, 12, 7);
+        for f in &plan.faults {
+            assert!(f.site < 12);
+            assert!(f.at >= 0.0 && f.at < spec.horizon, "trigger {} outside window", f.at);
+            assert!(f.heal_at > f.at, "heal {} !> trigger {}", f.heal_at, f.at);
+            if let FaultKind::LinkDegrade { factor } = f.kind {
+                assert!((0.3..1.0).contains(&factor));
+                assert!(f.heal_at.is_finite(), "flaps always heal");
+            }
+        }
+    }
+
+    #[test]
+    fn perm_frac_extremes() {
+        let all_heal = WeatherSpec { perm_frac: 0.0, ..stormy() };
+        let plan = WeatherPlan::generate(&all_heal, 10, 11);
+        assert!(plan
+            .faults
+            .iter()
+            .filter(|f| f.kind == FaultKind::ReplicaDeath)
+            .all(|f| f.heal_at.is_finite()));
+        let all_perm = WeatherSpec { perm_frac: 1.0, flap_rate: 0.0, ..stormy() };
+        let plan = WeatherPlan::generate(&all_perm, 10, 11);
+        assert!(plan.faults.iter().all(|f| !f.heal_at.is_finite()));
+        for site in 0..10 {
+            assert!(
+                plan.faults.iter().filter(|f| f.site == site).count() <= 1,
+                "a permanently dead site crashes at most once"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_offsets_onto_the_topology_clock() {
+        let spec = WeatherSpec { mtbf: 300.0, mttr: 100.0, horizon: 1_000.0, ..Default::default() };
+        let plan = WeatherPlan::generate(&spec, 4, 99);
+        assert!(plan.crashes() > 0);
+        let mut topo = Topology::build(&GridConfig::generate(4, 1));
+        topo.advance_to(500.0);
+        let t0 = topo.now;
+        plan.apply(&mut topo, t0);
+        assert_eq!(topo.faults().len(), plan.faults.len());
+        for (sched, rel) in topo.faults().iter().zip(&plan.faults) {
+            assert_eq!(sched.at, t0 + rel.at);
+            if rel.heal_at.is_finite() {
+                assert_eq!(sched.heal_at, t0 + rel.heal_at);
+            } else {
+                assert!(!sched.heal_at.is_finite());
+            }
+        }
+        // The first boundary after t0 is the first fault's trigger.
+        assert_eq!(topo.next_fault_after(t0), Some(t0 + plan.faults[0].at));
+    }
+}

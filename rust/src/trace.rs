@@ -135,6 +135,16 @@ pub enum Ev {
     BlockRetry { site: SiteId, block: u64 },
     /// Co-allocation: block delivered and ledgered exactly-once.
     BlockFinish { site: SiteId, block: u64, bytes: u64 },
+    /// Grid weather: a fault became active on `site`. `degrade` is the
+    /// link factor (0 for a replica death); `heal_s` is the absolute
+    /// heal instant, or −1 when the fault is permanent (JSON cannot
+    /// carry ∞).
+    SiteFault { site: SiteId, degrade: f64, heal_s: f64 },
+    /// Grid weather: a fault interval on `site` ended.
+    SiteHeal { site: SiteId },
+    /// Transfer resilience: attempt `attempt` re-issued the request
+    /// against `site`, resuming from byte `offset`.
+    TransferRetry { site: SiteId, attempt: u32, offset: u64 },
     /// Kernel dispatched a signal (`arrival`/`tick`/`query`/`flow_done`).
     Dispatch { kind: &'static str },
     /// Sampler row: global gauges at the sample instant.
@@ -169,6 +179,9 @@ impl Ev {
             Ev::BlockFailover { .. } => "block_failover",
             Ev::BlockRetry { .. } => "block_retry",
             Ev::BlockFinish { .. } => "block_finish",
+            Ev::SiteFault { .. } => "site_fault",
+            Ev::SiteHeal { .. } => "site_heal",
+            Ev::TransferRetry { .. } => "transfer_retry",
             Ev::Dispatch { .. } => "dispatch",
             Ev::Sample { .. } => "sample",
             Ev::LinkSample { .. } => "link_sample",
@@ -192,6 +205,7 @@ fn static_tag(s: &str) -> &'static str {
         "wind_down" => "wind_down",
         "no_replica" => "no_replica",
         "dead_source" => "dead_source",
+        "gave_up" => "gave_up",
         _ => "other",
     }
 }
@@ -299,6 +313,19 @@ impl TraceEvent {
                 num(&mut o, "block", block as f64);
                 num(&mut o, "bytes", bytes as f64);
             }
+            Ev::SiteFault { site, degrade, heal_s } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "degrade", degrade);
+                num(&mut o, "heal_s", heal_s);
+            }
+            Ev::SiteHeal { site } => {
+                o.insert("site".to_string(), site_json(names, site));
+            }
+            Ev::TransferRetry { site, attempt, offset } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "attempt", attempt as f64);
+                num(&mut o, "offset", offset as f64);
+            }
         }
         Json::Obj(o)
     }
@@ -381,6 +408,17 @@ impl TraceEvent {
                 site: site("site")?,
                 block: u("block")?,
                 bytes: u("bytes")?,
+            },
+            "site_fault" => Ev::SiteFault {
+                site: site("site")?,
+                degrade: f("degrade")?,
+                heal_s: f("heal_s")?,
+            },
+            "site_heal" => Ev::SiteHeal { site: site("site")? },
+            "transfer_retry" => Ev::TransferRetry {
+                site: site("site")?,
+                attempt: u("attempt")? as u32,
+                offset: u("offset")?,
             },
             "dispatch" => Ev::Dispatch { kind: static_tag(o.get("kind")?.as_str()?) },
             "sample" => Ev::Sample {
@@ -607,6 +645,25 @@ impl Recorder {
                         2.0,
                         site as f64,
                         format!("failover orphaned {orphaned}"),
+                        e.at,
+                    ));
+                }
+                Ev::SiteFault { site, degrade, .. } => {
+                    let what = if degrade == 0.0 {
+                        "crash".to_string()
+                    } else {
+                        format!("flap x{degrade:.2}")
+                    };
+                    tev.push(instant(2.0, site as f64, what, e.at));
+                }
+                Ev::SiteHeal { site } => {
+                    tev.push(instant(2.0, site as f64, "heal".to_string(), e.at));
+                }
+                Ev::TransferRetry { site, attempt, .. } => {
+                    tev.push(instant(
+                        2.0,
+                        site as f64,
+                        format!("retry #{attempt} req {}", e.req),
                         e.at,
                     ));
                 }
@@ -1157,6 +1214,26 @@ mod tests {
         assert!(evs.iter().any(|e| e.req == KERNEL_REQ));
         // Sampler/kernel rows never become request spans.
         assert_eq!(back.spans().len(), 1);
+    }
+
+    #[test]
+    fn weather_and_retry_events_round_trip() {
+        let mut r = Recorder::new(16);
+        let s = r.intern("stormy-site");
+        r.push(5.0, KERNEL_REQ, Ev::SiteFault { site: s, degrade: 0.0, heal_s: 35.0 });
+        r.push(7.0, KERNEL_REQ, Ev::SiteFault { site: s, degrade: 0.5, heal_s: -1.0 });
+        r.push(9.0, 3, Ev::TransferRetry { site: s, attempt: 2, offset: 1 << 20 });
+        r.push(9.5, 3, Ev::RequestSkipped { reason: "gave_up" });
+        r.push(35.0, KERNEL_REQ, Ev::SiteHeal { site: s });
+        let back = load_trace(&r.jsonl()).unwrap();
+        assert_eq!(back.events(), r.events());
+        // "gave_up" is in the closed tag set, not collapsed to "other".
+        assert!(back
+            .events()
+            .iter()
+            .any(|e| e.ev == Ev::RequestSkipped { reason: "gave_up" }));
+        let chrome = load_trace(&r.chrome_json()).unwrap();
+        assert_eq!(chrome.events(), r.events());
     }
 
     #[test]

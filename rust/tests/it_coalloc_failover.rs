@@ -162,6 +162,67 @@ fn it_coalloc_failover() {
 }
 
 #[test]
+fn it_coalloc_crash_then_recover_revives_the_stream() {
+    // ISSUE 7 grid weather: the predicted-best source crashes a third
+    // of the way in and RECOVERS while work remains. The failover
+    // machinery orphans its queue as before, but the healed stream
+    // must rejoin the session (not sit out the rest of the transfer):
+    // it ends in the finished state, not failed, and every block still
+    // lands exactly once.
+    let cfg = steady_grid();
+    let spec = WorkloadSpec { files: 2, ..Default::default() };
+    let mut g = SimGrid::build(&cfg, &spec, 4, 32);
+    g.warm(6);
+    let broker = g.broker(RankPolicy::ForecastBandwidth { engine: None });
+    let request = parse_classad("requirement = TRUE;").unwrap();
+    let logical = g.files[0].clone();
+    let size = 600e6;
+    let policy = CoallocPolicy {
+        max_streams: 4,
+        tick: 2.0,
+        max_block_retries: 3,
+        ..Default::default()
+    };
+    let sel = broker
+        .select_coalloc(&logical, &request, size, &policy)
+        .expect("coalloc selection");
+    let victim = sel
+        .plan
+        .assignments
+        .iter()
+        .max_by(|a, b| a.share.partial_cmp(&b.share).unwrap())
+        .unwrap()
+        .source
+        .site
+        .clone();
+    let victim_idx = g.topo.index_of(&victim).unwrap();
+    let makespan = sel.plan.predicted_makespan();
+    // Down for a third of the predicted makespan, healing with plenty
+    // of the transfer left for the revived stream to work on.
+    g.topo.schedule_fault_for(
+        victim_idx,
+        g.topo.now + makespan / 3.0,
+        makespan / 3.0,
+        FaultKind::ReplicaDeath,
+    );
+    let out = coalloc::execute(&mut g.topo, &g.ftp, "client", &sel.plan, &policy)
+        .expect("transfer must survive a crash the source recovers from");
+    assert!((out.bytes - size).abs() < 1.0);
+    let delivered: usize = out.streams.iter().map(|s| s.blocks).sum();
+    assert_eq!(delivered, sel.plan.n_blocks, "every block exactly once");
+    assert_eq!(out.failovers, 1, "the crash registered as a failover");
+    let revived = out.streams.iter().find(|s| s.site == victim).unwrap();
+    assert!(
+        !revived.failed,
+        "a healed source must rejoin the session, not end failed"
+    );
+    assert_eq!(revived.failures, 1);
+    for i in 0..g.topo.len() {
+        assert_eq!(g.topo.site(i).active_transfers, 0);
+    }
+}
+
+#[test]
 fn failover_disabled_reproduces_the_fragile_baseline() {
     // Same scenario, failover off: the death kills the transfer — the
     // behaviour the churn experiment scores single-best/striped by.

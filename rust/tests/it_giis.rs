@@ -145,7 +145,11 @@ impl TwoSiteGrid {
             self.info.clone(),
             RankPolicy::ForecastBandwidth { engine: None },
         )
-        .with_discovery(HierDiscovery { dir: self.hier_dir.clone(), drill_down })
+        .with_discovery(HierDiscovery {
+            dir: self.hier_dir.clone(),
+            drill_down,
+            degrade: false,
+        })
     }
 }
 

@@ -13,9 +13,11 @@ use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
 use globus_replica::directory::{Dit, Filter, Scope};
 use globus_replica::directory::fanout::{run_fanout, DirectoryFanout, FanoutPolicy, QueryIds};
 use globus_replica::broker::SelectorKind;
-use globus_replica::experiment::{run_quality_open, OpenLoopOptions};
+use globus_replica::experiment::{run_quality_open, OpenLoopOptions, RetryOptions};
 use globus_replica::forecast::forecast_bank;
-use globus_replica::simnet::{Engine, FaultKind, FlowSet, Signal, Topology, Workload, WorkloadSpec};
+use globus_replica::simnet::{
+    Engine, FaultKind, FlowSet, Signal, Topology, WeatherPlan, WeatherSpec, Workload, WorkloadSpec,
+};
 use globus_replica::trace::TraceHandle;
 use globus_replica::util::prng::Rng;
 use globus_replica::util::prop::{forall, Config};
@@ -431,10 +433,13 @@ fn prop_directory_fanout_cap_completion_determinism() {
         let cap = 1 + rng.index(6);
         let deadline = if rng.chance(0.3) { rng.range(0.5, 4.0) } else { f64::INFINITY };
         let cutoff = if rng.chance(0.3) { rng.range(0.5, 8.0) } else { f64::INFINITY };
+        let max_retries = if deadline.is_finite() && rng.chance(0.5) { rng.index(3) } else { 0 };
         let policy = FanoutPolicy {
             max_in_flight: cap,
             per_query_deadline: deadline,
             straggler_cutoff: cutoff,
+            max_retries,
+            retry_backoff: if max_retries > 0 { rng.range(0.0, 1.0) } else { 0.0 },
         };
         let f1 = run_fanout(t0, &sites, policy);
         if !f1.finished() {
@@ -456,8 +461,10 @@ fn prop_directory_fanout_cap_completion_determinism() {
         }
         for &(site, at) in &responses {
             let latency = sites[site].1;
-            if latency > deadline + 1e-9 {
-                return Err(format!("site {site} answered past its deadline"));
+            // With retries, the total waiting budget per site is one
+            // deadline per attempt (server-side progress carries over).
+            if latency > deadline * (1.0 + max_retries as f64) + 1e-9 {
+                return Err(format!("site {site} answered past its retry budget"));
             }
             if at > t0 + cutoff + 1e-9 {
                 return Err(format!("site {site} answered after the cutoff"));
@@ -594,6 +601,176 @@ fn prop_traced_open_loop_runs_are_byte_identical() {
         }
         if jsonl_a.is_empty() {
             return Err("traced run recorded nothing".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flowset_conservation_across_fault_and_heal_boundaries() {
+    // ISSUE 7: interval faults (crash→recover, degrade→restore) split
+    // the flow integrator at every boundary. Under random schedules
+    // and coarse steps that straddle the boundaries: no bytes move
+    // while a site is down, aggregate rates respect the *degraded*
+    // link rate, delivered bytes stay monotone and conserved, and
+    // once the weather clears every flow drains.
+    forall("flowset conservation across heals", cfg(40), |rng| {
+        let n_sites = 2 + rng.index(3);
+        let (mut topo, rates) = flow_topo(rng, n_sites);
+        for s in 0..n_sites {
+            if rng.chance(0.7) {
+                let at = rng.range(0.5, 10.0);
+                let down = rng.range(1.0, 15.0);
+                if rng.chance(0.5) {
+                    topo.schedule_fault_for(s, at, down, FaultKind::ReplicaDeath);
+                } else {
+                    topo.schedule_fault_for(
+                        s,
+                        at,
+                        down,
+                        FaultKind::LinkDegrade { factor: rng.range(0.05, 0.8) },
+                    );
+                }
+            }
+        }
+        let mut fs = FlowSet::new(f64::INFINITY);
+        let mut ids = Vec::new();
+        let mut totals = Vec::new();
+        for _ in 0..(1 + rng.index(6)) {
+            let site = rng.index(n_sites);
+            topo.begin_transfer(site);
+            let bytes = rng.range(1e5, 6e6);
+            ids.push(fs.add_in(&topo, site, bytes, 0.0, 0));
+            totals.push(bytes);
+        }
+        let mut last_delivered = vec![0.0f64; ids.len()];
+        for _ in 0..40 {
+            let bws = fs.bandwidths(&mut topo);
+            let mut per_site = vec![0.0f64; n_sites];
+            for &(id, bw) in &bws {
+                if bw < 0.0 {
+                    return Err(format!("negative rate on flow {id}"));
+                }
+                per_site[fs.flow(id).site] += bw;
+            }
+            for (s, &sum) in per_site.iter().enumerate() {
+                if !topo.site_alive(s) {
+                    if sum > 1e-9 {
+                        return Err(format!("dead site {s} still moving {sum} B/s"));
+                    }
+                    continue;
+                }
+                // Registered streams share k/(k+1) of the link, so the
+                // degraded raw rate bounds the aggregate.
+                let cap = rates[s] * topo.degrade_factor(s);
+                if sum > cap * (1.0 + 1e-6) + 1.0 {
+                    return Err(format!(
+                        "site {s} over its degraded link at t={}: {sum} > {cap}",
+                        topo.now
+                    ));
+                }
+            }
+            fs.advance(&mut topo, rng.range(0.1, 1.2));
+            for (k, &id) in ids.iter().enumerate() {
+                let f = fs.flow(id);
+                if f.delivered + 1e-6 < last_delivered[k] {
+                    return Err(format!("flow {id} delivered went backwards"));
+                }
+                last_delivered[k] = f.delivered;
+                if f.delivered + f.remaining > totals[k] + 1.0 {
+                    return Err(format!("flow {id} invented bytes"));
+                }
+            }
+        }
+        // All weather is over by t=25; every flow must now drain.
+        let t_end = topo.now + 600.0;
+        let mut guard = 0;
+        while fs.live() > 0 && topo.now < t_end {
+            fs.advance(&mut topo, 2.0);
+            guard += 1;
+            if guard > 100_000 {
+                return Err("post-heal drain did not converge".into());
+            }
+        }
+        for (k, &id) in ids.iter().enumerate() {
+            let f = fs.flow(id);
+            if f.finished_at.is_none() {
+                return Err(format!("flow {id} never finished after all heals"));
+            }
+            if (f.delivered - totals[k]).abs() > 1.0 {
+                return Err(format!(
+                    "flow {id} delivered {} of {} bytes",
+                    f.delivered, totals[k]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_open_loop_accounting_balances_under_random_weather() {
+    // ISSUE 7: whatever the weather, every admitted request ends in
+    // exactly one of {finished, skipped, gave up} — none lost, none
+    // double-counted — with retry/failover on or off, and gave-ups
+    // can only exist when retry is enabled.
+    forall("weather request accounting", cfg(12), |rng| {
+        let grid_cfg = GridConfig::generate(3 + rng.index(3), 2000 + rng.below(10_000));
+        let spec = WorkloadSpec {
+            files: 4,
+            mean_interarrival: rng.range(10.0, 40.0),
+            ..Default::default()
+        };
+        let n_requests = 6 + rng.index(6);
+        let reqs = Workload::new(spec.clone(), grid_cfg.seed).take(n_requests);
+        let wspec = WeatherSpec {
+            horizon: 1200.0,
+            mtbf: rng.range(100.0, 600.0),
+            mttr: rng.range(20.0, 120.0),
+            perm_frac: rng.range(0.0, 0.5),
+            flap_rate: if rng.chance(0.5) { 1.0 / rng.range(100.0, 500.0) } else { 0.0 },
+            flap_duration: 40.0,
+            flap_floor: 0.05,
+        };
+        let plan = WeatherPlan::generate(&wspec, grid_cfg.sites.len(), rng.below(1 << 20));
+        let retry_on = rng.chance(0.7);
+        let retry = retry_on.then(|| RetryOptions {
+            transfer_timeout: rng.range(15.0, 60.0),
+            max_attempts: 1 + rng.below(4) as u32,
+            backoff_base: rng.range(0.5, 4.0),
+            ..Default::default()
+        });
+        let opts = OpenLoopOptions {
+            retry,
+            faults: plan.faults.clone(),
+            ..OpenLoopOptions::open()
+        };
+        let report = run_quality_open(
+            &grid_cfg,
+            &spec,
+            &reqs,
+            3,
+            2,
+            SelectorKind::Forecast,
+            &opts,
+            None,
+        );
+        let accounted = report.quality.requests + report.skipped + report.gave_up;
+        if accounted != n_requests {
+            return Err(format!(
+                "{} finished + {} skipped + {} gave up != {n_requests} admitted",
+                report.quality.requests, report.skipped, report.gave_up
+            ));
+        }
+        if !retry_on && (report.gave_up > 0 || report.retries > 0 || report.failovers > 0)
+        {
+            return Err("retry counters nonzero with retry disabled".into());
+        }
+        if report.failovers > report.retries {
+            return Err(format!(
+                "failovers {} exceed retries {}",
+                report.failovers, report.retries
+            ));
         }
         Ok(())
     });

@@ -2,14 +2,15 @@
 # Perf-trajectory recorder (ROADMAP perf log).
 #
 #   scripts/bench.sh              full run; writes BENCH_matchmaking.json,
-#                                 BENCH_directory.json, BENCH_coalloc.json
-#                                 and BENCH_contention.json
+#                                 BENCH_directory.json, BENCH_coalloc.json,
+#                                 BENCH_contention.json and BENCH_chaos.json
 #   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
 #
 # Runs the selection-path benches (matchmaking core, broker phase
 # breakdown, directory/GRIS + the ISSUE-5 GIIS-routed-vs-direct
 # discovery comparison at 256 sites), the co-allocation bench (failover
-# path + churn scenario) and the open-loop contention load sweep, and
+# path + churn scenario), the open-loop contention load sweep and the
+# grid-weather chaos sweep (fault intensity x recovery policy), and
 # records the headline numbers as JSON, so the perf trajectory across
 # PRs is written down instead of scrolling away in bench output.
 set -euo pipefail
@@ -19,6 +20,7 @@ out="${BENCH_JSON:-BENCH_matchmaking.json}"
 directory_out="${BENCH_DIRECTORY_JSON:-BENCH_directory.json}"
 coalloc_out="${BENCH_COALLOC_JSON:-BENCH_coalloc.json}"
 contention_out="${BENCH_CONTENTION_JSON:-BENCH_contention.json}"
+chaos_out="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
 
 echo "== bench: matchmaking (JSON -> ${out}) =="
 BENCH_JSON="${out}" cargo bench --bench bench_matchmaking
@@ -35,6 +37,9 @@ BENCH_JSON="${coalloc_out}" cargo bench --bench bench_coalloc
 echo "== bench: contention load sweep (JSON -> ${contention_out}) =="
 BENCH_JSON="${contention_out}" cargo bench --bench bench_contention
 
+echo "== bench: chaos weather sweep (JSON -> ${chaos_out}) =="
+BENCH_JSON="${chaos_out}" cargo bench --bench bench_chaos
+
 echo
 echo "recorded ${out}:"
 cat "${out}"
@@ -47,4 +52,7 @@ cat "${coalloc_out}"
 echo
 echo "recorded ${contention_out}:"
 cat "${contention_out}"
+echo
+echo "recorded ${chaos_out}:"
+cat "${chaos_out}"
 echo

@@ -51,6 +51,18 @@ cargo run --release --quiet -- trace-summary TRACE_ci_smoke.json --json >/dev/nu
 cargo run --release --quiet -- trace-summary TRACE_ci_smoke.jsonl >/dev/null
 echo "traced smoke OK (TRACE_ci_smoke.json round-tripped through trace-summary)"
 
+echo "== tier-1: chaos determinism smoke (grid weather end-to-end) =="
+# Two identically seeded chaos sweeps (seeded weather + retry/failover
+# on every request path) must produce byte-identical reports — the
+# ISSUE-7 determinism acceptance, checked end-to-end through the CLI.
+cargo run --release --quiet -- chaos --sites 4 --requests 6 --seed 7 \
+    --weather storm --out CHAOS_ci_a.json >/dev/null
+cargo run --release --quiet -- chaos --sites 4 --requests 6 --seed 7 \
+    --weather storm --out CHAOS_ci_b.json >/dev/null
+cmp CHAOS_ci_a.json CHAOS_ci_b.json
+test -s CHAOS_ci_a.json
+echo "chaos smoke OK (identically seeded sweeps byte-identical)"
+
 echo "== hygiene: rustfmt =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
