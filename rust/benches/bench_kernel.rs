@@ -1,0 +1,119 @@
+//! Kernel throughput bench (ISSUE 8): events/second on the
+//! allocation-free discrete-event kernel with 10⁵ transfers
+//! simultaneously in flight, under the sharded control plane.
+//!
+//! Each point replays a day-of-traffic stress shape — a same-instant
+//! surge to peak concurrency plus a trickle over the day — bounded by
+//! an event budget (a full drain at 10⁵ flows is quadratic and not
+//! what the bench certifies). The JSON asserts `peak_in_flight ≥
+//! concurrent` so the headline events/sec number is honest about the
+//! load it was measured under.
+//!
+//! With `BENCH_JSON=<path>` set, the sweep is written as JSON —
+//! `scripts/bench.sh` uses this to record `BENCH_kernel.json` next to
+//! the other perf artifacts. `BENCH_QUICK=1` shrinks the surge for
+//! smoke runs.
+
+use std::collections::BTreeMap;
+
+use globus_replica::experiment::{run_kernel, KernelOptions, KernelReport, ShardOptions};
+use globus_replica::metrics::Metrics;
+use globus_replica::util::bench::report_metric;
+use globus_replica::util::json::Json;
+
+fn point_json(label: &str, shards: usize, r: &KernelReport) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("label".to_string(), Json::Str(label.to_string()));
+    o.insert("shards".to_string(), Json::Num(shards as f64));
+    o.insert("requests".to_string(), Json::Num(r.requests as f64));
+    o.insert("concurrent".to_string(), Json::Num(r.concurrent as f64));
+    o.insert("peak_in_flight".to_string(), Json::Num(r.peak_in_flight as f64));
+    o.insert("events".to_string(), Json::Num(r.events as f64));
+    o.insert("wall_s".to_string(), Json::Num(r.wall_s));
+    o.insert("events_per_sec".to_string(), Json::Num(r.events_per_sec));
+    o.insert("finished".to_string(), Json::Num(r.finished as f64));
+    o.insert("skipped".to_string(), Json::Num(r.skipped as f64));
+    o.insert(
+        "cross_shard_selections".to_string(),
+        Json::Num(r.cross_shard_selections as f64),
+    );
+    o.insert("flushes".to_string(), Json::Num(r.flushes as f64));
+    Json::Obj(o)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    // The acceptance point: ≥ 10⁵ concurrent requests. Quick mode
+    // shrinks the surge (CI smoke), the full run certifies the claim.
+    let (surge, trickle, steady) = if quick {
+        (5_000usize, 200usize, 500usize)
+    } else {
+        (100_000, 2_000, 2_000)
+    };
+    let points: Vec<(&str, usize, usize)> = vec![
+        // (label, shards, batch_max)
+        ("unbatched_1shard", 1, 1),
+        ("sharded_8x64", 8, 64),
+    ];
+
+    println!("== kernel: day-of-traffic surge ({surge} concurrent, event-budgeted) ==");
+    println!(
+        "{:<18} {:>7} {:>10} {:>10} {:>9} {:>12}",
+        "point", "shards", "peak", "events", "wall s", "events/sec"
+    );
+    let m = Metrics::new();
+    let mut results: Vec<(String, usize, KernelReport)> = Vec::new();
+    for (label, shards, batch_max) in points {
+        let o = KernelOptions {
+            surge,
+            trickle,
+            steady_events: steady,
+            shard: ShardOptions { shards, batch_max, batch_window: 1.0 },
+            ..Default::default()
+        };
+        let r = run_kernel(&o);
+        println!(
+            "{:<18} {:>7} {:>10} {:>10} {:>9.2} {:>12.0}",
+            label, shards, r.peak_in_flight, r.events, r.wall_s, r.events_per_sec
+        );
+        assert!(
+            r.peak_in_flight >= r.concurrent,
+            "{label}: surge not fully concurrent ({} < {})",
+            r.peak_in_flight,
+            r.concurrent
+        );
+        m.counter("kernel.events").add(r.events as u64);
+        m.histogram("kernel.wall_ns")
+            .observe(std::time::Duration::from_secs_f64(r.wall_s));
+        results.push((label.to_string(), shards, r));
+    }
+    if let Some((_, _, last)) = results.last() {
+        report_metric("kernel events/sec (sharded)", last.events_per_sec, "ev/s");
+        report_metric("peak concurrent transfers", last.peak_in_flight as f64, "");
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("kernel".to_string()));
+        root.insert("concurrent".to_string(), Json::Num(surge as f64));
+        root.insert("quick".to_string(), Json::Bool(quick));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|(label, shards, r)| point_json(label, *shards, r))
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "metrics".to_string(),
+            Json::parse(&m.to_json()).expect("snapshot JSON parses"),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

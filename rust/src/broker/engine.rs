@@ -18,6 +18,17 @@
 //!   drill-downs instead of N site queries; when every registration is
 //!   fresh the selection is *provably identical* to the direct route
 //!   (the `it_giis` parity suite pins this).
+//!
+//! Under the sharded control plane (ISSUE 8,
+//! [`crate::broker::shard::ShardMap`]) the hierarchical route is
+//! per-shard: each shard runs its own GIIS registration domain over
+//! the sites it owns, a request's broad query goes to its home shard's
+//! GIIS, and replica sites owned by foreign shards are resolved
+//! against *their* domains (the cross-shard consult the driver
+//! counts). The broker engine itself is shard-agnostic — selection is
+//! a pure function of the candidate set — which is why one shared
+//! `Broker` serves every shard and the 1-shard configuration is
+//! bit-identical to the unsharded path.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};

@@ -18,6 +18,15 @@
 //! are built) discounted by current load. [`selectors`] adds the
 //! uninformed baselines the benches compare against; [`centralized`]
 //! the single-manager comparator for the §5.1.1 scalability argument.
+//!
+//! At production scale the control plane shards along the PR 5
+//! registration hierarchy ([`shard`], ISSUE 8): each broker shard owns
+//! a contiguous slice of sites with its own GIIS registration domain
+//! and admission batch, requests route to the shard owning the
+//! plurality of their replicas, and only replica sets that span shards
+//! pay a cross-shard consult. A 1-shard configuration is bit-identical
+//! to the unsharded path (`it_shard` parity anchors); see
+//! `ARCHITECTURE.md` for the shard boundary.
 
 pub mod centralized;
 pub mod convert;
@@ -25,6 +34,7 @@ pub mod engine;
 pub mod policy;
 pub mod replication;
 pub mod selectors;
+pub mod shard;
 
 pub use convert::{entries_to_candidate, Candidate};
 pub use engine::{
@@ -34,3 +44,4 @@ pub use engine::{
 };
 pub use policy::RankPolicy;
 pub use selectors::{Selector, SelectorKind};
+pub use shard::ShardMap;

@@ -1,0 +1,149 @@
+//! Broker shards: partitioning the grid's control plane (ISSUE 8).
+//!
+//! The paper's broker is decentralized per client; what it never had
+//! to answer is how the *information plane* scales when one deployment
+//! fronts hundreds of sites. The answer built here follows the PR 5
+//! registration hierarchy: the grid is partitioned into **shards**,
+//! each owning a contiguous slice of topology sites, and each shard
+//! runs its own GIIS registration domain (its sites soft-state
+//! register only there) and its own admission batch. A request is
+//! routed to its **home shard** — the shard owning the plurality of
+//! its replica sites — and only consults other shards' domains when
+//! its replica set actually spans the boundary (a *cross-shard
+//! selection*, counted by the driver).
+//!
+//! [`ShardMap`] is the pure routing piece: deterministic, index-based,
+//! no I/O — everything else (batching, domains, telemetry) lives in
+//! `experiment::sharded`. A 1-shard map routes everything to shard 0,
+//! which is how the sharded driver collapses to the unsharded path
+//! bit-for-bit (the `it_shard` parity anchor).
+
+/// A partition of topology sites `0..sites` into `shards` contiguous,
+/// near-equal ranges. Shard `s` owns `[bounds[s], bounds[s+1])`.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    bounds: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Split `sites` sites into `shards` contiguous ranges whose sizes
+    /// differ by at most one (the first `sites % shards` ranges get
+    /// the extra site). `shards` is clamped to `[1, sites.max(1)]` so
+    /// every shard owns at least one site.
+    pub fn contiguous(sites: usize, shards: usize) -> ShardMap {
+        let shards = shards.clamp(1, sites.max(1));
+        let base = sites / shards;
+        let extra = sites % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0usize;
+        bounds.push(at);
+        for s in 0..shards {
+            at += base + usize::from(s < extra);
+            bounds.push(at);
+        }
+        debug_assert_eq!(*bounds.last().unwrap(), sites);
+        ShardMap { bounds }
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Sites owned by shard `s`.
+    pub fn sites_of(&self, s: usize) -> std::ops::Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// The shard owning topology site `site`.
+    pub fn owner(&self, site: usize) -> usize {
+        // Ranges are sorted and contiguous: the owner is the partition
+        // point. `site` past the last bound maps to the last shard
+        // (can't happen for valid topology indices; keeps this total).
+        match self.bounds.binary_search(&site) {
+            Ok(b) => b.min(self.shards() - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Route a replica set: returns `(home shard, spans)` where home
+    /// is the shard owning the most replicas (ties to the lowest
+    /// shard index — deterministic) and `spans` is true iff the
+    /// replicas live under more than one shard, i.e. the selection
+    /// must consult foreign registration domains.
+    pub fn home(&self, replica_sites: &[usize]) -> (usize, bool) {
+        let n = self.shards();
+        if n == 1 || replica_sites.is_empty() {
+            return (0, false);
+        }
+        let first = self.owner(replica_sites[0]);
+        let mut spans = false;
+        // Replica sets are small (a handful of sites); count owners
+        // without allocating.
+        let mut best = first;
+        let mut best_count = 0usize;
+        for s in 0..n {
+            let count = replica_sites.iter().filter(|&&r| self.owner(r) == s).count();
+            if count > 0 && s != first {
+                spans = true;
+            }
+            if count > best_count {
+                best = s;
+                best_count = count;
+            }
+        }
+        (best, spans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_ranges_cover_all_sites_exactly_once() {
+        for sites in [1usize, 5, 8, 64, 257] {
+            for shards in [1usize, 2, 3, 7, 300] {
+                let m = ShardMap::contiguous(sites, shards);
+                assert!(m.shards() >= 1 && m.shards() <= sites);
+                let mut seen = 0usize;
+                for s in 0..m.shards() {
+                    let r = m.sites_of(s);
+                    assert!(!r.is_empty(), "shard {s} empty ({sites}/{shards})");
+                    assert_eq!(r.start, seen, "gap before shard {s}");
+                    for site in r.clone() {
+                        assert_eq!(m.owner(site), s);
+                    }
+                    seen = r.end;
+                }
+                assert_eq!(seen, sites);
+            }
+        }
+    }
+
+    #[test]
+    fn near_equal_split() {
+        let m = ShardMap::contiguous(10, 4);
+        let sizes: Vec<usize> = (0..4).map(|s| m.sites_of(s).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn one_shard_routes_everything_home() {
+        let m = ShardMap::contiguous(16, 1);
+        assert_eq!(m.shards(), 1);
+        assert_eq!(m.home(&[0, 7, 15]), (0, false));
+        assert_eq!(m.home(&[]), (0, false));
+    }
+
+    #[test]
+    fn home_is_plurality_with_low_tie_break() {
+        let m = ShardMap::contiguous(8, 4); // shards: {0,1} {2,3} {4,5} {6,7}
+        // Majority in shard 1, one foreign replica → spans.
+        assert_eq!(m.home(&[2, 3, 6]), (1, true));
+        // All in one shard → no span.
+        assert_eq!(m.home(&[4, 5]), (2, false));
+        // 1–1 tie between shards 0 and 3 → lowest wins, spans.
+        assert_eq!(m.home(&[7, 0]), (0, true));
+    }
+}

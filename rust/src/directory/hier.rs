@@ -48,6 +48,17 @@ pub struct DiscoveryStats {
     pub refreshes: u64,
 }
 
+impl DiscoveryStats {
+    /// Accumulate another directory's accounting — how a sharded run
+    /// (ISSUE 8: one registration domain per broker shard) reports one
+    /// grid-wide total over its per-shard directories.
+    pub fn merge(&mut self, other: &DiscoveryStats) {
+        self.broad_queries += other.broad_queries;
+        self.drill_downs += other.drill_downs;
+        self.refreshes += other.refreshes;
+    }
+}
+
 /// Summary attributes lifted from a site's cached entries into the
 /// registration, so broad `discover` filters can select on them.
 const SUMMARY_ATTRS: [&str; 5] = [

@@ -199,9 +199,29 @@ impl SimGrid {
     /// `HierarchicalDirectory::refresh_all` to model soft-state
     /// refresh; see `experiment::run_scale`).
     pub fn hierarchy(&self, ttl: f64) -> Arc<RwLock<HierarchicalDirectory>> {
+        self.hierarchy_range(ttl, 0, self.topo.len())
+    }
+
+    /// A hierarchical directory over only the GRIS servers of topology
+    /// sites `lo..hi` — one broker shard's GIIS registration domain
+    /// (ISSUE 8). `hierarchy` is the `0..len` special case, so a
+    /// 1-shard partition builds the exact directory the unsharded path
+    /// builds: same sites, added in the same (name-sorted) iteration
+    /// order, refreshed by the same `refresh_all` pass.
+    pub fn hierarchy_range(
+        &self,
+        ttl: f64,
+        lo: usize,
+        hi: usize,
+    ) -> Arc<RwLock<HierarchicalDirectory>> {
+        let owned: std::collections::BTreeSet<&str> = (lo..hi.min(self.topo.len()))
+            .map(|i| self.topo.site(i).cfg.name.as_str())
+            .collect();
         let mut dir = HierarchicalDirectory::new(ttl);
         for (site, gris) in self.info.iter() {
-            dir.add_site(site, gris.clone());
+            if owned.contains(site) {
+                dir.add_site(site, gris.clone());
+            }
         }
         dir.advance_to(self.topo.now);
         dir.refresh_all();

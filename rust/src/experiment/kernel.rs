@@ -1,0 +1,224 @@
+//! Kernel throughput sweep (ISSUE 8): how many events per second the
+//! allocation-free discrete-event kernel sustains with 10⁵–10⁶
+//! transfers simultaneously in flight.
+//!
+//! The workload is a *day of traffic* compressed to its stress shape:
+//! a **surge** of `surge` requests all arriving at the same instant
+//! (the kernel pops same-instant events back-to-back with no
+//! integration between them, so admission is a linear ramp straight to
+//! peak concurrency) followed by a **trickle** spread uniformly over
+//! the remaining day, each trickle event integrating the full flow set
+//! forward. The run is bounded by an explicit event budget rather than
+//! by completion — at 10⁵ concurrent flows a full drain is quadratic
+//! and is not what the bench certifies. What it certifies:
+//!
+//! * the surge reaches `peak_in_flight ≥ surge` (every arrival was
+//!   admitted and concurrently in flight), and
+//! * `events / wall_s` — mixed admissions, completions and
+//!   integration steps per wall-clock second — on the steady state
+//!   that allocates nothing: arena event queue, SoA flow columns,
+//!   scratch-buffered rate recomputes.
+//!
+//! The control plane runs sharded ([`super::sharded`]): per-shard
+//! admission batches republish site dynamics once per flush instead of
+//! once per admission — at 10⁵ admissions over hundreds of sites that
+//! is the difference between O(surge·sites) and O(flushes·sites)
+//! publish work. `benches/bench_kernel.rs` records the sweep as
+//! `BENCH_kernel.json`.
+
+use std::time::Instant;
+
+use crate::broker::selectors::SelectorKind;
+use crate::config::GridConfig;
+use crate::simnet::{Request, WorkloadSpec};
+use crate::util::prng::Rng;
+
+use super::open_loop::{run_open_internal, OpenLoopOptions};
+use super::sharded::ShardOptions;
+
+/// One kernel-throughput point.
+#[derive(Debug, Clone)]
+pub struct KernelOptions {
+    /// Topology size.
+    pub sites: usize,
+    pub seed: u64,
+    /// Requests arriving at the same post-warm instant — the
+    /// concurrency level the point certifies.
+    pub surge: usize,
+    /// Requests spread uniformly over the rest of the day.
+    pub trickle: usize,
+    /// Day length in simulated seconds (the trickle span).
+    pub day_s: f64,
+    /// Logical catalog size.
+    pub files: usize,
+    pub replicas_per_file: usize,
+    /// Control-plane sharding for the run.
+    pub shard: ShardOptions,
+    /// Kernel events to process beyond the arrivals before the run is
+    /// cut off (completions + integration at peak concurrency).
+    pub steady_events: usize,
+}
+
+impl Default for KernelOptions {
+    fn default() -> Self {
+        KernelOptions {
+            sites: 64,
+            seed: 0x8E0_57A7E,
+            surge: 100_000,
+            trickle: 2_000,
+            day_s: 86_400.0,
+            files: 512,
+            replicas_per_file: 4,
+            shard: ShardOptions { shards: 8, batch_max: 64, batch_window: 1.0 },
+            steady_events: 2_000,
+        }
+    }
+}
+
+/// Headline numbers of one kernel-throughput run.
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    /// Requests in the trace (`surge + trickle`).
+    pub requests: usize,
+    /// The surge size — the concurrency level this point certifies.
+    pub concurrent: usize,
+    /// Peak simultaneously in-flight transfers actually reached.
+    pub peak_in_flight: usize,
+    /// Kernel events processed before the budget cut the run off.
+    pub events: usize,
+    /// Wall-clock seconds of the event loop (build + warm excluded
+    /// would be better still, but they are O(sites) noise at this
+    /// scale; the loop dominates).
+    pub wall_s: f64,
+    /// `events / wall_s` — the headline.
+    pub events_per_sec: f64,
+    pub finished: usize,
+    pub skipped: usize,
+    pub gave_up: usize,
+    /// Selections whose replica set spanned shard boundaries.
+    pub cross_shard_selections: usize,
+    /// Admission-batch flushes across all shards.
+    pub flushes: usize,
+}
+
+/// Build the surge + trickle trace. Deterministic in `opts.seed`: file
+/// picks come from a dedicated stream, arrival instants are closed
+/// form.
+fn kernel_trace(o: &KernelOptions) -> Vec<Request> {
+    let files = o.files.max(1);
+    let mut rng = Rng::new(o.seed ^ 0x4B52_4E4C); // "KRNL"
+    let mut pick = |rng: &mut Rng| (rng.range(0.0, files as f64) as usize).min(files - 1);
+    let mut requests = Vec::with_capacity(o.surge + o.trickle);
+    for i in 0..o.surge {
+        requests.push(Request {
+            at: 0.0,
+            client: i,
+            file: pick(&mut rng),
+            min_bandwidth: 0.0,
+        });
+    }
+    for j in 0..o.trickle {
+        requests.push(Request {
+            at: o.day_s * (j as f64 + 1.0) / (o.trickle as f64 + 1.0),
+            client: o.surge + j,
+            file: pick(&mut rng),
+            min_bandwidth: 0.0,
+        });
+    }
+    requests
+}
+
+/// Run one kernel-throughput point: ungated open loop (no admission
+/// cap, no GRIS tick, no discovery — the pure data-plane steady
+/// state), sharded control plane, event-budgeted.
+pub fn run_kernel(o: &KernelOptions) -> KernelReport {
+    let cfg = GridConfig::generate(o.sites, o.seed);
+    let spec = WorkloadSpec {
+        clients: 64,
+        files: o.files.max(1),
+        constrained_frac: 0.0,
+        ..Default::default()
+    };
+    let requests = kernel_trace(o);
+    let opts = OpenLoopOptions::open();
+    let budget = requests.len() + o.steady_events;
+    let t = Instant::now();
+    let (open, telemetry) = run_open_internal(
+        &cfg,
+        &spec,
+        &requests,
+        o.replicas_per_file,
+        1,
+        SelectorKind::Forecast,
+        &opts,
+        None,
+        Some(&o.shard),
+        Some(budget),
+    );
+    let wall_s = t.elapsed().as_secs_f64();
+    let telemetry = telemetry.expect("sharded kernel run returns telemetry");
+    KernelReport {
+        requests: requests.len(),
+        concurrent: o.surge,
+        peak_in_flight: open.peak_in_flight,
+        events: open.events,
+        wall_s,
+        events_per_sec: open.events as f64 / wall_s.max(1e-9),
+        finished: open.quality.requests,
+        skipped: open.skipped,
+        gave_up: open.gave_up,
+        cross_shard_selections: telemetry.cross_shard,
+        flushes: telemetry.stats.iter().map(|s| s.flushes).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small point (not 10⁵ — that is the bench's job) must reach
+    /// full surge concurrency and account for every request.
+    #[test]
+    fn surge_reaches_full_concurrency() {
+        let o = KernelOptions {
+            sites: 6,
+            surge: 40,
+            trickle: 5,
+            files: 16,
+            steady_events: 10_000,
+            shard: ShardOptions { shards: 2, batch_max: 8, batch_window: 1.0 },
+            ..Default::default()
+        };
+        let r = run_kernel(&o);
+        assert_eq!(r.requests, 45);
+        assert!(
+            r.peak_in_flight >= 40,
+            "surge must be fully concurrent, peak {}",
+            r.peak_in_flight
+        );
+        assert!(r.events > 0 && r.events_per_sec > 0.0);
+        assert!(r.flushes >= 1);
+        assert_eq!(r.finished + r.skipped + r.gave_up, 45, "every request accounted");
+    }
+
+    #[test]
+    fn kernel_point_is_deterministic_in_sim_outcomes() {
+        let o = KernelOptions {
+            sites: 5,
+            surge: 25,
+            trickle: 3,
+            files: 8,
+            steady_events: 5_000,
+            ..Default::default()
+        };
+        let a = run_kernel(&o);
+        let b = run_kernel(&o);
+        // Wall time differs run to run; the simulated outcomes do not.
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.peak_in_flight, b.peak_in_flight);
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.skipped, b.skipped);
+        assert_eq!(a.cross_shard_selections, b.cross_shard_selections);
+        assert_eq!(a.flushes, b.flushes);
+    }
+}

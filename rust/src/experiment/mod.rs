@@ -34,21 +34,33 @@
 //! weather ([`crate::simnet::WeatherPlan`]) × recovery policy
 //! (fail-fast / retry / retry+failover) on identically seeded grids,
 //! reporting completion rate, time-to-recover, p95 and goodput.
+//!
+//! [`run_quality_sharded`] (ISSUE 8) runs the open-loop driver under a
+//! sharded control plane — contiguous site shards, per-shard GIIS
+//! registration domains and admission batches — with the
+//! [`sharded::ShardOptions::parity`] configuration pinned bit-identical
+//! to the unsharded path. [`run_kernel`] is its throughput companion:
+//! a day-of-traffic surge at 10⁵⁺ concurrent transfers, reporting
+//! kernel events per second (`BENCH_kernel.json`).
 
 pub mod chaos;
 pub mod churn;
 pub mod grid;
+pub mod kernel;
 pub mod open_loop;
 pub mod quality;
 pub mod scale;
+pub mod sharded;
 
 pub use chaos::{run_chaos, ChaosArm, ChaosOptions, ChaosPoint, ChaosReport};
 pub use churn::{run_churn, run_churn_traced, ChurnReport, ChurnStrategyReport};
 pub use grid::SimGrid;
+pub use kernel::{run_kernel, KernelOptions, KernelReport};
 pub use open_loop::{
     run_contention, run_quality_open, AccessMode, ContentionPoint, ContentionReport,
     DiscoveryOptions, OpenLoopOptions, OpenReport, RequestTrace, RetryOptions,
 };
+pub use sharded::{run_quality_sharded, ShardOptions, ShardStats, ShardedReport};
 pub use quality::{
     run_coalloc_quality, run_quality, run_quality_trace, CoallocReport, QualityReport,
 };

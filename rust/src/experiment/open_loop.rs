@@ -33,6 +33,16 @@
 //! [`super::chaos::run_chaos`] for the fault-intensity × policy sweep
 //! built on it.
 //!
+//! With a [`super::sharded::ShardOptions`] (ISSUE 8, via
+//! [`super::run_quality_sharded`]), the control plane partitions along
+//! the registration hierarchy: contiguous site shards
+//! ([`crate::broker::ShardMap`]), one GIIS registration domain per
+//! shard, and per-shard admission batches that republish site dynamics
+//! once per flush instead of once per admission. The parity
+//! configuration (1 shard, batch 1) collapses onto the unsharded
+//! driver bit-for-bit (`it_shard`), and [`super::run_kernel`] drives
+//! this path at 10⁵ concurrent transfers for the throughput bench.
+//!
 //! [`run_contention`] is the load sweep the paper's thesis wants:
 //! arrival rate from idle to saturation, informed (Forecast) vs
 //! uninformed (Random) selection on identical traces, reporting
@@ -44,7 +54,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, RwLock};
 
 use crate::broker::selectors::{Selector, SelectorKind};
-use crate::broker::{entries_to_candidate, Broker, Candidate, RankPolicy};
+use crate::broker::{entries_to_candidate, Broker, Candidate, RankPolicy, ShardMap};
 use crate::config::GridConfig;
 use crate::directory::entry::Entry;
 use crate::directory::fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryIds};
@@ -60,6 +70,7 @@ use super::grid::SimGrid;
 use super::quality::{
     finish_report, pick_from_candidates, pick_replica, request_ad, PickOutcome, QualityReport,
 };
+use super::sharded::{ShardOptions, ShardStats};
 
 /// Timer id of the recurring GRIS dynamics refresh.
 const GRIS_TICK_ID: u64 = u64::MAX;
@@ -314,6 +325,11 @@ pub struct OpenReport {
     /// the trace as `transfer_retry` events ending in a `gave_up`
     /// skip record.
     pub gave_up: usize,
+    /// Kernel events polled by the run's event loop (arrivals,
+    /// completions, query responses, timers — and the terminating
+    /// poll, if the run drained). The kernel-throughput bench divides
+    /// this by wall time.
+    pub events: usize,
 }
 
 struct InFlight {
@@ -339,6 +355,9 @@ enum TimerKind {
     Timeout { flow: usize },
     /// A backed-off request's re-issue instant.
     Resume(PendingRetry),
+    /// A shard's admission-batch window elapsed: flush whatever is
+    /// queued, full or not (ISSUE 8).
+    Flush { shard: usize },
 }
 
 /// A request between attempts: its flow was cancelled (stall, dead
@@ -379,6 +398,41 @@ struct PendingDiscovery {
     fanout: DirectoryFanout,
 }
 
+/// The sharded control plane of one run (ISSUE 8): the site
+/// partition, per-shard admission batches, per-shard GIIS registration
+/// domains, and per-shard outcome accounting. `None` = the unsharded
+/// legacy driver, bit-for-bit the pre-shard behaviour.
+struct ShardState {
+    map: ShardMap,
+    /// Admissions per shard batched before a flush (≥ 1; 1 = flush
+    /// every arrival immediately — the parity configuration).
+    batch_max: usize,
+    /// Max simulated seconds an arrival may sit in a batch before a
+    /// window timer flushes it regardless of depth. Non-positive or
+    /// non-finite = no window timer (batches flush only when full).
+    batch_window: f64,
+    /// Per-shard FIFO admission batches (request ids awaiting flush).
+    batches: Vec<VecDeque<u64>>,
+    /// Whether shard `s` currently has a window timer armed. A flush
+    /// clears it without cancelling the kernel timer; the stale fire
+    /// flushes early, which only tightens the staleness bound.
+    armed: Vec<bool>,
+    /// Per-shard GIIS registration domains (discovery mode only; empty
+    /// otherwise). Domain `s` holds exactly the registrations of
+    /// `map.sites_of(s)`.
+    domains: Vec<Arc<RwLock<HierarchicalDirectory>>>,
+    /// Request id → home shard (plurality owner of its replica set,
+    /// assigned at arrival) — the attribution key for the per-shard
+    /// conservation invariant.
+    home: Vec<usize>,
+    /// Request id → whether its replica set spans shard boundaries.
+    spans: Vec<bool>,
+    stats: Vec<ShardStats>,
+    /// Admissions whose replica set spanned shards — selections that
+    /// had to consult foreign registration domains.
+    cross_shard: usize,
+}
+
 /// Everything one open-loop run mutates, so the admission logic is a
 /// method instead of a 12-argument function.
 struct Driver<'a> {
@@ -394,8 +448,11 @@ struct Driver<'a> {
     inflight: BTreeMap<usize, InFlight>,
     /// Arrivals parked by the admission gate, FIFO.
     waiting: VecDeque<u64>,
-    /// Discovery mode only: the shared GIIS hierarchy.
+    /// Discovery mode only: the shared GIIS hierarchy (unsharded runs;
+    /// a sharded run keeps its per-shard domains in [`ShardState`]).
     hier: Option<Arc<RwLock<HierarchicalDirectory>>>,
+    /// Sharded control plane ([`ShardState`]); `None` = legacy driver.
+    shard: Option<ShardState>,
     /// Kernel query-id allocator (unique across all fan-outs).
     qids: QueryIds,
     /// Live kernel query id → request id.
@@ -443,13 +500,163 @@ impl Driver<'_> {
         id
     }
 
+    /// Count a skip, attributed to the request's home shard — together
+    /// with [`Self::note_gave_up`] and [`Self::note_finish`] this keeps
+    /// the per-shard conservation invariant exact:
+    /// `finished[s] + skipped[s] + gave_up[s] == arrivals[s]`.
+    fn note_skip(&mut self, id: u64) {
+        self.skipped += 1;
+        if let Some(sh) = self.shard.as_mut() {
+            sh.stats[sh.home[id as usize]].skipped += 1;
+        }
+    }
+
+    /// Count an exhausted attempt budget against the home shard.
+    fn note_gave_up(&mut self, id: u64) {
+        self.gave_up += 1;
+        if let Some(sh) = self.shard.as_mut() {
+            sh.stats[sh.home[id as usize]].gave_up += 1;
+        }
+    }
+
+    /// Count a completion against the home shard.
+    fn note_finish(&mut self, id: u64) {
+        if let Some(sh) = self.shard.as_mut() {
+            sh.stats[sh.home[id as usize]].finished += 1;
+        }
+    }
+
+    /// The GIIS domain answering request `id`'s broad query: its home
+    /// shard's registration domain in a sharded run, the single shared
+    /// hierarchy otherwise.
+    fn broad_domain(&self, id: u64) -> Arc<RwLock<HierarchicalDirectory>> {
+        if let Some(sh) = &self.shard {
+            if !sh.domains.is_empty() {
+                return sh.domains[sh.home[id as usize]].clone();
+            }
+        }
+        self.hier.clone().expect("discovery mode wires a hierarchy")
+    }
+
+    /// The GIIS domain holding topology site `site`'s registration —
+    /// a foreign shard's domain when the replica set spans the
+    /// boundary (the cross-shard consult).
+    fn site_domain(&self, site: usize) -> Arc<RwLock<HierarchicalDirectory>> {
+        if let Some(sh) = &self.shard {
+            if !sh.domains.is_empty() {
+                return sh.domains[sh.map.owner(site)].clone();
+            }
+        }
+        self.hier.clone().expect("discovery mode wires a hierarchy")
+    }
+
+    /// An arrival event: gate-check and admit directly (legacy), or
+    /// route into the home shard's admission batch (sharded).
+    fn arrival(&mut self, eng: &mut Engine, id: u64, at: f64) {
+        if self.shard.is_some() {
+            self.shard_arrival(eng, id, at);
+            return;
+        }
+        if self.occupancy() < self.opts.max_in_flight {
+            self.admit(eng, id);
+        } else {
+            if self.opts.trace.on() {
+                self.opts.trace.rec(
+                    at,
+                    id,
+                    Ev::GatePark { occupancy: self.occupancy() as u32 },
+                );
+            }
+            self.waiting.push_back(id);
+        }
+    }
+
+    /// Sharded arrival: resolve the home shard from the replica set,
+    /// queue into its batch, and flush when the batch fills (or arm
+    /// the window timer so it cannot sit forever).
+    fn shard_arrival(&mut self, eng: &mut Engine, id: u64, at: f64) {
+        let file = self.requests[id as usize].file;
+        let (home, spans) = {
+            let sh = self.shard.as_ref().expect("sharded arrival");
+            sh.map.home(&self.grid.placement[file])
+        };
+        let sh = self.shard.as_mut().expect("sharded arrival");
+        sh.home[id as usize] = home;
+        sh.spans[id as usize] = spans;
+        sh.stats[home].arrivals += 1;
+        sh.batches[home].push_back(id);
+        if sh.batches[home].len() >= sh.batch_max {
+            self.flush_shard(eng, home, at);
+            return;
+        }
+        let window = sh.batch_window;
+        if !sh.armed[home] && window.is_finite() && window > 0.0 {
+            sh.armed[home] = true;
+            let tid = self.alloc_timer();
+            self.timers.insert(tid, TimerKind::Flush { shard: home });
+            eng.schedule_tick(at + window, tid);
+        }
+    }
+
+    /// Flush shard `s`'s admission batch FIFO: dynamics are republished
+    /// once for the whole batch (the batching win — the legacy path
+    /// republishes per admission), then each queued arrival is admitted
+    /// or gate-parked exactly as the legacy arrival path would. With
+    /// `batch_max = 1` the flush holds one id and publishes once, so
+    /// the operation sequence is identical to the unsharded arrival —
+    /// the 1-shard parity anchor.
+    fn flush_shard(&mut self, eng: &mut Engine, s: usize, at: f64) {
+        let sh = self.shard.as_mut().expect("sharded flush");
+        sh.armed[s] = false;
+        if sh.batches[s].is_empty() {
+            return; // stale window timer: the batch already flushed full
+        }
+        sh.stats[s].flushes += 1;
+        let mut batch = std::mem::take(&mut sh.batches[s]);
+        let mut published = false;
+        while let Some(id) = batch.pop_front() {
+            if self.occupancy() < self.opts.max_in_flight {
+                if !published {
+                    self.grid.publish_dynamics();
+                    published = true;
+                }
+                self.admit_prepublished(eng, id);
+            } else {
+                if self.opts.trace.on() {
+                    self.opts.trace.rec(
+                        at,
+                        id,
+                        Ev::GatePark { occupancy: self.occupancy() as u32 },
+                    );
+                }
+                self.waiting.push_back(id);
+            }
+        }
+        // Hand the drained deque's allocation back so the steady state
+        // stays allocation-free.
+        self.shard.as_mut().expect("sharded flush").batches[s] = batch;
+    }
+
     /// Admit one request *now*: republish dynamics, then either select
     /// immediately against fresh direct-GRIS data (the legacy,
     /// parity-anchored path) or start the event-driven hierarchical
     /// discovery ([`DiscoveryOptions`]).
     fn admit(&mut self, eng: &mut Engine, id: u64) {
-        let req = &self.requests[id as usize];
         self.grid.publish_dynamics();
+        self.admit_prepublished(eng, id);
+    }
+
+    /// Admission with dynamics already republished — the shard batch
+    /// flush publishes once per flush, not once per admission.
+    fn admit_prepublished(&mut self, eng: &mut Engine, id: u64) {
+        let req = &self.requests[id as usize];
+        if let Some(sh) = self.shard.as_mut() {
+            let home = sh.home[id as usize];
+            sh.stats[home].admitted += 1;
+            if sh.spans[id as usize] {
+                sh.cross_shard += 1;
+            }
+        }
         if self.opts.discovery.is_some() {
             self.begin_discovery(eng, id);
             return;
@@ -499,27 +706,37 @@ impl Driver<'_> {
         let logical = self.grid.files[req.file].clone();
         let size = self.grid.sizes[req.file];
         let now = self.grid.topo.now;
-        let hier = self.hier.clone().expect("discovery mode wires a hierarchy");
-        let mut sites = Vec::new();
-        let mut stale: Vec<Vec<Entry>> = Vec::new();
+        // The broad query lands on the home domain; each replica's
+        // snapshot is read from the domain its site registers in —
+        // the same single directory in the unsharded (and 1-shard)
+        // configuration, a foreign shard's domain when the replica set
+        // spans the boundary. `advance_to` at a fixed instant is
+        // idempotent, so re-advancing the same directory per replica
+        // leaves it bit-identical to the legacy one-lock walk.
         {
-            let mut dir = hier.write().unwrap();
+            let home = self.broad_domain(id);
+            let mut dir = home.write().unwrap();
             dir.advance_to(now);
             dir.note_broad();
-            for &s in &self.grid.placement[req.file] {
-                let name = self.grid.topo.site(s).cfg.name.clone();
-                if let Some((entries, _age)) = dir.cached(&name) {
-                    stale.push(entries.to_vec());
-                    let url = format!("gsiftp://{name}/{logical}");
-                    sites.push((name, url, s));
-                }
+        }
+        let mut sites = Vec::new();
+        let mut stale: Vec<Vec<Entry>> = Vec::new();
+        for &s in &self.grid.placement[req.file] {
+            let name = self.grid.topo.site(s).cfg.name.clone();
+            let dom = self.site_domain(s);
+            let mut dir = dom.write().unwrap();
+            dir.advance_to(now);
+            if let Some((entries, _age)) = dir.cached(&name) {
+                stale.push(entries.to_vec());
+                let url = format!("gsiftp://{name}/{logical}");
+                sites.push((name, url, s));
             }
         }
         if sites.is_empty() {
             // Every replica site's registration expired or was never
             // pushed: the file is undiscoverable right now.
             self.opts.trace.rec(now, id, Ev::RequestSkipped { reason: "undiscoverable" });
-            self.skipped += 1;
+            self.note_skip(id);
             return;
         }
         // Drill-down selection: predicted bandwidth over the *stale*
@@ -592,10 +809,11 @@ impl Driver<'_> {
         };
         if let FanoutStep::Response { site: slot, .. } = pd.fanout.on_query(eng, qid, at) {
             // Only the responding site is queried, so only its
-            // dynamics need republishing at this instant.
+            // dynamics need republishing at this instant. The fresh
+            // answer lands in the domain owning that site.
             self.grid.publish_site(pd.sites[slot].2);
-            let hier = self.hier.clone().expect("discovery mode");
-            let mut dir = hier.write().unwrap();
+            let dom = self.site_domain(pd.sites[slot].2);
+            let mut dir = dom.write().unwrap();
             dir.advance_to(at);
             if let Some(entries) = dir.drill_down(&pd.sites[slot].0) {
                 pd.fresh[slot] = Some(entries);
@@ -664,7 +882,7 @@ impl Driver<'_> {
                     pd.request as u64,
                     Ev::RequestSkipped { reason: "no_replica" },
                 );
-                self.skipped += 1
+                self.note_skip(pd.request as u64)
             }
         }
         // No gate drain here: the event loop runs `drain_gate` after
@@ -737,6 +955,7 @@ impl Driver<'_> {
                     retries: 0,
                     first_failure_at: None,
                 });
+                self.note_finish(id);
             }
             AccessMode::Flow => {
                 let group = self.groups[req.client % self.groups.len()];
@@ -819,7 +1038,7 @@ impl Driver<'_> {
                                 id,
                                 Ev::RequestSkipped { reason: "dead_source" },
                             );
-                            self.skipped += 1
+                            self.note_skip(id)
                         }
                     }
                 }
@@ -838,6 +1057,7 @@ impl Driver<'_> {
                 self.retry_waiting -= 1;
                 self.resume(eng, pr, at);
             }
+            Some(TimerKind::Flush { shard }) => self.flush_shard(eng, shard, at),
             None => {}
         }
     }
@@ -892,7 +1112,7 @@ impl Driver<'_> {
         let r = self.opts.retry.expect("retry configured");
         if pr.attempt >= r.max_attempts {
             self.opts.trace.rec(at, pr.request as u64, Ev::RequestSkipped { reason: "gave_up" });
-            self.gave_up += 1;
+            self.note_gave_up(pr.request as u64);
             return;
         }
         let exp = r.backoff_base * r.backoff_factor.powi(pr.attempt.saturating_sub(1) as i32);
@@ -1032,6 +1252,7 @@ impl Driver<'_> {
             retries: fi.retries,
             first_failure_at: fi.first_failure_at,
         });
+        self.note_finish(fi.request as u64);
     }
 
     /// The flight recorder's time-series sampler (SAMPLE_TICK): global
@@ -1039,15 +1260,28 @@ impl Driver<'_> {
     /// plus one utilization row per site link with live flows.
     fn sample(&mut self, eng: &Engine) {
         let now = self.grid.topo.now;
-        let giis_live = self
-            .hier
-            .as_ref()
-            .map(|h| {
-                let mut dir = h.write().unwrap();
-                dir.advance_to(now);
-                dir.giis().registrations().len() as u32
-            })
-            .unwrap_or(0);
+        let giis_live = if let Some(sh) =
+            self.shard.as_ref().filter(|sh| !sh.domains.is_empty())
+        {
+            // Sharded: liveness is the sum over registration domains.
+            sh.domains
+                .iter()
+                .map(|d| {
+                    let mut dir = d.write().unwrap();
+                    dir.advance_to(now);
+                    dir.giis().registrations().len() as u32
+                })
+                .sum()
+        } else {
+            self.hier
+                .as_ref()
+                .map(|h| {
+                    let mut dir = h.write().unwrap();
+                    dir.advance_to(now);
+                    dir.giis().registrations().len() as u32
+                })
+                .unwrap_or(0)
+        };
         self.opts.trace.rec(
             now,
             SAMPLE_REQ,
@@ -1095,6 +1329,34 @@ pub fn run_quality_open(
     opts: &OpenLoopOptions,
     engine: Option<std::sync::Arc<crate::runtime::engine::EngineHandle>>,
 ) -> OpenReport {
+    run_open_internal(cfg, spec, requests, replicas_per_file, warm, kind, opts, engine, None, None)
+        .0
+}
+
+/// Per-shard telemetry extracted from a sharded run — what
+/// [`super::sharded::run_quality_sharded`] wraps into its report.
+pub(crate) struct ShardTelemetry {
+    pub stats: Vec<ShardStats>,
+    pub cross_shard: usize,
+}
+
+/// The full driver: [`run_quality_open`] with `shard: None`, the
+/// sharded control plane (ISSUE 8) with `shard: Some(..)`, and an
+/// optional override of the default event budget (the kernel bench
+/// bounds its run by events, not by request completion).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_open_internal(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    replicas_per_file: usize,
+    warm: usize,
+    kind: SelectorKind,
+    opts: &OpenLoopOptions,
+    engine: Option<std::sync::Arc<crate::runtime::engine::EngineHandle>>,
+    shard: Option<&ShardOptions>,
+    event_budget: Option<usize>,
+) -> (OpenReport, Option<ShardTelemetry>) {
     let mut grid = SimGrid::build(cfg, spec, replicas_per_file, 64);
     grid.warm(warm);
     let selector = Selector::new(kind, cfg.seed);
@@ -1104,7 +1366,14 @@ pub fn run_quality_open(
     };
     let broker = grid.broker(policy);
 
-    let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+    // Pre-size the flow columns and the event arena for the request
+    // count so the kernel's steady state allocates nothing (ISSUE 8);
+    // behaviourally identical to `Engine::new` — capacity only.
+    let prealloc = requests.len().min(1 << 21);
+    let mut eng = Engine::with_capacity(
+        FlowSet::with_capacity(f64::INFINITY, prealloc),
+        prealloc + 64,
+    );
     eng.trace = opts.trace.clone();
     // Group 0 of the base set stays empty; every workload client gets
     // its own downlink group so client pipes cap independently.
@@ -1149,14 +1418,45 @@ pub fn run_quality_open(
     if opts.trace.on() && opts.sample_period.is_finite() && opts.sample_period > 0.0 {
         eng.schedule_tick(t0 + opts.sample_period, SAMPLE_TICK_ID);
     }
-    // Discovery mode: wire the GIIS hierarchy (initial soft-state push
-    // at t0) and its periodic re-registration tick.
-    let hier = opts.discovery.as_ref().map(|d| {
+    // Discovery mode: wire the GIIS registration domain(s) (initial
+    // soft-state push at t0) and the periodic re-registration tick. An
+    // unsharded run builds one grid-wide hierarchy; a sharded run
+    // builds one domain per shard over exactly its owned site range —
+    // 1 shard builds the `0..len` range, i.e. the identical directory.
+    if let Some(d) = opts.discovery.as_ref() {
         if d.refresh_period.is_finite() && d.refresh_period > 0.0 {
             eng.schedule_tick(t0 + d.refresh_period, REG_TICK_ID);
         }
-        grid.hierarchy(d.registration_ttl)
+    }
+    let shard_state = shard.map(|so| {
+        let map = ShardMap::contiguous(grid.topo.len(), so.shards);
+        let n = map.shards();
+        let domains = match opts.discovery.as_ref() {
+            Some(d) => (0..n)
+                .map(|s| {
+                    let r = map.sites_of(s);
+                    grid.hierarchy_range(d.registration_ttl, r.start, r.end)
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        ShardState {
+            map,
+            batch_max: so.batch_max.max(1),
+            batch_window: so.batch_window,
+            batches: vec![VecDeque::new(); n],
+            armed: vec![false; n],
+            domains,
+            home: vec![0; requests.len()],
+            spans: vec![false; requests.len()],
+            stats: vec![ShardStats::default(); n],
+            cross_shard: 0,
+        }
     });
+    let hier = match &shard_state {
+        Some(_) => None,
+        None => opts.discovery.as_ref().map(|d| grid.hierarchy(d.registration_ttl)),
+    };
 
     let mut driver = Driver {
         grid: &mut grid,
@@ -1169,6 +1469,7 @@ pub fn run_quality_open(
         inflight: BTreeMap::new(),
         waiting: VecDeque::new(),
         hier,
+        shard: shard_state,
         qids: QueryIds::new(),
         qid_map: BTreeMap::new(),
         pending_disc: BTreeMap::new(),
@@ -1188,8 +1489,9 @@ pub fn run_quality_open(
 
     // Event budget: arrivals + completions + GRIS ticks for any sane
     // run fit easily; a stalled-but-ticking grid (faulted sources with
-    // a finite refresh period) terminates instead of spinning.
-    let max_events = 1_000_000 + 100 * requests.len();
+    // a finite refresh period) terminates instead of spinning. The
+    // kernel bench overrides it to bound the run by events processed.
+    let max_events = event_budget.unwrap_or(1_000_000 + 100 * requests.len());
     let mut events = 0usize;
     while driver.finished.len() + driver.skipped + driver.gave_up < requests.len() {
         events += 1;
@@ -1219,18 +1521,7 @@ pub fn run_quality_open(
         match signal {
             Some(Signal::Arrival { id, at }) => {
                 driver.opts.trace.rec(at, id, Ev::Arrival);
-                if driver.occupancy() < driver.opts.max_in_flight {
-                    driver.admit(&mut eng, id);
-                } else {
-                    if driver.opts.trace.on() {
-                        driver.opts.trace.rec(
-                            at,
-                            id,
-                            Ev::GatePark { occupancy: driver.occupancy() as u32 },
-                        );
-                    }
-                    driver.waiting.push_back(id);
-                }
+                driver.arrival(&mut eng, id, at);
             }
             Some(Signal::FlowDone(c)) => driver.complete(&c),
             Some(Signal::Query { id, at }) => driver.on_query(&mut eng, id, at),
@@ -1241,7 +1532,25 @@ pub fn run_quality_open(
                 // tick after its heal it re-registers by itself, with
                 // no special recovery path (ISSUE 7).
                 driver.grid.publish_dynamics();
-                if let (Some(h), Some(d)) = (&driver.hier, &driver.opts.discovery) {
+                if driver.shard.as_ref().is_some_and(|sh| !sh.domains.is_empty()) {
+                    // Sharded: each live site re-registers into its
+                    // owner shard's domain. One shard walks `0..len`
+                    // in index order — the unsharded pass exactly.
+                    let d = driver.opts.discovery.as_ref().expect("REG_TICK implies discovery");
+                    let now = driver.grid.topo.now;
+                    let sh = driver.shard.as_ref().expect("checked above");
+                    for (s, dom) in sh.domains.iter().enumerate() {
+                        let mut dir = dom.write().unwrap();
+                        dir.advance_to(now);
+                        for i in sh.map.sites_of(s) {
+                            if driver.grid.topo.site_alive(i) {
+                                let name = driver.grid.topo.site(i).cfg.name.clone();
+                                dir.refresh_site(&name);
+                            }
+                        }
+                    }
+                    eng.schedule_tick(now + d.refresh_period, REG_TICK_ID);
+                } else if let (Some(h), Some(d)) = (&driver.hier, &driver.opts.discovery) {
                     let mut dir = h.write().unwrap();
                     dir.advance_to(driver.grid.topo.now);
                     for i in 0..driver.grid.topo.len() {
@@ -1288,17 +1597,18 @@ pub fn run_quality_open(
             fi.request as u64,
             Ev::RequestSkipped { reason: "wind_down" },
         );
-        driver.skipped += 1;
+        driver.note_skip(fi.request as u64);
     }
-    if driver.opts.trace.on() {
-        for (&id, _) in driver.pending_disc.iter() {
-            driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
-        }
-        for &id in driver.waiting.iter() {
-            driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
-        }
+    let in_discovery: Vec<u64> = driver.pending_disc.keys().copied().collect();
+    for id in in_discovery {
+        driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
+        driver.note_skip(id);
     }
-    driver.skipped += driver.pending_disc.len() + driver.waiting.len();
+    let parked: Vec<u64> = driver.waiting.drain(..).collect();
+    for id in parked {
+        driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
+        driver.note_skip(id);
+    }
     // Requests still sitting out a backoff when the run wound down
     // (e.g. a blown event budget): surface them as skipped too.
     for (_, k) in std::mem::take(&mut driver.timers) {
@@ -1308,10 +1618,23 @@ pub fn run_quality_open(
                 pr.request as u64,
                 Ev::RequestSkipped { reason: "wind_down" },
             );
-            driver.skipped += 1;
+            driver.note_skip(pr.request as u64);
         }
     }
     driver.retry_waiting = 0;
+    // Arrivals still waiting in an unflushed shard batch (a window
+    // longer than the residual run, or a blown event budget) never
+    // reached admission: skipped, attributed to their home shard so
+    // the per-shard conservation invariant stays exact.
+    let unflushed: Vec<u64> = driver
+        .shard
+        .as_mut()
+        .map(|sh| sh.batches.iter_mut().flat_map(|b| b.drain(..)).collect())
+        .unwrap_or_default();
+    for id in unflushed {
+        driver.opts.trace.rec(wind_down_at, id, Ev::RequestSkipped { reason: "wind_down" });
+        driver.note_skip(id);
+    }
 
     let mut durations = Vec::with_capacity(driver.finished.len());
     let mut bandwidths = Vec::with_capacity(driver.finished.len());
@@ -1340,8 +1663,23 @@ pub fn run_quality_open(
             .fold(f64::NEG_INFINITY, f64::max);
         (last - first).max(0.0)
     };
-    let discovery_stats = driver.hier.as_ref().map(|h| h.read().unwrap().stats());
-    OpenReport {
+    let discovery_stats = if let Some(sh) =
+        driver.shard.as_ref().filter(|sh| !sh.domains.is_empty())
+    {
+        // One grid-wide total over the per-shard domains.
+        let mut total = crate::directory::hier::DiscoveryStats::default();
+        for d in &sh.domains {
+            total.merge(&d.read().unwrap().stats());
+        }
+        Some(total)
+    } else {
+        driver.hier.as_ref().map(|h| h.read().unwrap().stats())
+    };
+    let telemetry = driver
+        .shard
+        .take()
+        .map(|sh| ShardTelemetry { stats: sh.stats, cross_shard: sh.cross_shard });
+    let report = OpenReport {
         quality: finish_report(kind.name(), durations, &bandwidths, &slowdowns, optimal_hits),
         makespan,
         peak_in_flight: driver.peak_in_flight,
@@ -1352,7 +1690,9 @@ pub fn run_quality_open(
         retries: driver.retries,
         failovers: driver.failovers,
         gave_up: driver.gave_up,
-    }
+        events,
+    };
+    (report, telemetry)
 }
 
 /// One arrival-rate point of the load sweep.

@@ -1,0 +1,122 @@
+//! Sharded broker runs (ISSUE 8 tentpole): the open-loop driver with
+//! its control plane partitioned along the PR 5 registration
+//! hierarchy.
+//!
+//! [`run_quality_sharded`] is [`super::run_quality_open`] plus a
+//! [`ShardOptions`]: the grid's sites are split into contiguous shards
+//! ([`crate::broker::ShardMap`]), each shard runs its own GIIS
+//! registration domain (its sites soft-state register only there) and
+//! its own **admission batch** — arrivals queue per home shard and
+//! flush together, republishing site dynamics once per flush instead
+//! of once per admission. Requests whose replica set spans shards pay
+//! a *cross-shard consult*: their drill-downs and snapshot reads hit
+//! foreign domains, counted in
+//! [`ShardedReport::cross_shard_selections`].
+//!
+//! The parity contract (same discipline as PRs 4–7): the
+//! [`ShardOptions::parity`] configuration — 1 shard, batch size 1 —
+//! collapses every sharded code path onto the unsharded one
+//! operation-for-operation, and the `it_shard` suite pins the two
+//! reports bit-for-bit. Scaling knobs only ever *add* behaviour.
+
+use crate::broker::selectors::SelectorKind;
+use crate::config::GridConfig;
+use crate::simnet::{Request, WorkloadSpec};
+
+use super::open_loop::{run_open_internal, OpenLoopOptions, OpenReport};
+
+/// Control-plane partitioning knobs for one sharded run.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardOptions {
+    /// Number of broker shards; clamped to `[1, sites]`.
+    pub shards: usize,
+    /// Admissions batched per shard before a flush (≥ 1). 1 flushes
+    /// every arrival at its own instant — no batching delay at all.
+    pub batch_max: usize,
+    /// Maximum simulated seconds an arrival waits in a partial batch
+    /// before a window timer flushes it. Non-finite or ≤ 0 disables
+    /// the timer: batches then flush only when full, and leftovers are
+    /// wound down as skipped.
+    pub batch_window: f64,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions { shards: 4, batch_max: 8, batch_window: 5.0 }
+    }
+}
+
+impl ShardOptions {
+    /// The parity configuration: one shard, no batching. Runs the
+    /// sharded code path but is bit-identical to the unsharded driver
+    /// (the `it_shard` anchor).
+    pub fn parity() -> ShardOptions {
+        ShardOptions { shards: 1, batch_max: 1, batch_window: 0.0 }
+    }
+}
+
+/// Per-shard accounting of one sharded run. The driver maintains the
+/// conservation invariant
+/// `finished + skipped + gave_up == arrivals`
+/// exactly, per shard — every arrival routed to a shard is eventually
+/// attributed back to it, whatever its fate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Arrivals whose home shard this is.
+    pub arrivals: usize,
+    /// Arrivals that reached admission (selection ran).
+    pub admitted: usize,
+    /// Requests that delivered their last byte.
+    pub finished: usize,
+    /// Requests skipped (undiscoverable, no replica, dead source,
+    /// wind-down — including arrivals still in an unflushed batch).
+    pub skipped: usize,
+    /// Requests that exhausted their retry attempt budget.
+    pub gave_up: usize,
+    /// Admission-batch flushes (full batches + window-timer fires).
+    pub flushes: usize,
+}
+
+/// A sharded run's outcome: the ordinary open-loop report plus the
+/// shard-level telemetry.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub open: OpenReport,
+    /// Per-shard accounting, indexed by shard.
+    pub shards: Vec<ShardStats>,
+    /// Admissions whose replica set spanned shard boundaries — the
+    /// selections that consulted foreign registration domains.
+    pub cross_shard_selections: usize,
+}
+
+/// [`super::run_quality_open`] under a sharded control plane. Same
+/// grid, same workload, same selection policy — only the information
+/// plane (registration domains) and the admission cadence (per-shard
+/// batches) change.
+#[allow(clippy::too_many_arguments)]
+pub fn run_quality_sharded(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    replicas_per_file: usize,
+    warm: usize,
+    kind: SelectorKind,
+    opts: &OpenLoopOptions,
+    shard: &ShardOptions,
+    engine: Option<std::sync::Arc<crate::runtime::engine::EngineHandle>>,
+) -> ShardedReport {
+    let (open, telemetry) = run_open_internal(
+        cfg,
+        spec,
+        requests,
+        replicas_per_file,
+        warm,
+        kind,
+        opts,
+        engine,
+        Some(shard),
+        None,
+    );
+    let t = telemetry.expect("sharded run returns shard telemetry");
+    ShardedReport { open, shards: t.stats, cross_shard_selections: t.cross_shard }
+}

@@ -12,6 +12,12 @@
 //! and (4) ranking matches — e.g. by available space or by predicted
 //! transfer bandwidth derived from GridFTP instrumentation history.
 //!
+//! The repo-level `ARCHITECTURE.md` is the map of how these layers
+//! stack, the kernel's event/determinism contract, the broker shard
+//! boundary and the life of one request; `BENCHMARKS.md` documents
+//! every recorded `BENCH_*.json` artifact. This crate doc is the
+//! module-level index.
+//!
 //! Every substrate the paper depends on is implemented here:
 //!
 //! * [`classad`] — the Condor ClassAd language: lexer, parser, three-valued
@@ -34,6 +40,12 @@
 //!   kernel (`simnet::engine`) under which many transfers are in flight
 //!   at once, sharing site links and per-client downlinks — the
 //!   contention regime the paper's dynamic-information thesis targets.
+//!   The kernel's steady state is **allocation-free**: an arena-backed
+//!   event queue (`simnet::arena`), struct-of-arrays flow columns with
+//!   scratch-buffered bandwidth recomputes (`simnet::flows`), and
+//!   capacity pre-sizing — 10⁵ concurrent flows without a heap
+//!   allocation in the hot loop (`experiment::run_kernel` measures
+//!   the events/sec this buys).
 //!   Its failure model is **grid weather** (`simnet::weather`): seeded
 //!   crash/recover and link-degrade/restore schedules over explicit
 //!   `[at, heal_at)` intervals, against which every request path —
@@ -49,7 +61,13 @@
 //!   path; Python never runs at request time.
 //! * [`broker`] — the paper's contribution: the decentralized storage
 //!   broker (Search / Match / Access phases) plus baseline selectors and a
-//!   centralized-manager comparator.
+//!   centralized-manager comparator. At scale the control plane
+//!   **shards** along the registration hierarchy (`broker::shard`):
+//!   contiguous site slices, each with its own GIIS registration
+//!   domain and batched admissions, cross-shard consults only when a
+//!   replica set spans shards — and the 1-shard configuration is
+//!   pinned bit-identical to the unsharded driver
+//!   (`experiment::run_quality_sharded`, `tests/it_shard.rs`).
 //! * [`coalloc`] — co-allocated (striped) Access: a stripe planner that
 //!   splits one logical file across the broker's top-K replicas in
 //!   proportion to forecast bandwidth (clipped to the client downlink —

@@ -15,6 +15,9 @@
 //!   request trace under seeded crash/flap schedules, once per recovery
 //!   policy (fail-fast / retry / retry+failover), and reports the
 //!   completion-rate gap. Fully deterministic: same flags, same output.
+//! * `kernel`   — one kernel-throughput point (ISSUE 8): a same-instant
+//!   surge to the requested concurrency on the sharded control plane,
+//!   reporting events/sec; `--out` writes the JSON point.
 //! * `trace-summary` — critical-path analysis of an exported trace
 //!   (per-phase p50/p95 breakdown, report parity, slowest requests).
 //!
@@ -31,7 +34,8 @@ use globus_replica::directory::schema;
 use globus_replica::directory::server::DirectoryServer;
 use globus_replica::directory::{Entry, Giis, Gris};
 use globus_replica::experiment::{
-    run_chaos, run_quality_open, ChaosArm, ChaosOptions, OpenLoopOptions, RetryOptions,
+    run_chaos, run_kernel, run_quality_open, ChaosArm, ChaosOptions, KernelOptions,
+    OpenLoopOptions, RetryOptions, ShardOptions,
 };
 use globus_replica::metrics::Metrics;
 use globus_replica::simnet::{WeatherSpec, Workload, WorkloadSpec};
@@ -59,6 +63,12 @@ commands:
                                  (fail-fast / retry / retry+failover) on
                                  identically seeded grids; --out writes
                                  the deterministic JSON report
+  kernel   [--surge N] [--trickle N] [--sites N] [--shards N]
+           [--batch N] [--window S] [--steady-events N] [--seed K]
+           [--out FILE]
+                                 one kernel-throughput point: surge to N
+                                 concurrent transfers on the sharded
+                                 control plane, report events/sec
   trace-summary <file> [--top N] [--metrics] [--json]
                                  critical-path breakdown of a
                                  TRACE_*.json / .jsonl artifact
@@ -75,6 +85,7 @@ fn main() {
         "select" => cmd_select(&args),
         "simulate" => cmd_simulate(&args),
         "chaos" => cmd_chaos(&args),
+        "kernel" => cmd_kernel(&args),
         "trace-summary" => cmd_trace_summary(&args),
         _ => print!("{USAGE}"),
     }
@@ -422,6 +433,57 @@ fn cmd_chaos(args: &Args) {
             ),
         );
         let path = args.str_or("out", "CHAOS_report.json");
+        match std::fs::write(&path, Json::Obj(root).to_string()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+fn cmd_kernel(args: &Args) {
+    use std::collections::BTreeMap;
+    use globus_replica::util::json::Json;
+
+    let defaults = KernelOptions::default();
+    let o = KernelOptions {
+        sites: args.usize_or("sites", defaults.sites),
+        seed: args.u64_or("seed", defaults.seed),
+        surge: args.usize_or("surge", 20_000),
+        trickle: args.usize_or("trickle", 500),
+        steady_events: args.usize_or("steady-events", defaults.steady_events),
+        shard: ShardOptions {
+            shards: args.usize_or("shards", defaults.shard.shards),
+            batch_max: args.usize_or("batch", defaults.shard.batch_max),
+            batch_window: args.f64_or("window", defaults.shard.batch_window),
+        },
+        ..defaults
+    };
+    let r = run_kernel(&o);
+    println!(
+        "kernel: {} requests ({} surged), peak in flight {}, {} events in {:.2}s = {:.0} events/sec",
+        r.requests, r.concurrent, r.peak_in_flight, r.events, r.wall_s, r.events_per_sec
+    );
+    println!(
+        "shards {}: {} flushes, {} cross-shard selections; finished {} skipped {} gave_up {}",
+        o.shard.shards, r.flushes, r.cross_shard_selections, r.finished, r.skipped, r.gave_up
+    );
+    if args.has("out") {
+        let mut root = BTreeMap::new();
+        root.insert("point".to_string(), Json::Str("kernel".to_string()));
+        root.insert("sites".to_string(), Json::Num(o.sites as f64));
+        root.insert("shards".to_string(), Json::Num(o.shard.shards as f64));
+        root.insert("requests".to_string(), Json::Num(r.requests as f64));
+        root.insert("concurrent".to_string(), Json::Num(r.concurrent as f64));
+        root.insert("peak_in_flight".to_string(), Json::Num(r.peak_in_flight as f64));
+        root.insert("events".to_string(), Json::Num(r.events as f64));
+        root.insert("wall_s".to_string(), Json::Num(r.wall_s));
+        root.insert("events_per_sec".to_string(), Json::Num(r.events_per_sec));
+        root.insert("flushes".to_string(), Json::Num(r.flushes as f64));
+        root.insert(
+            "cross_shard_selections".to_string(),
+            Json::Num(r.cross_shard_selections as f64),
+        );
+        let path = args.str_or("out", "KERNEL_point.json");
         match std::fs::write(&path, Json::Obj(root).to_string()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),

@@ -1,4 +1,5 @@
-//! The open-loop discrete-event kernel (ISSUE 4 tentpole).
+//! The open-loop discrete-event kernel (ISSUE 4 tentpole; made
+//! allocation-free and shard-aware by ISSUE 8).
 //!
 //! Before this module, every experiment replayed requests *serially*:
 //! the clock jumped to each arrival and that one transfer ran to
@@ -8,8 +9,10 @@
 //!
 //! * **arrivals** — requests admitted at their Poisson instants
 //!   ([`Engine::schedule_arrival`]),
-//! * **timers** — GRIS dynamics refresh ticks and the co-allocation
-//!   scheduler's maintenance ticks ([`Engine::schedule_tick`]),
+//! * **timers** — GRIS dynamics refresh ticks, the co-allocation
+//!   scheduler's maintenance ticks, and the sharded broker's
+//!   per-shard admission-batch flush timers
+//!   ([`Engine::schedule_tick`]),
 //! * **directory queries** — in-flight GRIS/GIIS round trips whose
 //!   responses land after a simulated network latency
 //!   ([`Engine::schedule_query`]; driven by
@@ -29,10 +32,24 @@
 //! replayable from its seed. Like [`FlowSet`], the engine borrows the
 //! [`Topology`] per call instead of owning it, which lets drivers keep
 //! snapshot/rollback idioms (`clone_for_probe`) unchanged.
+//!
+//! ## Steady-state allocation freedom (ISSUE 8)
+//!
+//! The schedule lives in an [`EventArena`] — a reusable 4-ary min-heap
+//! slab with the same `(time, insertion order)` total order the old
+//! `BinaryHeap<Reverse<Sched>>` had, so the swap is bit-transparent —
+//! and flow completions are collected into one reusable buffer
+//! ([`FlowSet::advance_some_into`]). After warm-up, an event step
+//! allocates nothing: a 10⁵–10⁶-request day of traffic runs at a flat
+//! memory ceiling (measured by `bench_kernel`, reported as events/sec
+//! in `BENCH_kernel.json`). Back-to-back events at the *same* instant
+//! pop without re-integrating the flow set, which is what makes a
+//! same-instant arrival surge (the `run_kernel` ramp) linear in the
+//! surge size rather than quadratic.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
+use crate::simnet::arena::EventArena;
 use crate::simnet::{Completion, FlowSet, Topology};
 use crate::trace::{Ev, TraceHandle, KERNEL_REQ};
 
@@ -53,7 +70,8 @@ const STALL_CHUNKS_MAX: usize = 100_000;
 pub enum Signal {
     /// A scheduled request arrival reached its instant.
     Arrival { id: u64, at: f64 },
-    /// A scheduled timer fired (GRIS refresh, scheduler maintenance).
+    /// A scheduled timer fired (GRIS refresh, scheduler maintenance,
+    /// shard-batch flush).
     Tick { id: u64, at: f64 },
     /// A scheduled directory query resolved (response arrived, or its
     /// deadline/cutoff passed — the scheduler does not distinguish;
@@ -70,31 +88,13 @@ enum SchedKind {
     Query(u64),
 }
 
-/// A scheduled queue entry; ordered by time, ties by insertion order.
-#[derive(Debug, Clone, Copy)]
-struct Sched {
-    at: f64,
-    seq: u64,
-    kind: SchedKind,
-}
-
-impl PartialEq for Sched {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq && self.kind == other.kind
-    }
-}
-
-impl Eq for Sched {}
-
-impl Ord for Sched {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
-    }
-}
-
-impl PartialOrd for Sched {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+impl SchedKind {
+    fn into_signal(self, at: f64) -> Signal {
+        match self {
+            SchedKind::Arrival(id) => Signal::Arrival { id, at },
+            SchedKind::Tick(id) => Signal::Tick { id, at },
+            SchedKind::Query(id) => Signal::Query { id, at },
+        }
     }
 }
 
@@ -108,9 +108,14 @@ pub struct Engine {
     /// Flight-recorder handle; disabled by default, in which case
     /// dispatch accounting costs one branch per delivered signal.
     pub trace: TraceHandle,
-    queue: BinaryHeap<std::cmp::Reverse<Sched>>,
+    /// Arena-backed schedule: time order, FIFO ties (the exact order
+    /// the original binary heap produced).
+    queue: EventArena<SchedKind>,
     pending: VecDeque<Completion>,
-    seq: u64,
+    /// Reusable completion buffer for `advance_some_into` — drained
+    /// into `pending` after every integration, never reallocated in
+    /// steady state.
+    done_buf: Vec<Completion>,
 }
 
 impl Engine {
@@ -118,9 +123,21 @@ impl Engine {
         Engine {
             flows,
             trace: TraceHandle::disabled(),
-            queue: BinaryHeap::new(),
+            queue: EventArena::new(),
             pending: VecDeque::new(),
-            seq: 0,
+            done_buf: Vec::new(),
+        }
+    }
+
+    /// [`Engine::new`] with the schedule arena pre-sized for `events`
+    /// concurrent entries — the surge path reserves once up front.
+    pub fn with_capacity(flows: FlowSet, events: usize) -> Engine {
+        Engine {
+            flows,
+            trace: TraceHandle::disabled(),
+            queue: EventArena::with_capacity(events),
+            pending: VecDeque::new(),
+            done_buf: Vec::new(),
         }
     }
 
@@ -138,27 +155,21 @@ impl Engine {
         Some(sig)
     }
 
-    fn push(&mut self, at: f64, kind: SchedKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(std::cmp::Reverse(Sched { at, seq, kind }));
-    }
-
     /// Schedule a request arrival at absolute simulated time `at`.
     pub fn schedule_arrival(&mut self, at: f64, id: u64) {
-        self.push(at, SchedKind::Arrival(id));
+        self.queue.push(at, SchedKind::Arrival(id));
     }
 
     /// Schedule a timer at absolute simulated time `at`.
     pub fn schedule_tick(&mut self, at: f64, id: u64) {
-        self.push(at, SchedKind::Tick(id));
+        self.queue.push(at, SchedKind::Tick(id));
     }
 
     /// Schedule a directory-query resolution at absolute simulated
     /// time `at`. Ids are caller-allocated and must be unique across
     /// live queries (see `directory::fanout::QueryIds`).
     pub fn schedule_query(&mut self, at: f64, id: u64) {
-        self.push(at, SchedKind::Query(id));
+        self.queue.push(at, SchedKind::Query(id));
     }
 
     /// Scheduled entries (arrivals + ticks) not yet delivered.
@@ -166,14 +177,20 @@ impl Engine {
         self.queue.len()
     }
 
-    /// Progress metric for stall detection: delivered bytes grow and
-    /// connection-setup leads shrink whenever *anything* moved.
-    fn progress(&self) -> f64 {
-        self.flows
-            .flows()
-            .iter()
-            .map(|f| f.delivered - f.lead)
-            .sum()
+    /// Integrate live flows for up to `dt`; buffer all but the first
+    /// completion and deliver that one, or report `None` if the whole
+    /// budget passed quietly. Uses the reusable `done_buf`.
+    fn integrate(&mut self, topo: &mut Topology, dt: f64) -> Option<Signal> {
+        self.done_buf.clear();
+        // Field-disjoint borrows: `flows` integrates into `done_buf`.
+        let Engine { flows, done_buf, .. } = self;
+        flows.advance_some_into(topo, dt, done_buf);
+        if self.done_buf.is_empty() {
+            return None;
+        }
+        let first = self.done_buf[0];
+        self.pending.extend(self.done_buf.drain(1..));
+        self.deliver(Signal::FlowDone(first))
     }
 
     /// Advance simulated time to the earliest event and return it:
@@ -187,36 +204,26 @@ impl Engine {
             return self.deliver(Signal::FlowDone(c));
         }
         loop {
-            let next_at = self.queue.peek().map(|r| r.0.at);
+            let next_at = self.queue.peek_at();
             if self.flows.live() == 0 {
                 // Pure scheduling: jump the clock to the next entry.
-                let s = self.queue.pop()?.0;
-                topo.advance_to(s.at);
-                return self.deliver(match s.kind {
-                    SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
-                    SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
-                    SchedKind::Query(id) => Signal::Query { id, at: s.at },
-                });
+                let (at, kind) = self.queue.pop()?;
+                topo.advance_to(at);
+                return self.deliver(kind.into_signal(at));
             }
             match next_at {
                 Some(at) if at <= topo.now + 1e-12 => {
                     // The scheduled instant is now; completions at this
                     // instant were delivered on the way here.
-                    let s = self.queue.pop().expect("peeked entry").0;
-                    topo.advance_to(s.at);
-                    return self.deliver(match s.kind {
-                        SchedKind::Arrival(id) => Signal::Arrival { id, at: s.at },
-                        SchedKind::Tick(id) => Signal::Tick { id, at: s.at },
-                        SchedKind::Query(id) => Signal::Query { id, at: s.at },
-                    });
+                    let (at, kind) = self.queue.pop().expect("peeked entry");
+                    topo.advance_to(at);
+                    return self.deliver(kind.into_signal(at));
                 }
                 Some(at) => {
                     // Integrate flows up to the scheduled instant; a
                     // completion on the way preempts it.
-                    let (_, mut done) = self.flows.advance_some(topo, at - topo.now);
-                    if let Some(first) = done.first().cloned() {
-                        self.pending.extend(done.drain(1..));
-                        return self.deliver(Signal::FlowDone(first));
+                    if let Some(sig) = self.integrate(topo, at - topo.now) {
+                        return Some(sig);
                     }
                     // Reached the instant (advance_some consumed the
                     // whole budget): snap exactly, loop pops it.
@@ -227,14 +234,14 @@ impl Engine {
                     // bounded chunks; give up when nothing moves.
                     let mut chunks = 0usize;
                     loop {
-                        let before = self.progress();
-                        let (_, mut done) = self.flows.advance_some(topo, STALL_CHUNK_S);
-                        if let Some(first) = done.first().cloned() {
-                            self.pending.extend(done.drain(1..));
-                            return self.deliver(Signal::FlowDone(first));
+                        let before = self.flows.progress_metric();
+                        if let Some(sig) = self.integrate(topo, STALL_CHUNK_S) {
+                            return Some(sig);
                         }
                         chunks += 1;
-                        if self.progress() <= before + 1e-9 || chunks >= STALL_CHUNKS_MAX {
+                        if self.flows.progress_metric() <= before + 1e-9
+                            || chunks >= STALL_CHUNKS_MAX
+                        {
                             return None;
                         }
                     }
@@ -382,5 +389,27 @@ mod tests {
             (log, topo.now)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn preallocated_engine_behaves_identically() {
+        let run = |prealloc: bool| {
+            let mut topo = flat_topo(3);
+            let mut eng = if prealloc {
+                Engine::with_capacity(FlowSet::with_capacity(1e6, 8), 32)
+            } else {
+                Engine::new(FlowSet::new(1e6))
+            };
+            eng.flows.add(&topo, 0, 2e6, 0.0);
+            eng.flows.add(&topo, 1, 1e6, 0.5);
+            eng.schedule_tick(1.5, 1);
+            eng.schedule_arrival(2.5, 2);
+            let mut log = Vec::new();
+            while let Some(sig) = eng.next(&mut topo) {
+                log.push(format!("{sig:?}"));
+            }
+            (log, topo.now)
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -26,11 +26,30 @@
 //! group's aggregate rate is clipped to its downlink capacity. A set
 //! built with [`FlowSet::new`] has a single group 0, which keeps the
 //! one-client co-allocation semantics unchanged.
+//!
+//! ## Layout (ISSUE 8)
+//!
+//! The set is stored structure-of-arrays: each per-flow field is its
+//! own column, so the bandwidth recompute — the hot loop under 10⁵
+//! concurrent requests — is a linear scan over dense `f64` columns
+//! instead of pointer-striding over an array of structs. The rate
+//! snapshot and per-group totals live in *reusable scratch buffers*
+//! (and the per-site link share is memoized within a sub-step, which
+//! is bit-transparent because [`Topology::current_bandwidth`] is a
+//! pure function of topology state between clock advances), so the
+//! steady state of [`FlowSet::advance_some_into`] performs zero heap
+//! allocations. [`Flow`] remains the public view of one flow, now
+//! materialized by value from the columns; retirement is O(1) via a
+//! position index instead of a linear scan. None of this changes a
+//! single arithmetic operation or its order — every seeded scenario
+//! (and the `it_contention` / `it_shard` parity anchors) produces
+//! bit-identical completion instants.
 
 use crate::simnet::Topology;
 
-/// One in-flight transfer leg.
-#[derive(Debug, Clone)]
+/// One in-flight transfer leg — a by-value snapshot of the set's
+/// columns for that flow (see [`FlowSet::flow`]).
+#[derive(Debug, Clone, Copy)]
 pub struct Flow {
     /// Topology index of the source site.
     pub site: usize,
@@ -59,7 +78,7 @@ impl Flow {
 }
 
 /// A flow completion reported by [`FlowSet::advance`].
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Completion {
     /// Index of the flow within the set (as returned by [`FlowSet::add`]).
     pub flow: usize,
@@ -67,25 +86,89 @@ pub struct Completion {
     pub at: f64,
 }
 
-/// A set of concurrent flows sharing link capacity.
+/// Sentinel in the `finished_at` column: still in flight.
+const UNFINISHED: f64 = f64::NAN;
+/// Sentinel in the `live_pos` index: not in the live set.
+const RETIRED: usize = usize::MAX;
+
+/// A set of concurrent flows sharing link capacity, stored as
+/// structure-of-arrays (one column per [`Flow`] field).
 #[derive(Debug, Clone)]
 pub struct FlowSet {
-    flows: Vec<Flow>,
+    site: Vec<usize>,
+    remaining: Vec<f64>,
+    delivered: Vec<f64>,
+    lead: Vec<f64>,
+    started_at: Vec<f64>,
+    /// `NAN` = in flight (the column twin of `Option<f64>`).
+    finished_at: Vec<f64>,
+    cancelled: Vec<bool>,
+    group: Vec<usize>,
     /// Indices of flows that are not yet done — the working set every
     /// sub-step iterates, so long transfers that accumulate thousands
     /// of completed block-flows don't pay for them on every tick.
     live_ids: Vec<usize>,
+    /// flow id → its position in `live_ids` (`RETIRED` once done /
+    /// cancelled), making retirement O(1) instead of a scan — a
+    /// 10⁵-flow wind-down would otherwise be quadratic.
+    live_pos: Vec<usize>,
     /// Per-group client downlink capacities (bytes/s);
     /// `f64::INFINITY` means the WAN links are the only bottleneck for
     /// that group. Group 0 always exists (the [`FlowSet::new`] cap).
     groups: Vec<f64>,
+    // Reusable scratch (never shrinks): the steady state of
+    // `advance_some_into` allocates nothing.
+    /// `(flow id, rate)` snapshot of the current sub-step.
+    bws: Vec<(usize, f64)>,
+    /// Per-group aggregate rate of the current sub-step.
+    totals: Vec<f64>,
+    /// Per-site memo of `current_bandwidth(s).min(disk)` …
+    site_rate: Vec<f64>,
+    /// … valid for site `s` iff `site_mark[s] == mark`.
+    site_mark: Vec<u64>,
+    mark: u64,
 }
 
 impl FlowSet {
     /// A set with a single downlink group 0 capped at `downlink` — the
     /// one-client configuration every pre-runtime caller uses.
     pub fn new(downlink: f64) -> FlowSet {
-        FlowSet { flows: Vec::new(), live_ids: Vec::new(), groups: vec![downlink] }
+        FlowSet {
+            site: Vec::new(),
+            remaining: Vec::new(),
+            delivered: Vec::new(),
+            lead: Vec::new(),
+            started_at: Vec::new(),
+            finished_at: Vec::new(),
+            cancelled: Vec::new(),
+            group: Vec::new(),
+            live_ids: Vec::new(),
+            live_pos: Vec::new(),
+            groups: vec![downlink],
+            bws: Vec::new(),
+            totals: Vec::new(),
+            site_rate: Vec::new(),
+            site_mark: Vec::new(),
+            mark: 0,
+        }
+    }
+
+    /// [`FlowSet::new`] with all columns pre-sized for `n` flows — the
+    /// surge path reserves once up front.
+    pub fn with_capacity(downlink: f64, n: usize) -> FlowSet {
+        let mut fs = FlowSet::new(downlink);
+        fs.site.reserve(n);
+        fs.remaining.reserve(n);
+        fs.delivered.reserve(n);
+        fs.lead.reserve(n);
+        fs.started_at.reserve(n);
+        fs.finished_at.reserve(n);
+        fs.cancelled.reserve(n);
+        fs.group.reserve(n);
+        fs.live_ids.reserve(n);
+        fs.live_pos.reserve(n);
+        fs.bws.reserve(n);
+        fs
     }
 
     /// Register another client endpoint with its own downlink capacity;
@@ -123,26 +206,42 @@ impl FlowSet {
         group: usize,
     ) -> usize {
         debug_assert!(group < self.groups.len());
-        self.flows.push(Flow {
-            site,
-            remaining: bytes.max(0.0),
-            delivered: 0.0,
-            lead: lead.max(0.0),
-            started_at: topo.now,
-            finished_at: None,
-            cancelled: false,
-            group,
-        });
-        self.live_ids.push(self.flows.len() - 1);
-        self.flows.len() - 1
+        let id = self.site.len();
+        self.site.push(site);
+        self.remaining.push(bytes.max(0.0));
+        self.delivered.push(0.0);
+        self.lead.push(lead.max(0.0));
+        self.started_at.push(topo.now);
+        self.finished_at.push(UNFINISHED);
+        self.cancelled.push(false);
+        self.group.push(group);
+        self.live_pos.push(self.live_ids.len());
+        self.live_ids.push(id);
+        id
     }
 
-    pub fn flows(&self) -> &[Flow] {
-        &self.flows
+    /// Total flows ever added (finished and cancelled ones included).
+    pub fn len(&self) -> usize {
+        self.site.len()
     }
 
-    pub fn flow(&self, idx: usize) -> &Flow {
-        &self.flows[idx]
+    pub fn is_empty(&self) -> bool {
+        self.site.is_empty()
+    }
+
+    /// By-value view of one flow, materialized from the columns.
+    pub fn flow(&self, idx: usize) -> Flow {
+        let fin = self.finished_at[idx];
+        Flow {
+            site: self.site[idx],
+            remaining: self.remaining[idx],
+            delivered: self.delivered[idx],
+            lead: self.lead[idx],
+            started_at: self.started_at[idx],
+            finished_at: if fin.is_nan() { None } else { Some(fin) },
+            cancelled: self.cancelled[idx],
+            group: self.group[idx],
+        }
     }
 
     /// Number of flows still moving bytes.
@@ -150,9 +249,27 @@ impl FlowSet {
         self.live_ids.len()
     }
 
+    /// Σ (delivered − lead) over every flow ever added, in index
+    /// order: grows whenever anything moved — the kernel's stall
+    /// detector ([`crate::simnet::engine::Engine`]).
+    pub fn progress_metric(&self) -> f64 {
+        self.delivered.iter().zip(&self.lead).map(|(d, l)| d - l).sum()
+    }
+
+    /// Drop the live entry at `live_ids[pos]`, keeping the position
+    /// index consistent (the classic swap-remove bookkeeping).
+    fn unlive_at(&mut self, pos: usize) {
+        let flow = self.live_ids.swap_remove(pos);
+        self.live_pos[flow] = RETIRED;
+        if pos < self.live_ids.len() {
+            self.live_pos[self.live_ids[pos]] = pos;
+        }
+    }
+
     fn retire(&mut self, flow: usize) {
-        if let Some(pos) = self.live_ids.iter().position(|&x| x == flow) {
-            self.live_ids.swap_remove(pos);
+        let pos = self.live_pos[flow];
+        if pos != RETIRED {
+            self.unlive_at(pos);
         }
     }
 
@@ -161,8 +278,8 @@ impl FlowSet {
     /// uses this when a source dies or stalls mid-block. No-op on a
     /// flow that already finished.
     pub fn cancel(&mut self, flow: usize) {
-        if self.flows[flow].finished_at.is_none() {
-            self.flows[flow].cancelled = true;
+        if self.finished_at[flow].is_nan() {
+            self.cancelled[flow] = true;
             self.retire(flow);
         }
     }
@@ -177,27 +294,71 @@ impl FlowSet {
     /// group if that group's aggregate exceeds its client downlink.
     /// Flows still paying connection-setup latency move nothing yet and
     /// do not consume downlink.
+    ///
+    /// This is the allocating diagnostic entry point (samplers and
+    /// property tests); the kernel's sub-step uses the scratch-backed
+    /// twin of the same arithmetic.
     pub fn bandwidths(&self, topo: &mut Topology) -> Vec<(usize, f64)> {
         let mut bws: Vec<(usize, f64)> = Vec::with_capacity(self.live_ids.len());
         let mut totals = vec![0.0f64; self.groups.len()];
         for &i in &self.live_ids {
-            let f = &self.flows[i];
-            let bw = if f.lead > 0.0 {
+            let bw = if self.lead[i] > 0.0 {
                 0.0
             } else {
-                let disk = topo.site(f.site).cfg.disk_rate;
-                topo.current_bandwidth(f.site).min(disk)
+                let disk = topo.site(self.site[i]).cfg.disk_rate;
+                topo.current_bandwidth(self.site[i]).min(disk)
             };
-            totals[f.group] += bw;
+            totals[self.group[i]] += bw;
             bws.push((i, bw));
         }
         for pair in &mut bws {
-            let g = self.flows[pair.0].group;
+            let g = self.group[pair.0];
             if totals[g] > self.groups[g] {
                 pair.1 *= self.groups[g] / totals[g];
             }
         }
         bws
+    }
+
+    /// Scratch-backed twin of [`FlowSet::bandwidths`]: same iteration
+    /// order, same summation order, same clip arithmetic — into the
+    /// caller-provided snapshot instead of a fresh `Vec`. The per-site
+    /// link share is computed once per sub-step and memoized
+    /// (stamp-validated), which is bit-identical because
+    /// `current_bandwidth` is pure between clock advances: the link's
+    /// AR(1) state only steps when the 60 s bucket index grows, the
+    /// fault view only refreshes when the clock crosses a boundary,
+    /// and `active_transfers` never changes mid-sub-step.
+    fn fill_rates(&mut self, topo: &mut Topology, bws: &mut Vec<(usize, f64)>) {
+        bws.clear();
+        self.totals.clear();
+        self.totals.resize(self.groups.len(), 0.0);
+        self.mark += 1;
+        for &i in &self.live_ids {
+            let bw = if self.lead[i] > 0.0 {
+                0.0
+            } else {
+                let s = self.site[i];
+                if s >= self.site_rate.len() {
+                    self.site_rate.resize(s + 1, 0.0);
+                    self.site_mark.resize(s + 1, 0);
+                }
+                if self.site_mark[s] != self.mark {
+                    let disk = topo.site(s).cfg.disk_rate;
+                    self.site_rate[s] = topo.current_bandwidth(s).min(disk);
+                    self.site_mark[s] = self.mark;
+                }
+                self.site_rate[s]
+            };
+            self.totals[self.group[i]] += bw;
+            bws.push((i, bw));
+        }
+        for pair in bws.iter_mut() {
+            let g = self.group[pair.0];
+            if self.totals[g] > self.groups[g] {
+                pair.1 *= self.groups[g] / self.totals[g];
+            }
+        }
     }
 
     /// Advance every live flow by `dt` simulated seconds, splitting the
@@ -209,11 +370,10 @@ impl FlowSet {
         let mut left = dt.max(0.0);
         let t_end = topo.now + left;
         while left > 1e-12 && !self.live_ids.is_empty() {
-            let (used, mut done) = self.advance_some(topo, left);
+            let before = out.len();
+            let used = self.advance_some_into(topo, left, &mut out);
             left -= used;
-            let progressed = !done.is_empty();
-            out.append(&mut done);
-            if !progressed {
+            if out.len() == before {
                 // The whole remainder elapsed with nothing finishing.
                 break;
             }
@@ -234,9 +394,28 @@ impl FlowSet {
     /// exact completion instant.
     pub fn advance_some(&mut self, topo: &mut Topology, dt: f64) -> (f64, Vec<Completion>) {
         let mut out = Vec::new();
+        let used = self.advance_some_into(topo, dt, &mut out);
+        (used, out)
+    }
+
+    /// Allocation-free [`FlowSet::advance_some`]: completions are
+    /// appended to `out` (the kernel reuses one buffer across events)
+    /// and the simulated time consumed is returned. Stops at the first
+    /// sub-step that produced completions, exactly like its allocating
+    /// wrapper.
+    pub fn advance_some_into(
+        &mut self,
+        topo: &mut Topology,
+        dt: f64,
+        out: &mut Vec<Completion>,
+    ) -> f64 {
+        let start = out.len();
         let mut left = dt.max(0.0);
         let mut consumed = 0.0;
-        while left > 1e-12 && !self.live_ids.is_empty() && out.is_empty() {
+        // Detach the scratch snapshot so the columns stay mutable while
+        // it is read (restored on exit; `take` swaps, never allocates).
+        let mut bws = std::mem::take(&mut self.bws);
+        while left > 1e-12 && !self.live_ids.is_empty() && out.len() == start {
             // Zero-length (or numerically drained) flows complete
             // immediately — otherwise they would pin `step` at 0 and
             // the loop could never consume `left`.
@@ -244,29 +423,27 @@ impl FlowSet {
             let mut k = 0;
             while k < self.live_ids.len() {
                 let i = self.live_ids[k];
-                let f = &mut self.flows[i];
-                if f.lead <= 0.0 && f.remaining <= 1e-6 {
-                    f.remaining = 0.0;
-                    f.finished_at = Some(now);
+                if self.lead[i] <= 0.0 && self.remaining[i] <= 1e-6 {
+                    self.remaining[i] = 0.0;
+                    self.finished_at[i] = now;
                     out.push(Completion { flow: i, at: now });
-                    self.live_ids.swap_remove(k);
+                    self.unlive_at(k);
                 } else {
                     k += 1;
                 }
             }
-            if !out.is_empty() {
+            if out.len() > start {
                 break;
             }
-            let bws = self.bandwidths(topo);
+            self.fill_rates(topo, &mut bws);
             // Earliest event within this sub-step: a flow finishing, or
             // a flow leaving connection setup (its rate changes then).
             let mut step = left;
             for &(i, bw) in &bws {
-                let f = &self.flows[i];
-                if f.lead > 0.0 {
-                    step = step.min(f.lead);
+                if self.lead[i] > 0.0 {
+                    step = step.min(self.lead[i]);
                 } else if bw > 0.0 {
-                    step = step.min(f.remaining / bw);
+                    step = step.min(self.remaining[i] / bw);
                 }
             }
             // A scheduled fault boundary is an event too — trigger
@@ -282,36 +459,30 @@ impl FlowSet {
             }
             // Move bytes for `step` seconds at the sampled rates.
             for &(i, bw) in &bws {
-                let mut done = false;
-                {
-                    let f = &mut self.flows[i];
-                    let mut avail = step;
-                    if f.lead > 0.0 {
-                        let used = f.lead.min(avail);
-                        f.lead -= used;
-                        avail -= used;
-                    }
-                    if avail > 0.0 {
-                        let moved = (bw * avail).min(f.remaining);
-                        f.remaining -= moved;
-                        f.delivered += moved;
-                        if f.remaining <= 1e-6 {
-                            f.remaining = 0.0;
-                            f.finished_at = Some(now + step);
-                            done = true;
-                        }
-                    }
+                let mut avail = step;
+                if self.lead[i] > 0.0 {
+                    let used = self.lead[i].min(avail);
+                    self.lead[i] -= used;
+                    avail -= used;
                 }
-                if done {
-                    out.push(Completion { flow: i, at: now + step });
-                    self.retire(i);
+                if avail > 0.0 {
+                    let moved = (bw * avail).min(self.remaining[i]);
+                    self.remaining[i] -= moved;
+                    self.delivered[i] += moved;
+                    if self.remaining[i] <= 1e-6 {
+                        self.remaining[i] = 0.0;
+                        self.finished_at[i] = now + step;
+                        out.push(Completion { flow: i, at: now + step });
+                        self.retire(i);
+                    }
                 }
             }
             topo.advance(step);
             consumed += step;
             left -= step;
         }
-        (consumed, out)
+        self.bws = bws;
+        consumed
     }
 }
 
@@ -647,5 +818,36 @@ mod tests {
         // active_transfers=1 → share 1/2 → 2 seconds, matching what a
         // GridFtp::fetch of the same bytes would see.
         assert!((done[0].at - 2.0).abs() < 1e-6, "at {}", done[0].at);
+    }
+
+    #[test]
+    fn soa_view_and_scratch_paths_agree() {
+        // The by-value Flow view reflects the columns, the scratch
+        // rate path matches the allocating diagnostic one, and O(1)
+        // retirement leaves the live set consistent.
+        let mut topo = flat_topo(4);
+        let mut fs = FlowSet::with_capacity(f64::INFINITY, 8);
+        let ids: Vec<usize> = (0..4).map(|s| fs.add(&topo, s, (s as f64 + 1.0) * 1e5, 0.0)).collect();
+        assert_eq!(fs.len(), 4);
+        assert_eq!(fs.live(), 4);
+        let via_diag = fs.bandwidths(&mut topo);
+        let mut scratch = Vec::new();
+        fs.fill_rates(&mut topo, &mut scratch);
+        assert_eq!(via_diag, scratch, "diagnostic and scratch rates must agree");
+        fs.cancel(ids[1]);
+        assert_eq!(fs.live(), 3);
+        let done = fs.advance(&mut topo, 30.0);
+        assert_eq!(done.len(), 3);
+        assert!(fs.flow(ids[1]).cancelled);
+        assert!(fs.flow(ids[1]).finished_at.is_none());
+        for &id in [ids[0], ids[2], ids[3]].iter() {
+            assert!(fs.flow(id).is_done());
+            assert_eq!(fs.flow(id).remaining, 0.0);
+        }
+        assert_eq!(fs.live(), 0);
+        // progress_metric sums delivered − lead over all flows ever
+        // added, index order.
+        let manual: f64 = (0..fs.len()).map(|i| fs.flow(i).delivered - fs.flow(i).lead).sum();
+        assert_eq!(fs.progress_metric(), manual);
     }
 }

@@ -26,7 +26,12 @@
 //! [`FlowSet`] completions — under which many transfers are in flight
 //! simultaneously, sharing site links and per-client downlinks. The
 //! serial replay survives only as the concurrency-1 special case the
-//! parity tests pin against (`experiment::run_quality_trace`).
+//! parity tests pin against (`experiment::run_quality_trace`). The
+//! kernel's steady state is allocation-free (ISSUE 8): the schedule
+//! lives in a reusable [`arena::EventArena`] slab, the flow set is
+//! structure-of-arrays with scratch-buffered rate recomputes, and
+//! completions drain through one reusable buffer — see
+//! `ARCHITECTURE.md` for the event/determinism contract.
 //!
 //! # Failure model (ISSUE 7: grid weather)
 //!
@@ -61,6 +66,7 @@
 //! `directory::fanout::FanoutPolicy::{max_retries, retry_backoff}`
 //! (information-plane query retry).
 
+pub mod arena;
 pub mod engine;
 pub mod flows;
 pub mod link;
@@ -69,6 +75,7 @@ pub mod trace;
 pub mod weather;
 pub mod workload;
 
+pub use arena::EventArena;
 pub use engine::{Engine, Signal};
 pub use flows::{Completion, Flow, FlowSet};
 pub use link::Link;

@@ -1,0 +1,235 @@
+//! Sharded-broker integration suite (ISSUE 8 acceptance).
+//!
+//! (a) **Parity**: the sharded driver at 1 shard with batch size 1
+//!     ([`ShardOptions::parity`]) reproduces the unsharded
+//!     `run_quality_open` **bit-for-bit** — every report field,
+//!     including the per-request traces — on the plain, gated and
+//!     discovery-mode configurations. Same discipline as the PR 4–7
+//!     parity anchors: scaling machinery must collapse exactly onto
+//!     the path it generalizes.
+//! (b) **Determinism**: an N-shard run is a pure function of its
+//!     seed — two identical invocations agree on everything,
+//!     per-shard telemetry included.
+//! (c) **Conservation**: per shard,
+//!     `finished + skipped + gave_up == arrivals` exactly, whatever
+//!     the batch size or window — admission batching may delay or
+//!     wind-down a request but can never lose or double-count one.
+
+use globus_replica::broker::selectors::SelectorKind;
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::{
+    run_quality_open, run_quality_sharded, DiscoveryOptions, OpenLoopOptions, ShardOptions,
+};
+use globus_replica::simnet::{Workload, WorkloadSpec};
+
+/// Bitwise f64 equality via `Debug` round-tripping: Rust's `{:?}` for
+/// floats prints the shortest string that parses back to the same
+/// bits, so equal Debug strings ⇔ equal bits, recursively across the
+/// whole report.
+fn assert_bitwise_eq<T: std::fmt::Debug>(a: &T, b: &T, what: &str) {
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "{what} diverged");
+}
+
+#[test]
+fn one_shard_parity_is_bitwise() {
+    let cfg = GridConfig::generate(6, 8101);
+    let spec = WorkloadSpec { files: 8, mean_interarrival: 8.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(25);
+    for kind in [SelectorKind::Forecast, SelectorKind::Random] {
+        let opts = OpenLoopOptions::open();
+        let plain = run_quality_open(&cfg, &spec, &reqs, 3, 2, kind, &opts, None);
+        let sharded = run_quality_sharded(
+            &cfg,
+            &spec,
+            &reqs,
+            3,
+            2,
+            kind,
+            &opts,
+            &ShardOptions::parity(),
+            None,
+        );
+        assert_bitwise_eq(&plain, &sharded.open, "1-shard open report");
+        assert_eq!(sharded.shards.len(), 1);
+        assert_eq!(sharded.cross_shard_selections, 0, "one shard cannot span");
+        let s = &sharded.shards[0];
+        assert_eq!(s.arrivals, reqs.len());
+        assert_eq!(s.finished + s.skipped + s.gave_up, s.arrivals);
+    }
+}
+
+#[test]
+fn one_shard_parity_holds_under_gate() {
+    let cfg = GridConfig::generate(5, 8102);
+    let spec = WorkloadSpec { files: 6, mean_interarrival: 4.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(18);
+    let opts = OpenLoopOptions { max_in_flight: 2, ..OpenLoopOptions::open() };
+    let plain = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+    let sharded = run_quality_sharded(
+        &cfg,
+        &spec,
+        &reqs,
+        3,
+        2,
+        SelectorKind::Forecast,
+        &opts,
+        &ShardOptions::parity(),
+        None,
+    );
+    assert_bitwise_eq(&plain, &sharded.open, "gated 1-shard report");
+    assert!(plain.peak_in_flight <= 2);
+}
+
+#[test]
+fn one_shard_parity_holds_under_discovery() {
+    let cfg = GridConfig::generate(6, 8103);
+    let spec = WorkloadSpec { files: 6, mean_interarrival: 20.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(12);
+    let opts = OpenLoopOptions {
+        discovery: Some(DiscoveryOptions { drill_down: 2, ..Default::default() }),
+        ..OpenLoopOptions::open()
+    };
+    let plain = run_quality_open(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, None);
+    let sharded = run_quality_sharded(
+        &cfg,
+        &spec,
+        &reqs,
+        3,
+        2,
+        SelectorKind::Forecast,
+        &opts,
+        &ShardOptions::parity(),
+        None,
+    );
+    assert_bitwise_eq(&plain, &sharded.open, "discovery 1-shard report");
+    // The single shard's domain answered everything the shared
+    // hierarchy would have: identical query accounting.
+    assert_eq!(plain.discovery, sharded.open.discovery);
+}
+
+#[test]
+fn n_shard_runs_are_deterministic() {
+    let cfg = GridConfig::generate(9, 8104);
+    let spec = WorkloadSpec { files: 10, mean_interarrival: 6.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(30);
+    let opts = OpenLoopOptions {
+        discovery: Some(DiscoveryOptions { drill_down: 2, ..Default::default() }),
+        ..OpenLoopOptions::open()
+    };
+    let so = ShardOptions { shards: 3, batch_max: 4, batch_window: 3.0 };
+    let run = || {
+        run_quality_sharded(&cfg, &spec, &reqs, 3, 2, SelectorKind::Forecast, &opts, &so, None)
+    };
+    let a = run();
+    let b = run();
+    assert_bitwise_eq(&a, &b, "repeated N-shard run");
+    assert_eq!(a.shards.len(), 3);
+}
+
+/// Property: whatever the partition and batching, per-shard admission
+/// accounting conserves requests exactly.
+#[test]
+fn batching_conserves_outcome_accounting() {
+    for (seed, shards, batch_max, window) in [
+        (9001u64, 2usize, 1usize, 0.0f64),
+        (9002, 3, 4, 5.0),
+        (9003, 5, 16, 2.0),
+        (9004, 4, 8, f64::INFINITY),
+        (9005, 2, 64, 10.0),
+    ] {
+        let cfg = GridConfig::generate(10, seed);
+        let spec = WorkloadSpec { files: 9, mean_interarrival: 5.0, ..Default::default() };
+        let reqs = Workload::new(spec.clone(), cfg.seed).take(40);
+        let so = ShardOptions { shards, batch_max, batch_window: window };
+        let r = run_quality_sharded(
+            &cfg,
+            &spec,
+            &reqs,
+            3,
+            2,
+            SelectorKind::Forecast,
+            &OpenLoopOptions::open(),
+            &so,
+            None,
+        );
+        let mut arrivals = 0;
+        for (s, st) in r.shards.iter().enumerate() {
+            assert_eq!(
+                st.finished + st.skipped + st.gave_up,
+                st.arrivals,
+                "shard {s} leaks requests (seed {seed}, {shards} shards, batch {batch_max})"
+            );
+            assert!(st.admitted <= st.arrivals);
+            arrivals += st.arrivals;
+        }
+        assert_eq!(arrivals, reqs.len(), "every arrival routed to exactly one home shard");
+        let finished: usize = r.shards.iter().map(|s| s.finished).sum();
+        let skipped: usize = r.shards.iter().map(|s| s.skipped).sum();
+        let gave_up: usize = r.shards.iter().map(|s| s.gave_up).sum();
+        assert_eq!(finished, r.open.quality.requests, "per-shard finished sums to the report");
+        assert_eq!(skipped, r.open.skipped, "per-shard skipped sums to the report");
+        assert_eq!(gave_up, r.open.gave_up, "per-shard gave_up sums to the report");
+        let admitted: usize = r.shards.iter().map(|s| s.admitted).sum();
+        assert!(r.cross_shard_selections <= admitted);
+    }
+}
+
+#[test]
+fn fully_replicated_files_make_every_selection_cross_shard() {
+    let cfg = GridConfig::generate(6, 8105);
+    let spec = WorkloadSpec { files: 5, mean_interarrival: 10.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(15);
+    // Every file on every site: with > 1 shard each replica set spans
+    // all shards, so every admission is a cross-shard selection.
+    let so = ShardOptions { shards: 3, batch_max: 2, batch_window: 4.0 };
+    let r = run_quality_sharded(
+        &cfg,
+        &spec,
+        &reqs,
+        6,
+        2,
+        SelectorKind::Forecast,
+        &OpenLoopOptions::open(),
+        &so,
+        None,
+    );
+    let admitted: usize = r.shards.iter().map(|s| s.admitted).sum();
+    assert_eq!(admitted, reqs.len(), "ungated run admits every arrival");
+    assert_eq!(r.cross_shard_selections, admitted);
+}
+
+#[test]
+fn window_timer_flushes_partial_batches() {
+    let cfg = GridConfig::generate(5, 8106);
+    let spec = WorkloadSpec { files: 6, mean_interarrival: 15.0, ..Default::default() };
+    let reqs = Workload::new(spec.clone(), cfg.seed).take(10);
+    // Batches that can never fill (batch_max ≫ arrivals): only the
+    // window timer stands between an arrival and its admission.
+    let so = ShardOptions { shards: 2, batch_max: 1000, batch_window: 2.0 };
+    let r = run_quality_sharded(
+        &cfg,
+        &spec,
+        &reqs,
+        3,
+        2,
+        SelectorKind::Forecast,
+        &OpenLoopOptions::open(),
+        &so,
+        None,
+    );
+    assert_eq!(r.open.quality.requests, 10, "skipped {}", r.open.skipped);
+    assert_eq!(r.open.skipped, 0);
+    let flushes: usize = r.shards.iter().map(|s| s.flushes).sum();
+    assert!(flushes >= 2, "window flushes must have fired, got {flushes}");
+    // Admission happened at the flush instant, not the arrival instant:
+    // the batching delay is visible in the admitted_at timestamps.
+    let t0_arrivals: Vec<f64> = reqs.iter().map(|q| q.at).collect();
+    let min_arrival = t0_arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let min_admitted = r
+        .open
+        .per_request
+        .iter()
+        .map(|t| t.admitted_at)
+        .fold(f64::INFINITY, f64::min);
+    assert!(min_admitted >= min_arrival, "admission cannot precede arrival");
+}

@@ -7,14 +7,60 @@
 #                                  sets so CI never silently no-ops)
 #   BENCH_QUICK=1 also shortens the in-tree bench harness if benches run.
 #
-# Gates, in order: release build, tests, rustfmt --check, clippy with
-# -D warnings. The format/lint gates skip with a loud notice when the
-# component is not installed (minimal rustup profiles); the whole run
-# skips — loudly, as "desk-check mode" — when there is no Rust
-# toolchain at all, which is the documented state of several build
-# containers (see ROADMAP "Seed-test triage").
+# Gates, in order: docs link/anchor check (pure shell — runs even in
+# desk-check mode), release build, tests, rustfmt --check, clippy with
+# -D warnings, rustdoc with -D warnings. The format/lint gates skip
+# with a loud notice when the component is not installed (minimal
+# rustup profiles); the toolchain gates skip — loudly, as "desk-check
+# mode" — when there is no Rust toolchain at all, which is the
+# documented state of several build containers (see ROADMAP
+# "Seed-test triage").
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== docs: link + bench-key check (ARCHITECTURE.md, BENCHMARKS.md) =="
+# Pure shell so it gates desk-check containers too: every relative
+# markdown link in the two books must point at a file that exists, and
+# the set of BENCH_*.json artifacts documented in BENCHMARKS.md must
+# exactly match the set scripts/bench.sh produces.
+docs_ok=1
+for doc in ARCHITECTURE.md BENCHMARKS.md; do
+    if [ ! -s "$doc" ]; then
+        echo "DOCS GATE: $doc missing or empty"
+        docs_ok=0
+        continue
+    fi
+    # Inline links: ](target). Skip absolute URLs and pure anchors;
+    # strip any #fragment before the existence test.
+    while IFS= read -r target; do
+        case "$target" in
+            http://*|https://*|mailto:*|"#"*) continue ;;
+        esac
+        path="${target%%#*}"
+        [ -z "$path" ] && continue
+        if [ ! -e "$path" ]; then
+            echo "DOCS GATE: $doc links to missing file: $target"
+            docs_ok=0
+        fi
+    done < <(grep -oE '\]\([^)]+\)' "$doc" | sed -e 's/^](//' -e 's/)$//')
+done
+if [ -s BENCHMARKS.md ]; then
+    documented="$(grep -oE 'BENCH_[a-z_]+\.json' BENCHMARKS.md | sort -u)"
+    produced="$(grep -oE 'BENCH_[a-z_]+\.json' scripts/bench.sh | sort -u)"
+    if [ "$documented" != "$produced" ]; then
+        echo "DOCS GATE: BENCHMARKS.md artifacts do not match scripts/bench.sh"
+        echo "--- documented (BENCHMARKS.md):"
+        echo "$documented"
+        echo "--- produced (scripts/bench.sh):"
+        echo "$produced"
+        docs_ok=0
+    fi
+fi
+if [ "$docs_ok" != "1" ]; then
+    echo "CI FAILED: docs gate"
+    exit 2
+fi
+echo "docs OK (links resolve, bench artifact sets match)"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "!!=========================================================!!"
@@ -76,5 +122,10 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "!! clippy unavailable in this image; LINT GATE SKIPPED !!"
 fi
+
+echo "== hygiene: rustdoc =="
+# The module docs are the architecture book's source of truth
+# (ARCHITECTURE.md links into them); broken intra-doc links are bugs.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "CI OK"
