@@ -16,8 +16,8 @@
 use std::collections::BTreeMap;
 
 use globus_replica::classad::{
-    parse_classad, parse_expr, rank_candidates, rank_of, symmetric_match, AdBuilder, ClassAd,
-    CompiledMatch, Match,
+    parse_classad, parse_expr, rank_candidates, rank_of, symmetric_match, AdBuilder,
+    CandidateTable, ClassAd, CompiledMatch, Match, VmScratch,
 };
 use globus_replica::util::bench::{Bench, Stats};
 use globus_replica::util::json::Json;
@@ -107,6 +107,30 @@ fn main() {
         n1000 as f64,
         || compiled.rank_candidates(&ads1000).len(),
     );
+    // PR 9 headline: the bytecode VM against the reused tree-walk above
+    // — same compiled handle, same candidate set, scratch reused across
+    // iterations (the broker's `SelectScratch` shape).
+    let mut vm = VmScratch::default();
+    let (mut vflags, mut vms) = (Vec::new(), Vec::new());
+    b.case_items(&format!("program/{n1000} candidates"), n1000 as f64, || {
+        compiled.match_and_rank_vm_into(ads1000.iter(), None, &mut vflags, &mut vms, &mut vm);
+        vms.len()
+    });
+    // Batch-throughput shape: rebuild the dense table per batch (that is
+    // conversion work, counted here for honesty) and run the program
+    // down the columns.
+    let mut table = CandidateTable::default();
+    b.case_items(&format!("program-table/{n1000} candidates"), n1000 as f64, || {
+        table.rebuild(compiled.program(), ads1000.iter());
+        compiled.match_and_rank_vm_into(
+            ads1000.iter(),
+            Some(&table),
+            &mut vflags,
+            &mut vms,
+            &mut vm,
+        );
+        vms.len()
+    });
 
     // Expression microbenches: the requirement expression that every
     // match evaluates twice.
@@ -148,6 +172,16 @@ fn main() {
         }
         _ => None,
     };
+    // PR 9 headline: bytecode program vs the reused tree-walk, both
+    // amortizing their compile across the run.
+    let speedup_vm = match (find("compiled-reused/1000"), find("program/1000")) {
+        (Some(tree), Some(vm)) if vm.mean_ns > 0.0 => {
+            let x = tree.mean_ns / vm.mean_ns;
+            println!("program-vs-tree @1000 candidates: {x:.2}x");
+            Some(x)
+        }
+        _ => None,
+    };
 
     if let Ok(path) = std::env::var("BENCH_JSON") {
         let mut root = BTreeMap::new();
@@ -161,6 +195,9 @@ fn main() {
                 "speedup_compiled_vs_perpair_1000".to_string(),
                 Json::Num(x),
             );
+        }
+        if let Some(x) = speedup_vm {
+            root.insert("speedup_program_vs_tree_1000".to_string(), Json::Num(x));
         }
         let body = Json::Obj(root).to_string();
         match std::fs::write(&path, &body) {

@@ -38,7 +38,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::catalog::ReplicaCatalog;
-use crate::classad::{ClassAd, CompiledMatch};
+use crate::classad::{CandidateTable, ClassAd, CompiledMatch, Match, VmScratch};
 use crate::coalloc::{plan_stripes, StripePlan, StripeSource};
 use crate::config::CoallocPolicy;
 use crate::directory::client::DirectoryClient;
@@ -278,13 +278,20 @@ impl PreparedRequest {
     }
 }
 
-/// Reusable Search-phase buffers, so a batch of selections does not
-/// re-allocate the per-selection scaffolding (replica locations, raw
-/// per-site responses) for every logical file.
+/// Reusable per-selection buffers: the Search-phase scaffolding
+/// (replica locations, raw per-site responses) plus the Match-phase
+/// arena — the batch [`CandidateTable`], match flags, ranked
+/// survivors and the bytecode VM's stack — so a batch of selections
+/// performs no per-candidate heap allocation in steady state.
 #[derive(Default)]
 pub struct SelectScratch {
     locations: Vec<(String, String)>,
     raw: Vec<(String, String, Vec<Entry>)>,
+    table: CandidateTable,
+    flags: Vec<bool>,
+    ms: Vec<Match>,
+    matched: Vec<usize>,
+    vm: VmScratch,
 }
 
 /// Hierarchical-discovery configuration: the shared directory plus how
@@ -378,7 +385,7 @@ impl Broker {
         filter: &Filter,
         scratch: &mut SelectScratch,
     ) -> Result<(Vec<Candidate>, BrokerTrace)> {
-        let SelectScratch { locations, raw } = scratch;
+        let SelectScratch { locations, raw, .. } = scratch;
         let mut trace = BrokerTrace { logical: logical.to_string(), ..Default::default() };
         let t0 = Instant::now();
         locations.clear();
@@ -591,42 +598,72 @@ impl Broker {
         self.match_phase_compiled(&compiled, candidates, trace)
     }
 
-    /// Match phase against an already-compiled request: one fused pass
-    /// that evaluates each side's requirements at most once per
-    /// candidate and ranks only the survivors.
+    /// Match phase against an already-compiled request, with throwaway
+    /// scratch. One-shot callers land here; the batch path uses
+    /// [`Broker::match_phase_prepared`] directly. Results are
+    /// bit-identical either way (same implementation underneath).
     pub fn match_phase_compiled(
         &self,
         compiled: &CompiledMatch,
         candidates: &[Candidate],
         trace: &mut BrokerTrace,
     ) -> Vec<Ranked> {
+        self.match_phase_prepared(compiled, candidates, trace, &mut SelectScratch::default())
+    }
+
+    /// Match phase on the bytecode VM: the candidate batch is converted
+    /// once into the scratch's struct-of-arrays [`CandidateTable`]
+    /// (table-build time is conversion work — it counts into the
+    /// `convert` trace field and `broker.phase.convert_ns`, not into
+    /// `match`), then the compiled program runs down the table in one
+    /// linear pass, reusing the scratch's flag/rank/VM buffers.
+    pub fn match_phase_prepared(
+        &self,
+        compiled: &CompiledMatch,
+        candidates: &[Candidate],
+        trace: &mut BrokerTrace,
+        scratch: &mut SelectScratch,
+    ) -> Vec<Ranked> {
+        let SelectScratch { table, flags, ms, matched, vm, .. } = scratch;
+        let tb = Instant::now();
+        table.rebuild(compiled.program(), candidates.iter().map(|c| &c.ad));
+        trace.convert_us += tb.elapsed().as_micros();
+        if let Some(m) = &self.metrics {
+            m.histogram("broker.phase.convert_ns").observe_ns(tb.elapsed().as_nanos() as u64);
+        }
         let t0 = Instant::now();
         let ranked = match &self.policy {
             RankPolicy::ClassAdRank => {
-                let (flags, ms) = compiled.match_and_rank(candidates.iter().map(|c| &c.ad));
+                compiled.match_and_rank_vm_into(
+                    candidates.iter().map(|c| &c.ad),
+                    Some(&*table),
+                    flags,
+                    ms,
+                    vm,
+                );
                 trace.match_results = candidates
                     .iter()
-                    .zip(&flags)
+                    .zip(flags.iter())
                     .map(|(c, &ok)| (c.site.clone(), ok))
                     .collect();
-                ms.into_iter()
+                ms.iter()
                     .map(|m| Ranked { index: m.index, score: m.rank })
                     .collect()
             }
             RankPolicy::ForecastBandwidth { .. } => {
-                let mut matched = Vec::with_capacity(candidates.len());
+                matched.clear();
                 trace.match_results = candidates
                     .iter()
                     .enumerate()
                     .map(|(i, c)| {
-                        let ok = compiled.matches(&c.ad);
+                        let ok = compiled.matches_vm_row(&c.ad, table, i, vm);
                         if ok {
                             matched.push(i);
                         }
                         (c.site.clone(), ok)
                     })
                     .collect();
-                self.policy.order_compiled(compiled, candidates, &matched)
+                self.policy.order_compiled(compiled, candidates, matched)
             }
         };
         trace.ranking = ranked
@@ -659,7 +696,8 @@ impl Broker {
     ) -> Result<Selection> {
         let t0 = Instant::now();
         let (candidates, mut trace) = self.search_with(logical, &prepared.filter, scratch)?;
-        let ranked = self.match_phase_compiled(&prepared.compiled, &candidates, &mut trace);
+        let ranked =
+            self.match_phase_prepared(&prepared.compiled, &candidates, &mut trace, scratch);
         let best = ranked
             .first()
             .cloned()

@@ -8,7 +8,13 @@
 //!    constraints ("specialized LDAP search queries").
 //! 2. **Match** — LDIF → ClassAd conversion ([`convert`], the paper §6
 //!    "primitive libraries"), Condor matchmaking of the request ad
-//!    against every storage ad, rank ordering of survivors.
+//!    against every storage ad, rank ordering of survivors. On the
+//!    prepared/batch path the request runs as compiled bytecode
+//!    ([`crate::classad::program`]) down a struct-of-arrays
+//!    [`crate::classad::CandidateTable`] rebuilt per batch in the
+//!    reusable [`SelectScratch`] — one linear pass, no per-candidate
+//!    allocation, bit-identical to the tree-walking reference
+//!    evaluator.
 //! 3. **Access** — fetch through GridFTP; instrumentation feeds the
 //!    history that powers the next selection.
 //!

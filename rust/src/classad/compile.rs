@@ -24,6 +24,7 @@ use super::ast::{ClassAd, Expr};
 use super::eval::{eval, EvalCtx};
 use super::intern::Sym;
 use super::matchmaker::Match;
+use super::program::{CandidateTable, Program, VmScratch};
 use super::value::Value;
 
 /// Pre-interned requirements spellings, in lookup-preference order
@@ -42,6 +43,10 @@ pub struct CompiledMatch {
     req_requirements: Option<Expr>,
     /// The request's rank expression, constant-folded. `None` ranks 0.
     req_rank: Option<Expr>,
+    /// The same two expressions lowered to postfix bytecode
+    /// ([`super::program`]); the folded trees above stay the reference
+    /// evaluator the VM is pinned against.
+    program: Program,
 }
 
 impl CompiledMatch {
@@ -50,11 +55,19 @@ impl CompiledMatch {
     pub fn compile(request: &ClassAd) -> CompiledMatch {
         let req_requirements = requirements_expr(request).map(fold);
         let req_rank = request.get_sym(*RANK_SYM).map(fold);
-        CompiledMatch { request: request.clone(), req_requirements, req_rank }
+        let program =
+            Program::compile(request, req_requirements.as_ref(), req_rank.as_ref());
+        CompiledMatch { request: request.clone(), req_requirements, req_rank, program }
     }
 
     pub fn request(&self) -> &ClassAd {
         &self.request
+    }
+
+    /// The bytecode backend (used by the broker to size and fill the
+    /// batch [`CandidateTable`]).
+    pub fn program(&self) -> &Program {
+        &self.program
     }
 
     /// Symmetric two-way match against one candidate (both sides'
@@ -84,6 +97,33 @@ impl CompiledMatch {
         }
     }
 
+    /// [`CompiledMatch::matches`] through the bytecode VM: the request
+    /// side runs the compiled program, the candidate's own requirements
+    /// run the shared tree-walk (they are the candidate's expression,
+    /// unknown at compile time). Bit-identical to `matches`.
+    pub fn matches_vm(&self, candidate: &ClassAd, vm: &mut VmScratch) -> bool {
+        self.program.holds(&self.request, candidate, vm)
+            && candidate_side_holds(candidate, &self.request)
+    }
+
+    /// [`CompiledMatch::rank`] through the bytecode VM.
+    pub fn rank_vm(&self, candidate: &ClassAd, vm: &mut VmScratch) -> f64 {
+        self.program.rank(&self.request, candidate, vm)
+    }
+
+    /// [`CompiledMatch::matches_vm`] reading candidate attributes from
+    /// `table` row `row` instead of probing the ad.
+    pub fn matches_vm_row(
+        &self,
+        candidate: &ClassAd,
+        table: &CandidateTable,
+        row: usize,
+        vm: &mut VmScratch,
+    ) -> bool {
+        self.program.holds_row(&self.request, candidate, table, row, vm)
+            && candidate_side_holds(candidate, &self.request)
+    }
+
     /// The fused Match-phase pass: per-candidate match flags plus the
     /// ranked survivors, best first (ties broken by candidate index —
     /// the deterministic catalog-order tiebreak the broker relies on).
@@ -93,6 +133,23 @@ impl CompiledMatch {
     {
         let mut flags = Vec::new();
         let mut out = Vec::new();
+        self.match_and_rank_into(candidates, &mut flags, &mut out);
+        (flags, out)
+    }
+
+    /// [`CompiledMatch::match_and_rank`] into caller-owned buffers
+    /// (cleared first) — the allocation-free form the broker's
+    /// `SelectScratch` reuses across selections.
+    pub fn match_and_rank_into<'a, I>(
+        &self,
+        candidates: I,
+        flags: &mut Vec<bool>,
+        out: &mut Vec<Match>,
+    ) where
+        I: IntoIterator<Item = &'a ClassAd>,
+    {
+        flags.clear();
+        out.clear();
         for (index, c) in candidates.into_iter().enumerate() {
             let ok = self.matches(c);
             flags.push(ok);
@@ -100,8 +157,40 @@ impl CompiledMatch {
                 out.push(Match { index, rank: self.rank(c) });
             }
         }
-        sort_matches(&mut out);
-        (flags, out)
+        sort_matches(out);
+    }
+
+    /// The fused pass on the bytecode VM, optionally down a
+    /// [`CandidateTable`] (whose rows must mirror `candidates` in
+    /// order). Buffers are cleared first and reused; results are
+    /// bit-identical to [`CompiledMatch::match_and_rank`].
+    pub fn match_and_rank_vm_into<'a, I>(
+        &self,
+        candidates: I,
+        table: Option<&CandidateTable>,
+        flags: &mut Vec<bool>,
+        out: &mut Vec<Match>,
+        vm: &mut VmScratch,
+    ) where
+        I: IntoIterator<Item = &'a ClassAd>,
+    {
+        flags.clear();
+        out.clear();
+        for (index, c) in candidates.into_iter().enumerate() {
+            let ok = match table {
+                Some(t) => self.matches_vm_row(c, t, index, vm),
+                None => self.matches_vm(c, vm),
+            };
+            flags.push(ok);
+            if ok {
+                let rank = match table {
+                    Some(t) => self.program.rank_row(&self.request, c, t, index, vm),
+                    None => self.rank_vm(c, vm),
+                };
+                out.push(Match { index, rank });
+            }
+        }
+        sort_matches(out);
     }
 
     /// Ranked survivors only (the [`super::matchmaker::rank_candidates`]
@@ -277,6 +366,32 @@ mod tests {
         let (flags, ranked) = cm.match_and_rank(cands.iter());
         assert_eq!(flags, vec![true, false, true, false, true]);
         assert_eq!(ranked.iter().map(|m| m.index).collect::<Vec<_>>(), vec![2, 4, 0]);
+    }
+
+    #[test]
+    fn vm_paths_agree_with_tree_path() {
+        let request = parse_classad(REQUEST).unwrap();
+        let mk = |space: &str, bw: &str| {
+            parse_classad(&format!("availableSpace = {space}; MaxRDBandwidth = {bw};")).unwrap()
+        };
+        let cands = vec![
+            mk("10G", "60K/Sec"),
+            mk("3G", "60K/Sec"),
+            mk("80G", "60K/Sec"),
+            mk("60G", "40K/Sec"),
+            mk("20G", "90K/Sec"),
+        ];
+        let cm = CompiledMatch::compile(&request);
+        let (flags, ranked) = cm.match_and_rank(cands.iter());
+        let (mut f2, mut r2, mut vm) = (Vec::new(), Vec::new(), VmScratch::default());
+        cm.match_and_rank_vm_into(cands.iter(), None, &mut f2, &mut r2, &mut vm);
+        assert_eq!(flags, f2);
+        assert_eq!(ranked, r2);
+        let mut table = CandidateTable::default();
+        table.rebuild(cm.program(), cands.iter());
+        cm.match_and_rank_vm_into(cands.iter(), Some(&table), &mut f2, &mut r2, &mut vm);
+        assert_eq!(flags, f2);
+        assert_eq!(ranked, r2);
     }
 
     #[test]

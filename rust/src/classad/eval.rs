@@ -11,8 +11,10 @@ use super::intern::Sym;
 use super::value::Value;
 
 /// Maximum attribute-dereference depth (cycle guard; cycles evaluate to
-/// ERROR rather than hanging, mirroring Condor's behaviour).
-const MAX_DEPTH: usize = 64;
+/// ERROR rather than hanging, mirroring Condor's behaviour). Shared
+/// with the bytecode compiler ([`super::program`]), which must apply
+/// the same budget when it pre-evaluates request-side subtrees.
+pub(crate) const MAX_DEPTH: usize = 64;
 
 /// In-flight attribute frames: `(other-side?, symbol)` pairs. Replaces
 /// the old per-eval `HashSet<(bool, String)>` — this lives entirely on
@@ -103,7 +105,7 @@ fn eval_inner(
         Expr::Attr(scope, name) => resolve_attr(ctx, *scope, name, stack, depth),
         Expr::Unary(op, x) => {
             let v = eval_inner(ctx, x, stack, depth + 1);
-            eval_unary(*op, v)
+            apply_unary(*op, &v)
         }
         Expr::Binary(op, l, r) => eval_binary(ctx, *op, l, r, stack, depth),
         Expr::Cond(c, t, f) => match eval_inner(ctx, c, stack, depth + 1) {
@@ -117,7 +119,7 @@ fn eval_inner(
                 .iter()
                 .map(|a| eval_inner(ctx, a, stack, depth + 1))
                 .collect();
-            super::eval::builtins::call(name, &vals, args, ctx)
+            builtins::call_vals(name, &vals)
         }
         Expr::List(xs) => Value::List(
             xs.iter()
@@ -169,9 +171,22 @@ fn resolve_side(
     Some(v)
 }
 
-fn eval_unary(op: UnOp, v: Value) -> Value {
+/// The VM's one-op escape hatch ([`super::program`]): resolve `sym`
+/// exactly as [`resolve_attr`] would at an `Attr` node sitting at
+/// `depth` in a *top-level* expression. The guard stack is empty there
+/// by construction — frames only accumulate inside attribute
+/// definitions (via [`resolve_side`]), never across the structural
+/// walk of the expression being evaluated.
+pub(crate) fn resolve_at_depth(ctx: EvalCtx<'_>, other: bool, sym: Sym, depth: usize) -> Value {
+    let mut stack = CycleStack::new();
+    resolve_side(ctx, other, sym, &mut stack, depth).unwrap_or(Value::Undefined)
+}
+
+/// Unary-operator semantics on an already-evaluated operand. One body
+/// for the tree-walker and the bytecode VM.
+pub(crate) fn apply_unary(op: UnOp, v: &Value) -> Value {
     if v.is_exceptional() {
-        return v;
+        return v.clone();
     }
     match op {
         UnOp::Not => match v {
@@ -181,7 +196,7 @@ fn eval_unary(op: UnOp, v: Value) -> Value {
         UnOp::Neg => match v {
             Value::Int(i) => Value::Int(-i),
             Value::Real(r) => Value::Real(-r),
-            Value::Quantity { base, rate } => Value::Quantity { base: -base, rate },
+            Value::Quantity { base, rate } => Value::Quantity { base: -base, rate: *rate },
             _ => Value::Error,
         },
         UnOp::BitNot => match v {
@@ -191,59 +206,50 @@ fn eval_unary(op: UnOp, v: Value) -> Value {
     }
 }
 
-fn eval_binary(
-    ctx: EvalCtx<'_>,
-    op: BinOp,
-    l: &Expr,
-    r: &Expr,
-    stack: &mut CycleStack,
-    depth: usize,
-) -> Value {
-    use BinOp::*;
-    // Lazy boolean operators with UNDEFINED-absorption.
-    if op == And || op == Or {
-        let lv = eval_inner(ctx, l, stack, depth + 1);
-        let decided = match (&op, &lv) {
-            (And, Value::Bool(false)) => Some(Value::Bool(false)),
-            (Or, Value::Bool(true)) => Some(Value::Bool(true)),
-            _ => None,
-        };
-        if let Some(v) = decided {
-            return v;
-        }
-        if lv.is_error() || matches!(lv, Value::Int(_) | Value::Real(_) | Value::Quantity { .. } | Value::Str(_) | Value::List(_)) {
-            if lv.is_error() {
-                return Value::Error;
-            }
-            return Value::Error;
-        }
-        let rv = eval_inner(ctx, r, stack, depth + 1);
-        return match (lv, rv) {
-            (_, Value::Error) => Value::Error,
-            (Value::Bool(_), Value::Bool(b)) => {
-                // lv is the neutral element here (TRUE for &&, FALSE for ||)
-                Value::Bool(b)
-            }
-            (Value::Undefined, Value::Bool(b)) => {
-                // UNDEFINED && FALSE == FALSE; UNDEFINED || TRUE == TRUE
-                if (op == And && !b) || (op == Or && b) {
-                    Value::Bool(b)
-                } else {
-                    Value::Undefined
-                }
-            }
-            (_, Value::Undefined) => Value::Undefined,
-            _ => Value::Error,
-        };
+/// The lazy operators' left-operand decision: `Some(v)` when the right
+/// side must NOT be evaluated (`FALSE &&`, `TRUE ||`, or a left operand
+/// that is ERROR / non-boolean), `None` when it must (left is the
+/// neutral boolean or UNDEFINED).
+pub(crate) fn lazy_decided(or: bool, lv: &Value) -> Option<Value> {
+    match lv {
+        Value::Bool(b) if *b == or => Some(Value::Bool(or)),
+        Value::Bool(_) | Value::Undefined => None,
+        _ => Some(Value::Error),
     }
-    let lv = eval_inner(ctx, l, stack, depth + 1);
-    let rv = eval_inner(ctx, r, stack, depth + 1);
+}
+
+/// The lazy operators' combine table, applied only after
+/// [`lazy_decided`] returned `None` (so `lv` is the neutral boolean or
+/// UNDEFINED): UNDEFINED is absorbed when the right side decides the
+/// result (`UNDEFINED && FALSE == FALSE`; `UNDEFINED || TRUE == TRUE`).
+pub(crate) fn lazy_combine(or: bool, lv: &Value, rv: &Value) -> Value {
+    match (lv, rv) {
+        (_, Value::Error) => Value::Error,
+        (Value::Bool(_), Value::Bool(b)) => Value::Bool(*b),
+        (Value::Undefined, Value::Bool(b)) => {
+            if *b == or {
+                Value::Bool(*b)
+            } else {
+                Value::Undefined
+            }
+        }
+        (_, Value::Undefined) => Value::Undefined,
+        _ => Value::Error,
+    }
+}
+
+/// Strict (non-lazy) binary-operator semantics on already-evaluated
+/// operands — everything except `&&`/`||`, whose left operand gates
+/// right-operand evaluation and so cannot be expressed value-on-value.
+/// One body for the tree-walker and the bytecode VM.
+pub(crate) fn apply_binary(op: BinOp, lv: &Value, rv: &Value) -> Value {
+    use BinOp::*;
     // Strict comparisons never propagate UNDEFINED/ERROR.
     if op == Is {
-        return Value::Bool(lv.strict_eq(&rv));
+        return Value::Bool(lv.strict_eq(rv));
     }
     if op == Isnt {
-        return Value::Bool(!lv.strict_eq(&rv));
+        return Value::Bool(!lv.strict_eq(rv));
     }
     if lv.is_exceptional() || rv.is_exceptional() {
         return if lv.is_error() || rv.is_error() {
@@ -253,11 +259,11 @@ fn eval_binary(
         };
     }
     match op {
-        Eq | Ne => match lv.loose_eq(&rv) {
+        Eq | Ne => match lv.loose_eq(rv) {
             Some(b) => Value::Bool(if op == Eq { b } else { !b }),
             None => Value::Error,
         },
-        Lt | Le | Gt | Ge => match lv.loose_cmp(&rv) {
+        Lt | Le | Gt | Ge => match lv.loose_cmp(rv) {
             Some(ord) => {
                 let b = match op {
                     Lt => ord.is_lt(),
@@ -276,15 +282,39 @@ fn eval_binary(
     }
 }
 
-fn arith(op: BinOp, lv: Value, rv: Value) -> Value {
+fn eval_binary(
+    ctx: EvalCtx<'_>,
+    op: BinOp,
+    l: &Expr,
+    r: &Expr,
+    stack: &mut CycleStack,
+    depth: usize,
+) -> Value {
+    use BinOp::*;
+    // Lazy boolean operators with UNDEFINED-absorption.
+    if op == And || op == Or {
+        let or = op == Or;
+        let lv = eval_inner(ctx, l, stack, depth + 1);
+        if let Some(v) = lazy_decided(or, &lv) {
+            return v;
+        }
+        let rv = eval_inner(ctx, r, stack, depth + 1);
+        return lazy_combine(or, &lv, &rv);
+    }
+    let lv = eval_inner(ctx, l, stack, depth + 1);
+    let rv = eval_inner(ctx, r, stack, depth + 1);
+    apply_binary(op, &lv, &rv)
+}
+
+fn arith(op: BinOp, lv: &Value, rv: &Value) -> Value {
     use BinOp::*;
     // String + string concatenates (convenience used by converted ads).
     if op == Add {
-        if let (Value::Str(a), Value::Str(b)) = (&lv, &rv) {
+        if let (Value::Str(a), Value::Str(b)) = (lv, rv) {
             return Value::Str(format!("{a}{b}"));
         }
     }
-    let both_int = matches!((&lv, &rv), (Value::Int(_), Value::Int(_)));
+    let both_int = matches!((lv, rv), (Value::Int(_), Value::Int(_)));
     let (a, b) = match (lv.as_number(), rv.as_number()) {
         (Some(a), Some(b)) => (a, b),
         _ => return Value::Error,
@@ -334,9 +364,9 @@ fn arith(op: BinOp, lv: Value, rv: Value) -> Value {
     }
 }
 
-fn bits(op: BinOp, lv: Value, rv: Value) -> Value {
+fn bits(op: BinOp, lv: &Value, rv: &Value) -> Value {
     use BinOp::*;
-    let (a, b) = match (&lv, &rv) {
+    let (a, b) = match (lv, rv) {
         (Value::Int(a), Value::Int(b)) => (*a, *b),
         _ => return Value::Error,
     };
@@ -363,6 +393,13 @@ pub mod builtins {
 
     /// Dispatch a builtin by (lowercased) name.
     pub fn call(name: &str, vals: &[Value], _args: &[Expr], _ctx: EvalCtx<'_>) -> Value {
+        call_vals(name, vals)
+    }
+
+    /// Value-only dispatch — the body shared by the tree-walker and the
+    /// bytecode VM ([`super::super::program`]); every builtin is strict
+    /// in its (already evaluated) arguments.
+    pub(crate) fn call_vals(name: &str, vals: &[Value]) -> Value {
         // Any ERROR argument poisons the call; UNDEFINED poisons except
         // for the explicit type-test builtins.
         let type_test = matches!(

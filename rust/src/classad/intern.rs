@@ -84,6 +84,15 @@ impl Sym {
     pub fn as_str(self) -> &'static str {
         TABLE.read().unwrap().names[self.0 as usize]
     }
+
+    /// The dense table index backing this symbol — stable for the
+    /// process lifetime, identical for every case-spelling of the same
+    /// name. Dense consumers (the bytecode compiler's candidate-table
+    /// columns, debug dumps) key on this instead of re-hashing the
+    /// name.
+    pub fn id(self) -> u32 {
+        self.0
+    }
 }
 
 /// Number of distinct names interned so far — the table's (leaked)
@@ -134,6 +143,12 @@ mod tests {
     #[test]
     fn distinct_names_distinct_symbols() {
         assert_ne!(Sym::intern("reqdspace"), Sym::intern("reqdrdbandwidth"));
+    }
+
+    #[test]
+    fn ids_are_stable_across_spellings() {
+        assert_eq!(Sym::intern("MaxRDBandwidth").id(), Sym::intern("maxrdbandwidth").id());
+        assert_ne!(Sym::intern("id-test-a").id(), Sym::intern("id-test-b").id());
     }
 
     #[test]

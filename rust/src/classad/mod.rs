@@ -27,6 +27,10 @@
 //! * [`matchmaker`] — per-pair symmetric match + rank,
 //! * [`compile`] — [`CompiledMatch`], the compile-once / match-many
 //!   engine behind the broker's Match phase,
+//! * [`program`] — the bytecode backend: `requirements`/`rank`
+//!   flattened to a postfix [`Program`](program::Program) run by a
+//!   stack VM over a dense [`CandidateTable`](program::CandidateTable)
+//!   (the tree-walker in [`eval`] stays the reference evaluator),
 //! * [`builder`] — ergonomic programmatic ad construction.
 
 pub mod ast;
@@ -37,11 +41,13 @@ pub mod intern;
 pub mod lexer;
 pub mod matchmaker;
 pub mod parser;
+pub mod program;
 pub mod value;
 
 pub use ast::{AttrName, ClassAd, Expr};
 pub use builder::AdBuilder;
 pub use compile::CompiledMatch;
+pub use program::{CandidateTable, Program, VmScratch};
 pub use eval::{eval, eval_in_match, EvalCtx};
 pub use intern::Sym;
 pub use matchmaker::{match_ads, rank_candidates, rank_of, symmetric_match, Match};

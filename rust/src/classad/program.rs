@@ -1,0 +1,920 @@
+//! Bytecode matchmaking: `requirements`/`rank` flattened onto a postfix
+//! [`Program`] executed by a stack VM over a dense [`CandidateTable`].
+//!
+//! The broker's Match phase evaluates one request ad against *every*
+//! candidate replica, so the per-candidate evaluator is the hot loop.
+//! [`super::compile::CompiledMatch`] already hoists attribute lookup and
+//! constant folding out of that loop; this module removes the remaining
+//! per-candidate tree walk. Compilation happens in two phases:
+//!
+//! 1. **Resolve** ([`resolve`]): the folded `Expr` is rewritten against
+//!    the request-ad snapshot. Request-side attribute references whose
+//!    transitive evaluation can never touch the candidate are evaluated
+//!    *now* — at their exact structural depth, through the reference
+//!    tree-walker — and inlined as constants; the rewrite then re-folds
+//!    around them (`5 < cutoff` with `cutoff = 10` in the request
+//!    collapses to `TRUE` before any candidate is seen, and a decided
+//!    lazy operand can delete its other arm outright). Candidate-side
+//!    references become pre-bound `Sym` slots.
+//! 2. **Emit**: the resolved tree is lowered to one contiguous postfix
+//!    op vector. Short-circuit `&&`/`||` and the ternary become jump
+//!    ops ([`Op::ShortCircuit`], [`Op::Branch`]), so a non-matching
+//!    candidate exits in a handful of ops instead of walking the whole
+//!    tree. `requirements` and `rank` are two ranges of the same
+//!    vector.
+//!
+//! Execution runs over a reusable [`VmScratch`]. The value stack holds
+//! [`Slot`]s — indices into the constant pool, the candidate table, or
+//! the candidate ad — so constants and table cells are *referenced*,
+//! never cloned: steady-state evaluation of the common numeric
+//! requirements performs **zero heap allocations per candidate**. The
+//! two exceptions are inherent and deliberately rare: builtin calls
+//! copy their (already evaluated) arguments into the scratch argument
+//! buffer (a heap copy only for string arguments), and a reference to
+//! an attribute *defined by a non-literal expression* falls back to a
+//! one-op escape hatch ([`Op::Load`] → `eval::resolve_at_depth`) that
+//! re-enters the reference tree-walker for exactly that subtree, so
+//! cycle detection and depth budgeting cannot fork from the reference
+//! semantics.
+//!
+//! For batch matching, [`CandidateTable`] converts the Search results
+//! once into struct-of-arrays form: one column per attribute the
+//! program actually references, keyed by [`Sym`], misses stored as
+//! UNDEFINED (mirroring the kernel's `FlowSet` rewrite). The Match
+//! phase is then one linear pass down the columns.
+//!
+//! **Parity rule:** the tree-walker in [`super::eval`] is the reference
+//! evaluator. The VM's verdicts and ranks must be bit-identical to it —
+//! UNDEFINED/ERROR propagation, case-insensitivity, cycle detection and
+//! the `regexp()` builtin included. Both evaluators share one body for
+//! every operator (`apply_unary`/`apply_binary`/`lazy_decided`/
+//! `lazy_combine`/`call_vals`), and `it_match_parity` plus a randomized
+//! differential property test in `prop_invariants` pin the equivalence.
+//! Constants are *not* deduplicated: `Value`'s `PartialEq` is
+//! transparent across `Quantity`/`Real` while their `Display` differs,
+//! so merging "equal" constants could change `string()`/`strcat`
+//! output.
+
+use super::ast::{BinOp, ClassAd, Expr, Scope, UnOp};
+use super::eval::{self, builtins, EvalCtx, MAX_DEPTH};
+use super::intern::Sym;
+use super::value::Value;
+
+/// One postfix instruction. Jump targets are absolute indices into the
+/// program's op vector (sections are contiguous, so an in-section
+/// target never escapes its range).
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// Push constant pool entry `i` (by reference).
+    Const(u32),
+    /// Push the resolution of attribute slot `i` (table cell, ad
+    /// literal, or tree-walk escape hatch).
+    Load(u32),
+    Unary(UnOp),
+    /// Strict binary operators only — `&&`/`||` lower to
+    /// [`Op::ShortCircuit`] + [`Op::Combine`].
+    Binary(BinOp),
+    /// Lazy-operator gate: inspects the left operand on top of the
+    /// stack. If it decides the result (`FALSE &&`, `TRUE ||`, ERROR or
+    /// non-boolean), replaces it and jumps to `end`, skipping the right
+    /// operand entirely — exactly the tree-walker's early return.
+    ShortCircuit { or: bool, end: u32 },
+    /// Lazy-operator join: pops right then left, pushes the
+    /// UNDEFINED-absorbing combination.
+    Combine { or: bool },
+    /// Ternary gate: pops the condition. TRUE falls through to the then
+    /// branch, FALSE jumps to `on_false`, UNDEFINED/ERROR push the
+    /// propagated value and jump to `end`.
+    Branch { on_false: u32, end: u32 },
+    Jump(u32),
+    /// Pop `argc` arguments into the scratch buffer, dispatch builtin
+    /// `names[name]`.
+    Call { name: u32, argc: u32 },
+    MakeList(u32),
+}
+
+/// A pre-bound attribute reference: which side, which symbol, the
+/// structural depth of the originating `Attr` node (the tree-walker's
+/// depth budget must see the same number), and — for candidate-side
+/// references — the [`CandidateTable`] column.
+#[derive(Debug, Clone, Copy)]
+struct VmAttr {
+    other: bool,
+    sym: Sym,
+    depth: u32,
+    /// Column index for candidate-side attributes; `u32::MAX` for
+    /// request-side (candidate-dependent) references, which always take
+    /// the escape hatch.
+    col: u32,
+}
+
+const NO_COL: u32 = u32::MAX;
+
+/// A value-stack entry. Constants and table cells stay where they are —
+/// only computed intermediate results are owned.
+#[derive(Debug)]
+enum Slot {
+    /// Constant pool entry.
+    Const(u32),
+    /// Candidate-table cell in the current row.
+    Cell(u32),
+    /// Literal attribute of the current candidate ad (ad-mode only).
+    AdLit(Sym),
+    /// Computed intermediate.
+    Owned(Value),
+}
+
+/// Reusable VM state: the value stack and the builtin-argument buffer.
+/// One per `SelectScratch`; capacity persists across candidates and
+/// calls, so steady-state execution never grows it.
+#[derive(Debug, Default)]
+pub struct VmScratch {
+    stack: Vec<Slot>,
+    args: Vec<Value>,
+}
+
+/// One dense cell of a [`CandidateTable`] column.
+#[derive(Debug, Clone)]
+enum TCell {
+    /// The attribute's literal value (or UNDEFINED for a miss) —
+    /// readable without touching the ad.
+    Val(Value),
+    /// The attribute is defined by a non-literal expression; loads take
+    /// the tree-walk escape hatch against the candidate ad.
+    Escape,
+}
+
+/// Struct-of-arrays view of a candidate batch: one column per attribute
+/// the program references on the candidate side, `cols[col][row]`.
+/// Rebuilt per batch (capacity reused), read per candidate.
+#[derive(Debug, Default, Clone)]
+pub struct CandidateTable {
+    cols: Vec<Vec<TCell>>,
+    rows: usize,
+}
+
+impl CandidateTable {
+    /// Re-populate from a candidate batch for `program`. Column
+    /// vectors are cleared, not dropped, so a steady-state broker
+    /// reuses their capacity; only string-valued literal cells copy
+    /// heap data, and only once per batch (not per op).
+    pub fn rebuild<'a, I>(&mut self, program: &Program, ads: I)
+    where
+        I: IntoIterator<Item = &'a ClassAd>,
+    {
+        let ncols = program.columns.len();
+        self.cols.truncate(ncols);
+        while self.cols.len() < ncols {
+            self.cols.push(Vec::new());
+        }
+        for col in &mut self.cols {
+            col.clear();
+        }
+        self.rows = 0;
+        for ad in ads {
+            for (ci, &sym) in program.columns.iter().enumerate() {
+                let cell = match ad.get_sym(sym) {
+                    None => TCell::Val(Value::Undefined),
+                    Some(Expr::Lit(v)) => TCell::Val(v.clone()),
+                    Some(_) => TCell::Escape,
+                };
+                self.cols[ci].push(cell);
+            }
+            self.rows += 1;
+        }
+    }
+
+    /// Number of candidate rows currently held.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cell(&self, col: usize, row: usize) -> &TCell {
+        &self.cols[col][row]
+    }
+}
+
+/// Everything a single candidate evaluation can read.
+#[derive(Clone, Copy)]
+struct VmEnv<'a> {
+    request: &'a ClassAd,
+    candidate: &'a ClassAd,
+    table: Option<(&'a CandidateTable, usize)>,
+}
+
+/// A request's `requirements` + `rank`, compiled to postfix bytecode.
+/// Produced by [`Program::compile`] against a request-ad snapshot; the
+/// same snapshot must be passed back at execution time
+/// ([`super::compile::CompiledMatch`] owns both and guarantees this).
+#[derive(Debug, Clone)]
+pub struct Program {
+    ops: Vec<Op>,
+    consts: Vec<Value>,
+    attrs: Vec<VmAttr>,
+    names: Vec<String>,
+    /// Candidate-side attribute symbols, in column order.
+    columns: Vec<Sym>,
+    /// `[start, end)` op range of the requirements section; `None` =
+    /// the request publishes none = always willing.
+    req: Option<(u32, u32)>,
+    /// `[start, end)` op range of the rank section; `None` ranks 0.
+    rank: Option<(u32, u32)>,
+}
+
+impl Program {
+    /// Compile the request's (already folded) `requirements` and `rank`
+    /// expressions. Request-side constant inlining evaluates against
+    /// `request` *now*; the returned program is a snapshot, like the
+    /// rest of `CompiledMatch`.
+    pub fn compile(request: &ClassAd, requirements: Option<&Expr>, rank: Option<&Expr>) -> Program {
+        let mut em = Emitter::default();
+        let req = requirements.map(|e| em.emit_section(request, e));
+        let rank = rank.map(|e| em.emit_section(request, e));
+        Program {
+            ops: em.ops,
+            consts: em.consts,
+            attrs: em.attrs,
+            names: em.names,
+            columns: em.columns,
+            req,
+            rank,
+        }
+    }
+
+    /// Does the *request* side accept `candidate`? (The candidate's own
+    /// requirements are the caller's business, as in `CompiledMatch`.)
+    pub fn holds(&self, request: &ClassAd, candidate: &ClassAd, scratch: &mut VmScratch) -> bool {
+        self.holds_env(&VmEnv { request, candidate, table: None }, scratch)
+    }
+
+    /// [`Program::holds`] reading candidate attributes from table row
+    /// `row` instead of probing the ad.
+    pub fn holds_row(
+        &self,
+        request: &ClassAd,
+        candidate: &ClassAd,
+        table: &CandidateTable,
+        row: usize,
+        scratch: &mut VmScratch,
+    ) -> bool {
+        self.holds_env(&VmEnv { request, candidate, table: Some((table, row)) }, scratch)
+    }
+
+    /// The request's rank of `candidate` (non-numeric collapses to 0.0,
+    /// as in the tree-walking `CompiledMatch::rank`).
+    pub fn rank(&self, request: &ClassAd, candidate: &ClassAd, scratch: &mut VmScratch) -> f64 {
+        self.rank_env(&VmEnv { request, candidate, table: None }, scratch)
+    }
+
+    /// [`Program::rank`] reading candidate attributes from table row `row`.
+    pub fn rank_row(
+        &self,
+        request: &ClassAd,
+        candidate: &ClassAd,
+        table: &CandidateTable,
+        row: usize,
+        scratch: &mut VmScratch,
+    ) -> f64 {
+        self.rank_env(&VmEnv { request, candidate, table: Some((table, row)) }, scratch)
+    }
+
+    /// Total op count across both sections (compile-quality metric:
+    /// request-side inlining shows up as fewer ops).
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Number of candidate-side attribute columns the table carries.
+    pub fn column_count(&self) -> usize {
+        self.columns.len()
+    }
+
+    fn holds_env(&self, env: &VmEnv<'_>, scratch: &mut VmScratch) -> bool {
+        match self.req {
+            None => true,
+            Some(range) => {
+                let top = self.run(range, env, scratch);
+                matches!(self.slot_value(env, &top), Value::Bool(true))
+            }
+        }
+    }
+
+    fn rank_env(&self, env: &VmEnv<'_>, scratch: &mut VmScratch) -> f64 {
+        match self.rank {
+            None => 0.0,
+            Some(range) => {
+                let top = self.run(range, env, scratch);
+                self.slot_value(env, &top).as_number().unwrap_or(0.0)
+            }
+        }
+    }
+
+    /// Execute one section; returns the result slot. The interpreter
+    /// loop allocates nothing itself — every push is an index slot or
+    /// an `Owned` value computed by the shared operator bodies.
+    fn run(&self, (start, end): (u32, u32), env: &VmEnv<'_>, scratch: &mut VmScratch) -> Slot {
+        let VmScratch { stack, args } = scratch;
+        stack.clear();
+        let end = end as usize;
+        let mut pc = start as usize;
+        while pc < end {
+            match &self.ops[pc] {
+                Op::Const(i) => stack.push(Slot::Const(*i)),
+                Op::Load(i) => stack.push(self.load(*i, env)),
+                Op::Unary(op) => {
+                    let x = stack.pop().expect("vm: unary underflow");
+                    let v = eval::apply_unary(*op, self.slot_value(env, &x));
+                    stack.push(Slot::Owned(v));
+                }
+                Op::Binary(op) => {
+                    let r = stack.pop().expect("vm: binary underflow");
+                    let l = stack.pop().expect("vm: binary underflow");
+                    let v =
+                        eval::apply_binary(*op, self.slot_value(env, &l), self.slot_value(env, &r));
+                    stack.push(Slot::Owned(v));
+                }
+                Op::ShortCircuit { or, end: target } => {
+                    let top = stack.last().expect("vm: short-circuit underflow");
+                    if let Some(v) = eval::lazy_decided(*or, self.slot_value(env, top)) {
+                        *stack.last_mut().expect("vm: short-circuit underflow") = Slot::Owned(v);
+                        pc = *target as usize;
+                        continue;
+                    }
+                }
+                Op::Combine { or } => {
+                    let r = stack.pop().expect("vm: combine underflow");
+                    let l = stack.pop().expect("vm: combine underflow");
+                    let v =
+                        eval::lazy_combine(*or, self.slot_value(env, &l), self.slot_value(env, &r));
+                    stack.push(Slot::Owned(v));
+                }
+                Op::Branch { on_false, end: target } => {
+                    let c = stack.pop().expect("vm: branch underflow");
+                    match self.slot_value(env, &c) {
+                        Value::Bool(true) => {}
+                        Value::Bool(false) => {
+                            pc = *on_false as usize;
+                            continue;
+                        }
+                        Value::Undefined => {
+                            stack.push(Slot::Owned(Value::Undefined));
+                            pc = *target as usize;
+                            continue;
+                        }
+                        _ => {
+                            stack.push(Slot::Owned(Value::Error));
+                            pc = *target as usize;
+                            continue;
+                        }
+                    }
+                }
+                Op::Jump(target) => {
+                    pc = *target as usize;
+                    continue;
+                }
+                Op::Call { name, argc } => {
+                    let argc = *argc as usize;
+                    args.clear();
+                    let base = stack.len() - argc;
+                    for s in stack.drain(base..) {
+                        args.push(self.slot_value(env, &s).clone());
+                    }
+                    let v = builtins::call_vals(&self.names[*name as usize], &args[..]);
+                    stack.push(Slot::Owned(v));
+                }
+                Op::MakeList(n) => {
+                    let base = stack.len() - *n as usize;
+                    let vs: Vec<Value> =
+                        stack.drain(base..).map(|s| self.slot_value(env, &s).clone()).collect();
+                    stack.push(Slot::Owned(Value::List(vs)));
+                }
+            }
+            pc += 1;
+        }
+        stack.pop().expect("vm: section left no result")
+    }
+
+    /// Resolve attribute slot `i` to a stack slot. Literal values stay
+    /// by-reference (table cell or ad entry); anything defined by an
+    /// expression re-enters the reference tree-walker at the baked
+    /// structural depth.
+    fn load(&self, i: u32, env: &VmEnv<'_>) -> Slot {
+        let a = &self.attrs[i as usize];
+        if !a.other {
+            // Candidate-dependent request-side reference: full
+            // resolution, my-side first (Scope::My and present-Default
+            // behave identically here — compile guarantees presence).
+            let ctx = EvalCtx::matched(env.request, env.candidate);
+            return Slot::Owned(eval::resolve_at_depth(ctx, false, a.sym, a.depth as usize));
+        }
+        if let Some((table, row)) = env.table {
+            return match table.cell(a.col as usize, row) {
+                TCell::Val(_) => Slot::Cell(a.col),
+                TCell::Escape => {
+                    let ctx = EvalCtx::matched(env.request, env.candidate);
+                    Slot::Owned(eval::resolve_at_depth(ctx, true, a.sym, a.depth as usize))
+                }
+            };
+        }
+        match env.candidate.get_sym(a.sym) {
+            None => Slot::Owned(Value::Undefined),
+            Some(Expr::Lit(_)) => Slot::AdLit(a.sym),
+            Some(_) => {
+                let ctx = EvalCtx::matched(env.request, env.candidate);
+                Slot::Owned(eval::resolve_at_depth(ctx, true, a.sym, a.depth as usize))
+            }
+        }
+    }
+
+    fn slot_value<'a>(&'a self, env: &VmEnv<'a>, slot: &'a Slot) -> &'a Value {
+        match slot {
+            Slot::Owned(v) => v,
+            Slot::Const(i) => &self.consts[*i as usize],
+            Slot::Cell(col) => {
+                let (table, row) = env.table.expect("vm: cell slot without a table");
+                match table.cell(*col as usize, row) {
+                    TCell::Val(v) => v,
+                    TCell::Escape => unreachable!("vm: escape cells resolve at load"),
+                }
+            }
+            Slot::AdLit(sym) => match env.candidate.get_sym(*sym) {
+                Some(Expr::Lit(v)) => v,
+                _ => unreachable!("vm: ad-lit slot must name a literal attribute"),
+            },
+        }
+    }
+}
+
+/// Resolved tree: the intermediate between the request-side rewrite and
+/// postfix emission. `Const` nodes carry the exact value the reference
+/// tree-walker produces for that subtree at that depth.
+enum RNode {
+    Const(Value),
+    Attr { other: bool, sym: Sym, depth: u32 },
+    Unary(UnOp, Box<RNode>),
+    Binary(BinOp, Box<RNode>, Box<RNode>),
+    Cond(Box<RNode>, Box<RNode>, Box<RNode>),
+    Call(String, Vec<RNode>),
+    List(Vec<RNode>),
+}
+
+/// Phase 1: rewrite `e` against the request snapshot. The induction
+/// invariant is exact equivalence: `RNode::Const(v)` means the
+/// reference evaluator produces precisely `v` for this subtree at this
+/// structural depth for *every* candidate — which is why folding uses
+/// the same shared operator bodies the tree-walker runs, depths are
+/// baked into `Attr` nodes, and nodes past the depth budget become
+/// `Const(Error)` exactly where `eval_inner` would bail.
+fn resolve(request: &ClassAd, e: &Expr, depth: usize) -> RNode {
+    if depth > MAX_DEPTH {
+        return RNode::Const(Value::Error);
+    }
+    let d = depth as u32;
+    match e {
+        Expr::Lit(v) => RNode::Const(v.clone()),
+        Expr::Attr(scope, name) => {
+            let sym = name.sym();
+            let present = request.contains_sym(sym);
+            match scope {
+                Scope::Other => RNode::Attr { other: true, sym, depth: d },
+                Scope::My if !present => RNode::Const(Value::Undefined),
+                // Default with no request-side definition falls through
+                // to the candidate, statically.
+                Scope::Default if !present => RNode::Attr { other: true, sym, depth: d },
+                Scope::My | Scope::Default => {
+                    let defn = request.get_sym(sym).expect("present implies defined");
+                    let mut visiting = Vec::new();
+                    if candidate_dependent(request, defn, &mut visiting) {
+                        RNode::Attr { other: false, sym, depth: d }
+                    } else {
+                        // Candidate-independent: the value is fixed for
+                        // every candidate. Evaluate through the
+                        // reference walker at the node's exact depth —
+                        // solo context, since the evaluation provably
+                        // never reaches the other side.
+                        RNode::Const(eval::resolve_at_depth(
+                            EvalCtx::solo(request),
+                            false,
+                            sym,
+                            depth,
+                        ))
+                    }
+                }
+            }
+        }
+        Expr::Unary(op, x) => match resolve(request, x, depth + 1) {
+            RNode::Const(v) => RNode::Const(eval::apply_unary(*op, &v)),
+            rx => RNode::Unary(*op, Box::new(rx)),
+        },
+        Expr::Binary(op, l, r) if matches!(op, BinOp::And | BinOp::Or) => {
+            let or = *op == BinOp::Or;
+            let rl = resolve(request, l, depth + 1);
+            if let RNode::Const(lv) = &rl {
+                if let Some(v) = eval::lazy_decided(or, lv) {
+                    // Decided left operand: the right arm is never
+                    // evaluated, so it is deleted, not compiled.
+                    return RNode::Const(v);
+                }
+                let rr = resolve(request, r, depth + 1);
+                if let RNode::Const(rv) = &rr {
+                    return RNode::Const(eval::lazy_combine(or, lv, rv));
+                }
+                return RNode::Binary(*op, Box::new(rl), Box::new(rr));
+            }
+            let rr = resolve(request, r, depth + 1);
+            RNode::Binary(*op, Box::new(rl), Box::new(rr))
+        }
+        Expr::Binary(op, l, r) => {
+            let rl = resolve(request, l, depth + 1);
+            let rr = resolve(request, r, depth + 1);
+            match (&rl, &rr) {
+                (RNode::Const(lv), RNode::Const(rv)) => {
+                    RNode::Const(eval::apply_binary(*op, lv, rv))
+                }
+                _ => RNode::Binary(*op, Box::new(rl), Box::new(rr)),
+            }
+        }
+        Expr::Cond(c, t, f) => match resolve(request, c, depth + 1) {
+            // A constant condition splices the taken branch in place;
+            // branch depths stay correct because they were resolved at
+            // their own structural depth.
+            RNode::Const(Value::Bool(true)) => resolve(request, t, depth + 1),
+            RNode::Const(Value::Bool(false)) => resolve(request, f, depth + 1),
+            RNode::Const(Value::Undefined) => RNode::Const(Value::Undefined),
+            RNode::Const(_) => RNode::Const(Value::Error),
+            rc => RNode::Cond(
+                Box::new(rc),
+                Box::new(resolve(request, t, depth + 1)),
+                Box::new(resolve(request, f, depth + 1)),
+            ),
+        },
+        Expr::Call(name, xs) => {
+            let rs: Vec<RNode> = xs.iter().map(|x| resolve(request, x, depth + 1)).collect();
+            if rs.iter().all(|r| matches!(r, RNode::Const(_))) {
+                let vals: Vec<Value> = rs
+                    .iter()
+                    .map(|r| match r {
+                        RNode::Const(v) => v.clone(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                RNode::Const(builtins::call_vals(name, &vals))
+            } else {
+                RNode::Call(name.clone(), rs)
+            }
+        }
+        Expr::List(xs) => {
+            let rs: Vec<RNode> = xs.iter().map(|x| resolve(request, x, depth + 1)).collect();
+            if rs.iter().all(|r| matches!(r, RNode::Const(_))) {
+                let vals: Vec<Value> = rs
+                    .iter()
+                    .map(|r| match r {
+                        RNode::Const(v) => v.clone(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                RNode::Const(Value::List(vals))
+            } else {
+                RNode::List(rs)
+            }
+        }
+    }
+}
+
+/// Can evaluating `e` in the request's match context ever touch the
+/// candidate ad? Conservative (`true` when unsure) — a `true` only
+/// costs an escape-hatch op, a wrong `false` would fork semantics.
+///
+/// A reference is candidate-dependent iff it reaches `other.` scope or
+/// a Default-scope name absent from the request (which falls through to
+/// the candidate). A *pure request-side cycle* is independent: it
+/// evaluates to ERROR before the candidate could matter, so the cyclic
+/// edge itself is skipped (`visiting`) while its siblings are still
+/// explored.
+fn candidate_dependent(request: &ClassAd, e: &Expr, visiting: &mut Vec<Sym>) -> bool {
+    match e {
+        Expr::Lit(_) => false,
+        Expr::Attr(scope, name) => {
+            let sym = name.sym();
+            match scope {
+                Scope::Other => true,
+                Scope::My | Scope::Default => match request.get_sym(sym) {
+                    Some(defn) => {
+                        if visiting.contains(&sym) {
+                            false
+                        } else {
+                            visiting.push(sym);
+                            let dep = candidate_dependent(request, defn, visiting);
+                            visiting.pop();
+                            dep
+                        }
+                    }
+                    None => matches!(scope, Scope::Default),
+                },
+            }
+        }
+        Expr::Unary(_, x) => candidate_dependent(request, x, visiting),
+        Expr::Binary(_, l, r) => {
+            candidate_dependent(request, l, visiting) || candidate_dependent(request, r, visiting)
+        }
+        Expr::Cond(c, t, f) => {
+            candidate_dependent(request, c, visiting)
+                || candidate_dependent(request, t, visiting)
+                || candidate_dependent(request, f, visiting)
+        }
+        Expr::Call(_, args) => args.iter().any(|a| candidate_dependent(request, a, visiting)),
+        Expr::List(xs) => xs.iter().any(|x| candidate_dependent(request, x, visiting)),
+    }
+}
+
+/// Phase 2: postfix emission with jump backpatching.
+#[derive(Default)]
+struct Emitter {
+    ops: Vec<Op>,
+    consts: Vec<Value>,
+    attrs: Vec<VmAttr>,
+    names: Vec<String>,
+    columns: Vec<Sym>,
+}
+
+impl Emitter {
+    fn emit_section(&mut self, request: &ClassAd, e: &Expr) -> (u32, u32) {
+        let start = self.ops.len() as u32;
+        let node = resolve(request, e, 0);
+        self.emit(&node);
+        (start, self.ops.len() as u32)
+    }
+
+    fn emit(&mut self, n: &RNode) {
+        match n {
+            RNode::Const(v) => {
+                // No dedup — see the module doc's Quantity/Real note.
+                let i = self.consts.len() as u32;
+                self.consts.push(v.clone());
+                self.ops.push(Op::Const(i));
+            }
+            RNode::Attr { other, sym, depth } => {
+                let i = self.attr_slot(*other, *sym, *depth);
+                self.ops.push(Op::Load(i));
+            }
+            RNode::Unary(op, x) => {
+                self.emit(x);
+                self.ops.push(Op::Unary(*op));
+            }
+            RNode::Binary(op, l, r) if matches!(op, BinOp::And | BinOp::Or) => {
+                let or = *op == BinOp::Or;
+                self.emit(l);
+                let sc = self.ops.len();
+                self.ops.push(Op::ShortCircuit { or, end: 0 });
+                self.emit(r);
+                self.ops.push(Op::Combine { or });
+                let end = self.ops.len() as u32;
+                if let Op::ShortCircuit { end: e, .. } = &mut self.ops[sc] {
+                    *e = end;
+                }
+            }
+            RNode::Binary(op, l, r) => {
+                self.emit(l);
+                self.emit(r);
+                self.ops.push(Op::Binary(*op));
+            }
+            RNode::Cond(c, t, f) => {
+                self.emit(c);
+                let br = self.ops.len();
+                self.ops.push(Op::Branch { on_false: 0, end: 0 });
+                self.emit(t);
+                let jmp = self.ops.len();
+                self.ops.push(Op::Jump(0));
+                let on_false = self.ops.len() as u32;
+                self.emit(f);
+                let end = self.ops.len() as u32;
+                if let Op::Branch { on_false: of, end: e } = &mut self.ops[br] {
+                    *of = on_false;
+                    *e = end;
+                }
+                if let Op::Jump(t) = &mut self.ops[jmp] {
+                    *t = end;
+                }
+            }
+            RNode::Call(name, xs) => {
+                for x in xs {
+                    self.emit(x);
+                }
+                let ni = self.name_slot(name);
+                self.ops.push(Op::Call { name: ni, argc: xs.len() as u32 });
+            }
+            RNode::List(xs) => {
+                for x in xs {
+                    self.emit(x);
+                }
+                self.ops.push(Op::MakeList(xs.len() as u32));
+            }
+        }
+    }
+
+    fn attr_slot(&mut self, other: bool, sym: Sym, depth: u32) -> u32 {
+        if let Some(i) = self
+            .attrs
+            .iter()
+            .position(|a| a.other == other && a.sym == sym && a.depth == depth)
+        {
+            return i as u32;
+        }
+        let col = if other {
+            match self.columns.iter().position(|s| s.id() == sym.id()) {
+                Some(c) => c as u32,
+                None => {
+                    self.columns.push(sym);
+                    (self.columns.len() - 1) as u32
+                }
+            }
+        } else {
+            NO_COL
+        };
+        self.attrs.push(VmAttr { other, sym, depth, col });
+        (self.attrs.len() - 1) as u32
+    }
+
+    fn name_slot(&mut self, name: &str) -> u32 {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return i as u32;
+        }
+        self.names.push(name.to_string());
+        (self.names.len() - 1) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classad::compile::fold;
+    use crate::classad::eval::eval;
+    use crate::classad::parser::{parse_classad, parse_expr};
+
+    fn tree_value(request: &ClassAd, candidate: &ClassAd, e: &Expr) -> Value {
+        eval(EvalCtx::matched(request, candidate), e)
+    }
+
+    /// VM-vs-tree on one expression used as both requirements and rank.
+    fn assert_expr_parity(request: &ClassAd, candidate: &ClassAd, src: &str) {
+        let e = fold(&parse_expr(src).unwrap());
+        let p = Program::compile(request, Some(&e), Some(&e));
+        let mut vm = VmScratch::default();
+        let tv = tree_value(request, candidate, &e);
+        assert_eq!(
+            p.holds(request, candidate, &mut vm),
+            matches!(tv, Value::Bool(true)),
+            "holds parity for `{src}` (tree said {tv:?})"
+        );
+        let tree_rank = tv.as_number().unwrap_or(0.0);
+        let vm_rank = p.rank(request, candidate, &mut vm);
+        assert_eq!(
+            vm_rank.to_bits(),
+            tree_rank.to_bits(),
+            "rank bits for `{src}` (tree {tree_rank}, vm {vm_rank})"
+        );
+        // Table mode must agree with ad mode.
+        let mut table = CandidateTable::default();
+        table.rebuild(&p, std::iter::once(candidate));
+        assert_eq!(
+            p.holds_row(request, candidate, &table, 0, &mut vm),
+            matches!(tv, Value::Bool(true)),
+            "table-mode holds parity for `{src}`"
+        );
+        assert_eq!(
+            p.rank_row(request, candidate, &table, 0, &mut vm).to_bits(),
+            tree_rank.to_bits(),
+            "table-mode rank bits for `{src}`"
+        );
+    }
+
+    #[test]
+    fn request_side_constants_are_inlined() {
+        let request = parse_classad("cutoff = 5;").unwrap();
+        let e = fold(&parse_expr("other.size > cutoff").unwrap());
+        let p = Program::compile(&request, Some(&e), None);
+        // Load, Const, Binary — the `cutoff` lookup is gone.
+        assert_eq!(p.op_count(), 3);
+        assert_eq!(p.column_count(), 1);
+        let mut vm = VmScratch::default();
+        for (src, want) in [("size = 7;", true), ("size = 3;", false), ("x = 1;", false)] {
+            let cand = parse_classad(src).unwrap();
+            assert_eq!(p.holds(&request, &cand, &mut vm), want, "candidate `{src}`");
+        }
+    }
+
+    #[test]
+    fn paper_ads_match_and_rank_identically() {
+        let request = parse_classad(
+            r#"
+            reqdSpace = 5G;
+            reqdRDBandwidth = 50K/Sec;
+            rank = other.availableSpace;
+            requirement = other.availableSpace > 5G
+                && other.MaxRDBandwidth > 50K/Sec;
+            "#,
+        )
+        .unwrap();
+        for cand_src in [
+            "availableSpace = 50G; MaxRDBandwidth = 75K/Sec;",
+            "availableSpace = 3G; MaxRDBandwidth = 75K/Sec;",
+            "availableSpace = 50G;",
+            "hostname = \"x\";",
+        ] {
+            let cand = parse_classad(cand_src).unwrap();
+            assert_expr_parity(
+                &request,
+                &cand,
+                "other.availableSpace > 5G && other.MaxRDBandwidth > 50K/Sec",
+            );
+            assert_expr_parity(&request, &cand, "other.availableSpace");
+        }
+    }
+
+    #[test]
+    fn exceptional_logic_and_jumps_agree_with_tree() {
+        let request = parse_classad("threshold = 10; bad = 1 / 0;").unwrap();
+        let cand = parse_classad("a = 3; s = \"Replica\"; derived = a * 2; cyc = cyc;").unwrap();
+        for src in [
+            // Short-circuits: decided, absorbing, error-poisoned.
+            "other.a < 0 && other.nosuch",
+            "other.nosuch || other.a > 1",
+            "other.a && other.a > 1",
+            "my.bad || other.a > 1",
+            // Ternary on every condition class.
+            "other.a > 1 ? 1 : 2",
+            "other.a < 1 ? 1 : 2",
+            "other.nosuch ? 1 : 2",
+            "other.s ? 1 : 2",
+            // Builtins, lists, strings, regex, case-insensitivity.
+            "regexp(\"repl.*\", other.s)",
+            "member(other.a, {1, 2, 3})",
+            "strcat(other.s, \"!\") == \"replica!\"",
+            "substr(other.s, 0, 3)",
+            "isUndefined(other.nosuch)",
+            // Escape hatch: expression-defined and cyclic candidate attrs.
+            "other.derived > threshold",
+            "other.derived > 5",
+            "other.cyc == 1",
+            // Strict ops see through exceptional values.
+            "other.nosuch =?= UNDEFINED",
+            "my.bad =!= ERROR",
+        ] {
+            assert_expr_parity(&request, &cand, src);
+        }
+    }
+
+    #[test]
+    fn request_side_cycles_inline_to_error() {
+        let request = parse_classad("loop = loop + 1; rank = loop;").unwrap();
+        let cand = parse_classad("a = 1;").unwrap();
+        // Pure request-side cycle is candidate-independent → ERROR const.
+        let e = fold(&parse_expr("loop > 0").unwrap());
+        let p = Program::compile(&request, Some(&e), None);
+        assert_eq!(p.column_count(), 0, "no candidate columns for a pure request cycle");
+        assert_expr_parity(&request, &cand, "loop > 0");
+        // A cycle with a candidate-dependent sibling keeps the load.
+        let request2 = parse_classad("x = y + other.a; y = x;").unwrap();
+        assert_expr_parity(&request2, &cand, "x > 0");
+        assert_expr_parity(&request2, &cand, "y > 0");
+    }
+
+    #[test]
+    fn table_rebuild_reuses_columns_and_marks_escapes() {
+        let request = parse_classad("r = other.space > 10 && other.dyn > 1;").unwrap();
+        let e = fold(&parse_expr("other.space > 10 && other.dyn > 1").unwrap());
+        let p = Program::compile(&request, Some(&e), None);
+        assert_eq!(p.column_count(), 2);
+        let ads: Vec<ClassAd> = [
+            "space = 50; dyn = space / 2;",
+            "space = 5; dyn = 2;",
+            "dyn = 2;",
+        ]
+        .iter()
+        .map(|s| parse_classad(s).unwrap())
+        .collect();
+        let mut table = CandidateTable::default();
+        table.rebuild(&p, ads.iter());
+        assert_eq!(table.rows(), 3);
+        let mut vm = VmScratch::default();
+        for (row, ad) in ads.iter().enumerate() {
+            assert_eq!(
+                p.holds_row(&request, ad, &table, row, &mut vm),
+                p.holds(&request, ad, &mut vm),
+                "row {row}"
+            );
+        }
+        // Rebuild with fewer rows must fully replace the contents.
+        table.rebuild(&p, ads.iter().take(1));
+        assert_eq!(table.rows(), 1);
+    }
+
+    #[test]
+    fn quantity_and_real_constants_stay_distinct() {
+        // 50K (Quantity) and 51200.0 (Real) compare equal but print
+        // differently; inlining must not merge them.
+        let request = parse_classad("q = 50K; r = 51200.0;").unwrap();
+        let cand = parse_classad("a = 1;").unwrap();
+        assert_expr_parity(&request, &cand, "strcat(string(q), \"/\", string(r))");
+    }
+}

@@ -1,12 +1,14 @@
-//! Parity: the compiled match-many path must return *identical* results
-//! to the per-pair evaluator — on the paper's example ads (the same
-//! fixtures as `it_classad_paper.rs`), on UNDEFINED/ERROR requirement
-//! outcomes, on cyclic definitions, and under case-insensitive
-//! attribute lookup.
+//! Parity: all three evaluators — the per-pair path, the compiled
+//! tree-walk ([`CompiledMatch`]) and the bytecode VM (ad mode *and*
+//! dense-table mode) — must return *identical* results on the paper's
+//! example ads (the same fixtures as `it_classad_paper.rs`), on
+//! UNDEFINED/ERROR requirement outcomes, on cyclic definitions, and
+//! under case-insensitive attribute lookup. The tree-walker is the
+//! reference; rank equality is checked on the f64 bits.
 
 use globus_replica::classad::{
-    eval_in_match, parse_classad, rank_candidates, rank_of, symmetric_match, ClassAd,
-    CompiledMatch, Match, Value,
+    eval_in_match, parse_classad, rank_candidates, rank_of, symmetric_match, CandidateTable,
+    ClassAd, CompiledMatch, Match, Value, VmScratch,
 };
 
 /// Verbatim from the paper, §4 (Figure-4 storage ad shape).
@@ -50,6 +52,9 @@ fn per_pair_rank(request: &ClassAd, candidates: &[ClassAd]) -> Vec<Match> {
 
 fn assert_parity(request: &ClassAd, candidates: &[ClassAd]) {
     let compiled = CompiledMatch::compile(request);
+    let mut vm = VmScratch::default();
+    let mut table = CandidateTable::default();
+    table.rebuild(compiled.program(), candidates.iter());
     for (i, c) in candidates.iter().enumerate() {
         assert_eq!(
             compiled.matches(c),
@@ -61,9 +66,32 @@ fn assert_parity(request: &ClassAd, candidates: &[ClassAd]) {
             rank_of(request, c),
             "rank parity diverged on candidate {i}"
         );
+        // Third evaluator: the bytecode VM, in both ad and table mode.
+        assert_eq!(
+            compiled.matches_vm(c, &mut vm),
+            compiled.matches(c),
+            "vm match diverged from tree-walk on candidate {i}"
+        );
+        assert_eq!(
+            compiled.matches_vm_row(c, &table, i, &mut vm),
+            compiled.matches(c),
+            "vm table-mode match diverged from tree-walk on candidate {i}"
+        );
+        assert_eq!(
+            compiled.rank_vm(c, &mut vm).to_bits(),
+            compiled.rank(c).to_bits(),
+            "vm rank bits diverged from tree-walk on candidate {i}"
+        );
     }
     assert_eq!(compiled.rank_candidates(candidates), per_pair_rank(request, candidates));
     assert_eq!(rank_candidates(request, candidates), per_pair_rank(request, candidates));
+    // The fused VM batch pass (what the broker's Match phase runs) must
+    // reproduce the tree-walk pass exactly — flags and ranked order.
+    let (flags, ms) = compiled.match_and_rank(candidates.iter());
+    let (mut vflags, mut vms) = (Vec::new(), Vec::new());
+    compiled.match_and_rank_vm_into(candidates.iter(), Some(&table), &mut vflags, &mut vms, &mut vm);
+    assert_eq!(flags, vflags, "vm batch flags diverged");
+    assert_eq!(ms, vms, "vm batch ranking diverged");
 }
 
 #[test]

@@ -5,7 +5,9 @@
 //! replayable).
 
 use globus_replica::classad::{
-    eval_in_match, parse_classad, rank_candidates, symmetric_match, AdBuilder, Value,
+    ast::{BinOp, Scope as AdScope, UnOp},
+    eval_in_match, parse_classad, rank_candidates, symmetric_match, AdBuilder, AttrName,
+    CandidateTable, ClassAd, CompiledMatch, Expr, Value, VmScratch,
 };
 use globus_replica::config::GridConfig;
 use globus_replica::directory::entry::{Dn, Entry};
@@ -549,6 +551,192 @@ fn prop_match_context_attribute_resolution() {
             Value::Real(got) if (got - v_sto).abs() < 1e-9 => Ok(()),
             other => Err(format!("probe = {other:?}, want {v_sto}")),
         }
+    });
+}
+
+/// Shared attribute-name pool for the differential generator: both ads
+/// draw definitions and references from the same eight names, so
+/// cross-ad chains and genuine cycles (self- and mutual) arise often.
+const DIFF_POOL: [&str; 8] = ["pa0", "pa1", "pa2", "pa3", "pa4", "pa5", "pa6", "pa7"];
+
+fn gen_diff_value(rng: &mut Rng) -> Value {
+    match rng.index(7) {
+        0 => Value::Int(rng.below(200) as i64 - 100),
+        1 => Value::Real(rng.range(-100.0, 100.0)),
+        2 => Value::Bool(rng.chance(0.5)),
+        3 => Value::Str(format!("s{}", rng.below(4))),
+        4 => Value::Undefined,
+        5 => Value::Error,
+        _ => Value::Quantity { base: rng.range(0.0, 1e6), rate: rng.chance(0.5) },
+    }
+}
+
+fn gen_diff_attr(rng: &mut Rng) -> Expr {
+    let scope = match rng.index(3) {
+        0 => AdScope::My,
+        1 => AdScope::Other,
+        _ => AdScope::Default,
+    };
+    Expr::Attr(scope, AttrName::new(*rng.choose(&DIFF_POOL)))
+}
+
+fn gen_diff_expr(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 || rng.chance(0.3) {
+        return if rng.chance(0.5) { Expr::Lit(gen_diff_value(rng)) } else { gen_diff_attr(rng) };
+    }
+    match rng.index(10) {
+        0 => Expr::Unary(
+            *rng.choose(&[UnOp::Not, UnOp::Neg, UnOp::BitNot]),
+            Box::new(gen_diff_expr(rng, depth - 1)),
+        ),
+        1..=5 => {
+            let op = *rng.choose(&[
+                BinOp::And,
+                BinOp::Or,
+                BinOp::Eq,
+                BinOp::Ne,
+                BinOp::Lt,
+                BinOp::Le,
+                BinOp::Gt,
+                BinOp::Ge,
+                BinOp::Is,
+                BinOp::Isnt,
+                BinOp::Add,
+                BinOp::Sub,
+                BinOp::Mul,
+                BinOp::Div,
+                BinOp::Mod,
+            ]);
+            Expr::Binary(
+                op,
+                Box::new(gen_diff_expr(rng, depth - 1)),
+                Box::new(gen_diff_expr(rng, depth - 1)),
+            )
+        }
+        6 => Expr::Cond(
+            Box::new(gen_diff_expr(rng, depth - 1)),
+            Box::new(gen_diff_expr(rng, depth - 1)),
+            Box::new(gen_diff_expr(rng, depth - 1)),
+        ),
+        7 => {
+            // Builtins, including a deliberately invalid regex pattern.
+            match rng.index(5) {
+                0 => Expr::Call(
+                    "regexp".into(),
+                    vec![
+                        Expr::Lit(Value::Str(
+                            rng.choose(&["s[0-9]+", "^s.*", "bad("]).to_string(),
+                        )),
+                        gen_diff_expr(rng, depth - 1),
+                    ],
+                ),
+                1 => Expr::Call(
+                    "strcat".into(),
+                    vec![gen_diff_expr(rng, depth - 1), gen_diff_expr(rng, depth - 1)],
+                ),
+                2 => Expr::Call(
+                    "min".into(),
+                    vec![gen_diff_expr(rng, depth - 1), gen_diff_expr(rng, depth - 1)],
+                ),
+                3 => Expr::Call("isundefined".into(), vec![gen_diff_expr(rng, depth - 1)]),
+                _ => Expr::Call(
+                    "member".into(),
+                    vec![
+                        gen_diff_expr(rng, depth - 1),
+                        Expr::List(vec![
+                            Expr::Lit(Value::Int(1)),
+                            gen_diff_expr(rng, depth - 1),
+                        ]),
+                    ],
+                ),
+            }
+        }
+        8 => Expr::List(
+            (0..rng.index(3)).map(|_| gen_diff_expr(rng, depth - 1)).collect(),
+        ),
+        _ => gen_diff_attr(rng),
+    }
+}
+
+/// An ad over the shared pool: each attribute is a literal or a small
+/// expression (which may reference pool names in any scope — including
+/// itself, for guaranteed self-cycles).
+fn gen_diff_ad(rng: &mut Rng, request: bool) -> ClassAd {
+    let mut ad = ClassAd::new();
+    for (i, name) in DIFF_POOL.iter().enumerate() {
+        if rng.chance(0.6) {
+            let defn = if rng.chance(0.5) {
+                Expr::Lit(gen_diff_value(rng))
+            } else if rng.chance(0.15) {
+                // Deliberate self-cycle.
+                Expr::Attr(AdScope::Default, AttrName::new(*name))
+            } else {
+                gen_diff_expr(rng, 1 + i % 2)
+            };
+            ad.set(*name, defn);
+        }
+    }
+    if request {
+        if rng.chance(0.9) {
+            ad.set("requirements", gen_diff_expr(rng, 3));
+        }
+        if rng.chance(0.9) {
+            ad.set("rank", gen_diff_expr(rng, 3));
+        }
+    }
+    ad
+}
+
+#[test]
+fn prop_vm_is_bit_identical_to_tree_walk() {
+    // The PR 9 parity pin: over randomized ads (literals, scoped attr
+    // refs, arithmetic, comparisons, boolean ops, regexp(), deliberate
+    // cycles), the bytecode VM — ad mode and table mode — must agree
+    // with the tree-walking reference evaluator on every match verdict
+    // and on the exact bits of every rank.
+    forall("vm == tree-walk differential", cfg(250), |rng| {
+        let request = gen_diff_ad(rng, true);
+        let candidates: Vec<ClassAd> = (0..1 + rng.index(4)).map(|_| gen_diff_ad(rng, false)).collect();
+        let compiled = CompiledMatch::compile(&request);
+        let mut vm = VmScratch::default();
+        let mut table = CandidateTable::default();
+        table.rebuild(compiled.program(), candidates.iter());
+        for (i, c) in candidates.iter().enumerate() {
+            let want = compiled.matches(c);
+            if compiled.matches_vm(c, &mut vm) != want {
+                return Err(format!("vm verdict != tree on candidate {i}\nrequest: {request}\ncandidate: {c}"));
+            }
+            if compiled.matches_vm_row(c, &table, i, &mut vm) != want {
+                return Err(format!("vm table verdict != tree on candidate {i}\nrequest: {request}\ncandidate: {c}"));
+            }
+            let tree_bits = compiled.rank(c).to_bits();
+            let vm_bits = compiled.rank_vm(c, &mut vm).to_bits();
+            if vm_bits != tree_bits {
+                return Err(format!(
+                    "vm rank bits {vm_bits:#x} != tree {tree_bits:#x} on candidate {i}\nrequest: {request}\ncandidate: {c}"
+                ));
+            }
+        }
+        // Batch pass: compare (index, rank-bits) pairs — NaN-safe.
+        let (flags, ms) = compiled.match_and_rank(candidates.iter());
+        let (mut vflags, mut vms) = (Vec::new(), Vec::new());
+        compiled.match_and_rank_vm_into(
+            candidates.iter(),
+            Some(&table),
+            &mut vflags,
+            &mut vms,
+            &mut vm,
+        );
+        if flags != vflags {
+            return Err(format!("batch flags diverged\nrequest: {request}"));
+        }
+        let key = |ms: &[globus_replica::classad::Match]| -> Vec<(usize, u64)> {
+            ms.iter().map(|m| (m.index, m.rank.to_bits())).collect()
+        };
+        if key(&ms) != key(&vms) {
+            return Err(format!("batch ranking diverged\nrequest: {request}"));
+        }
+        Ok(())
     });
 }
 
