@@ -1,0 +1,125 @@
+//! Replica-economy bench (ISSUE 10): static placement vs the
+//! popularity-driven economy on identical demand traces — the
+//! placement headline. Each scenario (flash crowd, diurnal region
+//! shift, cold start) replays the same requests twice; the
+//! hit-rate-at-nearest-replica and mean-time gaps between the arms —
+//! priced in `bytes_moved` of background replication traffic — are the
+//! numbers the PR exists to move.
+//!
+//! With `BENCH_JSON=<path>` set, every point's per-arm headline numbers
+//! are written as JSON — `scripts/bench.sh` uses this to record
+//! `BENCH_economy.json` next to the other perf artifacts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use globus_replica::config::GridConfig;
+use globus_replica::experiment::{run_economy, EconomyArm, EconomySweepOptions};
+use globus_replica::metrics::Metrics;
+use globus_replica::simnet::WorkloadSpec;
+use globus_replica::util::bench::report_metric;
+use globus_replica::util::json::Json;
+
+fn arm_json(a: &EconomyArm) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("mean_time_s".to_string(), Json::Num(a.mean_time));
+    o.insert("p95_time_s".to_string(), Json::Num(a.p95));
+    o.insert("completion_rate".to_string(), Json::Num(a.completion_rate));
+    o.insert("hit_rate_nearest".to_string(), Json::Num(a.hit_rate_nearest));
+    o.insert("bytes_moved".to_string(), Json::Num(a.bytes_moved));
+    o.insert("replicas_created".to_string(), Json::Num(a.replicas_created as f64));
+    o.insert("evictions".to_string(), Json::Num(a.evictions as f64));
+    o.insert("failed_pushes".to_string(), Json::Num(a.failed_pushes as f64));
+    Json::Obj(o)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = GridConfig::generate(10, 1010);
+    let spec = WorkloadSpec { files: 12, mean_interarrival: 8.0, ..Default::default() };
+    let n_requests = if quick { 20 } else { 60 };
+    let opts = EconomySweepOptions::default();
+
+    println!("== economy: placement sweep (10 sites, {n_requests} requests/arm, 2 arms/point) ==");
+    let t0 = Instant::now();
+    let report = run_economy(&cfg, &spec, n_requests, 2, 4, &opts);
+    let wall = t0.elapsed();
+
+    println!(
+        "{:<14} | {:>9} {:>9} | {:>9} {:>9} | {:>9} {:>6} {:>6}",
+        "scenario", "st hit", "ec hit", "st mean", "ec mean", "moved MB", "repl", "evict"
+    );
+    for p in &report.points {
+        println!(
+            "{:<14} | {:>8.0}% {:>8.0}% | {:>8.1}s {:>8.1}s | {:>9.1} {:>6} {:>6}",
+            p.label,
+            p.static_placement.hit_rate_nearest * 100.0,
+            p.economy.hit_rate_nearest * 100.0,
+            p.static_placement.mean_time,
+            p.economy.mean_time,
+            p.economy.bytes_moved / 1e6,
+            p.economy.replicas_created,
+            p.economy.evictions,
+        );
+    }
+    report_metric("sweep wall time", wall.as_secs_f64(), "s");
+    if let Some(flash) = report.points.first() {
+        report_metric(
+            "economy-over-static nearest-hit gain at flash crowd",
+            flash.economy.hit_rate_nearest - flash.static_placement.hit_rate_nearest,
+            "",
+        );
+        report_metric(
+            "economy mean-time ratio at flash crowd (lower is better)",
+            if flash.static_placement.mean_time > 0.0 {
+                flash.economy.mean_time / flash.static_placement.mean_time
+            } else {
+                1.0
+            },
+            "",
+        );
+        report_metric("bytes moved at flash crowd", flash.economy.bytes_moved, "B");
+    }
+
+    let m = Metrics::new();
+    m.counter("economy.points").add(report.points.len() as u64);
+    m.counter("economy.requests_per_arm").add(n_requests as u64);
+    m.histogram("economy.sweep_wall_ns").observe(wall);
+    for p in &report.points {
+        m.counter("economy.replicas_created").add(p.economy.replicas_created as u64);
+        m.counter("economy.evictions").add(p.economy.evictions as u64);
+        m.counter("economy.failed_pushes").add(p.economy.failed_pushes as u64);
+        m.counter("economy.bytes_moved").add(p.economy.bytes_moved as u64);
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("economy".to_string()));
+        root.insert("requests_per_arm".to_string(), Json::Num(n_requests as f64));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                report
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("scenario".to_string(), Json::Str(p.label.clone()));
+                        o.insert("static".to_string(), arm_json(&p.static_placement));
+                        o.insert("economy".to_string(), arm_json(&p.economy));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "metrics".to_string(),
+            Json::parse(&m.to_json()).expect("snapshot JSON parses"),
+        );
+        let body = Json::Obj(root).to_string();
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Replica economy (ISSUE 10) — popularity-driven replication and
+//! eviction as a *policy engine inside the open-loop kernel run*.
+//!
+//! The paper's replica management (§2.2) creates and deletes replicas
+//! "to harness certain performance benefits", but the serial
+//! [`super::replication::ReplicaManager`] only ever acts when a caller
+//! asks it to. This module closes the loop: the open-loop driver feeds
+//! every request arrival into a decayed per-file popularity counter and
+//! fires a recurring economy tick that
+//!
+//! 1. **evicts** cold replicas at sites over their space budget
+//!    (coldest first, never the last copy — an eviction is a catalog
+//!    operation and reclaims exactly the ledgered bytes), and
+//! 2. **replicates** hot under-replicated files to the best
+//!    VM-compiled-placement destination, as a *real kernel write flow*
+//!    ([`crate::gridftp::GridFtp::store_begin`]) that occupies the
+//!    destination link and contends with foreground transfers until its
+//!    completion event commits the space and the catalog entry.
+//!
+//! The engine itself is deliberately split from execution: [`Economy`]
+//! owns the counters and *plans* ([`Economy::plan`]) a bounded list of
+//! [`EconomyAction`]s per tick; the driver executes them against the
+//! live grid, so the policy is unit-testable without a kernel.
+
+use std::collections::BTreeSet;
+
+use crate::classad::{CompiledMatch, VmScratch};
+use crate::experiment::SimGrid;
+
+use super::replication::{PlacementPolicy, ReplicaManager};
+
+/// Configuration of the replica economy.
+#[derive(Debug, Clone, Copy)]
+pub struct EconomyOptions {
+    /// Economy tick period in simulated seconds. Non-finite or
+    /// non-positive = the tick is never scheduled (the driver treats
+    /// the whole economy as off).
+    pub period: f64,
+    /// Popularity half-life (s): a file's access count decays by ×½
+    /// every `half_life` seconds, so a flash crowd's heat fades once
+    /// the crowd moves on. Non-finite = counts never decay.
+    pub half_life: f64,
+    /// Decayed popularity at or above which an under-replicated file
+    /// earns a new replica.
+    pub replicate_threshold: f64,
+    /// Ceiling on copies per logical file (replication never pushes a
+    /// file past this; the seed placement may already exceed it).
+    pub max_replicas_per_file: usize,
+    /// Per-site space budget as a fraction of `total_space`: eviction
+    /// triggers when `used` exceeds it, and replication never targets a
+    /// site the new copy would push over it.
+    pub budget_frac: f64,
+    /// Decayed popularity strictly below which a replica is cold, i.e.
+    /// evictable when its site is over budget.
+    pub evict_threshold: f64,
+    /// Cap on economy actions (evictions + pushes) per tick — the
+    /// economy heals gradually instead of storming the grid.
+    pub max_actions_per_tick: usize,
+    /// Destination-ranking policy for replication pushes.
+    pub placement: PlacementPolicy,
+}
+
+impl Default for EconomyOptions {
+    fn default() -> Self {
+        EconomyOptions {
+            period: 30.0,
+            half_life: 120.0,
+            replicate_threshold: 3.0,
+            max_replicas_per_file: 3,
+            budget_frac: 0.9,
+            evict_threshold: 0.25,
+            max_actions_per_tick: 2,
+            placement: PlacementPolicy::MostSpace,
+        }
+    }
+}
+
+/// End-of-run economy accounting (surfaced as
+/// `OpenReport::economy`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EconomyStats {
+    /// Replication pushes that landed and registered a replica.
+    pub replicas_created: usize,
+    /// Cold replicas evicted under a space budget.
+    pub evictions: usize,
+    /// Bytes carried by landed replication pushes — the economy's
+    /// network cost, paid on the same links foreground transfers use.
+    pub bytes_moved: f64,
+    /// Pushes that never committed: destination dead at launch or at
+    /// landing, or cancelled by the run's wind-down.
+    pub failed_pushes: usize,
+}
+
+/// Exponentially-decayed per-file access counter: `note` adds 1 to the
+/// file's score, and every score decays by `2^(-Δt / half_life)` as the
+/// simulated clock advances. Decay is applied lazily on access, so the
+/// cost is O(files) per tick, not per request.
+#[derive(Debug, Clone)]
+pub struct Popularity {
+    half_life: f64,
+    scores: Vec<f64>,
+    last: f64,
+}
+
+impl Popularity {
+    pub fn new(files: usize, half_life: f64) -> Popularity {
+        Popularity { half_life, scores: vec![0.0; files], last: 0.0 }
+    }
+
+    /// Decay every score to instant `at` (monotone; earlier instants
+    /// are no-ops so out-of-order feeds cannot inflate scores).
+    pub fn decay_to(&mut self, at: f64) {
+        let dt = at - self.last;
+        if dt <= 0.0 {
+            return;
+        }
+        if self.half_life.is_finite() && self.half_life > 0.0 {
+            let k = (-std::f64::consts::LN_2 * dt / self.half_life).exp();
+            for s in &mut self.scores {
+                *s *= k;
+            }
+        }
+        self.last = at;
+    }
+
+    /// One access to `file` at instant `at`.
+    pub fn note(&mut self, file: usize, at: f64) {
+        self.decay_to(at);
+        if let Some(s) = self.scores.get_mut(file) {
+            *s += 1.0;
+        }
+    }
+
+    /// `file`'s decayed score as of the last decay instant.
+    pub fn score(&self, file: usize) -> f64 {
+        self.scores.get(file).copied().unwrap_or(0.0)
+    }
+}
+
+/// One planned economy action, executed by the driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EconomyAction {
+    /// Push a new replica of `file` to topology site `dest` as a
+    /// kernel write flow.
+    Replicate { file: usize, dest: usize },
+    /// Drop the replica of `file` at topology site `site` (catalog
+    /// removal + exact ledgered-space reclaim).
+    Evict { file: usize, site: usize },
+}
+
+/// The economy engine: popularity state, in-flight push bookkeeping,
+/// and the per-tick planner.
+pub struct Economy {
+    pub opts: EconomyOptions,
+    pop: Popularity,
+    pub stats: EconomyStats,
+    /// Files with a replication push currently on the wire — excluded
+    /// from further planning until the push resolves, so one hot file
+    /// cannot fan out duplicate pushes across consecutive ticks.
+    inflight: BTreeSet<usize>,
+}
+
+impl Economy {
+    pub fn new(opts: EconomyOptions, files: usize) -> Economy {
+        Economy {
+            opts,
+            pop: Popularity::new(files, opts.half_life),
+            stats: EconomyStats::default(),
+            inflight: BTreeSet::new(),
+        }
+    }
+
+    /// Feed one request arrival into the popularity counter.
+    pub fn note_access(&mut self, file: usize, at: f64) {
+        self.pop.note(file, at);
+    }
+
+    /// `file`'s current decayed popularity.
+    pub fn score(&self, file: usize) -> f64 {
+        self.pop.score(file)
+    }
+
+    /// A push for `file` went on the wire.
+    pub fn push_started(&mut self, file: usize) {
+        self.inflight.insert(file);
+    }
+
+    /// `file`'s push resolved (landed, failed, or was cancelled).
+    pub fn push_resolved(&mut self, file: usize) {
+        self.inflight.remove(&file);
+    }
+
+    /// Plan this tick's actions against the grid's current state:
+    /// evictions first (they free the space replication wants), then
+    /// replication pushes, both bounded by `max_actions_per_tick`.
+    /// Read-only on the grid — execution is the driver's job.
+    pub fn plan(&mut self, grid: &SimGrid, at: f64) -> Vec<EconomyAction> {
+        self.pop.decay_to(at);
+        let mut actions = Vec::new();
+        let mut remaining = self.opts.max_actions_per_tick;
+
+        // Eviction: sites over budget drop their coldest evictable
+        // replicas until the *projected* used (current minus planned
+        // reclaims) is back under budget.
+        for site in 0..grid.topo.len() {
+            if remaining == 0 {
+                break;
+            }
+            let total = grid.topo.site(site).cfg.total_space;
+            let budget = (self.opts.budget_frac * total).min(total);
+            let mut used = grid.topo.site(site).used;
+            if used <= budget {
+                continue;
+            }
+            let mut cold: Vec<(f64, usize)> = grid
+                .placement
+                .iter()
+                .enumerate()
+                .filter(|(f, sites)| {
+                    sites.contains(&site)
+                        && sites.len() > 1 // never the last copy
+                        && !self.inflight.contains(f)
+                        && self.pop.score(*f) < self.opts.evict_threshold
+                })
+                .map(|(f, _)| (self.pop.score(f), f))
+                .collect();
+            cold.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (_, f) in cold {
+                if remaining == 0 || used <= budget {
+                    break;
+                }
+                let freed =
+                    grid.space_ledger.get(&(f, site)).copied().unwrap_or(grid.sizes[f]);
+                actions.push(EconomyAction::Evict { file: f, site });
+                used -= freed;
+                remaining -= 1;
+            }
+        }
+
+        // Replication: hottest eligible files first.
+        let mut hot: Vec<(f64, usize)> = (0..grid.files.len())
+            .map(|f| (self.pop.score(f), f))
+            .filter(|&(s, f)| {
+                s >= self.opts.replicate_threshold
+                    && grid.placement[f].len() < self.opts.max_replicas_per_file
+                    && !self.inflight.contains(&f)
+            })
+            .collect();
+        hot.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (_, f) in hot {
+            if remaining == 0 {
+                break;
+            }
+            if let Some(dest) = self.best_destination(grid, f) {
+                actions.push(EconomyAction::Replicate { file: f, dest });
+                remaining -= 1;
+            }
+        }
+        actions
+    }
+
+    /// Best destination for a new replica of `file`: the same
+    /// VM-compiled placement matching the serial
+    /// [`ReplicaManager`] runs (compile the placement ad once, run the
+    /// bytecode per site), with the economy's extra constraint that the
+    /// landed copy must fit under the destination's space budget.
+    /// Ties keep topology order, like `rank_destinations`.
+    fn best_destination(&self, grid: &SimGrid, file: usize) -> Option<usize> {
+        let bytes = grid.sizes[file];
+        let compiled =
+            CompiledMatch::compile(&ReplicaManager::placement_ad(bytes, self.opts.placement));
+        let mut vm = VmScratch::default();
+        grid.publish_dynamics();
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..grid.topo.len() {
+            if grid.placement[file].contains(&i) || !grid.topo.site_alive(i) {
+                continue;
+            }
+            let s = grid.topo.site(i);
+            let budget = (self.opts.budget_frac * s.cfg.total_space).min(s.cfg.total_space);
+            if s.used + bytes > budget {
+                continue;
+            }
+            let name = s.cfg.name.clone();
+            let entries = grid.info.query_site_all(&name).unwrap_or_default();
+            let cand = super::convert::entries_to_candidate(&name, "", &entries);
+            if !compiled.matches_vm(&cand.ad, &mut vm) {
+                continue;
+            }
+            let r = compiled.rank_vm(&cand.ad, &mut vm);
+            if best.map_or(true, |(_, br)| r > br) {
+                best = Some((i, r));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+    use crate::simnet::WorkloadSpec;
+
+    fn grid() -> SimGrid {
+        let cfg = GridConfig::generate(6, 99);
+        let spec = WorkloadSpec { files: 5, ..Default::default() };
+        let mut g = SimGrid::build(&cfg, &spec, 2, 16);
+        g.warm(2);
+        g
+    }
+
+    #[test]
+    fn popularity_decays_by_half_life() {
+        let mut p = Popularity::new(2, 100.0);
+        p.note(0, 0.0);
+        p.note(0, 0.0);
+        assert_eq!(p.score(0), 2.0);
+        p.decay_to(100.0);
+        assert!((p.score(0) - 1.0).abs() < 1e-12, "one half-life halves the score");
+        p.decay_to(300.0);
+        assert!((p.score(0) - 0.25).abs() < 1e-12);
+        // Out-of-order feeds cannot rewind the decay clock.
+        p.decay_to(200.0);
+        assert!((p.score(0) - 0.25).abs() < 1e-12);
+        assert_eq!(p.score(1), 0.0);
+    }
+
+    #[test]
+    fn infinite_half_life_never_decays() {
+        let mut p = Popularity::new(1, f64::INFINITY);
+        p.note(0, 0.0);
+        p.decay_to(1e9);
+        assert_eq!(p.score(0), 1.0);
+    }
+
+    #[test]
+    fn hot_file_earns_a_replication_push() {
+        let g = grid();
+        let mut e = Economy::new(EconomyOptions::default(), g.files.len());
+        for _ in 0..10 {
+            e.note_access(0, g.topo.now);
+        }
+        let actions = e.plan(&g, g.topo.now);
+        let rep = actions.iter().find_map(|a| match a {
+            &EconomyAction::Replicate { file, dest } => Some((file, dest)),
+            _ => None,
+        });
+        let (file, dest) = rep.expect("a hot under-replicated file must earn a push");
+        assert_eq!(file, 0);
+        assert!(!g.placement[0].contains(&dest), "destination must be a non-holder");
+        assert!(g.topo.site_alive(dest));
+    }
+
+    #[test]
+    fn cold_files_are_not_replicated() {
+        let g = grid();
+        let mut e = Economy::new(EconomyOptions::default(), g.files.len());
+        e.note_access(0, g.topo.now); // one access: below threshold
+        assert!(e.plan(&g, g.topo.now).is_empty());
+    }
+
+    #[test]
+    fn inflight_push_suppresses_duplicates() {
+        let g = grid();
+        let mut e = Economy::new(EconomyOptions::default(), g.files.len());
+        for _ in 0..10 {
+            e.note_access(0, g.topo.now);
+        }
+        e.push_started(0);
+        assert!(e.plan(&g, g.topo.now).is_empty());
+        e.push_resolved(0);
+        assert!(!e.plan(&g, g.topo.now).is_empty());
+    }
+
+    #[test]
+    fn over_budget_site_evicts_coldest_but_never_last_copy() {
+        let mut g = grid();
+        let mut e = Economy::new(
+            EconomyOptions { max_actions_per_tick: 8, ..Default::default() },
+            g.files.len(),
+        );
+        // Fill site 0's volume past its budget; every file there is
+        // stone cold (no accesses recorded).
+        let site = g.placement[0][0];
+        let total = g.topo.site(site).cfg.total_space;
+        g.topo.site_mut(site).used = total;
+        let actions = e.plan(&g, g.topo.now);
+        let evicted: Vec<usize> = actions
+            .iter()
+            .filter_map(|a| match a {
+                &EconomyAction::Evict { file, site: s } if s == site => Some(file),
+                _ => None,
+            })
+            .collect();
+        assert!(!evicted.is_empty(), "an over-budget site must shed cold replicas");
+        for &f in &evicted {
+            assert!(g.placement[f].len() > 1, "never plan to evict the last copy");
+            assert!(g.placement[f].contains(&site));
+        }
+        // No file is planned for eviction twice at the same site.
+        let mut sorted = evicted.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), evicted.len());
+    }
+
+    #[test]
+    fn under_budget_site_evicts_nothing() {
+        let g = grid();
+        let mut e = Economy::new(EconomyOptions::default(), g.files.len());
+        let actions = e.plan(&g, g.topo.now);
+        assert!(
+            !actions.iter().any(|a| matches!(a, EconomyAction::Evict { .. })),
+            "fresh grids are under budget everywhere"
+        );
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let run = || {
+            let g = grid();
+            let mut e = Economy::new(EconomyOptions::default(), g.files.len());
+            for f in 0..g.files.len() {
+                for _ in 0..(f + 3) {
+                    e.note_access(f, g.topo.now);
+                }
+            }
+            e.plan(&g, g.topo.now)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn execution_roundtrip_respects_ledger() {
+        // Plan → execute an eviction via the ReplicaManager: the
+        // catalog, placement and ledger all agree afterwards.
+        let mut g = grid();
+        let mut e = Economy::new(
+            EconomyOptions { max_actions_per_tick: 1, ..Default::default() },
+            g.files.len(),
+        );
+        let site = g.placement[1][0];
+        g.topo.site_mut(site).used = g.topo.site(site).cfg.total_space;
+        let actions = e.plan(&g, g.topo.now);
+        let Some(&EconomyAction::Evict { file, site: s }) = actions.first() else {
+            panic!("expected an eviction plan");
+        };
+        let logical = g.files[file].clone();
+        let name = g.topo.site(s).cfg.name.clone();
+        ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .delete_replica(&logical, &name)
+            .unwrap();
+        assert!(!g.placement[file].contains(&s));
+        assert!(!g.space_ledger.contains_key(&(file, s)));
+        let cat = g.catalog.lock().unwrap();
+        assert!(cat.locate(&logical).unwrap().iter().all(|l| l.site != name));
+    }
+}

@@ -36,6 +36,7 @@
 
 pub mod centralized;
 pub mod convert;
+pub mod economy;
 pub mod engine;
 pub mod policy;
 pub mod replication;
@@ -43,6 +44,7 @@ pub mod selectors;
 pub mod shard;
 
 pub use convert::{entries_to_candidate, Candidate};
+pub use economy::{Economy, EconomyAction, EconomyOptions, EconomyStats};
 pub use engine::{
     parse_request_ad, parse_request_ad_with_budget, AccessStrategy, Broker, BrokerTrace,
     CoallocSelection, HierDiscovery, InfoService, LocalInfoService, PreparedRequest,

@@ -19,7 +19,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::catalog::PhysicalLocation;
-use crate::classad::{symmetric_match, AdBuilder, ClassAd};
+use crate::classad::{AdBuilder, ClassAd, CompiledMatch, VmScratch};
 use crate::coalloc::{execute_store, StoreTarget};
 use crate::config::CoallocPolicy;
 use crate::experiment::SimGrid;
@@ -56,8 +56,10 @@ impl<'g> ReplicaManager<'g> {
         ReplicaManager { grid, policy }
     }
 
-    /// The placement request ad for a file of `bytes`.
-    fn placement_ad(bytes: f64, policy: PlacementPolicy) -> ClassAd {
+    /// The placement request ad for a file of `bytes`. Public so the
+    /// parity suite (`it_match_parity`) can pin tree-vs-VM agreement
+    /// for placement matching, not just the Match phase's request ads.
+    pub fn placement_ad(bytes: f64, policy: PlacementPolicy) -> ClassAd {
         let rank_attr = match policy {
             PlacementPolicy::MostSpace => "other.availableSpace",
             PlacementPolicy::FastestWrite => "other.AvgWRBandwidth",
@@ -73,13 +75,18 @@ impl<'g> ReplicaManager<'g> {
 
     /// Ranked candidate destinations for a new replica of `logical`
     /// sized `bytes`: every non-holding site whose GRIS view matches
-    /// the placement ad, best placement rank first.
+    /// the placement ad, best placement rank first. The placement ad
+    /// is compiled once per call ([`CompiledMatch`]) and every site
+    /// runs the bytecode VM — the same compile-once/match-many route
+    /// the Match phase takes, bit-identical to the per-pair tree
+    /// evaluators (pinned in `it_match_parity`).
     fn rank_destinations(&self, logical: &str, bytes: f64) -> Result<Vec<(usize, f64)>> {
         let holders: Vec<String> = {
             let cat = self.grid.catalog.lock().unwrap();
             cat.locate(logical)?.iter().map(|l| l.site.clone()).collect()
         };
-        let request = Self::placement_ad(bytes, self.policy);
+        let compiled = CompiledMatch::compile(&Self::placement_ad(bytes, self.policy));
+        let mut vm = VmScratch::default();
         self.grid.publish_dynamics();
         let mut ranked: Vec<(usize, f64)> = Vec::new();
         for i in 0..self.grid.topo.len() {
@@ -98,13 +105,10 @@ impl<'g> ReplicaManager<'g> {
                 .query_site_all(&site)
                 .unwrap_or_default();
             let cand = super::convert::entries_to_candidate(&site, "", &entries);
-            if !symmetric_match(&request, &cand.ad) {
+            if !compiled.matches_vm(&cand.ad, &mut vm) {
                 continue;
             }
-            let score = crate::classad::eval_in_match(&request, &cand.ad, "rank")
-                .as_number()
-                .unwrap_or(0.0);
-            ranked.push((i, score));
+            ranked.push((i, compiled.rank_vm(&cand.ad, &mut vm)));
         }
         // Best first; ties keep topology order (deterministic).
         ranked.sort_by(|a, b| {
@@ -154,6 +158,7 @@ impl<'g> ReplicaManager<'g> {
             )?;
         }
         self.grid.placement[f].push(dest);
+        self.grid.space_ledger.insert((f, dest), out.applied);
         self.grid.publish_dynamics();
         Ok(ReplicationOutcome {
             logical: logical.to_string(),
@@ -227,6 +232,7 @@ impl<'g> ReplicaManager<'g> {
                 )?;
             }
             self.grid.placement[f].push(r.site_index);
+            self.grid.space_ledger.insert((f, r.site_index), r.applied);
             created.push(ReplicationOutcome {
                 logical: logical.to_string(),
                 site: r.site.clone(),
@@ -241,7 +247,13 @@ impl<'g> ReplicaManager<'g> {
         Ok(created)
     }
 
-    /// Delete the replica of `logical` at `site`, reclaiming space.
+    /// Delete the replica of `logical` at `site`, reclaiming **exactly
+    /// the space its creation consumed**: the grid's space ledger holds
+    /// the applied delta the create's `consume_space` reported (a store
+    /// into a nearly-full volume commits less than the file size), so a
+    /// create→delete round-trip conserves `used` bit-for-bit. Seed
+    /// replicas placed at build time are unledgered — they reclaim the
+    /// file size, clamped at zero by the repaired topology invariant.
     pub fn delete_replica(&mut self, logical: &str, site: &str) -> Result<()> {
         let f = self
             .grid
@@ -261,7 +273,12 @@ impl<'g> ReplicaManager<'g> {
             cat.remove_replica(logical, site)?;
         }
         if let Some(idx) = self.grid.topo.index_of(site) {
-            self.grid.topo.consume_space(idx, -self.grid.sizes[f]);
+            let owed = self
+                .grid
+                .space_ledger
+                .remove(&(f, idx))
+                .unwrap_or(self.grid.sizes[f]);
+            self.grid.topo.consume_space(idx, -owed);
             self.grid.placement[f].retain(|&s| s != idx);
         }
         self.grid.publish_dynamics();
@@ -412,6 +429,79 @@ mod tests {
         mgr.delete_replica(&logical, &sites[0]).unwrap();
         let err = mgr.delete_replica(&logical, &sites[1]).unwrap_err();
         assert!(format!("{err:#}").contains("last replica"));
+    }
+
+    #[test]
+    fn delete_reclaims_exactly_what_create_consumed() {
+        let mut g = grid();
+        let logical = g.files[0].clone();
+        let bytes = g.sizes[0];
+        // The destination the manager will pick (rank_destinations is
+        // read-only and deterministic, so peeking doesn't perturb it).
+        let dest = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .rank_destinations(&logical, bytes)
+            .unwrap()[0]
+            .0;
+        let used0 = g.topo.site(dest).used;
+        let out = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replica(&logical)
+            .unwrap();
+        assert_eq!(g.topo.index_of(&out.site), Some(dest));
+        let ledgered = g.space_ledger[&(0, dest)];
+        assert!((ledgered - bytes).abs() < 1.0, "roomy volume commits in full");
+        ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .delete_replica(&logical, &out.site)
+            .unwrap();
+        assert!(
+            (g.topo.site(dest).used - used0).abs() < 1.0,
+            "create→delete must conserve used: {} vs {}",
+            g.topo.site(dest).used,
+            used0
+        );
+        assert!(!g.space_ledger.contains_key(&(0, dest)), "ledger entry consumed");
+    }
+
+    #[test]
+    fn clamped_create_reclaims_only_the_ledgered_amount() {
+        let mut g = grid();
+        let logical = g.files[0].clone();
+        let out = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .create_replica(&logical)
+            .unwrap();
+        let idx = g.topo.index_of(&out.site).unwrap();
+        // Emulate a create that clamped at capacity (e.g. a concurrent
+        // push filled the volume between ranking and commit): only half
+        // the file actually fit, and the ledger says so.
+        let half = g.sizes[0] / 2.0;
+        g.space_ledger.insert((0, idx), half);
+        let used_before = g.topo.site(idx).used;
+        ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .delete_replica(&logical, &out.site)
+            .unwrap();
+        assert!(
+            (used_before - g.topo.site(idx).used - half).abs() < 1.0,
+            "reclaim must match the ledgered (applied) amount, not the file size"
+        );
+        assert!(g.topo.site(idx).used >= 0.0);
+    }
+
+    #[test]
+    fn deleting_an_unledgered_seed_replica_never_goes_negative() {
+        let mut g = grid();
+        // Pick a file with ≥ 2 seed replicas and drain its first
+        // holder's volume to nearly empty: the seed reclaim (file size,
+        // unledgered) must clamp at zero instead of minting phantom
+        // free space.
+        let logical = g.files[3].clone();
+        let idx = g.placement[3][0];
+        let site = g.topo.site(idx).cfg.name.clone();
+        g.topo.site_mut(idx).used = 1.0;
+        ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+            .delete_replica(&logical, &site)
+            .unwrap();
+        let s = g.topo.site(idx);
+        assert_eq!(s.used, 0.0, "reclaim clamps at zero");
+        assert!(s.available_space() <= s.cfg.total_space);
     }
 
     #[test]

@@ -55,6 +55,11 @@ pub struct StoreStreamReport {
     pub mean_bandwidth: f64,
     /// Whether the full copy arrived (space committed, registrable).
     pub completed: bool,
+    /// Bytes the commit actually consumed on the destination volume
+    /// ([`Topology::consume_space`]'s clamped applied delta; 0 unless
+    /// `completed`). The caller's deletion ledger reclaims exactly
+    /// this amount.
+    pub applied: f64,
 }
 
 /// Outcome of one striped replica-creation push.
@@ -97,6 +102,8 @@ struct Push {
     current: Option<(usize, usize, f64)>,
     blocks_done: usize,
     bytes_done: f64,
+    /// Space the completion commit actually consumed (clamped delta).
+    applied: f64,
     first_at: f64,
     last_at: f64,
     finished: bool,
@@ -138,6 +145,7 @@ pub fn execute_store(
             current: None,
             blocks_done: 0,
             bytes_done: 0.0,
+            applied: 0.0,
             first_at: started_at,
             last_at: started_at,
             finished: n_blocks == 0,
@@ -162,6 +170,7 @@ pub fn execute_store(
                     duration: 0.0,
                     mean_bandwidth: 0.0,
                     completed: true,
+                    applied: 0.0,
                 })
                 .collect(),
         });
@@ -232,7 +241,7 @@ pub fn execute_store(
                     let p = &mut pushes[i];
                     p.finished = true;
                     topo.end_transfer(p.site);
-                    topo.consume_space(p.site, p.bytes_done);
+                    p.applied = topo.consume_space(p.site, p.bytes_done);
                 }
             }
         }
@@ -323,6 +332,7 @@ pub fn execute_store(
                     0.0
                 },
                 completed: p.finished,
+                applied: p.applied,
             })
             .collect(),
     })

@@ -1,0 +1,290 @@
+//! Replica-economy sweep (ISSUE 10 tentpole): popularity-driven
+//! replication/eviction vs static placement.
+//!
+//! [`run_economy`] replays *identical* request traces on *identically
+//! seeded* grids twice per scenario — once with the placement frozen at
+//! its seed state (`economy: None`, the pre-ISSUE-10 behaviour) and
+//! once with the [`crate::broker::Economy`] policy engine ticking
+//! inside the open-loop kernel, replicating hot files through real
+//! GridFTP store flows and evicting cold copies under per-site space
+//! budgets. Because grid, workload and weather are bit-identical
+//! across the two arms, any difference in hit-rate-at-nearest-replica,
+//! mean/p95 time or completion rate is attributable to the economy
+//! alone; its price is reported as `bytes_moved`.
+//!
+//! Three canonical demand shapes exercise the economy from different
+//! directions:
+//!
+//! * **flash-crowd** — a Poisson background until one file abruptly
+//!   absorbs most of the arrival stream ([`flash_crowd`]); the economy
+//!   must detect the spike and fan the file out before the crowd
+//!   drains.
+//! * **diurnal-shift** — demand moves wholesale from one half of the
+//!   catalog to the other mid-run ([`diurnal_shift`]); the economy must
+//!   both replicate the newly hot set and reclaim space from the
+//!   abandoned one.
+//! * **cold-start** — the plain workload against a grid seeded with a
+//!   *single* copy of every file; the economy grows the placement from
+//!   nothing.
+//!
+//! The headline metric is **hit-rate-at-nearest-replica**: the
+//! fraction of completed requests served from the site that minimizes
+//! the *nominal* configured cost `latency + drdTime +
+//! size / min(wan_bandwidth, disk_rate)` over **all** sites
+//! ([`nearest_site`]) — i.e. how often the data was already where a
+//! clairvoyant placer would have put it. Static placement can only hit
+//! when the seed shuffle happened to land a copy there; the economy is
+//! supposed to move the data. `bench_economy` records the sweep as
+//! `BENCH_economy.json`.
+
+use crate::broker::selectors::SelectorKind;
+use crate::broker::EconomyOptions;
+use crate::config::GridConfig;
+use crate::simnet::{Request, Workload, WorkloadSpec};
+
+use super::open_loop::{run_quality_open, OpenLoopOptions, OpenReport};
+
+/// Shared knobs of one economy sweep.
+#[derive(Debug, Clone)]
+pub struct EconomySweepOptions {
+    /// Selection policy both arms run under.
+    pub kind: SelectorKind,
+    /// Base open-loop configuration (`economy` is overwritten per arm).
+    pub open: OpenLoopOptions,
+    /// The policy-engine knobs of the economy arm.
+    pub economy: EconomyOptions,
+}
+
+impl Default for EconomySweepOptions {
+    fn default() -> Self {
+        EconomySweepOptions {
+            kind: SelectorKind::Forecast,
+            open: OpenLoopOptions::open(),
+            economy: EconomyOptions::default(),
+        }
+    }
+}
+
+/// One placement regime's outcome on one demand shape.
+#[derive(Debug, Clone)]
+pub struct EconomyArm {
+    /// Mean transfer duration over completed requests (s).
+    pub mean_time: f64,
+    /// p95 transfer duration over completed requests (s).
+    pub p95: f64,
+    /// Finished requests / total requests.
+    pub completion_rate: f64,
+    /// Fraction of completed requests served from [`nearest_site`].
+    pub hit_rate_nearest: f64,
+    /// Background replication traffic the economy paid (0 when off).
+    pub bytes_moved: f64,
+    pub replicas_created: usize,
+    pub evictions: usize,
+    pub failed_pushes: usize,
+    /// The full open-loop report, for drill-down.
+    pub report: OpenReport,
+}
+
+/// One demand shape: static placement vs the economy on identical
+/// inputs.
+#[derive(Debug, Clone)]
+pub struct EconomyPoint {
+    pub label: String,
+    pub static_placement: EconomyArm,
+    pub economy: EconomyArm,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone)]
+pub struct EconomyReport {
+    pub points: Vec<EconomyPoint>,
+}
+
+/// Topology index of the site a `size`-byte transfer would nominally
+/// finish fastest from, ignoring placement entirely: the argmin over
+/// *all* sites of the closed-form configured cost
+/// `latency + drdTime + size / min(wan_bandwidth, disk_rate)`.
+///
+/// This is a property of the *configuration*, not of any run — which
+/// is exactly why it can score placement: a request served from here
+/// means the data was already at the best spot the grid offers.
+pub fn nearest_site(cfg: &GridConfig, size: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for (i, s) in cfg.sites.iter().enumerate() {
+        let rate = s.wan_bandwidth.min(s.disk_rate).max(1.0);
+        let cost = s.latency + s.drd_time_ms / 1e3 + size / rate;
+        if cost < best_cost {
+            best = i;
+            best_cost = cost;
+        }
+    }
+    best
+}
+
+/// Flash crowd: the base Poisson trace, except from a third of the way
+/// in, 4 of every 5 requests redirect onto file 0. Arrival instants
+/// (and thus kernel scheduling) are untouched — only demand moves.
+pub fn flash_crowd(spec: &WorkloadSpec, seed: u64, n: usize) -> Vec<Request> {
+    let mut reqs = Workload::new(spec.clone(), seed).take(n);
+    let onset = n / 3;
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i >= onset && i % 5 != 0 {
+            r.file = 0;
+        }
+    }
+    reqs
+}
+
+/// Diurnal region shift: the first half of the trace draws from the
+/// low half of the catalog, the second half from the high half — the
+/// "follow the sun" pattern where yesterday's hot set goes cold all at
+/// once.
+pub fn diurnal_shift(spec: &WorkloadSpec, seed: u64, n: usize) -> Vec<Request> {
+    let mut reqs = Workload::new(spec.clone(), seed).take(n);
+    let lo = (spec.files / 2).max(1);
+    let hi = spec.files.saturating_sub(lo).max(1);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i < n / 2 {
+            r.file %= lo;
+        } else {
+            r.file = (lo + r.file % hi).min(spec.files.saturating_sub(1));
+        }
+    }
+    reqs
+}
+
+fn arm(report: OpenReport, requests: &[Request], nearest_by_file: &[usize]) -> EconomyArm {
+    let total = requests.len();
+    let finished = report.per_request.len();
+    let mut hits = 0usize;
+    for t in &report.per_request {
+        if t.site == nearest_by_file[requests[t.request].file] {
+            hits += 1;
+        }
+    }
+    let stats = report.economy.unwrap_or_default();
+    EconomyArm {
+        mean_time: report.quality.mean_time,
+        p95: report.quality.p95_time,
+        completion_rate: if total == 0 { 0.0 } else { finished as f64 / total as f64 },
+        hit_rate_nearest: if finished == 0 { 0.0 } else { hits as f64 / finished as f64 },
+        bytes_moved: stats.bytes_moved,
+        replicas_created: stats.replicas_created,
+        evictions: stats.evictions,
+        failed_pushes: stats.failed_pushes,
+        report,
+    }
+}
+
+/// One demand shape, both arms. The static arm runs with
+/// `economy: None` — the parity anchor `it_economy` pins bit-identical
+/// to a plain [`run_quality_open`]; the economy arm differs *only* in
+/// [`OpenLoopOptions::economy`].
+pub fn run_economy_point(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    requests: &[Request],
+    replicas_per_file: usize,
+    warm: usize,
+    opts: &EconomySweepOptions,
+    label: &str,
+) -> EconomyPoint {
+    let sizes = Workload::file_sizes(spec, cfg.seed, 80.0);
+    let nearest: Vec<usize> = sizes.iter().map(|&b| nearest_site(cfg, b)).collect();
+    let run = |economy: Option<EconomyOptions>| {
+        let o = OpenLoopOptions { economy, ..opts.open.clone() };
+        let r = run_quality_open(cfg, spec, requests, replicas_per_file, warm, opts.kind, &o, None);
+        arm(r, requests, &nearest)
+    };
+    let static_placement = run(None);
+    let economy = run(Some(opts.economy));
+    EconomyPoint {
+        label: label.to_string(),
+        static_placement,
+        economy,
+    }
+}
+
+/// The canonical three-scenario sweep: flash crowd and diurnal shift
+/// at `replicas_per_file`, cold-start at a single seed copy per file.
+pub fn run_economy(
+    cfg: &GridConfig,
+    spec: &WorkloadSpec,
+    n_requests: usize,
+    replicas_per_file: usize,
+    warm: usize,
+    opts: &EconomySweepOptions,
+) -> EconomyReport {
+    let flash = flash_crowd(spec, cfg.seed, n_requests);
+    let shift = diurnal_shift(spec, cfg.seed, n_requests);
+    let cold = Workload::new(spec.clone(), cfg.seed).take(n_requests);
+    let points = vec![
+        run_economy_point(cfg, spec, &flash, replicas_per_file, warm, opts, "flash-crowd"),
+        run_economy_point(cfg, spec, &shift, replicas_per_file, warm, opts, "diurnal-shift"),
+        run_economy_point(cfg, spec, &cold, 1, warm, opts, "cold-start"),
+    ];
+    EconomyReport { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flash_crowd_redirects_the_tail_onto_file_zero() {
+        let spec = WorkloadSpec { files: 8, ..Default::default() };
+        let reqs = flash_crowd(&spec, 5, 30);
+        assert_eq!(reqs.len(), 30);
+        let tail_hot = reqs[10..].iter().filter(|r| r.file == 0).count();
+        assert!(tail_hot >= 16, "the crowd must concentrate: {tail_hot}/20");
+        // Arrival instants are the base trace's, untouched and sorted.
+        for w in reqs.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn diurnal_shift_partitions_the_catalog_by_half() {
+        let spec = WorkloadSpec { files: 8, ..Default::default() };
+        let reqs = diurnal_shift(&spec, 5, 40);
+        assert!(reqs[..20].iter().all(|r| r.file < 4), "first half draws low");
+        assert!(reqs[20..].iter().all(|r| r.file >= 4), "second half draws high");
+        assert!(reqs.iter().all(|r| r.file < 8));
+    }
+
+    #[test]
+    fn nearest_site_prefers_the_configured_fast_site() {
+        let mut cfg = GridConfig::generate(4, 17);
+        for s in &mut cfg.sites {
+            s.wan_bandwidth = 1e5;
+            s.latency = 0.5;
+        }
+        cfg.sites[2].wan_bandwidth = 1e9;
+        cfg.sites[2].disk_rate = 1e9;
+        cfg.sites[2].latency = 0.0;
+        cfg.sites[2].drd_time_ms = 0.0;
+        assert_eq!(nearest_site(&cfg, 80e6), 2);
+    }
+
+    #[test]
+    fn sweep_produces_three_points_and_the_static_arm_pays_nothing() {
+        let cfg = GridConfig::generate(4, 23);
+        let spec = WorkloadSpec { files: 4, mean_interarrival: 12.0, ..Default::default() };
+        let r = run_economy(&cfg, &spec, 10, 2, 2, &EconomySweepOptions::default());
+        assert_eq!(r.points.len(), 3);
+        for p in &r.points {
+            for a in [&p.static_placement, &p.economy] {
+                assert!((0.0..=1.0).contains(&a.hit_rate_nearest));
+                assert!((0.0..=1.0).contains(&a.completion_rate));
+            }
+            // Economy off ⇒ no stats, no background traffic.
+            assert!(p.static_placement.report.economy.is_none());
+            assert_eq!(p.static_placement.bytes_moved, 0.0);
+            assert_eq!(p.static_placement.replicas_created, 0);
+            // Economy on ⇒ stats present (possibly all-zero on a calm
+            // shape, but the engine ran).
+            assert!(p.economy.report.economy.is_some());
+        }
+    }
+}

@@ -35,6 +35,16 @@ pub struct SimGrid {
     pub sizes: Vec<f64>,
     /// file index → replica site indices.
     pub placement: Vec<Vec<usize>>,
+    /// Space ledger: `(file index, site index)` → bytes the replica's
+    /// creation **actually consumed** on the volume
+    /// (`Topology::consume_space`'s applied delta, which a store into
+    /// a nearly-full volume clamps below the file size). Deletion
+    /// reclaims exactly the ledgered amount, so create→delete
+    /// round-trips conserve `used` bit-for-bit. Seed replicas placed by
+    /// [`SimGrid::build`] are *not* ledgered — they live inside the
+    /// site's configured `used_frac` abstraction and reclaim
+    /// `sizes[f]` (clamped at zero by the topology) if ever deleted.
+    pub space_ledger: std::collections::BTreeMap<(usize, usize), f64>,
 }
 
 impl SimGrid {
@@ -160,6 +170,7 @@ impl SimGrid {
             files,
             sizes,
             placement,
+            space_ledger: std::collections::BTreeMap::new(),
         }
     }
 

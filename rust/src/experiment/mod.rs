@@ -35,6 +35,13 @@
 //! (fail-fast / retry / retry+failover) on identically seeded grids,
 //! reporting completion rate, time-to-recover, p95 and goodput.
 //!
+//! [`run_economy`] (ISSUE 10) pits static placement against the
+//! [`crate::broker::Economy`] policy engine — popularity-driven
+//! replication and eviction running *inside* the open-loop kernel — on
+//! identical traces under three demand shapes (flash crowd, diurnal
+//! region shift, cold start), reporting hit-rate-at-nearest-replica,
+//! mean/p95 time and the bytes the economy moved to earn them.
+//!
 //! [`run_quality_sharded`] (ISSUE 8) runs the open-loop driver under a
 //! sharded control plane — contiguous site shards, per-shard GIIS
 //! registration domains and admission batches — with the
@@ -45,6 +52,7 @@
 
 pub mod chaos;
 pub mod churn;
+pub mod economy;
 pub mod grid;
 pub mod kernel;
 pub mod open_loop;
@@ -54,6 +62,9 @@ pub mod sharded;
 
 pub use chaos::{run_chaos, ChaosArm, ChaosOptions, ChaosPoint, ChaosReport};
 pub use churn::{run_churn, run_churn_traced, ChurnReport, ChurnStrategyReport};
+pub use economy::{
+    run_economy, run_economy_point, EconomyArm, EconomyPoint, EconomyReport, EconomySweepOptions,
+};
 pub use grid::SimGrid;
 pub use kernel::{run_kernel, KernelOptions, KernelReport};
 pub use open_loop::{

@@ -54,12 +54,17 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, RwLock};
 
 use crate::broker::selectors::{Selector, SelectorKind};
-use crate::broker::{entries_to_candidate, Broker, Candidate, RankPolicy, ShardMap};
+use crate::broker::{
+    entries_to_candidate, Broker, Candidate, Economy, EconomyAction, EconomyOptions,
+    EconomyStats, RankPolicy, ShardMap,
+};
+use crate::broker::replication::ReplicaManager;
+use crate::catalog::PhysicalLocation;
 use crate::config::GridConfig;
 use crate::directory::entry::Entry;
 use crate::directory::fanout::{DirectoryFanout, FanoutPolicy, FanoutStep, QueryIds};
 use crate::directory::hier::HierarchicalDirectory;
-use crate::gridftp::OpenFetch;
+use crate::gridftp::{OpenFetch, OpenStore};
 use crate::simnet::{
     Engine, Fault, FaultKind, FlowSet, Request, Signal, WeatherPlan, Workload, WorkloadSpec,
 };
@@ -78,10 +83,12 @@ const GRIS_TICK_ID: u64 = u64::MAX;
 const REG_TICK_ID: u64 = u64::MAX - 1;
 /// Timer id of the flight recorder's time-series sampler.
 const SAMPLE_TICK_ID: u64 = u64::MAX - 2;
+/// Timer id of the recurring replica-economy tick (ISSUE 10).
+const ECONOMY_TICK_ID: u64 = u64::MAX - 3;
 /// First id of the per-transfer retry/timeout timer range; the driver
 /// allocates downward from here, so retry timers can never collide
 /// with the reserved recurring ticks above.
-const RETRY_TIMER_BASE: u64 = u64::MAX - 3;
+const RETRY_TIMER_BASE: u64 = u64::MAX - 4;
 
 /// How the open-loop driver executes an admitted request's Access
 /// phase.
@@ -232,6 +239,13 @@ pub struct OpenLoopOptions {
     /// (the default) leaves the run bit-identical to pre-weather
     /// builds.
     pub faults: Vec<Fault>,
+    /// Replica economy (ISSUE 10): popularity-driven replication and
+    /// eviction running on a recurring kernel tick, with replication
+    /// traffic as real flows contending with foreground transfers.
+    /// `None` (the default) schedules no tick and changes no event
+    /// interleaving — the run is bit-identical to pre-economy builds
+    /// (the parity anchor `it_economy` pins).
+    pub economy: Option<EconomyOptions>,
 }
 
 impl OpenLoopOptions {
@@ -247,6 +261,7 @@ impl OpenLoopOptions {
             sample_period: f64::INFINITY,
             retry: None,
             faults: Vec::new(),
+            economy: None,
         }
     }
 
@@ -330,6 +345,9 @@ pub struct OpenReport {
     /// poll, if the run drained). The kernel-throughput bench divides
     /// this by wall time.
     pub events: usize,
+    /// Replica-economy accounting (pushes landed, evictions, bytes
+    /// moved); `None` when the economy was off.
+    pub economy: Option<EconomyStats>,
 }
 
 struct InFlight {
@@ -471,6 +489,13 @@ struct Driver<'a> {
     retry_waiting: usize,
     /// Deterministic jitter stream for backoff delays.
     retry_rng: Rng,
+    /// Replica economy engine (`None` = off; no tick is scheduled).
+    economy: Option<Economy>,
+    /// Live economy push flows: flow id → (file index, open store).
+    /// Checked before `inflight` on every completion — economy flows
+    /// are background traffic, not admissions, so they hold no gate
+    /// slot and produce no `RequestTrace`.
+    econ_pushes: BTreeMap<usize, (usize, OpenStore)>,
     finished: Vec<RequestTrace>,
     peak_in_flight: usize,
     overlapped_admissions: usize,
@@ -553,6 +578,12 @@ impl Driver<'_> {
     /// An arrival event: gate-check and admit directly (legacy), or
     /// route into the home shard's admission batch (sharded).
     fn arrival(&mut self, eng: &mut Engine, id: u64, at: f64) {
+        // The popularity counter sees demand at arrival (gated or not):
+        // a flash crowd heats its file before the first transfer lands,
+        // which is exactly when replication should trigger.
+        if let Some(e) = self.economy.as_mut() {
+            e.note_access(self.requests[id as usize].file, at);
+        }
         if self.shard.is_some() {
             self.shard_arrival(eng, id, at);
             return;
@@ -1212,6 +1243,10 @@ impl Driver<'_> {
     /// release + instrumentation record). The event loop drains the
     /// admission gate right after.
     fn complete(&mut self, c: &crate::simnet::Completion) {
+        if self.econ_pushes.contains_key(&c.flow) {
+            self.econ_complete(c);
+            return;
+        }
         let fi = match self.inflight.remove(&c.flow) {
             Some(fi) => fi,
             None => return,
@@ -1253,6 +1288,132 @@ impl Driver<'_> {
             first_failure_at: fi.first_failure_at,
         });
         self.note_finish(fi.request as u64);
+    }
+
+    /// An economy push delivered its last byte: commit the space
+    /// (exactly what the volume accepted — the applied delta goes into
+    /// the ledger), register the catalog entry and the placement row,
+    /// and republish the destination's dynamics. A destination that
+    /// died mid-push is abandoned: slot released, nothing committed,
+    /// counted as a failed push.
+    fn econ_complete(&mut self, c: &crate::simnet::Completion) {
+        let (file, open) =
+            self.econ_pushes.remove(&c.flow).expect("routed on contains_key");
+        if let Some(e) = self.economy.as_mut() {
+            e.push_resolved(file);
+        }
+        if !self.grid.topo.site_alive(open.site) {
+            self.grid.topo.end_transfer(open.site);
+            if let Some(e) = self.economy.as_mut() {
+                e.stats.failed_pushes += 1;
+            }
+            return;
+        }
+        let out = self.grid.ftp.store_finish(&mut self.grid.topo, &open, c.at);
+        let site_name = self.grid.topo.site(open.site).cfg.name.clone();
+        let logical = self.grid.files[file].clone();
+        let _ = self.grid.catalog.lock().unwrap().add_replica(
+            &logical,
+            PhysicalLocation {
+                site: site_name.clone(),
+                url: format!("gsiftp://{site_name}/{logical}"),
+            },
+        );
+        self.grid.placement[file].push(open.site);
+        self.grid.space_ledger.insert((file, open.site), out.applied);
+        self.grid.publish_site(open.site);
+        if let Some(e) = self.economy.as_mut() {
+            e.stats.replicas_created += 1;
+            e.stats.bytes_moved += open.bytes;
+        }
+        if self.opts.trace.on() {
+            let dur = out.duration;
+            let at = c.at;
+            self.opts.trace.with(|r| {
+                let s = r.intern(&site_name);
+                r.push(at, KERNEL_REQ, Ev::ReplicaCreate { site: s, transfer_s: dur });
+            });
+        }
+    }
+
+    /// The recurring economy tick (ECONOMY_TICK): decay popularity,
+    /// plan this tick's bounded action list, and execute it — an
+    /// eviction is instant (catalog removal + exact ledgered reclaim
+    /// via the [`ReplicaManager`]); a replication push goes on the
+    /// kernel as a real write flow that contends with foreground
+    /// transfers until [`Self::econ_complete`] commits it.
+    fn economy_tick(&mut self, eng: &mut Engine, at: f64) {
+        let Some(mut econ) = self.economy.take() else {
+            return;
+        };
+        let actions = econ.plan(self.grid, at);
+        for a in actions {
+            match a {
+                EconomyAction::Evict { file, site } => {
+                    let name = self.grid.topo.site(site).cfg.name.clone();
+                    let logical = self.grid.files[file].clone();
+                    let freed = self
+                        .grid
+                        .space_ledger
+                        .get(&(file, site))
+                        .copied()
+                        .unwrap_or(self.grid.sizes[file]);
+                    if ReplicaManager::new(self.grid, econ.opts.placement)
+                        .delete_replica(&logical, &name)
+                        .is_ok()
+                    {
+                        econ.stats.evictions += 1;
+                        if self.opts.trace.on() {
+                            self.opts.trace.with(|r| {
+                                let s = r.intern(&name);
+                                r.push(
+                                    at,
+                                    KERNEL_REQ,
+                                    Ev::ReplicaEvict { site: s, bytes: freed as u64 },
+                                );
+                            });
+                        }
+                    }
+                }
+                EconomyAction::Replicate { file, dest } => {
+                    let bytes = self.grid.sizes[file];
+                    // Group 0 of the base flow set is the unconstrained
+                    // group: economy pushes are server-to-server, not
+                    // behind any client's downlink.
+                    match self.grid.ftp.store_begin(
+                        eng,
+                        &mut self.grid.topo,
+                        dest,
+                        "economy",
+                        bytes,
+                        0,
+                    ) {
+                        Ok(open) => {
+                            econ.push_started(file);
+                            if self.opts.trace.on() {
+                                let name = self.grid.topo.site(dest).cfg.name.clone();
+                                let flow = open.flow as u64;
+                                self.opts.trace.with(|r| {
+                                    let s = r.intern(&name);
+                                    r.push(
+                                        at,
+                                        KERNEL_REQ,
+                                        Ev::ReplicaPush {
+                                            site: s,
+                                            flow,
+                                            bytes: bytes as u64,
+                                        },
+                                    );
+                                });
+                            }
+                            self.econ_pushes.insert(open.flow, (file, open));
+                        }
+                        Err(_) => econ.stats.failed_pushes += 1,
+                    }
+                }
+            }
+        }
+        self.economy = Some(econ);
     }
 
     /// The flight recorder's time-series sampler (SAMPLE_TICK): global
@@ -1418,6 +1579,16 @@ pub(crate) fn run_open_internal(
     if opts.trace.on() && opts.sample_period.is_finite() && opts.sample_period > 0.0 {
         eng.schedule_tick(t0 + opts.sample_period, SAMPLE_TICK_ID);
     }
+    // Replica economy (ISSUE 10): the tick exists only when the
+    // economy is on — `economy: None` schedules nothing, so the event
+    // interleaving (and therefore every float in the run) is
+    // bit-identical to pre-economy builds.
+    if let Some(e) = opts.economy.as_ref() {
+        if e.period.is_finite() && e.period > 0.0 {
+            eng.schedule_tick(t0 + e.period, ECONOMY_TICK_ID);
+        }
+    }
+    let n_files = grid.files.len();
     // Discovery mode: wire the GIIS registration domain(s) (initial
     // soft-state push at t0) and the periodic re-registration tick. An
     // unsharded run builds one grid-wide hierarchy; a sharded run
@@ -1477,6 +1648,8 @@ pub(crate) fn run_open_internal(
         next_timer: RETRY_TIMER_BASE,
         retry_waiting: 0,
         retry_rng: Rng::new(cfg.seed ^ 0x5245_5452_5921), // "RETRY!"
+        economy: opts.economy.map(|e| Economy::new(e, n_files)),
+        econ_pushes: BTreeMap::new(),
         finished: Vec::new(),
         peak_in_flight: 0,
         overlapped_admissions: 0,
@@ -1571,6 +1744,12 @@ pub(crate) fn run_open_internal(
                 let next = driver.grid.topo.now + driver.opts.gris_refresh;
                 eng.schedule_tick(next, GRIS_TICK_ID);
             }
+            Some(Signal::Tick { id: ECONOMY_TICK_ID, at }) => {
+                driver.economy_tick(&mut eng, at);
+                if let Some(e) = driver.opts.economy.as_ref() {
+                    eng.schedule_tick(driver.grid.topo.now + e.period, ECONOMY_TICK_ID);
+                }
+            }
             Some(Signal::Tick { id, at }) => driver.on_timer(&mut eng, id, at),
             // Stalled in-flight transfers with nothing scheduled:
             // whatever completed is the result.
@@ -1598,6 +1777,17 @@ pub(crate) fn run_open_internal(
             Ev::RequestSkipped { reason: "wind_down" },
         );
         driver.note_skip(fi.request as u64);
+    }
+    // Economy pushes still on the wire are abandoned: cancel the flow
+    // and release the destination's transfer slot. Space is committed
+    // only at store-finish, so an abandoned push consumes nothing.
+    for (flow, (file, open)) in std::mem::take(&mut driver.econ_pushes) {
+        eng.flows.cancel(flow);
+        driver.grid.topo.end_transfer(open.site);
+        if let Some(e) = driver.economy.as_mut() {
+            e.push_resolved(file);
+            e.stats.failed_pushes += 1;
+        }
     }
     let in_discovery: Vec<u64> = driver.pending_disc.keys().copied().collect();
     for id in in_discovery {
@@ -1679,6 +1869,7 @@ pub(crate) fn run_open_internal(
         .shard
         .take()
         .map(|sh| ShardTelemetry { stats: sh.stats, cross_shard: sh.cross_shard });
+    let economy_stats = driver.economy.as_ref().map(|e| e.stats);
     let report = OpenReport {
         quality: finish_report(kind.name(), durations, &bandwidths, &slowdowns, optimal_hits),
         makespan,
@@ -1691,6 +1882,7 @@ pub(crate) fn run_open_internal(
         failovers: driver.failovers,
         gave_up: driver.gave_up,
         events,
+        economy: economy_stats,
     };
     (report, telemetry)
 }

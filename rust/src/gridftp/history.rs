@@ -40,9 +40,19 @@ impl TransferRecord {
 }
 
 /// Streaming summary statistics (Welford) for one direction.
+///
+/// Only *successful* transfers feed the summary: a failed or stalled
+/// transfer reports `bandwidth() == 0.0` (`duration <= 0`, or zero
+/// bytes delivered), and admitting it would pin Figure 4's
+/// `MinRDBandwidth` at 0 forever — the forecasters read that attribute
+/// as "the slowest this link has ever gone", not "it once died".
+/// Non-positive observations are counted in [`Self::failed`] instead.
 #[derive(Debug, Clone, Default)]
 pub struct BandwidthStats {
     pub count: u64,
+    /// Non-positive (failed/stalled) observations skipped by
+    /// [`Self::observe`] — excluded from min/max/avg/std/last.
+    pub failed: u64,
     pub max: f64,
     pub min: f64,
     mean: f64,
@@ -53,6 +63,10 @@ pub struct BandwidthStats {
 
 impl BandwidthStats {
     fn observe(&mut self, bw: f64, peer: &str) {
+        if !(bw > 0.0) {
+            self.failed += 1;
+            return;
+        }
         self.count += 1;
         if self.count == 1 {
             self.max = bw;
@@ -332,6 +346,24 @@ mod tests {
         assert_eq!(attrs["lastRDurl"], "gsiftp://comet.xyz.com/");
         assert_eq!(attrs["rdHistory"], "100,300");
         assert_eq!(attrs["NumTransfers"], "2");
+    }
+
+    #[test]
+    fn failed_transfers_do_not_poison_min_bandwidth() {
+        let mut h = HistoryStore::new("anl", 16);
+        h.record(rec(0.0, "c1", Direction::Read, 1000.0, 10.0)); // 100 B/s
+        // A stalled transfer: bytes delivered but duration 0 → bw 0.
+        h.record(rec(1.0, "c1", Direction::Read, 1000.0, 0.0));
+        // A dead-source transfer: nothing delivered.
+        h.record(rec(2.0, "c2", Direction::Read, 0.0, 5.0));
+        h.record(rec(3.0, "c2", Direction::Read, 4000.0, 10.0)); // 400 B/s
+        assert_eq!(h.rd.count, 2, "only successful transfers counted");
+        assert_eq!(h.rd.failed, 2);
+        assert_eq!(h.rd.min, 100.0, "Fig-4 min reflects the slowest success, not a failure");
+        assert_eq!(h.rd.max, 400.0);
+        assert!((h.rd.avg() - 250.0).abs() < 1e-9);
+        assert_eq!(h.rd.last, 400.0, "a failure must not overwrite `last`");
+        assert_eq!(h.rd.last_peer, "c2");
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod history;
 pub mod service;
 
 pub use history::{HistoryStore, TransferRecord};
-pub use service::{GridFtp, OpenFetch};
+pub use service::{GridFtp, OpenFetch, OpenStore};

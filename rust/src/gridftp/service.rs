@@ -25,6 +25,12 @@ pub struct TransferOutcome {
     pub started_at: f64,
     /// First byte of the fetched range (0 for whole-file transfers).
     pub offset: f64,
+    /// Bytes actually committed to the destination volume (writes
+    /// only; 0 for reads). A store into a nearly-full volume clamps at
+    /// capacity, so this can be less than `bytes` — deletion must
+    /// reclaim *this* amount, not the file size, to keep the space
+    /// invariant exact.
+    pub applied: f64,
 }
 
 /// An in-flight open-loop fetch: the ticket [`GridFtp::fetch_begin`]
@@ -44,6 +50,22 @@ pub struct OpenFetch {
     /// a cancelled fetch from its delivered offset (extended block
     /// mode, the open-loop dual of [`GridFtp::fetch_range`]).
     pub offset: f64,
+}
+
+/// An in-flight open-loop store: the ticket [`GridFtp::store_begin`]
+/// returns and [`GridFtp::store_finish`] consumes when the kernel
+/// reports the push's flow done. The replica-economy engine carries
+/// these across kernel events; space is committed only at the finish.
+#[derive(Debug, Clone)]
+pub struct OpenStore {
+    /// Flow id in the kernel's shared `FlowSet`.
+    pub flow: usize,
+    /// Topology index of the destination site.
+    pub site: usize,
+    /// Writing endpoint (the history store's per-source peer key).
+    pub client: String,
+    pub bytes: f64,
+    pub started_at: f64,
 }
 
 /// The per-grid GridFTP fabric: one logical server per site, all
@@ -114,6 +136,7 @@ impl GridFtp {
                 bandwidth: 0.0,
                 started_at,
                 offset,
+                applied: 0.0,
             };
         }
         self.record(
@@ -133,6 +156,7 @@ impl GridFtp {
             bandwidth,
             started_at,
             offset,
+            applied: 0.0,
         }
     }
 
@@ -230,6 +254,76 @@ impl GridFtp {
             bandwidth: open.bytes / duration,
             started_at: open.started_at,
             offset: open.offset,
+            applied: 0.0,
+        }
+    }
+
+    /// Begin an *open-loop* store on the event kernel — the
+    /// write-direction dual of [`Self::fetch_begin`]: the replica push
+    /// occupies `site`'s link as a flow in the shared `FlowSet`,
+    /// contending with every in-flight fetch, until the kernel reports
+    /// it done and the caller completes it with [`Self::store_finish`].
+    /// The stream lead pays the connection latency plus the disk
+    /// *write* setup (`dwrTime`). Nothing is committed until the finish
+    /// — a push abandoned mid-flight (destination died, run wound down)
+    /// consumes no space and records nothing; the caller only releases
+    /// the transfer slot ([`Topology::end_transfer`]).
+    pub fn store_begin(
+        &self,
+        eng: &mut Engine,
+        topo: &mut Topology,
+        site: usize,
+        client: &str,
+        bytes: f64,
+        group: usize,
+    ) -> Result<OpenStore> {
+        if !topo.site_alive(site) {
+            bail!(
+                "destination {} is unreachable (control channel down)",
+                topo.site(site).cfg.name
+            );
+        }
+        topo.begin_transfer(site);
+        let lead = {
+            let sc = &topo.site(site).cfg;
+            sc.latency + sc.dwr_time_ms / 1e3
+        };
+        let flow = eng.flows.add_in(topo, site, bytes, lead, group);
+        Ok(OpenStore {
+            flow,
+            site,
+            client: client.to_string(),
+            bytes,
+            started_at: topo.now,
+        })
+    }
+
+    /// Complete an open-loop store whose flow the kernel reported done
+    /// at `at`: release the slot, commit the copy's space (the clamped
+    /// *applied* delta lands in the outcome for the caller's ledger)
+    /// and record the write instrumentation.
+    pub fn store_finish(&self, topo: &mut Topology, open: &OpenStore, at: f64) -> TransferOutcome {
+        topo.end_transfer(open.site);
+        let duration = (at - open.started_at).max(1e-9);
+        let applied = topo.consume_space(open.site, open.bytes);
+        self.record(
+            open.site,
+            TransferRecord {
+                at: open.started_at,
+                peer: open.client.clone(),
+                direction: Direction::Write,
+                bytes: open.bytes,
+                duration,
+            },
+        );
+        TransferOutcome {
+            site: topo.site(open.site).cfg.name.clone(),
+            bytes: open.bytes,
+            duration,
+            bandwidth: open.bytes / duration,
+            started_at: open.started_at,
+            offset: 0.0,
+            applied,
         }
     }
 
@@ -274,9 +368,10 @@ impl GridFtp {
                 bandwidth: 0.0,
                 started_at,
                 offset,
+                applied: 0.0,
             };
         }
-        topo.consume_space(site, bytes);
+        let applied = topo.consume_space(site, bytes);
         self.histories[site].write().unwrap().record(TransferRecord {
             at: started_at,
             peer: client.to_string(),
@@ -291,6 +386,7 @@ impl GridFtp {
             bandwidth,
             started_at,
             offset,
+            applied,
         }
     }
 
@@ -471,6 +567,66 @@ mod tests {
         let h = ftp.history(2);
         let h = h.read().unwrap();
         assert_eq!(h.rd.count, 1);
+    }
+
+    #[test]
+    fn open_store_commits_space_only_on_finish() {
+        use crate::simnet::{Engine, FlowSet, Signal};
+        let (mut topo, ftp) = setup();
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let avail0 = topo.site(2).available_space();
+        let open = ftp
+            .store_begin(&mut eng, &mut topo, 2, "economy", 5e6, 0)
+            .unwrap();
+        // In flight: slot held, nothing committed yet.
+        assert_eq!(topo.site(2).active_transfers, 1);
+        assert_eq!(topo.site(2).available_space(), avail0);
+        match eng.next(&mut topo) {
+            Some(Signal::FlowDone(c)) => {
+                assert_eq!(c.flow, open.flow);
+                let out = ftp.store_finish(&mut topo, &open, c.at);
+                assert_eq!(out.applied, 5e6, "uncontended store commits in full");
+                assert!(out.duration > 0.0);
+            }
+            other => panic!("expected FlowDone, got {other:?}"),
+        }
+        assert_eq!(topo.site(2).active_transfers, 0);
+        assert!((avail0 - topo.site(2).available_space() - 5e6).abs() < 1.0);
+        let h = ftp.history(2);
+        let h = h.read().unwrap();
+        assert_eq!(h.wr.count, 1);
+        assert_eq!(h.rd.count, 0);
+        assert_eq!(h.wr.last_peer, "economy");
+    }
+
+    #[test]
+    fn abandoned_open_store_consumes_nothing() {
+        use crate::simnet::{Engine, FlowSet};
+        let (mut topo, ftp) = setup();
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        let avail0 = topo.site(1).available_space();
+        let open = ftp
+            .store_begin(&mut eng, &mut topo, 1, "economy", 5e6, 0)
+            .unwrap();
+        // Destination lost mid-push: the caller cancels the flow and
+        // releases the slot without ever calling store_finish.
+        eng.flows.cancel(open.flow);
+        topo.end_transfer(open.site);
+        assert_eq!(topo.site(1).available_space(), avail0);
+        assert_eq!(topo.site(1).active_transfers, 0);
+        assert_eq!(ftp.history(1).read().unwrap().wr.count, 0);
+    }
+
+    #[test]
+    fn open_store_refuses_dead_destinations() {
+        use crate::simnet::{Engine, FaultKind, FlowSet};
+        let (mut topo, ftp) = setup();
+        topo.schedule_fault(3, 0.0, FaultKind::ReplicaDeath);
+        let mut eng = Engine::new(FlowSet::new(f64::INFINITY));
+        assert!(ftp
+            .store_begin(&mut eng, &mut topo, 3, "economy", 1e6, 0)
+            .is_err());
+        assert_eq!(topo.site(3).active_transfers, 0);
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! * `kernel`   — one kernel-throughput point (ISSUE 8): a same-instant
 //!   surge to the requested concurrency on the sharded control plane,
 //!   reporting events/sec; `--out` writes the JSON point.
+//! * `economy`  — replica-economy sweep (ISSUE 10): identical demand
+//!   traces (flash crowd / diurnal shift / cold start) replayed with
+//!   placement frozen vs the popularity-driven economy ticking inside
+//!   the kernel, reporting hit-rate-at-nearest-replica, mean time and
+//!   bytes moved. Fully deterministic: same flags, same output.
 //! * `trace-summary` — critical-path analysis of an exported trace
 //!   (per-phase p50/p95 breakdown, report parity, slowest requests).
 //!
@@ -33,9 +38,10 @@ use globus_replica::config::GridConfig;
 use globus_replica::directory::schema;
 use globus_replica::directory::server::DirectoryServer;
 use globus_replica::directory::{Entry, Giis, Gris};
+use globus_replica::broker::EconomyOptions;
 use globus_replica::experiment::{
-    run_chaos, run_kernel, run_quality_open, ChaosArm, ChaosOptions, KernelOptions,
-    OpenLoopOptions, RetryOptions, ShardOptions,
+    run_chaos, run_economy, run_kernel, run_quality_open, ChaosArm, ChaosOptions, EconomyArm,
+    EconomySweepOptions, KernelOptions, OpenLoopOptions, RetryOptions, ShardOptions,
 };
 use globus_replica::metrics::Metrics;
 use globus_replica::simnet::{WeatherSpec, Workload, WorkloadSpec};
@@ -69,6 +75,13 @@ commands:
                                  one kernel-throughput point: surge to N
                                  concurrent transfers on the sharded
                                  control plane, report events/sec
+  economy  [--sites N] [--requests R] [--seed K] [--replicas N]
+           [--warm N] [--period S] [--half-life S] [--threshold X]
+           [--budget-frac F] [--out FILE]
+                                 static placement vs the replica economy
+                                 on identical traces (flash crowd /
+                                 diurnal shift / cold start); --out
+                                 writes the deterministic JSON report
   trace-summary <file> [--top N] [--metrics] [--json]
                                  critical-path breakdown of a
                                  TRACE_*.json / .jsonl artifact
@@ -85,6 +98,7 @@ fn main() {
         "select" => cmd_select(&args),
         "simulate" => cmd_simulate(&args),
         "chaos" => cmd_chaos(&args),
+        "economy" => cmd_economy(&args),
         "kernel" => cmd_kernel(&args),
         "trace-summary" => cmd_trace_summary(&args),
         _ => print!("{USAGE}"),
@@ -433,6 +447,99 @@ fn cmd_chaos(args: &Args) {
             ),
         );
         let path = args.str_or("out", "CHAOS_report.json");
+        match std::fs::write(&path, Json::Obj(root).to_string()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+fn cmd_economy(args: &Args) {
+    use std::collections::BTreeMap;
+    use globus_replica::util::json::Json;
+
+    let n = args.usize_or("sites", 8);
+    let requests = args.usize_or("requests", 60);
+    let seed = args.u64_or("seed", 42);
+    let cfg = GridConfig::generate(n, seed);
+    let spec = WorkloadSpec {
+        files: n.max(4),
+        mean_interarrival: args.f64_or("interarrival", 8.0),
+        ..Default::default()
+    };
+    let defaults = EconomyOptions::default();
+    let opts = EconomySweepOptions {
+        economy: EconomyOptions {
+            period: args.f64_or("period", defaults.period),
+            half_life: args.f64_or("half-life", defaults.half_life),
+            replicate_threshold: args.f64_or("threshold", defaults.replicate_threshold),
+            budget_frac: args.f64_or("budget-frac", defaults.budget_frac),
+            ..defaults
+        },
+        ..EconomySweepOptions::default()
+    };
+    let report = run_economy(
+        &cfg,
+        &spec,
+        requests,
+        args.usize_or("replicas", 2),
+        args.usize_or("warm", 4),
+        &opts,
+    );
+
+    println!(
+        "{:<14} | {:>9} {:>9} | {:>9} {:>9} | {:>9} {:>6} {:>6}",
+        "scenario", "st hit", "ec hit", "st mean", "ec mean", "moved MB", "repl", "evict"
+    );
+    for p in &report.points {
+        println!(
+            "{:<14} | {:>8.0}% {:>8.0}% | {:>8.1}s {:>8.1}s | {:>9.1} {:>6} {:>6}",
+            p.label,
+            p.static_placement.hit_rate_nearest * 100.0,
+            p.economy.hit_rate_nearest * 100.0,
+            p.static_placement.mean_time,
+            p.economy.mean_time,
+            p.economy.bytes_moved / 1e6,
+            p.economy.replicas_created,
+            p.economy.evictions,
+        );
+    }
+
+    if args.has("out") {
+        let arm_json = |a: &EconomyArm| {
+            let mut o = BTreeMap::new();
+            o.insert("mean_time_s".to_string(), Json::Num(a.mean_time));
+            o.insert("p95_time_s".to_string(), Json::Num(a.p95));
+            o.insert("completion_rate".to_string(), Json::Num(a.completion_rate));
+            o.insert("hit_rate_nearest".to_string(), Json::Num(a.hit_rate_nearest));
+            o.insert("bytes_moved".to_string(), Json::Num(a.bytes_moved));
+            o.insert("replicas_created".to_string(), Json::Num(a.replicas_created as f64));
+            o.insert("evictions".to_string(), Json::Num(a.evictions as f64));
+            o.insert("failed_pushes".to_string(), Json::Num(a.failed_pushes as f64));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("sweep".to_string(), Json::Str("economy".to_string()));
+        root.insert("sites".to_string(), Json::Num(n as f64));
+        root.insert("requests".to_string(), Json::Num(requests as f64));
+        root.insert("seed".to_string(), Json::Num(seed as f64));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                report
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("scenario".to_string(), Json::Str(p.label.clone()));
+                        o.insert("static".to_string(), arm_json(&p.static_placement));
+                        o.insert("economy".to_string(), arm_json(&p.economy));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        let path = args.str_or("out", "ECONOMY_report.json");
         match std::fs::write(&path, Json::Obj(root).to_string()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),

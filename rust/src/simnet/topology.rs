@@ -382,9 +382,19 @@ impl Topology {
         self.clone()
     }
 
-    /// Consume space on a site (replica creation).
-    pub fn consume_space(&mut self, site: usize, bytes: f64) {
-        self.sites[site].used = (self.sites[site].used + bytes).min(self.sites[site].cfg.total_space);
+    /// Consume space on a site (replica creation; negative `bytes` is
+    /// a reclaim). `used` is clamped to `[0, total_space]` and the
+    /// **actually applied** delta is returned: a store that clamps at
+    /// capacity followed by a full-size reclaim would otherwise drive
+    /// `used` below zero — phantom free space `available_space()`'s
+    /// own `.max(0.0)` silently launders into GRIS. Callers that must
+    /// reclaim exactly (e.g. `ReplicaManager::delete_replica`) ledger
+    /// this return value.
+    pub fn consume_space(&mut self, site: usize, bytes: f64) -> f64 {
+        let s = &mut self.sites[site];
+        let before = s.used;
+        s.used = (before + bytes).clamp(0.0, s.cfg.total_space);
+        s.used - before
     }
 }
 
@@ -441,6 +451,33 @@ mod tests {
         // Saturates at capacity.
         t.consume_space(2, 1e18);
         assert_eq!(t.site(2).available_space(), 0.0);
+    }
+
+    #[test]
+    fn consume_space_clamps_both_ends_and_reports_applied_delta() {
+        let mut t = topo();
+        let total = t.site(2).cfg.total_space;
+        let used0 = t.site(2).used;
+        // Unclamped consume applies in full.
+        assert_eq!(t.consume_space(2, 1e6), 1e6);
+        assert_eq!(t.site(2).used, used0 + 1e6);
+        // An over-capacity store applies only what fits...
+        let applied = t.consume_space(2, 1e18);
+        assert!((applied - (total - used0 - 1e6)).abs() < 1.0);
+        assert_eq!(t.site(2).used, total);
+        // ...and reclaiming the *requested* (clamped-away) size must
+        // not drive `used` negative: the reclaim clamps at zero and
+        // reports the shortfall.
+        let reclaimed = t.consume_space(2, -1e18);
+        assert_eq!(reclaimed, -total);
+        assert_eq!(t.site(2).used, 0.0);
+        assert_eq!(t.site(2).available_space(), total);
+        // An exact ledger round-trips: apply, then reclaim the applied
+        // amount, and `used` is bit-identical to where it started.
+        let a = t.consume_space(2, 3e8);
+        let b = t.consume_space(2, -a);
+        assert_eq!(a, -b);
+        assert_eq!(t.site(2).used, 0.0);
     }
 
     #[test]

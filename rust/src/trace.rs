@@ -145,6 +145,14 @@ pub enum Ev {
     /// Transfer resilience: attempt `attempt` re-issued the request
     /// against `site`, resuming from byte `offset`.
     TransferRetry { site: SiteId, attempt: u32, offset: u64 },
+    /// Replica economy: a replication push flow started toward `site`
+    /// (kernel track — the push contends with foreground transfers).
+    ReplicaPush { site: SiteId, flow: u64, bytes: u64 },
+    /// Replica economy: a push landed and the replica was registered.
+    ReplicaCreate { site: SiteId, transfer_s: f64 },
+    /// Replica economy: a cold replica was evicted from `site`,
+    /// reclaiming `bytes` under the site's space budget.
+    ReplicaEvict { site: SiteId, bytes: u64 },
     /// Kernel dispatched a signal (`arrival`/`tick`/`query`/`flow_done`).
     Dispatch { kind: &'static str },
     /// Sampler row: global gauges at the sample instant.
@@ -182,6 +190,9 @@ impl Ev {
             Ev::SiteFault { .. } => "site_fault",
             Ev::SiteHeal { .. } => "site_heal",
             Ev::TransferRetry { .. } => "transfer_retry",
+            Ev::ReplicaPush { .. } => "replica_push",
+            Ev::ReplicaCreate { .. } => "replica_create",
+            Ev::ReplicaEvict { .. } => "replica_evict",
             Ev::Dispatch { .. } => "dispatch",
             Ev::Sample { .. } => "sample",
             Ev::LinkSample { .. } => "link_sample",
@@ -326,6 +337,19 @@ impl TraceEvent {
                 num(&mut o, "attempt", attempt as f64);
                 num(&mut o, "offset", offset as f64);
             }
+            Ev::ReplicaPush { site, flow, bytes } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "flow", flow as f64);
+                num(&mut o, "bytes", bytes as f64);
+            }
+            Ev::ReplicaCreate { site, transfer_s } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "transfer_s", transfer_s);
+            }
+            Ev::ReplicaEvict { site, bytes } => {
+                o.insert("site".to_string(), site_json(names, site));
+                num(&mut o, "bytes", bytes as f64);
+            }
         }
         Json::Obj(o)
     }
@@ -420,6 +444,16 @@ impl TraceEvent {
                 attempt: u("attempt")? as u32,
                 offset: u("offset")?,
             },
+            "replica_push" => Ev::ReplicaPush {
+                site: site("site")?,
+                flow: u("flow")?,
+                bytes: u("bytes")?,
+            },
+            "replica_create" => Ev::ReplicaCreate {
+                site: site("site")?,
+                transfer_s: f("transfer_s")?,
+            },
+            "replica_evict" => Ev::ReplicaEvict { site: site("site")?, bytes: u("bytes")? },
             "dispatch" => Ev::Dispatch { kind: static_tag(o.get("kind")?.as_str()?) },
             "sample" => Ev::Sample {
                 in_flight: u("in_flight")? as u32,
@@ -666,6 +700,17 @@ impl Recorder {
                         format!("retry #{attempt} req {}", e.req),
                         e.at,
                     ));
+                }
+                Ev::ReplicaCreate { site, transfer_s } => {
+                    tev.push(instant(
+                        2.0,
+                        site as f64,
+                        format!("replica +{transfer_s:.1}s"),
+                        e.at,
+                    ));
+                }
+                Ev::ReplicaEvict { site, .. } => {
+                    tev.push(instant(2.0, site as f64, "evict".to_string(), e.at));
                 }
                 Ev::Sample { in_flight, gate_depth, giis_live } => {
                     tev.push(counter("in_flight".to_string(), e.at, in_flight as f64));
@@ -1234,6 +1279,21 @@ mod tests {
             .any(|e| e.ev == Ev::RequestSkipped { reason: "gave_up" }));
         let chrome = load_trace(&r.chrome_json()).unwrap();
         assert_eq!(chrome.events(), r.events());
+    }
+
+    #[test]
+    fn economy_events_round_trip() {
+        let mut r = Recorder::new(16);
+        let s = r.intern("hot-site");
+        r.push(10.0, KERNEL_REQ, Ev::ReplicaPush { site: s, flow: 42, bytes: 1 << 28 });
+        r.push(55.0, KERNEL_REQ, Ev::ReplicaCreate { site: s, transfer_s: 45.0 });
+        r.push(90.0, KERNEL_REQ, Ev::ReplicaEvict { site: s, bytes: 1 << 27 });
+        let back = load_trace(&r.jsonl()).unwrap();
+        assert_eq!(back.events(), r.events());
+        let chrome = load_trace(&r.chrome_json()).unwrap();
+        assert_eq!(chrome.events(), r.events());
+        // Kernel-track rows never become request spans.
+        assert!(back.spans().is_empty());
     }
 
     #[test]

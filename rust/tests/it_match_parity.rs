@@ -217,6 +217,36 @@ fn rankless_and_requirementless_ads_parity() {
 }
 
 #[test]
+fn placement_ad_parity_across_policies() {
+    // ISSUE 10: the replica manager's placement ads (what
+    // `rank_destinations` compiles to pick replication targets) run on
+    // the same VM path as the Match phase — pin tree-vs-VM agreement
+    // for both ranking policies over a fleet that exercises the space
+    // requirement from both sides.
+    use globus_replica::broker::replication::{PlacementPolicy, ReplicaManager};
+
+    let mk = |space: &str, wr: &str| {
+        parse_classad(&format!("availableSpace = {space}; AvgWRBandwidth = {wr};")).unwrap()
+    };
+    let candidates = vec![
+        mk("10G", "60K/Sec"),
+        mk("500M", "900K/Sec"), // infeasible: too small for a 1G file
+        mk("80G", "10K/Sec"),
+        mk("80G", "10K/Sec"),   // tie: catalog order must hold
+        parse_classad("AvgWRBandwidth = 900K/Sec;").unwrap(), // no space attr
+    ];
+    for policy in [PlacementPolicy::MostSpace, PlacementPolicy::FastestWrite] {
+        let request = ReplicaManager::placement_ad(1024f64.powi(3), policy);
+        assert_parity(&request, &candidates);
+    }
+    // The policies disagree on the winner — the rank attribute is live.
+    let space = ReplicaManager::placement_ad(1024f64.powi(3), PlacementPolicy::MostSpace);
+    let write = ReplicaManager::placement_ad(1024f64.powi(3), PlacementPolicy::FastestWrite);
+    assert_eq!(rank_candidates(&space, &candidates)[0].index, 2);
+    assert_eq!(rank_candidates(&write, &candidates)[0].index, 0);
+}
+
+#[test]
 fn requirements_spelling_preference_parity() {
     // An ad with BOTH spellings must honour `requirements` (Condor's)
     // over `requirement` (the paper's) on both paths.

@@ -14,8 +14,9 @@ use globus_replica::directory::entry::{Dn, Entry};
 use globus_replica::directory::ldif::{parse_ldif, to_ldif_stream};
 use globus_replica::directory::{Dit, Filter, Scope};
 use globus_replica::directory::fanout::{run_fanout, DirectoryFanout, FanoutPolicy, QueryIds};
+use globus_replica::broker::replication::{PlacementPolicy, ReplicaManager};
 use globus_replica::broker::SelectorKind;
-use globus_replica::experiment::{run_quality_open, OpenLoopOptions, RetryOptions};
+use globus_replica::experiment::{run_quality_open, OpenLoopOptions, RetryOptions, SimGrid};
 use globus_replica::forecast::forecast_bank;
 use globus_replica::simnet::{
     Engine, FaultKind, FlowSet, Signal, Topology, WeatherPlan, WeatherSpec, Workload, WorkloadSpec,
@@ -959,6 +960,101 @@ fn prop_open_loop_accounting_balances_under_random_weather() {
                 "failovers {} exceed retries {}",
                 report.failovers, report.retries
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_space_accounting_stays_within_bounds_under_random_churn() {
+    // ISSUE 10: the space-accounting bug class. Under random
+    // interleavings of replica creation, deletion and raw (possibly
+    // absurd) space deltas: per-site `used` stays inside
+    // [0, total_space], `consume_space` reports exactly the delta it
+    // applied, the creation ledger only covers live (file, site)
+    // placements with non-negative amounts, placement and catalog
+    // agree, and no file ever loses its last copy.
+    forall("space ledger churn", cfg(20), |rng| {
+        let grid_cfg = GridConfig::generate(3 + rng.index(3), 3000 + rng.below(10_000));
+        let spec = WorkloadSpec { files: 3 + rng.index(3), ..Default::default() };
+        let mut g = SimGrid::build(&grid_cfg, &spec, 1 + rng.index(2), 16);
+        g.warm(2);
+        let check = |g: &SimGrid| -> Result<(), String> {
+            for i in 0..g.topo.len() {
+                let s = g.topo.site(i);
+                if s.used < -1e-6 {
+                    return Err(format!("site {i} used went negative: {}", s.used));
+                }
+                if s.used > s.cfg.total_space + 1e-6 {
+                    return Err(format!(
+                        "site {i} over capacity: {} > {}",
+                        s.used, s.cfg.total_space
+                    ));
+                }
+            }
+            for (&(f, s), &amt) in &g.space_ledger {
+                if amt < 0.0 {
+                    return Err(format!("negative ledger amount for ({f},{s}): {amt}"));
+                }
+                if !g.placement[f].contains(&s) {
+                    return Err(format!("ledger entry ({f},{s}) has no placement"));
+                }
+            }
+            let cat = g.catalog.lock().unwrap();
+            for (f, name) in g.files.iter().enumerate() {
+                let copies = cat.locate(name).map_err(|e| e.to_string())?.len();
+                if copies != g.placement[f].len() {
+                    return Err(format!(
+                        "file {f}: catalog has {copies} copies, placement {}",
+                        g.placement[f].len()
+                    ));
+                }
+                if copies == 0 {
+                    return Err(format!("file {f} lost its last copy"));
+                }
+            }
+            Ok(())
+        };
+        check(&g)?;
+        for _ in 0..30 {
+            let f = rng.index(g.files.len());
+            let logical = g.files[f].clone();
+            match rng.index(4) {
+                0 | 1 => {
+                    let policy = if rng.chance(0.5) {
+                        PlacementPolicy::MostSpace
+                    } else {
+                        PlacementPolicy::FastestWrite
+                    };
+                    // May legitimately fail (no site fits); the
+                    // invariants must hold either way.
+                    let _ = ReplicaManager::new(&mut g, policy).create_replica(&logical);
+                }
+                2 => {
+                    let holders = g.placement[f].clone();
+                    if !holders.is_empty() {
+                        let site = holders[rng.index(holders.len())];
+                        let name = g.topo.site(site).cfg.name.clone();
+                        // The last-copy guard may refuse; never forced.
+                        let _ = ReplicaManager::new(&mut g, PlacementPolicy::MostSpace)
+                            .delete_replica(&logical, &name);
+                    }
+                }
+                _ => {
+                    let i = rng.index(g.topo.len());
+                    let before = g.topo.site(i).used;
+                    let raw = rng.range(-2.0, 2.0) * g.topo.site(i).cfg.total_space;
+                    let applied = g.topo.consume_space(i, raw);
+                    let after = g.topo.site(i).used;
+                    if (after - before - applied).abs() > 1e-3 {
+                        return Err(format!(
+                            "consume_space lied: moved {} but reported {applied}",
+                            after - before
+                        ));
+                    }
+                }
+            }
+            check(&g)?;
         }
         Ok(())
     });

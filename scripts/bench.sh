@@ -3,17 +3,19 @@
 #
 #   scripts/bench.sh              full run; writes BENCH_matchmaking.json,
 #                                 BENCH_directory.json, BENCH_coalloc.json,
-#                                 BENCH_contention.json, BENCH_chaos.json
-#                                 and BENCH_kernel.json
+#                                 BENCH_contention.json, BENCH_chaos.json,
+#                                 BENCH_economy.json and BENCH_kernel.json
 #   BENCH_QUICK=1 scripts/bench.sh   shortened measurement budget
 #
 # Runs the selection-path benches (matchmaking core, broker phase
 # breakdown, directory/GRIS + the ISSUE-5 GIIS-routed-vs-direct
 # discovery comparison at 256 sites), the co-allocation bench (failover
 # path + churn scenario), the open-loop contention load sweep, the
-# grid-weather chaos sweep (fault intensity x recovery policy) and the
-# kernel throughput sweep (events/sec at 10^5 concurrent transfers on
-# the sharded control plane), and records the headline numbers as JSON,
+# grid-weather chaos sweep (fault intensity x recovery policy), the
+# replica-economy sweep (static placement vs popularity-driven
+# replication/eviction on identical traces) and the kernel throughput
+# sweep (events/sec at 10^5 concurrent transfers on the sharded
+# control plane), and records the headline numbers as JSON,
 # so the perf trajectory across PRs is written down instead of
 # scrolling away in bench output. Schemas: see BENCHMARKS.md.
 set -euo pipefail
@@ -24,6 +26,7 @@ directory_out="${BENCH_DIRECTORY_JSON:-BENCH_directory.json}"
 coalloc_out="${BENCH_COALLOC_JSON:-BENCH_coalloc.json}"
 contention_out="${BENCH_CONTENTION_JSON:-BENCH_contention.json}"
 chaos_out="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
+economy_out="${BENCH_ECONOMY_JSON:-BENCH_economy.json}"
 kernel_out="${BENCH_KERNEL_JSON:-BENCH_kernel.json}"
 
 echo "== bench: matchmaking (JSON -> ${out}) =="
@@ -44,6 +47,9 @@ BENCH_JSON="${contention_out}" cargo bench --bench bench_contention
 echo "== bench: chaos weather sweep (JSON -> ${chaos_out}) =="
 BENCH_JSON="${chaos_out}" cargo bench --bench bench_chaos
 
+echo "== bench: economy placement sweep (JSON -> ${economy_out}) =="
+BENCH_JSON="${economy_out}" cargo bench --bench bench_economy
+
 echo "== bench: kernel throughput (JSON -> ${kernel_out}) =="
 BENCH_JSON="${kernel_out}" cargo bench --bench bench_kernel
 
@@ -62,6 +68,9 @@ cat "${contention_out}"
 echo
 echo "recorded ${chaos_out}:"
 cat "${chaos_out}"
+echo
+echo "recorded ${economy_out}:"
+cat "${economy_out}"
 echo
 echo "recorded ${kernel_out}:"
 cat "${kernel_out}"

@@ -109,6 +109,19 @@ cmp CHAOS_ci_a.json CHAOS_ci_b.json
 test -s CHAOS_ci_a.json
 echo "chaos smoke OK (identically seeded sweeps byte-identical)"
 
+echo "== tier-1: economy determinism smoke (replica economy end-to-end) =="
+# Two identically seeded economy sweeps (popularity-driven replication
+# + eviction ticking inside the kernel, static arm alongside) must
+# produce byte-identical reports — the ISSUE-10 determinism
+# acceptance, checked end-to-end through the CLI.
+cargo run --release --quiet -- economy --sites 4 --requests 12 --seed 7 \
+    --out ECONOMY_ci_a.json >/dev/null
+cargo run --release --quiet -- economy --sites 4 --requests 12 --seed 7 \
+    --out ECONOMY_ci_b.json >/dev/null
+cmp ECONOMY_ci_a.json ECONOMY_ci_b.json
+test -s ECONOMY_ci_a.json
+echo "economy smoke OK (identically seeded sweeps byte-identical)"
+
 echo "== hygiene: rustfmt =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
